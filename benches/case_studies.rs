@@ -1,0 +1,54 @@
+//! Bench: the analytic cost model + optimizers (Tables I/II, Figs. 4/5
+//! regeneration cost) and the trace-driven policy executor that validates
+//! them.
+
+use shptier::benchkit::Bencher;
+use shptier::cost::{
+    case_study_1, case_study_2, expected_cost, numeric_optimal_r, optimal_r, scaled, Strategy,
+};
+use shptier::policy::{run_policy, Changeover, ChangeoverMigrate};
+use shptier::util::Rng;
+
+fn main() {
+    println!("== case_studies benches ==");
+    let mut b = Bencher::from_env();
+
+    let cs1 = case_study_1();
+    let cs2 = case_study_2();
+
+    b.bench("expected_cost/cs1_changeover", 1, || {
+        expected_cost(&cs1, Strategy::Changeover { r: 41_233_169 })
+    });
+    b.bench("closed_form_r_star/cs1", 1, || optimal_r(&cs1, false));
+    b.bench("numeric_r_star/cs1 (golden-section)", 1, || {
+        numeric_optimal_r(&cs1, false)
+    });
+    b.bench("numeric_r_star/cs2_migrate", 1, || {
+        numeric_optimal_r(&cs2, true)
+    });
+
+    // Fig. 4/5 full curve regeneration
+    b.bench("fig4_curve/1000pts", 1000, || {
+        shptier::exp::case_studies::fig4(1000)
+    });
+    b.bench("fig5_curve/2000pts", 2000, || {
+        shptier::exp::case_studies::fig5(2000)
+    });
+
+    // trace-driven executor at simulation scale (the inner loop of A1)
+    let m1 = scaled(&cs1, 10_000);
+    let mut rng = Rng::new(7);
+    let scores: Vec<f64> = (0..m1.n).map(|_| rng.next_f64()).collect();
+    let r = optimal_r(&m1, false).r;
+    b.bench("run_policy/cs1_scaled_N=10k_changeover", m1.n, || {
+        let mut p = Changeover::new(r);
+        run_policy(&scores, &m1, &mut p).unwrap()
+    });
+    let m2 = scaled(&cs2, 10_000);
+    let scores2: Vec<f64> = (0..m2.n).map(|_| rng.next_f64()).collect();
+    let r2 = optimal_r(&m2, true).r;
+    b.bench("run_policy/cs2_scaled_N=10k_migrate", m2.n, || {
+        let mut p = ChangeoverMigrate::new(r2);
+        run_policy(&scores2, &m2, &mut p).unwrap()
+    });
+}

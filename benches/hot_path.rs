@@ -1,0 +1,82 @@
+//! Bench: L3 hot-path microbenchmarks — per-document work in the placer
+//! (top-K offer, ledger charge, feature extraction, native scoring) and
+//! PJRT scoring by batch size. These are the targets of the §Perf pass.
+
+use shptier::benchkit::Bencher;
+use shptier::cost::PerDocCosts;
+use shptier::interestingness::{extract, RbfScorer};
+use shptier::runtime::{Manifest, PjrtScorer};
+use shptier::storage::{StorageSim, TierId};
+use shptier::topk::{BoundedTopK, FullRankTracker, Scored};
+use shptier::util::Rng;
+
+fn main() {
+    println!("== hot_path benches ==");
+    let mut b = Bencher::from_env();
+
+    // ---- top-K trackers ---------------------------------------------------
+    let mut rng = Rng::new(1);
+    let stream: Vec<f64> = (0..100_000).map(|_| rng.next_f64()).collect();
+    b.bench("bounded_topk_offer/K=100,N=100k", stream.len() as u64, || {
+        let mut t = BoundedTopK::new(100);
+        for (i, &s) in stream.iter().enumerate() {
+            t.offer(Scored::new(i as u64, s));
+        }
+        t.len()
+    });
+    b.bench("bounded_topk_offer/K=10000,N=100k", stream.len() as u64, || {
+        let mut t = BoundedTopK::new(10_000);
+        for (i, &s) in stream.iter().enumerate() {
+            t.offer(Scored::new(i as u64, s));
+        }
+        t.len()
+    });
+    let small: Vec<f64> = stream[..10_000].to_vec();
+    b.bench("full_rank_insert/N=10k", small.len() as u64, || {
+        let mut t = FullRankTracker::with_capacity(small.len());
+        for (i, &s) in small.iter().enumerate() {
+            t.insert(Scored::new(i as u64, s));
+        }
+        t.len()
+    });
+
+    // ---- storage sim ops ----------------------------------------------------
+    let costs = PerDocCosts { write: 1e-6, read: 1e-6, rent_window: 1e-5 };
+    b.bench("storage_put_delete/10k ops", 10_000, || {
+        let mut sim = StorageSim::two_tier(costs, costs, true);
+        for d in 0..5_000u64 {
+            sim.put(d, TierId::A, 0.1).unwrap();
+        }
+        for d in 0..5_000u64 {
+            sim.delete(d, 0.9).unwrap();
+        }
+        sim.ledger().total()
+    });
+
+    // ---- native scoring -----------------------------------------------------
+    let series: Vec<f32> = (0..256)
+        .map(|i| 100.0 + 50.0 * (i as f32 * 0.2).sin())
+        .collect();
+    b.bench("feature_extract/T=256", 1, || extract(&series));
+    let scorer = RbfScorer::synthetic_demo();
+    b.bench("native_score/T=256,S=2", 1, || scorer.score_series(&series));
+
+    // manifest-weighted scorer (64 SVs) if artifacts are built
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(dir).expect("manifest");
+        let full = manifest.scorer.clone();
+        b.bench("native_score/T=256,S=64", 1, || full.score_series(&series));
+
+        // ---- PJRT scoring by batch size -----------------------------------
+        let pjrt = PjrtScorer::from_manifest(&manifest).expect("pjrt");
+        for batch in [1usize, 16, 64, 256] {
+            let rows: Vec<Vec<f32>> = (0..batch).map(|_| series.clone()).collect();
+            b.bench(&format!("pjrt_score/batch={batch}"), batch as u64, || {
+                pjrt.score(&rows).unwrap()
+            });
+        }
+    } else {
+        println!("(artifacts missing — skipping PJRT benches; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,68 @@
+//! Bench: end-to-end pipeline throughput (docs/s) by stage configuration —
+//! the paper-system headline performance number, and the SSA producer in
+//! isolation (the expected bottleneck).
+
+use shptier::benchkit::Bencher;
+use shptier::config::LaunchConfig;
+use shptier::interestingness::RbfScorer;
+use shptier::pipeline::{run_pipeline, PipelineConfig, ScorerFactory};
+use shptier::runtime::{NativeScorer, Scorer};
+use shptier::ssa::{oscillator_at, oscillator_sweep, simulate};
+use shptier::util::Rng;
+
+fn native_factory() -> ScorerFactory {
+    Box::new(|| Ok(Box::new(NativeScorer::new(RbfScorer::synthetic_demo())) as Box<dyn Scorer>))
+}
+
+fn main() {
+    println!("== pipeline_throughput benches ==");
+    let mut b = Bencher::from_env();
+
+    // ---- producer in isolation: one SSA document --------------------------
+    let grid = oscillator_sweep(4, 1);
+    let mut rng = Rng::new(3);
+    let mut point = 0u64;
+    b.bench("ssa_document/T=256,t_end=60", 1, || {
+        point = (point + 1) % grid.points();
+        let net = oscillator_at(&grid.point(point));
+        simulate(&net, 60.0, 256, 50_000_000, &mut rng).firings
+    });
+
+    // ---- full pipeline, native scorer, by producer count -------------------
+    let base = LaunchConfig::from_toml("[workload]\nn_docs = 1000\n").unwrap();
+    for producers in [1usize, 2, 4, 8] {
+        let config = PipelineConfig {
+            n_docs: 1000,
+            producers,
+            record_series: false,
+            record_scores: false,
+            ..PipelineConfig::default()
+        };
+        let grid = oscillator_sweep(4, 1);
+        b.bench(&format!("pipeline_1000docs/producers={producers}"), 1000, || {
+            let mut policy = base.policy.instantiate(&base.model);
+            run_pipeline(&config, &grid, &base.model, policy.as_mut(), native_factory())
+                .unwrap()
+                .docs_processed
+        });
+    }
+
+    // ---- batching ablation --------------------------------------------------
+    for batch_max in [1usize, 16, 256] {
+        let config = PipelineConfig {
+            n_docs: 500,
+            producers: 4,
+            batch_max,
+            record_series: false,
+            record_scores: false,
+            ..PipelineConfig::default()
+        };
+        let grid = oscillator_sweep(4, 1);
+        b.bench(&format!("pipeline_500docs/batch_max={batch_max}"), 500, || {
+            let mut policy = base.policy.instantiate(&base.model);
+            run_pipeline(&config, &grid, &base.model, policy.as_mut(), native_factory())
+                .unwrap()
+                .docs_processed
+        });
+    }
+}

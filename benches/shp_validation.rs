@@ -1,0 +1,40 @@
+//! Bench: SHP process simulators (E1/E2 workloads) — how fast can we
+//! Monte-Carlo the paper's equations.
+
+use shptier::benchkit::Bencher;
+use shptier::shp;
+use shptier::util::Rng;
+
+fn main() {
+    println!("== shp_validation benches ==");
+    let mut b = Bencher::from_env();
+
+    let mut rng = Rng::new(1);
+    b.bench("classic_shp_run/N=1000", 1000, || {
+        shp::run_classic(1000, 368, &mut rng)
+    });
+
+    let mut rng2 = Rng::new(2);
+    b.bench("algorithm_b_run/N=10000,K=1", 10_000, || {
+        shp::run_overwrite(10_000, 1, &mut rng2)
+    });
+
+    let mut rng3 = Rng::new(3);
+    b.bench("algorithm_b_run/N=10000,K=100", 10_000, || {
+        shp::run_overwrite(10_000, 100, &mut rng3)
+    });
+
+    // analytic evaluations (the closed forms used by the optimizer)
+    b.bench("expected_writes/N=1e8,K=1e6", 1, || {
+        shptier::cost::expected_writes(100_000_000, 1_000_000)
+    });
+
+    let mut rng4 = Rng::new(4);
+    let scores: Vec<f64> = (0..20_000).map(|_| rng4.next_f64()).collect();
+    b.bench("fit_write_curve/N=20000,K=100", 20_000, || {
+        shp::fit_write_curve(&scores, 100)
+    });
+    b.bench("spearman/N=20000", 20_000, || {
+        shp::spearman_position_correlation(&scores)
+    });
+}

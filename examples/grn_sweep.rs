@@ -1,0 +1,103 @@
+//! END-TO-END DRIVER (paper §VIII, Figs. 6–8): the full three-layer system
+//! on a real workload.
+//!
+//! - L3 (this binary): sharded Gillespie producers sweep the Goodwin GRN
+//!   oscillator; a batching scorer stage executes the AOT artifact via
+//!   PJRT; the placement coordinator runs the paper's changeover+migrate
+//!   policy over the simulated EFS/S3 tiers with exact cost accounting.
+//! - L2/L1: the interestingness function (Pallas feature + RBF kernels in
+//!   a JAX model), compiled by `make artifacts` — Python is NOT running.
+//!
+//! Prints the headline metrics recorded in EXPERIMENTS.md: the Fig. 7
+//! interestingness trace, the Fig. 8 write-curve fit, the measured-vs-
+//! analytic placement cost, and pipeline throughput.
+//!
+//!     make artifacts && cargo run --release --example grn_sweep
+
+use shptier::cost::{case_study_2, expected_cost, optimal_r, scaled, Strategy};
+use shptier::exp::grn;
+use shptier::pipeline::{pjrt_scorer_factory, run_pipeline, PipelineConfig};
+use shptier::runtime::Manifest;
+use shptier::shp::spearman_position_correlation;
+use shptier::ssa::oscillator_sweep;
+
+fn main() -> anyhow::Result<()> {
+    let n_docs: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+
+    let artifacts = Manifest::default_dir();
+    if !artifacts.join("manifest.json").exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let manifest = Manifest::load(&artifacts)?;
+    println!(
+        "artifacts: {} variants, t_len={}, train acc {:.3}",
+        manifest.artifacts.len(),
+        manifest.t_len,
+        manifest.train_accuracy
+    );
+
+    // economics: case study 2 scaled to this stream; paper-optimal r*
+    let model = scaled(&case_study_2(), case_study_2().n / n_docs);
+    let opt = optimal_r(&model, true);
+    println!(
+        "economy: N={} K={} | r* = {} (r*/N = {:.4}, paper: 0.078)",
+        model.n, model.k, opt.r, opt.frac
+    );
+
+    let config = PipelineConfig {
+        n_docs,
+        producers: 4,
+        batch_max: 256,
+        ..PipelineConfig::default()
+    };
+    let grid = oscillator_sweep(7, 1); // 16 807 parameter points
+    let mut policy = shptier::policy::ChangeoverMigrate::new(opt.r);
+
+    let report = run_pipeline(
+        &config,
+        &grid,
+        &model,
+        &mut policy,
+        pjrt_scorer_factory(artifacts),
+    )?;
+    println!("\n{}\n", report.summary());
+
+    // ---- Fig. 7: the interestingness trace --------------------------------
+    let scores: Vec<f64> = report.score_trace.iter().map(|(_, h)| *h as f64).collect();
+    let rho = spearman_position_correlation(&scores);
+    println!(
+        "Fig. 7 trace: {} docs, spearman(position, score) = {rho:.4} (≈0 → random-order model valid)",
+        scores.len()
+    );
+    let mut fig7 = shptier::report::Series::new("fig7_interestingness_trace", &["index", "entropy"]);
+    for (i, (_, h)) in report.score_trace.iter().enumerate().step_by(10) {
+        fig7.push(vec![i as f64, *h as f64]);
+    }
+    println!("  {}", fig7.sparkline(1, 70));
+    let p7 = fig7.write_csv(std::path::Path::new("results"))?;
+    println!("  wrote {}", p7.display());
+
+    // ---- Fig. 8: cumulative writes vs analytic ----------------------------
+    let (fig8_series, fig8_table) = grn::fig8(&scores, 100);
+    println!("\n{}", fig8_table.render());
+    let p8 = fig8_series.write_csv(std::path::Path::new("results"))?;
+    println!("wrote {}", p8.display());
+
+    // ---- headline metric: measured vs analytic placement cost --------------
+    let analytic = expected_cost(&model, Strategy::ChangeoverMigrate { r: opt.r }).total();
+    let measured = report.run.total_cost();
+    println!(
+        "\nHEADLINE: measured placement cost ${measured:.4} vs analytic ${analytic:.4} ({:+.1}%)",
+        (measured / analytic - 1.0) * 100.0
+    );
+    println!(
+        "          throughput {:.0} docs/s end-to-end ({} PJRT batches, mean size {:.1})",
+        report.throughput_docs_per_sec,
+        report.scorer.batches,
+        report.scorer.mean_batch()
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: the whole system in ~40 lines.
+//!
+//! Computes the paper-optimal changeover point for a two-tier economy,
+//! streams a small Gillespie sweep through the pipeline (scored by the AOT
+//! PJRT artifact when `make artifacts` has run, else the native fallback),
+//! and reconciles the measured ledger against the analytic expectation.
+//!
+//!     cargo run --release --example quickstart
+
+use shptier::config::LaunchConfig;
+use shptier::cost::{expected_cost, Strategy};
+use shptier::pipeline::{native_scorer_factory, run_pipeline};
+use shptier::runtime::Manifest;
+use shptier::ssa::oscillator_sweep;
+
+fn main() -> anyhow::Result<()> {
+    // 1. configuration: case-study-2 economics scaled to 2 000 documents
+    let config = LaunchConfig::from_toml(
+        r#"
+[workload]
+n_docs = 2000
+[policy]
+kind = "changeover-migrate"
+"#,
+    )?;
+    println!(
+        "economy: N={} K={} | policy: {:?}",
+        config.model.n, config.model.k, config.policy
+    );
+
+    // 2. the workload: a parameter sweep over the Goodwin GRN oscillator
+    let grid = oscillator_sweep(4, 2); // 4^5 = 1024 points × 2 replicates
+
+    // 3. run the three-stage pipeline (producers → scorer → placer)
+    let mut policy = config.policy.instantiate(&config.model);
+    let report = run_pipeline(
+        &config.pipeline,
+        &grid,
+        &config.model,
+        policy.as_mut(),
+        native_scorer_factory(Manifest::default_dir()),
+    )?;
+    println!("{}", report.summary());
+
+    // 4. reconcile measured cost vs the paper's closed-form expectation
+    if let shptier::config::PolicySpec::ChangeoverMigrate { r } = config.policy {
+        let analytic = expected_cost(&config.model, Strategy::ChangeoverMigrate { r }).total();
+        println!(
+            "analytic ${:.4} vs measured ${:.4} ({:+.1}%)",
+            analytic,
+            report.run.total_cost(),
+            (report.run.total_cost() / analytic - 1.0) * 100.0
+        );
+    }
+    Ok(())
+}

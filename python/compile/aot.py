@@ -1,0 +1,126 @@
+"""AOT compile path: train the scorer, lower `score_batch` to HLO text for
+every batch-size variant, and write artifacts/ + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+xla crate's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids (see /opt/xla-example).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Idempotent: `make artifacts` only reruns when the compile/ sources change.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ScorerParams, default_params, score_batch
+
+# Batch-size variants compiled into the artifact set. The Rust runtime
+# picks the largest variant <= pending documents and pads the remainder.
+BATCH_SIZES = (1, 16, 64, 256)
+T_LEN = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned on parse).
+
+    CRITICAL: the default printer elides large constants as `{...}`, which
+    XLA's text *parser* silently zero-fills — the trained weights would
+    vanish from the artifact (caught by runtime_parity.rs). Print with
+    `print_large_constants=True`.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8 emits metadata attributes (source_end_line etc.) that the
+    # consumer-side XLA 0.5.1 text parser rejects; metadata is irrelevant
+    # to execution, so drop it.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_scorer(params: ScorerParams, batch: int, t_len: int = T_LEN) -> str:
+    """Lower score_batch at a fixed (batch, t_len), params baked as constants."""
+
+    def fn(series):
+        return (score_batch(series, params, use_pallas=True),)
+
+    spec = jax.ShapeDtypeStruct((batch, t_len), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def params_to_manifest(params: ScorerParams, train_acc: float) -> dict:
+    def arr(x):
+        return [float(v) for v in jnp.ravel(x)]
+
+    return {
+        "support": arr(params.support),
+        "alpha": arr(params.alpha),
+        "gamma": float(params.gamma),
+        "bias": float(params.bias),
+        "platt_a": float(params.platt_a),
+        "platt_b": float(params.platt_b),
+        "feat_mu": arr(params.feat_mu),
+        "feat_sigma": arr(params.feat_sigma),
+        "num_support": int(params.alpha.shape[0]),
+        "num_features": int(params.feat_mu.shape[0]),
+        "train_accuracy": train_acc,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=20190412)
+    ap.add_argument("--t-len", type=int, default=T_LEN)
+    ap.add_argument(
+        "--batches", type=int, nargs="*", default=list(BATCH_SIZES),
+        help="batch-size variants to compile",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    from .model import train_scorer
+
+    params, acc = train_scorer(jax.random.PRNGKey(args.seed), t_len=args.t_len)
+    print(f"trained scorer: {params.alpha.shape[0]} support vectors, "
+          f"train accuracy {acc:.3f}")
+
+    artifacts = []
+    for b in args.batches:
+        text = lower_scorer(params, b, args.t_len)
+        name = f"interestingness_b{b}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append({
+            "name": name,
+            "batch": b,
+            "t_len": args.t_len,
+            "format": "hlo-text",
+            "outputs": 1,
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "seed": args.seed,
+        "t_len": args.t_len,
+        "artifacts": artifacts,
+        "scorer": params_to_manifest(params, acc),
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""L1 Pallas kernels (interpret=True) + their pure-jnp oracles."""
+
+from .features import features_pallas
+from .rbf import rbf_decision_pallas
+from .ref import (
+    AC_LAGS,
+    EPS,
+    NUM_FEATURES,
+    entropy_ref,
+    features_ref,
+    rbf_decision_ref,
+    score_ref,
+)
+
+__all__ = [
+    "AC_LAGS",
+    "EPS",
+    "NUM_FEATURES",
+    "entropy_ref",
+    "features_pallas",
+    "features_ref",
+    "rbf_decision_pallas",
+    "rbf_decision_ref",
+    "score_ref",
+]

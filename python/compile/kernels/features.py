@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: batched summary-statistic feature extraction.
+
+One grid step processes a (BLOCK_B, T) tile of time series resident in
+VMEM and emits a (BLOCK_B, NUM_FEATURES) tile. All reductions run along
+the T (lane) dimension. interpret=True everywhere in this repo: the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see DESIGN.md §8 for the
+TPU mapping and VMEM sizing).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import AC_LAGS, EPS, NUM_FEATURES
+
+# Batch tile: 128 rows of T=256 f32 = 128 KiB per input tile — comfortably
+# inside a TPU core's ~16 MiB VMEM with double buffering.
+BLOCK_B = 128
+
+
+def _features_kernel(x_ref, o_ref):
+    """x_ref: (BLOCK_B, T) f32 in VMEM; o_ref: (BLOCK_B, NUM_FEATURES)."""
+    x = x_ref[...]
+    t = x.shape[1]
+    tf = jnp.float32(t)
+
+    mean = jnp.mean(x, axis=1)
+    centered = x - mean[:, None]
+    var = jnp.mean(centered * centered, axis=1)
+    std = jnp.sqrt(var)
+    rng = jnp.max(x, axis=1) - jnp.min(x, axis=1)
+
+    denom = var * tf
+    acs = []
+    for lag in AC_LAGS:
+        num = jnp.sum(centered[:, : t - lag] * centered[:, lag:], axis=1)
+        acs.append(jnp.where(denom > EPS, num / denom, 0.0))
+
+    prod = centered[:, :-1] * centered[:, 1:]
+    crossing = jnp.sum((prod < 0.0).astype(jnp.float32), axis=1) / (tf - 1.0)
+
+    half = t // 2
+    m1 = jnp.mean(x[:, :half], axis=1)
+    m2 = jnp.mean(x[:, half:], axis=1)
+    shift = (m2 - m1) / (std + EPS)
+
+    o_ref[...] = jnp.stack(
+        [mean, std, rng, acs[0], acs[1], acs[2], crossing, shift], axis=1
+    ).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def features_pallas(series: jnp.ndarray, block_b: int = BLOCK_B) -> jnp.ndarray:
+    """Pallas feature extraction. series: (B, T) f32 -> (B, 8) f32.
+
+    B is padded to a multiple of `block_b`; padding rows are discarded.
+    """
+    b, t = series.shape
+    bb = min(block_b, max(b, 1))
+    padded = ((b + bb - 1) // bb) * bb
+    x = series.astype(jnp.float32)
+    if padded != b:
+        # pad with ones: constant rows hit every EPS guard, exercising the
+        # same branches as real data without NaNs.
+        x = jnp.concatenate([x, jnp.ones((padded - b, t), jnp.float32)], axis=0)
+
+    out = pl.pallas_call(
+        _features_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, NUM_FEATURES), jnp.float32),
+        grid=(padded // bb,),
+        in_specs=[pl.BlockSpec((bb, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, NUM_FEATURES), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+    return out[:b]

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: RBF kernel-machine decision values.
+
+The scoring hot-spot: for a (B, D) tile of standardized features and the
+full (S, D) support-vector matrix resident in VMEM, compute
+
+    d2[b, s]  = ||x_b||^2 + ||sv_s||^2 - 2 * x_b . sv_s      (MXU matmul)
+    dec[b]    = sum_s alpha_s * exp(-gamma * d2[b, s]) + bias (VPU)
+
+TPU mapping (DESIGN.md §8): the `x @ sv.T` contraction is the MXU work;
+with D=8 padded to the 128-lane register width, a (128, 128) tile runs one
+systolic pass; `exp` and the alpha reduction are VPU element-ops. VMEM per
+step: 128×8 + 128×8 + 128×128 f32 ≈ 72 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+
+
+def _rbf_kernel(x_ref, sv_ref, alpha_ref, scalars_ref, o_ref):
+    """x: (BB, D); sv: (S, D); alpha: (S,); scalars: (2,) = [gamma, bias]."""
+    x = x_ref[...]
+    sv = sv_ref[...]
+    alpha = alpha_ref[...]
+    gamma = scalars_ref[0]
+    bias = scalars_ref[1]
+
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)            # (BB, 1)
+    s2 = jnp.sum(sv * sv, axis=1)[None, :]                # (1, S)
+    cross = jnp.dot(x, sv.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(x2 + s2 - 2.0 * cross, 0.0)
+    k = jnp.exp(-gamma * d2)
+    o_ref[...] = (k @ alpha + bias).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def rbf_decision_pallas(
+    feats: jnp.ndarray,
+    support: jnp.ndarray,
+    alpha: jnp.ndarray,
+    gamma,
+    bias,
+    block_b: int = BLOCK_B,
+) -> jnp.ndarray:
+    """Pallas RBF decision. feats: (B, D); support: (S, D); alpha: (S,).
+
+    Returns (B,) f32 decision values. B is padded to a multiple of
+    `block_b`; the support matrix is broadcast to every grid step.
+    """
+    b, d = feats.shape
+    s, d2 = support.shape
+    assert d == d2, f"feature dim {d} != support dim {d2}"
+    bb = min(block_b, max(b, 1))
+    padded = ((b + bb - 1) // bb) * bb
+    x = feats.astype(jnp.float32)
+    if padded != b:
+        x = jnp.concatenate([x, jnp.zeros((padded - b, d), jnp.float32)], axis=0)
+    scalars = jnp.stack([jnp.float32(gamma), jnp.float32(bias)])
+
+    out = pl.pallas_call(
+        _rbf_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        grid=(padded // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        interpret=True,
+    )(x, support.astype(jnp.float32), alpha.astype(jnp.float32), scalars)
+    return out[:b]

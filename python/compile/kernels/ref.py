@@ -1,0 +1,86 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the *specifications*: the Pallas kernels (features.py, rbf.py)
+and the Rust native mirror (rust/src/interestingness/) must agree with
+these functions bit-for-bit up to f32 rounding. pytest enforces the first,
+`rust/tests/runtime_parity.rs` the second (via the AOT artifact).
+
+Feature layout (D = 8), matching rust/src/interestingness/features.rs:
+  0 mean | 1 population std | 2 range | 3 lag-1 AC | 4 lag-4 AC
+  | 5 lag-16 AC | 6 mean-crossing rate | 7 half-window mean shift
+"""
+
+import jax.numpy as jnp
+
+NUM_FEATURES = 8
+AC_LAGS = (1, 4, 16)
+EPS = 1e-6
+
+
+def features_ref(series: jnp.ndarray) -> jnp.ndarray:
+    """Summary-statistic features. series: (B, T) f32 -> (B, 8) f32."""
+    x = series.astype(jnp.float32)
+    _, t = x.shape
+    tf = jnp.float32(t)
+
+    mean = jnp.mean(x, axis=1)                            # (B,)
+    centered = x - mean[:, None]
+    var = jnp.mean(centered * centered, axis=1)
+    std = jnp.sqrt(var)
+    rng = jnp.max(x, axis=1) - jnp.min(x, axis=1)
+
+    denom = var * tf                                      # Σ(x−μ)²
+    acs = []
+    for lag in AC_LAGS:
+        num = jnp.sum(centered[:, : t - lag] * centered[:, lag:], axis=1)
+        acs.append(jnp.where(denom > EPS, num / denom, 0.0))
+
+    prod = centered[:, :-1] * centered[:, 1:]
+    crossing = jnp.sum((prod < 0.0).astype(jnp.float32), axis=1) / (tf - 1.0)
+
+    half = t // 2
+    m1 = jnp.mean(x[:, :half], axis=1)
+    m2 = jnp.mean(x[:, half:], axis=1)
+    shift = (m2 - m1) / (std + EPS)
+
+    return jnp.stack(
+        [mean, std, rng, acs[0], acs[1], acs[2], crossing, shift], axis=1
+    ).astype(jnp.float32)
+
+
+def rbf_decision_ref(
+    feats: jnp.ndarray,
+    support: jnp.ndarray,
+    alpha: jnp.ndarray,
+    gamma,
+    bias,
+) -> jnp.ndarray:
+    """RBF kernel-machine decision values.
+
+    feats: (B, D) standardized features; support: (S, D); alpha: (S,);
+    gamma, bias: scalars. Returns (B,) f32.
+    """
+    x2 = jnp.sum(feats * feats, axis=1, keepdims=True)        # (B, 1)
+    s2 = jnp.sum(support * support, axis=1)[None, :]          # (1, S)
+    cross = feats @ support.T                                  # (B, S) — MXU
+    d2 = jnp.maximum(x2 + s2 - 2.0 * cross, 0.0)
+    k = jnp.exp(-gamma * d2)
+    return (k @ alpha + bias).astype(jnp.float32)
+
+
+def entropy_ref(p: jnp.ndarray) -> jnp.ndarray:
+    """Binary label entropy in bits, H(0)=H(1)=0 (matches rust binary_entropy)."""
+    p = p.astype(jnp.float32)
+    valid = (p > 0.0) & (p < 1.0)
+    ps = jnp.clip(p, 1e-30, 1.0 - 1e-7)
+    h = -(ps * jnp.log2(ps) + (1.0 - ps) * jnp.log2(1.0 - ps))
+    return jnp.where(valid, h, 0.0)
+
+
+def score_ref(series, support, alpha, gamma, bias, platt_a, platt_b, feat_mu, feat_sigma):
+    """End-to-end reference interestingness: series (B,T) -> entropy (B,)."""
+    f = features_ref(series)
+    f = (f - feat_mu[None, :]) / (feat_sigma[None, :] + EPS)
+    dec = rbf_decision_ref(f, support, alpha, gamma, bias)
+    p = jnp.float32(1.0) / (1.0 + jnp.exp(-(platt_a * dec + platt_b)))
+    return entropy_ref(p)

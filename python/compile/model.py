@@ -1,0 +1,280 @@
+"""L2: the interestingness model in JAX.
+
+Forward pass (the function AOT-lowered for the Rust runtime):
+
+    series (B, T)
+      --features_pallas-->  raw features (B, 8)        [L1 kernel]
+      --standardize-->      z-features
+      --rbf_decision_pallas--> decision (B,)           [L1 kernel, MXU]
+      --Platt sigmoid-->    p
+      --label entropy-->    interestingness (B,)
+
+Training (the L2 fwd/bwd, build-time only): fit the dual coefficients of
+the RBF machine with squared-hinge loss + L2 regularization by Adam on
+`jax.grad`, then fit Platt scaling by logistic-loss gradient descent.
+This stands in for the paper's human-in-the-loop SVM (DESIGN.md §6).
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import EPS, features_pallas, features_ref, rbf_decision_pallas
+from .kernels.ref import entropy_ref, rbf_decision_ref
+
+
+class ScorerParams(NamedTuple):
+    """Everything the scorer needs; exported into artifacts/manifest.json."""
+
+    support: jnp.ndarray   # (S, D) standardized feature space
+    alpha: jnp.ndarray     # (S,)
+    gamma: jnp.ndarray     # scalar
+    bias: jnp.ndarray      # scalar
+    platt_a: jnp.ndarray   # scalar
+    platt_b: jnp.ndarray   # scalar
+    feat_mu: jnp.ndarray   # (D,)
+    feat_sigma: jnp.ndarray  # (D,)
+
+
+def standardize(feats: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    return (feats - mu[None, :]) / (sigma[None, :] + EPS)
+
+
+def score_batch(series: jnp.ndarray, params: ScorerParams, use_pallas: bool = True) -> jnp.ndarray:
+    """Interestingness (label entropy) for a batch of series. (B,T)->(B,)."""
+    if use_pallas:
+        f = features_pallas(series)
+        z = standardize(f, params.feat_mu, params.feat_sigma)
+        dec = rbf_decision_pallas(z, params.support, params.alpha, params.gamma, params.bias)
+    else:
+        f = features_ref(series)
+        z = standardize(f, params.feat_mu, params.feat_sigma)
+        dec = rbf_decision_ref(z, params.support, params.alpha, params.gamma, params.bias)
+    p = jax.nn.sigmoid(params.platt_a * dec + params.platt_b)
+    return entropy_ref(p)
+
+
+def probability_batch(series: jnp.ndarray, params: ScorerParams, use_pallas: bool = True):
+    """Class-1 probability (for Fig. 6-style diagnostics)."""
+    if use_pallas:
+        f = features_pallas(series)
+        z = standardize(f, params.feat_mu, params.feat_sigma)
+        dec = rbf_decision_pallas(z, params.support, params.alpha, params.gamma, params.bias)
+    else:
+        f = features_ref(series)
+        z = standardize(f, params.feat_mu, params.feat_sigma)
+        dec = rbf_decision_ref(z, params.support, params.alpha, params.gamma, params.bias)
+    return jax.nn.sigmoid(params.platt_a * dec + params.platt_b)
+
+
+# --------------------------------------------------------------------------
+# Training workload: chemical-Langevin Goodwin trajectories
+# --------------------------------------------------------------------------
+#
+# The Rust producer streams Gillespie trajectories of the 3-species Goodwin
+# oscillator (rust/src/ssa/models.rs). Training data must come from the same
+# distribution, so we integrate the chemical Langevin approximation of the
+# same network (vectorized Euler-Maruyama — fast in jnp, statistically close
+# to SSA at these copy numbers). Parameters are sampled from the Rust sweep
+# ranges (ssa::sweep::oscillator_sweep). Labels play the role of the paper's
+# human modeler: a trajectory is "interesting" (oscillatory) when its lag
+# autocorrelation dips below a threshold at any lag in 4..40.
+
+SWEEP_RANGES = {
+    "alpha": (150.0, 450.0),
+    "beta": (0.3, 1.0),
+    "gamma": (0.4, 1.0),
+    "kd": (80.0, 400.0),
+    "hill_n": (1.0, 10.0),
+}
+T_END = 60.0
+LABEL_LAGS = tuple(range(4, 41, 4))
+LABEL_AC_THRESHOLD = -0.25
+
+
+def goodwin_cle(key, params, t_len: int, t_end: float = T_END, substeps: int = 5):
+    """Chemical-Langevin Goodwin trajectories.
+
+    params: dict of (B,) arrays (alpha, beta, gamma, kd, hill_n).
+    Returns (B, t_len) f32 series of species P, sampled uniformly.
+    """
+    b = params["alpha"].shape[0]
+    steps = t_len * substeps
+    dt = t_end / steps
+    alpha = params["alpha"][:, None]
+    beta = params["beta"][:, None]
+    gamma = params["gamma"][:, None]
+    kd = params["kd"][:, None]
+    n = params["hill_n"][:, None]
+
+    state0 = jnp.tile(jnp.asarray([[50.0, 20.0, 10.0]], jnp.float32), (b, 1))
+    noise = jax.random.normal(key, (steps, b, 6), jnp.float32)
+
+    def step(state, eta):
+        p = state[:, 0:1]
+        m = state[:, 1:2]
+        r = state[:, 2:3]
+        rn = jnp.power(jnp.maximum(r, 0.0) / kd, n)
+        a1 = alpha / (1.0 + rn)          # produce P (Hill repression)
+        a2 = beta * p                     # produce M
+        a3 = beta * m                     # produce R
+        a4 = gamma * p                    # degrade P
+        a5 = gamma * m                    # degrade M
+        a6 = gamma * r                    # degrade R
+        sq = jnp.sqrt(jnp.maximum(jnp.concatenate([a1, a2, a3, a4, a5, a6], 1), 0.0) * dt)
+        w = eta * sq
+        dp = (a1 - a4) * dt + (w[:, 0:1] - w[:, 3:4])
+        dm = (a2 - a5) * dt + (w[:, 1:2] - w[:, 4:5])
+        dr = (a3 - a6) * dt + (w[:, 2:3] - w[:, 5:6])
+        new = jnp.maximum(state + jnp.concatenate([dp, dm, dr], 1), 0.0)
+        return new, new[:, 0]
+
+    _, traj = jax.lax.scan(step, state0, noise)
+    # (steps, B) -> sample every `substeps` -> (B, t_len)
+    return traj[substeps - 1 :: substeps].T.astype(jnp.float32)
+
+
+def _min_lag_autocorr(series: jnp.ndarray, lags=LABEL_LAGS) -> jnp.ndarray:
+    """Min lag autocorrelation over `lags`, per row. (B, T) -> (B,)."""
+    x = series - jnp.mean(series, axis=1, keepdims=True)
+    denom = jnp.sum(x * x, axis=1) + 1e-12
+    t = series.shape[1]
+    acs = [jnp.sum(x[:, : t - l] * x[:, l:], axis=1) / denom for l in lags]
+    return jnp.min(jnp.stack(acs, axis=1), axis=1)
+
+
+def synth_dataset(key, n_per_class: int, t_len: int):
+    """Class-balanced labeled Goodwin trajectories.
+
+    Oversamples the sweep box, labels by the expert AC criterion, and takes
+    `n_per_class` of each class. Returns (series (2n, T) f32, labels (2n,)
+    in {-1, +1}). Deterministic in `key`.
+    """
+    kp, ks = jax.random.split(key)
+    oversample = 6 * n_per_class
+    keys = jax.random.split(kp, 5)
+    params = {
+        name: jax.random.uniform(
+            k, (oversample,), minval=lo, maxval=hi, dtype=jnp.float32
+        )
+        for k, (name, (lo, hi)) in zip(keys, SWEEP_RANGES.items())
+    }
+    series = goodwin_cle(ks, params, t_len)
+    interesting = _min_lag_autocorr(series) < LABEL_AC_THRESHOLD
+
+    idx1 = jnp.where(interesting, size=oversample, fill_value=-1)[0]
+    idx0 = jnp.where(~interesting, size=oversample, fill_value=-1)[0]
+    n1 = int(jnp.sum(idx1 >= 0))
+    n0 = int(jnp.sum(idx0 >= 0))
+    if n1 < n_per_class or n0 < n_per_class:
+        raise RuntimeError(
+            f"class imbalance too extreme: {n1} interesting / {n0} quiet "
+            f"(need {n_per_class} each) — adjust SWEEP_RANGES or threshold"
+        )
+    take1 = idx1[:n_per_class]
+    take0 = idx0[:n_per_class]
+    out = jnp.concatenate([series[take1], series[take0]], axis=0)
+    labels = jnp.concatenate(
+        [jnp.ones(n_per_class), -jnp.ones(n_per_class)]
+    ).astype(jnp.float32)
+    return out, labels
+
+
+# --------------------------------------------------------------------------
+# Training (build-time): Adam on squared-hinge, then Platt calibration
+# --------------------------------------------------------------------------
+
+def _adam_update(g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** step)
+    vh = v / (1 - b2 ** step)
+    return -lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def train_scorer(
+    key,
+    n_per_class: int = 512,
+    t_len: int = 256,
+    num_support: int = 64,
+    gamma: float = 0.5,
+    epochs: int = 300,
+    lr: float = 0.05,
+    l2: float = 1e-3,
+):
+    """Fit ScorerParams on the synthetic workload. Deterministic in `key`.
+
+    Returns (params, training_accuracy).
+    """
+    kd, ks, kp = jax.random.split(key, 3)
+    series, labels = synth_dataset(kd, n_per_class, t_len)
+    feats = features_ref(series)
+    mu = jnp.mean(feats, axis=0)
+    sigma = jnp.std(feats, axis=0)
+    z = standardize(feats, mu, sigma)
+
+    # support points: a class-balanced random subset of training data
+    n = z.shape[0]
+    half_s = num_support // 2
+    idx1 = jax.random.choice(ks, n_per_class, (half_s,), replace=False)
+    idx0 = jax.random.choice(kp, n_per_class, (num_support - half_s,), replace=False)
+    support = jnp.concatenate([z[idx1], z[n_per_class + idx0]], axis=0)
+
+    gamma_arr = jnp.float32(gamma)
+
+    def decision(alpha, bias, x):
+        return rbf_decision_ref(x, support, alpha, gamma_arr, bias)
+
+    def loss(params, x, y):
+        alpha, bias = params
+        margin = y * decision(alpha, bias, x)
+        hinge = jnp.maximum(0.0, 1.0 - margin)
+        return jnp.mean(hinge * hinge) + l2 * jnp.sum(alpha * alpha)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+    alpha = jnp.zeros(num_support, jnp.float32)
+    bias = jnp.float32(0.0)
+    m = (jnp.zeros_like(alpha), jnp.zeros_like(bias))
+    v = (jnp.zeros_like(alpha), jnp.zeros_like(bias))
+    for step in range(1, epochs + 1):
+        _, (ga, gb) = grad_fn((alpha, bias), z, labels)
+        da, ma, va = _adam_update(ga, m[0], v[0], step, lr)
+        db, mb, vb = _adam_update(gb, m[1], v[1], step, lr)
+        alpha, bias = alpha + da, bias + db
+        m, v = (ma, mb), (va, vb)
+
+    # Platt scaling on the decision values (logistic loss, GD)
+    dec = decision(alpha, bias, z)
+    y01 = (labels + 1.0) / 2.0
+
+    def platt_loss(ab):
+        a, b = ab
+        logits = a * dec + b
+        return jnp.mean(jnp.logaddexp(0.0, logits) - y01 * logits)
+
+    pg = jax.jit(jax.grad(platt_loss))
+    ab = jnp.array([1.0, 0.0], jnp.float32)
+    for _ in range(500):
+        ab = ab - 0.1 * pg(ab)
+
+    params = ScorerParams(
+        support=support,
+        alpha=alpha,
+        gamma=gamma_arr,
+        bias=bias,
+        platt_a=ab[0],
+        platt_b=ab[1],
+        feat_mu=mu,
+        feat_sigma=sigma,
+    )
+    acc = jnp.mean((jnp.sign(dec) == labels).astype(jnp.float32))
+    return params, float(acc)
+
+
+@functools.lru_cache(maxsize=1)
+def default_params(seed: int = 20190412) -> ScorerParams:
+    """The repo-wide deterministic scorer (seed = arbitrary fixed constant)."""
+    params, _ = train_scorer(jax.random.PRNGKey(seed))
+    return params

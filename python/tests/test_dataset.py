@@ -1,0 +1,79 @@
+"""Training-workload properties: CLE integrator, labeling, entropy oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import entropy_ref
+from compile.model import (
+    LABEL_AC_THRESHOLD,
+    SWEEP_RANGES,
+    _min_lag_autocorr,
+    goodwin_cle,
+    synth_dataset,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_cle_shapes_and_nonnegativity():
+    key = jax.random.PRNGKey(0)
+    params = {
+        name: jnp.full((8,), 0.5 * (lo + hi), jnp.float32)
+        for name, (lo, hi) in SWEEP_RANGES.items()
+    }
+    out = goodwin_cle(key, params, t_len=128)
+    assert out.shape == (8, 128)
+    assert bool(jnp.all(out >= 0.0)), "copy numbers must be non-negative"
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_cle_oscillatory_vs_quiescent_regimes():
+    # strong-repression corner should oscillate; weak corner should not
+    key = jax.random.PRNGKey(1)
+    n = 16
+    osc = {
+        "alpha": jnp.full((n,), 300.0),
+        "beta": jnp.full((n,), 0.5),
+        "gamma": jnp.full((n,), 0.5),
+        "kd": jnp.full((n,), 100.0),
+        "hill_n": jnp.full((n,), 10.0),
+    }
+    qui = dict(osc, kd=jnp.full((n,), 400.0), hill_n=jnp.full((n,), 1.0))
+    ac_osc = _min_lag_autocorr(goodwin_cle(key, osc, 256))
+    ac_qui = _min_lag_autocorr(goodwin_cle(key, qui, 256))
+    assert float(jnp.mean(ac_osc)) < LABEL_AC_THRESHOLD
+    assert float(jnp.mean(ac_qui)) > float(jnp.mean(ac_osc))
+
+
+def test_synth_dataset_balanced_and_deterministic():
+    s1, l1 = synth_dataset(jax.random.PRNGKey(5), 32, 128)
+    s2, l2 = synth_dataset(jax.random.PRNGKey(5), 32, 128)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(l1, l2)
+    assert s1.shape == (64, 128)
+    assert int(jnp.sum(l1 == 1.0)) == 32
+    assert int(jnp.sum(l1 == -1.0)) == 32
+
+
+@settings(max_examples=50, deadline=None)
+@given(p=st.floats(min_value=0.0, max_value=1.0))
+def test_entropy_ref_matches_definition(p):
+    h = float(entropy_ref(jnp.asarray([p], jnp.float32))[0])
+    if p in (0.0, 1.0):
+        assert h == 0.0
+    else:
+        import math
+
+        want = -(p * math.log2(p) + (1 - p) * math.log2(1 - p))
+        assert abs(h - want) < 1e-3
+    assert 0.0 <= h <= 1.0 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_entropy_symmetry(seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.uniform(0, 1, 32), jnp.float32)
+    np.testing.assert_allclose(entropy_ref(p), entropy_ref(1.0 - p), rtol=1e-4, atol=1e-5)

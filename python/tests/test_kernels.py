@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value regimes; fixed cases pin the contract
+(constant series, alternating series, padding edges).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    NUM_FEATURES,
+    features_pallas,
+    features_ref,
+    rbf_decision_pallas,
+    rbf_decision_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_series(rng, b, t, scale=100.0):
+    return jnp.asarray(rng.standard_normal((b, t)) * scale + 50.0, jnp.float32)
+
+
+# ---------------------------------------------------------------- features
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    t=st.sampled_from([32, 64, 100, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_features_pallas_matches_ref(b, t, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_series(rng, b, t)
+    got = features_pallas(x)
+    want = features_ref(x)
+    assert got.shape == (b, NUM_FEATURES)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=64),
+    block=st.sampled_from([1, 3, 16, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_features_pallas_block_size_invariant(b, block, seed):
+    # the result must not depend on the BlockSpec tiling
+    rng = np.random.default_rng(seed)
+    x = rand_series(rng, b, 64)
+    a = features_pallas(x, block_b=block)
+    bdef = features_pallas(x)
+    np.testing.assert_allclose(a, bdef, rtol=1e-6, atol=1e-6)
+
+
+def test_features_constant_series():
+    x = jnp.full((4, 128), 7.25, jnp.float32)
+    f = features_pallas(x)
+    np.testing.assert_allclose(f[:, 0], 7.25, rtol=1e-6)   # mean
+    np.testing.assert_allclose(f[:, 1], 0.0, atol=1e-6)    # std
+    np.testing.assert_allclose(f[:, 2], 0.0, atol=1e-6)    # range
+    np.testing.assert_allclose(f[:, 3:6], 0.0, atol=1e-6)  # AC guards
+    np.testing.assert_allclose(f[:, 6], 0.0, atol=1e-6)    # crossings
+    np.testing.assert_allclose(f[:, 7], 0.0, atol=1e-3)    # shift
+
+
+def test_features_alternating_series():
+    x = jnp.tile(jnp.asarray([1.0, -1.0] * 64, jnp.float32), (2, 1))
+    f = features_pallas(x)
+    np.testing.assert_allclose(f[:, 0], 0.0, atol=1e-6)
+    np.testing.assert_allclose(f[:, 6], 1.0, rtol=1e-6)    # crossing rate
+    assert float(f[0, 3]) < -0.9                            # lag-1 AC
+
+
+def test_features_sine_autocorrelation():
+    t = jnp.arange(256, dtype=jnp.float32)
+    x = jnp.sin(2 * jnp.pi * t / 32.0)[None, :]
+    f = features_pallas(x)
+    assert float(f[0, 5]) < -0.8   # lag-16 = half period
+    assert float(f[0, 3]) > 0.9    # lag-1
+
+
+# ---------------------------------------------------------------- rbf
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    s=st.sampled_from([1, 8, 64, 128]),
+    gamma=st.floats(min_value=0.01, max_value=5.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rbf_pallas_matches_ref(b, s, gamma, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, NUM_FEATURES)), jnp.float32)
+    sv = jnp.asarray(rng.standard_normal((s, NUM_FEATURES)), jnp.float32)
+    alpha = jnp.asarray(rng.standard_normal(s), jnp.float32)
+    bias = float(rng.standard_normal())
+    got = rbf_decision_pallas(x, sv, alpha, gamma, bias)
+    want = rbf_decision_ref(x, sv, alpha, gamma, bias)
+    assert got.shape == (b,)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_rbf_identity_point():
+    # x == sv -> kernel value 1 -> decision = alpha + bias
+    x = jnp.ones((1, NUM_FEATURES), jnp.float32)
+    sv = jnp.ones((1, NUM_FEATURES), jnp.float32)
+    out = rbf_decision_pallas(x, sv, jnp.asarray([2.5], jnp.float32), 1.0, 0.5)
+    np.testing.assert_allclose(out, [3.0], rtol=1e-6)
+
+
+def test_rbf_far_point_decays_to_bias():
+    x = jnp.full((1, NUM_FEATURES), 100.0, jnp.float32)
+    sv = jnp.zeros((1, NUM_FEATURES), jnp.float32)
+    out = rbf_decision_pallas(x, sv, jnp.asarray([5.0], jnp.float32), 1.0, 0.25)
+    np.testing.assert_allclose(out, [0.25], atol=1e-6)
+
+
+def test_rbf_padding_rows_do_not_leak():
+    # b=1 with block 128: 127 padded rows must not affect the real row
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, NUM_FEATURES)), jnp.float32)
+    sv = jnp.asarray(rng.standard_normal((16, NUM_FEATURES)), jnp.float32)
+    alpha = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    single = rbf_decision_pallas(x, sv, alpha, 0.7, 0.1)
+    batch = rbf_decision_pallas(jnp.tile(x, (200, 1)), sv, alpha, 0.7, 0.1)
+    np.testing.assert_allclose(batch, jnp.full(200, single[0]), rtol=1e-6)

@@ -1,0 +1,171 @@
+//! Minimal benchmarking harness (the vendored crate set has no criterion).
+//!
+//! Criterion-style reporting: warmup, timed iterations, mean ± stddev,
+//! optional throughput. Used by the `benches/` targets (harness = false).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Items processed per iteration (for throughput reporting).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12} ± {:<10} (min {:?}, max {:?}, {} iters)",
+            self.name,
+            format_duration(self.mean),
+            format_duration(self.std_dev),
+            self.min,
+            self.max,
+            self.iters
+        );
+        if let Some(items) = self.items_per_iter {
+            let per_sec = items / self.mean.as_secs_f64();
+            s.push_str(&format!("  [{} items/s]", format_rate(per_sec)));
+        }
+        s
+    }
+}
+
+fn format_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1_000.0)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1_000_000.0)
+    } else {
+        format!("{:.2}s", ns as f64 / 1_000_000_000.0)
+    }
+}
+
+fn format_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k", r / 1e3)
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, measure: Duration) -> Self {
+        Self { warmup, measure, max_iters: 10_000, results: Vec::new() }
+    }
+
+    /// Quick mode for CI (`SHPTIER_BENCH_QUICK=1`).
+    pub fn from_env() -> Self {
+        if std::env::var_os("SHPTIER_BENCH_QUICK").is_some() {
+            Self::new(Duration::from_millis(50), Duration::from_millis(300))
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f` repeatedly; `items` is the per-iteration workload size for
+    /// throughput reporting (0 = none). The closure's return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, items: u64, mut f: F) -> &BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // measure
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure && (samples.len() as u64) < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let n = samples.len().max(1) as u32;
+        let total: Duration = samples.iter().sum();
+        let mean = total / n;
+        let mean_ns = mean.as_nanos() as f64;
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_nanos() as f64 - mean_ns;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n as u64,
+            mean,
+            std_dev: Duration::from_nanos(var.sqrt() as u64),
+            min: samples.iter().min().copied().unwrap_or_default(),
+            max: samples.iter().max().copied().unwrap_or_default(),
+            items_per_iter: if items > 0 { Some(items as f64) } else { None },
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(Duration::from_millis(5), Duration::from_millis(30));
+        let r = b.bench("noopish", 100, || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.items_per_iter == Some(100.0));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(format_duration(Duration::from_nanos(500)), "500ns");
+        assert!(format_duration(Duration::from_micros(1500)).contains("ms"));
+        assert!(format_rate(2_500_000.0).contains('M'));
+    }
+}

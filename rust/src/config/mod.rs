@@ -1,0 +1,308 @@
+//! Launcher configuration: TOML schema → typed config, with validation.
+//!
+//! Example (`configs/case_study_2.toml`):
+//!
+//! ```toml
+//! [workload]
+//! n_docs = 10000
+//! k = 500
+//! t_len = 256
+//! seed = 42
+//! sweep_values_per_dim = 7
+//! sweep_samples_per_point = 1
+//!
+//! [pipeline]
+//! producers = 4
+//! batch_max = 64
+//! channel_capacity = 256
+//! scorer = "pjrt"          # pjrt | native | auto
+//!
+//! [economics]
+//! preset = "case-study-2"  # case-study-1 | case-study-2 | custom
+//! scale_to_n = true        # scale preset N/K down to n_docs
+//!
+//! [policy]
+//! kind = "changeover"      # all-a | all-b | changeover | changeover-migrate
+//!                          #   | age-demotion | ski-rental
+//! r_frac = 0.078           # omit to use the closed-form optimum
+//! ```
+
+use crate::cost::{case_study_1, case_study_2, optimal_r, CostModel, PerDocCosts};
+use crate::pipeline::PipelineConfig;
+use crate::policy::{
+    AgeBasedDemotion, Changeover, ChangeoverMigrate, PlacementPolicy, SingleTier, SkiRental,
+};
+use crate::serdes::TomlValue;
+use crate::storage::TierId;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed launcher configuration.
+#[derive(Debug, Clone)]
+pub struct LaunchConfig {
+    pub pipeline: PipelineConfig,
+    pub sweep_values_per_dim: usize,
+    pub sweep_samples_per_point: u64,
+    pub model: CostModel,
+    pub scorer: ScorerKind,
+    pub policy: PolicySpec,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScorerKind {
+    Pjrt,
+    Native,
+    Auto,
+}
+
+/// Declarative policy spec (instantiated per run — policies are stateful).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    AllA,
+    AllB,
+    Changeover { r: u64 },
+    ChangeoverMigrate { r: u64 },
+    AgeDemotion { age_frac: f64 },
+    SkiRental,
+}
+
+impl PolicySpec {
+    pub fn instantiate(&self, model: &CostModel) -> Box<dyn PlacementPolicy> {
+        match *self {
+            PolicySpec::AllA => Box::new(SingleTier::new(TierId::A)),
+            PolicySpec::AllB => Box::new(SingleTier::new(TierId::B)),
+            PolicySpec::Changeover { r } => Box::new(Changeover::new(r)),
+            PolicySpec::ChangeoverMigrate { r } => Box::new(ChangeoverMigrate::new(r)),
+            PolicySpec::AgeDemotion { age_frac } => Box::new(AgeBasedDemotion::new(age_frac)),
+            PolicySpec::SkiRental => Box::new(SkiRental::from_model(model)),
+        }
+    }
+}
+
+impl LaunchConfig {
+    /// Parse a TOML document (see module docs for the schema).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let t = TomlValue::parse(text).context("parsing config TOML")?;
+
+        let get_u64 = |path: &str, default: u64| -> Result<u64> {
+            match t.get_path(path) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("config: {path} must be a non-negative integer")),
+            }
+        };
+        let n_docs = get_u64("workload.n_docs", 10_000)?;
+        let k = get_u64("workload.k", (n_docs / 100).max(1))?;
+        let t_len = get_u64("workload.t_len", 256)? as usize;
+        let seed = get_u64("workload.seed", 20190412)?;
+        let values_per_dim = get_u64("workload.sweep_values_per_dim", 7)? as usize;
+        let samples = get_u64("workload.sweep_samples_per_point", 1)?;
+
+        let producers = get_u64("pipeline.producers", 4)? as usize;
+        let batch_max = get_u64("pipeline.batch_max", 64)? as usize;
+        let channel_capacity = get_u64("pipeline.channel_capacity", 256)? as usize;
+        let scorer = match t
+            .get_path("pipeline.scorer")
+            .and_then(|v| v.as_str())
+            .unwrap_or("auto")
+        {
+            "pjrt" => ScorerKind::Pjrt,
+            "native" => ScorerKind::Native,
+            "auto" => ScorerKind::Auto,
+            other => bail!("config: unknown scorer '{other}'"),
+        };
+
+        // economics
+        let preset = t
+            .get_path("economics.preset")
+            .and_then(|v| v.as_str())
+            .unwrap_or("case-study-2");
+        let mut model = match preset {
+            "case-study-1" => case_study_1(),
+            "case-study-2" => case_study_2(),
+            "custom" => parse_custom_economics(&t)?,
+            other => bail!("config: unknown economics preset '{other}'"),
+        };
+        let scale_to_n = t
+            .get_path("economics.scale_to_n")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(true);
+        if scale_to_n && preset != "custom" {
+            let scale = (model.n / n_docs.max(1)).max(1);
+            model = crate::cost::scaled(&model, scale);
+        }
+        // k override
+        if t.get_path("workload.k").is_some() {
+            model = CostModel::new(model.n, k.min(model.n), model.a, model.b)
+                .with_rent(model.include_rent);
+        }
+
+        // policy
+        let kind = t
+            .get_path("policy.kind")
+            .and_then(|v| v.as_str())
+            .unwrap_or("changeover");
+        let r = match t.get_path("policy.r_frac").and_then(|v| v.as_f64()) {
+            Some(f) => {
+                if !(0.0..=1.0).contains(&f) {
+                    bail!("config: policy.r_frac must be in [0,1]");
+                }
+                (f * model.n as f64) as u64
+            }
+            None => optimal_r(&model, kind == "changeover-migrate").r,
+        };
+        let policy = match kind {
+            "all-a" => PolicySpec::AllA,
+            "all-b" => PolicySpec::AllB,
+            "changeover" => PolicySpec::Changeover { r },
+            "changeover-migrate" => PolicySpec::ChangeoverMigrate { r },
+            "age-demotion" => PolicySpec::AgeDemotion {
+                age_frac: t
+                    .get_path("policy.age_frac")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.05),
+            },
+            "ski-rental" => PolicySpec::SkiRental,
+            other => bail!("config: unknown policy kind '{other}'"),
+        };
+
+        Ok(Self {
+            pipeline: PipelineConfig {
+                n_docs: n_docs.min(model.n),
+                t_len,
+                t_end: 60.0,
+                producers,
+                batch_max,
+                channel_capacity,
+                seed,
+                record_series: true,
+                record_scores: true,
+            },
+            sweep_values_per_dim: values_per_dim,
+            sweep_samples_per_point: samples,
+            model,
+            scorer,
+            policy,
+        })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+}
+
+fn parse_custom_economics(t: &TomlValue) -> Result<CostModel> {
+    let read = |tier: &str, field: &str| -> Result<f64> {
+        t.get_path(&format!("economics.{tier}.{field}"))
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("config: economics.{tier}.{field} required for custom"))
+    };
+    let n = t
+        .get_path("economics.n")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("config: economics.n required for custom"))?;
+    let k = t
+        .get_path("economics.k")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("config: economics.k required for custom"))?;
+    let a = PerDocCosts {
+        write: read("tier_a", "write")?,
+        read: read("tier_a", "read")?,
+        rent_window: read("tier_a", "rent_window")?,
+    };
+    let b = PerDocCosts {
+        write: read("tier_b", "write")?,
+        read: read("tier_b", "read")?,
+        rent_window: read("tier_b", "rent_window")?,
+    };
+    let include_rent = t
+        .get_path("economics.include_rent")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(true);
+    Ok(CostModel::new(n, k, a, b).with_rent(include_rent))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_config_with_defaults() {
+        let c = LaunchConfig::from_toml("").unwrap();
+        assert_eq!(c.pipeline.n_docs, 10_000);
+        assert_eq!(c.scorer, ScorerKind::Auto);
+        assert!(matches!(c.policy, PolicySpec::Changeover { .. }));
+        // CS2 preset scaled to 10k docs
+        assert_eq!(c.model.n, 10_000);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = LaunchConfig::from_toml(
+            r#"
+[workload]
+n_docs = 500
+k = 25
+seed = 7
+
+[pipeline]
+producers = 2
+scorer = "native"
+
+[economics]
+preset = "case-study-1"
+
+[policy]
+kind = "changeover-migrate"
+r_frac = 0.25
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.pipeline.n_docs, 500);
+        assert_eq!(c.model.k, 25);
+        assert_eq!(c.scorer, ScorerKind::Native);
+        assert_eq!(c.policy, PolicySpec::ChangeoverMigrate { r: 125 });
+    }
+
+    #[test]
+    fn custom_economics() {
+        let c = LaunchConfig::from_toml(
+            r#"
+[economics]
+preset = "custom"
+n = 1000
+k = 10
+include_rent = false
+[economics.tier_a]
+write = 1.0
+read = 2.0
+rent_window = 0.0
+[economics.tier_b]
+write = 3.0
+read = 0.5
+rent_window = 0.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.model.n, 1000);
+        assert!(!c.model.include_rent);
+        assert_eq!(c.model.b.write, 3.0);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(LaunchConfig::from_toml("[policy]\nkind = \"nope\"\n").is_err());
+        assert!(LaunchConfig::from_toml("[policy]\nr_frac = 1.5\n").is_err());
+        assert!(LaunchConfig::from_toml("[pipeline]\nscorer = \"gpu\"\n").is_err());
+        assert!(LaunchConfig::from_toml("[economics]\npreset = \"custom\"\n").is_err());
+    }
+
+    #[test]
+    fn policy_spec_instantiates() {
+        let c = LaunchConfig::from_toml("").unwrap();
+        let p = c.policy.instantiate(&c.model);
+        assert!(p.name().starts_with("changeover"));
+    }
+}

@@ -1,0 +1,315 @@
+//! Closed-form expected costs for the top-K record process (paper §VI–VII).
+//!
+//! Under the random-order assumption, document `i` (0-indexed) enters the
+//! top-K at observation time with probability 1 for `i < K` and `K/(i+1)`
+//! otherwise (eqs. 9–10). The expected cumulative number of writes after
+//! observing documents `0..i` is therefore an exact harmonic sum
+//! (eqs. 11–12); everything below is built from it.
+
+use crate::cost::model::{CostBreakdown, CostModel, Strategy};
+use crate::util::math::{harmonic, harmonic_diff};
+
+/// `P(document i enters the top-K when observed)` — eqs. (9)–(10),
+/// 0-indexed as in the paper's eq. (5).
+pub fn p_write(i: u64, k: u64) -> f64 {
+    if i < k {
+        1.0
+    } else {
+        k as f64 / (i + 1) as f64
+    }
+}
+
+/// Expected number of writes among documents `0..count` (i.e. after `count`
+/// documents have been observed) — exact form of eqs. (11)–(12):
+/// `count` if `count <= K`, else `K + K·(H_count − H_K)`.
+pub fn expected_writes(count: u64, k: u64) -> f64 {
+    if count <= k {
+        count as f64
+    } else {
+        k as f64 + k as f64 * harmonic_diff(k, count)
+    }
+}
+
+/// The paper's *printed* approximation of eq. (12), `K + K·ln(i+1)`,
+/// kept for the errata comparison in EXPERIMENTS.md (it overestimates by
+/// `K·H_K ≈ K·ln K`; see DESIGN.md §5).
+pub fn expected_writes_paper_eq12(count: u64, k: u64) -> f64 {
+    if count <= k {
+        count as f64
+    } else {
+        k as f64 + k as f64 * (count as f64).ln()
+    }
+}
+
+/// Expected number of writes for Algorithm B (K = 1, one tier):
+/// the harmonic number `H_N` — eq. (6), approximated by eq. (7).
+pub fn algorithm_b_expected_writes(n: u64) -> f64 {
+    harmonic(n)
+}
+
+/// Probability that a document surviving to the final read was written while
+/// index `< r` — the i.u.d.-over-the-stream assumption behind eq. (15).
+pub fn p_survivor_in_a(r: u64, n: u64) -> f64 {
+    (r.min(n)) as f64 / n as f64
+}
+
+/// Expected occupancy of tier A at observation time `t` (documents of the
+/// current top-K written before `r`), under the same i.u.d. approximation:
+/// `K·min(1, r/t)` (for `t ≥ K`). Used for the exact-rent variant of the
+/// no-migration strategy; the paper instead bounds rent by the dearer tier.
+pub fn expected_occupancy_a(t: u64, r: u64, k: u64) -> f64 {
+    if t == 0 {
+        return 0.0;
+    }
+    let frac = (r as f64 / t as f64).min(1.0);
+    (k.min(t)) as f64 * frac
+}
+
+/// Expected cost breakdown of a strategy — eqs. (13)–(16) and (18)–(20),
+/// with exact harmonic sums instead of the log approximations.
+///
+/// Conventions (see DESIGN.md §5 for the sign errata):
+/// - writes to A: `W(r)`, writes to B: `W(N) − W(r)`, where
+///   `W(c) = expected_writes(c, K)`.
+/// - no-migration reads: a surviving doc is read from A w.p. `r/N`
+///   (paper eq. (15) swaps the labels; this is the consistent form).
+/// - no-migration rent (when `include_rent`): integrated expected occupancy
+///   `∫ occupancy · rent/window dt`, a refinement of the paper's
+///   constant upper bound (`rent_bound_no_migration` reproduces the bound).
+/// - migration at `i = r`: K residents each pay `read_A + write_B`
+///   (eq. 19); rent splits linearly at `r/N` (eq. 18); final read from B.
+pub fn expected_cost(model: &CostModel, strategy: Strategy) -> CostBreakdown {
+    let n = model.n;
+    let k = model.k;
+    let kf = k as f64;
+    match strategy {
+        Strategy::AllA => {
+            let writes = expected_writes(n, k);
+            CostBreakdown {
+                writes_a: writes * model.a.write,
+                writes_b: 0.0,
+                reads: kf * model.a.read,
+                rent: if model.include_rent { kf * model.a.rent_window } else { 0.0 },
+                migration: 0.0,
+            }
+        }
+        Strategy::AllB => {
+            let writes = expected_writes(n, k);
+            CostBreakdown {
+                writes_a: 0.0,
+                writes_b: writes * model.b.write,
+                reads: kf * model.b.read,
+                rent: if model.include_rent { kf * model.b.rent_window } else { 0.0 },
+                migration: 0.0,
+            }
+        }
+        Strategy::Changeover { r } => {
+            let r = r.min(n);
+            let w_a = expected_writes(r, k);
+            let w_b = expected_writes(n, k) - w_a;
+            let p_a = p_survivor_in_a(r, n);
+            let reads = kf * (p_a * model.a.read + (1.0 - p_a) * model.b.read);
+            let rent = if model.include_rent {
+                expected_rent_no_migration(model, r)
+            } else {
+                0.0
+            };
+            CostBreakdown {
+                writes_a: w_a * model.a.write,
+                writes_b: w_b * model.b.write,
+                reads,
+                rent,
+                migration: 0.0,
+            }
+        }
+        Strategy::ChangeoverMigrate { r } => {
+            let r = r.min(n);
+            let w_a = expected_writes(r, k);
+            let w_b = expected_writes(n, k) - w_a;
+            let frac = r as f64 / n as f64;
+            // Everything lives in B after i=r, so the final read is from B.
+            let reads = kf * model.b.read;
+            let rent = if model.include_rent {
+                kf * (frac * model.a.rent_window + (1.0 - frac) * model.b.rent_window)
+            } else {
+                0.0
+            };
+            // K residents migrate (bounded by how many exist at i=r).
+            let residents = k.min(r) as f64;
+            let migration = residents * (model.a.read + model.b.write);
+            CostBreakdown {
+                writes_a: w_a * model.a.write,
+                writes_b: w_b * model.b.write,
+                reads,
+                rent,
+                migration,
+            }
+        }
+    }
+}
+
+/// The paper's rent *bound* for the no-migration strategy: all K docs pay
+/// the dearer tier for the whole window (constant in `r`, §VII).
+pub fn rent_bound_no_migration(model: &CostModel) -> f64 {
+    model.k as f64 * model.a.rent_window.max(model.b.rent_window)
+}
+
+/// Exact-ish expected rent without migration: integrate expected occupancy
+/// of each tier over the stream. Documents pay rent from their write until
+/// overwritten or end-of-window; equivalently, at each instant `t` the K
+/// resident documents split between tiers as `expected_occupancy_a(t,r,K)`.
+/// The stream is mapped linearly onto the window.
+pub fn expected_rent_no_migration(model: &CostModel, r: u64) -> f64 {
+    let n = model.n;
+    let k = model.k as f64;
+    let r = r.min(n);
+    // ∫_0^N occA(t) dt / N, piecewise:
+    //   t in (0, r): occA = min(t,K)  (all residents are in A)
+    //   t in (r, N): occA = K·r/t    (i.u.d. thinning)
+    // Using continuous approximations of the sums (error O(1/N)).
+    let (nf, rf) = (n as f64, r as f64);
+    let occ_a_time = if r == 0 {
+        0.0
+    } else {
+        // ∫_0^min(K,r) t dt + ∫_min(K,r)^r K dt  (fill-up phase)
+        let kk = k.min(rf);
+        let fill = 0.5 * kk * kk + k * (rf - kk).max(0.0);
+        // ∫_r^N K·r/t dt = K·r·ln(N/r)
+        let tail = if n > r { k * rf * (nf / rf).ln() } else { 0.0 };
+        (fill + tail) / nf
+    };
+    // total resident doc-time: same integral with occ = min(t, K)
+    let kk = k.min(nf);
+    let occ_total_time = (0.5 * kk * kk + k * (nf - kk).max(0.0)) / nf;
+    let occ_b_time = (occ_total_time - occ_a_time).max(0.0);
+    // doc-time is in units of "fraction of window × documents"
+    occ_a_time * model.a.rent_window + occ_b_time * model.b.rent_window
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::model::PerDocCosts;
+    use crate::util::math::EULER_MASCHERONI;
+
+    fn model(n: u64, k: u64) -> CostModel {
+        CostModel::new(
+            n,
+            k,
+            PerDocCosts { write: 2.0, read: 5.0, rent_window: 0.1 },
+            PerDocCosts { write: 3.0, read: 7.0, rent_window: 0.2 },
+        )
+    }
+
+    #[test]
+    fn p_write_matches_eqs_9_10() {
+        assert_eq!(p_write(0, 3), 1.0);
+        assert_eq!(p_write(2, 3), 1.0);
+        assert!((p_write(3, 3) - 3.0 / 4.0).abs() < 1e-15);
+        assert!((p_write(99, 3) - 0.03).abs() < 1e-15);
+    }
+
+    #[test]
+    fn expected_writes_is_sum_of_p_write() {
+        for (n, k) in [(1u64, 1u64), (10, 1), (10, 3), (100, 7), (1000, 100)] {
+            let direct: f64 = (0..n).map(|i| p_write(i, k)).sum();
+            assert!(
+                (expected_writes(n, k) - direct).abs() < 1e-9,
+                "n={n} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn algorithm_b_matches_eq7() {
+        // E[#writes] = H_N ≈ ln N + γ (paper eq. 7)
+        let n = 100_000u64;
+        let e = algorithm_b_expected_writes(n);
+        assert!((e - ((n as f64).ln() + EULER_MASCHERONI)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn writes_split_adds_up() {
+        let m = model(1000, 10);
+        for r in [10u64, 100, 500, 999] {
+            let c = expected_cost(&m, Strategy::Changeover { r });
+            let total_writes = c.writes_a / m.a.write + c.writes_b / m.b.write;
+            assert!(
+                (total_writes - expected_writes(1000, 10)).abs() < 1e-9,
+                "r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn changeover_extremes_match_single_tier() {
+        let m = model(1000, 10).with_rent(false);
+        let all_a = expected_cost(&m, Strategy::AllA);
+        let c_n = expected_cost(&m, Strategy::Changeover { r: 1000 });
+        assert!((all_a.total() - c_n.total()).abs() < 1e-9);
+        let all_b = expected_cost(&m, Strategy::AllB);
+        let c_0 = expected_cost(&m, Strategy::Changeover { r: 0 });
+        assert!((all_b.total() - c_0.total()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn migration_cost_is_k_residents() {
+        let m = model(1000, 10);
+        let c = expected_cost(&m, Strategy::ChangeoverMigrate { r: 500 });
+        assert!((c.migration - 10.0 * (5.0 + 3.0)).abs() < 1e-12);
+        // with r < K only r residents exist
+        let c2 = expected_cost(&m, Strategy::ChangeoverMigrate { r: 4 });
+        assert!((c2.migration - 4.0 * (5.0 + 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migrate_reads_always_from_b() {
+        let m = model(1000, 10).with_rent(false);
+        let c = expected_cost(&m, Strategy::ChangeoverMigrate { r: 500 });
+        assert!((c.reads - 10.0 * 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rent_bound_dominates_exact_rent() {
+        let m = model(10_000, 50);
+        for r in [100u64, 1000, 5000, 9999] {
+            let exact = expected_rent_no_migration(&m, r);
+            assert!(exact <= rent_bound_no_migration(&m) + 1e-9, "r={r}");
+            assert!(exact >= 0.0);
+        }
+    }
+
+    #[test]
+    fn rent_monotone_in_tier_prices() {
+        // all-in-A rent should be ~K * rentA for large N (fill-up negligible)
+        let m = model(1_000_000, 100);
+        let rent_all_a = expected_rent_no_migration(&m, 1_000_000);
+        assert!((rent_all_a - 100.0 * 0.1).abs() / (100.0 * 0.1) < 0.01);
+        let rent_all_b = expected_rent_no_migration(&m, 0);
+        assert!((rent_all_b - 100.0 * 0.2).abs() / (100.0 * 0.2) < 0.01);
+    }
+
+    #[test]
+    fn paper_eq12_overestimates_by_k_harmonic_k() {
+        // documented erratum: printed eq. (12) = exact + K·H_K
+        let (n, k) = (100_000u64, 100u64);
+        let exact = expected_writes(n, k);
+        let printed = expected_writes_paper_eq12(n, k);
+        // gap = K·(H_K − γ) − O(K/n): the printed form replaces
+        // K·(H_n − H_K) with K·ln n, i.e. drops −K·H_K and adds
+        // K·(ln n − H_n) ≈ −K·γ.
+        let gap = printed - exact;
+        let expect = k as f64 * (harmonic(k) - crate::util::math::EULER_MASCHERONI);
+        assert!(
+            (gap - expect).abs() < k as f64 * 1e-3,
+            "gap={gap} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn survivor_probability_clamps() {
+        assert_eq!(p_survivor_in_a(2000, 1000), 1.0);
+        assert_eq!(p_survivor_in_a(0, 1000), 0.0);
+        assert!((p_survivor_in_a(250, 1000) - 0.25).abs() < 1e-15);
+    }
+}

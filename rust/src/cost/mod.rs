@@ -1,0 +1,23 @@
+//! The paper's analytic cost model (§IV, §VI–VII): effective per-document
+//! costs, expected-cost closed forms, and `r*` optimizers, plus the 2018
+//! cloud pricing presets behind Tables I–II.
+
+pub mod analytic;
+pub mod model;
+pub mod optimizer;
+pub mod pricing;
+
+pub use analytic::{
+    algorithm_b_expected_writes, expected_cost, expected_rent_no_migration,
+    expected_writes, p_survivor_in_a, p_write, rent_bound_no_migration,
+};
+pub use model::{
+    Channel, CostBreakdown, CostModel, DocSpec, Location, PerDocCosts, Strategy, TierPricing,
+};
+pub use optimizer::{
+    closed_form_frac_migration, closed_form_frac_no_migration, numeric_optimal_r, optimal_r,
+    rank_strategies, OptimalR,
+};
+pub use pricing::{
+    azure_blob_gpv1, case_study_1, case_study_2, efs, inter_cloud_channel, s3_standard, scaled,
+};

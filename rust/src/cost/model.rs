@@ -1,0 +1,277 @@
+//! Core cost-model types.
+//!
+//! The paper (§IV, §VII) models read and write costs independently for two
+//! storage tiers, for a producer and a consumer that may be separated by a
+//! costly communication channel. All costs here are reduced to *effective
+//! per-document* costs — transaction cost plus any channel cost incurred by
+//! the hop — plus a per-document *rental* cost for occupying the tier for
+//! the whole stream window.
+
+use std::fmt;
+
+/// Where an actor or a tier lives. Crossing locations incurs the channel
+/// charge (per GB) in addition to the tier's transaction cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Location {
+    Producer,
+    Consumer,
+}
+
+/// Raw price book of one storage tier, in the units cloud providers quote.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierPricing {
+    /// Human-readable name, e.g. "S3 Standard (EU-Ireland)".
+    pub name: String,
+    /// $ per write transaction (PUT), per document.
+    pub put_per_doc: f64,
+    /// $ per read transaction (GET), per document.
+    pub get_per_doc: f64,
+    /// $ per GB·month of occupancy.
+    pub storage_gb_month: f64,
+    /// $ per GB transferred *into* the tier (ingress).
+    pub ingress_gb: f64,
+    /// $ per GB transferred *out of* the tier (egress).
+    pub egress_gb: f64,
+    /// Which side of the channel the tier is on.
+    pub location: Location,
+}
+
+/// The workload's document geometry (paper Tables I & II headers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DocSpec {
+    /// Document size in (decimal) GB.
+    pub size_gb: f64,
+    /// Stream window duration, in 30-day months (the paper's billing month).
+    pub window_months: f64,
+}
+
+impl DocSpec {
+    pub fn new(size_gb: f64, window_months: f64) -> Self {
+        assert!(size_gb >= 0.0 && window_months >= 0.0);
+        Self { size_gb, window_months }
+    }
+
+    /// Convenience: document size given in MB (decimal), window in days.
+    pub fn from_mb_days(size_mb: f64, window_days: f64) -> Self {
+        Self::new(size_mb / 1000.0, window_days / 30.0)
+    }
+}
+
+/// Effective per-document costs for one tier under one workload, with all
+/// channel charges folded in. This is the quantity the closed forms
+/// (eqs. 14–21) operate on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerDocCosts {
+    /// $ to write one document into the tier (from the producer).
+    pub write: f64,
+    /// $ for the consumer to read one document from the tier.
+    pub read: f64,
+    /// $ to keep one document resident for the *full* stream window.
+    pub rent_window: f64,
+}
+
+/// The channel between producer and consumer locations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Channel {
+    /// $ per GB for any document crossing producer↔consumer, either way.
+    /// The paper's Case Study 1 charges 0.087 $/GB (Azure egress list price)
+    /// for the inter-cloud hop.
+    pub cost_gb: f64,
+}
+
+impl Channel {
+    pub fn free() -> Self {
+        Self { cost_gb: 0.0 }
+    }
+}
+
+impl TierPricing {
+    /// Reduce the price book to effective per-document costs for `doc`,
+    /// given the channel. Writes originate at the producer; the final read
+    /// is issued by the consumer.
+    pub fn per_doc(&self, doc: DocSpec, channel: Channel) -> PerDocCosts {
+        let cross_write = self.location == Location::Consumer;
+        let cross_read = self.location == Location::Producer;
+        let write = self.put_per_doc
+            + doc.size_gb * (self.ingress_gb + if cross_write { channel.cost_gb } else { 0.0 });
+        let read = self.get_per_doc
+            + doc.size_gb * (self.egress_gb + if cross_read { channel.cost_gb } else { 0.0 });
+        let rent_window = doc.size_gb * self.storage_gb_month * doc.window_months;
+        PerDocCosts { write, read, rent_window }
+    }
+}
+
+/// A fully-specified two-tier placement problem: the inputs to every
+/// strategy evaluation and optimizer in this crate.
+///
+/// Tier `A` receives the first `r` documents ("near"/early tier), tier `B`
+/// the rest — the naming of paper Algorithm C (Fig. 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Stream length.
+    pub n: u64,
+    /// Retained set size (top-K).
+    pub k: u64,
+    /// Effective per-doc costs of tier A.
+    pub a: PerDocCosts,
+    /// Effective per-doc costs of tier B.
+    pub b: PerDocCosts,
+    /// Whether rental costs are included in strategy totals. The paper's
+    /// Case Study 1 is transaction-dominated and excludes rent (uses a
+    /// bound); Case Study 2 includes it.
+    pub include_rent: bool,
+}
+
+impl CostModel {
+    pub fn new(n: u64, k: u64, a: PerDocCosts, b: PerDocCosts) -> Self {
+        assert!(n > 0, "stream length must be positive");
+        assert!(k > 0 && k <= n, "require 0 < K <= N (got K={k}, N={n})");
+        Self { n, k, a, b, include_rent: true }
+    }
+
+    pub fn with_rent(mut self, include: bool) -> Self {
+        self.include_rent = include;
+        self
+    }
+
+    /// Per-doc costs of the tier holding a given stream index under the
+    /// changeover rule "first r to A".
+    pub fn tier_for(&self, index: u64, r: u64) -> &PerDocCosts {
+        if index < r {
+            &self.a
+        } else {
+            &self.b
+        }
+    }
+}
+
+/// A placement strategy from the paper (§VII) plus the degenerate
+/// single-tier baselines of Tables I–II.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// Everything to tier A.
+    AllA,
+    /// Everything to tier B.
+    AllB,
+    /// First `r` documents to A, the rest to B; no migration
+    /// (DO_MIGRATE = false). Paper eq. (14)–(17).
+    Changeover { r: u64 },
+    /// First `r` to A; at `i == r` migrate all residents A→B, then write
+    /// the rest to B (DO_MIGRATE = true). Paper eq. (18)–(21).
+    ChangeoverMigrate { r: u64 },
+}
+
+impl Strategy {
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::AllA => "all-A".into(),
+            Strategy::AllB => "all-B".into(),
+            Strategy::Changeover { r } => format!("changeover(r={r})"),
+            Strategy::ChangeoverMigrate { r } => format!("changeover+migrate(r={r})"),
+        }
+    }
+}
+
+/// Itemized expected cost of a strategy. `total()` is eq. (16)/(20).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CostBreakdown {
+    /// Expected $ of writes landing in tier A.
+    pub writes_a: f64,
+    /// Expected $ of writes landing in tier B.
+    pub writes_b: f64,
+    /// Expected $ of the final top-K read.
+    pub reads: f64,
+    /// Expected $ of rental over the window (0 when `include_rent=false`).
+    pub rent: f64,
+    /// $ of the bulk migration (0 unless `ChangeoverMigrate`).
+    pub migration: f64,
+}
+
+impl CostBreakdown {
+    pub fn total(&self) -> f64 {
+        self.writes_a + self.writes_b + self.reads + self.rent + self.migration
+    }
+}
+
+impl fmt::Display for CostBreakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "total={:.2} (writesA={:.2} writesB={:.2} reads={:.2} rent={:.2} migration={:.2})",
+            self.total(),
+            self.writes_a,
+            self.writes_b,
+            self.reads,
+            self.rent,
+            self.migration
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tier(loc: Location) -> TierPricing {
+        TierPricing {
+            name: "t".into(),
+            put_per_doc: 1e-6,
+            get_per_doc: 2e-6,
+            storage_gb_month: 0.02,
+            ingress_gb: 0.0,
+            egress_gb: 0.01,
+            location: loc,
+        }
+    }
+
+    #[test]
+    fn per_doc_folds_channel_on_cross_hops() {
+        let doc = DocSpec::from_mb_days(1.0, 30.0); // 1e-3 GB, 1 month
+        let ch = Channel { cost_gb: 0.1 };
+        // consumer-local tier: writes cross, reads do not.
+        let c = tier(Location::Consumer).per_doc(doc, ch);
+        assert!((c.write - (1e-6 + 1e-3 * 0.1)).abs() < 1e-15);
+        assert!((c.read - (2e-6 + 1e-3 * 0.01)).abs() < 1e-15);
+        // producer-local tier: reads cross, writes do not.
+        let p = tier(Location::Producer).per_doc(doc, ch);
+        assert!((p.write - 1e-6).abs() < 1e-15);
+        assert!((p.read - (2e-6 + 1e-3 * (0.01 + 0.1))).abs() < 1e-15);
+        // rent: size * price * months
+        assert!((p.rent_window - 1e-3 * 0.02).abs() < 1e-15);
+    }
+
+    #[test]
+    fn doc_spec_conversions() {
+        let d = DocSpec::from_mb_days(0.1, 1.0);
+        assert!((d.size_gb - 1e-4).abs() < 1e-18);
+        assert!((d.window_months - 1.0 / 30.0).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn model_rejects_k_zero() {
+        let pd = PerDocCosts { write: 0.0, read: 0.0, rent_window: 0.0 };
+        CostModel::new(10, 0, pd, pd);
+    }
+
+    #[test]
+    fn tier_for_changeover_boundary() {
+        let pd_a = PerDocCosts { write: 1.0, read: 0.0, rent_window: 0.0 };
+        let pd_b = PerDocCosts { write: 2.0, read: 0.0, rent_window: 0.0 };
+        let m = CostModel::new(10, 1, pd_a, pd_b);
+        assert_eq!(m.tier_for(4, 5).write, 1.0);
+        assert_eq!(m.tier_for(5, 5).write, 2.0);
+    }
+
+    #[test]
+    fn breakdown_total_sums() {
+        let b = CostBreakdown {
+            writes_a: 1.0,
+            writes_b: 2.0,
+            reads: 3.0,
+            rent: 4.0,
+            migration: 5.0,
+        };
+        assert_eq!(b.total(), 15.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Optimal changeover point `r*` — closed forms (eqs. 17/21) plus numeric
+//! cross-checks.
+//!
+//! Differentiating the expected total cost w.r.t. `r` (using the log
+//! approximation of the harmonic sums, valid for `K ≪ r ≪ N`):
+//!
+//! no migration (transaction-dominated, rent bounded/constant):
+//!   d/dr = K·(c_wA − c_wB)/r + K·(c_rA − c_rB)/N = 0
+//!   ⇒ r*/N = (c_wB − c_wA) / (c_rA − c_rB)               (†)
+//!
+//! with migration (rent linear in r, reads constant):
+//!   d/dr = K·(c_wA − c_wB)/r + K·(c_sA − c_sB)/N = 0
+//!   ⇒ r*/N = (c_wB − c_wA) / (c_sA − c_sB)               (‡)
+//!
+//! (†)/(‡) are the paper's eqs. (17)/(21) with the A/B read labels made
+//! consistent with "first r to A" (DESIGN.md §5). A changeover interior
+//! optimum exists iff `c_wA < c_wB` *and* the denominator is positive
+//! (A is cheaper to write early, dearer to read/rent late) — the curve is
+//! then strictly convex in `ln r` between the endpoints.
+
+use crate::cost::analytic::expected_cost;
+use crate::cost::model::{CostModel, Strategy};
+use crate::util::math::golden_section_min;
+
+/// Outcome of `r*` optimization for one strategy family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptimalR {
+    /// Optimal changeover index.
+    pub r: u64,
+    /// `r / N`.
+    pub frac: f64,
+    /// Expected total cost at `r` (including rent per the model flag).
+    pub cost: f64,
+    /// Whether eq. (22) `K < r < N` holds — if false, a single-tier
+    /// strategy dominates and `r` is the clamped best endpoint.
+    pub interior: bool,
+}
+
+/// Closed-form `r*/N` for the no-migration strategy (consistent eq. 17).
+/// Returns `None` when no interior optimum exists (degenerate denominator
+/// or ratio outside (0, 1)).
+pub fn closed_form_frac_no_migration(model: &CostModel) -> Option<f64> {
+    let num = model.b.write - model.a.write;
+    let den = model.a.read - model.b.read;
+    frac_from_ratio(num, den)
+}
+
+/// Closed-form `r*/N` for the migration strategy (consistent eq. 21).
+pub fn closed_form_frac_migration(model: &CostModel) -> Option<f64> {
+    let num = model.b.write - model.a.write;
+    let den = model.a.rent_window - model.b.rent_window;
+    frac_from_ratio(num, den)
+}
+
+fn frac_from_ratio(num: f64, den: f64) -> Option<f64> {
+    if den.abs() < 1e-300 {
+        return None;
+    }
+    let frac = num / den;
+    if frac.is_finite() && frac > 0.0 && frac < 1.0 {
+        Some(frac)
+    } else {
+        None
+    }
+}
+
+/// Numerically minimize expected cost over `r ∈ [K+1, N−1]` for the given
+/// strategy family, by golden-section on log r (the cost is convex in
+/// `ln r` when an interior optimum exists) with endpoint comparison.
+pub fn numeric_optimal_r(model: &CostModel, migrate: bool) -> OptimalR {
+    let n = model.n;
+    let k = model.k;
+    let strategy = |r: u64| {
+        if migrate {
+            Strategy::ChangeoverMigrate { r }
+        } else {
+            Strategy::Changeover { r }
+        }
+    };
+    let eval = |r: u64| expected_cost(model, strategy(r)).total();
+
+    let lo = (k + 1).min(n);
+    let hi = n.saturating_sub(1).max(lo);
+    if lo >= hi {
+        let r = lo;
+        return OptimalR { r, frac: r as f64 / n as f64, cost: eval(r), interior: false };
+    }
+    let f_log = |x: f64| eval(x.exp().round().max(lo as f64).min(hi as f64) as u64);
+    let (x, _) = golden_section_min(f_log, (lo as f64).ln(), (hi as f64).ln(), 1e-12);
+    let mut best_r = x.exp().round() as u64;
+    let mut best = eval(best_r);
+    // polish ±2 around the continuous optimum and compare endpoints
+    for cand in [
+        best_r.saturating_sub(2),
+        best_r.saturating_sub(1),
+        best_r + 1,
+        best_r + 2,
+        lo,
+        hi,
+    ] {
+        let c = cand.clamp(lo, hi);
+        let v = eval(c);
+        if v < best {
+            best = v;
+            best_r = c;
+        }
+    }
+    OptimalR {
+        r: best_r,
+        frac: best_r as f64 / n as f64,
+        cost: best,
+        interior: best_r > k && best_r < n,
+    }
+}
+
+/// Closed-form `r*` with validity check (eq. 22), falling back to the
+/// numeric optimizer when the closed form does not apply.
+pub fn optimal_r(model: &CostModel, migrate: bool) -> OptimalR {
+    let frac = if migrate {
+        closed_form_frac_migration(model)
+    } else {
+        closed_form_frac_no_migration(model)
+    };
+    match frac {
+        Some(f) => {
+            let r = ((f * model.n as f64).round() as u64).clamp(1, model.n);
+            let strategy = if migrate {
+                Strategy::ChangeoverMigrate { r }
+            } else {
+                Strategy::Changeover { r }
+            };
+            let interior = r > model.k && r < model.n;
+            let cost = expected_cost(model, strategy).total();
+            if interior {
+                OptimalR { r, frac: r as f64 / model.n as f64, cost, interior }
+            } else {
+                numeric_optimal_r(model, migrate)
+            }
+        }
+        None => numeric_optimal_r(model, migrate),
+    }
+}
+
+/// Compare all four strategies (AllA, AllB, changeover at r*, migrate at
+/// r*) and return them sorted by expected total cost (cheapest first).
+pub fn rank_strategies(model: &CostModel) -> Vec<(Strategy, f64)> {
+    let no_mig = optimal_r(model, false);
+    let mig = optimal_r(model, true);
+    let mut out = vec![
+        (Strategy::AllA, expected_cost(model, Strategy::AllA).total()),
+        (Strategy::AllB, expected_cost(model, Strategy::AllB).total()),
+        (Strategy::Changeover { r: no_mig.r }, no_mig.cost),
+        (Strategy::ChangeoverMigrate { r: mig.r }, mig.cost),
+    ];
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::model::PerDocCosts;
+
+    /// A model with a genuine interior optimum: A cheap to write, dear to
+    /// read; B the reverse.
+    fn interior_model() -> CostModel {
+        CostModel::new(
+            100_000,
+            100,
+            PerDocCosts { write: 1e-6, read: 1e-4, rent_window: 0.0 },
+            PerDocCosts { write: 5e-5, read: 1e-6, rent_window: 0.0 },
+        )
+        .with_rent(false)
+    }
+
+    #[test]
+    fn closed_form_matches_numeric_no_migration() {
+        let m = interior_model();
+        let cf = closed_form_frac_no_migration(&m).expect("interior optimum");
+        let num = numeric_optimal_r(&m, false);
+        assert!(num.interior);
+        assert!(
+            (cf - num.frac).abs() < 0.02,
+            "closed-form {cf} vs numeric {}",
+            num.frac
+        );
+    }
+
+    #[test]
+    fn closed_form_matches_numeric_migration() {
+        let m = CostModel::new(
+            100_000,
+            100,
+            PerDocCosts { write: 0.0, read: 0.0, rent_window: 7e-5 },
+            PerDocCosts { write: 5e-6, read: 5e-6, rent_window: 5.4e-6 },
+        );
+        let cf = closed_form_frac_migration(&m).expect("interior optimum");
+        let num = numeric_optimal_r(&m, true);
+        assert!(num.interior);
+        assert!(
+            (cf - num.frac).abs() < 0.02,
+            "closed-form {cf} vs numeric {}",
+            num.frac
+        );
+    }
+
+    #[test]
+    fn optimum_beats_endpoints() {
+        let m = interior_model();
+        let opt = optimal_r(&m, false);
+        let all_a = expected_cost(&m, Strategy::AllA).total();
+        let all_b = expected_cost(&m, Strategy::AllB).total();
+        assert!(opt.cost <= all_a && opt.cost <= all_b);
+    }
+
+    #[test]
+    fn no_interior_when_one_tier_dominates() {
+        // B strictly better everywhere → no interior optimum, AllB wins.
+        let m = CostModel::new(
+            10_000,
+            10,
+            PerDocCosts { write: 2.0, read: 2.0, rent_window: 0.0 },
+            PerDocCosts { write: 1.0, read: 1.0, rent_window: 0.0 },
+        )
+        .with_rent(false);
+        assert!(closed_form_frac_no_migration(&m).is_none());
+        let ranked = rank_strategies(&m);
+        // cheapest is AllB or a degenerate changeover equal to it
+        let best_cost = ranked[0].1;
+        let all_b = expected_cost(&m, Strategy::AllB).total();
+        assert!((best_cost - all_b).abs() / all_b < 0.01);
+    }
+
+    #[test]
+    fn validity_condition_eq22() {
+        // closed-form frac < K/N → not interior; optimal_r falls back
+        let m = CostModel::new(
+            1_000,
+            500, // huge K
+            PerDocCosts { write: 1e-6, read: 1e-4, rent_window: 0.0 },
+            PerDocCosts { write: 2e-6, read: 1e-6, rent_window: 0.0 },
+        )
+        .with_rent(false);
+        let opt = optimal_r(&m, false);
+        assert!(opt.r >= 1 && opt.r <= 1000);
+    }
+
+    #[test]
+    fn rank_strategies_sorted() {
+        let m = interior_model();
+        let ranked = rank_strategies(&m);
+        for w in ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(ranked.len(), 4);
+    }
+
+    #[test]
+    fn grid_cross_check_full_surface() {
+        // dense grid over r confirms golden-section result (unimodality)
+        let m = interior_model();
+        let num = numeric_optimal_r(&m, false);
+        let mut best = f64::INFINITY;
+        let mut best_r = 0u64;
+        let mut r = 101u64;
+        while r < 100_000 {
+            let c = expected_cost(&m, Strategy::Changeover { r }).total();
+            if c < best {
+                best = c;
+                best_r = r;
+            }
+            r = (r as f64 * 1.05) as u64 + 1;
+        }
+        assert!(
+            (num.cost - best).abs() / best < 1e-3,
+            "numeric {} vs grid {} (r {} vs {})",
+            num.cost,
+            best,
+            num.r,
+            best_r
+        );
+    }
+}

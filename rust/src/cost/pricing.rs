@@ -1,0 +1,198 @@
+//! Cloud pricing presets — the 2018 list prices used in paper Tables I–II.
+//!
+//! Prices are $ per unit as quoted by the provider (footnotes 5–7 of the
+//! paper): S3 EU-Ireland, Azure Blob GPv1 North-Europe, Azure egress
+//! North-Europe, EFS. Presets return `TierPricing` with the location set by
+//! the caller's scenario.
+
+use crate::cost::model::{Channel, CostModel, DocSpec, Location, TierPricing};
+
+/// AWS S3 Standard (EU, Ireland, 2018): PUT $0.005/1k, GET $0.0004/1k,
+/// storage $0.023/GB·month.
+pub fn s3_standard(location: Location) -> TierPricing {
+    TierPricing {
+        name: "AWS S3 Standard".into(),
+        put_per_doc: 0.005 / 1_000.0,
+        get_per_doc: 0.0004 / 1_000.0,
+        storage_gb_month: 0.023,
+        ingress_gb: 0.0,
+        egress_gb: 0.0, // the cross-cloud hop is charged via Channel
+        location,
+    }
+}
+
+/// Azure Blob Storage GPv1 (North Europe, 2018): $0.00036/10k transactions,
+/// storage $0.024/GB·month.
+pub fn azure_blob_gpv1(location: Location) -> TierPricing {
+    TierPricing {
+        name: "Azure Blob GPv1".into(),
+        put_per_doc: 0.00036 / 10_000.0,
+        get_per_doc: 0.00036 / 10_000.0,
+        storage_gb_month: 0.024,
+        ingress_gb: 0.0,
+        egress_gb: 0.0,
+        location,
+    }
+}
+
+/// AWS EFS (2018): no per-transaction charge, $0.30/GB·month.
+pub fn efs(location: Location) -> TierPricing {
+    TierPricing {
+        name: "AWS EFS".into(),
+        put_per_doc: 0.0,
+        get_per_doc: 0.0,
+        storage_gb_month: 0.30,
+        ingress_gb: 0.0,
+        egress_gb: 0.0,
+        location,
+    }
+}
+
+/// The paper's inter-cloud channel price (Azure egress, North Europe 2018).
+pub fn inter_cloud_channel() -> Channel {
+    Channel { cost_gb: 0.087 }
+}
+
+/// Case Study 1 (paper Table I): producer in AWS with S3 local (tier A),
+/// consumer in Azure with Blob local (tier B); N=1e8 docs of 0.1 MB over a
+/// 1-day window; K = N/100. Transaction-dominated → rent excluded (the
+/// paper uses a constant bound; see `rent_bound_no_migration`).
+pub fn case_study_1() -> CostModel {
+    let n: u64 = 100_000_000;
+    let k: u64 = n / 100;
+    let doc = DocSpec::from_mb_days(0.1, 1.0);
+    let channel = inter_cloud_channel();
+    let a = s3_standard(Location::Producer).per_doc(doc, channel);
+    let b = azure_blob_gpv1(Location::Consumer).per_doc(doc, channel);
+    CostModel::new(n, k, a, b).with_rent(false)
+}
+
+/// Case Study 2 (paper Table II): EFS (tier A) and S3 (tier B) in the same
+/// cloud as the consumer; N=1e8 docs of 1 MB over a 7-day window; K = 5% of
+/// N. Rent-dominated → rent included; migration variant is the winner.
+pub fn case_study_2() -> CostModel {
+    let n: u64 = 100_000_000;
+    let k: u64 = 5_000_000;
+    let doc = DocSpec::from_mb_days(1.0, 7.0);
+    let channel = Channel::free();
+    let a = efs(Location::Consumer).per_doc(doc, channel);
+    // paper quotes S3 read/write as $0.000005/doc in Table II
+    let mut s3 = s3_standard(Location::Consumer);
+    s3.get_per_doc = 0.000005;
+    let b = s3.per_doc(doc, channel);
+    CostModel::new(n, k, a, b)
+}
+
+/// Downscaled variants for trace-driven simulation (same per-doc economics,
+/// smaller N/K so a discrete-event run finishes quickly). `scale` divides
+/// both N and K.
+pub fn scaled(model: &CostModel, scale: u64) -> CostModel {
+    assert!(scale >= 1);
+    let n = (model.n / scale).max(1);
+    let k = (model.k / scale).max(1);
+    CostModel::new(n, k, model.a, model.b).with_rent(model.include_rent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::analytic::expected_cost;
+    use crate::cost::model::Strategy;
+    use crate::cost::optimizer::{closed_form_frac_no_migration, optimal_r};
+
+    #[test]
+    fn case_study_1_per_doc_costs() {
+        let m = case_study_1();
+        // A = S3 producer-local: write is a plain PUT
+        assert!((m.a.write - 5e-6).abs() < 1e-12);
+        // read crosses the channel: GET + 0.087 $/GB × 1e-4 GB
+        assert!((m.a.read - (4e-7 + 0.087 * 1e-4)).abs() < 1e-12);
+        // B = Azure consumer-local: write crosses, read is local
+        assert!((m.b.write - (3.6e-8 + 0.087 * 1e-4)).abs() < 1e-12);
+        assert!((m.b.read - 3.6e-8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn case_study_1_reproduces_paper_r_star() {
+        // Paper Table I: r_opt/N = 0.41233169. Our consistent closed form
+        // gives 0.4122 (paper value reproduced to 3 decimals).
+        let m = case_study_1();
+        let frac = closed_form_frac_no_migration(&m).expect("interior");
+        assert!(
+            (frac - 0.41233169).abs() < 5e-4,
+            "frac={frac} vs paper 0.41233169"
+        );
+    }
+
+    #[test]
+    fn case_study_1_reproduces_paper_totals() {
+        let m = case_study_1();
+        let opt = optimal_r(&m, false);
+        // Paper: total 35.19 at r*, all-A 37.20 (we reproduce within 1%)
+        assert!((opt.cost - 35.19).abs() / 35.19 < 0.01, "opt={}", opt.cost);
+        let all_a = expected_cost(&m, Strategy::AllA).total();
+        assert!((all_a - 37.20).abs() / 37.20 < 0.01, "allA={all_a}");
+        // ordering of Table I strategies: changeover < all-A < all-B
+        let all_b = expected_cost(&m, Strategy::AllB).total();
+        assert!(opt.cost < all_a && all_a < all_b);
+    }
+
+    #[test]
+    fn case_study_2_reproduces_paper_r_star() {
+        // Paper Table II: r_opt/N = 0.078 (migration strategy)
+        let m = case_study_2();
+        let frac = crate::cost::optimizer::closed_form_frac_migration(&m)
+            .expect("interior");
+        assert!((frac - 0.078).abs() < 2e-3, "frac={frac} vs paper 0.078");
+    }
+
+    #[test]
+    fn case_study_2_reproduces_paper_totals() {
+        let m = case_study_2();
+        // all-A = 350.00 exactly (K docs × 1e-3 GB × 0.30 × 7/30)
+        let all_a_rent = m.k as f64 * m.a.rent_window;
+        assert!((all_a_rent - 350.0).abs() < 0.5, "allA rent={all_a_rent}");
+        // migration winner ≈ paper's 142.82 (our derivable model: 165.8,
+        // or 140.8 without the final read the paper appears to omit;
+        // see DESIGN.md §5 item 4). Assert the *shape*: migrate < all-A and
+        // migrate < the no-migration rent bound, and the magnitude is in
+        // the paper's ballpark (±20%).
+        let mig = optimal_r(&m, true);
+        let all_a = expected_cost(&m, Strategy::AllA).total();
+        assert!(mig.cost < all_a, "mig {} vs allA {all_a}", mig.cost);
+        let no_mig = {
+            let mut c = expected_cost(&m, Strategy::Changeover { r: mig.r });
+            c.rent = crate::cost::analytic::rent_bound_no_migration(&m);
+            c.total()
+        };
+        assert!(mig.cost < no_mig, "mig {} vs no-mig bound {no_mig}", mig.cost);
+        assert!(
+            (mig.cost - 142.82).abs() / 142.82 < 0.20,
+            "mig total={}",
+            mig.cost
+        );
+        // Paper's all-B = 503.78 is only derivable by charging all N
+        // documents (1e8 × 5e-6 = 500 $ of PUTs); with the paper's own
+        // eq. (13) record-process accounting all-B ≈ 151.7 and would win.
+        // We reproduce the paper's number under the all-N accounting:
+        let all_b_all_docs = m.n as f64 * m.b.write
+            + m.k as f64 * (m.b.read + m.b.rent_window);
+        assert!(
+            (all_b_all_docs - 503.78).abs() / 503.78 < 0.10,
+            "all-N accounting all-B = {all_b_all_docs}"
+        );
+    }
+
+    #[test]
+    fn scaled_preserves_economics() {
+        let m = case_study_1();
+        let s = scaled(&m, 10_000);
+        assert_eq!(s.n, 10_000);
+        assert_eq!(s.k, 100);
+        assert_eq!(s.a, m.a);
+        // r*/N is scale-free (it depends only on per-doc costs)
+        let f1 = closed_form_frac_no_migration(&m).unwrap();
+        let f2 = closed_form_frac_no_migration(&s).unwrap();
+        assert!((f1 - f2).abs() < 1e-12);
+    }
+}

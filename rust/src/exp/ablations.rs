@@ -1,0 +1,149 @@
+//! A1/A2 ablations: policy comparison on identical traces, and what happens
+//! when the random-order assumption is violated.
+
+use crate::cost::{optimal_r, scaled, CostModel};
+use crate::policy::{
+    run_policy, AgeBasedDemotion, Changeover, ChangeoverMigrate, PlacementPolicy, SingleTier,
+    SkiRental,
+};
+use crate::report::Table;
+use crate::shp::{fit_write_curve, spearman_position_correlation};
+use crate::storage::TierId;
+use crate::util::Rng;
+
+/// A1 — run every policy on the same random traces under a case-study
+/// economy (scaled down for simulation speed) and rank by measured cost.
+pub fn ablation_policies(base: &CostModel, scale: u64, reps: u64, seed: u64) -> Table {
+    let m = scaled(base, scale);
+    let n = m.n as usize;
+    let mut rng = Rng::new(seed);
+
+    let r_no_mig = optimal_r(&m, false).r;
+    let r_mig = optimal_r(&m, true).r;
+
+    // policy constructors (fresh per trace — policies carry state)
+    type Ctor = Box<dyn Fn(&CostModel) -> Box<dyn PlacementPolicy>>;
+    let ctors: Vec<(String, Ctor)> = vec![
+        ("all-A".into(), Box::new(|_| Box::new(SingleTier::new(TierId::A)))),
+        ("all-B".into(), Box::new(|_| Box::new(SingleTier::new(TierId::B)))),
+        (
+            format!("changeover(r*={r_no_mig})"),
+            Box::new(move |_| Box::new(Changeover::new(r_no_mig))),
+        ),
+        (
+            format!("changeover+migrate(r*={r_mig})"),
+            Box::new(move |_| Box::new(ChangeoverMigrate::new(r_mig))),
+        ),
+        (
+            "age-demotion(0.05)".into(),
+            Box::new(|_| Box::new(AgeBasedDemotion::new(0.05))),
+        ),
+        (
+            "ski-rental".into(),
+            Box::new(|m: &CostModel| Box::new(SkiRental::from_model(m))),
+        ),
+    ];
+
+    let mut totals = vec![0.0f64; ctors.len()];
+    for _ in 0..reps {
+        let scores: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        for (i, (_, ctor)) in ctors.iter().enumerate() {
+            let mut policy = ctor(&m);
+            let r = run_policy(&scores, &m, policy.as_mut()).expect("run");
+            totals[i] += r.total_cost();
+        }
+    }
+
+    let mut rows: Vec<(String, f64)> = ctors
+        .iter()
+        .zip(&totals)
+        .map(|((name, _), &t)| (name.clone(), t / reps as f64))
+        .collect();
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let best = rows[0].1;
+
+    let mut t = Table::new(
+        &format!(
+            "A1: policy ablation (N={}, K={}, {} traces, measured ledger $)",
+            m.n, m.k, reps
+        ),
+        &["rank", "policy", "mean cost", "vs best"],
+    );
+    for (i, (name, cost)) in rows.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            name.clone(),
+            format!("{cost:.4}"),
+            format!("{:+.1}%", (cost / best - 1.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+/// A2 — violate the random-order assumption: compare write counts and
+/// costs on shuffled vs sorted vs adversarial (ascending-score) streams.
+pub fn ablation_ordering(n: usize, k: usize, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let base: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+
+    let mut sorted_asc = base.clone();
+    sorted_asc.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut sorted_desc = sorted_asc.clone();
+    sorted_desc.reverse();
+    // half-sorted: first half random, second half ascending (drift regime)
+    let mut half = base.clone();
+    half[n / 2..].sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let cases = [
+        ("random (model holds)", &base),
+        ("ascending (worst case)", &sorted_asc),
+        ("descending (best case)", &sorted_desc),
+        ("second-half sorted", &half),
+    ];
+
+    let mut t = Table::new(
+        &format!("A2: ordering-assumption ablation (N={n}, K={k})"),
+        &["stream order", "spearman", "writes", "analytic", "rel err"],
+    );
+    for (name, scores) in cases {
+        let rho = spearman_position_correlation(scores);
+        let fit = fit_write_curve(scores, k);
+        let writes = *fit.empirical.last().unwrap();
+        let analytic = *fit.analytic.last().unwrap();
+        t.row(vec![
+            name.to_string(),
+            format!("{rho:.3}"),
+            writes.to_string(),
+            format!("{analytic:.1}"),
+            format!("{:.2}", fit.final_rel_err),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::case_study_1;
+
+    #[test]
+    fn a1_shp_policy_wins_under_cs1_economics() {
+        let t = ablation_policies(&case_study_1(), 20_000, 10, 7);
+        // rank-1 row should be the changeover policy (the paper's claim)
+        assert!(
+            t.rows[0][1].starts_with("changeover"),
+            "winner was {}",
+            t.rows[0][1]
+        );
+    }
+
+    #[test]
+    fn a2_detects_order_violations() {
+        let t = ablation_ordering(5_000, 20, 3);
+        // random row: small rel err; ascending row: large
+        let rand_err: f64 = t.rows[0][4].parse().unwrap();
+        let asc_err: f64 = t.rows[1][4].parse().unwrap();
+        assert!(rand_err < 0.15, "random err {rand_err}");
+        assert!(asc_err > 5.0, "ascending err {asc_err}");
+    }
+}

@@ -1,0 +1,215 @@
+//! E3–E6: paper Tables I–II and Figures 4–5 (the two cloud case studies).
+
+use crate::cost::{
+    case_study_1, case_study_2, closed_form_frac_migration, closed_form_frac_no_migration,
+    expected_cost, optimal_r, rent_bound_no_migration, CostModel, Strategy,
+};
+use crate::report::{Series, Table};
+
+/// E3 — Table I (Case Study 1: S3 producer-local ↔ Azure consumer-local).
+/// Paper column shows the printed Table I values; errata in DESIGN.md §5.
+pub fn table1() -> Table {
+    let m = case_study_1();
+    let mut t = Table::new(
+        "E3 / Table I: Case Study 1 — 2 tiers in different clouds (N=1e8, K=1e6, 0.1 MB)",
+        &["quantity", "ours", "paper"],
+    );
+    let frac = closed_form_frac_no_migration(&m).expect("interior optimum");
+    t.row(vec!["r_opt / N".to_string(), format!("{frac:.8}"), "0.41233169".into()]);
+
+    let opt = optimal_r(&m, false);
+    t.row(vec![
+        "total @ r_opt (no migration, rent-bounded)".to_string(),
+        format!("{:.2}", opt.cost),
+        "35.19".into(),
+    ]);
+    let mig = optimal_r(&m, true);
+    t.row(vec![
+        "total @ r_opt (with migration)".to_string(),
+        format!("{:.2}", mig.cost),
+        "49.29".into(),
+    ]);
+    t.row(vec![
+        "cost all storage A".to_string(),
+        format!("{:.2}", expected_cost(&m, Strategy::AllA).total()),
+        "37.20".into(),
+    ]);
+    let all_b = expected_cost(&m, Strategy::AllB).total();
+    t.row(vec![
+        "cost all storage B (eq. 13 accounting)".to_string(),
+        format!("{all_b:.2}"),
+        "99.12 (†)".into(),
+    ]);
+    // the paper's all-B is only derivable with a doubled channel charge
+    // (see DESIGN.md §5 item 3); show that reconstruction too:
+    let w = crate::cost::expected_writes(m.n, m.k);
+    let double_channel = w * (m.b.write + 0.087 * 1e-4) + m.k as f64 * m.b.read;
+    t.row(vec![
+        "cost all storage B (paper's double-channel reconstruction)".to_string(),
+        format!("{double_channel:.2}"),
+        "99.12".into(),
+    ]);
+    t
+}
+
+/// E5 — Table II (Case Study 2: EFS + S3, same cloud, rent-dominated).
+pub fn table2() -> Table {
+    let m = case_study_2();
+    let mut t = Table::new(
+        "E5 / Table II: Case Study 2 — 2 tiers in the same cloud (N=1e8, K=5e6, 1 MB, 7 days)",
+        &["quantity", "ours", "paper"],
+    );
+    let frac = closed_form_frac_migration(&m).expect("interior optimum");
+    t.row(vec!["r_opt / N".to_string(), format!("{frac:.4}"), "0.078".into()]);
+
+    let mig = optimal_r(&m, true);
+    t.row(vec![
+        "total @ r_opt (with migration)".to_string(),
+        format!("{:.2}", mig.cost),
+        "142.82".into(),
+    ]);
+    let mig_no_final_read = mig.cost - m.k as f64 * m.b.read;
+    t.row(vec![
+        "  └ without the final read (paper appears to omit it)".to_string(),
+        format!("{mig_no_final_read:.2}"),
+        "142.82".into(),
+    ]);
+    t.row(vec![
+        "cost all storage A".to_string(),
+        format!("{:.2}", expected_cost(&m, Strategy::AllA).total()),
+        "350.00".into(),
+    ]);
+    let all_b = expected_cost(&m, Strategy::AllB).total();
+    t.row(vec![
+        "cost all storage B (eq. 13 accounting)".to_string(),
+        format!("{all_b:.2}"),
+        "503.78 (†)".into(),
+    ]);
+    let all_b_all_docs =
+        m.n as f64 * m.b.write + m.k as f64 * (m.b.read + m.b.rent_window);
+    t.row(vec![
+        "cost all storage B (paper's all-N-PUTs reconstruction)".to_string(),
+        format!("{all_b_all_docs:.2}"),
+        "503.78".into(),
+    ]);
+    let no_mig = {
+        let mut c = expected_cost(&m, Strategy::Changeover { r: mig.r });
+        c.rent = rent_bound_no_migration(&m);
+        c.total()
+    };
+    t.row(vec![
+        "total @ r_opt (no migration, rent upper bound)".to_string(),
+        format!("{no_mig:.2}"),
+        "415.67".into(),
+    ]);
+    t
+}
+
+/// Cost-vs-r sweep used by Figures 4 and 5.
+fn cost_sweep(m: &CostModel, migrate: bool, rent_bound: bool, points: usize) -> Series {
+    let mut s = Series::new(
+        if migrate { "fig5_cost_vs_r" } else { "fig4_cost_vs_r" },
+        &["r_frac", "total", "writes_a", "writes_b", "reads", "rent", "migration"],
+    );
+    for i in 1..points {
+        let frac = i as f64 / points as f64;
+        let r = (frac * m.n as f64) as u64;
+        if r <= m.k || r >= m.n {
+            continue;
+        }
+        let strat = if migrate {
+            Strategy::ChangeoverMigrate { r }
+        } else {
+            Strategy::Changeover { r }
+        };
+        let mut c = expected_cost(m, strat);
+        if rent_bound && !migrate {
+            c.rent = if m.include_rent { rent_bound_no_migration(m) } else { 0.0 };
+        }
+        s.push(vec![frac, c.total(), c.writes_a, c.writes_b, c.reads, c.rent, c.migration]);
+    }
+    s
+}
+
+/// E4 — Figure 4: expected overall cost vs r, Case Study 1 (no migration).
+pub fn fig4(points: usize) -> (Series, Table) {
+    let m = case_study_1();
+    let s = cost_sweep(&m, false, true, points);
+    let opt = optimal_r(&m, false);
+    let mut t = Table::new("E4 / Fig. 4: cost vs r, Case Study 1", &["metric", "value"]);
+    t.row(vec!["argmin r/N (numeric)".to_string(), format!("{:.5}", opt.frac)]);
+    t.row(vec!["min cost".to_string(), format!("{:.2}", opt.cost)]);
+    t.row(vec!["curve".to_string(), s.sparkline(1, 60)]);
+    (s, t)
+}
+
+/// E6 — Figure 5: expected overall cost vs r, Case Study 2 (with migration).
+pub fn fig5(points: usize) -> (Series, Table) {
+    let m = case_study_2();
+    let s = cost_sweep(&m, true, false, points);
+    let opt = optimal_r(&m, true);
+    let mut t = Table::new("E6 / Fig. 5: cost vs r, Case Study 2", &["metric", "value"]);
+    t.row(vec!["argmin r/N (numeric)".to_string(), format!("{:.5}", opt.frac)]);
+    t.row(vec!["min cost".to_string(), format!("{:.2}", opt.cost)]);
+    t.row(vec!["curve".to_string(), s.sparkline(1, 60)]);
+    (s, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_reproduces_r_star() {
+        let t = table1();
+        let ours: f64 = t.rows[0][1].parse().unwrap();
+        assert!((ours - 0.41233169).abs() < 5e-4);
+        // total at r_opt within 1% of paper
+        let total: f64 = t.rows[1][1].parse().unwrap();
+        assert!((total - 35.19).abs() / 35.19 < 0.01, "{total}");
+    }
+
+    #[test]
+    fn table2_reproduces_r_star() {
+        let t = table2();
+        let ours: f64 = t.rows[0][1].parse().unwrap();
+        assert!((ours - 0.078).abs() < 2e-3);
+        // without final read within 2% of paper total
+        let total: f64 = t.rows[2][1].parse().unwrap();
+        assert!((total - 142.82).abs() / 142.82 < 0.02, "{total}");
+        // all-A exact
+        let all_a: f64 = t.rows[3][1].parse().unwrap();
+        assert!((all_a - 350.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn fig4_curve_is_unimodal_near_min() {
+        let (s, _) = fig4(200);
+        // find min; neighbors on each side should be increasing
+        let (mut best_i, mut best) = (0, f64::INFINITY);
+        for (i, row) in s.rows.iter().enumerate() {
+            if row[1] < best {
+                best = row[1];
+                best_i = i;
+            }
+        }
+        assert!(best_i > 5 && best_i < s.rows.len() - 5, "interior min");
+        assert!(s.rows[best_i - 5][1] > best);
+        assert!(s.rows[best_i + 5][1] > best);
+        // argmin near 0.41
+        assert!((s.rows[best_i][0] - 0.412).abs() < 0.02);
+    }
+
+    #[test]
+    fn fig5_curve_min_near_paper() {
+        let (s, _) = fig5(400);
+        let (mut best_i, mut best) = (0, f64::INFINITY);
+        for (i, row) in s.rows.iter().enumerate() {
+            if row[1] < best {
+                best = row[1];
+                best_i = i;
+            }
+        }
+        assert!((s.rows[best_i][0] - 0.078).abs() < 0.01, "argmin {}", s.rows[best_i][0]);
+    }
+}

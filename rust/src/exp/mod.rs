@@ -1,0 +1,129 @@
+//! The experiment harness: every table and figure in the paper's
+//! evaluation, regenerable by id (`shptier exp --id <id>`).
+//!
+//! See DESIGN.md §4 for the experiment index (E1–E10, A1–A2).
+
+pub mod ablations;
+pub mod case_studies;
+pub mod grn;
+pub mod validation;
+
+use crate::pipeline::native_scorer_factory;
+use crate::report::Series;
+use crate::runtime::Manifest;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Where CSV outputs go.
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("SHPTIER_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+fn emit(series: &Series) -> Result<()> {
+    let path = series.write_csv(&results_dir())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// All known experiment ids (for `--id list` / CLI help).
+pub const EXPERIMENT_IDS: &[&str] = &[
+    "shp-classic",
+    "alg-b",
+    "table1",
+    "fig4",
+    "table2",
+    "fig5",
+    "fig6",
+    "fig7",
+    "fig8",
+    "sweep-sizing",
+    "ablation-policies",
+    "ablation-ordering",
+    "all",
+];
+
+/// Run one experiment by id, printing tables and writing CSVs.
+///
+/// `quick` shrinks Monte-Carlo reps / workload sizes for CI-speed runs.
+pub fn run(id: &str, seed: u64, quick: bool) -> Result<()> {
+    match id {
+        "shp-classic" => {
+            let reps = if quick { 500 } else { 20_000 };
+            println!("{}", validation::shp_classic(seed, reps).render());
+        }
+        "alg-b" => {
+            let reps = if quick { 300 } else { 5_000 };
+            println!("{}", validation::algorithm_b(seed, reps).render());
+        }
+        "table1" => println!("{}", case_studies::table1().render()),
+        "fig4" => {
+            let (series, table) = case_studies::fig4(if quick { 100 } else { 1000 });
+            println!("{}", table.render());
+            emit(&series)?;
+        }
+        "table2" => println!("{}", case_studies::table2().render()),
+        "fig5" => {
+            let (series, table) = case_studies::fig5(if quick { 200 } else { 2000 });
+            println!("{}", table.render());
+            emit(&series)?;
+        }
+        "fig6" => {
+            let docs = if quick { 30 } else { 200 };
+            let dir = Manifest::default_dir();
+            let native = crate::runtime::NativeScorer::from_manifest_dir(&dir)
+                .unwrap_or_else(|_| {
+                    eprintln!("warning: no artifacts; using demo scorer");
+                    crate::runtime::NativeScorer::new(
+                        crate::interestingness::RbfScorer::synthetic_demo(),
+                    )
+                });
+            let (series, table) = grn::fig6_native(&native, docs, 256, seed);
+            println!("{}", table.render());
+            emit(&series)?;
+        }
+        "fig7" | "fig8" => {
+            let n_docs = if quick { 1_000 } else { 10_000 };
+            let factory = native_scorer_factory(Manifest::default_dir());
+            let (report, series7, table7) = grn::fig7(n_docs, factory, seed);
+            println!("{}", table7.render());
+            emit(&series7)?;
+            let scores: Vec<f64> =
+                report.score_trace.iter().map(|(_, h)| *h as f64).collect();
+            let (series8, table8) = grn::fig8(&scores, 100.min(scores.len() / 10).max(2));
+            println!("{}", table8.render());
+            emit(&series8)?;
+            println!("{}", report.summary());
+        }
+        "sweep-sizing" => println!("{}", grn::sweep_sizing_table().render()),
+        "ablation-policies" => {
+            let reps = if quick { 5 } else { 30 };
+            println!(
+                "{}",
+                ablations::ablation_policies(&crate::cost::case_study_1(), 20_000, reps, seed)
+                    .render()
+            );
+            println!(
+                "{}",
+                ablations::ablation_policies(&crate::cost::case_study_2(), 50_000, reps, seed)
+                    .render()
+            );
+        }
+        "ablation-ordering" => {
+            let n = if quick { 3_000 } else { 20_000 };
+            println!("{}", ablations::ablation_ordering(n, 100, seed).render());
+        }
+        "all" => {
+            for id in EXPERIMENT_IDS.iter().filter(|&&i| i != "all" && i != "fig8") {
+                println!("──────────────────────────────────────────────────");
+                run(id, seed, quick)?;
+            }
+        }
+        other => bail!(
+            "unknown experiment '{other}'; known ids: {}",
+            EXPERIMENT_IDS.join(", ")
+        ),
+    }
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! Summary-statistic feature extraction from a document time series.
+//!
+//! **Contract:** this is the bit-level specification mirrored by the Pallas
+//! kernel `python/compile/kernels/features.py`; parity is enforced by the
+//! runtime tests (`rust/tests/runtime_parity.rs`) and the pytest suite.
+//! Any change here must be mirrored there.
+//!
+//! Features (D = 8), for a series `x[0..T]`:
+//! 0. mean
+//! 1. population std
+//! 2. range (max − min)
+//! 3. lag-1 autocorrelation
+//! 4. lag-4 autocorrelation
+//! 5. lag-16 autocorrelation
+//! 6. mean-crossing rate
+//! 7. normalized half-window mean shift (trend indicator)
+//!
+//! Autocorrelations use the biased estimator `Σ_{i<T−L}(x_i−μ)(x_{i+L}−μ) /
+//! Σ(x_i−μ)²` with 0 when the variance vanishes; the crossing rate counts
+//! strict sign changes of `x − μ`. All math in f32 to match the kernel.
+
+/// Feature dimensionality.
+pub const NUM_FEATURES: usize = 8;
+
+/// Autocorrelation lags used by features 3–5.
+pub const AC_LAGS: [usize; 3] = [1, 4, 16];
+
+/// Guard against division by ~zero, matching the kernel's epsilon.
+pub const EPS: f32 = 1e-6;
+
+/// Extract the 8 features from one series.
+pub fn extract(series: &[f32]) -> [f32; NUM_FEATURES] {
+    let t = series.len();
+    assert!(t >= 2, "series too short");
+    let tf = t as f32;
+
+    let mean: f32 = series.iter().sum::<f32>() / tf;
+    let var: f32 = series.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / tf;
+    let std = var.sqrt();
+
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in series {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    let range = max - min;
+
+    let denom: f32 = var * tf; // Σ(x−μ)²
+    let mut acs = [0f32; 3];
+    for (j, &lag) in AC_LAGS.iter().enumerate() {
+        if lag < t && denom > EPS {
+            let num: f32 = (0..t - lag)
+                .map(|i| (series[i] - mean) * (series[i + lag] - mean))
+                .sum();
+            acs[j] = num / denom;
+        }
+    }
+
+    // mean-crossing rate: fraction of adjacent pairs with opposite signs
+    // of (x − mean); implemented as product < 0 (strict), matching jnp.
+    let crossings = (0..t - 1)
+        .filter(|&i| (series[i] - mean) * (series[i + 1] - mean) < 0.0)
+        .count() as f32;
+    let crossing_rate = crossings / (tf - 1.0);
+
+    // half-window mean shift, normalized by std
+    let half = t / 2;
+    let m1: f32 = series[..half].iter().sum::<f32>() / half as f32;
+    let m2: f32 = series[half..].iter().sum::<f32>() / (t - half) as f32;
+    let shift = (m2 - m1) / (std + EPS);
+
+    [mean, std, range, acs[0], acs[1], acs[2], crossing_rate, shift]
+}
+
+/// Batched extraction (row-major output, B × D).
+pub fn extract_batch(series: &[Vec<f32>]) -> Vec<[f32; NUM_FEATURES]> {
+    series.iter().map(|s| extract(s)).collect()
+}
+
+/// Standardize features in place with per-feature (mu, sigma).
+pub fn standardize(f: &mut [f32; NUM_FEATURES], mu: &[f32], sigma: &[f32]) {
+    for i in 0..NUM_FEATURES {
+        f[i] = (f[i] - mu[i]) / (sigma[i] + EPS);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_series_features() {
+        let s = vec![5.0f32; 64];
+        let f = extract(&s);
+        assert_eq!(f[0], 5.0); // mean
+        assert_eq!(f[1], 0.0); // std
+        assert_eq!(f[2], 0.0); // range
+        assert_eq!(f[3], 0.0); // ACs guard to 0
+        assert_eq!(f[6], 0.0); // no crossings
+        assert_eq!(f[7], 0.0); // no shift
+    }
+
+    #[test]
+    fn alternating_series_crossing_rate_is_one() {
+        let s: Vec<f32> = (0..64).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let f = extract(&s);
+        assert_eq!(f[0], 0.0);
+        assert_eq!(f[6], 1.0, "every adjacent pair crosses the mean");
+        // lag-1 AC of ±1 alternation is −1 (up to the biased-estimator edge)
+        assert!(f[3] < -0.9, "lag-1 AC {}", f[3]);
+    }
+
+    #[test]
+    fn linear_trend_shift_positive() {
+        let s: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let f = extract(&s);
+        assert!(f[7] > 1.0, "trend shift {}", f[7]);
+        assert!((f[2] - 99.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sine_wave_has_periodic_autocorrelation() {
+        // period-32 sine: lag-16 AC ≈ −1 (half period), lag-1 ≈ cos(2π/32)
+        let s: Vec<f32> = (0..256)
+            .map(|i| (2.0 * std::f32::consts::PI * i as f32 / 32.0).sin())
+            .collect();
+        let f = extract(&s);
+        assert!(f[5] < -0.8, "lag-16 AC {}", f[5]);
+        assert!(f[3] > 0.9, "lag-1 AC {}", f[3]);
+    }
+
+    #[test]
+    fn standardize_centers() {
+        let mut f = extract(&(0..64).map(|i| i as f32).collect::<Vec<_>>());
+        let mu = f;
+        let sigma = [1.0f32; NUM_FEATURES];
+        standardize(&mut f, &mu, &sigma);
+        for v in f {
+            assert!(v.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let a: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..32).map(|i| i as f32 * 0.5).collect();
+        let batch = extract_batch(&[a.clone(), b.clone()]);
+        assert_eq!(batch[0], extract(&a));
+        assert_eq!(batch[1], extract(&b));
+    }
+}

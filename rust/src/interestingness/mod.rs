@@ -1,0 +1,12 @@
+//! Native interestingness function: the Rust mirror of the L2/L1 stack
+//! (feature extraction → RBF kernel machine → Platt → label entropy).
+//!
+//! Used (a) as the parity oracle against the AOT PJRT artifact, (b) as a
+//! CPU fallback scorer when artifacts are absent, and (c) by the Fig. 6/7
+//! experiments.
+
+pub mod features;
+pub mod svm;
+
+pub use features::{extract, extract_batch, standardize, AC_LAGS, EPS, NUM_FEATURES};
+pub use svm::RbfScorer;

@@ -1,0 +1,249 @@
+//! Native RBF kernel-machine scorer — the Rust mirror of the L2 JAX model
+//! (`python/compile/model.py`).
+//!
+//! decision(x) = Σ_s α_s · exp(−γ‖x − sv_s‖²) + b
+//! p(x)        = σ(platt_a · decision + platt_b)
+//! H(x)        = −p log₂ p − (1−p) log₂(1−p)   (normalized label entropy)
+//!
+//! Parameters are trained at build time in JAX and exported into
+//! `artifacts/manifest.json`; [`RbfScorer::from_json`] loads them so the
+//! native and PJRT paths share identical weights.
+
+use super::features::{extract, standardize, NUM_FEATURES};
+use crate::serdes::Json;
+use crate::util::math::{binary_entropy, sigmoid};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A trained RBF kernel machine with Platt calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RbfScorer {
+    /// Support vectors in *standardized* feature space, S × D row-major.
+    pub support: Vec<f32>,
+    /// Dual coefficients (α_s, sign folded in), length S.
+    pub alpha: Vec<f32>,
+    /// RBF width.
+    pub gamma: f32,
+    /// Decision bias.
+    pub bias: f32,
+    /// Platt scaling.
+    pub platt_a: f32,
+    pub platt_b: f32,
+    /// Feature standardization (length D each).
+    pub feat_mu: Vec<f32>,
+    pub feat_sigma: Vec<f32>,
+}
+
+impl RbfScorer {
+    pub fn num_support(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// Validate internal shape consistency.
+    pub fn validate(&self) -> Result<()> {
+        let s = self.alpha.len();
+        if self.support.len() != s * NUM_FEATURES {
+            bail!(
+                "support matrix is {} floats, expected {}×{}",
+                self.support.len(),
+                s,
+                NUM_FEATURES
+            );
+        }
+        if self.feat_mu.len() != NUM_FEATURES || self.feat_sigma.len() != NUM_FEATURES {
+            bail!("standardization vectors must have length {NUM_FEATURES}");
+        }
+        if !(self.gamma > 0.0) {
+            bail!("gamma must be positive");
+        }
+        Ok(())
+    }
+
+    /// Decision value for a standardized feature vector.
+    pub fn decision(&self, feat: &[f32; NUM_FEATURES]) -> f32 {
+        let mut acc = self.bias;
+        for s in 0..self.num_support() {
+            let sv = &self.support[s * NUM_FEATURES..(s + 1) * NUM_FEATURES];
+            let mut d2 = 0f32;
+            for i in 0..NUM_FEATURES {
+                let d = feat[i] - sv[i];
+                d2 += d * d;
+            }
+            acc += self.alpha[s] * (-self.gamma * d2).exp();
+        }
+        acc
+    }
+
+    /// Class-1 probability via Platt scaling.
+    pub fn probability(&self, feat: &[f32; NUM_FEATURES]) -> f32 {
+        sigmoid((self.platt_a * self.decision(feat) + self.platt_b) as f64) as f32
+    }
+
+    /// Interestingness = normalized label entropy of the probability
+    /// (paper §VIII: the classifier's *uncertainty* ranks documents).
+    pub fn entropy(&self, feat: &[f32; NUM_FEATURES]) -> f32 {
+        binary_entropy(self.probability(feat) as f64) as f32
+    }
+
+    /// End-to-end: raw series → standardized features → entropy.
+    /// This is the exact function the AOT HLO artifact computes.
+    pub fn score_series(&self, series: &[f32]) -> f32 {
+        let mut f = extract(series);
+        standardize(&mut f, &self.feat_mu, &self.feat_sigma);
+        self.entropy(&f)
+    }
+
+    /// Probability + entropy for a raw series (diagnostics/Fig. 6).
+    pub fn classify_series(&self, series: &[f32]) -> (f32, f32) {
+        let mut f = extract(series);
+        standardize(&mut f, &self.feat_mu, &self.feat_sigma);
+        (self.probability(&f), self.entropy(&f))
+    }
+
+    /// Load from the `"scorer"` object of `artifacts/manifest.json`.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        fn floats(j: &Json, key: &str) -> Result<Vec<f32>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("manifest: missing array '{key}'"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .map(|f| f as f32)
+                        .ok_or_else(|| anyhow!("manifest: non-number in '{key}'"))
+                })
+                .collect()
+        }
+        fn float(j: &Json, key: &str) -> Result<f32> {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .map(|f| f as f32)
+                .ok_or_else(|| anyhow!("manifest: missing number '{key}'"))
+        }
+        let scorer = Self {
+            support: floats(j, "support")?,
+            alpha: floats(j, "alpha")?,
+            gamma: float(j, "gamma")?,
+            bias: float(j, "bias")?,
+            platt_a: float(j, "platt_a")?,
+            platt_b: float(j, "platt_b")?,
+            feat_mu: floats(j, "feat_mu")?,
+            feat_sigma: floats(j, "feat_sigma")?,
+        };
+        scorer.validate().context("manifest scorer invalid")?;
+        Ok(scorer)
+    }
+
+    /// A small deterministic scorer for tests and offline demos: two
+    /// support points separating "high lag-16 anticorrelation" (oscillatory)
+    /// from the rest, with mild Platt scaling.
+    pub fn synthetic_demo() -> Self {
+        let mut support = vec![0f32; 2 * NUM_FEATURES];
+        // sv0: oscillatory prototype (negative lag-16 AC, high crossing)
+        support[5] = -0.8;
+        support[6] = 0.6;
+        // sv1: quiescent prototype
+        support[NUM_FEATURES + 5] = 0.2;
+        support[NUM_FEATURES + 6] = 0.1;
+        Self {
+            support,
+            alpha: vec![1.5, -1.5],
+            gamma: 0.5,
+            bias: 0.0,
+            platt_a: 2.0,
+            platt_b: 0.0,
+            feat_mu: vec![0.0; NUM_FEATURES],
+            feat_sigma: vec![1.0; NUM_FEATURES],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_scorer_validates() {
+        assert!(RbfScorer::synthetic_demo().validate().is_ok());
+    }
+
+    #[test]
+    fn entropy_peaks_at_uncertain_inputs() {
+        let s = RbfScorer::synthetic_demo();
+        // midpoint between prototypes → decision ≈ 0 → p ≈ 0.5 → H ≈ 1
+        let mut mid = [0f32; NUM_FEATURES];
+        mid[5] = -0.3;
+        mid[6] = 0.35;
+        let h_mid = s.entropy(&mid);
+        // clearly oscillatory point → confident → low entropy
+        let mut osc = [0f32; NUM_FEATURES];
+        osc[5] = -0.8;
+        osc[6] = 0.6;
+        let h_osc = s.entropy(&osc);
+        assert!(h_mid > h_osc, "H(mid)={h_mid} H(osc)={h_osc}");
+        assert!(h_mid > 0.9);
+    }
+
+    #[test]
+    fn probability_monotone_in_decision() {
+        let s = RbfScorer::synthetic_demo();
+        let mut near0 = [0f32; NUM_FEATURES];
+        near0[5] = -0.8;
+        near0[6] = 0.6;
+        let mut near1 = [0f32; NUM_FEATURES];
+        near1[5] = 0.2;
+        near1[6] = 0.1;
+        assert!(s.probability(&near0) > 0.5);
+        assert!(s.probability(&near1) < 0.5);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = RbfScorer::synthetic_demo();
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert(
+            "support".into(),
+            Json::Arr(s.support.iter().map(|&f| Json::Num(f as f64)).collect()),
+        );
+        obj.insert(
+            "alpha".into(),
+            Json::Arr(s.alpha.iter().map(|&f| Json::Num(f as f64)).collect()),
+        );
+        obj.insert("gamma".into(), Json::Num(s.gamma as f64));
+        obj.insert("bias".into(), Json::Num(s.bias as f64));
+        obj.insert("platt_a".into(), Json::Num(s.platt_a as f64));
+        obj.insert("platt_b".into(), Json::Num(s.platt_b as f64));
+        obj.insert(
+            "feat_mu".into(),
+            Json::Arr(s.feat_mu.iter().map(|&f| Json::Num(f as f64)).collect()),
+        );
+        obj.insert(
+            "feat_sigma".into(),
+            Json::Arr(s.feat_sigma.iter().map(|&f| Json::Num(f as f64)).collect()),
+        );
+        let j = Json::Obj(obj);
+        let s2 = RbfScorer::from_json(&j).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_shapes() {
+        let j = Json::parse(
+            r#"{"support":[1,2],"alpha":[1],"gamma":0.5,"bias":0,
+                "platt_a":1,"platt_b":0,"feat_mu":[0],"feat_sigma":[1]}"#,
+        )
+        .unwrap();
+        assert!(RbfScorer::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn score_series_separates_oscillatory_from_trend() {
+        let s = RbfScorer::synthetic_demo();
+        let osc: Vec<f32> = (0..256)
+            .map(|i| (2.0 * std::f32::consts::PI * i as f32 / 32.0).sin())
+            .collect();
+        let flat: Vec<f32> = (0..256).map(|i| i as f32 * 0.01).collect();
+        let (p_osc, _) = s.classify_series(&osc);
+        let (p_flat, _) = s.classify_series(&flat);
+        assert!(p_osc > p_flat, "p_osc={p_osc} p_flat={p_flat}");
+    }
+}

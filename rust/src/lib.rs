@@ -1,0 +1,45 @@
+//! # shptier
+//!
+//! A production-oriented reproduction of *"Adapting The Secretary Hiring
+//! Problem for Optimal Hot-Cold Tier Placement under Top-K Workloads"*
+//! (Blamey et al., CS.DC 2019).
+//!
+//! The crate is the Layer-3 (Rust) coordinator of a three-layer stack:
+//!
+//! - **L3 (this crate)** — streaming orchestrator: producers, PJRT-backed
+//!   interestingness scoring, online top-K ranking, SHP-derived proactive
+//!   tier placement, storage simulation with exact cost accounting, and the
+//!   paper's analytic cost model + optimizers.
+//! - **L2 (`python/compile/model.py`)** — the interestingness model (feature
+//!   extraction → RBF kernel machine → Platt → label entropy) in JAX,
+//!   AOT-lowered to HLO text at build time.
+//! - **L1 (`python/compile/kernels/`)** — Pallas kernels for the scoring
+//!   hot-spot, lowered into the same HLO.
+//!
+//! Python never runs on the request path: `make artifacts` emits
+//! `artifacts/*.hlo.txt` + `manifest.json`, and [`runtime`] loads them via
+//! the PJRT C API.
+//!
+//! Start with [`cost::case_study_1`], [`policy`], and
+//! [`pipeline`]; the `shptier` binary exposes every paper
+//! experiment via `shptier exp --id <E#>`.
+
+pub mod benchkit;
+pub mod config;
+pub mod cost;
+pub mod exp;
+pub mod interestingness;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod policy;
+pub mod propcheck;
+pub mod ssa;
+pub mod serdes;
+pub mod shp;
+pub mod storage;
+pub mod topk;
+pub mod util;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

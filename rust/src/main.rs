@@ -1,0 +1,176 @@
+//! `shptier` — CLI launcher for the SHP tier-placement framework.
+//!
+//! Subcommands:
+//!   run [--config <path>]        run the streaming pipeline from a TOML config
+//!   exp --id <id> [--quick]      regenerate a paper table/figure (see DESIGN.md §4)
+//!   optimize [--preset <p>]      print r* and the strategy ranking for an economy
+//!   validate [--quick]           Monte-Carlo validation suite (E1, E2, A2)
+//!   sizing                       the §VIII sweep-sizing table
+//!
+//! Argument parsing is hand-rolled: the vendored crate set has no clap.
+
+use anyhow::{bail, Context, Result};
+use shptier::config::{LaunchConfig, ScorerKind};
+use shptier::cost::{case_study_1, case_study_2, expected_cost, rank_strategies};
+use shptier::exp;
+use shptier::pipeline::{native_scorer_factory, pjrt_scorer_factory, run_pipeline};
+use shptier::report::Table;
+use shptier::runtime::Manifest;
+use shptier::ssa::SweepGrid;
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` / `--flag` style args after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected argument '{a}' (expected --key [value])");
+        };
+        let takes_value = i + 1 < args.len() && !args[i + 1].starts_with("--");
+        if takes_value {
+            out.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            out.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    let seed: u64 = flags
+        .get("seed")
+        .map(|s| s.parse().context("--seed must be an integer"))
+        .transpose()?
+        .unwrap_or(20190412);
+    let quick = flags.contains_key("quick");
+
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "exp" => {
+            let id = flags.get("id").map(String::as_str).unwrap_or("all");
+            exp::run(id, seed, quick)
+        }
+        "optimize" => cmd_optimize(&flags),
+        "validate" => {
+            exp::run("shp-classic", seed, quick)?;
+            exp::run("alg-b", seed, quick)?;
+            exp::run("ablation-ordering", seed, quick)?;
+            Ok(())
+        }
+        "sizing" => exp::run("sweep-sizing", seed, quick),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `shptier help`)"),
+    }
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let config = match flags.get("config") {
+        Some(path) => LaunchConfig::from_file(std::path::Path::new(path))?,
+        None => {
+            eprintln!("no --config given; using built-in defaults (case-study-2, 10k docs)");
+            LaunchConfig::from_toml("")?
+        }
+    };
+    let grid = SweepGrid {
+        dims: shptier::ssa::oscillator_sweep(config.sweep_values_per_dim, 1).dims,
+        samples_per_point: config.sweep_samples_per_point,
+    };
+    let artifacts = Manifest::default_dir();
+    let factory = match config.scorer {
+        ScorerKind::Pjrt => pjrt_scorer_factory(artifacts),
+        ScorerKind::Native | ScorerKind::Auto => native_scorer_factory(artifacts),
+    };
+    let mut policy = config.policy.instantiate(&config.model);
+    println!(
+        "launching pipeline: {} docs, K={}, policy={}, scorer={:?}",
+        config.pipeline.n_docs,
+        config.model.k,
+        policy.name(),
+        config.scorer
+    );
+    let report = run_pipeline(
+        &config.pipeline,
+        &grid,
+        &config.model,
+        policy.as_mut(),
+        factory,
+    )?;
+    println!("{}", report.summary());
+
+    // measured vs analytic reconciliation
+    let strat = match config.policy {
+        shptier::config::PolicySpec::AllA => shptier::cost::Strategy::AllA,
+        shptier::config::PolicySpec::AllB => shptier::cost::Strategy::AllB,
+        shptier::config::PolicySpec::Changeover { r } => {
+            shptier::cost::Strategy::Changeover { r }
+        }
+        shptier::config::PolicySpec::ChangeoverMigrate { r } => {
+            shptier::cost::Strategy::ChangeoverMigrate { r }
+        }
+        _ => {
+            println!("(reactive policy: no closed-form analytic comparison)");
+            return Ok(());
+        }
+    };
+    let analytic = expected_cost(&config.model, strat).total();
+    let measured = report.run.total_cost();
+    println!(
+        "analytic expectation ${analytic:.4} | measured ${measured:.4} | Δ {:+.1}%",
+        (measured / analytic - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
+    let preset = flags.get("preset").map(String::as_str).unwrap_or("case-study-1");
+    let model = match preset {
+        "case-study-1" => case_study_1(),
+        "case-study-2" => case_study_2(),
+        other => bail!("unknown preset '{other}' (case-study-1 | case-study-2)"),
+    };
+    let mut t = Table::new(
+        &format!("strategy ranking — {preset} (N={}, K={})", model.n, model.k),
+        &["rank", "strategy", "expected cost ($)"],
+    );
+    for (i, (s, cost)) in rank_strategies(&model).into_iter().enumerate() {
+        t.row(vec![(i + 1).to_string(), s.label(), format!("{cost:.2}")]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "shptier {} — SHP-driven hot/cold tier placement (Blamey et al. 2019 reproduction)
+
+USAGE:
+  shptier run [--config configs/case_study_2.toml]
+  shptier exp --id <{}> [--quick] [--seed N]
+  shptier optimize [--preset case-study-1|case-study-2]
+  shptier validate [--quick]
+  shptier sizing
+",
+        shptier::VERSION,
+        exp::EXPERIMENT_IDS.join("|")
+    );
+}

@@ -1,0 +1,354 @@
+//! L3 streaming orchestrator.
+//!
+//! The paper's architecture (Fig. 1): producers generate documents, an
+//! interestingness function scores them, the top-K candidates are stored in
+//! one of two tiers under a placement policy, and the consumer reads the
+//! survivors at end of stream.
+//!
+//! Thread topology (std threads + bounded channels = backpressure; the
+//! vendored crate set has no tokio, and the stages are CPU-bound anyway):
+//!
+//! ```text
+//!   producer shard 0 ─┐
+//!   producer shard 1 ─┼─(sync_channel: raw docs)──> scorer (PJRT batches)
+//!        ...          ┘                                   │
+//!                                    (sync_channel: scored docs, indexed)
+//!                                                         ▼
+//!                                              placer (PlacementEngine)
+//! ```
+//!
+//! The scorer thread *constructs* its `Scorer` inside the thread (PJRT
+//! handles are not `Send`); the placer assigns stream indices in arrival
+//! order, which defines the stream's document order.
+
+pub mod report;
+
+use crate::cost::CostModel;
+use crate::policy::{PlacementEngine, PlacementPolicy, RunResult};
+use crate::runtime::Scorer;
+use crate::ssa::{oscillator_at, simulate, SweepGrid};
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::time::Instant;
+
+pub use report::PipelineReport;
+
+/// A raw document: one simulated trajectory plus its provenance.
+#[derive(Debug, Clone)]
+pub struct Document {
+    /// Sweep point the document came from.
+    pub point_id: u64,
+    /// Stochastic replicate number within the point.
+    pub replicate: u64,
+    /// The time-series payload (length = t_len).
+    pub series: Vec<f32>,
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Total documents to stream (truncates the sweep if smaller).
+    pub n_docs: u64,
+    /// Series length (must match the artifact t_len when using PJRT).
+    pub t_len: usize,
+    /// SSA time horizon per document.
+    pub t_end: f64,
+    /// Producer shard count.
+    pub producers: usize,
+    /// Max documents per scoring batch.
+    pub batch_max: usize,
+    /// Bounded channel capacity (documents) — the backpressure knob.
+    pub channel_capacity: usize,
+    /// RNG seed (shards fork from it deterministically).
+    pub seed: u64,
+    /// Record the cumulative-writes series (Fig. 8).
+    pub record_series: bool,
+    /// Record every (index, score) pair (Fig. 7).
+    pub record_scores: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            n_docs: 10_000,
+            t_len: 256,
+            t_end: 60.0,
+            producers: 4,
+            batch_max: 64,
+            channel_capacity: 256,
+            seed: 20190412,
+            record_series: true,
+            record_scores: true,
+        }
+    }
+}
+
+/// Factory building a scorer *inside* the scoring thread (PJRT handles are
+/// not `Send`).
+pub type ScorerFactory = Box<dyn FnOnce() -> Result<Box<dyn Scorer>> + Send>;
+
+/// Run the full pipeline: sweep → SSA producers → scorer → placement.
+///
+/// Returns the placement outcome plus pipeline telemetry.
+pub fn run_pipeline(
+    config: &PipelineConfig,
+    grid: &SweepGrid,
+    model: &CostModel,
+    policy: &mut dyn PlacementPolicy,
+    scorer_factory: ScorerFactory,
+) -> Result<PipelineReport> {
+    let n_docs = config.n_docs.min(grid.total_documents());
+    assert!(n_docs > 0, "empty workload");
+    let started = Instant::now();
+
+    // ---- stage 1: sharded producers -------------------------------------
+    let (doc_tx, doc_rx) = sync_channel::<Document>(config.channel_capacity);
+    let mut seed_rng = Rng::new(config.seed);
+    let mut producer_handles = Vec::new();
+    for shard in 0..config.producers.max(1) {
+        let tx = doc_tx.clone();
+        let grid = grid.clone();
+        let mut rng = seed_rng.fork();
+        let (t_len, t_end) = (config.t_len, config.t_end);
+        let producers = config.producers.max(1) as u64;
+        let shard_u = shard as u64;
+        producer_handles.push(
+            std::thread::Builder::new()
+                .name(format!("producer-{shard}"))
+                .spawn(move || -> Result<u64> {
+                    let samples = grid.samples_per_point;
+                    let mut produced = 0u64;
+                    // round-robin document ids over shards
+                    let mut doc_id = shard_u;
+                    while doc_id < n_docs {
+                        let point_id = doc_id / samples;
+                        let replicate = doc_id % samples;
+                        let net = oscillator_at(&grid.point(point_id));
+                        let tr = simulate(&net, t_end, t_len, 50_000_000, &mut rng);
+                        let doc = Document { point_id, replicate, series: tr.species_f32(0) };
+                        if tx.send(doc).is_err() {
+                            break; // downstream gone
+                        }
+                        produced += 1;
+                        doc_id += producers;
+                    }
+                    Ok(produced)
+                })
+                .context("spawning producer")?,
+        );
+    }
+    drop(doc_tx);
+
+    // ---- stage 2: batching scorer ----------------------------------------
+    let (scored_tx, scored_rx) = sync_channel::<(Document, f32)>(config.channel_capacity);
+    let batch_max = config.batch_max.max(1);
+    let scorer_handle = std::thread::Builder::new()
+        .name("scorer".into())
+        .spawn(move || -> Result<ScorerStats> {
+            let scorer = scorer_factory()?;
+            let mut stats = ScorerStats::default();
+            let mut pending: Vec<Document> = Vec::with_capacity(batch_max);
+            loop {
+                // block for one, then drain up to batch_max (adaptive batching)
+                match doc_rx.recv() {
+                    Ok(d) => pending.push(d),
+                    Err(_) => break,
+                }
+                while pending.len() < batch_max {
+                    match doc_rx.try_recv() {
+                        Ok(d) => pending.push(d),
+                        Err(_) => break,
+                    }
+                }
+                let series: Vec<Vec<f32>> =
+                    pending.iter().map(|d| d.series.clone()).collect();
+                let t0 = Instant::now();
+                let scores = scorer.score(&series)?;
+                stats.score_time += t0.elapsed();
+                stats.batches += 1;
+                stats.docs += pending.len() as u64;
+                stats.batch_size_sum += pending.len() as u64;
+                for (doc, score) in pending.drain(..).zip(scores) {
+                    if scored_tx.send((doc, score)).is_err() {
+                        return Ok(stats);
+                    }
+                }
+            }
+            stats.scorer_name = scorer.name();
+            Ok(stats)
+        })
+        .context("spawning scorer")?;
+
+    // ---- stage 3: placement (this thread) --------------------------------
+    let run = run_placer(scored_rx, n_docs, model, policy, config)?;
+    let (run_result, score_trace) = run;
+
+    // ---- join -------------------------------------------------------------
+    let mut produced = 0u64;
+    for h in producer_handles {
+        produced += h.join().expect("producer panicked")?;
+    }
+    let scorer_stats = scorer_handle.join().expect("scorer panicked")?;
+    let wall = started.elapsed();
+
+    Ok(PipelineReport::new(
+        run_result,
+        score_trace,
+        produced,
+        scorer_stats,
+        wall,
+        n_docs,
+    ))
+}
+
+/// Scorer-thread telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct ScorerStats {
+    pub scorer_name: String,
+    pub batches: u64,
+    pub docs: u64,
+    pub batch_size_sum: u64,
+    pub score_time: std::time::Duration,
+}
+
+impl ScorerStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+fn run_placer(
+    scored_rx: Receiver<(Document, f32)>,
+    n_docs: u64,
+    model: &CostModel,
+    policy: &mut dyn PlacementPolicy,
+    config: &PipelineConfig,
+) -> Result<(RunResult, Vec<(u64, f32)>)> {
+    let mut engine = PlacementEngine::new(model, n_docs, policy, config.record_series);
+    let mut score_trace = Vec::new();
+    while engine.observed() < n_docs {
+        let (doc, score) = match scored_rx.recv() {
+            Ok(x) => x,
+            Err(_) => break, // producers exhausted early
+        };
+        if config.record_scores {
+            score_trace.push((doc.point_id, score));
+        }
+        engine.observe(score as f64, policy)?;
+    }
+    Ok((engine.finish()?, score_trace))
+}
+
+/// Convenience: run the pipeline with the native scorer from the artifact
+/// manifest (or the synthetic demo scorer when artifacts are absent).
+pub fn native_scorer_factory(artifacts_dir: std::path::PathBuf) -> ScorerFactory {
+    Box::new(move || crate::runtime::auto_scorer(&artifacts_dir))
+}
+
+/// Convenience: PJRT scorer factory (errors if artifacts are missing).
+pub fn pjrt_scorer_factory(artifacts_dir: std::path::PathBuf) -> ScorerFactory {
+    Box::new(move || {
+        let s = crate::runtime::PjrtScorer::load_dir(&artifacts_dir)?;
+        Ok(Box::new(s) as Box<dyn Scorer>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PerDocCosts;
+    use crate::interestingness::RbfScorer;
+    use crate::policy::Changeover;
+    use crate::runtime::NativeScorer;
+    use crate::ssa::oscillator_sweep;
+
+    fn tiny_config(n: u64) -> PipelineConfig {
+        PipelineConfig {
+            n_docs: n,
+            t_len: 64,
+            t_end: 20.0,
+            producers: 2,
+            batch_max: 8,
+            channel_capacity: 16,
+            seed: 99,
+            record_series: true,
+            record_scores: true,
+        }
+    }
+
+    fn tiny_model(n: u64, k: u64) -> CostModel {
+        CostModel::new(
+            n,
+            k,
+            PerDocCosts { write: 1.0, read: 2.0, rent_window: 0.5 },
+            PerDocCosts { write: 2.0, read: 1.0, rent_window: 0.1 },
+        )
+    }
+
+    fn demo_factory() -> ScorerFactory {
+        Box::new(|| {
+            Ok(Box::new(NativeScorer::new(RbfScorer::synthetic_demo())) as Box<dyn Scorer>)
+        })
+    }
+
+    #[test]
+    fn pipeline_end_to_end_small() {
+        let config = tiny_config(120);
+        let grid = oscillator_sweep(2, 4); // 32 points × 4 = 128 docs
+        let model = tiny_model(120, 10);
+        let mut policy = Changeover::new(50);
+        let report =
+            run_pipeline(&config, &grid, &model, &mut policy, demo_factory()).unwrap();
+        assert_eq!(report.docs_processed, 120);
+        assert_eq!(report.run.retained.len(), 10);
+        assert_eq!(report.score_trace.len(), 120);
+        assert_eq!(report.run.cumulative_writes.len(), 120);
+        assert!(report.run.total_cost() > 0.0);
+        assert!(report.throughput_docs_per_sec > 0.0);
+    }
+
+    #[test]
+    fn pipeline_deterministic_in_seed_upto_arrival_order() {
+        // with a single producer, arrival order is deterministic
+        let mut config = tiny_config(60);
+        config.producers = 1;
+        let grid = oscillator_sweep(2, 2);
+        let model = tiny_model(60, 5);
+        let mut p1 = Changeover::new(20);
+        let r1 = run_pipeline(&config, &grid, &model, &mut p1, demo_factory()).unwrap();
+        let mut p2 = Changeover::new(20);
+        let r2 = run_pipeline(&config, &grid, &model, &mut p2, demo_factory()).unwrap();
+        assert_eq!(r1.run.retained, r2.run.retained);
+        assert!((r1.run.total_cost() - r2.run.total_cost()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_handles_more_docs_requested_than_grid() {
+        let config = tiny_config(10_000);
+        let grid = oscillator_sweep(2, 1); // only 32 docs
+        let model = tiny_model(32, 3);
+        let mut policy = Changeover::new(10);
+        let report =
+            run_pipeline(&config, &grid, &model, &mut policy, demo_factory()).unwrap();
+        assert_eq!(report.docs_processed, 32);
+        assert_eq!(report.run.retained.len(), 3);
+    }
+
+    #[test]
+    fn backpressure_small_channel_still_completes() {
+        let mut config = tiny_config(80);
+        config.channel_capacity = 1;
+        config.batch_max = 1;
+        let grid = oscillator_sweep(2, 3);
+        let model = tiny_model(80, 4);
+        let mut policy = Changeover::new(30);
+        let report =
+            run_pipeline(&config, &grid, &model, &mut policy, demo_factory()).unwrap();
+        assert_eq!(report.docs_processed, 80);
+    }
+}

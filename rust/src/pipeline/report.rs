@@ -1,0 +1,76 @@
+//! Pipeline run telemetry + rendering.
+
+use super::ScorerStats;
+use crate::policy::RunResult;
+use std::time::Duration;
+
+/// Everything a pipeline run produced: the placement outcome, the score
+/// trace (Fig. 7), and performance counters.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// Placement outcome (ledger, retained set, write series).
+    pub run: RunResult,
+    /// (point_id, interestingness) in arrival order — the Fig. 7 series.
+    pub score_trace: Vec<(u64, f32)>,
+    /// Documents produced by all shards.
+    pub docs_produced: u64,
+    /// Documents that reached the placer.
+    pub docs_processed: u64,
+    /// Scorer telemetry.
+    pub scorer: ScorerStats,
+    /// Wall-clock of the whole run.
+    pub wall: Duration,
+    /// End-to-end throughput.
+    pub throughput_docs_per_sec: f64,
+}
+
+impl PipelineReport {
+    pub fn new(
+        run: RunResult,
+        score_trace: Vec<(u64, f32)>,
+        docs_produced: u64,
+        scorer: ScorerStats,
+        wall: Duration,
+        docs_processed: u64,
+    ) -> Self {
+        let throughput = if wall.as_secs_f64() > 0.0 {
+            docs_processed as f64 / wall.as_secs_f64()
+        } else {
+            0.0
+        };
+        Self {
+            run,
+            score_trace,
+            docs_produced,
+            docs_processed,
+            scorer,
+            wall,
+            throughput_docs_per_sec: throughput,
+        }
+    }
+
+    /// Multi-line human-readable summary.
+    pub fn summary(&self) -> String {
+        let score_frac = if self.wall.as_secs_f64() > 0.0 {
+            self.scorer.score_time.as_secs_f64() / self.wall.as_secs_f64() * 100.0
+        } else {
+            0.0
+        };
+        format!(
+            "pipeline: {} docs in {:.2?} ({:.0} docs/s)\n\
+             scorer:   {} | {} batches, mean batch {:.1}, scoring {:.2?} ({:.0}% of wall)\n\
+             policy:   {}\n\
+             ledger:   {}",
+            self.docs_processed,
+            self.wall,
+            self.throughput_docs_per_sec,
+            self.scorer.scorer_name,
+            self.scorer.batches,
+            self.scorer.mean_batch(),
+            self.scorer.score_time,
+            score_frac,
+            self.run.policy,
+            self.run.ledger.summary(),
+        )
+    }
+}

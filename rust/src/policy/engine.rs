@@ -1,0 +1,196 @@
+//! Incremental placement engine: the online core shared by the batch trace
+//! executor ([`super::executor::run_policy`]) and the streaming pipeline
+//! ([`crate::pipeline`]).
+//!
+//! Feed `(index, score)` observations in stream order; the engine maintains
+//! the top-K tracker, executes the policy's placements/migrations against
+//! the storage simulator, and finishes with the end-of-stream consumer read.
+
+use super::{MigrationOrder, PlacementPolicy};
+use crate::cost::CostModel;
+use crate::storage::{StorageSim, TierId};
+use crate::topk::{BoundedTopK, Eviction, Scored};
+use anyhow::Result;
+
+/// Outcome of a finished run (batch or streaming).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub policy: String,
+    pub ledger: crate::storage::Ledger,
+    /// Final top-K document indices (best first).
+    pub retained: Vec<u64>,
+    /// Which tier each retained document was read from.
+    pub read_from: Vec<(u64, TierId)>,
+    /// Cumulative organic writes after each document (empty unless
+    /// `record_series` was set).
+    pub cumulative_writes: Vec<u64>,
+}
+
+impl RunResult {
+    pub fn total_cost(&self) -> f64 {
+        self.ledger.total()
+    }
+}
+
+/// Online placement state machine.
+pub struct PlacementEngine {
+    sim: StorageSim,
+    tracker: BoundedTopK,
+    n: u64,
+    next_index: u64,
+    writes: u64,
+    series: Option<Vec<u64>>,
+    policy_name: String,
+}
+
+impl PlacementEngine {
+    /// `n` is the total stream length (the paper's fixed-length window).
+    pub fn new(model: &CostModel, n: u64, policy: &dyn PlacementPolicy, record_series: bool) -> Self {
+        assert!(n > 0);
+        let k = (model.k as usize).min(n as usize);
+        Self {
+            sim: StorageSim::two_tier(model.a, model.b, model.include_rent),
+            tracker: BoundedTopK::new(k),
+            n,
+            next_index: 0,
+            writes: 0,
+            series: if record_series { Some(Vec::with_capacity(n as usize)) } else { None },
+            policy_name: policy.name(),
+        }
+    }
+
+    /// Observe the next document. Must be called in stream order.
+    pub fn observe(
+        &mut self,
+        score: f64,
+        policy: &mut dyn PlacementPolicy,
+    ) -> Result<()> {
+        let i = self.next_index;
+        assert!(i < self.n, "stream longer than declared N");
+        self.next_index += 1;
+        let at = i as f64 / self.n as f64;
+        match self.tracker.offer(Scored::new(i, score)) {
+            Eviction::Rejected => {}
+            Eviction::Accepted => {
+                let tier = policy.place(i, self.n);
+                self.sim.put(i, tier, at)?;
+                self.writes += 1;
+            }
+            Eviction::Replaced { victim } => {
+                self.sim.delete(victim.index, at)?;
+                let tier = policy.place(i, self.n);
+                self.sim.put(i, tier, at)?;
+                self.writes += 1;
+            }
+        }
+        for order in policy.on_step(i, self.n, &self.sim) {
+            match order {
+                MigrationOrder::All { from, to } => {
+                    self.sim.migrate_all(from, to, at)?;
+                }
+                MigrationOrder::Doc { doc, to } => {
+                    self.sim.migrate_doc(doc, to, at)?;
+                }
+            }
+        }
+        if let Some(s) = self.series.as_mut() {
+            s.push(self.writes);
+        }
+        Ok(())
+    }
+
+    /// Documents observed so far.
+    pub fn observed(&self) -> u64 {
+        self.next_index
+    }
+
+    /// Current top-K threshold score (None until K docs seen).
+    pub fn threshold(&self) -> Option<f64> {
+        self.tracker.threshold().map(|s| s.score)
+    }
+
+    /// End of stream: settle rent, consumer reads the top-K.
+    pub fn finish(mut self) -> Result<RunResult> {
+        self.sim.settle_rent(1.0);
+        let retained: Vec<u64> = self.tracker.sorted_desc().iter().map(|s| s.index).collect();
+        let mut read_from = Vec::with_capacity(retained.len());
+        for &doc in &retained {
+            let tier = self.sim.read(doc)?;
+            read_from.push((doc, tier));
+        }
+        Ok(RunResult {
+            policy: self.policy_name,
+            ledger: self.sim.ledger().clone(),
+            retained,
+            read_from,
+            cumulative_writes: self.series.unwrap_or_default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PerDocCosts;
+    use crate::policy::SingleTier;
+    use crate::util::Rng;
+
+    #[test]
+    fn engine_matches_batch_executor() {
+        let model = CostModel::new(
+            500,
+            5,
+            PerDocCosts { write: 2.0, read: 5.0, rent_window: 1.0 },
+            PerDocCosts { write: 3.0, read: 7.0, rent_window: 2.0 },
+        );
+        let mut rng = Rng::new(12);
+        let scores: Vec<f64> = (0..500).map(|_| rng.next_f64()).collect();
+
+        let mut p1 = crate::policy::Changeover::new(200);
+        let batch = crate::policy::run_policy_with_trace(&scores, &model, &mut p1, true).unwrap();
+
+        let mut p2 = crate::policy::Changeover::new(200);
+        let mut engine = PlacementEngine::new(&model, 500, &p2, true);
+        for &s in &scores {
+            engine.observe(s, &mut p2).unwrap();
+        }
+        let streaming = engine.finish().unwrap();
+
+        assert_eq!(batch.retained, streaming.retained);
+        assert_eq!(batch.cumulative_writes, streaming.cumulative_writes);
+        assert!((batch.total_cost() - streaming.total_cost()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn threshold_appears_after_k() {
+        let model = CostModel::new(
+            100,
+            3,
+            PerDocCosts { write: 0.0, read: 0.0, rent_window: 0.0 },
+            PerDocCosts { write: 0.0, read: 0.0, rent_window: 0.0 },
+        );
+        let mut p = SingleTier::new(TierId::A);
+        let mut e = PlacementEngine::new(&model, 100, &p, false);
+        e.observe(0.5, &mut p).unwrap();
+        e.observe(0.7, &mut p).unwrap();
+        assert!(e.threshold().is_none());
+        e.observe(0.6, &mut p).unwrap();
+        assert_eq!(e.threshold(), Some(0.5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn overlong_stream_panics() {
+        let model = CostModel::new(
+            2,
+            1,
+            PerDocCosts { write: 0.0, read: 0.0, rent_window: 0.0 },
+            PerDocCosts { write: 0.0, read: 0.0, rent_window: 0.0 },
+        );
+        let mut p = SingleTier::new(TierId::A);
+        let mut e = PlacementEngine::new(&model, 2, &p, false);
+        for _ in 0..3 {
+            e.observe(0.1, &mut p).unwrap();
+        }
+    }
+}

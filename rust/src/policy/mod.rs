@@ -1,0 +1,87 @@
+//! Tier-placement policies.
+//!
+//! The paper's contribution is *proactive* placement: because the top-K
+//! workload's IO is the SHP record process, the optimal tier for a document
+//! is a function of its stream index alone (Algorithm C). Reactive
+//! baselines from the related-work tradition (age-based demotion,
+//! per-document ski-rental) are provided for the comparison ablation (A1),
+//! plus a clairvoyant oracle lower bound.
+
+mod engine;
+mod executor;
+mod reactive;
+mod shp_policies;
+
+pub use engine::{PlacementEngine, RunResult};
+pub use executor::{run_policy, run_policy_with_trace};
+pub use reactive::{AgeBasedDemotion, SkiRental};
+pub use shp_policies::{Changeover, ChangeoverMigrate, SingleTier};
+
+use crate::storage::{StorageSim, TierId};
+
+/// A migration the policy wants executed after the current step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MigrationOrder {
+    /// Bulk move of every resident of `from` into `to`.
+    All { from: TierId, to: TierId },
+    /// Move one document.
+    Doc { doc: u64, to: TierId },
+}
+
+/// Online tier-placement policy. The executor calls `place` exactly once
+/// for every document that enters the current top-K, and `on_step` after
+/// every document (accepted or not).
+pub trait PlacementPolicy {
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+
+    /// Tier for a newly accepted document at stream index `index` (0-based)
+    /// of a stream of length `n`.
+    fn place(&mut self, index: u64, n: u64) -> TierId;
+
+    /// Optional migrations after observing document `index`. `sim` provides
+    /// read-only visibility of current residency (reactive policies inspect
+    /// it; proactive policies ignore it).
+    fn on_step(&mut self, _index: u64, _n: u64, _sim: &StorageSim) -> Vec<MigrationOrder> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_tier_places_everything_in_one_tier() {
+        let mut p = SingleTier::new(TierId::B);
+        assert_eq!(p.place(0, 100), TierId::B);
+        assert_eq!(p.place(99, 100), TierId::B);
+        assert_eq!(p.name(), "all-B");
+    }
+
+    #[test]
+    fn changeover_switches_at_r() {
+        let mut p = Changeover::new(10);
+        assert_eq!(p.place(9, 100), TierId::A);
+        assert_eq!(p.place(10, 100), TierId::B);
+    }
+
+    #[test]
+    fn changeover_migrate_orders_bulk_move_once() {
+        let mut p = ChangeoverMigrate::new(10);
+        let sim = crate::storage::StorageSim::two_tier(
+            crate::cost::PerDocCosts { write: 0.0, read: 0.0, rent_window: 0.0 },
+            crate::cost::PerDocCosts { write: 0.0, read: 0.0, rent_window: 0.0 },
+            false,
+        );
+        assert!(p.on_step(9, 100, &sim).is_empty());
+        let orders = p.on_step(10, 100, &sim);
+        assert_eq!(
+            orders,
+            vec![MigrationOrder::All { from: TierId::A, to: TierId::B }]
+        );
+        // only once
+        assert!(p.on_step(10, 100, &sim).is_empty());
+        assert!(p.on_step(11, 100, &sim).is_empty());
+    }
+}

@@ -1,0 +1,161 @@
+//! Reactive baselines from the related-work tradition (§III): policies
+//! that *monitor* residency and demote by age, without the paper's a-priori
+//! model of the write process.
+
+use super::{MigrationOrder, PlacementPolicy};
+use crate::storage::{StorageSim, TierId};
+
+/// Age-based demotion ("document age as a predictor of document heat",
+/// e.g. f4 [Muralidhar et al. 2014]): write everything hot (A); after each
+/// step, demote residents of A older than `age_frac` of the window to B.
+#[derive(Debug, Clone, Copy)]
+pub struct AgeBasedDemotion {
+    /// Age threshold as a fraction of the stream window.
+    pub age_frac: f64,
+}
+
+impl AgeBasedDemotion {
+    pub fn new(age_frac: f64) -> Self {
+        assert!(age_frac >= 0.0);
+        Self { age_frac }
+    }
+}
+
+impl PlacementPolicy for AgeBasedDemotion {
+    fn name(&self) -> String {
+        format!("age-demotion(tau={:.3})", self.age_frac)
+    }
+
+    fn place(&mut self, _index: u64, _n: u64) -> TierId {
+        TierId::A
+    }
+
+    fn on_step(&mut self, index: u64, n: u64, sim: &StorageSim) -> Vec<MigrationOrder> {
+        let now = index as f64 / n as f64;
+        let mut orders = Vec::new();
+        for doc in sim.tier(TierId::A).docs() {
+            let written = sim.tier(TierId::A).get(doc).unwrap().written_at;
+            if now - written > self.age_frac {
+                orders.push(MigrationOrder::Doc { doc, to: TierId::B });
+            }
+        }
+        orders
+    }
+}
+
+/// Per-document deterministic ski-rental (c.f. [Khanafer et al. 2013],
+/// [Mansouri & Erradi 2018]): keep a document in the hot tier until its
+/// accumulated hot rent equals the one-off cost of moving it cold, then
+/// move it. 2-competitive against the clairvoyant per-document optimum.
+#[derive(Debug, Clone, Copy)]
+pub struct SkiRental {
+    /// Rent of A per full window ($/doc).
+    rent_a: f64,
+    /// One-off move cost A→B ($/doc): read_A + write_B.
+    move_cost: f64,
+}
+
+impl SkiRental {
+    pub fn new(rent_a_per_window: f64, move_cost: f64) -> Self {
+        Self { rent_a: rent_a_per_window, move_cost }
+    }
+
+    /// Derive from a cost model (uses tier A rent and the A→B hop).
+    pub fn from_model(m: &crate::cost::CostModel) -> Self {
+        Self::new(m.a.rent_window, m.a.read + m.b.write)
+    }
+
+    /// Break-even residency time, as a window fraction.
+    pub fn break_even_frac(&self) -> f64 {
+        if self.rent_a <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.move_cost / self.rent_a
+        }
+    }
+}
+
+impl PlacementPolicy for SkiRental {
+    fn name(&self) -> String {
+        format!("ski-rental(tau={:.4})", self.break_even_frac())
+    }
+
+    fn place(&mut self, _index: u64, _n: u64) -> TierId {
+        TierId::A
+    }
+
+    fn on_step(&mut self, index: u64, n: u64, sim: &StorageSim) -> Vec<MigrationOrder> {
+        let tau = self.break_even_frac();
+        if !tau.is_finite() {
+            return Vec::new();
+        }
+        let now = index as f64 / n as f64;
+        let mut orders = Vec::new();
+        for doc in sim.tier(TierId::A).docs() {
+            let written = sim.tier(TierId::A).get(doc).unwrap().written_at;
+            if now - written >= tau {
+                orders.push(MigrationOrder::Doc { doc, to: TierId::B });
+            }
+        }
+        orders
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PerDocCosts;
+    use crate::storage::StorageSim;
+
+    fn sim() -> StorageSim {
+        StorageSim::two_tier(
+            PerDocCosts { write: 0.0, read: 1.0, rent_window: 10.0 },
+            PerDocCosts { write: 2.0, read: 0.0, rent_window: 1.0 },
+            true,
+        )
+    }
+
+    #[test]
+    fn age_demotion_triggers_after_threshold() {
+        let mut p = AgeBasedDemotion::new(0.1);
+        let mut s = sim();
+        s.put(1, TierId::A, 0.0).unwrap();
+        // at 5% of the window: too young
+        assert!(p.on_step(5, 100, &s).is_empty());
+        // at 20%: old enough
+        let orders = p.on_step(20, 100, &s);
+        assert_eq!(orders, vec![MigrationOrder::Doc { doc: 1, to: TierId::B }]);
+    }
+
+    #[test]
+    fn ski_rental_break_even() {
+        // rent 10/window, move cost 3 → tau = 0.3 windows
+        let p = SkiRental::new(10.0, 3.0);
+        assert!((p.break_even_frac() - 0.3).abs() < 1e-12);
+        // zero rent → never move
+        let p0 = SkiRental::new(0.0, 3.0);
+        assert!(!p0.break_even_frac().is_finite());
+    }
+
+    #[test]
+    fn ski_rental_migrates_at_break_even() {
+        let mut p = SkiRental::new(10.0, 3.0);
+        let mut s = sim();
+        s.put(1, TierId::A, 0.0).unwrap();
+        assert!(p.on_step(29, 100, &s).is_empty());
+        let orders = p.on_step(30, 100, &s);
+        assert_eq!(orders.len(), 1);
+    }
+
+    #[test]
+    fn ski_rental_from_model_uses_hop_cost() {
+        let m = crate::cost::CostModel::new(
+            100,
+            10,
+            PerDocCosts { write: 0.0, read: 1.0, rent_window: 10.0 },
+            PerDocCosts { write: 2.0, read: 0.0, rent_window: 1.0 },
+        );
+        let p = SkiRental::from_model(&m);
+        assert!((p.break_even_frac() - 0.3).abs() < 1e-12);
+    }
+}

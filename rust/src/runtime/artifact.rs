@@ -1,0 +1,187 @@
+//! Artifact discovery: parse `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into typed descriptors plus the scorer
+//! parameters shared with the native mirror.
+
+use crate::interestingness::RbfScorer;
+use crate::serdes::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled batch-size variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub batch: usize,
+    pub t_len: usize,
+}
+
+/// The full artifact set.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub seed: u64,
+    pub t_len: usize,
+    /// Sorted by batch size ascending.
+    pub artifacts: Vec<ArtifactEntry>,
+    /// The trained scorer parameters (for the native mirror / parity).
+    pub scorer: RbfScorer,
+    pub train_accuracy: f64,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and verify the artifact files exist.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("manifest: missing version"))?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expected 1)");
+        }
+        let seed = j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0);
+        let t_len = j
+            .get("t_len")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("manifest: missing t_len"))? as usize;
+
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest: missing artifacts[]"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let batch = a
+                .get("batch")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("artifact missing batch"))? as usize;
+            let t = a
+                .get("t_len")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("artifact missing t_len"))? as usize;
+            let path = dir.join(&name);
+            if !path.exists() {
+                bail!("artifact file missing: {}", path.display());
+            }
+            artifacts.push(ArtifactEntry { name, path, batch, t_len: t });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        artifacts.sort_by_key(|a| a.batch);
+
+        let scorer_j = j
+            .get("scorer")
+            .ok_or_else(|| anyhow!("manifest: missing scorer"))?;
+        let scorer = RbfScorer::from_json(scorer_j)?;
+        let train_accuracy = scorer_j
+            .get("train_accuracy")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN);
+
+        Ok(Self { version, seed, t_len, artifacts, scorer, train_accuracy })
+    }
+
+    /// Largest variant with batch ≤ `pending`, else the smallest variant.
+    pub fn best_variant(&self, pending: usize) -> &ArtifactEntry {
+        self.artifacts
+            .iter()
+            .rev()
+            .find(|a| a.batch <= pending.max(1))
+            .unwrap_or(&self.artifacts[0])
+    }
+
+    /// The default artifacts directory: `$SHPTIER_ARTIFACTS` or
+    /// `<repo>/artifacts` relative to the current dir.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SHPTIER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn scorer_json() -> String {
+        // minimal valid scorer: 1 support vector, 8 features
+        format!(
+            r#""scorer": {{"support": [0,0,0,0,0,0,0,0], "alpha": [1.0],
+                "gamma": 0.5, "bias": 0.0, "platt_a": 1.0, "platt_b": 0.0,
+                "feat_mu": [0,0,0,0,0,0,0,0], "feat_sigma": [1,1,1,1,1,1,1,1],
+                "train_accuracy": 0.95}}"#
+        )
+    }
+
+    #[test]
+    fn load_valid_manifest() {
+        let dir = std::env::temp_dir().join(format!("shptier_mani_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a1.hlo.txt"), "HloModule m").unwrap();
+        std::fs::write(dir.join("a64.hlo.txt"), "HloModule m").unwrap();
+        write_manifest(
+            &dir,
+            &format!(
+                r#"{{"version": 1, "seed": 7, "t_len": 256,
+                   "artifacts": [
+                     {{"name": "a64.hlo.txt", "batch": 64, "t_len": 256}},
+                     {{"name": "a1.hlo.txt", "batch": 1, "t_len": 256}}
+                   ],
+                   {}}}"#,
+                scorer_json()
+            ),
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.t_len, 256);
+        assert_eq!(m.artifacts.len(), 2);
+        // sorted ascending
+        assert_eq!(m.artifacts[0].batch, 1);
+        assert_eq!(m.best_variant(100).batch, 64);
+        assert_eq!(m.best_variant(5).batch, 1);
+        assert_eq!(m.best_variant(0).batch, 1);
+        assert!((m.train_accuracy - 0.95).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("shptier_mani2_{}", std::process::id()));
+        write_manifest(
+            &dir,
+            &format!(
+                r#"{{"version": 1, "t_len": 256,
+                   "artifacts": [{{"name": "gone.hlo.txt", "batch": 1, "t_len": 256}}],
+                   {}}}"#,
+                scorer_json()
+            ),
+        );
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let dir = std::env::temp_dir().join(format!("shptier_mani3_{}", std::process::id()));
+        write_manifest(&dir, r#"{"version": 2, "t_len": 1, "artifacts": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT execution of the AOT interestingness artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → compile → execute. One compiled executable per
+//! batch-size variant; the scorer pads partial batches with ones and
+//! truncates the outputs.
+
+use super::artifact::{ArtifactEntry, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A PJRT-backed scorer holding one compiled executable per batch variant.
+pub struct PjrtScorer {
+    client: xla::PjRtClient,
+    /// batch size → (t_len, executable)
+    exes: BTreeMap<usize, (usize, xla::PjRtLoadedExecutable)>,
+    /// Total documents scored (metrics).
+    scored: std::cell::Cell<u64>,
+    /// Total execute() calls (metrics).
+    executions: std::cell::Cell<u64>,
+}
+
+impl PjrtScorer {
+    /// Compile every artifact in the manifest on the CPU PJRT client.
+    pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        for art in &manifest.artifacts {
+            let exe = Self::compile_artifact(&client, art)
+                .with_context(|| format!("compiling {}", art.name))?;
+            exes.insert(art.batch, (art.t_len, exe));
+        }
+        Ok(Self {
+            client,
+            exes,
+            scored: std::cell::Cell::new(0),
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Load from a directory (manifest.json + *.hlo.txt).
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(&manifest)
+    }
+
+    fn compile_artifact(
+        client: &xla::PjRtClient,
+        art: &ArtifactEntry,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = art
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", art.name))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("PJRT compile {}: {e:?}", art.name))
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Available batch sizes (ascending).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    /// Largest compiled batch ≤ `pending` (or the smallest batch).
+    pub fn pick_batch(&self, pending: usize) -> usize {
+        self.exes
+            .keys()
+            .rev()
+            .find(|&&b| b <= pending.max(1))
+            .copied()
+            .unwrap_or_else(|| *self.exes.keys().next().unwrap())
+    }
+
+    /// Score a batch of series. `series` is row-major (B × t_len); B may be
+    /// anything — the call picks variants and pads internally. Returns one
+    /// interestingness value per row.
+    pub fn score(&self, series: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(series.len());
+        let mut i = 0usize;
+        while i < series.len() {
+            let pending = series.len() - i;
+            let b = self.pick_batch(pending);
+            let take = b.min(pending);
+            out.extend(self.execute_variant(b, &series[i..i + take])?);
+            i += take;
+        }
+        Ok(out)
+    }
+
+    /// Execute one compiled variant on ≤ batch rows (padding with ones).
+    fn execute_variant(&self, batch: usize, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let (t_len, exe) = self
+            .exes
+            .get(&batch)
+            .ok_or_else(|| anyhow::anyhow!("no compiled variant for batch {batch}"))?;
+        let t_len = *t_len;
+        if rows.len() > batch {
+            bail!("execute_variant: {} rows > batch {batch}", rows.len());
+        }
+        let mut flat = Vec::with_capacity(batch * t_len);
+        for r in rows {
+            if r.len() != t_len {
+                bail!("series length {} != artifact t_len {t_len}", r.len());
+            }
+            flat.extend_from_slice(r);
+        }
+        // pad with constant rows (hit the kernels' EPS guards cleanly)
+        flat.resize(batch * t_len, 1.0);
+
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[batch as i64, t_len as i64])
+            .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("PJRT execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let tuple = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let values: Vec<f32> = tuple
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("read result: {e:?}"))?;
+        if values.len() != batch {
+            bail!("expected {batch} outputs, got {}", values.len());
+        }
+        self.scored.set(self.scored.get() + rows.len() as u64);
+        self.executions.set(self.executions.get() + 1);
+        Ok(values[..rows.len()].to_vec())
+    }
+
+    /// (documents scored, PJRT executions) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.scored.get(), self.executions.get())
+    }
+}
+
+impl std::fmt::Debug for PjrtScorer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtScorer")
+            .field("platform", &self.platform_name())
+            .field("batch_sizes", &self.batch_sizes())
+            .finish()
+    }
+}

@@ -1,0 +1,109 @@
+//! Runtime bridge: load the AOT artifacts (HLO text + manifest) and execute
+//! them via the PJRT C API from the L3 hot path. Python never runs here.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use client::PjrtScorer;
+
+use crate::interestingness::RbfScorer;
+use anyhow::Result;
+use std::path::Path;
+
+/// Anything that can turn a batch of document series into interestingness
+/// values. Implemented by the PJRT-backed scorer (production) and the
+/// native mirror (fallback / oracle).
+///
+/// Not `Send`: the PJRT client holds thread-affine handles, so the pipeline
+/// constructs its scorer *inside* the scoring thread (see
+/// [`crate::pipeline`]'s `ScorerFactory`).
+pub trait Scorer {
+    fn score(&self, series: &[Vec<f32>]) -> Result<Vec<f32>>;
+    fn name(&self) -> String;
+}
+
+impl Scorer for PjrtScorer {
+    fn score(&self, series: &[Vec<f32>]) -> Result<Vec<f32>> {
+        PjrtScorer::score(self, series)
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt({})", self.platform_name())
+    }
+}
+
+/// Native-Rust scorer wrapping [`RbfScorer`] (same weights as the artifact).
+#[derive(Debug, Clone)]
+pub struct NativeScorer {
+    pub scorer: RbfScorer,
+}
+
+impl NativeScorer {
+    pub fn new(scorer: RbfScorer) -> Self {
+        Self { scorer }
+    }
+
+    /// Load weights from the artifact manifest (no PJRT involved).
+    pub fn from_manifest_dir(dir: &Path) -> Result<Self> {
+        Ok(Self { scorer: Manifest::load(dir)?.scorer })
+    }
+}
+
+impl Scorer for NativeScorer {
+    fn score(&self, series: &[Vec<f32>]) -> Result<Vec<f32>> {
+        Ok(series.iter().map(|s| self.scorer.score_series(s)).collect())
+    }
+
+    fn name(&self) -> String {
+        "native".into()
+    }
+}
+
+/// Build the best available scorer: PJRT if artifacts exist, else the
+/// synthetic-demo native scorer (keeps examples runnable pre-`make
+/// artifacts`, with a warning).
+pub fn auto_scorer(artifacts_dir: &Path) -> Result<Box<dyn Scorer>> {
+    if artifacts_dir.join("manifest.json").exists() {
+        match PjrtScorer::load_dir(artifacts_dir) {
+            Ok(s) => return Ok(Box::new(s)),
+            Err(e) => {
+                eprintln!(
+                    "warning: PJRT scorer failed to load ({e:#}); falling back to native"
+                );
+                if let Ok(n) = NativeScorer::from_manifest_dir(artifacts_dir) {
+                    return Ok(Box::new(n));
+                }
+            }
+        }
+    }
+    eprintln!(
+        "warning: no artifacts at {} — using synthetic demo scorer (run `make artifacts`)",
+        artifacts_dir.display()
+    );
+    Ok(Box::new(NativeScorer::new(RbfScorer::synthetic_demo())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_scorer_scores_batches() {
+        let s = NativeScorer::new(RbfScorer::synthetic_demo());
+        let osc: Vec<f32> = (0..256)
+            .map(|i| (2.0 * std::f32::consts::PI * i as f32 / 32.0).sin())
+            .collect();
+        let out = s.score(&[osc.clone(), osc]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!((out[0] - out[1]).abs() < 1e-6);
+        assert!(out[0] >= 0.0 && out[0] <= 1.0);
+    }
+
+    #[test]
+    fn auto_scorer_falls_back_without_artifacts() {
+        let dir = std::path::Path::new("/nonexistent_shptier_dir");
+        let s = auto_scorer(dir).unwrap();
+        assert_eq!(s.name(), "native");
+    }
+}

@@ -1,0 +1,7 @@
+//! Hand-rolled serialization substrates (no serde in the vendored crate set).
+
+pub mod json;
+pub mod toml;
+
+pub use json::{Json, JsonError};
+pub use toml::{TomlError, TomlValue};

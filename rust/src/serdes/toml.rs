@@ -1,0 +1,325 @@
+//! Minimal TOML parser for launcher configs.
+//!
+//! Supports the subset used by `configs/*.toml`: top-level and nested
+//! `[table.subtable]` headers, `key = value` with strings, integers, floats,
+//! booleans, and homogeneous arrays, plus `#` comments. No multi-line
+//! strings, datetimes, or array-of-tables — configs stay simple by design.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlValue {
+    /// Parse a document into its root table.
+    pub fn parse(src: &str) -> Result<TomlValue, TomlError> {
+        let mut root: BTreeMap<String, TomlValue> = BTreeMap::new();
+        let mut current_path: Vec<String> = Vec::new();
+
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { msg: msg.to_string(), line: lineno + 1 };
+            if let Some(rest) = line.strip_prefix('[') {
+                let inner = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated table header"))?;
+                if inner.starts_with('[') {
+                    return Err(err("array-of-tables not supported"));
+                }
+                current_path = inner
+                    .split('.')
+                    .map(|s| s.trim().to_string())
+                    .collect::<Vec<_>>();
+                if current_path.iter().any(|p| p.is_empty()) {
+                    return Err(err("empty table name component"));
+                }
+                // materialize path
+                ensure_table(&mut root, &current_path).map_err(|m| err(&m))?;
+            } else {
+                let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let (val, rest) = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+                if !rest.trim().is_empty() {
+                    return Err(err("trailing data after value"));
+                }
+                let table = ensure_table(&mut root, &current_path).map_err(|m| err(&m))?;
+                if table.insert(key.trim_matches('"').to_string(), val).is_some() {
+                    return Err(err(&format!("duplicate key '{key}'")));
+                }
+            }
+        }
+        Ok(TomlValue::Table(root))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        match self {
+            TomlValue::Table(t) => t.get(key),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get_path("pipeline.batch_size")`.
+    pub fn get_path(&self, path: &str) -> Option<&TomlValue> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`3` as `3.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, TomlValue>> {
+        match self {
+            TomlValue::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, TomlValue>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        match entry {
+            TomlValue::Table(t) => cur = t,
+            _ => return Err(format!("'{part}' is not a table")),
+        }
+    }
+    Ok(cur)
+}
+
+/// Parse one value, returning (value, rest-of-input).
+fn parse_value(s: &str) -> Result<(TomlValue, &str), String> {
+    let s = s.trim_start();
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let mut out = String::new();
+        let mut chars = rest.char_indices();
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => out.push('\n'),
+                    Some((_, 't')) => out.push('\t'),
+                    Some((_, '"')) => out.push('"'),
+                    Some((_, '\\')) => out.push('\\'),
+                    _ => return Err("bad string escape".into()),
+                },
+                '"' => return Ok((TomlValue::Str(out), &rest[i + 1..])),
+                c => out.push(c),
+            }
+        }
+        return Err("unterminated string".into());
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let mut items = Vec::new();
+        let mut rem = rest.trim_start();
+        if let Some(r) = rem.strip_prefix(']') {
+            return Ok((TomlValue::Arr(items), r));
+        }
+        loop {
+            let (v, r) = parse_value(rem)?;
+            items.push(v);
+            rem = r.trim_start();
+            if let Some(r) = rem.strip_prefix(',') {
+                rem = r.trim_start();
+                // allow trailing comma
+                if let Some(r2) = rem.strip_prefix(']') {
+                    return Ok((TomlValue::Arr(items), r2));
+                }
+            } else if let Some(r) = rem.strip_prefix(']') {
+                return Ok((TomlValue::Arr(items), r));
+            } else {
+                return Err("expected ',' or ']' in array".into());
+            }
+        }
+    }
+    if let Some(r) = s.strip_prefix("true") {
+        return Ok((TomlValue::Bool(true), r));
+    }
+    if let Some(r) = s.strip_prefix("false") {
+        return Ok((TomlValue::Bool(false), r));
+    }
+    // number: take the maximal run of number-ish chars
+    let end = s
+        .find(|c: char| !(c.is_ascii_digit() || "+-._eE".contains(c)))
+        .unwrap_or(s.len());
+    let tok = &s[..end];
+    let rest = &s[end..];
+    if tok.is_empty() {
+        return Err(format!("unrecognized value near '{s}'"));
+    }
+    let clean = tok.replace('_', "");
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok((TomlValue::Int(i), rest));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(|f| (TomlValue::Float(f), rest))
+        .map_err(|_| format!("bad number '{tok}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_document() {
+        let doc = r#"
+# pipeline config
+name = "cs1"
+n = 100000000
+frac = 0.41
+enabled = true
+
+[tiers.a]
+kind = "s3"
+write_txn = 5e-6
+
+[tiers.b]
+kind = "azure"
+sizes = [1, 2, 3]
+"#;
+        let t = TomlValue::parse(doc).unwrap();
+        assert_eq!(t.get_path("name").unwrap().as_str(), Some("cs1"));
+        assert_eq!(t.get_path("n").unwrap().as_u64(), Some(100_000_000));
+        assert_eq!(t.get_path("frac").unwrap().as_f64(), Some(0.41));
+        assert_eq!(t.get_path("enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(t.get_path("tiers.a.kind").unwrap().as_str(), Some("s3"));
+        assert_eq!(t.get_path("tiers.a.write_txn").unwrap().as_f64(), Some(5e-6));
+        let sizes = t.get_path("tiers.b.sizes").unwrap().as_arr().unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[2].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let t = TomlValue::parse("a = 3\nb = 3.0\nc = 1_000\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_i64(), Some(3));
+        assert_eq!(t.get("a").unwrap().as_f64(), Some(3.0)); // int coerces
+        assert!(matches!(t.get("b").unwrap(), TomlValue::Float(_)));
+        assert_eq!(t.get("c").unwrap().as_i64(), Some(1000));
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let t = TomlValue::parse("a = \"x # not a comment\" # real comment\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_str(), Some("x # not a comment"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlValue::parse("a =\n").is_err());
+        assert!(TomlValue::parse("[unclosed\n").is_err());
+        assert!(TomlValue::parse("a = 1\na = 2\n").is_err());
+        assert!(TomlValue::parse("a = [1, \"x\"\n").is_err());
+        let e = TomlValue::parse("ok = 1\nbad\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn nested_table_merge() {
+        let t = TomlValue::parse("[a]\nx = 1\n[a.b]\ny = 2\n").unwrap();
+        assert_eq!(t.get_path("a.x").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get_path("a.b.y").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn empty_and_trailing_comma_arrays() {
+        let t = TomlValue::parse("a = []\nb = [1, 2,]\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(t.get("b").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

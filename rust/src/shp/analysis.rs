@@ -1,0 +1,199 @@
+//! Probability-model diagnostics: does a real interestingness trace behave
+//! like the randomly-ordered stream the paper assumes (§IX "So long as
+//! documents are sorted randomly ...")?
+//!
+//! The key check, used for Fig. 8 and the ordering ablation (A2): compare a
+//! trace's empirical cumulative-write curve against eqs. (11)–(12), and
+//! quantify order randomness with rank autocorrelation.
+
+use crate::cost::expected_writes;
+use crate::shp::overwrite::run_overwrite_scores;
+
+/// Comparison of an empirical cumulative-write curve against the analytic
+/// record-process prediction.
+#[derive(Debug, Clone)]
+pub struct WriteCurveFit {
+    /// Empirical cumulative writes after each document.
+    pub empirical: Vec<u64>,
+    /// Analytic expectation at each index (eqs. 11–12, exact harmonic form).
+    pub analytic: Vec<f64>,
+    /// max_i |empirical − analytic| / analytic (over i ≥ K).
+    pub max_rel_err: f64,
+    /// Final-count relative error.
+    pub final_rel_err: f64,
+}
+
+/// Run the K-overwrite process on a score trace and fit the analytic curve.
+pub fn fit_write_curve(scores: &[f64], k: usize) -> WriteCurveFit {
+    let outcome = run_overwrite_scores(scores, k);
+    // Incremental harmonic recurrence: W(i+1) = W(i) + K/(i+1) for i ≥ K —
+    // O(N) for the whole curve instead of O(N) per point (§Perf).
+    let analytic: Vec<f64> = {
+        let kf = k as f64;
+        let mut acc = 0.0f64;
+        (0..scores.len())
+            .map(|i| {
+                if i < k {
+                    acc = (i + 1) as f64;
+                } else {
+                    acc += kf / (i + 1) as f64;
+                }
+                acc
+            })
+            .collect()
+    };
+    debug_assert!(
+        scores.is_empty()
+            || (analytic.last().unwrap()
+                - expected_writes(scores.len() as u64, k as u64))
+            .abs()
+                < 1e-6 * analytic.last().unwrap().max(1.0)
+    );
+    let mut max_rel = 0f64;
+    for i in k..scores.len() {
+        let rel = (outcome.cumulative_writes[i] as f64 - analytic[i]).abs() / analytic[i];
+        max_rel = max_rel.max(rel);
+    }
+    let final_rel = if scores.is_empty() {
+        0.0
+    } else {
+        let last = scores.len() - 1;
+        (outcome.cumulative_writes[last] as f64 - analytic[last]).abs() / analytic[last]
+    };
+    WriteCurveFit {
+        empirical: outcome.cumulative_writes,
+        analytic,
+        max_rel_err: max_rel,
+        final_rel_err: final_rel,
+    }
+}
+
+/// Spearman rank correlation between stream position and score — ≈0 for a
+/// randomly ordered stream, ±1 for sorted streams. This is the cheap a
+/// priori test for the model's validity on a given interestingness trace.
+pub fn spearman_position_correlation(scores: &[f64]) -> f64 {
+    let n = scores.len();
+    if n < 2 {
+        return 0.0;
+    }
+    // rank of each score (average ranks for ties are unnecessary here:
+    // deterministic tie-break by index keeps the statistic well-defined)
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut rank = vec![0f64; n];
+    for (r, &i) in order.iter().enumerate() {
+        rank[i] = r as f64;
+    }
+    // Pearson on (position, rank)
+    let nf = n as f64;
+    let mean = (nf - 1.0) / 2.0;
+    let mut num = 0f64;
+    let mut den_a = 0f64;
+    let mut den_b = 0f64;
+    for (i, &r) in rank.iter().enumerate() {
+        let da = i as f64 - mean;
+        let db = r - mean;
+        num += da * db;
+        den_a += da * da;
+        den_b += db * db;
+    }
+    if den_a == 0.0 || den_b == 0.0 {
+        0.0
+    } else {
+        num / (den_a * den_b).sqrt()
+    }
+}
+
+/// Empirical per-position write rate over `reps` shuffles of the same score
+/// multiset — validates eq. (10) for a *given* score distribution
+/// (ties and duplicates included), isolating ordering effects.
+pub fn empirical_write_rate(
+    scores: &[f64],
+    k: usize,
+    reps: u64,
+    rng: &mut crate::util::Rng,
+) -> Vec<f64> {
+    let n = scores.len();
+    let mut counts = vec![0u64; n];
+    let mut work = scores.to_vec();
+    for _ in 0..reps {
+        rng.shuffle(&mut work);
+        let o = run_overwrite_scores(&work, k);
+        let mut prev = 0u64;
+        for (i, &c) in o.cumulative_writes.iter().enumerate() {
+            if c > prev {
+                counts[i] += 1;
+            }
+            prev = c;
+        }
+    }
+    counts.iter().map(|&c| c as f64 / reps as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::p_write;
+    use crate::util::Rng;
+
+    #[test]
+    fn random_trace_fits_analytic_curve() {
+        let mut rng = Rng::new(31);
+        let scores: Vec<f64> = (0..20_000).map(|_| rng.next_f64()).collect();
+        let fit = fit_write_curve(&scores, 100);
+        assert!(
+            fit.final_rel_err < 0.10,
+            "final rel err {}",
+            fit.final_rel_err
+        );
+    }
+
+    #[test]
+    fn sorted_trace_breaks_the_model() {
+        // ascending scores: every document is a record → writes = N ≫ analytic
+        let scores: Vec<f64> = (0..5000).map(|i| i as f64).collect();
+        let fit = fit_write_curve(&scores, 10);
+        assert!(fit.final_rel_err > 5.0, "err {}", fit.final_rel_err);
+    }
+
+    #[test]
+    fn spearman_detects_order() {
+        let mut rng = Rng::new(17);
+        let random: Vec<f64> = (0..5000).map(|_| rng.next_f64()).collect();
+        assert!(spearman_position_correlation(&random).abs() < 0.05);
+        let asc: Vec<f64> = (0..5000).map(|i| i as f64).collect();
+        assert!((spearman_position_correlation(&asc) - 1.0).abs() < 1e-9);
+        let desc: Vec<f64> = (0..5000).map(|i| -(i as f64)).collect();
+        assert!((spearman_position_correlation(&desc) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empirical_rate_matches_eq10() {
+        let mut rng = Rng::new(23);
+        let scores: Vec<f64> = (0..400).map(|_| rng.next_f64()).collect();
+        let rate = empirical_write_rate(&scores, 5, 2000, &mut rng);
+        for &i in &[0usize, 4, 20, 100, 399] {
+            let expect = p_write(i as u64, 5);
+            assert!(
+                (rate[i] - expect).abs() < 0.03 + 0.1 * expect,
+                "i={i}: rate={} expect={expect}",
+                rate[i]
+            );
+        }
+    }
+
+    #[test]
+    fn spearman_edge_cases() {
+        assert_eq!(spearman_position_correlation(&[]), 0.0);
+        assert_eq!(spearman_position_correlation(&[1.0]), 0.0);
+        // constant scores: ranks follow index → correlation 1 by tie-break,
+        // but zero-variance guard yields a finite number
+        let c = spearman_position_correlation(&[2.0; 100]);
+        assert!(c.is_finite());
+    }
+}

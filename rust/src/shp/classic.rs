@@ -1,0 +1,149 @@
+//! Algorithm A — the classic Secretary Hiring Problem (paper §V).
+//!
+//! N ranked candidates are interviewed in random order; after observing the
+//! first `r − 1`, hire the first candidate beating the best of those.
+//! Dynkin's optimal threshold is `r = N/e`, achieving
+//! `P(best hired) → 1/e` and exactly one (irrevocable) "write" — paper
+//! eqs. (2)–(4).
+
+use crate::topk::{FullRankTracker, Scored};
+use crate::util::Rng;
+
+/// Outcome of one classic-SHP run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassicOutcome {
+    /// Index of the hired candidate (None if nobody beat the benchmark —
+    /// by convention the last candidate is then taken).
+    pub hired: u64,
+    /// Whether the hired candidate was the overall best.
+    pub hired_best: bool,
+    /// Number of hires performed (always ≤ 1 in Algorithm A; kept for
+    /// symmetry with Algorithm B statistics).
+    pub writes: u64,
+}
+
+/// Run the classic stopping rule on a random permutation of N distinct
+/// scores: observe `r.saturating_sub(1)` candidates, then hire the first
+/// record-breaker.
+pub fn run_classic(n: u64, r: u64, rng: &mut Rng) -> ClassicOutcome {
+    assert!(n > 0);
+    let perm = rng.permutation(n as usize);
+    // perm[i] is the *rank-value* of candidate i: larger = better.
+    let best_overall = (0..n).max_by_key(|&i| perm[i as usize]).unwrap();
+
+    let observe = r.saturating_sub(1).min(n);
+    let mut tracker = FullRankTracker::new();
+    for i in 0..observe {
+        tracker.insert(Scored::new(i, perm[i as usize] as f64));
+    }
+    for i in observe..n {
+        let s = Scored::new(i, perm[i as usize] as f64);
+        if tracker.is_record(s) || i == n - 1 {
+            return ClassicOutcome {
+                hired: i,
+                hired_best: i == best_overall,
+                writes: 1,
+            };
+        }
+        tracker.insert(s);
+    }
+    // observe == n: forced to take the last
+    ClassicOutcome {
+        hired: n - 1,
+        hired_best: n - 1 == best_overall,
+        writes: 1,
+    }
+}
+
+/// Monte-Carlo estimate of `P(hire the overall best)` for threshold `r`.
+pub fn p_hire_best(n: u64, r: u64, reps: u64, rng: &mut Rng) -> f64 {
+    let mut hits = 0u64;
+    for _ in 0..reps {
+        if run_classic(n, r, rng).hired_best {
+            hits += 1;
+        }
+    }
+    hits as f64 / reps as f64
+}
+
+/// The analytic success probability of threshold r (exact finite-N form):
+/// `P(r) = (r−1)/N · Σ_{j=r}^{N} 1/(j−1)` for r > 1, and `1/N` for r ≤ 1.
+pub fn p_hire_best_analytic(n: u64, r: u64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    if r <= 1 {
+        return 1.0 / n as f64;
+    }
+    let rr = r.min(n);
+    let sum: f64 = (rr..=n).map(|j| 1.0 / (j - 1) as f64).sum();
+    (rr - 1) as f64 / n as f64 * sum
+}
+
+/// Dynkin's optimal threshold `N/e`, rounded (paper eq. (2)).
+pub fn optimal_r(n: u64) -> u64 {
+    ((n as f64 / std::f64::consts::E).round() as u64).clamp(1, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_maximum_is_near_n_over_e() {
+        let n = 1000u64;
+        let (mut best_r, mut best_p) = (1, 0.0);
+        for r in 1..=n {
+            let p = p_hire_best_analytic(n, r);
+            if p > best_p {
+                best_p = p;
+                best_r = r;
+            }
+        }
+        let e_r = optimal_r(n);
+        assert!(
+            (best_r as i64 - e_r as i64).abs() <= 2,
+            "argmax {best_r} vs N/e {e_r}"
+        );
+        assert!((best_p - 1.0 / std::f64::consts::E).abs() < 0.01);
+    }
+
+    #[test]
+    fn monte_carlo_matches_one_over_e() {
+        let mut rng = Rng::new(2019);
+        let n = 200u64;
+        let p = p_hire_best(n, optimal_r(n), 4000, &mut rng);
+        assert!(
+            (p - 1.0 / std::f64::consts::E).abs() < 0.03,
+            "p={p} vs 1/e"
+        );
+    }
+
+    #[test]
+    fn monte_carlo_matches_analytic_at_various_r() {
+        let mut rng = Rng::new(7);
+        let n = 100u64;
+        for r in [2u64, 10, 37, 60, 90] {
+            let mc = p_hire_best(n, r, 4000, &mut rng);
+            let an = p_hire_best_analytic(n, r);
+            assert!((mc - an).abs() < 0.03, "r={r}: mc={mc} analytic={an}");
+        }
+    }
+
+    #[test]
+    fn always_exactly_one_write() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let o = run_classic(50, 19, &mut rng);
+            assert_eq!(o.writes, 1);
+            assert!(o.hired < 50);
+        }
+    }
+
+    #[test]
+    fn r_one_hires_first_record_which_is_first_candidate() {
+        let mut rng = Rng::new(3);
+        let o = run_classic(10, 1, &mut rng);
+        assert_eq!(o.hired, 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! The secretary-hiring-problem processes the paper builds on:
+//! Algorithm A (classic stopping, §V), Algorithm B (simple overwrite, §VI),
+//! and diagnostics for the random-order assumption (§IX, Fig. 8).
+//!
+//! Algorithm C (the two-tier changeover strategies, §VII) is realized as
+//! placement policies over the storage simulator — see [`crate::policy`]
+//! and [`crate::storage`].
+
+pub mod analysis;
+pub mod classic;
+pub mod overwrite;
+
+pub use analysis::{
+    empirical_write_rate, fit_write_curve, spearman_position_correlation, WriteCurveFit,
+};
+pub use classic::{optimal_r as classic_optimal_r, p_hire_best, p_hire_best_analytic, run_classic, ClassicOutcome};
+pub use overwrite::{
+    mean_cumulative_writes, mean_writes, run_overwrite, run_overwrite_scores, OverwriteOutcome,
+};

@@ -1,0 +1,153 @@
+//! Algorithm B — "Simple Overwrite" (paper §VI): keep the best-so-far
+//! (generally: top-K) by overwriting, guaranteeing the overall best is
+//! retained (eq. 8) at an expected cost of `H_N` writes (eqs. 6–7), or the
+//! exact record-process count for K > 1.
+
+use crate::topk::{BoundedTopK, Eviction, Scored};
+use crate::util::Rng;
+
+/// Statistics of one Algorithm-B run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverwriteOutcome {
+    /// Total writes performed (accepts + replacements).
+    pub writes: u64,
+    /// Cumulative writes after each document (len N) — Fig. 8's y-axis.
+    pub cumulative_writes: Vec<u64>,
+    /// Final retained set (best first).
+    pub retained: Vec<Scored>,
+    /// Whether the overall best document was retained (must be true).
+    pub saved_best: bool,
+}
+
+/// Run Algorithm B (one tier, capacity K) over an explicit score stream.
+pub fn run_overwrite_scores(scores: &[f64], k: usize) -> OverwriteOutcome {
+    let mut tracker = BoundedTopK::new(k);
+    let mut writes = 0u64;
+    let mut cumulative = Vec::with_capacity(scores.len());
+    let mut best = f64::NEG_INFINITY;
+    let mut best_idx = 0u64;
+    for (i, &h) in scores.iter().enumerate() {
+        if h > best {
+            best = h;
+            best_idx = i as u64;
+        }
+        match tracker.offer(Scored::new(i as u64, h)) {
+            Eviction::Rejected => {}
+            _ => writes += 1,
+        }
+        cumulative.push(writes);
+    }
+    let retained = tracker.sorted_desc();
+    let saved_best = retained.iter().any(|s| s.index == best_idx);
+    OverwriteOutcome { writes, cumulative_writes: cumulative, retained, saved_best }
+}
+
+/// Run Algorithm B over a fresh random-order stream (i.i.d. uniform scores).
+pub fn run_overwrite(n: u64, k: usize, rng: &mut Rng) -> OverwriteOutcome {
+    let scores: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+    run_overwrite_scores(&scores, k)
+}
+
+/// Monte-Carlo mean writes over `reps` runs.
+pub fn mean_writes(n: u64, k: usize, reps: u64, rng: &mut Rng) -> f64 {
+    let mut total = 0u64;
+    for _ in 0..reps {
+        total += run_overwrite(n, k, rng).writes;
+    }
+    total as f64 / reps as f64
+}
+
+/// Mean cumulative-writes curve over `reps` runs (for Fig. 8 overlays).
+pub fn mean_cumulative_writes(n: u64, k: usize, reps: u64, rng: &mut Rng) -> Vec<f64> {
+    let mut acc = vec![0f64; n as usize];
+    for _ in 0..reps {
+        let o = run_overwrite(n, k, rng);
+        for (a, w) in acc.iter_mut().zip(o.cumulative_writes) {
+            *a += w as f64;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= reps as f64;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{algorithm_b_expected_writes, expected_writes};
+    use crate::util::math::EULER_MASCHERONI;
+
+    #[test]
+    fn always_saves_best_eq8() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let o = run_overwrite(200, 1, &mut rng);
+            assert!(o.saved_best, "P(saving best) must be 1 (paper eq. 8)");
+        }
+    }
+
+    #[test]
+    fn k1_writes_match_harmonic_eq6_eq7() {
+        let mut rng = Rng::new(42);
+        let n = 1000u64;
+        let mean = mean_writes(n, 1, 2000, &mut rng);
+        let exact = algorithm_b_expected_writes(n);
+        assert!((mean - exact).abs() < 0.15, "mean={mean} H_N={exact}");
+        // and eq. (7)'s approximation ln N + 0.57722
+        let approx = (n as f64).ln() + EULER_MASCHERONI;
+        assert!((mean - approx).abs() < 0.2);
+    }
+
+    #[test]
+    fn k_gt_1_matches_record_process() {
+        let mut rng = Rng::new(21);
+        let (n, k) = (800u64, 10usize);
+        let mean = mean_writes(n, k, 800, &mut rng);
+        let exact = expected_writes(n, k as u64);
+        assert!(
+            (mean - exact).abs() / exact < 0.03,
+            "mean={mean} analytic={exact}"
+        );
+    }
+
+    #[test]
+    fn cumulative_curve_tracks_eq11_eq12() {
+        let mut rng = Rng::new(77);
+        let (n, k) = (2000u64, 100usize);
+        let curve = mean_cumulative_writes(n, k, 300, &mut rng);
+        // first K documents are always written (paper Fig. 8 note)
+        assert!((curve[k - 1] - k as f64).abs() < 1e-9);
+        for &i in &[150u64, 500, 1000, 1999] {
+            let analytic = expected_writes(i + 1, k as u64);
+            let got = curve[i as usize];
+            assert!(
+                (got - analytic).abs() / analytic < 0.03,
+                "i={i}: mc={got} analytic={analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn cumulative_is_monotone_and_bounded() {
+        let mut rng = Rng::new(8);
+        let o = run_overwrite(500, 7, &mut rng);
+        for w in o.cumulative_writes.windows(2) {
+            assert!(w[1] >= w[0] && w[1] - w[0] <= 1);
+        }
+        assert_eq!(o.retained.len(), 7);
+        assert_eq!(*o.cumulative_writes.last().unwrap(), o.writes);
+    }
+
+    #[test]
+    fn deterministic_stream_fixed_outcome() {
+        // strictly increasing scores: every doc is a record → N writes
+        let scores: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let o = run_overwrite_scores(&scores, 1);
+        assert_eq!(o.writes, 100);
+        // strictly decreasing: only the first doc is written
+        let scores: Vec<f64> = (0..100).map(|i| -(i as f64)).collect();
+        let o = run_overwrite_scores(&scores, 1);
+        assert_eq!(o.writes, 1);
+    }
+}

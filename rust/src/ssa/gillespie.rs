@@ -1,0 +1,237 @@
+//! Gillespie's Stochastic Simulation Algorithm (direct method) with
+//! uniform-grid trajectory sampling.
+
+use super::network::Network;
+use crate::util::Rng;
+
+/// A sampled trajectory: one row per grid point, one column per species.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    /// Sample times (uniform grid over [0, t_end]).
+    pub times: Vec<f64>,
+    /// `counts[t][s]` = copy number of species `s` at grid point `t`.
+    pub counts: Vec<Vec<u64>>,
+    /// Total reaction firings during the run.
+    pub firings: u64,
+}
+
+impl Trajectory {
+    /// Extract one species' series as f32 (the pipeline's document payload).
+    pub fn species_f32(&self, s: usize) -> Vec<f32> {
+        self.counts.iter().map(|row| row[s] as f32).collect()
+    }
+
+    pub fn species_f64(&self, s: usize) -> Vec<f64> {
+        self.counts.iter().map(|row| row[s] as f64).collect()
+    }
+}
+
+/// Simulate `net` from its initial state to `t_end`, sampling `n_points`
+/// uniformly spaced states (including t=0 and t=t_end).
+///
+/// `max_firings` bounds runaway propensities (returns early, trajectory
+/// padded with the final state) so adversarial parameter points cannot hang
+/// a sweep worker.
+pub fn simulate(
+    net: &Network,
+    t_end: f64,
+    n_points: usize,
+    max_firings: u64,
+    rng: &mut Rng,
+) -> Trajectory {
+    assert!(t_end > 0.0 && n_points >= 2);
+    let dt = t_end / (n_points - 1) as f64;
+    let mut x = net.initial.clone();
+    let mut props = vec![0.0; net.reactions.len()];
+    let mut t = 0.0;
+    let mut firings = 0u64;
+
+    // The event loop dominates a pipeline run (§Perf), so reactions are
+    // precompiled into a flat op table: no enum-field indirection, and Hill
+    // factors (powf — by far the most expensive op) are memoized on the
+    // regulator's copy number, which only changes on some firings.
+    enum Op {
+        /// k · x[s]  (first-order mass action)
+        Linear { k: f64, s: usize },
+        /// k · C(x[s], 2)
+        Pair { k: f64, s: usize },
+        /// constant-rate (zeroth order) or general mass action fallback
+        General(usize),
+        /// Hill with memoized factor
+        Hill { reg: usize },
+    }
+    let ops: Vec<Op> = net
+        .reactions
+        .iter()
+        .enumerate()
+        .map(|(i, r)| match &r.rate {
+            crate::ssa::network::RateLaw::Hill { regulator, .. } => Op::Hill { reg: *regulator },
+            crate::ssa::network::RateLaw::MassAction { k, reactants } => match reactants.as_slice()
+            {
+                [(s, 1)] => Op::Linear { k: *k, s: *s },
+                [(s, 2)] => Op::Pair { k: *k, s: *s },
+                _ => Op::General(i),
+            },
+        })
+        .collect();
+    let mut hill_cache: Vec<(u64, f64)> = vec![(u64::MAX, 0.0); net.reactions.len()];
+    let mut compute_props = |x: &[u64], props: &mut [f64], cache: &mut [(u64, f64)]| {
+        let mut total = 0.0;
+        for (i, op) in ops.iter().enumerate() {
+            let a = match op {
+                Op::Linear { k, s } => k * x[*s] as f64,
+                Op::Pair { k, s } => {
+                    let c = x[*s] as f64;
+                    k * c * (c - 1.0) * 0.5
+                }
+                Op::General(ri) => net.propensity(&net.reactions[*ri], x),
+                Op::Hill { reg } => {
+                    let c = x[*reg];
+                    if cache[i].0 == c {
+                        cache[i].1
+                    } else {
+                        let v = net.propensity(&net.reactions[i], x);
+                        cache[i] = (c, v);
+                        v
+                    }
+                }
+            };
+            props[i] = a;
+            total += a;
+        }
+        total
+    };
+
+    let mut times = Vec::with_capacity(n_points);
+    let mut counts = Vec::with_capacity(n_points);
+    let mut next_sample = 0usize;
+
+    loop {
+        let total = compute_props(&x, &mut props, &mut hill_cache);
+        // time of next event (infinite if the system is dead)
+        let tau = if total > 0.0 {
+            rng.exponential(total)
+        } else {
+            f64::INFINITY
+        };
+        let t_next = t + tau;
+
+        // emit all grid points passed before the next event
+        while next_sample < n_points && (next_sample as f64) * dt <= t_next.min(t_end) {
+            times.push(next_sample as f64 * dt);
+            counts.push(x.clone());
+            next_sample += 1;
+        }
+        if next_sample >= n_points {
+            break;
+        }
+        if !t_next.is_finite() || t_next > t_end || firings >= max_firings {
+            // pad the remaining grid with the frozen state
+            while next_sample < n_points {
+                times.push(next_sample as f64 * dt);
+                counts.push(x.clone());
+                next_sample += 1;
+            }
+            break;
+        }
+        // pick the firing reaction ∝ propensity
+        let mut u = rng.next_f64() * total;
+        let mut chosen = props.len() - 1;
+        for (i, &a) in props.iter().enumerate() {
+            if u < a {
+                chosen = i;
+                break;
+            }
+            u -= a;
+        }
+        net.apply(&net.reactions[chosen], &mut x);
+        t = t_next;
+        firings += 1;
+    }
+
+    Trajectory { times, counts, firings }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::network::{Network, RateLaw, Reaction};
+    use super::*;
+
+    fn birth_death(k_birth: f64, k_death: f64, x0: u64) -> Network {
+        Network {
+            name: "bd".into(),
+            species: vec!["X".into()],
+            reactions: vec![
+                Reaction {
+                    name: "birth".into(),
+                    rate: RateLaw::MassAction { k: k_birth, reactants: vec![] },
+                    stoich: vec![(0, 1)],
+                },
+                Reaction {
+                    name: "death".into(),
+                    rate: RateLaw::MassAction { k: k_death, reactants: vec![(0, 1)] },
+                    stoich: vec![(0, -1)],
+                },
+            ],
+            initial: vec![x0],
+        }
+    }
+
+    #[test]
+    fn trajectory_shape() {
+        let net = birth_death(10.0, 0.1, 0);
+        let mut rng = Rng::new(1);
+        let tr = simulate(&net, 50.0, 128, 1_000_000, &mut rng);
+        assert_eq!(tr.times.len(), 128);
+        assert_eq!(tr.counts.len(), 128);
+        assert_eq!(tr.times[0], 0.0);
+        assert!((tr.times[127] - 50.0).abs() < 1e-9);
+        assert!(tr.firings > 0);
+    }
+
+    #[test]
+    fn stationary_mean_matches_birth_death_theory() {
+        // birth-death stationary mean = k_birth / k_death = 100
+        let net = birth_death(10.0, 0.1, 100);
+        let mut rng = Rng::new(42);
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for _ in 0..20 {
+            let tr = simulate(&net, 100.0, 200, 10_000_000, &mut rng);
+            // discard burn-in half
+            for row in &tr.counts[100..] {
+                acc += row[0] as f64;
+                n += 1;
+            }
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 100.0).abs() < 5.0, "mean {mean}");
+    }
+
+    #[test]
+    fn dead_system_freezes() {
+        let net = birth_death(0.0, 1.0, 3);
+        let mut rng = Rng::new(9);
+        let tr = simulate(&net, 10.0, 16, 1000, &mut rng);
+        assert_eq!(tr.counts.last().unwrap()[0], 0);
+        assert_eq!(tr.times.len(), 16);
+    }
+
+    #[test]
+    fn max_firings_bounds_work() {
+        let net = birth_death(1e6, 0.0, 0); // explosive
+        let mut rng = Rng::new(5);
+        let tr = simulate(&net, 1000.0, 8, 500, &mut rng);
+        assert!(tr.firings <= 500);
+        assert_eq!(tr.times.len(), 8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let net = birth_death(5.0, 0.2, 10);
+        let a = simulate(&net, 20.0, 64, 100_000, &mut Rng::new(77));
+        let b = simulate(&net, 20.0, 64, 100_000, &mut Rng::new(77));
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.firings, b.firings);
+    }
+}

@@ -1,0 +1,13 @@
+//! Stochastic simulation substrate: reaction networks, Gillespie SSA, GRN
+//! models, and the parameter-sweep driver — the producer workload that
+//! stands in for the paper's MOLNs/StochSS cluster (DESIGN.md §6).
+
+pub mod gillespie;
+pub mod models;
+pub mod network;
+pub mod sweep;
+
+pub use gillespie::{simulate, Trajectory};
+pub use models::{neg_feedback_oscillator, toggle_switch, OscillatorParams};
+pub use network::{Network, RateLaw, Reaction};
+pub use sweep::{oscillator_at, oscillator_sweep, sweep_sizing, SweepDim, SweepGrid, SweepSizing};

@@ -1,0 +1,249 @@
+//! Stochastic reaction-network definition.
+//!
+//! A small but real chemical-kinetics substrate: species with integer
+//! counts, reactions with mass-action or Hill-regulated propensities.
+//! This stands in for the paper's PyURDME/StochSS gene-regulatory-network
+//! simulators (DESIGN.md §6) — the pipeline only needs document streams
+//! whose contents are realistic time series.
+
+/// How a reaction's propensity is computed from the current state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RateLaw {
+    /// Mass action: `k · Π count(s)^order` (with falling factorials for
+    /// order-2 homodimerization handled as count·(count−1)).
+    MassAction {
+        k: f64,
+        /// (species, stoichiometric order); order ∈ {1, 2}.
+        reactants: Vec<(usize, u32)>,
+    },
+    /// Hill-regulated production: `k · x^n / (kd^n + x^n)` (activation) or
+    /// `k · kd^n / (kd^n + x^n)` (repression) where `x = count(regulator)`.
+    Hill {
+        k: f64,
+        regulator: usize,
+        kd: f64,
+        n: f64,
+        repression: bool,
+    },
+}
+
+/// One reaction: a rate law plus integer state changes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reaction {
+    pub name: String,
+    pub rate: RateLaw,
+    /// (species, delta) applied when the reaction fires.
+    pub stoich: Vec<(usize, i64)>,
+}
+
+/// A named reaction network with an initial state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub species: Vec<String>,
+    pub reactions: Vec<Reaction>,
+    pub initial: Vec<u64>,
+}
+
+impl Network {
+    pub fn n_species(&self) -> usize {
+        self.species.len()
+    }
+
+    /// Propensity of reaction `r` in state `x`.
+    pub fn propensity(&self, r: &Reaction, x: &[u64]) -> f64 {
+        match &r.rate {
+            RateLaw::MassAction { k, reactants } => {
+                let mut a = *k;
+                for &(s, order) in reactants {
+                    let c = x[s] as f64;
+                    a *= match order {
+                        0 => 1.0,
+                        1 => c,
+                        2 => c * (c - 1.0) / 2.0,
+                        o => c.powi(o as i32), // higher orders: approximation
+                    };
+                }
+                a.max(0.0)
+            }
+            RateLaw::Hill { k, regulator, kd, n, repression } => {
+                let c = x[*regulator] as f64;
+                let cn = c.powf(*n);
+                let kdn = kd.powf(*n);
+                let f = if *repression {
+                    kdn / (kdn + cn)
+                } else {
+                    cn / (kdn + cn)
+                };
+                (k * f).max(0.0)
+            }
+        }
+    }
+
+    /// All propensities in state `x` (allocation-free via `out`).
+    pub fn propensities_into(&self, x: &[u64], out: &mut [f64]) -> f64 {
+        debug_assert_eq!(out.len(), self.reactions.len());
+        let mut total = 0.0;
+        for (i, r) in self.reactions.iter().enumerate() {
+            let a = self.propensity(r, x);
+            out[i] = a;
+            total += a;
+        }
+        total
+    }
+
+    /// Apply reaction `r`'s stoichiometry to `x` (saturating at 0).
+    pub fn apply(&self, r: &Reaction, x: &mut [u64]) {
+        for &(s, d) in &r.stoich {
+            if d >= 0 {
+                x[s] = x[s].saturating_add(d as u64);
+            } else {
+                x[s] = x[s].saturating_sub((-d) as u64);
+            }
+        }
+    }
+
+    /// Sanity checks used by property tests: stoichiometry indexes valid
+    /// species, initial state has the right arity.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.initial.len() != self.species.len() {
+            return Err(format!(
+                "initial state arity {} != species count {}",
+                self.initial.len(),
+                self.species.len()
+            ));
+        }
+        for r in &self.reactions {
+            for &(s, _) in &r.stoich {
+                if s >= self.species.len() {
+                    return Err(format!("reaction '{}' touches unknown species {s}", r.name));
+                }
+            }
+            match &r.rate {
+                RateLaw::MassAction { k, reactants } => {
+                    if *k < 0.0 {
+                        return Err(format!("reaction '{}' has negative rate", r.name));
+                    }
+                    for &(s, _) in reactants {
+                        if s >= self.species.len() {
+                            return Err(format!(
+                                "reaction '{}' rate reads unknown species {s}",
+                                r.name
+                            ));
+                        }
+                    }
+                }
+                RateLaw::Hill { k, regulator, kd, n, .. } => {
+                    if *k < 0.0 || *kd <= 0.0 || *n <= 0.0 {
+                        return Err(format!("reaction '{}' has invalid Hill params", r.name));
+                    }
+                    if *regulator >= self.species.len() {
+                        return Err(format!(
+                            "reaction '{}' regulator {} unknown",
+                            r.name, regulator
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_net() -> Network {
+        Network {
+            name: "birth-death".into(),
+            species: vec!["X".into()],
+            reactions: vec![
+                Reaction {
+                    name: "birth".into(),
+                    rate: RateLaw::MassAction { k: 5.0, reactants: vec![] },
+                    stoich: vec![(0, 1)],
+                },
+                Reaction {
+                    name: "death".into(),
+                    rate: RateLaw::MassAction { k: 0.5, reactants: vec![(0, 1)] },
+                    stoich: vec![(0, -1)],
+                },
+            ],
+            initial: vec![0],
+        }
+    }
+
+    #[test]
+    fn mass_action_propensities() {
+        let net = simple_net();
+        let x = [10u64];
+        assert_eq!(net.propensity(&net.reactions[0], &x), 5.0);
+        assert_eq!(net.propensity(&net.reactions[1], &x), 0.5 * 10.0);
+    }
+
+    #[test]
+    fn dimerization_uses_falling_factorial() {
+        let r = Reaction {
+            name: "dim".into(),
+            rate: RateLaw::MassAction { k: 1.0, reactants: vec![(0, 2)] },
+            stoich: vec![(0, -2)],
+        };
+        let net = Network {
+            name: "d".into(),
+            species: vec!["X".into()],
+            reactions: vec![r],
+            initial: vec![4],
+        };
+        // C(4,2) = 6
+        assert_eq!(net.propensity(&net.reactions[0], &[4]), 6.0);
+        assert_eq!(net.propensity(&net.reactions[0], &[1]), 0.0);
+    }
+
+    #[test]
+    fn hill_activation_and_repression() {
+        let act = Reaction {
+            name: "act".into(),
+            rate: RateLaw::Hill { k: 10.0, regulator: 0, kd: 5.0, n: 2.0, repression: false },
+            stoich: vec![],
+        };
+        let rep = Reaction {
+            name: "rep".into(),
+            rate: RateLaw::Hill { k: 10.0, regulator: 0, kd: 5.0, n: 2.0, repression: true },
+            stoich: vec![],
+        };
+        let net = Network {
+            name: "h".into(),
+            species: vec!["X".into()],
+            reactions: vec![act, rep],
+            initial: vec![0],
+        };
+        // at x = kd the Hill function is 1/2 either way
+        let a = net.propensity(&net.reactions[0], &[5]);
+        let r = net.propensity(&net.reactions[1], &[5]);
+        assert!((a - 5.0).abs() < 1e-12);
+        assert!((r - 5.0).abs() < 1e-12);
+        // activation increases with x; repression decreases
+        assert!(net.propensity(&net.reactions[0], &[50]) > a);
+        assert!(net.propensity(&net.reactions[1], &[50]) < r);
+    }
+
+    #[test]
+    fn apply_saturates_at_zero() {
+        let net = simple_net();
+        let mut x = [0u64];
+        net.apply(&net.reactions[1], &mut x);
+        assert_eq!(x[0], 0);
+        net.apply(&net.reactions[0], &mut x);
+        assert_eq!(x[0], 1);
+    }
+
+    #[test]
+    fn validate_catches_bad_indices() {
+        let mut net = simple_net();
+        net.reactions[0].stoich = vec![(3, 1)];
+        assert!(net.validate().is_err());
+        let net2 = simple_net();
+        assert!(net2.validate().is_ok());
+    }
+}

@@ -1,0 +1,163 @@
+//! Parameter-sweep driver: Cartesian grids over oscillator parameters and
+//! the paper's §VIII sweep-sizing arithmetic (`N = M^d`, 14.8 TB claim).
+
+use super::models::{neg_feedback_oscillator, OscillatorParams};
+use super::network::Network;
+
+/// One swept dimension: a parameter name and its grid values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepDim {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+/// A Cartesian parameter grid with repeated stochastic samples per point
+/// (the paper's "10 independent samples of the process").
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub dims: Vec<SweepDim>,
+    pub samples_per_point: u64,
+}
+
+impl SweepGrid {
+    /// Number of grid points `M^d` (heterogeneous M supported).
+    pub fn points(&self) -> u64 {
+        self.dims.iter().map(|d| d.values.len() as u64).product()
+    }
+
+    /// Total documents = points × samples (paper §VIII: N = M^d × reps).
+    pub fn total_documents(&self) -> u64 {
+        self.points() * self.samples_per_point
+    }
+
+    /// Parameter vector of grid point `idx` (row-major over dims).
+    pub fn point(&self, idx: u64) -> Vec<f64> {
+        let mut rem = idx;
+        let mut out = Vec::with_capacity(self.dims.len());
+        for d in self.dims.iter().rev() {
+            let m = d.values.len() as u64;
+            out.push(d.values[(rem % m) as usize]);
+            rem /= m;
+        }
+        out.reverse();
+        out
+    }
+
+    /// Iterate all (point index, parameter vector) pairs.
+    pub fn iter_points(&self) -> impl Iterator<Item = (u64, Vec<f64>)> + '_ {
+        (0..self.points()).map(move |i| (i, self.point(i)))
+    }
+}
+
+/// The oscillator sweep used by the end-to-end example: a `d`-dimensional
+/// grid over (alpha, beta, gamma, kd, hill_n), spanning the
+/// oscillatory/quiescent boundary so the stream mixes both classes.
+pub fn oscillator_sweep(values_per_dim: usize, samples_per_point: u64) -> SweepGrid {
+    fn linspace(lo: f64, hi: f64, m: usize) -> Vec<f64> {
+        if m == 1 {
+            return vec![(lo + hi) / 2.0];
+        }
+        (0..m)
+            .map(|i| lo + (hi - lo) * i as f64 / (m - 1) as f64)
+            .collect()
+    }
+    SweepGrid {
+        dims: vec![
+            SweepDim { name: "alpha".into(), values: linspace(150.0, 450.0, values_per_dim) },
+            SweepDim { name: "beta".into(), values: linspace(0.3, 1.0, values_per_dim) },
+            SweepDim { name: "gamma".into(), values: linspace(0.4, 1.0, values_per_dim) },
+            SweepDim { name: "kd".into(), values: linspace(80.0, 400.0, values_per_dim) },
+            SweepDim { name: "hill_n".into(), values: linspace(1.0, 10.0, values_per_dim) },
+        ],
+        samples_per_point,
+    }
+}
+
+/// Instantiate the oscillator network at a sweep point produced by
+/// [`oscillator_sweep`] (parameter order must match its dims).
+pub fn oscillator_at(point: &[f64]) -> Network {
+    assert_eq!(point.len(), 5, "oscillator sweep has 5 dims");
+    neg_feedback_oscillator(OscillatorParams {
+        alpha: point[0],
+        beta: point[1],
+        gamma: point[2],
+        kd: point[3],
+        hill_n: point[4],
+    })
+}
+
+/// The paper's §VIII sizing claim: d=15 dims, M=3 values, 10 samples
+/// → 143×10⁶ documents; at ~0.1 MB each → 14.8 TB.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepSizing {
+    pub points: u64,
+    pub documents: u64,
+    pub total_tb: f64,
+}
+
+pub fn sweep_sizing(m: u64, d: u32, samples: u64, doc_mb: f64) -> SweepSizing {
+    let points = m.pow(d);
+    let documents = points * samples;
+    let total_tb = documents as f64 * doc_mb / 1e6;
+    SweepSizing { points, documents, total_tb }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_point_enumeration_is_cartesian() {
+        let g = SweepGrid {
+            dims: vec![
+                SweepDim { name: "a".into(), values: vec![1.0, 2.0] },
+                SweepDim { name: "b".into(), values: vec![10.0, 20.0, 30.0] },
+            ],
+            samples_per_point: 1,
+        };
+        assert_eq!(g.points(), 6);
+        let pts: Vec<Vec<f64>> = g.iter_points().map(|(_, p)| p).collect();
+        assert_eq!(pts[0], vec![1.0, 10.0]);
+        assert_eq!(pts[1], vec![1.0, 20.0]);
+        assert_eq!(pts[3], vec![2.0, 10.0]);
+        assert_eq!(pts[5], vec![2.0, 30.0]);
+        // all unique
+        for i in 0..pts.len() {
+            for j in i + 1..pts.len() {
+                assert_ne!(pts[i], pts[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_viii_sizing_reproduced() {
+        // M=3, d=15, 10 samples, ~0.1 MB docs → ≈143e6 docs, ≈14.8 TB
+        let s = sweep_sizing(3, 15, 10, 0.1035);
+        assert_eq!(s.points, 14_348_907);
+        assert_eq!(s.documents, 143_489_070);
+        assert!(
+            (s.total_tb - 14.8).abs() < 0.1,
+            "total {} TB vs paper 14.8 TB",
+            s.total_tb
+        );
+    }
+
+    #[test]
+    fn oscillator_sweep_instantiates_networks() {
+        let g = oscillator_sweep(2, 3);
+        assert_eq!(g.points(), 32);
+        assert_eq!(g.total_documents(), 96);
+        for (_, p) in g.iter_points().take(4) {
+            let net = oscillator_at(&p);
+            assert!(net.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn single_value_dims_use_midpoint() {
+        let g = oscillator_sweep(1, 1);
+        assert_eq!(g.points(), 1);
+        let p = g.point(0);
+        assert!((p[0] - 300.0).abs() < 1e-12); // mid of 150..450
+    }
+}

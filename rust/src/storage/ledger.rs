@@ -1,0 +1,183 @@
+//! Exact cost accounting for the storage simulator.
+//!
+//! Every operation (write, read, delete, migration hop) and every
+//! doc-window-fraction of rent is charged to the originating tier, so a
+//! trace-driven run can be reconciled line-by-line against the analytic
+//! expectations of [`crate::cost::analytic`].
+
+use super::tier::TierId;
+use std::collections::BTreeMap;
+
+/// Per-tier accumulated charges.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierCharges {
+    pub writes: u64,
+    pub write_cost: f64,
+    pub reads: u64,
+    pub read_cost: f64,
+    pub deletes: u64,
+    /// Accumulated resident doc-time, in units of (documents × window).
+    pub rent_doc_windows: f64,
+    pub rent_cost: f64,
+    /// Writes/reads that were part of a bulk migration (also counted in
+    /// `writes`/`reads`; tracked separately for reporting).
+    pub migration_ops: u64,
+    pub migration_cost: f64,
+}
+
+/// The run-wide ledger.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    tiers: BTreeMap<TierId, TierCharges>,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn tier_mut(&mut self, t: TierId) -> &mut TierCharges {
+        self.tiers.entry(t).or_default()
+    }
+
+    pub fn charge_write(&mut self, t: TierId, cost: f64) {
+        let c = self.tier_mut(t);
+        c.writes += 1;
+        c.write_cost += cost;
+    }
+
+    pub fn charge_read(&mut self, t: TierId, cost: f64) {
+        let c = self.tier_mut(t);
+        c.reads += 1;
+        c.read_cost += cost;
+    }
+
+    pub fn charge_delete(&mut self, t: TierId) {
+        self.tier_mut(t).deletes += 1;
+    }
+
+    /// Charge rent for one document resident on `t` for `window_frac` of
+    /// the stream window, at `rent_window` $ per full window.
+    pub fn charge_rent(&mut self, t: TierId, window_frac: f64, rent_window: f64) {
+        debug_assert!((0.0..=1.0 + 1e-9).contains(&window_frac), "frac={window_frac}");
+        let c = self.tier_mut(t);
+        c.rent_doc_windows += window_frac;
+        c.rent_cost += window_frac * rent_window;
+    }
+
+    /// Record that the *last* write/read on `t` was a migration hop of the
+    /// given cost (the op itself must already have been charged).
+    pub fn tag_migration(&mut self, t: TierId, cost: f64) {
+        let c = self.tier_mut(t);
+        c.migration_ops += 1;
+        c.migration_cost += cost;
+    }
+
+    pub fn tier(&self, t: TierId) -> TierCharges {
+        self.tiers.get(&t).copied().unwrap_or_default()
+    }
+
+    pub fn tiers(&self) -> impl Iterator<Item = (&TierId, &TierCharges)> {
+        self.tiers.iter()
+    }
+
+    /// Total $ across all tiers and charge classes.
+    pub fn total(&self) -> f64 {
+        self.tiers
+            .values()
+            .map(|c| c.write_cost + c.read_cost + c.rent_cost)
+            .sum()
+    }
+
+    /// Total writes across tiers (migration hops included).
+    pub fn total_writes(&self) -> u64 {
+        self.tiers.values().map(|c| c.writes).sum()
+    }
+
+    pub fn total_reads(&self) -> u64 {
+        self.tiers.values().map(|c| c.reads).sum()
+    }
+
+    /// Total $ of migration hops (subset of write+read cost).
+    pub fn migration_total(&self) -> f64 {
+        self.tiers.values().map(|c| c.migration_cost).sum()
+    }
+
+    /// Writes net of migration hops — comparable to the analytic
+    /// record-process write count.
+    pub fn organic_writes(&self) -> u64 {
+        let migration_writes: u64 = self
+            .tiers
+            .values()
+            .map(|c| c.migration_ops) // each hop = 1 read + 1 write; ops tagged on dst write and src read
+            .sum();
+        self.total_writes().saturating_sub(migration_writes / 2)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for (t, c) in &self.tiers {
+            parts.push(format!(
+                "{}: w={} (${:.4}) r={} (${:.4}) rent=${:.4}",
+                t.label(),
+                c.writes,
+                c.write_cost,
+                c.reads,
+                c.read_cost,
+                c.rent_cost
+            ));
+        }
+        format!("{} | total=${:.4}", parts.join("  "), self.total())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let mut l = Ledger::new();
+        l.charge_write(TierId::A, 2.0);
+        l.charge_write(TierId::A, 2.0);
+        l.charge_read(TierId::B, 5.0);
+        l.charge_rent(TierId::B, 0.5, 4.0);
+        assert_eq!(l.tier(TierId::A).writes, 2);
+        assert_eq!(l.tier(TierId::A).write_cost, 4.0);
+        assert_eq!(l.tier(TierId::B).reads, 1);
+        assert_eq!(l.tier(TierId::B).rent_cost, 2.0);
+        assert_eq!(l.total(), 4.0 + 5.0 + 2.0);
+        assert_eq!(l.total_writes(), 2);
+        assert_eq!(l.total_reads(), 1);
+    }
+
+    #[test]
+    fn unknown_tier_reads_zero() {
+        let l = Ledger::new();
+        assert_eq!(l.tier(TierId(9)), TierCharges::default());
+        assert_eq!(l.total(), 0.0);
+    }
+
+    #[test]
+    fn migration_tagging() {
+        let mut l = Ledger::new();
+        // one hop: read from A + write to B
+        l.charge_read(TierId::A, 1.0);
+        l.tag_migration(TierId::A, 1.0);
+        l.charge_write(TierId::B, 3.0);
+        l.tag_migration(TierId::B, 3.0);
+        assert_eq!(l.migration_total(), 4.0);
+        assert_eq!(l.total_writes(), 1);
+        assert_eq!(l.organic_writes(), 0);
+    }
+
+    #[test]
+    fn summary_contains_totals() {
+        let mut l = Ledger::new();
+        l.charge_write(TierId::A, 1.5);
+        let s = l.summary();
+        assert!(s.contains("A:"), "{s}");
+        assert!(s.contains("total=$1.5"), "{s}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Simulated tiered object storage with exact cost accounting — the
+//! substrate for trace-driven validation of the analytic model (paper §VIII)
+//! and for the streaming pipeline's placement decisions.
+
+pub mod ledger;
+pub mod sim;
+pub mod tier;
+
+pub use ledger::{Ledger, TierCharges};
+pub use sim::StorageSim;
+pub use tier::{Resident, TierId, TierState};

@@ -1,0 +1,277 @@
+//! The two-(or more-)tier storage simulator.
+//!
+//! `StorageSim` executes put/read/delete/migrate operations against
+//! [`TierState`]s, charging every operation and every doc-window of rent to
+//! the [`Ledger`]. Stream position is mapped linearly onto the stream
+//! window: document `i` of `N` happens at window fraction `i/N`.
+
+use super::ledger::Ledger;
+use super::tier::{TierId, TierState};
+use crate::cost::PerDocCosts;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct StorageSim {
+    tiers: Vec<TierState>,
+    ledger: Ledger,
+    /// Whether rent is charged (mirrors `CostModel::include_rent`).
+    charge_rent: bool,
+}
+
+impl StorageSim {
+    /// Standard two-tier setup from effective per-doc costs.
+    pub fn two_tier(a: PerDocCosts, b: PerDocCosts, charge_rent: bool) -> Self {
+        Self {
+            tiers: vec![TierState::new(TierId::A, a), TierState::new(TierId::B, b)],
+            ledger: Ledger::new(),
+            charge_rent,
+        }
+    }
+
+    /// Arbitrary tier list (multi-tier extension).
+    pub fn with_tiers(costs: Vec<PerDocCosts>, charge_rent: bool) -> Self {
+        Self {
+            tiers: costs
+                .into_iter()
+                .enumerate()
+                .map(|(i, c)| TierState::new(TierId(i), c))
+                .collect(),
+            ledger: Ledger::new(),
+            charge_rent,
+        }
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn tier(&self, t: TierId) -> &TierState {
+        &self.tiers[t.0]
+    }
+
+    fn tier_mut(&mut self, t: TierId) -> &mut TierState {
+        &mut self.tiers[t.0]
+    }
+
+    pub fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
+    /// Locate a document (linear in tier count — tiers are few).
+    pub fn locate(&self, doc: u64) -> Option<TierId> {
+        self.tiers.iter().find(|t| t.contains(doc)).map(|t| t.id)
+    }
+
+    /// Write a document into `tier` at window fraction `at`.
+    pub fn put(&mut self, doc: u64, tier: TierId, at: f64) -> Result<()> {
+        if tier.0 >= self.tiers.len() {
+            bail!("unknown tier {tier:?}");
+        }
+        if let Some(existing) = self.locate(doc) {
+            bail!("doc {doc} already resident in tier {existing:?}");
+        }
+        let cost = self.tiers[tier.0].costs.write;
+        self.tier_mut(tier).insert(doc, at);
+        self.ledger.charge_write(tier, cost);
+        Ok(())
+    }
+
+    /// Delete (prune) a document at window fraction `at`, settling its rent.
+    pub fn delete(&mut self, doc: u64, at: f64) -> Result<TierId> {
+        let tier = match self.locate(doc) {
+            Some(t) => t,
+            None => bail!("delete: doc {doc} not resident"),
+        };
+        let resident = self.tier_mut(tier).remove(doc).unwrap();
+        if self.charge_rent {
+            let frac = (at - resident.written_at).max(0.0);
+            let rent_window = self.tiers[tier.0].costs.rent_window;
+            self.ledger.charge_rent(tier, frac, rent_window);
+        }
+        self.ledger.charge_delete(tier);
+        Ok(tier)
+    }
+
+    /// Consumer read of a resident document (does not remove it).
+    pub fn read(&mut self, doc: u64) -> Result<TierId> {
+        let tier = match self.locate(doc) {
+            Some(t) => t,
+            None => bail!("read: doc {doc} not resident"),
+        };
+        let cost = self.tiers[tier.0].costs.read;
+        self.ledger.charge_read(tier, cost);
+        Ok(tier)
+    }
+
+    /// Move one document `from → to` at window fraction `at`: settles rent
+    /// on the source, charges a source read + destination write, tags both
+    /// as migration ops.
+    pub fn migrate_doc(&mut self, doc: u64, to: TierId, at: f64) -> Result<()> {
+        let from = match self.locate(doc) {
+            Some(t) => t,
+            None => bail!("migrate: doc {doc} not resident"),
+        };
+        if from == to {
+            return Ok(());
+        }
+        let resident = self.tier_mut(from).remove(doc).unwrap();
+        if self.charge_rent {
+            let frac = (at - resident.written_at).max(0.0);
+            let rent_window = self.tiers[from.0].costs.rent_window;
+            self.ledger.charge_rent(from, frac, rent_window);
+        }
+        let read_cost = self.tiers[from.0].costs.read;
+        self.ledger.charge_read(from, read_cost);
+        self.ledger.tag_migration(from, read_cost);
+        let write_cost = self.tiers[to.0].costs.write;
+        self.tier_mut(to).insert(doc, at);
+        self.ledger.charge_write(to, write_cost);
+        self.ledger.tag_migration(to, write_cost);
+        Ok(())
+    }
+
+    /// Bulk-migrate every resident of `from` into `to` (paper Fig. 3,
+    /// DO_MIGRATE branch at `i == r`).
+    pub fn migrate_all(&mut self, from: TierId, to: TierId, at: f64) -> Result<u64> {
+        let docs = self.tier(from).docs();
+        let n = docs.len() as u64;
+        for doc in docs {
+            self.migrate_doc(doc, to, at)?;
+        }
+        Ok(n)
+    }
+
+    /// End of stream: settle rent for everything still resident (they
+    /// occupied their tier until window fraction 1.0).
+    pub fn settle_rent(&mut self, at: f64) {
+        if !self.charge_rent {
+            return;
+        }
+        for t in 0..self.tiers.len() {
+            let tier = TierId(t);
+            let rent_window = self.tiers[t].costs.rent_window;
+            for doc in self.tiers[t].docs() {
+                let resident = *self.tiers[t].get(doc).unwrap();
+                let frac = (at - resident.written_at).max(0.0);
+                self.ledger.charge_rent(tier, frac, rent_window);
+                // reset the clock so double-settling is impossible
+                self.tier_mut(tier).remove(doc);
+                self.tier_mut(tier).insert(doc, at);
+            }
+        }
+    }
+
+    /// Total resident documents across tiers.
+    pub fn resident_count(&self) -> usize {
+        self.tiers.iter().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> StorageSim {
+        StorageSim::two_tier(
+            PerDocCosts { write: 1.0, read: 10.0, rent_window: 100.0 },
+            PerDocCosts { write: 2.0, read: 20.0, rent_window: 200.0 },
+            true,
+        )
+    }
+
+    #[test]
+    fn put_read_delete_charges() {
+        let mut s = sim();
+        s.put(1, TierId::A, 0.0).unwrap();
+        s.read(1).unwrap();
+        s.delete(1, 0.5).unwrap();
+        let a = s.ledger().tier(TierId::A);
+        assert_eq!(a.writes, 1);
+        assert_eq!(a.write_cost, 1.0);
+        assert_eq!(a.reads, 1);
+        assert_eq!(a.read_cost, 10.0);
+        assert_eq!(a.deletes, 1);
+        assert!((a.rent_cost - 50.0).abs() < 1e-12); // 0.5 window × $100
+        assert_eq!(s.resident_count(), 0);
+    }
+
+    #[test]
+    fn double_put_rejected() {
+        let mut s = sim();
+        s.put(1, TierId::A, 0.0).unwrap();
+        assert!(s.put(1, TierId::B, 0.1).is_err());
+    }
+
+    #[test]
+    fn missing_doc_operations_fail() {
+        let mut s = sim();
+        assert!(s.read(42).is_err());
+        assert!(s.delete(42, 0.0).is_err());
+        assert!(s.migrate_doc(42, TierId::B, 0.0).is_err());
+    }
+
+    #[test]
+    fn migrate_doc_settles_rent_and_tags() {
+        let mut s = sim();
+        s.put(1, TierId::A, 0.0).unwrap();
+        s.migrate_doc(1, TierId::B, 0.25).unwrap();
+        assert_eq!(s.locate(1), Some(TierId::B));
+        let a = s.ledger().tier(TierId::A);
+        assert!((a.rent_cost - 25.0).abs() < 1e-12);
+        assert_eq!(a.reads, 1); // migration read
+        let b = s.ledger().tier(TierId::B);
+        assert_eq!(b.writes, 1);
+        assert!((s.ledger().migration_total() - (10.0 + 2.0)).abs() < 1e-12);
+        // settle at end: doc in B from 0.25 → 1.0 = 0.75 × 200
+        s.settle_rent(1.0);
+        let b = s.ledger().tier(TierId::B);
+        assert!((b.rent_cost - 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migrate_all_moves_everything() {
+        let mut s = sim();
+        for d in 0..5 {
+            s.put(d, TierId::A, 0.1).unwrap();
+        }
+        let n = s.migrate_all(TierId::A, TierId::B, 0.5).unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(s.tier(TierId::A).len(), 0);
+        assert_eq!(s.tier(TierId::B).len(), 5);
+    }
+
+    #[test]
+    fn settle_rent_idempotent() {
+        let mut s = sim();
+        s.put(1, TierId::A, 0.0).unwrap();
+        s.settle_rent(1.0);
+        let rent1 = s.ledger().tier(TierId::A).rent_cost;
+        s.settle_rent(1.0);
+        let rent2 = s.ledger().tier(TierId::A).rent_cost;
+        assert!((rent1 - rent2).abs() < 1e-12, "settle must not double-charge");
+    }
+
+    #[test]
+    fn rent_disabled_charges_nothing() {
+        let mut s = StorageSim::two_tier(
+            PerDocCosts { write: 1.0, read: 1.0, rent_window: 100.0 },
+            PerDocCosts { write: 1.0, read: 1.0, rent_window: 100.0 },
+            false,
+        );
+        s.put(1, TierId::A, 0.0).unwrap();
+        s.delete(1, 1.0).unwrap();
+        assert_eq!(s.ledger().tier(TierId::A).rent_cost, 0.0);
+    }
+
+    #[test]
+    fn multi_tier_setup() {
+        let costs = vec![
+            PerDocCosts { write: 1.0, read: 1.0, rent_window: 1.0 };
+            4
+        ];
+        let mut s = StorageSim::with_tiers(costs, true);
+        assert_eq!(s.num_tiers(), 4);
+        s.put(9, TierId(3), 0.0).unwrap();
+        assert_eq!(s.locate(9), Some(TierId(3)));
+    }
+}

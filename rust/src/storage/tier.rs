@@ -1,0 +1,125 @@
+//! Tier identity and per-tier simulated state.
+
+use crate::cost::PerDocCosts;
+use std::collections::HashMap;
+
+/// Identifier of a storage tier. The paper's two-tier setup uses
+/// [`TierId::A`] and [`TierId::B`]; the simulator supports more for the
+/// multi-tier extension experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TierId(pub usize);
+
+impl TierId {
+    pub const A: TierId = TierId(0);
+    pub const B: TierId = TierId(1);
+
+    pub fn label(&self) -> String {
+        match self.0 {
+            0 => "A".into(),
+            1 => "B".into(),
+            n => format!("T{n}"),
+        }
+    }
+}
+
+/// A resident object: when it was written, as a fraction of the stream
+/// window (stream position i/N ↦ wall-clock fraction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Resident {
+    /// Document stream index.
+    pub doc: u64,
+    /// Window fraction at write time, in [0, 1].
+    pub written_at: f64,
+}
+
+/// Simulated state of one tier: its effective per-document costs and the
+/// set of resident objects.
+#[derive(Debug, Clone)]
+pub struct TierState {
+    pub id: TierId,
+    pub costs: PerDocCosts,
+    residents: HashMap<u64, Resident>,
+}
+
+impl TierState {
+    pub fn new(id: TierId, costs: PerDocCosts) -> Self {
+        Self { id, costs, residents: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.residents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.residents.is_empty()
+    }
+
+    pub fn contains(&self, doc: u64) -> bool {
+        self.residents.contains_key(&doc)
+    }
+
+    pub fn insert(&mut self, doc: u64, written_at: f64) -> Option<Resident> {
+        self.residents.insert(doc, Resident { doc, written_at })
+    }
+
+    pub fn remove(&mut self, doc: u64) -> Option<Resident> {
+        self.residents.remove(&doc)
+    }
+
+    pub fn get(&self, doc: u64) -> Option<&Resident> {
+        self.residents.get(&doc)
+    }
+
+    /// Drain all residents (used by bulk migration).
+    pub fn drain(&mut self) -> Vec<Resident> {
+        let mut v: Vec<Resident> = self.residents.drain().map(|(_, r)| r).collect();
+        v.sort_by_key(|r| r.doc);
+        v
+    }
+
+    /// Snapshot of resident doc ids (sorted, deterministic).
+    pub fn docs(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.residents.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs() -> PerDocCosts {
+        PerDocCosts { write: 1.0, read: 2.0, rent_window: 3.0 }
+    }
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut t = TierState::new(TierId::A, costs());
+        assert!(t.insert(7, 0.25).is_none());
+        assert!(t.contains(7));
+        assert_eq!(t.len(), 1);
+        let r = t.remove(7).unwrap();
+        assert_eq!(r.doc, 7);
+        assert!((r.written_at - 0.25).abs() < 1e-15);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn drain_is_sorted_and_empties() {
+        let mut t = TierState::new(TierId::B, costs());
+        for d in [5u64, 1, 9] {
+            t.insert(d, 0.0);
+        }
+        let drained = t.drain();
+        assert_eq!(drained.iter().map(|r| r.doc).collect::<Vec<_>>(), vec![1, 5, 9]);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(TierId::A.label(), "A");
+        assert_eq!(TierId::B.label(), "B");
+        assert_eq!(TierId(4).label(), "T4");
+    }
+}

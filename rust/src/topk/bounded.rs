@@ -1,0 +1,219 @@
+//! Capacity-K min-heap top-K tracker — the pipeline hot-path structure.
+
+use super::{rank_cmp, Scored};
+use std::cmp::Ordering;
+
+/// What happened when a candidate was offered to the tracker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Eviction {
+    /// Candidate rejected: it does not enter the current top-K.
+    Rejected,
+    /// Candidate accepted into spare capacity (no victim).
+    Accepted,
+    /// Candidate accepted, displacing `victim` (which leaves the top-K).
+    Replaced { victim: Scored },
+}
+
+/// Min-heap of the current top-K scored documents.
+///
+/// `offer` is O(log K); membership of the heap *is* the current top-K set.
+/// The heap root is the current K-th best (the threshold).
+#[derive(Debug, Clone)]
+pub struct BoundedTopK {
+    k: usize,
+    heap: Vec<Scored>, // min-heap by rank_cmp
+}
+
+impl BoundedTopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "K must be positive");
+        Self { k, heap: Vec::with_capacity(k) }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current K-th best (the entry threshold), if the tracker is full.
+    pub fn threshold(&self) -> Option<Scored> {
+        if self.heap.len() == self.k {
+            self.heap.first().copied()
+        } else {
+            None
+        }
+    }
+
+    /// Would this candidate enter the top-K right now?
+    pub fn would_accept(&self, candidate: Scored) -> bool {
+        self.heap.len() < self.k
+            || rank_cmp(&candidate, &self.heap[0]) == Ordering::Greater
+    }
+
+    /// Offer a candidate; returns what happened. A candidate equal to the
+    /// threshold is rejected (strict improvement required, eq. (5)).
+    pub fn offer(&mut self, candidate: Scored) -> Eviction {
+        if self.heap.len() < self.k {
+            self.push(candidate);
+            return Eviction::Accepted;
+        }
+        if rank_cmp(&candidate, &self.heap[0]) != Ordering::Greater {
+            return Eviction::Rejected;
+        }
+        let victim = self.heap[0];
+        self.heap[0] = candidate;
+        self.sift_down(0);
+        Eviction::Replaced { victim }
+    }
+
+    /// Snapshot of the current top-K, best first.
+    pub fn sorted_desc(&self) -> Vec<Scored> {
+        let mut v = self.heap.clone();
+        v.sort_by(|a, b| rank_cmp(b, a));
+        v
+    }
+
+    /// Iterate the current membership in heap order (no particular rank).
+    pub fn iter(&self) -> impl Iterator<Item = &Scored> {
+        self.heap.iter()
+    }
+
+    fn push(&mut self, s: Scored) {
+        self.heap.push(s);
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if rank_cmp(&self.heap[i], &self.heap[parent]) == Ordering::Less {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < n && rank_cmp(&self.heap[l], &self.heap[smallest]) == Ordering::Less {
+                smallest = l;
+            }
+            if r < n && rank_cmp(&self.heap[r], &self.heap[smallest]) == Ordering::Less {
+                smallest = r;
+            }
+            if smallest == i {
+                return;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+
+    /// Debug-only heap-property check (used by property tests).
+    pub fn check_invariants(&self) -> bool {
+        if self.heap.len() > self.k {
+            return false;
+        }
+        for i in 1..self.heap.len() {
+            let parent = (i - 1) / 2;
+            if rank_cmp(&self.heap[i], &self.heap[parent]) == Ordering::Less {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fills_then_replaces() {
+        let mut t = BoundedTopK::new(2);
+        assert_eq!(t.offer(Scored::new(0, 1.0)), Eviction::Accepted);
+        assert_eq!(t.offer(Scored::new(1, 2.0)), Eviction::Accepted);
+        assert_eq!(t.offer(Scored::new(2, 0.5)), Eviction::Rejected);
+        match t.offer(Scored::new(3, 3.0)) {
+            Eviction::Replaced { victim } => assert_eq!(victim.index, 0),
+            other => panic!("expected replace, got {other:?}"),
+        }
+        let top = t.sorted_desc();
+        assert_eq!(top[0].index, 3);
+        assert_eq!(top[1].index, 1);
+    }
+
+    #[test]
+    fn equal_score_does_not_displace() {
+        let mut t = BoundedTopK::new(1);
+        t.offer(Scored::new(0, 1.0));
+        assert_eq!(t.offer(Scored::new(1, 1.0)), Eviction::Rejected);
+        assert_eq!(t.sorted_desc()[0].index, 0);
+    }
+
+    #[test]
+    fn threshold_only_when_full() {
+        let mut t = BoundedTopK::new(3);
+        assert!(t.threshold().is_none());
+        for i in 0..3 {
+            t.offer(Scored::new(i, i as f64));
+        }
+        assert_eq!(t.threshold().unwrap().index, 0);
+    }
+
+    #[test]
+    fn matches_naive_on_random_streams() {
+        let mut rng = Rng::new(123);
+        for k in [1usize, 3, 17, 64] {
+            let mut t = BoundedTopK::new(k);
+            let mut all: Vec<Scored> = Vec::new();
+            for i in 0..2_000u64 {
+                let s = Scored::new(i, rng.next_f64());
+                t.offer(s);
+                all.push(s);
+                assert!(t.check_invariants());
+            }
+            all.sort_by(|a, b| rank_cmp(b, a));
+            let expect: Vec<u64> = all[..k].iter().map(|s| s.index).collect();
+            let got: Vec<u64> = t.sorted_desc().iter().map(|s| s.index).collect();
+            assert_eq!(got, expect, "k={k}");
+        }
+    }
+
+    #[test]
+    fn write_count_matches_record_process() {
+        // number of accepts+replaces over a random stream ≈ E[writes]
+        let reps = 400;
+        let (n, k) = (500u64, 5usize);
+        let mut rng = Rng::new(7);
+        let mut total_writes = 0u64;
+        for _ in 0..reps {
+            let mut t = BoundedTopK::new(k);
+            for i in 0..n {
+                match t.offer(Scored::new(i, rng.next_f64())) {
+                    Eviction::Rejected => {}
+                    _ => total_writes += 1,
+                }
+            }
+        }
+        let mean = total_writes as f64 / reps as f64;
+        let expect = crate::cost::expected_writes(n, k as u64);
+        assert!(
+            (mean - expect).abs() / expect < 0.05,
+            "mean {mean} vs analytic {expect}"
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! Full-ranking tracker: exact global ranks for every observed score.
+//!
+//! This mirrors the paper's listings (Fig. 2/3), which keep a sorted list
+//! `H` and compute `h_rank = H.indexof(h_i)`. It is O(n) memory and O(n)
+//! insert (Vec shift), which is fine for diagnostics, the classic-SHP
+//! baseline, and trace analysis; the pipeline uses [`super::BoundedTopK`].
+
+use super::{rank_cmp, Scored};
+
+#[derive(Debug, Clone, Default)]
+pub struct FullRankTracker {
+    /// Sorted descending (best first).
+    sorted: Vec<Scored>,
+}
+
+impl FullRankTracker {
+    pub fn new() -> Self {
+        Self { sorted: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { sorted: Vec::with_capacity(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Insert a score and return its 0-based rank among everything observed
+    /// so far (0 = best). Equal scores rank behind the earlier document.
+    pub fn insert(&mut self, s: Scored) -> usize {
+        let pos = self
+            .sorted
+            .partition_point(|x| rank_cmp(x, &s) == std::cmp::Ordering::Greater);
+        self.sorted.insert(pos, s);
+        pos
+    }
+
+    /// Rank the score *would* get, without inserting.
+    pub fn rank_of(&self, s: Scored) -> usize {
+        self.sorted
+            .partition_point(|x| rank_cmp(x, &s) == std::cmp::Ordering::Greater)
+    }
+
+    /// Is `s` better than every score observed so far?
+    pub fn is_record(&self, s: Scored) -> bool {
+        self.rank_of(s) == 0
+    }
+
+    /// The current top-K, best first (clamped to observed count).
+    pub fn top_k(&self, k: usize) -> &[Scored] {
+        &self.sorted[..k.min(self.sorted.len())]
+    }
+
+    /// The current best, if any.
+    pub fn best(&self) -> Option<Scored> {
+        self.sorted.first().copied()
+    }
+
+    /// Verify internal sortedness (property tests).
+    pub fn check_invariants(&self) -> bool {
+        self.sorted
+            .windows(2)
+            .all(|w| rank_cmp(&w[0], &w[1]) != std::cmp::Ordering::Less)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn ranks_are_exact() {
+        let mut t = FullRankTracker::new();
+        assert_eq!(t.insert(Scored::new(0, 5.0)), 0);
+        assert_eq!(t.insert(Scored::new(1, 7.0)), 0);
+        assert_eq!(t.insert(Scored::new(2, 6.0)), 1);
+        assert_eq!(t.insert(Scored::new(3, 1.0)), 3);
+        assert_eq!(
+            t.top_k(2).iter().map(|s| s.index).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+    }
+
+    #[test]
+    fn ties_rank_behind_earlier() {
+        let mut t = FullRankTracker::new();
+        t.insert(Scored::new(0, 1.0));
+        let r = t.insert(Scored::new(1, 1.0));
+        assert_eq!(r, 1);
+        assert!(!t.is_record(Scored::new(2, 1.0)));
+    }
+
+    #[test]
+    fn record_probability_matches_eq5() {
+        // P(i-th doc is best so far) = 1/(i+1), paper eq. (5)
+        let reps = 3000;
+        let n = 50u64;
+        let mut rng = Rng::new(99);
+        let mut record_counts = vec![0u64; n as usize];
+        for _ in 0..reps {
+            let mut t = FullRankTracker::new();
+            for i in 0..n {
+                let s = Scored::new(i, rng.next_f64());
+                if t.is_record(s) {
+                    record_counts[i as usize] += 1;
+                }
+                t.insert(s);
+            }
+        }
+        for i in [0usize, 1, 4, 9, 24, 49] {
+            let p = record_counts[i] as f64 / reps as f64;
+            let expect = 1.0 / (i as f64 + 1.0);
+            assert!(
+                (p - expect).abs() < 0.04 + 0.2 * expect,
+                "i={i}: p={p} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn agrees_with_bounded_tracker() {
+        let mut rng = Rng::new(5);
+        let k = 8;
+        let mut full = FullRankTracker::new();
+        let mut bounded = super::super::BoundedTopK::new(k);
+        for i in 0..1500u64 {
+            let s = Scored::new(i, rng.next_f64());
+            full.insert(s);
+            bounded.offer(s);
+            assert!(full.check_invariants());
+        }
+        let a: Vec<u64> = full.top_k(k).iter().map(|s| s.index).collect();
+        let b: Vec<u64> = bounded.sorted_desc().iter().map(|s| s.index).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,71 @@
+//! Online top-K tracking substrates.
+//!
+//! The paper's workflow (Fig. 2/3) needs, per document: insert its
+//! interestingness into a ranked structure, learn its rank among everything
+//! seen so far, and — if it enters the current top-K — learn which document
+//! it evicts. Two implementations are provided:
+//!
+//! - [`BoundedTopK`] — a capacity-K min-heap; O(log K) per candidate,
+//!   answers only "is this in the current top-K and whom does it evict".
+//!   This is the production hot-path structure.
+//! - [`FullRankTracker`] — keeps *all* scores in sorted order; O(log n)
+//!   search + O(n) insert, answers exact global ranks. Needed for the
+//!   classic SHP baseline (rank among the first r−1) and for diagnostics.
+//!
+//! Both are deterministic on ties: equal scores rank by earlier index first
+//! (stable), matching the simulators' accounting.
+
+mod bounded;
+mod full;
+
+pub use bounded::{BoundedTopK, Eviction};
+pub use full::FullRankTracker;
+
+/// A scored document reference flowing through the trackers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scored {
+    /// Stream index of the document (0-based).
+    pub index: u64,
+    /// Interestingness value (higher = more interesting).
+    pub score: f64,
+}
+
+impl Scored {
+    pub fn new(index: u64, score: f64) -> Self {
+        Self { index, score }
+    }
+}
+
+/// Total order: by score, ties broken toward the *earlier* index winning
+/// (an incumbent is never displaced by an equal score — the SHP "best so
+/// far" must be strictly better, c.f. eq. (5)).
+pub fn rank_cmp(a: &Scored, b: &Scored) -> std::cmp::Ordering {
+    match a.score.partial_cmp(&b.score) {
+        Some(std::cmp::Ordering::Equal) | None => b.index.cmp(&a.index),
+        Some(o) => o,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_cmp_orders_by_score_then_earlier_index() {
+        let a = Scored::new(5, 1.0);
+        let b = Scored::new(9, 2.0);
+        assert_eq!(rank_cmp(&a, &b), std::cmp::Ordering::Less);
+        // equal scores: earlier index is "greater" (wins)
+        let c = Scored::new(2, 1.0);
+        assert_eq!(rank_cmp(&c, &a), std::cmp::Ordering::Greater);
+    }
+
+    #[test]
+    fn nan_scores_do_not_poison_order() {
+        let a = Scored::new(0, f64::NAN);
+        let b = Scored::new(1, 1.0);
+        // NaN comparisons fall back to index ordering (deterministic)
+        let _ = rank_cmp(&a, &b);
+        let _ = rank_cmp(&b, &a);
+    }
+}

@@ -1,0 +1,10 @@
+//! Dependency-free utilities: deterministic RNG, numeric helpers.
+
+pub mod math;
+pub mod rng;
+
+pub use math::{
+    binary_entropy, golden_section_min, grid_min, harmonic, harmonic_diff, mean,
+    percentile_sorted, rel_err, sigmoid, std_dev, EULER_MASCHERONI,
+};
+pub use rng::{Rng, SplitMix64};

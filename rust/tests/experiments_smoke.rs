@@ -1,0 +1,31 @@
+//! Smoke: every experiment id runs end-to-end in quick mode (the CLI's
+//! `exp --id all --quick` contract), writing CSVs into a temp results dir.
+
+use shptier::exp;
+
+#[test]
+fn every_experiment_id_runs_quick() {
+    let dir = std::env::temp_dir().join(format!("shptier_results_{}", std::process::id()));
+    std::env::set_var("SHPTIER_RESULTS", &dir);
+    for id in exp::EXPERIMENT_IDS.iter().filter(|&&i| i != "all") {
+        // fig7/fig8 need artifacts or fall back to the demo scorer; both ok.
+        exp::run(id, 7, true).unwrap_or_else(|e| panic!("exp {id} failed: {e:#}"));
+    }
+    // the figure experiments must have produced CSVs
+    for csv in [
+        "fig4_cost_vs_r.csv",
+        "fig5_cost_vs_r.csv",
+        "fig6_classifier.csv",
+        "fig7_interestingness_trace.csv",
+        "fig8_cumulative_writes.csv",
+    ] {
+        assert!(dir.join(csv).exists(), "{csv} missing");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::env::remove_var("SHPTIER_RESULTS");
+}
+
+#[test]
+fn unknown_experiment_id_errors() {
+    assert!(exp::run("nonsense", 1, true).is_err());
+}

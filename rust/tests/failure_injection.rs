@@ -1,0 +1,166 @@
+//! Failure injection: the coordinator must fail loudly and cleanly, not
+//! wedge or corrupt state, when a stage misbehaves.
+
+use shptier::config::LaunchConfig;
+use shptier::cost::{CostModel, PerDocCosts};
+use shptier::pipeline::{run_pipeline, PipelineConfig, ScorerFactory};
+use shptier::policy::{Changeover, MigrationOrder, PlacementPolicy};
+use shptier::runtime::{Manifest, Scorer};
+use shptier::ssa::oscillator_sweep;
+use shptier::storage::{StorageSim, TierId};
+
+fn tiny_model(n: u64, k: u64) -> CostModel {
+    CostModel::new(
+        n,
+        k,
+        PerDocCosts { write: 1.0, read: 1.0, rent_window: 1.0 },
+        PerDocCosts { write: 1.0, read: 1.0, rent_window: 1.0 },
+    )
+}
+
+fn tiny_config(n: u64) -> PipelineConfig {
+    PipelineConfig {
+        n_docs: n,
+        t_len: 32,
+        t_end: 5.0,
+        producers: 2,
+        batch_max: 4,
+        channel_capacity: 8,
+        seed: 1,
+        record_series: false,
+        record_scores: false,
+    }
+}
+
+/// A scorer that fails after `ok_calls` batches.
+struct FlakyScorer {
+    remaining: std::cell::Cell<i64>,
+}
+
+impl Scorer for FlakyScorer {
+    fn score(&self, series: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        let left = self.remaining.get();
+        if left <= 0 {
+            anyhow::bail!("injected scorer failure");
+        }
+        self.remaining.set(left - 1);
+        Ok(series.iter().map(|_| 0.5).collect())
+    }
+
+    fn name(&self) -> String {
+        "flaky".into()
+    }
+}
+
+#[test]
+fn scorer_failure_propagates_as_error() {
+    let factory: ScorerFactory = Box::new(|| {
+        Ok(Box::new(FlakyScorer { remaining: std::cell::Cell::new(3) }) as Box<dyn Scorer>)
+    });
+    let config = tiny_config(200);
+    let grid = oscillator_sweep(2, 8);
+    let model = tiny_model(200, 5);
+    let mut policy = Changeover::new(50);
+    // The scorer dies mid-stream; the placer sees a short stream and the
+    // run either errors or completes with fewer docs — it must NOT hang.
+    let result = run_pipeline(&config, &grid, &model, &mut policy, factory);
+    match result {
+        Ok(report) => assert!(report.docs_processed < 200),
+        Err(e) => assert!(format!("{e:#}").contains("injected") || !format!("{e:#}").is_empty()),
+    }
+}
+
+#[test]
+fn scorer_factory_failure_is_clean() {
+    let factory: ScorerFactory = Box::new(|| anyhow::bail!("no scorer for you"));
+    let config = tiny_config(50);
+    let grid = oscillator_sweep(2, 2);
+    let model = tiny_model(50, 5);
+    let mut policy = Changeover::new(10);
+    let result = run_pipeline(&config, &grid, &model, &mut policy, factory);
+    match result {
+        Ok(report) => assert_eq!(report.docs_processed, 0),
+        Err(_) => {}
+    }
+}
+
+/// A policy that issues bogus migration orders (unknown doc).
+struct RoguePolicy;
+
+impl PlacementPolicy for RoguePolicy {
+    fn name(&self) -> String {
+        "rogue".into()
+    }
+
+    fn place(&mut self, _i: u64, _n: u64) -> TierId {
+        TierId::A
+    }
+
+    fn on_step(&mut self, i: u64, _n: u64, _sim: &StorageSim) -> Vec<MigrationOrder> {
+        if i == 5 {
+            vec![MigrationOrder::Doc { doc: 999_999, to: TierId::B }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn bogus_migration_order_is_an_error_not_a_panic() {
+    let scores: Vec<f64> = (0..50).map(|i| i as f64 / 50.0).collect();
+    let model = tiny_model(50, 5);
+    let mut policy = RoguePolicy;
+    let result = shptier::policy::run_policy(&scores, &model, &mut policy);
+    assert!(result.is_err());
+    let msg = format!("{:#}", result.unwrap_err());
+    assert!(msg.contains("not resident"), "{msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_rejected_with_context() {
+    let dir = std::env::temp_dir().join(format!("shptier_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json !!").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("manifest"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_manifest_fields_rejected() {
+    let dir = std::env::temp_dir().join(format!("shptier_trunc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // valid JSON, missing scorer
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "t_len": 256, "artifacts": []}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_with_conflicting_values_fails_closed() {
+    // r_frac outside [0,1]
+    assert!(LaunchConfig::from_toml("[policy]\nr_frac = -0.5\n").is_err());
+    // unknown table keys are tolerated (forward compat) but bad types fail
+    assert!(LaunchConfig::from_toml("[workload]\nn_docs = \"many\"\n").is_err());
+}
+
+#[test]
+fn zero_capacity_channel_config_still_progresses() {
+    // channel_capacity 0 is a rendezvous channel — must not deadlock
+    let factory: ScorerFactory = Box::new(|| {
+        Ok(Box::new(FlakyScorer { remaining: std::cell::Cell::new(i64::MAX) })
+            as Box<dyn Scorer>)
+    });
+    let mut config = tiny_config(30);
+    config.channel_capacity = 0;
+    config.batch_max = 1;
+    let grid = oscillator_sweep(2, 1);
+    let model = tiny_model(30, 3);
+    let mut policy = Changeover::new(10);
+    let report = run_pipeline(&config, &grid, &model, &mut policy, factory).unwrap();
+    assert_eq!(report.docs_processed, 30);
+}

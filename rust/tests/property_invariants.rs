@@ -1,0 +1,296 @@
+//! Property-based invariants across the coordinator substrates
+//! (routing/placement, batching, state management), via the in-tree
+//! `propcheck` harness (proptest is not in the vendored crate set).
+
+use shptier::cost::{expected_cost, CostModel, PerDocCosts, Strategy};
+use shptier::interestingness::extract;
+use shptier::policy::{
+    run_policy, run_policy_with_trace, AgeBasedDemotion, Changeover, ChangeoverMigrate,
+    PlacementPolicy, SingleTier, SkiRental,
+};
+use shptier::propcheck::{check, gens, Config};
+use shptier::serdes::{Json, TomlValue};
+use shptier::storage::TierId;
+use shptier::topk::{rank_cmp, BoundedTopK, FullRankTracker, Scored};
+use shptier::util::Rng;
+
+fn cfg(cases: u32) -> Config {
+    Config { cases, seed: 0xC0FFEE }
+}
+
+#[derive(Debug)]
+struct TraceCase {
+    scores: Vec<f64>,
+    k: u64,
+    r: u64,
+    policy_id: u8,
+}
+
+fn trace_case(rng: &mut Rng) -> TraceCase {
+    let scores = gens::score_vec(20, 400)(rng);
+    let n = scores.len() as u64;
+    let k = 1 + rng.next_below(n.min(20));
+    let r = rng.next_below(n + 1);
+    let policy_id = rng.next_below(6) as u8;
+    TraceCase { scores, k, r, policy_id }
+}
+
+fn model_for(n: u64, k: u64, rng: &mut Rng) -> CostModel {
+    let a = PerDocCosts {
+        write: rng.range_f64(0.0, 2.0),
+        read: rng.range_f64(0.0, 2.0),
+        rent_window: rng.range_f64(0.0, 2.0),
+    };
+    let b = PerDocCosts {
+        write: rng.range_f64(0.0, 2.0),
+        read: rng.range_f64(0.0, 2.0),
+        rent_window: rng.range_f64(0.0, 2.0),
+    };
+    CostModel::new(n, k, a, b)
+}
+
+fn make_policy(case: &TraceCase, m: &CostModel) -> Box<dyn PlacementPolicy> {
+    match case.policy_id {
+        0 => Box::new(SingleTier::new(TierId::A)),
+        1 => Box::new(SingleTier::new(TierId::B)),
+        2 => Box::new(Changeover::new(case.r)),
+        3 => Box::new(ChangeoverMigrate::new(case.r)),
+        4 => Box::new(AgeBasedDemotion::new(0.1)),
+        _ => Box::new(SkiRental::from_model(m)),
+    }
+}
+
+/// The retained set is always the true top-K regardless of policy, and the
+/// final read touches exactly K documents.
+#[test]
+fn prop_retained_set_is_true_topk_for_every_policy() {
+    check("retained-is-topk", cfg(80), trace_case, |case| {
+        let n = case.scores.len() as u64;
+        let mut rng = Rng::new(case.k * 31 + case.r);
+        let m = model_for(n, case.k, &mut rng);
+        let mut policy = make_policy(case, &m);
+        let result = run_policy(&case.scores, &m, policy.as_mut()).map_err(|e| e.to_string())?;
+
+        // ground truth via full sort
+        let mut all: Vec<Scored> = case
+            .scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| Scored::new(i as u64, s))
+            .collect();
+        all.sort_by(|a, b| rank_cmp(b, a));
+        let want: Vec<u64> = all[..case.k as usize].iter().map(|s| s.index).collect();
+        if result.retained != want {
+            return Err(format!("retained {:?} != top-K {:?}", result.retained, want));
+        }
+        if result.read_from.len() as u64 != case.k {
+            return Err(format!(
+                "final read count {} != K {}",
+                result.read_from.len(),
+                case.k
+            ));
+        }
+        // ledger reads = final K reads + one read per migration hop
+        let hops = result
+            .ledger
+            .tiers()
+            .map(|(_, c)| c.migration_ops)
+            .sum::<u64>()
+            / 2;
+        if result.ledger.total_reads() != case.k + hops {
+            return Err(format!(
+                "ledger reads {} != K {} + hops {hops}",
+                result.ledger.total_reads(),
+                case.k
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Ledger conservation: organic writes == accepted offers; every charge
+/// class is non-negative; totals add up.
+#[test]
+fn prop_ledger_conservation() {
+    check("ledger-conservation", cfg(80), trace_case, |case| {
+        let n = case.scores.len() as u64;
+        let mut rng = Rng::new(case.r + 7);
+        let m = model_for(n, case.k, &mut rng);
+        let mut policy = make_policy(case, &m);
+        let result =
+            run_policy_with_trace(&case.scores, &m, policy.as_mut(), true)
+                .map_err(|e| e.to_string())?;
+        let organic = result.ledger.organic_writes();
+        let from_series = *result.cumulative_writes.last().unwrap();
+        if organic != from_series {
+            return Err(format!("organic {organic} != series {from_series}"));
+        }
+        let mut sum = 0.0;
+        for (_, c) in result.ledger.tiers() {
+            if c.write_cost < 0.0 || c.read_cost < 0.0 || c.rent_cost < 0.0 {
+                return Err("negative charge".into());
+            }
+            sum += c.write_cost + c.read_cost + c.rent_cost;
+        }
+        if (sum - result.ledger.total()).abs() > 1e-9 {
+            return Err(format!("sum {sum} != total {}", result.ledger.total()));
+        }
+        Ok(())
+    });
+}
+
+/// BoundedTopK and FullRankTracker always agree on the top-K membership.
+#[test]
+fn prop_trackers_agree() {
+    check("trackers-agree", cfg(100), gens::score_vec(1, 600), |scores| {
+        let k = 1 + scores.len() / 7;
+        let mut bounded = BoundedTopK::new(k);
+        let mut full = FullRankTracker::new();
+        for (i, &s) in scores.iter().enumerate() {
+            let sc = Scored::new(i as u64, s);
+            bounded.offer(sc);
+            full.insert(sc);
+            if !bounded.check_invariants() {
+                return Err(format!("heap invariant broken at {i}"));
+            }
+        }
+        let a: Vec<u64> = bounded.sorted_desc().iter().map(|s| s.index).collect();
+        let b: Vec<u64> = full.top_k(k).iter().map(|s| s.index).collect();
+        if a != b {
+            return Err(format!("bounded {a:?} != full {b:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Measured cost of the changeover policy on a random-order trace is an
+/// unbiased estimate of the analytic expectation (loose 3-sigma-ish bound
+/// via repetitions inside the property).
+#[test]
+fn prop_measured_tracks_analytic() {
+    check(
+        "measured-tracks-analytic",
+        cfg(6),
+        |rng: &mut Rng| {
+            let n = 1500 + rng.next_below(1000);
+            let k = 5 + rng.next_below(20);
+            let r = k + 1 + rng.next_below(n - k - 1);
+            (n, k, r, rng.next_u64())
+        },
+        |&(n, k, r, seed)| {
+            let mut rng = Rng::new(seed);
+            let m = model_for(n, k, &mut rng).with_rent(false);
+            let reps = 40;
+            let mut total = 0.0;
+            for _ in 0..reps {
+                let scores: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+                let mut p = Changeover::new(r);
+                total += run_policy(&scores, &m, &mut p)
+                    .map_err(|e| e.to_string())?
+                    .total_cost();
+            }
+            let measured = total / reps as f64;
+            let analytic = expected_cost(&m, Strategy::Changeover { r }).total();
+            if analytic < 1e-9 {
+                return Ok(()); // degenerate zero-cost economy
+            }
+            let rel = (measured - analytic).abs() / analytic;
+            if rel > 0.15 {
+                return Err(format!("measured {measured} vs analytic {analytic} (rel {rel})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Feature extraction never produces NaN/inf on finite input, across
+/// magnitude regimes (the EPS guards work).
+#[test]
+fn prop_features_always_finite() {
+    check("features-finite", cfg(200), gens::f32_series(64), |series| {
+        let f = extract(series);
+        for (i, v) in f.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(format!("feature {i} = {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// JSON roundtrip: dump(parse(x)) == dump(x) for generated values.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_f64() * 1e6).round() / 1e3),
+            3 => Json::Str(format!("s{}\"\\\n{}", rng.next_below(100), rng.next_below(10))),
+            4 => Json::Arr((0..rng.next_below(5)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.next_below(5) {
+                    m.insert(format!("k{i}"), gen_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    check(
+        "json-roundtrip",
+        cfg(300),
+        |rng: &mut Rng| gen_json(rng, 3),
+        |j| {
+            let text = j.dump();
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            if &parsed != j {
+                return Err(format!("roundtrip mismatch: {text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// TOML parser never panics on arbitrary printable input (error or value).
+#[test]
+fn prop_toml_never_panics() {
+    check(
+        "toml-total",
+        cfg(500),
+        |rng: &mut Rng| {
+            let len = rng.next_below(120) as usize;
+            let chars = b"abc=[]{}\"#.\n 0123456789_-true,false";
+            (0..len)
+                .map(|_| chars[rng.next_below(chars.len() as u64) as usize] as char)
+                .collect::<String>()
+        },
+        |src| {
+            let _ = TomlValue::parse(src); // must not panic
+            Ok(())
+        },
+    );
+}
+
+/// Migration accounting: under ChangeoverMigrate everything is read from B,
+/// and the number of migration hops is min(K, r) (up to evictions between
+/// write and migrate... exactly: residents of A at step r).
+#[test]
+fn prop_migrate_reads_only_from_b() {
+    check("migrate-reads-b", cfg(60), trace_case, |case| {
+        let n = case.scores.len() as u64;
+        if case.r == 0 || case.r >= n {
+            return Ok(());
+        }
+        let mut rng = Rng::new(case.r);
+        let m = model_for(n, case.k, &mut rng);
+        let mut p = ChangeoverMigrate::new(case.r);
+        let result = run_policy(&case.scores, &m, &mut p).map_err(|e| e.to_string())?;
+        for (doc, tier) in &result.read_from {
+            if *tier != TierId::B {
+                return Err(format!("doc {doc} read from {tier:?}, expected B"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,103 @@
+//! Cross-layer parity: the AOT HLO artifact (L1 Pallas + L2 JAX, compiled
+//! and executed via PJRT) must agree with the native Rust mirror of the
+//! same model, on the same weights, for realistic document series.
+//!
+//! Requires `make artifacts`. Skips (with a note) when artifacts are absent
+//! so `cargo test` stays green on a fresh checkout.
+
+use shptier::runtime::{Manifest, NativeScorer, PjrtScorer, Scorer};
+use shptier::ssa::{neg_feedback_oscillator, simulate, OscillatorParams};
+use shptier::util::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn grn_series(n: usize, t_len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let nets = [
+        neg_feedback_oscillator(OscillatorParams::oscillatory()),
+        neg_feedback_oscillator(OscillatorParams::quiescent()),
+    ];
+    (0..n)
+        .map(|i| {
+            let tr = simulate(&nets[i % 2], 60.0, t_len, 5_000_000, &mut rng);
+            tr.species_f32(0)
+        })
+        .collect()
+}
+
+#[test]
+fn pjrt_scorer_matches_native_mirror() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(dir).expect("manifest");
+    let pjrt = PjrtScorer::from_manifest(&manifest).expect("pjrt scorer");
+    let native = NativeScorer::new(manifest.scorer.clone());
+
+    let series = grn_series(40, manifest.t_len, 42);
+    let a = pjrt.score(&series).expect("pjrt score");
+    let b = native.score(&series).expect("native score");
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(
+            (x - y).abs() < 5e-3,
+            "doc {i}: pjrt={x} native={y} (|Δ|={})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[test]
+fn pjrt_batching_variants_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtScorer::load_dir(dir).expect("pjrt scorer");
+    let manifest = Manifest::load(dir).unwrap();
+    let series = grn_series(19, manifest.t_len, 7); // awkward size → mixed variants
+
+    // score all at once (variant mixing + padding) vs one-by-one (b=1)
+    let bulk = pjrt.score(&series).unwrap();
+    let single: Vec<f32> = series
+        .iter()
+        .map(|s| pjrt.score(std::slice::from_ref(s)).unwrap()[0])
+        .collect();
+    for (i, (x, y)) in bulk.iter().zip(&single).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-5,
+            "doc {i}: bulk={x} single={y}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_rejects_wrong_series_length() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtScorer::load_dir(dir).expect("pjrt scorer");
+    let bad = vec![vec![1.0f32; 17]];
+    assert!(pjrt.score(&bad).is_err());
+}
+
+#[test]
+fn scores_rank_uncertain_documents_highest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(dir).unwrap();
+    let native = NativeScorer::new(manifest.scorer.clone());
+    // strongly oscillatory and strongly quiescent documents should be
+    // *less* interesting (low entropy) than boundary cases on average;
+    // check entropy is finite and spans a real range over a mixed stream.
+    let series = grn_series(60, manifest.t_len, 99);
+    let h = native.score(&series).unwrap();
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in &h {
+        assert!(v.is_finite() && (0.0..=1.0 + 1e-6).contains(&v));
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    assert!(hi - lo > 0.05, "entropy range degenerate: [{lo}, {hi}]");
+}
