@@ -1,0 +1,124 @@
+//! Bench: fleet scheduler throughput — aggregate docs/sec vs stream count
+//! (M ∈ {1, 4, 16, 64}) and vs worker-pool size on a 16-stream fleet (the
+//! scaling acceptance criterion: ≥ 4× from 1 → 8 workers).
+//!
+//! Set `SHPTIER_BENCH_RECORD=1` to write the results as a baseline JSON to
+//! `benches/baselines/fleet_throughput.json` (see that file for the
+//! schema); `SHPTIER_BENCH_QUICK=1` shrinks the time budget for CI.
+
+use shptier::benchkit::{BenchResult, Bencher};
+use shptier::cost::hot_demand;
+use shptier::fleet::{demo_fleet, run_fleet, FleetConfig, FleetMode};
+use shptier::serdes::Json;
+use std::collections::BTreeMap;
+
+const DOCS_PER_STREAM: u64 = 500;
+
+fn fleet_config(workers: usize, hot_capacity: u64) -> FleetConfig {
+    FleetConfig {
+        hot_capacity,
+        workers,
+        channel_capacity: 256,
+        batch: 16,
+        t_len: 256,
+        seed: 1,
+        mode: FleetMode::Arbitrated,
+    }
+}
+
+fn contended_capacity(specs: &[shptier::fleet::StreamSpec]) -> u64 {
+    let demand: u64 = specs.iter().map(|s| hot_demand(&s.model, false)).sum();
+    (demand / 2).max(1)
+}
+
+fn main() {
+    println!("== fleet_throughput benches ==");
+    let mut b = Bencher::from_env();
+
+    // ---- aggregate throughput by stream count (fixed 4 workers) ----------
+    for m in [1usize, 4, 16, 64] {
+        let specs = demo_fleet(m, DOCS_PER_STREAM, 16, true, 1);
+        let total: u64 = specs.iter().map(|s| s.model.n).sum();
+        let cfg = fleet_config(4, contended_capacity(&specs));
+        b.bench(&format!("fleet_docs/streams={m},workers=4"), total, || {
+            run_fleet(&specs, &cfg).unwrap().docs_processed
+        });
+    }
+
+    // ---- worker scaling on a 16-stream fleet (acceptance: ≥4x @ 8w) ------
+    let specs16 = demo_fleet(16, DOCS_PER_STREAM, 16, true, 1);
+    let total16: u64 = specs16.iter().map(|s| s.model.n).sum();
+    let cap16 = contended_capacity(&specs16);
+    for w in [1usize, 2, 4, 8] {
+        let cfg = fleet_config(w, cap16);
+        b.bench(&format!("fleet_scaling/streams=16,workers={w}"), total16, || {
+            run_fleet(&specs16, &cfg).unwrap().docs_processed
+        });
+    }
+
+    report_scaling(b.results());
+
+    if std::env::var_os("SHPTIER_BENCH_RECORD").is_some() {
+        let path = std::path::Path::new("benches/baselines/fleet_throughput.json");
+        match std::fs::write(path, baseline_json(b.results()).dump()) {
+            Ok(()) => println!("recorded baseline to {}", path.display()),
+            Err(e) => println!("could not record baseline: {e}"),
+        }
+    } else {
+        println!("(set SHPTIER_BENCH_RECORD=1 to write benches/baselines/fleet_throughput.json)");
+    }
+}
+
+/// Print the 1→8 worker speedup against the ≥4x acceptance bar.
+fn report_scaling(results: &[BenchResult]) {
+    let rate = |name: &str| -> Option<f64> {
+        results
+            .iter()
+            .find(|r| r.name == name)
+            .and_then(|r| r.items_per_iter.map(|i| i / r.mean.as_secs_f64()))
+    };
+    if let (Some(r1), Some(r8)) = (
+        rate("fleet_scaling/streams=16,workers=1"),
+        rate("fleet_scaling/streams=16,workers=8"),
+    ) {
+        let speedup = r8 / r1;
+        println!(
+            "worker scaling 1→8 on 16 streams: {speedup:.2}x ({})",
+            if speedup >= 4.0 { "meets the >=4x bar" } else { "BELOW the >=4x bar" }
+        );
+    }
+}
+
+/// Serialize results into the baseline schema.
+fn baseline_json(results: &[BenchResult]) -> Json {
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("fleet_throughput".to_string()));
+    root.insert("docs_per_stream".to_string(), Json::Num(DOCS_PER_STREAM as f64));
+    root.insert("recorded_unix_secs".to_string(), Json::Num(unix_secs as f64));
+    root.insert(
+        "host".to_string(),
+        Json::Str(format!("{}-{}", std::env::consts::OS, std::env::consts::ARCH)),
+    );
+    let rows = results
+        .iter()
+        .map(|r| {
+            let mut row = BTreeMap::new();
+            row.insert("name".to_string(), Json::Str(r.name.clone()));
+            row.insert("mean_ns".to_string(), Json::Num(r.mean.as_nanos() as f64));
+            row.insert("iters".to_string(), Json::Num(r.iters as f64));
+            if let Some(items) = r.items_per_iter {
+                row.insert(
+                    "docs_per_sec".to_string(),
+                    Json::Num(items / r.mean.as_secs_f64()),
+                );
+            }
+            Json::Obj(row)
+        })
+        .collect();
+    root.insert("results".to_string(), Json::Arr(rows));
+    Json::Obj(root)
+}

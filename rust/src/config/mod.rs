@@ -193,6 +193,99 @@ impl LaunchConfig {
     }
 }
 
+/// Parsed fleet launcher configuration (`shptier fleet --config <path>`).
+///
+/// Schema:
+///
+/// ```toml
+/// [fleet]
+/// streams = 16
+/// workers = 4
+/// hot_capacity = 64        # omit → half the aggregate analytic demand
+/// mode = "arbitrated"      # arbitrated | naive
+/// seed = 7
+/// t_len = 256
+/// batch = 16
+/// channel_capacity = 256
+///
+/// [fleet.workload]
+/// n_docs = 2000            # per-stream base length
+/// k = 32                   # per-stream base top-K
+/// heterogeneous = true     # cycle economy classes / K / N across streams
+/// ```
+#[derive(Debug, Clone)]
+pub struct FleetLaunchConfig {
+    pub specs: Vec<crate::fleet::StreamSpec>,
+    pub config: crate::fleet::FleetConfig,
+}
+
+impl FleetLaunchConfig {
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let t = TomlValue::parse(text).context("parsing fleet config TOML")?;
+        let get_u64 = |path: &str, default: u64| -> Result<u64> {
+            match t.get_path(path) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("config: {path} must be a non-negative integer")),
+            }
+        };
+        let streams = get_u64("fleet.streams", 8)?.max(1) as usize;
+        let workers = get_u64("fleet.workers", 4)?.max(1) as usize;
+        let seed = get_u64("fleet.seed", 20190412)?;
+        let t_len = get_u64("fleet.t_len", 256)? as usize;
+        let batch = get_u64("fleet.batch", 16)? as usize;
+        let channel_capacity = get_u64("fleet.channel_capacity", 256)? as usize;
+        let mode = match t
+            .get_path("fleet.mode")
+            .and_then(|v| v.as_str())
+            .unwrap_or("arbitrated")
+        {
+            "arbitrated" => crate::fleet::FleetMode::Arbitrated,
+            "naive" => crate::fleet::FleetMode::Naive,
+            other => bail!("config: unknown fleet mode '{other}'"),
+        };
+        let n_docs = get_u64("fleet.workload.n_docs", 2_000)?.max(1);
+        let k = get_u64("fleet.workload.k", 32)?.max(1);
+        let heterogeneous = t
+            .get_path("fleet.workload.heterogeneous")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(true);
+
+        let specs = crate::fleet::demo_fleet(streams, n_docs, k, heterogeneous, seed);
+        let aggregate_demand: u64 = specs
+            .iter()
+            .map(|s| crate::cost::hot_demand(&s.model, false))
+            .sum();
+        let hot_capacity = match t.get_path("fleet.hot_capacity") {
+            Some(v) => v
+                .as_u64()
+                .ok_or_else(|| anyhow!("config: fleet.hot_capacity must be an integer"))?,
+            // default: a contended tier at half the aggregate demand
+            None => (aggregate_demand / 2).max(1),
+        };
+
+        Ok(Self {
+            specs,
+            config: crate::fleet::FleetConfig {
+                hot_capacity,
+                workers,
+                channel_capacity,
+                batch,
+                t_len,
+                seed,
+                mode,
+            },
+        })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+}
+
 fn parse_custom_economics(t: &TomlValue) -> Result<CostModel> {
     let read = |tier: &str, field: &str| -> Result<f64> {
         t.get_path(&format!("economics.{tier}.{field}"))
@@ -304,5 +397,50 @@ rent_window = 0.0
         let c = LaunchConfig::from_toml("").unwrap();
         let p = c.policy.instantiate(&c.model);
         assert!(p.name().starts_with("changeover"));
+    }
+
+    #[test]
+    fn fleet_config_defaults() {
+        let c = FleetLaunchConfig::from_toml("").unwrap();
+        assert_eq!(c.specs.len(), 8);
+        assert!(c.config.hot_capacity >= 1);
+        assert_eq!(c.config.mode, crate::fleet::FleetMode::Arbitrated);
+        // default capacity = half the aggregate demand → contended
+        let demand: u64 = c
+            .specs
+            .iter()
+            .map(|s| crate::cost::hot_demand(&s.model, false))
+            .sum();
+        assert_eq!(c.config.hot_capacity, (demand / 2).max(1));
+    }
+
+    #[test]
+    fn fleet_config_full() {
+        let c = FleetLaunchConfig::from_toml(
+            r#"
+[fleet]
+streams = 3
+workers = 2
+hot_capacity = 9
+mode = "naive"
+seed = 5
+
+[fleet.workload]
+n_docs = 100
+k = 4
+heterogeneous = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.specs.len(), 3);
+        assert_eq!(c.config.hot_capacity, 9);
+        assert_eq!(c.config.workers, 2);
+        assert_eq!(c.config.mode, crate::fleet::FleetMode::Naive);
+        assert!(c.specs.iter().all(|s| s.model.n == 100 && s.model.k == 4));
+    }
+
+    #[test]
+    fn fleet_config_rejects_bad_mode() {
+        assert!(FleetLaunchConfig::from_toml("[fleet]\nmode = \"chaos\"\n").is_err());
     }
 }

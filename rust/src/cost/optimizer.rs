@@ -141,6 +141,54 @@ pub fn optimal_r(model: &CostModel, migrate: bool) -> OptimalR {
     }
 }
 
+/// Hot-tier demand of one stream: the expected peak simultaneous tier-A
+/// occupancy under its unconstrained optimum, `min(r*, K)` residents.
+///
+/// Under "first r to A", at most `min(r, K)` documents are ever resident in
+/// A at once (only indices `< r` are written there, and the live set is the
+/// current top-K), so this is the capacity a shared hot tier must reserve
+/// for the stream to run its optimum unthrottled.
+pub fn hot_demand(model: &CostModel, migrate: bool) -> u64 {
+    optimal_r(model, migrate).r.min(model.k)
+}
+
+/// Budget-constrained optimal changeover point: the cheapest `r` whose peak
+/// expected tier-A occupancy `min(r, K)` fits within `hot_quota` residents.
+///
+/// The expected cost is convex in `ln r` in the interior regime, so the
+/// constrained optimum is the unconstrained `r*` when its demand fits and
+/// the boundary clamp `r = hot_quota` otherwise. `hot_quota = 0` degrades
+/// the stream fully to tier B (equivalent to `AllB`). This is the fleet
+/// arbiter's per-stream entry point.
+pub fn optimal_r_budgeted(model: &CostModel, migrate: bool, hot_quota: u64) -> OptimalR {
+    budget_clamp(model, migrate, optimal_r(model, migrate), hot_quota)
+}
+
+/// The clamp step of [`optimal_r_budgeted`], for callers that already hold
+/// the unconstrained optimum (the arbiter computes it once per stream).
+pub fn budget_clamp(
+    model: &CostModel,
+    migrate: bool,
+    unconstrained: OptimalR,
+    hot_quota: u64,
+) -> OptimalR {
+    if unconstrained.r.min(model.k) <= hot_quota {
+        return unconstrained;
+    }
+    let r = hot_quota.min(model.n);
+    let strategy = if migrate {
+        Strategy::ChangeoverMigrate { r }
+    } else {
+        Strategy::Changeover { r }
+    };
+    OptimalR {
+        r,
+        frac: r as f64 / model.n as f64,
+        cost: expected_cost(model, strategy).total(),
+        interior: r > model.k && r < model.n,
+    }
+}
+
 /// Compare all four strategies (AllA, AllB, changeover at r*, migrate at
 /// r*) and return them sorted by expected total cost (cheapest first).
 pub fn rank_strategies(model: &CostModel) -> Vec<(Strategy, f64)> {
@@ -253,6 +301,47 @@ mod tests {
             assert!(w[0].1 <= w[1].1);
         }
         assert_eq!(ranked.len(), 4);
+    }
+
+    #[test]
+    fn budgeted_equals_unconstrained_when_quota_ample() {
+        let m = interior_model();
+        let unc = optimal_r(&m, false);
+        let b = optimal_r_budgeted(&m, false, m.k); // quota = K always fits
+        assert_eq!(b.r, unc.r);
+        assert_eq!(b.cost, unc.cost);
+    }
+
+    #[test]
+    fn budgeted_clamps_to_quota_under_pressure() {
+        let m = interior_model(); // K = 100, r* interior ≫ K
+        let quota = 10u64;
+        let b = optimal_r_budgeted(&m, false, quota);
+        assert_eq!(b.r, quota);
+        assert!(!b.interior);
+        let unc = optimal_r(&m, false);
+        assert!(b.cost >= unc.cost, "constraint cannot reduce cost");
+        // convexity: the clamp beats any smaller feasible r
+        for r in [0u64, 1, 5] {
+            let c = expected_cost(&m, Strategy::Changeover { r }).total();
+            assert!(b.cost <= c + 1e-9, "r={r}: {c} < clamp {}", b.cost);
+        }
+    }
+
+    #[test]
+    fn budgeted_zero_quota_is_all_b() {
+        let m = interior_model();
+        let b = optimal_r_budgeted(&m, false, 0);
+        assert_eq!(b.r, 0);
+        let all_b = expected_cost(&m, Strategy::AllB).total();
+        assert!((b.cost - all_b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hot_demand_is_min_rstar_k() {
+        let m = interior_model();
+        let unc = optimal_r(&m, false);
+        assert_eq!(hot_demand(&m, false), unc.r.min(m.k));
     }
 
     #[test]

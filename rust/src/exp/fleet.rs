@@ -1,0 +1,169 @@
+//! E-FLEET: shared-capacity arbitration vs naive per-stream optima.
+//!
+//! Runs the same heterogeneous fleet twice over identical per-stream score
+//! sequences — once with the arbiter's proactive quota degradation, once
+//! capacity-oblivious with reactive oldest-first demotion — across a sweep
+//! of hot-tier capacities, and compares measured fleet-wide cost.
+//!
+//! The claim under test: whenever aggregate analytic demand exceeds the
+//! hot-tier capacity, arbitration achieves lower total cost (the naive
+//! fleet pays a migration hop per contended hot write — thrash); with
+//! ample capacity the two coincide exactly.
+
+use crate::fleet::{run_fleet, FleetConfig, FleetMode, StreamSpec};
+use crate::report::{Series, Table};
+use anyhow::Result;
+
+/// Totals of one capacity point, both modes on identical streams.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetComparison {
+    pub capacity: u64,
+    pub aggregate_demand: u64,
+    pub arbitrated_total: f64,
+    pub naive_total: f64,
+    pub naive_demotions: u64,
+}
+
+impl FleetComparison {
+    /// Relative saving of arbitration over the naive baseline.
+    pub fn saving(&self) -> f64 {
+        if self.naive_total.abs() < 1e-12 {
+            0.0
+        } else {
+            1.0 - self.arbitrated_total / self.naive_total
+        }
+    }
+}
+
+/// Run both modes at one capacity. Single worker → fully deterministic.
+pub fn compare_at_capacity(
+    specs: &[StreamSpec],
+    capacity: u64,
+    seed: u64,
+    t_len: usize,
+) -> Result<FleetComparison> {
+    let base = |mode: FleetMode| FleetConfig {
+        hot_capacity: capacity,
+        workers: 1,
+        channel_capacity: 64,
+        batch: 16,
+        t_len,
+        seed,
+        mode,
+    };
+    let arbitrated = run_fleet(specs, &base(FleetMode::Arbitrated))?;
+    let naive = run_fleet(specs, &base(FleetMode::Naive))?;
+    Ok(FleetComparison {
+        capacity,
+        aggregate_demand: arbitrated.arbitration.aggregate_demand,
+        arbitrated_total: arbitrated.total_cost(),
+        naive_total: naive.total_cost(),
+        naive_demotions: naive.demotions(),
+    })
+}
+
+/// E-FLEET: sweep hot capacity as a fraction of aggregate demand and
+/// compare the two modes. Returns the comparison table and the CSV series.
+pub fn e_fleet(
+    specs: &[StreamSpec],
+    seed: u64,
+    t_len: usize,
+    points: usize,
+) -> Result<(Table, Series, Vec<FleetComparison>)> {
+    assert!(points >= 2);
+    let demand: u64 = specs
+        .iter()
+        .map(|s| crate::cost::hot_demand(&s.model, false))
+        .sum();
+    let mut table = Table::new(
+        &format!(
+            "E-FLEET: arbitrated vs naive fleet cost, {} streams, aggregate demand {}",
+            specs.len(),
+            demand
+        ),
+        &["capacity", "cap/demand", "arbitrated $", "naive $", "saving", "naive demotions"],
+    );
+    let mut series = Series::new(
+        "fleet_capacity_sweep",
+        &["capacity", "cap_over_demand", "arbitrated_total", "naive_total", "naive_demotions"],
+    );
+    let mut out = Vec::with_capacity(points);
+    for i in 1..=points {
+        let frac = i as f64 / points as f64;
+        let capacity = ((demand as f64 * frac).round() as u64).max(1);
+        let cmp = compare_at_capacity(specs, capacity, seed, t_len)?;
+        table.row(vec![
+            capacity.to_string(),
+            format!("{frac:.2}"),
+            format!("{:.4}", cmp.arbitrated_total),
+            format!("{:.4}", cmp.naive_total),
+            format!("{:+.1}%", cmp.saving() * 100.0),
+            cmp.naive_demotions.to_string(),
+        ]);
+        series.push(vec![
+            capacity as f64,
+            frac,
+            cmp.arbitrated_total,
+            cmp.naive_total,
+            cmp.naive_demotions as f64,
+        ]);
+        out.push(cmp);
+    }
+    Ok((table, series, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::demo_fleet;
+
+    #[test]
+    fn arbitration_beats_naive_whenever_oversubscribed() {
+        // The acceptance claim: shared-capacity arbitration achieves lower
+        // total cost than naive per-stream optima whenever aggregate demand
+        // exceeds hot-tier capacity.
+        let specs = demo_fleet(6, 400, 12, true, 1);
+        let demand: u64 = specs
+            .iter()
+            .map(|s| crate::cost::hot_demand(&s.model, false))
+            .sum();
+        for frac in [0.2f64, 0.5] {
+            let cap = ((demand as f64 * frac) as u64).max(1);
+            let cmp = compare_at_capacity(&specs, cap, 3, 64).unwrap();
+            assert!(cap < cmp.aggregate_demand);
+            assert!(
+                cmp.arbitrated_total < cmp.naive_total,
+                "cap {cap}: arbitrated {} !< naive {}",
+                cmp.arbitrated_total,
+                cmp.naive_total
+            );
+            assert!(cmp.naive_demotions > 0);
+        }
+    }
+
+    #[test]
+    fn modes_coincide_with_ample_capacity() {
+        let specs = demo_fleet(4, 300, 8, true, 2);
+        let demand: u64 = specs
+            .iter()
+            .map(|s| crate::cost::hot_demand(&s.model, false))
+            .sum();
+        let cmp = compare_at_capacity(&specs, demand, 9, 64).unwrap();
+        // no contention → identical placements, identical cost
+        let rel = (cmp.arbitrated_total - cmp.naive_total).abs()
+            / cmp.naive_total.max(1e-12);
+        assert!(rel < 1e-9, "ample capacity should equalise modes (rel {rel})");
+        assert_eq!(cmp.naive_demotions, 0);
+    }
+
+    #[test]
+    fn sweep_table_shape() {
+        let specs = demo_fleet(3, 200, 6, true, 4);
+        let (table, series, cmps) = e_fleet(&specs, 5, 64, 3).unwrap();
+        assert_eq!(table.rows.len(), 3);
+        assert_eq!(series.rows.len(), 3);
+        assert_eq!(cmps.len(), 3);
+        // the last point is at full demand → saving ≈ 0
+        assert!(cmps[2].saving().abs() < 1e-6);
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod ablations;
 pub mod case_studies;
+pub mod fleet;
 pub mod grn;
 pub mod validation;
 
@@ -41,6 +42,7 @@ pub const EXPERIMENT_IDS: &[&str] = &[
     "sweep-sizing",
     "ablation-policies",
     "ablation-ordering",
+    "fleet",
     "all",
 ];
 
@@ -113,6 +115,14 @@ pub fn run(id: &str, seed: u64, quick: bool) -> Result<()> {
         "ablation-ordering" => {
             let n = if quick { 3_000 } else { 20_000 };
             println!("{}", ablations::ablation_ordering(n, 100, seed).render());
+        }
+        "fleet" => {
+            let (m, n, k, points) = if quick { (4, 300, 8, 3) } else { (8, 1_500, 24, 5) };
+            let t_len = if quick { 64 } else { 256 };
+            let specs = crate::fleet::demo_fleet(m, n, k, true, seed);
+            let (table, series, _) = fleet::e_fleet(&specs, seed, t_len, points)?;
+            println!("{}", table.render());
+            emit(&series)?;
         }
         "all" => {
             for id in EXPERIMENT_IDS.iter().filter(|&&i| i != "all" && i != "fig8") {

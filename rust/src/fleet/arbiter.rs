@@ -1,0 +1,154 @@
+//! The fleet arbiter: turns per-stream analytic demand into hot-tier
+//! quotas and budget-constrained changeover parameters.
+//!
+//! For each stream the arbiter evaluates the closed-form optimum
+//! ([`crate::cost::optimal_r`]) and its hot-tier demand `min(r*, K)`
+//! ([`crate::cost::hot_demand`]). If aggregate demand fits the shared hot
+//! capacity every stream runs unconstrained; otherwise quotas are assigned
+//! proportionally to demand ([`super::capacity::allocate_proportional`])
+//! and each stream's changeover parameter is *recomputed under its
+//! shrunken budget* ([`crate::cost::optimal_r_budgeted`]) — over-quota
+//! documents degrade to cold placement rather than being rejected.
+
+use super::capacity::{allocate_proportional, peak_occupancy};
+use super::stream::StreamSpec;
+use crate::cost::{budget_clamp, optimal_r};
+
+/// Per-stream slice of an arbitration outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamPlan {
+    /// Unconstrained optimal changeover index.
+    pub r_unconstrained: u64,
+    /// Hot-tier demand `min(r*, K)` in resident documents.
+    pub demand: u64,
+    /// Assigned hot quota (≤ demand).
+    pub quota: u64,
+    /// Budget-constrained changeover index under the quota.
+    pub r_budgeted: u64,
+    /// Analytic expected cost at the unconstrained optimum.
+    pub analytic_unconstrained: f64,
+    /// Analytic expected cost at the budgeted parameter.
+    pub analytic_budgeted: f64,
+}
+
+/// Outcome of arbitrating a fleet against a hot-tier capacity.
+#[derive(Debug, Clone)]
+pub struct Arbitration {
+    pub hot_capacity: u64,
+    pub plans: Vec<StreamPlan>,
+    /// Σ demand across streams.
+    pub aggregate_demand: u64,
+    /// Whether aggregate demand exceeds the capacity (quotas bind).
+    pub oversubscribed: bool,
+}
+
+impl Arbitration {
+    /// Σ analytic expected cost at the unconstrained optima (the infeasible
+    /// "everyone owns the whole tier" lower bound).
+    pub fn analytic_unconstrained_total(&self) -> f64 {
+        self.plans.iter().map(|p| p.analytic_unconstrained).sum()
+    }
+
+    /// Σ analytic expected cost at the budgeted parameters (what the
+    /// arbitrated fleet should measure, in expectation).
+    pub fn analytic_budgeted_total(&self) -> f64 {
+        self.plans.iter().map(|p| p.analytic_budgeted).sum()
+    }
+}
+
+/// Compute quotas and budgeted changeover parameters for `specs` sharing
+/// `hot_capacity` resident slots of tier A.
+pub fn arbitrate(specs: &[StreamSpec], hot_capacity: u64) -> Arbitration {
+    // one optimizer run per stream; demand and the budget clamp reuse it
+    let unconstrained: Vec<_> = specs.iter().map(|s| optimal_r(&s.model, false)).collect();
+    let demands: Vec<u64> = specs
+        .iter()
+        .zip(unconstrained.iter())
+        .map(|(s, unc)| peak_occupancy(unc.r, s.model.k))
+        .collect();
+    let aggregate_demand: u64 = demands.iter().sum();
+    let quotas = allocate_proportional(hot_capacity, &demands);
+
+    let plans = specs
+        .iter()
+        .zip(unconstrained.iter())
+        .zip(demands.iter().zip(quotas.iter()))
+        .map(|((spec, unc), (&demand, &quota))| {
+            let budgeted = budget_clamp(&spec.model, false, *unc, quota);
+            StreamPlan {
+                r_unconstrained: unc.r,
+                demand,
+                quota,
+                r_budgeted: budgeted.r,
+                analytic_unconstrained: unc.cost,
+                analytic_budgeted: budgeted.cost,
+            }
+        })
+        .collect();
+
+    Arbitration {
+        hot_capacity,
+        plans,
+        aggregate_demand,
+        oversubscribed: aggregate_demand > hot_capacity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, PerDocCosts};
+    use crate::fleet::stream::SeriesProfile;
+
+    fn spec(id: u64, n: u64, k: u64) -> StreamSpec {
+        StreamSpec::new(
+            id,
+            CostModel::new(
+                n,
+                k,
+                PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.0 },
+                PerDocCosts { write: 3.0, read: 0.5, rent_window: 0.0 },
+            )
+            .with_rent(false),
+            SeriesProfile::Mixed { p_oscillatory: 0.5 },
+        )
+    }
+
+    #[test]
+    fn ample_capacity_leaves_streams_unconstrained() {
+        let specs: Vec<_> = (0..3).map(|i| spec(i, 1000, 20)).collect();
+        let arb = arbitrate(&specs, 10_000);
+        assert!(!arb.oversubscribed);
+        for p in &arb.plans {
+            assert_eq!(p.quota, p.demand);
+            assert_eq!(p.r_budgeted, p.r_unconstrained);
+            assert!((p.analytic_budgeted - p.analytic_unconstrained).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn oversubscription_binds_quotas_and_raises_cost() {
+        let specs: Vec<_> = (0..4).map(|i| spec(i, 1000, 50)).collect();
+        let arb = arbitrate(&specs, 40); // demand = 4 × min(r*, 50) ≫ 40
+        assert!(arb.oversubscribed);
+        let total_quota: u64 = arb.plans.iter().map(|p| p.quota).sum();
+        assert!(total_quota <= 40);
+        for p in &arb.plans {
+            assert!(p.quota < p.demand);
+            assert!(p.r_budgeted <= p.quota);
+            assert!(p.analytic_budgeted >= p.analytic_unconstrained);
+        }
+        assert!(arb.analytic_budgeted_total() > arb.analytic_unconstrained_total());
+    }
+
+    #[test]
+    fn heterogeneous_demand_splits_proportionally() {
+        let specs = vec![spec(0, 1000, 60), spec(1, 1000, 20), spec(2, 1000, 20)];
+        let arb = arbitrate(&specs, 50);
+        // demands 60/20/20 (r* interior and > K) → quotas 30/10/10
+        assert_eq!(arb.plans[0].demand, 60);
+        assert_eq!(arb.plans[0].quota, 30);
+        assert_eq!(arb.plans[1].quota, 10);
+        assert_eq!(arb.plans[2].quota, 10);
+    }
+}

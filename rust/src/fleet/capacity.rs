@@ -1,0 +1,115 @@
+//! Hot-tier capacity planning: per-stream demand curves and the
+//! proportional quota allocation used by the arbiter.
+//!
+//! Each stream's *demand* is the expected peak number of its documents
+//! simultaneously resident in the hot tier under its unconstrained optimum
+//! (`min(r*, K)`, see [`crate::cost::hot_demand`]); the analytic occupancy
+//! *curve* over stream position comes from the closed form of paper eq. (15)
+//! ([`crate::cost::analytic::expected_occupancy_a`]). When aggregate demand
+//! exceeds the shared capacity, quotas are assigned proportionally to
+//! demand with largest-remainder rounding — deterministic, exact-sum, and
+//! never above a stream's own demand.
+
+use crate::cost::analytic::expected_occupancy_a;
+
+/// Proportionally allocate `capacity` hot-tier slots across streams with
+/// the given `demands`. Returns one quota per stream with:
+///
+/// - `quota[i] <= demands[i]` (no stream gets more than it can use),
+/// - `Σ quota = min(capacity, Σ demands)` (exact, via largest-remainder
+///   rounding; remainder ties break toward the lower stream index).
+pub fn allocate_proportional(capacity: u64, demands: &[u64]) -> Vec<u64> {
+    let total: u64 = demands.iter().sum();
+    if total <= capacity {
+        return demands.to_vec();
+    }
+    if capacity == 0 || total == 0 {
+        return vec![0; demands.len()];
+    }
+    // real-valued shares, floored; distribute the remainder by fractional part
+    let mut quotas: Vec<u64> = Vec::with_capacity(demands.len());
+    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(demands.len());
+    let mut assigned = 0u64;
+    for (i, &d) in demands.iter().enumerate() {
+        let share = capacity as f64 * d as f64 / total as f64;
+        let floor = share.floor() as u64;
+        quotas.push(floor);
+        assigned += floor;
+        fracs.push((i, share - floor as f64));
+    }
+    let mut remainder = capacity.saturating_sub(assigned);
+    // largest fractional remainder first; ties toward lower index
+    fracs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    for (i, _) in fracs {
+        if remainder == 0 {
+            break;
+        }
+        if quotas[i] < demands[i] {
+            quotas[i] += 1;
+            remainder -= 1;
+        }
+    }
+    quotas
+}
+
+/// Peak of a stream's expected hot-occupancy curve under changeover at
+/// `r` with retained-set size `k`: `min(r, K)`. The full curve over stream
+/// position is [`expected_occupancy_a`] (paper eq. (15) i.u.d. form).
+pub fn peak_occupancy(r: u64, k: u64) -> u64 {
+    r.min(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn under_capacity_everyone_gets_demand() {
+        let q = allocate_proportional(100, &[10, 20, 30]);
+        assert_eq!(q, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn over_capacity_sums_exactly_and_caps_at_demand() {
+        let demands = [50u64, 30, 20];
+        let q = allocate_proportional(60, &demands);
+        assert_eq!(q.iter().sum::<u64>(), 60);
+        for (qi, di) in q.iter().zip(demands.iter()) {
+            assert!(qi <= di);
+        }
+        // proportionality: 50/100 → 30, 30/100 → 18, 20/100 → 12
+        assert_eq!(q, vec![30, 18, 12]);
+    }
+
+    #[test]
+    fn rounding_distributes_remainder_deterministically() {
+        // shares 10/3 = 3.33.. each → floors 3,3,3, remainder 1 to index 0
+        let q = allocate_proportional(10, &[7, 7, 7]);
+        assert_eq!(q.iter().sum::<u64>(), 10);
+        assert_eq!(q, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn zero_capacity_and_zero_demand_edges() {
+        assert_eq!(allocate_proportional(0, &[5, 5]), vec![0, 0]);
+        assert_eq!(allocate_proportional(10, &[0, 0]), vec![0, 0]);
+        assert_eq!(allocate_proportional(10, &[]), Vec::<u64>::new());
+        // a zero-demand stream never receives quota under pressure
+        let q = allocate_proportional(5, &[0, 10, 10]);
+        assert_eq!(q[0], 0);
+        assert_eq!(q.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn occupancy_curve_peaks_at_min_r_k() {
+        assert_eq!(peak_occupancy(500, 20), 20);
+        assert_eq!(peak_occupancy(5, 20), 5);
+        // curve: at t = r the occupancy is min(K, t)·1
+        assert!((expected_occupancy_a(100, 100, 20) - 20.0).abs() < 1e-12);
+        // decays after r: K·r/t, so the peak bounds the whole curve
+        assert!((expected_occupancy_a(200, 100, 20) - 10.0).abs() < 1e-12);
+        for t in [1u64, 50, 100, 150, 400] {
+            assert!(expected_occupancy_a(t, 100, 20) <= peak_occupancy(100, 20) as f64 + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! `fleet` — a capacity-aware multi-stream scheduler that runs many
+//! concurrent top-K workloads against shared tiered storage.
+//!
+//! The paper's model is one stream with unbounded tiers; a production
+//! service multiplexes many heterogeneous scenarios (each with its own N,
+//! K, interestingness profile, and economics) over hot storage with a hard
+//! capacity. This subsystem brings that regime into the codebase:
+//!
+//! - [`arbiter`] uses the closed-form analytic model as an *allocation
+//!   oracle*: each stream's expected hot-tier occupancy (paper eq. 15)
+//!   yields its demand; quotas are split proportionally when aggregate
+//!   demand exceeds capacity; each stream's changeover parameter is
+//!   recomputed under its shrunken budget
+//!   ([`crate::cost::optimal_r_budgeted`]). Over-quota writes degrade to
+//!   cold placement — never rejected.
+//! - [`scheduler`] runs the streams on a worker pool with bounded channels
+//!   (the [`crate::pipeline`] thread topology), placing against a shared
+//!   [`crate::storage::StorageSim`] extended with per-tier capacity and
+//!   per-stream ledger attribution.
+//! - [`FleetMode::Naive`] is the ablation baseline: capacity-oblivious
+//!   per-stream optima with reactive oldest-first demotion on contention —
+//!   the shared-cache behaviour the arbiter is designed to beat (see the
+//!   `fleet` experiment, `shptier exp --id fleet`).
+//!
+//! See `docs/adr/ADR-001-fleet-subsystem.md` for the design rationale.
+
+pub mod arbiter;
+pub mod capacity;
+pub mod report;
+pub mod scheduler;
+pub mod stream;
+
+pub use arbiter::{arbitrate, Arbitration, StreamPlan};
+pub use capacity::allocate_proportional;
+pub use report::{FleetReport, StreamReport};
+pub use scheduler::{run_fleet, FleetConfig, FleetMode};
+pub use stream::{generate_series, SeriesProfile, StreamSpec, StreamState, COLD, HOT};
+
+use crate::cost::{CostModel, PerDocCosts};
+
+/// Build a deterministic demo fleet of `m` heterogeneous streams.
+///
+/// Streams cycle through three economy classes (all transaction-dominated,
+/// rent excluded, hot tier = A):
+///
+/// 0. *balanced*: hot cheap to write, dear to read → interior r*/N ≈ 0.57;
+/// 1. *hot-hungry*: hot dominates everywhere → r* ≈ N (demand = K);
+/// 2. *cold-leaning*: small interior optimum r*/N = 0.2.
+///
+/// With `heterogeneous`, K and N are additionally scaled per class so
+/// demand, value, and stream length all differ; otherwise every stream is
+/// class 0 with the base geometry. `salt` perturbs the profile mix only.
+pub fn demo_fleet(
+    m: usize,
+    n_per_stream: u64,
+    k_base: u64,
+    heterogeneous: bool,
+    salt: u64,
+) -> Vec<StreamSpec> {
+    let classes = [
+        (
+            PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.0 },
+            PerDocCosts { write: 3.0, read: 0.5, rent_window: 0.0 },
+        ),
+        (
+            PerDocCosts { write: 0.5, read: 1.0, rent_window: 0.0 },
+            PerDocCosts { write: 2.5, read: 2.0, rent_window: 0.0 },
+        ),
+        (
+            PerDocCosts { write: 1.0, read: 2.0, rent_window: 0.0 },
+            PerDocCosts { write: 1.2, read: 1.0, rent_window: 0.0 },
+        ),
+    ];
+    (0..m)
+        .map(|i| {
+            let class = if heterogeneous { i % classes.len() } else { 0 };
+            let (a, b) = classes[class];
+            let (n_mul, k_mul) = if heterogeneous {
+                match class {
+                    0 => (1, 1),
+                    1 => (1, 2),
+                    _ => (2, 1),
+                }
+            } else {
+                (1, 1)
+            };
+            let n = n_per_stream * n_mul;
+            let k = (k_base * k_mul).clamp(1, n);
+            let profile = match (i as u64 + salt) % 3 {
+                0 => SeriesProfile::Mixed { p_oscillatory: 0.3 },
+                1 => SeriesProfile::Oscillatory { period: 32.0 },
+                _ => SeriesProfile::Noisy { level: 12.0 },
+            };
+            StreamSpec::new(
+                i as u64,
+                CostModel::new(n, k, a, b).with_rent(false),
+                profile,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_fleet_shapes() {
+        let specs = demo_fleet(7, 400, 10, true, 0);
+        assert_eq!(specs.len(), 7);
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+            assert!(s.model.k >= 1 && s.model.k <= s.model.n);
+        }
+        // heterogeneity: at least two distinct K values and N values
+        let ks: std::collections::BTreeSet<u64> = specs.iter().map(|s| s.model.k).collect();
+        let ns: std::collections::BTreeSet<u64> = specs.iter().map(|s| s.model.n).collect();
+        assert!(ks.len() >= 2);
+        assert!(ns.len() >= 2);
+
+        let homo = demo_fleet(4, 400, 10, false, 0);
+        assert!(homo.iter().all(|s| s.model.k == 10 && s.model.n == 400));
+    }
+
+    #[test]
+    fn demo_fleet_demands_are_positive() {
+        for s in demo_fleet(6, 500, 8, true, 2) {
+            assert!(crate::cost::hot_demand(&s.model, false) >= 1, "stream {}", s.id);
+        }
+    }
+}

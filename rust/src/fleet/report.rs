@@ -1,0 +1,144 @@
+//! Fleet run reporting: per-stream reconciliation of measured ledgers
+//! against the arbiter's analytic expectations, plus fleet-wide telemetry.
+
+use super::arbiter::Arbitration;
+use super::scheduler::FleetMode;
+use crate::report::Table;
+use crate::storage::Ledger;
+use std::time::Duration;
+
+/// Per-stream slice of a fleet report.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub id: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Hot-tier demand `min(r*, K)`.
+    pub demand: u64,
+    /// Assigned quota (equals demand when not oversubscribed; unused in
+    /// naive mode).
+    pub quota: u64,
+    /// Changeover parameter the stream actually ran.
+    pub r_effective: u64,
+    /// Analytic expected cost at the parameter it ran.
+    pub analytic: f64,
+    /// Measured total from the stream's attributed ledger.
+    pub measured: f64,
+    /// Final top-K reads served hot / cold.
+    pub hot_reads: u64,
+    pub cold_reads: u64,
+    /// Reactive demotions this stream triggered (naive mode).
+    pub demotions_caused: u64,
+}
+
+/// Outcome of a whole fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub mode: FleetMode,
+    pub hot_capacity: u64,
+    pub workers: usize,
+    pub streams: Vec<StreamReport>,
+    pub arbitration: Arbitration,
+    /// The shared simulator's fleet-wide ledger.
+    pub ledger: Ledger,
+    /// High-water mark of hot-tier occupancy over the run.
+    pub hot_peak: u64,
+    pub docs_processed: u64,
+    pub wall: Duration,
+    pub throughput_docs_per_sec: f64,
+}
+
+impl FleetReport {
+    /// Fleet-wide measured cost (the shared ledger total).
+    pub fn total_cost(&self) -> f64 {
+        self.ledger.total()
+    }
+
+    /// Σ of per-stream attributed ledger totals — must equal
+    /// [`FleetReport::total_cost`] (the conservation invariant).
+    pub fn per_stream_total(&self) -> f64 {
+        self.streams.iter().map(|s| s.measured).sum()
+    }
+
+    /// Total reactive demotions across streams (0 in arbitrated mode).
+    pub fn demotions(&self) -> u64 {
+        self.streams.iter().map(|s| s.demotions_caused).sum()
+    }
+
+    /// Per-stream reconciliation table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "fleet run — {:?}, {} streams, hot capacity {} (demand {}), {} workers",
+                self.mode,
+                self.streams.len(),
+                self.hot_capacity,
+                self.arbitration.aggregate_demand,
+                self.workers
+            ),
+            &[
+                "stream", "N", "K", "demand", "quota", "r_eff", "analytic $", "measured $",
+                "Δ", "hot/cold reads", "demotions",
+            ],
+        );
+        for s in &self.streams {
+            let delta = if s.analytic.abs() > 1e-12 {
+                format!("{:+.1}%", (s.measured / s.analytic - 1.0) * 100.0)
+            } else {
+                "-".to_string()
+            };
+            t.row(vec![
+                s.id.to_string(),
+                s.n.to_string(),
+                s.k.to_string(),
+                s.demand.to_string(),
+                s.quota.to_string(),
+                s.r_effective.to_string(),
+                format!("{:.4}", s.analytic),
+                format!("{:.4}", s.measured),
+                delta,
+                format!("{}/{}", s.hot_reads, s.cold_reads),
+                s.demotions_caused.to_string(),
+            ]);
+        }
+        let analytic_total: f64 = self.streams.iter().map(|s| s.analytic).sum();
+        t.row(vec![
+            "TOTAL".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            self.arbitration.aggregate_demand.to_string(),
+            self.streams.iter().map(|s| s.quota).sum::<u64>().to_string(),
+            "-".to_string(),
+            format!("{analytic_total:.4}"),
+            format!("{:.4}", self.total_cost()),
+            "-".to_string(),
+            "-".to_string(),
+            self.demotions().to_string(),
+        ]);
+        t
+    }
+
+    /// One-paragraph summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "fleet: {} streams, {} docs in {:.2?} ({:.0} docs/s, {} workers)\n\
+             hot tier: capacity {} | peak occupancy {} | aggregate demand {}{}\n\
+             cost: measured ${:.4} (Σ per-stream ${:.4}) | thrash ${:.4} over {} demotions\n\
+             ledger: {}",
+            self.streams.len(),
+            self.docs_processed,
+            self.wall,
+            self.throughput_docs_per_sec,
+            self.workers,
+            self.hot_capacity,
+            self.hot_peak,
+            self.arbitration.aggregate_demand,
+            if self.arbitration.oversubscribed { " (OVERSUBSCRIBED)" } else { "" },
+            self.total_cost(),
+            self.per_stream_total(),
+            self.ledger.migration_total(),
+            self.demotions(),
+            self.ledger.summary(),
+        )
+    }
+}

@@ -1,0 +1,340 @@
+//! The fleet scheduler: M concurrent top-K streams multiplexed over the
+//! shared capacity-limited storage simulator by a worker pool.
+//!
+//! Thread topology (reuses the [`crate::pipeline`] idiom — std threads +
+//! bounded `sync_channel` = backpressure):
+//!
+//! ```text
+//!   worker 0 (streams 0, W, 2W, ...) ─┐
+//!   worker 1 (streams 1, W+1, ...)   ─┼─(sync_channel: scored batches)──> placer
+//!        ...                         ─┘       (stream_id, score)*batch      │
+//!                                                        shared StorageSim ─┘
+//! ```
+//!
+//! Workers own the expensive per-document work — synthetic series
+//! generation from each stream's interestingness profile plus native RBF
+//! scoring — and interleave their assigned streams round-robin so all
+//! streams progress concurrently. The placer thread owns the shared
+//! simulator and the per-stream [`StreamState`]s; per-stream document order
+//! is preserved because each stream is produced by exactly one worker and
+//! `mpsc` delivery is FIFO per sender.
+//!
+//! Per-stream score sequences are seeded independently of the worker
+//! count, so placement outcomes depend on worker count only through
+//! cross-stream arrival interleaving (which arbitrated mode is, by
+//! construction, insensitive to).
+
+use super::arbiter::{arbitrate, Arbitration};
+use super::report::{FleetReport, StreamReport};
+use super::stream::{generate_series, StreamSpec, StreamState, HOT};
+use crate::cost::{CostModel, PerDocCosts};
+use crate::interestingness::RbfScorer;
+use crate::storage::StorageSim;
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::sync_channel;
+use std::time::Instant;
+
+/// How the fleet handles hot-tier contention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetMode {
+    /// Quota arbitration: per-stream budgets from the analytic model;
+    /// over-quota placements degrade proactively to cold.
+    Arbitrated,
+    /// Capacity-oblivious per-stream optima: every stream runs its own
+    /// unconstrained r*; contention is resolved reactively by demoting the
+    /// oldest hot resident (shared-cache behaviour).
+    Naive,
+}
+
+/// Fleet-wide run configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Shared hot-tier capacity in resident documents.
+    pub hot_capacity: u64,
+    /// Worker-pool size (clamped to the stream count).
+    pub workers: usize,
+    /// Bounded channel capacity, in batches (the backpressure knob).
+    pub channel_capacity: usize,
+    /// Documents scored per batch message.
+    pub batch: usize,
+    /// Synthetic series length per document.
+    pub t_len: usize,
+    /// Fleet seed; per-stream generators fork deterministically from it.
+    pub seed: u64,
+    pub mode: FleetMode,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            hot_capacity: 256,
+            workers: 4,
+            channel_capacity: 256,
+            batch: 16,
+            t_len: 256,
+            seed: 20190412,
+            mode: FleetMode::Arbitrated,
+        }
+    }
+}
+
+/// A stream's producer-side state inside a worker.
+struct WorkerStream {
+    id: u64,
+    remaining: u64,
+    rng: crate::util::Rng,
+    profile: super::stream::SeriesProfile,
+}
+
+/// Per-stream RNG seed, independent of worker partitioning so results are
+/// reproducible across worker counts.
+fn stream_seed(fleet_seed: u64, stream_id: u64) -> u64 {
+    fleet_seed ^ stream_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Per-tier effective costs a stream registers with the shared simulator
+/// (rent zeroed when the stream's model excludes it).
+fn stream_tier_costs(model: &CostModel) -> Vec<PerDocCosts> {
+    let adjust = |c: PerDocCosts| PerDocCosts {
+        rent_window: if model.include_rent { c.rent_window } else { 0.0 },
+        ..c
+    };
+    vec![adjust(model.a), adjust(model.b)]
+}
+
+/// Run a fleet of `specs` under `config`. Returns the reconciled report.
+pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetReport> {
+    if specs.is_empty() {
+        bail!("fleet: no streams");
+    }
+    for (i, s) in specs.iter().enumerate() {
+        if s.id != i as u64 {
+            bail!("fleet: stream ids must be contiguous (spec {} has id {})", i, s.id);
+        }
+    }
+    let started = Instant::now();
+    let arbitration: Arbitration = arbitrate(specs, config.hot_capacity);
+
+    // ---- shared simulator --------------------------------------------------
+    let charge_rent = specs.iter().any(|s| s.model.include_rent);
+    let mut sim = StorageSim::two_tier(specs[0].model.a, specs[0].model.b, charge_rent);
+    sim.set_capacity(HOT, Some(config.hot_capacity as usize));
+    for s in specs {
+        sim.register_stream(s.id, stream_tier_costs(&s.model))?;
+    }
+
+    // ---- per-stream placer states -----------------------------------------
+    let mut states: Vec<StreamState> = specs
+        .iter()
+        .zip(arbitration.plans.iter())
+        .map(|(s, plan)| match config.mode {
+            FleetMode::Arbitrated => {
+                StreamState::new(s, plan.r_budgeted, plan.quota as usize, false)
+            }
+            FleetMode::Naive => StreamState::new(s, plan.r_unconstrained, usize::MAX, true),
+        })
+        .collect();
+    let total_docs: u64 = specs.iter().map(|s| s.model.n).sum();
+
+    // ---- worker pool -------------------------------------------------------
+    let workers = config.workers.max(1).min(specs.len());
+    let batch = config.batch.max(1);
+    let t_len = config.t_len.max(2);
+    let (tx, rx) = sync_channel::<Vec<(u64, f32)>>(config.channel_capacity.max(1));
+    let mut handles = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let mut my_streams: Vec<WorkerStream> = specs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % workers == w)
+            .map(|(_, s)| WorkerStream {
+                id: s.id,
+                remaining: s.model.n,
+                rng: crate::util::Rng::new(stream_seed(config.seed, s.id)),
+                profile: s.profile,
+            })
+            .collect();
+        let tx = tx.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("fleet-worker-{w}"))
+                .spawn(move || -> u64 {
+                    let scorer = RbfScorer::synthetic_demo();
+                    let mut produced = 0u64;
+                    loop {
+                        let mut any = false;
+                        for ws in my_streams.iter_mut() {
+                            if ws.remaining == 0 {
+                                continue;
+                            }
+                            any = true;
+                            let take = batch.min(ws.remaining as usize);
+                            let mut out = Vec::with_capacity(take);
+                            for _ in 0..take {
+                                let series = generate_series(ws.profile, t_len, &mut ws.rng);
+                                out.push((ws.id, scorer.score_series(&series)));
+                            }
+                            ws.remaining -= take as u64;
+                            produced += take as u64;
+                            if tx.send(out).is_err() {
+                                return produced; // placer gone
+                            }
+                        }
+                        if !any {
+                            return produced;
+                        }
+                    }
+                })
+                .context("spawning fleet worker")?,
+        );
+    }
+    drop(tx);
+
+    // ---- placer (this thread) ---------------------------------------------
+    let mut received = 0u64;
+    while received < total_docs {
+        let Ok(chunk) = rx.recv() else { break };
+        for (sid, score) in chunk {
+            states[sid as usize].observe(&mut sim, score as f64)?;
+            received += 1;
+        }
+    }
+    drop(rx);
+    let mut produced = 0u64;
+    for h in handles {
+        produced += h.join().expect("fleet worker panicked");
+    }
+    if received != total_docs || produced != total_docs {
+        bail!("fleet: produced {produced}, placed {received}, expected {total_docs}");
+    }
+
+    // ---- settle + finish ---------------------------------------------------
+    sim.settle_rent(1.0);
+    let mut streams = Vec::with_capacity(states.len());
+    for (state, (spec, plan)) in
+        states.iter_mut().zip(specs.iter().zip(arbitration.plans.iter()))
+    {
+        let outcome = state.finish(&mut sim)?;
+        let analytic = match config.mode {
+            FleetMode::Arbitrated => plan.analytic_budgeted,
+            FleetMode::Naive => plan.analytic_unconstrained,
+        };
+        streams.push(StreamReport {
+            id: spec.id,
+            n: spec.model.n,
+            k: spec.model.k,
+            demand: plan.demand,
+            quota: plan.quota,
+            r_effective: state.effective_r(),
+            analytic,
+            measured: sim.stream_ledger(spec.id).total(),
+            hot_reads: outcome.hot_reads,
+            cold_reads: outcome.cold_reads,
+            demotions_caused: outcome.demotions_caused,
+        });
+    }
+
+    let wall = started.elapsed();
+    let throughput = if wall.as_secs_f64() > 0.0 {
+        total_docs as f64 / wall.as_secs_f64()
+    } else {
+        0.0
+    };
+    Ok(FleetReport {
+        mode: config.mode,
+        hot_capacity: config.hot_capacity,
+        workers,
+        streams,
+        arbitration,
+        ledger: sim.ledger().clone(),
+        hot_peak: sim.peak_occupancy(HOT) as u64,
+        docs_processed: total_docs,
+        wall,
+        throughput_docs_per_sec: throughput,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::demo_fleet;
+
+    fn tiny_config(mode: FleetMode, capacity: u64, workers: usize) -> FleetConfig {
+        FleetConfig {
+            hot_capacity: capacity,
+            workers,
+            channel_capacity: 16,
+            batch: 8,
+            t_len: 64,
+            seed: 7,
+            mode,
+        }
+    }
+
+    #[test]
+    fn fleet_completes_and_conserves_ledger() {
+        let specs = demo_fleet(4, 300, 8, true, 1);
+        let expected_docs: u64 = specs.iter().map(|s| s.model.n).sum();
+        let report =
+            run_fleet(&specs, &tiny_config(FleetMode::Arbitrated, 16, 2)).unwrap();
+        assert_eq!(report.docs_processed, expected_docs);
+        assert_eq!(report.streams.len(), 4);
+        let total = report.total_cost();
+        assert!(total > 0.0);
+        assert!(
+            (total - report.per_stream_total()).abs() < 1e-6 * total.max(1.0),
+            "fleet ${total} vs Σ streams ${}",
+            report.per_stream_total()
+        );
+        // every stream retained its full top-K
+        for s in &report.streams {
+            assert_eq!(s.hot_reads + s.cold_reads, s.k.min(s.n));
+        }
+    }
+
+    #[test]
+    fn arbitrated_respects_capacity_with_zero_demotions() {
+        let specs = demo_fleet(6, 250, 10, true, 3);
+        let cap = 12u64;
+        let report =
+            run_fleet(&specs, &tiny_config(FleetMode::Arbitrated, cap, 3)).unwrap();
+        assert!(report.arbitration.oversubscribed);
+        assert!(report.hot_peak <= cap, "peak {} > capacity {cap}", report.hot_peak);
+        assert_eq!(report.demotions(), 0);
+    }
+
+    #[test]
+    fn naive_respects_capacity_via_demotion() {
+        let specs = demo_fleet(6, 250, 10, true, 3);
+        let cap = 12u64;
+        let report = run_fleet(&specs, &tiny_config(FleetMode::Naive, cap, 1)).unwrap();
+        assert!(report.hot_peak <= cap, "peak {} > capacity {cap}", report.hot_peak);
+        assert!(report.demotions() > 0, "pressure must thrash the naive fleet");
+        let total = report.total_cost();
+        assert!((total - report.per_stream_total()).abs() < 1e-6 * total.max(1.0));
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts_in_arbitrated_mode() {
+        // Arbitrated placement depends only on per-stream sequences, which
+        // are seeded independently of worker partitioning.
+        let specs = demo_fleet(5, 200, 6, true, 11);
+        let a = run_fleet(&specs, &tiny_config(FleetMode::Arbitrated, 10, 1)).unwrap();
+        let b = run_fleet(&specs, &tiny_config(FleetMode::Arbitrated, 10, 5)).unwrap();
+        // per-stream ledgers accumulate in per-stream order → bitwise equal;
+        // the fleet total only differs by float summation order.
+        for (x, y) in a.streams.iter().zip(b.streams.iter()) {
+            assert_eq!(x.measured, y.measured, "stream {}", x.id);
+        }
+        let rel = (a.total_cost() - b.total_cost()).abs() / a.total_cost().max(1e-12);
+        assert!(rel < 1e-9, "fleet totals diverged: rel {rel}");
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(run_fleet(&[], &FleetConfig::default()).is_err());
+        let mut specs = demo_fleet(2, 50, 3, false, 1);
+        specs[1].id = 5;
+        assert!(run_fleet(&specs, &FleetConfig::default()).is_err());
+    }
+}

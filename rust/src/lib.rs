@@ -22,12 +22,15 @@
 //!
 //! Start with [`cost::case_study_1`], [`policy`], and
 //! [`pipeline`]; the `shptier` binary exposes every paper
-//! experiment via `shptier exp --id <E#>`.
+//! experiment via `shptier exp --id <E#>`. Multi-tenant serving —
+//! many concurrent top-K streams arbitrated over shared, capacity-limited
+//! tiers — lives in [`fleet`] (`shptier fleet --streams 16`).
 
 pub mod benchkit;
 pub mod config;
 pub mod cost;
 pub mod exp;
+pub mod fleet;
 pub mod interestingness;
 pub mod pipeline;
 pub mod report;

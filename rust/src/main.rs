@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run [--config <path>]        run the streaming pipeline from a TOML config
+//!   fleet [--streams M] [...]    run M concurrent top-K streams over shared tiers
 //!   exp --id <id> [--quick]      regenerate a paper table/figure (see DESIGN.md §4)
 //!   optimize [--preset <p>]      print r* and the strategy ranking for an economy
 //!   validate [--quick]           Monte-Carlo validation suite (E1, E2, A2)
@@ -10,7 +11,7 @@
 //! Argument parsing is hand-rolled: the vendored crate set has no clap.
 
 use anyhow::{bail, Context, Result};
-use shptier::config::{LaunchConfig, ScorerKind};
+use shptier::config::{FleetLaunchConfig, LaunchConfig, ScorerKind};
 use shptier::cost::{case_study_1, case_study_2, expected_cost, rank_strategies};
 use shptier::exp;
 use shptier::pipeline::{native_scorer_factory, pjrt_scorer_factory, run_pipeline};
@@ -63,6 +64,7 @@ fn real_main() -> Result<()> {
 
     match cmd.as_str() {
         "run" => cmd_run(&flags),
+        "fleet" => cmd_fleet(&flags, seed),
         "exp" => {
             let id = flags.get("id").map(String::as_str).unwrap_or("all");
             exp::run(id, seed, quick)
@@ -141,6 +143,72 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `shptier fleet` — run M concurrent top-K streams over shared
+/// capacity-limited tiers, printing the arbitration plan and the
+/// per-stream reconciliation.
+fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
+    let mut launch = match flags.get("config") {
+        Some(path) => FleetLaunchConfig::from_file(std::path::Path::new(path))?,
+        None => FleetLaunchConfig::from_toml("")?,
+    };
+    // flag overrides (flags win over the config file)
+    let parse_u64 = |key: &str| -> Result<Option<u64>> {
+        flags
+            .get(key)
+            .map(|s| s.parse::<u64>().with_context(|| format!("--{key} must be an integer")))
+            .transpose()
+    };
+    if flags.contains_key("seed") {
+        launch.config.seed = seed;
+    }
+    let streams_flag = parse_u64("streams")?;
+    let docs_flag = parse_u64("docs")?;
+    let k_flag = parse_u64("k")?;
+    if streams_flag.is_some() || docs_flag.is_some() || k_flag.is_some() {
+        // any workload flag rebuilds the demo fleet; unspecified dimensions
+        // keep their defaults
+        let m = streams_flag.unwrap_or(launch.specs.len() as u64).max(1);
+        let n = docs_flag.unwrap_or(2_000).max(1);
+        let k = k_flag.unwrap_or(32).max(1);
+        launch.specs =
+            shptier::fleet::demo_fleet(m as usize, n, k, true, launch.config.seed);
+        if !flags.contains_key("capacity") {
+            // re-derive the default contended capacity for the new fleet
+            let demand: u64 = launch
+                .specs
+                .iter()
+                .map(|s| shptier::cost::hot_demand(&s.model, false))
+                .sum();
+            launch.config.hot_capacity = (demand / 2).max(1);
+        }
+    }
+    if let Some(c) = parse_u64("capacity")? {
+        launch.config.hot_capacity = c;
+    }
+    if let Some(w) = parse_u64("workers")? {
+        launch.config.workers = w.max(1) as usize;
+    }
+    if let Some(mode) = flags.get("mode") {
+        launch.config.mode = match mode.as_str() {
+            "arbitrated" => shptier::fleet::FleetMode::Arbitrated,
+            "naive" => shptier::fleet::FleetMode::Naive,
+            other => bail!("unknown fleet mode '{other}' (arbitrated | naive)"),
+        };
+    }
+
+    println!(
+        "launching fleet: {} streams, hot capacity {}, {} workers, mode {:?}",
+        launch.specs.len(),
+        launch.config.hot_capacity,
+        launch.config.workers,
+        launch.config.mode
+    );
+    let report = shptier::fleet::run_fleet(&launch.specs, &launch.config)?;
+    println!("{}", report.table().render());
+    println!("{}", report.summary());
+    Ok(())
+}
+
 fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
     let preset = flags.get("preset").map(String::as_str).unwrap_or("case-study-1");
     let model = match preset {
@@ -165,6 +233,8 @@ fn print_usage() {
 
 USAGE:
   shptier run [--config configs/case_study_2.toml]
+  shptier fleet [--streams M] [--docs N] [--k K] [--capacity C]
+                [--workers W] [--mode arbitrated|naive] [--config configs/fleet.toml]
   shptier exp --id <{}> [--quick] [--seed N]
   shptier optimize [--preset case-study-1|case-study-2]
   shptier validate [--quick]

@@ -45,7 +45,12 @@ pub struct PlacementEngine {
 
 impl PlacementEngine {
     /// `n` is the total stream length (the paper's fixed-length window).
-    pub fn new(model: &CostModel, n: u64, policy: &dyn PlacementPolicy, record_series: bool) -> Self {
+    pub fn new(
+        model: &CostModel,
+        n: u64,
+        policy: &dyn PlacementPolicy,
+        record_series: bool,
+    ) -> Self {
         assert!(n > 0);
         let k = (model.k as usize).min(n as usize);
         Self {
@@ -102,6 +107,11 @@ impl PlacementEngine {
     /// Documents observed so far.
     pub fn observed(&self) -> u64 {
         self.next_index
+    }
+
+    /// Read-only view of the storage simulator (tests and diagnostics).
+    pub fn sim(&self) -> &StorageSim {
+        &self.sim
     }
 
     /// Current top-K threshold score (None until K docs seen).

@@ -9,11 +9,13 @@
 
 mod engine;
 mod executor;
+mod quota;
 mod reactive;
 mod shp_policies;
 
 pub use engine::{PlacementEngine, RunResult};
 pub use executor::{run_policy, run_policy_with_trace};
+pub use quota::{QuotaChangeover, QuotaChangeoverMigrate};
 pub use reactive::{AgeBasedDemotion, SkiRental};
 pub use shp_policies::{Changeover, ChangeoverMigrate, SingleTier};
 

@@ -1,0 +1,228 @@
+//! Quota-constrained variants of the proactive policies.
+//!
+//! Under shared hot-tier capacity (the fleet regime) a stream is assigned a
+//! *hot quota*: the maximum number of its documents that may be resident in
+//! tier A simultaneously. These policies keep the paper's "first r to A"
+//! structure but degrade over-quota placements to tier B instead of
+//! rejecting the write — the arbiter's degradation-over-rejection rule.
+//!
+//! With `r ≤ quota` the quota can never bind (hot residency is at most
+//! `min(r, K)`) and the policies coincide exactly with
+//! [`super::Changeover`] / [`super::ChangeoverMigrate`]. With `r > quota`
+//! they fill the quota's hot slots and spill the rest cold — the
+//! occupancy resync is one step conservative, so the cap is never
+//! exceeded. [`QuotaChangeover::budgeted`] picks `r` via
+//! [`crate::cost::optimal_r_budgeted`], which clamps `r = quota` whenever
+//! the unconstrained optimum's demand `min(r*, K)` would not fit.
+//!
+//! The occupancy count is resynced from the simulator after every step
+//! (`on_step`), so single-stream runs track tier-A residency exactly. In a
+//! shared simulator the fleet's [`crate::fleet::stream::StreamState`]
+//! tracks per-stream counts itself and consults [`QuotaChangeover::wants_hot`]
+//! directly.
+
+use super::{MigrationOrder, PlacementPolicy};
+use crate::cost::{optimal_r_budgeted, CostModel};
+use crate::storage::{StorageSim, TierId};
+
+/// "First r to A, the rest to B", with at most `quota` simultaneous hot
+/// residents; over-quota placements degrade to B. No migration.
+#[derive(Debug, Clone, Copy)]
+pub struct QuotaChangeover {
+    r: u64,
+    quota: usize,
+    hot_in_use: usize,
+}
+
+impl QuotaChangeover {
+    pub fn new(r: u64, quota: usize) -> Self {
+        Self { r, quota, hot_in_use: 0 }
+    }
+
+    /// Configure from a cost model and a hot-tier budget: recomputes the
+    /// changeover point under the shrunken budget (the arbiter's rule).
+    pub fn budgeted(model: &CostModel, hot_quota: u64) -> Self {
+        Self::new(optimal_r_budgeted(model, false, hot_quota).r, hot_quota as usize)
+    }
+
+    pub fn r(&self) -> u64 {
+        self.r
+    }
+
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+
+    /// The placement rule, exposed for callers that track occupancy
+    /// themselves (the fleet stream runner).
+    pub fn wants_hot(r: u64, quota: usize, index: u64, hot_in_use: usize) -> bool {
+        index < r && hot_in_use < quota
+    }
+}
+
+impl PlacementPolicy for QuotaChangeover {
+    fn name(&self) -> String {
+        format!("changeover(r={},q={})", self.r, self.quota)
+    }
+
+    fn place(&mut self, index: u64, _n: u64) -> TierId {
+        if Self::wants_hot(self.r, self.quota, index, self.hot_in_use) {
+            self.hot_in_use += 1;
+            TierId::A
+        } else {
+            TierId::B
+        }
+    }
+
+    fn on_step(&mut self, _index: u64, _n: u64, sim: &StorageSim) -> Vec<MigrationOrder> {
+        // Resync with actual residency: evictions free hot slots for later
+        // (still index < r) documents. Between resyncs the internal count
+        // only over-estimates, so the quota is never exceeded.
+        self.hot_in_use = sim.tier(TierId::A).len();
+        Vec::new()
+    }
+}
+
+/// Quota-constrained changeover with bulk migration at `i == r` (paper
+/// Fig. 3 DO_MIGRATE, fleet-degraded form).
+#[derive(Debug, Clone, Copy)]
+pub struct QuotaChangeoverMigrate {
+    r: u64,
+    quota: usize,
+    hot_in_use: usize,
+    migrated: bool,
+}
+
+impl QuotaChangeoverMigrate {
+    pub fn new(r: u64, quota: usize) -> Self {
+        Self { r, quota, hot_in_use: 0, migrated: false }
+    }
+
+    /// Configure from a cost model and a hot-tier budget.
+    pub fn budgeted(model: &CostModel, hot_quota: u64) -> Self {
+        Self::new(optimal_r_budgeted(model, true, hot_quota).r, hot_quota as usize)
+    }
+}
+
+impl PlacementPolicy for QuotaChangeoverMigrate {
+    fn name(&self) -> String {
+        format!("changeover+migrate(r={},q={})", self.r, self.quota)
+    }
+
+    fn place(&mut self, index: u64, _n: u64) -> TierId {
+        if !self.migrated
+            && QuotaChangeover::wants_hot(self.r, self.quota, index, self.hot_in_use)
+        {
+            self.hot_in_use += 1;
+            TierId::A
+        } else {
+            TierId::B
+        }
+    }
+
+    fn on_step(&mut self, index: u64, _n: u64, sim: &StorageSim) -> Vec<MigrationOrder> {
+        if !self.migrated && index >= self.r {
+            self.migrated = true;
+            self.hot_in_use = 0;
+            vec![MigrationOrder::All { from: TierId::A, to: TierId::B }]
+        } else {
+            self.hot_in_use = sim.tier(TierId::A).len();
+            Vec::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, PerDocCosts};
+    use crate::policy::{run_policy, Changeover, ChangeoverMigrate, PlacementEngine};
+    use crate::util::Rng;
+
+    fn model(n: u64, k: u64) -> CostModel {
+        CostModel::new(
+            n,
+            k,
+            PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.2 },
+            PerDocCosts { write: 3.0, read: 0.5, rent_window: 0.1 },
+        )
+    }
+
+    fn scores(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.next_f64()).collect()
+    }
+
+    #[test]
+    fn budget_regime_matches_plain_changeover() {
+        // The arbiter always configures r ≤ quota, where the quota can
+        // never bind (hot residency ≤ min(r, K) ≤ quota) and the policy
+        // must coincide exactly with the unconstrained Changeover.
+        let m = model(800, 12);
+        let trace = scores(800, 5);
+        let mut plain = Changeover::new(300);
+        let a = run_policy(&trace, &m, &mut plain).unwrap();
+        let mut quota = QuotaChangeover::new(300, 300); // r ≤ quota
+        let b = run_policy(&trace, &m, &mut quota).unwrap();
+        assert_eq!(a.retained, b.retained);
+        assert!((a.total_cost() - b.total_cost()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_regime_matches_plain_changeover_migrate() {
+        let m = model(600, 8);
+        let trace = scores(600, 9);
+        let mut plain = ChangeoverMigrate::new(200);
+        let a = run_policy(&trace, &m, &mut plain).unwrap();
+        let mut quota = QuotaChangeoverMigrate::new(200, 200); // r ≤ quota
+        let b = run_policy(&trace, &m, &mut quota).unwrap();
+        assert_eq!(a.retained, b.retained);
+        assert!((a.total_cost() - b.total_cost()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hot_occupancy_never_exceeds_quota() {
+        let m = model(500, 20);
+        let quota = 5usize;
+        let mut p = QuotaChangeover::new(400, quota);
+        let mut engine = PlacementEngine::new(&m, 500, &p, false);
+        let mut rng = Rng::new(3);
+        let mut ever_hot = 0usize;
+        for _ in 0..500 {
+            engine.observe(rng.next_f64(), &mut p).unwrap();
+            let hot = engine.sim().tier(TierId::A).len();
+            assert!(hot <= quota, "hot occupancy {hot} > quota {quota}");
+            ever_hot = ever_hot.max(hot);
+        }
+        assert_eq!(ever_hot, quota, "quota slots should actually be used");
+        let result = engine.finish().unwrap();
+        assert_eq!(result.retained.len(), 20);
+    }
+
+    #[test]
+    fn zero_quota_degrades_fully_to_cold() {
+        let m = model(300, 6);
+        let trace = scores(300, 11);
+        let mut p = QuotaChangeover::new(200, 0);
+        let r = run_policy(&trace, &m, &mut p).unwrap();
+        assert_eq!(r.ledger.tier(TierId::A).writes, 0);
+        assert!(r.ledger.tier(TierId::B).writes > 0);
+    }
+
+    #[test]
+    fn budgeted_constructor_clamps_r() {
+        // hot-friendly economics with interior r*
+        let m = CostModel::new(
+            10_000,
+            100,
+            PerDocCosts { write: 1e-6, read: 1e-4, rent_window: 0.0 },
+            PerDocCosts { write: 5e-5, read: 1e-6, rent_window: 0.0 },
+        )
+        .with_rent(false);
+        let p = QuotaChangeover::budgeted(&m, 10);
+        assert_eq!(p.r(), 10);
+        assert_eq!(p.quota(), 10);
+        let ample = QuotaChangeover::budgeted(&m, m.k);
+        assert!(ample.r() > m.k, "ample quota keeps the unconstrained r*");
+    }
+}

@@ -13,7 +13,10 @@ pub mod overwrite;
 pub use analysis::{
     empirical_write_rate, fit_write_curve, spearman_position_correlation, WriteCurveFit,
 };
-pub use classic::{optimal_r as classic_optimal_r, p_hire_best, p_hire_best_analytic, run_classic, ClassicOutcome};
+pub use classic::{
+    optimal_r as classic_optimal_r, p_hire_best, p_hire_best_analytic, run_classic,
+    ClassicOutcome,
+};
 pub use overwrite::{
     mean_cumulative_writes, mean_writes, run_overwrite, run_overwrite_scores, OverwriteOutcome,
 };

@@ -4,11 +4,26 @@
 //! [`TierState`]s, charging every operation and every doc-window of rent to
 //! the [`Ledger`]. Stream position is mapped linearly onto the stream
 //! window: document `i` of `N` happens at window fraction `i/N`.
+//!
+//! ## Multi-stream extensions (fleet)
+//!
+//! - **Capacity**: each tier may carry a resident-count limit
+//!   ([`StorageSim::set_capacity`]); `put`/`migrate_doc` refuse to overfill.
+//! - **Attribution**: [`StorageSim::set_attribution`] names the stream that
+//!   owns subsequently written documents. Every charge for a document —
+//!   write, read, delete, rent, migration hop — is mirrored into the owning
+//!   stream's private [`Ledger`], so the fleet-wide ledger always equals the
+//!   sum of the per-stream ledgers.
+//! - **Per-stream economics**: [`StorageSim::register_stream`] installs a
+//!   stream-specific per-doc cost vector (one `PerDocCosts` per tier), so
+//!   heterogeneous workloads (different doc sizes / channels) can share the
+//!   same physical tiers. Unregistered owners fall back to the tier costs.
 
 use super::ledger::Ledger;
 use super::tier::{TierId, TierState};
 use crate::cost::PerDocCosts;
 use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
 #[derive(Debug, Clone)]
 pub struct StorageSim {
@@ -16,16 +31,18 @@ pub struct StorageSim {
     ledger: Ledger,
     /// Whether rent is charged (mirrors `CostModel::include_rent`).
     charge_rent: bool,
+    /// Stream that owns documents written by subsequent `put`s.
+    attribution: Option<u64>,
+    /// Per-stream ledger mirrors (fleet accounting).
+    stream_ledgers: BTreeMap<u64, Ledger>,
+    /// Per-stream per-tier effective costs (heterogeneous economics).
+    stream_costs: BTreeMap<u64, Vec<PerDocCosts>>,
 }
 
 impl StorageSim {
     /// Standard two-tier setup from effective per-doc costs.
     pub fn two_tier(a: PerDocCosts, b: PerDocCosts, charge_rent: bool) -> Self {
-        Self {
-            tiers: vec![TierState::new(TierId::A, a), TierState::new(TierId::B, b)],
-            ledger: Ledger::new(),
-            charge_rent,
-        }
+        Self::with_tiers(vec![a, b], charge_rent)
     }
 
     /// Arbitrary tier list (multi-tier extension).
@@ -38,6 +55,9 @@ impl StorageSim {
                 .collect(),
             ledger: Ledger::new(),
             charge_rent,
+            attribution: None,
+            stream_ledgers: BTreeMap::new(),
+            stream_costs: BTreeMap::new(),
         }
     }
 
@@ -57,12 +77,121 @@ impl StorageSim {
         &self.ledger
     }
 
+    // ---- fleet extensions --------------------------------------------------
+
+    /// Limit `tier` to `capacity` simultaneous residents (None = unbounded).
+    pub fn set_capacity(&mut self, tier: TierId, capacity: Option<usize>) {
+        self.tier_mut(tier).set_capacity(capacity);
+    }
+
+    /// Whether `tier` can accept one more resident.
+    pub fn has_room(&self, tier: TierId) -> bool {
+        !self.tier(tier).is_full()
+    }
+
+    /// High-water mark of simultaneous residents on `tier`.
+    pub fn peak_occupancy(&self, tier: TierId) -> usize {
+        self.tier(tier).peak_len()
+    }
+
+    /// Attribute subsequent writes to `stream` (None = unattributed).
+    pub fn set_attribution(&mut self, stream: Option<u64>) {
+        self.attribution = stream;
+    }
+
+    /// Install per-tier effective costs for one stream's documents.
+    pub fn register_stream(&mut self, stream: u64, costs: Vec<PerDocCosts>) -> Result<()> {
+        if costs.len() != self.tiers.len() {
+            bail!(
+                "register_stream: {} cost entries for {} tiers",
+                costs.len(),
+                self.tiers.len()
+            );
+        }
+        self.stream_costs.insert(stream, costs);
+        Ok(())
+    }
+
+    /// The accumulated ledger of one stream (empty if it never operated).
+    pub fn stream_ledger(&self, stream: u64) -> Ledger {
+        self.stream_ledgers.get(&stream).cloned().unwrap_or_default()
+    }
+
+    /// Iterate the per-stream ledgers.
+    pub fn stream_ledgers(&self) -> impl Iterator<Item = (&u64, &Ledger)> {
+        self.stream_ledgers.iter()
+    }
+
+    /// Owning stream of a resident document, if any.
+    pub fn owner_of(&self, doc: u64) -> Option<u64> {
+        self.tiers
+            .iter()
+            .find_map(|t| t.get(doc))
+            .and_then(|r| r.owner)
+    }
+
+    /// The longest-resident document of `tier` (reactive-demotion victim).
+    pub fn oldest_resident(&self, tier: TierId) -> Option<u64> {
+        self.tier(tier).oldest()
+    }
+
+    /// Effective costs of `tier` for documents owned by `owner`.
+    fn costs_for(&self, owner: Option<u64>, tier: TierId) -> PerDocCosts {
+        owner
+            .and_then(|sid| self.stream_costs.get(&sid))
+            .map(|v| v[tier.0])
+            .unwrap_or(self.tiers[tier.0].costs)
+    }
+
+    // ---- attributed charge helpers ----------------------------------------
+
+    fn charge_write_to(&mut self, owner: Option<u64>, t: TierId, cost: f64) {
+        self.ledger.charge_write(t, cost);
+        if let Some(sid) = owner {
+            self.stream_ledgers.entry(sid).or_default().charge_write(t, cost);
+        }
+    }
+
+    fn charge_read_to(&mut self, owner: Option<u64>, t: TierId, cost: f64) {
+        self.ledger.charge_read(t, cost);
+        if let Some(sid) = owner {
+            self.stream_ledgers.entry(sid).or_default().charge_read(t, cost);
+        }
+    }
+
+    fn charge_delete_to(&mut self, owner: Option<u64>, t: TierId) {
+        self.ledger.charge_delete(t);
+        if let Some(sid) = owner {
+            self.stream_ledgers.entry(sid).or_default().charge_delete(t);
+        }
+    }
+
+    fn charge_rent_to(&mut self, owner: Option<u64>, t: TierId, frac: f64, rent_window: f64) {
+        self.ledger.charge_rent(t, frac, rent_window);
+        if let Some(sid) = owner {
+            self.stream_ledgers
+                .entry(sid)
+                .or_default()
+                .charge_rent(t, frac, rent_window);
+        }
+    }
+
+    fn tag_migration_to(&mut self, owner: Option<u64>, t: TierId, cost: f64) {
+        self.ledger.tag_migration(t, cost);
+        if let Some(sid) = owner {
+            self.stream_ledgers.entry(sid).or_default().tag_migration(t, cost);
+        }
+    }
+
+    // ---- operations --------------------------------------------------------
+
     /// Locate a document (linear in tier count — tiers are few).
     pub fn locate(&self, doc: u64) -> Option<TierId> {
         self.tiers.iter().find(|t| t.contains(doc)).map(|t| t.id)
     }
 
-    /// Write a document into `tier` at window fraction `at`.
+    /// Write a document into `tier` at window fraction `at`, owned by the
+    /// current attribution stream. Fails if the tier is at capacity.
     pub fn put(&mut self, doc: u64, tier: TierId, at: f64) -> Result<()> {
         if tier.0 >= self.tiers.len() {
             bail!("unknown tier {tier:?}");
@@ -70,9 +199,17 @@ impl StorageSim {
         if let Some(existing) = self.locate(doc) {
             bail!("doc {doc} already resident in tier {existing:?}");
         }
-        let cost = self.tiers[tier.0].costs.write;
-        self.tier_mut(tier).insert(doc, at);
-        self.ledger.charge_write(tier, cost);
+        if self.tiers[tier.0].is_full() {
+            bail!(
+                "put: tier {} at capacity ({})",
+                tier.label(),
+                self.tiers[tier.0].capacity().unwrap_or(0)
+            );
+        }
+        let owner = self.attribution;
+        let cost = self.costs_for(owner, tier).write;
+        self.tier_mut(tier).insert_owned(doc, at, owner);
+        self.charge_write_to(owner, tier, cost);
         Ok(())
     }
 
@@ -83,12 +220,13 @@ impl StorageSim {
             None => bail!("delete: doc {doc} not resident"),
         };
         let resident = self.tier_mut(tier).remove(doc).unwrap();
+        let owner = resident.owner;
         if self.charge_rent {
             let frac = (at - resident.written_at).max(0.0);
-            let rent_window = self.tiers[tier.0].costs.rent_window;
-            self.ledger.charge_rent(tier, frac, rent_window);
+            let rent_window = self.costs_for(owner, tier).rent_window;
+            self.charge_rent_to(owner, tier, frac, rent_window);
         }
-        self.ledger.charge_delete(tier);
+        self.charge_delete_to(owner, tier);
         Ok(tier)
     }
 
@@ -98,14 +236,16 @@ impl StorageSim {
             Some(t) => t,
             None => bail!("read: doc {doc} not resident"),
         };
-        let cost = self.tiers[tier.0].costs.read;
-        self.ledger.charge_read(tier, cost);
+        let owner = self.tiers[tier.0].get(doc).unwrap().owner;
+        let cost = self.costs_for(owner, tier).read;
+        self.charge_read_to(owner, tier, cost);
         Ok(tier)
     }
 
     /// Move one document `from → to` at window fraction `at`: settles rent
     /// on the source, charges a source read + destination write, tags both
-    /// as migration ops.
+    /// as migration ops. Charges go to the document's owner. Fails if the
+    /// destination tier is at capacity.
     pub fn migrate_doc(&mut self, doc: u64, to: TierId, at: f64) -> Result<()> {
         let from = match self.locate(doc) {
             Some(t) => t,
@@ -114,24 +254,35 @@ impl StorageSim {
         if from == to {
             return Ok(());
         }
+        if to.0 >= self.tiers.len() {
+            bail!("unknown tier {to:?}");
+        }
+        if self.tiers[to.0].is_full() {
+            bail!(
+                "migrate: tier {} at capacity ({})",
+                to.label(),
+                self.tiers[to.0].capacity().unwrap_or(0)
+            );
+        }
         let resident = self.tier_mut(from).remove(doc).unwrap();
+        let owner = resident.owner;
         if self.charge_rent {
             let frac = (at - resident.written_at).max(0.0);
-            let rent_window = self.tiers[from.0].costs.rent_window;
-            self.ledger.charge_rent(from, frac, rent_window);
+            let rent_window = self.costs_for(owner, from).rent_window;
+            self.charge_rent_to(owner, from, frac, rent_window);
         }
-        let read_cost = self.tiers[from.0].costs.read;
-        self.ledger.charge_read(from, read_cost);
-        self.ledger.tag_migration(from, read_cost);
-        let write_cost = self.tiers[to.0].costs.write;
-        self.tier_mut(to).insert(doc, at);
-        self.ledger.charge_write(to, write_cost);
-        self.ledger.tag_migration(to, write_cost);
+        let read_cost = self.costs_for(owner, from).read;
+        self.charge_read_to(owner, from, read_cost);
+        self.tag_migration_to(owner, from, read_cost);
+        let write_cost = self.costs_for(owner, to).write;
+        self.tier_mut(to).insert_owned(doc, at, owner);
+        self.charge_write_to(owner, to, write_cost);
+        self.tag_migration_to(owner, to, write_cost);
         Ok(())
     }
 
     /// Bulk-migrate every resident of `from` into `to` (paper Fig. 3,
-    /// DO_MIGRATE branch at `i == r`).
+    /// DO_MIGRATE branch at `i == r`). Fails partway if `to` fills up.
     pub fn migrate_all(&mut self, from: TierId, to: TierId, at: f64) -> Result<u64> {
         let docs = self.tier(from).docs();
         let n = docs.len() as u64;
@@ -149,14 +300,15 @@ impl StorageSim {
         }
         for t in 0..self.tiers.len() {
             let tier = TierId(t);
-            let rent_window = self.tiers[t].costs.rent_window;
             for doc in self.tiers[t].docs() {
                 let resident = *self.tiers[t].get(doc).unwrap();
+                let owner = resident.owner;
                 let frac = (at - resident.written_at).max(0.0);
-                self.ledger.charge_rent(tier, frac, rent_window);
+                let rent_window = self.costs_for(owner, tier).rent_window;
+                self.charge_rent_to(owner, tier, frac, rent_window);
                 // reset the clock so double-settling is impossible
                 self.tier_mut(tier).remove(doc);
-                self.tier_mut(tier).insert(doc, at);
+                self.tier_mut(tier).insert_owned(doc, at, owner);
             }
         }
     }
@@ -273,5 +425,77 @@ mod tests {
         assert_eq!(s.num_tiers(), 4);
         s.put(9, TierId(3), 0.0).unwrap();
         assert_eq!(s.locate(9), Some(TierId(3)));
+    }
+
+    #[test]
+    fn capacity_rejects_overfill_put_and_migrate() {
+        let mut s = sim();
+        s.set_capacity(TierId::A, Some(2));
+        s.put(1, TierId::A, 0.0).unwrap();
+        s.put(2, TierId::A, 0.0).unwrap();
+        assert!(!s.has_room(TierId::A));
+        assert!(s.put(3, TierId::A, 0.1).is_err());
+        s.put(3, TierId::B, 0.1).unwrap();
+        assert!(s.migrate_doc(3, TierId::A, 0.2).is_err());
+        // freeing a slot re-admits
+        s.delete(1, 0.3).unwrap();
+        s.put(4, TierId::A, 0.3).unwrap();
+        assert_eq!(s.peak_occupancy(TierId::A), 2);
+    }
+
+    #[test]
+    fn attribution_mirrors_charges_per_stream() {
+        let mut s = sim();
+        s.set_attribution(Some(0));
+        s.put(1, TierId::A, 0.0).unwrap();
+        s.set_attribution(Some(1));
+        s.put(2, TierId::B, 0.0).unwrap();
+        // reads/deletes follow the *owner*, not the current attribution
+        s.set_attribution(Some(0));
+        s.read(2).unwrap();
+        s.migrate_doc(1, TierId::B, 0.5).unwrap();
+        s.settle_rent(1.0);
+        let total = s.ledger().total();
+        let split: f64 = s.stream_ledgers().map(|(_, l)| l.total()).sum();
+        assert!((total - split).abs() < 1e-9, "fleet {total} vs Σstreams {split}");
+        // ownership is per-doc, regardless of the ambient attribution
+        assert_eq!(s.owner_of(1), Some(0));
+        assert_eq!(s.owner_of(2), Some(1));
+        assert_eq!(s.owner_of(99), None);
+        // stream 1 owns doc 2: its ledger got the read
+        assert_eq!(s.stream_ledger(1).total_reads(), 1);
+        // stream 0 owns doc 1: its ledger got the migration hop
+        assert!((s.stream_ledger(0).migration_total() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_stream_costs_override_tier_costs() {
+        let mut s = sim();
+        s.register_stream(
+            7,
+            vec![
+                PerDocCosts { write: 5.0, read: 0.5, rent_window: 10.0 },
+                PerDocCosts { write: 6.0, read: 0.6, rent_window: 20.0 },
+            ],
+        )
+        .unwrap();
+        s.set_attribution(Some(7));
+        s.put(1, TierId::A, 0.0).unwrap();
+        assert_eq!(s.ledger().tier(TierId::A).write_cost, 5.0);
+        // unattributed writes still use tier defaults
+        s.set_attribution(None);
+        s.put(2, TierId::A, 0.0).unwrap();
+        assert_eq!(s.ledger().tier(TierId::A).write_cost, 6.0);
+        // wrong arity rejected
+        assert!(s.register_stream(8, vec![]).is_err());
+    }
+
+    #[test]
+    fn oldest_resident_for_demotion() {
+        let mut s = sim();
+        s.put(5, TierId::A, 0.2).unwrap();
+        s.put(6, TierId::A, 0.1).unwrap();
+        assert_eq!(s.oldest_resident(TierId::A), Some(6));
+        assert_eq!(s.oldest_resident(TierId::B), None);
     }
 }

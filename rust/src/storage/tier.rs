@@ -23,27 +23,35 @@ impl TierId {
 }
 
 /// A resident object: when it was written, as a fraction of the stream
-/// window (stream position i/N ↦ wall-clock fraction).
+/// window (stream position i/N ↦ wall-clock fraction), and — under
+/// multi-stream (fleet) runs — which stream owns it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Resident {
     /// Document stream index.
     pub doc: u64,
     /// Window fraction at write time, in [0, 1].
     pub written_at: f64,
+    /// Owning stream id for ledger attribution (None in single-stream runs).
+    pub owner: Option<u64>,
 }
 
-/// Simulated state of one tier: its effective per-document costs and the
-/// set of resident objects.
+/// Simulated state of one tier: its effective per-document costs, an
+/// optional capacity limit (resident-object count), and the set of
+/// resident objects.
 #[derive(Debug, Clone)]
 pub struct TierState {
     pub id: TierId,
     pub costs: PerDocCosts,
     residents: HashMap<u64, Resident>,
+    /// Maximum simultaneous residents (None = unbounded, the paper's model).
+    capacity: Option<usize>,
+    /// High-water mark of simultaneous residents over the run.
+    peak_len: usize,
 }
 
 impl TierState {
     pub fn new(id: TierId, costs: PerDocCosts) -> Self {
-        Self { id, costs, residents: HashMap::new() }
+        Self { id, costs, residents: HashMap::new(), capacity: None, peak_len: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -54,12 +62,48 @@ impl TierState {
         self.residents.is_empty()
     }
 
+    /// Capacity limit in resident objects (None = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    pub fn set_capacity(&mut self, capacity: Option<usize>) {
+        self.capacity = capacity;
+    }
+
+    /// Whether an additional resident would exceed the capacity limit.
+    pub fn is_full(&self) -> bool {
+        matches!(self.capacity, Some(c) if self.residents.len() >= c)
+    }
+
+    /// Free resident slots (None = unbounded).
+    pub fn remaining(&self) -> Option<usize> {
+        self.capacity.map(|c| c.saturating_sub(self.residents.len()))
+    }
+
+    /// High-water mark of simultaneous residents.
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
     pub fn contains(&self, doc: u64) -> bool {
         self.residents.contains_key(&doc)
     }
 
     pub fn insert(&mut self, doc: u64, written_at: f64) -> Option<Resident> {
-        self.residents.insert(doc, Resident { doc, written_at })
+        self.insert_owned(doc, written_at, None)
+    }
+
+    /// Insert with stream attribution (fleet runs).
+    pub fn insert_owned(
+        &mut self,
+        doc: u64,
+        written_at: f64,
+        owner: Option<u64>,
+    ) -> Option<Resident> {
+        let prev = self.residents.insert(doc, Resident { doc, written_at, owner });
+        self.peak_len = self.peak_len.max(self.residents.len());
+        prev
     }
 
     pub fn remove(&mut self, doc: u64) -> Option<Resident> {
@@ -82,6 +126,21 @@ impl TierState {
         let mut v: Vec<u64> = self.residents.keys().copied().collect();
         v.sort_unstable();
         v
+    }
+
+    /// The longest-resident document (earliest `written_at`, ties broken by
+    /// lowest doc id for determinism). Used by reactive demotion under
+    /// capacity pressure.
+    pub fn oldest(&self) -> Option<u64> {
+        self.residents
+            .values()
+            .min_by(|a, b| {
+                a.written_at
+                    .partial_cmp(&b.written_at)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.doc.cmp(&b.doc))
+            })
+            .map(|r| r.doc)
     }
 }
 
@@ -121,5 +180,53 @@ mod tests {
         assert_eq!(TierId::A.label(), "A");
         assert_eq!(TierId::B.label(), "B");
         assert_eq!(TierId(4).label(), "T4");
+    }
+
+    #[test]
+    fn capacity_and_fullness() {
+        let mut t = TierState::new(TierId::A, costs());
+        assert!(!t.is_full());
+        assert_eq!(t.remaining(), None);
+        t.set_capacity(Some(2));
+        assert_eq!(t.remaining(), Some(2));
+        t.insert(1, 0.0);
+        assert!(!t.is_full());
+        t.insert(2, 0.1);
+        assert!(t.is_full());
+        assert_eq!(t.remaining(), Some(0));
+        t.remove(1);
+        assert!(!t.is_full());
+    }
+
+    #[test]
+    fn peak_len_tracks_high_water_mark() {
+        let mut t = TierState::new(TierId::A, costs());
+        for d in 0..5 {
+            t.insert(d, 0.0);
+        }
+        for d in 0..4 {
+            t.remove(d);
+        }
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.peak_len(), 5);
+    }
+
+    #[test]
+    fn oldest_is_earliest_then_lowest_id() {
+        let mut t = TierState::new(TierId::A, costs());
+        t.insert(3, 0.5);
+        t.insert(7, 0.1);
+        t.insert(9, 0.1);
+        assert_eq!(t.oldest(), Some(7));
+        t.remove(7);
+        assert_eq!(t.oldest(), Some(9));
+    }
+
+    #[test]
+    fn ownership_preserved() {
+        let mut t = TierState::new(TierId::A, costs());
+        t.insert_owned(1, 0.0, Some(4));
+        assert_eq!(t.get(1).unwrap().owner, Some(4));
+        assert_eq!(t.get(1).unwrap().doc, 1);
     }
 }

@@ -194,6 +194,80 @@ mod tests {
     }
 
     #[test]
+    fn prop_bounded_agrees_with_full_on_random_streams() {
+        // Property: across random streams (uniform scores, heavy-tie
+        // discretized scores, and sorted adversarial orders), the bounded
+        // tracker's final top-K membership and order match the exact
+        // full-ranking tracker, its heap invariant always holds, and a
+        // candidate is accepted exactly when its global rank at observation
+        // time is inside the top-K.
+        use crate::propcheck::{check, Config};
+        use crate::topk::FullRankTracker;
+
+        #[derive(Debug)]
+        struct Case {
+            k: usize,
+            order: u8, // 0 random, 1 ascending, 2 descending, 3 second-half sorted
+            scores: Vec<f64>,
+        }
+
+        let gen = |rng: &mut crate::util::Rng| {
+            let n = 1 + rng.next_below(400) as usize;
+            let k = 1 + rng.next_below(64) as usize;
+            let order = rng.next_below(4) as u8;
+            let discretize = rng.next_below(3) == 0;
+            let mut scores: Vec<f64> = (0..n)
+                .map(|_| {
+                    if discretize {
+                        rng.next_below(16) as f64 / 16.0 // force ties
+                    } else {
+                        rng.next_f64()
+                    }
+                })
+                .collect();
+            match order {
+                1 => scores.sort_by(|a, b| a.partial_cmp(b).unwrap()),
+                2 => {
+                    scores.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                }
+                3 => {
+                    let half = scores.len() / 2;
+                    scores[half..].sort_by(|a, b| a.partial_cmp(b).unwrap());
+                }
+                _ => {}
+            }
+            Case { k, order, scores }
+        };
+
+        check("bounded-vs-full", Config { cases: 120, seed: 0xB07B07 }, gen, |case| {
+            let mut bounded = BoundedTopK::new(case.k);
+            let mut full = FullRankTracker::new();
+            for (i, &s) in case.scores.iter().enumerate() {
+                let sc = Scored::new(i as u64, s);
+                // acceptance ⇔ strict-rank entry (paper eq. (5) semantics)
+                let enters = full.rank_of(sc) < case.k || full.len() < case.k;
+                let accepted = !matches!(bounded.offer(sc), Eviction::Rejected);
+                full.insert(sc);
+                if accepted != enters {
+                    return Err(format!(
+                        "doc {i} (order {}): accepted={accepted} but rank-entry={enters}",
+                        case.order
+                    ));
+                }
+                if !bounded.check_invariants() {
+                    return Err(format!("heap invariant broken at doc {i}"));
+                }
+            }
+            let got: Vec<u64> = bounded.sorted_desc().iter().map(|s| s.index).collect();
+            let want: Vec<u64> = full.top_k(case.k).iter().map(|s| s.index).collect();
+            if got != want {
+                return Err(format!("membership diverged: {got:?} != {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn write_count_matches_record_process() {
         // number of accepts+replaces over a random stream ≈ E[writes]
         let reps = 400;

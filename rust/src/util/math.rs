@@ -64,7 +64,12 @@ pub fn harmonic_diff(a: u64, b: u64) -> f64 {
 ///
 /// Returns `(argmin, min)`. Used to cross-check the closed-form `r*`
 /// solutions of eqs. (17)/(21) without assuming their sign conventions.
-pub fn golden_section_min<F: Fn(f64) -> f64>(f: F, mut lo: f64, mut hi: f64, tol: f64) -> (f64, f64) {
+pub fn golden_section_min<F: Fn(f64) -> f64>(
+    f: F,
+    mut lo: f64,
+    mut hi: f64,
+    tol: f64,
+) -> (f64, f64) {
     assert!(hi > lo);
     const INVPHI: f64 = 0.618_033_988_749_894_8;
     let mut c = hi - INVPHI * (hi - lo);

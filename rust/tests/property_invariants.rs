@@ -3,6 +3,7 @@
 //! `propcheck` harness (proptest is not in the vendored crate set).
 
 use shptier::cost::{expected_cost, CostModel, PerDocCosts, Strategy};
+use shptier::fleet::{run_fleet, FleetConfig, FleetMode, SeriesProfile, StreamSpec};
 use shptier::interestingness::extract;
 use shptier::policy::{
     run_policy, run_policy_with_trace, AgeBasedDemotion, Changeover, ChangeoverMigrate,
@@ -201,6 +202,106 @@ fn prop_measured_tracks_analytic() {
             Ok(())
         },
     );
+}
+
+#[derive(Debug)]
+struct FleetCase {
+    specs: Vec<StreamSpec>,
+    hot_capacity: u64,
+    naive: bool,
+    seed: u64,
+}
+
+fn fleet_case(rng: &mut Rng) -> FleetCase {
+    let m = 2 + rng.next_below(4) as usize;
+    let specs = (0..m)
+        .map(|i| {
+            let n = 60 + rng.next_below(150);
+            let k = 1 + rng.next_below(8).min(n - 1);
+            // random non-negative economics, rent INCLUDED so settle-time
+            // attribution is exercised
+            let a = PerDocCosts {
+                write: rng.range_f64(0.0, 2.0),
+                read: rng.range_f64(0.0, 2.0),
+                rent_window: rng.range_f64(0.0, 2.0),
+            };
+            let b = PerDocCosts {
+                write: rng.range_f64(0.0, 2.0),
+                read: rng.range_f64(0.0, 2.0),
+                rent_window: rng.range_f64(0.0, 2.0),
+            };
+            StreamSpec::new(
+                i as u64,
+                CostModel::new(n, k, a, b),
+                SeriesProfile::Mixed { p_oscillatory: 0.5 },
+            )
+        })
+        .collect::<Vec<_>>();
+    let sum_k: u64 = specs.iter().map(|s| s.model.k).sum();
+    FleetCase {
+        specs,
+        hot_capacity: rng.next_below(sum_k + 2), // includes 0 and over-demand
+        naive: rng.next_below(2) == 1,
+        seed: rng.next_u64(),
+    }
+}
+
+/// Fleet ledger conservation under multi-stream runs: the fleet-wide ledger
+/// total equals the sum of per-stream attributed ledger totals, no tier
+/// ever exceeds its capacity (peak occupancy ≤ limit), and every stream
+/// retains and reads exactly its top-K.
+#[test]
+fn prop_fleet_ledger_conservation_and_capacity() {
+    check("fleet-conservation", cfg(10), fleet_case, |case| {
+        let config = FleetConfig {
+            hot_capacity: case.hot_capacity,
+            workers: 1, // deterministic interleaving
+            channel_capacity: 8,
+            batch: 4,
+            t_len: 32,
+            seed: case.seed,
+            mode: if case.naive { FleetMode::Naive } else { FleetMode::Arbitrated },
+        };
+        let report = run_fleet(&case.specs, &config).map_err(|e| e.to_string())?;
+
+        // 1. conservation: fleet total == Σ per-stream totals
+        let fleet_total = report.total_cost();
+        let stream_total = report.per_stream_total();
+        if (fleet_total - stream_total).abs() > 1e-6 * fleet_total.abs().max(1.0) {
+            return Err(format!(
+                "conservation violated: fleet ${fleet_total} != Σ streams ${stream_total}"
+            ));
+        }
+
+        // 2. capacity: the hot tier's high-water mark respects the limit
+        if report.hot_peak > case.hot_capacity {
+            return Err(format!(
+                "hot peak {} > capacity {}",
+                report.hot_peak, case.hot_capacity
+            ));
+        }
+
+        // 3. per-stream completeness: full top-K retained and read
+        for (spec, s) in case.specs.iter().zip(report.streams.iter()) {
+            let want_k = spec.model.k.min(spec.model.n);
+            if s.hot_reads + s.cold_reads != want_k {
+                return Err(format!(
+                    "stream {}: read {} docs, expected K={want_k}",
+                    s.id,
+                    s.hot_reads + s.cold_reads
+                ));
+            }
+        }
+
+        // 4. arbitrated mode never demotes reactively
+        if !case.naive && report.demotions() != 0 {
+            return Err(format!(
+                "arbitrated fleet performed {} reactive demotions",
+                report.demotions()
+            ));
+        }
+        Ok(())
+    });
 }
 
 /// Feature extraction never produces NaN/inf on finite input, across
