@@ -5,6 +5,15 @@
 //! Set `SHPTIER_BENCH_RECORD=1` to write the results as a baseline JSON to
 //! `benches/baselines/fleet_throughput.json` (see that file for the
 //! schema); `SHPTIER_BENCH_QUICK=1` shrinks the time budget for CI.
+//!
+//! Without `SHPTIER_BENCH_RECORD`, the run compares its throughput against
+//! the recorded baseline: any benchmark slower than
+//! `SHPTIER_BENCH_TOLERANCE` (default 0.25, i.e. a 4× regression) times the
+//! baseline docs/sec is reported, and with `SHPTIER_BENCH_CHECK=1` (the CI
+//! gate) the process exits non-zero. A placeholder baseline (empty
+//! `results`) skips the comparison with a notice — the tolerance is
+//! deliberately loose because CI hardware differs from the recording host;
+//! the gate exists to catch order-of-magnitude regressions, not noise.
 
 use shptier::benchkit::{BenchResult, Bencher};
 use shptier::cost::hot_demand;
@@ -58,15 +67,130 @@ fn main() {
 
     report_scaling(b.results());
 
+    let path = std::path::Path::new("benches/baselines/fleet_throughput.json");
     if std::env::var_os("SHPTIER_BENCH_RECORD").is_some() {
-        let path = std::path::Path::new("benches/baselines/fleet_throughput.json");
         match std::fs::write(path, baseline_json(b.results()).dump()) {
             Ok(()) => println!("recorded baseline to {}", path.display()),
             Err(e) => println!("could not record baseline: {e}"),
         }
     } else {
-        println!("(set SHPTIER_BENCH_RECORD=1 to write benches/baselines/fleet_throughput.json)");
+        let strict = std::env::var_os("SHPTIER_BENCH_CHECK").is_some();
+        match check_against_baseline(path, b.results()) {
+            BaselineCheck::Compared(regressions) if regressions.is_empty() => {}
+            BaselineCheck::Compared(regressions) => {
+                for r in &regressions {
+                    println!("REGRESSION: {r}");
+                }
+                if strict {
+                    eprintln!(
+                        "bench regression check failed ({} benchmarks below tolerance)",
+                        regressions.len()
+                    );
+                    std::process::exit(1);
+                }
+            }
+            BaselineCheck::SkippedBenign(note) => println!("{note}"),
+            BaselineCheck::Broken(note) => {
+                println!("{note}");
+                if strict {
+                    eprintln!(
+                        "bench baseline is unreadable but SHPTIER_BENCH_CHECK=1 \
+                         expects an armed gate — fix or re-record the baseline"
+                    );
+                    std::process::exit(1);
+                }
+            }
+        }
     }
+}
+
+/// Outcome of the baseline comparison.
+enum BaselineCheck {
+    /// Comparison ran; the payload is the list of regressions (empty = ok).
+    Compared(Vec<String>),
+    /// Deliberately skippable: no baseline recorded yet (placeholder file
+    /// with an empty results array, or no file at all).
+    SkippedBenign(String),
+    /// The baseline exists but cannot be parsed — a corrupt gate, fatal
+    /// under SHPTIER_BENCH_CHECK=1.
+    Broken(String),
+}
+
+/// Compare current throughput against the recorded baseline.
+fn check_against_baseline(path: &std::path::Path, results: &[BenchResult]) -> BaselineCheck {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            return BaselineCheck::SkippedBenign(format!(
+                "(no baseline at {}: {e} — skipping check)",
+                path.display()
+            ))
+        }
+    };
+    let json = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            return BaselineCheck::Broken(format!(
+                "(unparseable baseline {}: {e})",
+                path.display()
+            ))
+        }
+    };
+    let Json::Obj(root) = &json else {
+        return BaselineCheck::Broken("(baseline is not a JSON object)".to_string());
+    };
+    let rows = match root.get("results") {
+        Some(Json::Arr(rows)) if !rows.is_empty() => rows,
+        Some(Json::Arr(_)) => {
+            return BaselineCheck::SkippedBenign(
+                "(baseline has no recorded results — record one with \
+                 SHPTIER_BENCH_RECORD=1 cargo bench --bench fleet_throughput)"
+                    .to_string(),
+            )
+        }
+        _ => return BaselineCheck::Broken("(baseline has no results array)".to_string()),
+    };
+    let tolerance = std::env::var("SHPTIER_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(0.25);
+    let mut baseline: BTreeMap<String, f64> = BTreeMap::new();
+    for row in rows {
+        if let Json::Obj(o) = row {
+            if let (Some(Json::Str(name)), Some(rate)) =
+                (o.get("name"), o.get("docs_per_sec").and_then(|v| v.as_f64()))
+            {
+                baseline.insert(name.clone(), rate);
+            }
+        }
+    }
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    for r in results {
+        let (Some(items), Some(&base_rate)) = (r.items_per_iter, baseline.get(&r.name)) else {
+            continue;
+        };
+        if base_rate <= 0.0 {
+            continue;
+        }
+        compared += 1;
+        let rate = items / r.mean.as_secs_f64();
+        if rate < tolerance * base_rate {
+            regressions.push(format!(
+                "{}: {:.0} docs/s vs baseline {:.0} (ratio {:.2} < tolerance {tolerance})",
+                r.name,
+                rate,
+                base_rate,
+                rate / base_rate
+            ));
+        }
+    }
+    println!(
+        "baseline check: {compared} benchmarks compared at tolerance {tolerance}, \
+         {} regression(s)",
+        regressions.len()
+    );
+    BaselineCheck::Compared(regressions)
 }
 
 /// Print the 1→8 worker speedup against the ≥4x acceptance bar.

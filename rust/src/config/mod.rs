@@ -286,6 +286,94 @@ impl FleetLaunchConfig {
     }
 }
 
+/// Parsed `shptier engine` demo configuration (`[engine]` TOML section):
+/// an N-tier engine fleet with a mid-run stream closure, demonstrating
+/// online re-arbitration.
+///
+/// Schema (all keys optional):
+///
+/// ```toml
+/// [engine]
+/// streams = 4              # concurrent sessions
+/// docs = 1200              # per-stream length
+/// k = 24                   # per-stream top-K
+/// tiers = 3                # 2..=4 (hot → cold)
+/// hot_capacity = 16        # hottest-tier slots (0 → half aggregate demand)
+/// seed = 7
+/// close_percent = 50       # close session 0 after this % of its stream
+/// ```
+#[derive(Debug, Clone)]
+pub struct EngineDemoConfig {
+    pub streams: usize,
+    pub docs: u64,
+    pub k: u64,
+    pub tiers: usize,
+    /// 0 means "derive a contended default" (half the aggregate demand).
+    pub hot_capacity: u64,
+    pub seed: u64,
+    /// Percentage of session 0's stream after which it closes mid-run.
+    pub close_percent: u64,
+}
+
+impl EngineDemoConfig {
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let t = TomlValue::parse(text).context("parsing engine config TOML")?;
+        let get_u64 = |path: &str, default: u64| -> Result<u64> {
+            match t.get_path(path) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("config: {path} must be a non-negative integer")),
+            }
+        };
+        Self {
+            streams: get_u64("engine.streams", 4)? as usize,
+            docs: get_u64("engine.docs", 1200)?,
+            k: get_u64("engine.k", 24)?,
+            tiers: get_u64("engine.tiers", 3)? as usize,
+            hot_capacity: get_u64("engine.hot_capacity", 0)?,
+            seed: get_u64("engine.seed", 20190412)?,
+            close_percent: get_u64("engine.close_percent", 50)?,
+        }
+        .normalized()
+    }
+
+    /// The single validation/clamping rule set, shared by the TOML path
+    /// and the CLI flag-override path (`shptier engine`): clamp the soft
+    /// knobs, reject the nonsensical ones.
+    pub fn normalized(mut self) -> Result<Self> {
+        if !(2..=4).contains(&self.tiers) {
+            bail!("config: engine.tiers must be in 2..=4 (got {})", self.tiers);
+        }
+        if self.close_percent > 100 {
+            bail!("config: engine.close_percent must be in 0..=100");
+        }
+        self.streams = self.streams.max(2);
+        self.docs = self.docs.max(10);
+        self.k = self.k.max(1);
+        Ok(self)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// The demo tier hierarchy: interior changeover economics at every
+    /// boundary (each tier cheaper to write and dearer to read than the
+    /// next colder one), rent excluded.
+    pub fn tier_costs(&self) -> Vec<PerDocCosts> {
+        let presets = [
+            PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.0 },
+            PerDocCosts { write: 2.0, read: 1.9, rent_window: 0.0 },
+            PerDocCosts { write: 3.0, read: 0.2, rent_window: 0.0 },
+            PerDocCosts { write: 4.0, read: 0.05, rent_window: 0.0 },
+        ];
+        presets[..self.tiers].to_vec()
+    }
+}
+
 fn parse_custom_economics(t: &TomlValue) -> Result<CostModel> {
     let read = |tier: &str, field: &str| -> Result<f64> {
         t.get_path(&format!("economics.{tier}.{field}"))
@@ -442,5 +530,36 @@ heterogeneous = false
     #[test]
     fn fleet_config_rejects_bad_mode() {
         assert!(FleetLaunchConfig::from_toml("[fleet]\nmode = \"chaos\"\n").is_err());
+    }
+
+    #[test]
+    fn engine_config_defaults_and_tiers() {
+        let c = EngineDemoConfig::from_toml("").unwrap();
+        assert_eq!(c.tiers, 3);
+        assert_eq!(c.streams, 4);
+        assert_eq!(c.close_percent, 50);
+        assert_eq!(c.tier_costs().len(), 3);
+        // write costs increase, read costs decrease hot → cold
+        let costs = c.tier_costs();
+        for w in costs.windows(2) {
+            assert!(w[0].write < w[1].write);
+            assert!(w[0].read > w[1].read);
+        }
+    }
+
+    #[test]
+    fn engine_config_full_and_validation() {
+        let c = EngineDemoConfig::from_toml(
+            "[engine]\nstreams = 6\ndocs = 500\nk = 8\ntiers = 2\nhot_capacity = 9\n\
+             close_percent = 25\n",
+        )
+        .unwrap();
+        assert_eq!(c.streams, 6);
+        assert_eq!(c.docs, 500);
+        assert_eq!(c.tiers, 2);
+        assert_eq!(c.hot_capacity, 9);
+        assert_eq!(c.close_percent, 25);
+        assert!(EngineDemoConfig::from_toml("[engine]\ntiers = 7\n").is_err());
+        assert!(EngineDemoConfig::from_toml("[engine]\nclose_percent = 101\n").is_err());
     }
 }

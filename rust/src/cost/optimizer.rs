@@ -189,6 +189,30 @@ pub fn budget_clamp(
     }
 }
 
+/// Closed-form optimal changeover cuts for an N-tier hierarchy (hot →
+/// cold): each boundary's cut is the two-tier optimum between its
+/// adjacent tiers, made nondecreasing by a running maximum (a document
+/// never returns to a hotter tier later in the stream). For two tiers
+/// this is exactly `optimal_r(...).r`. The engine's N-tier
+/// [`crate::policy::PlacementPlan`] is built from these cuts.
+pub fn optimal_cuts(
+    tier_costs: &[crate::cost::PerDocCosts],
+    n: u64,
+    k: u64,
+    include_rent: bool,
+) -> Vec<u64> {
+    assert!(tier_costs.len() >= 2, "need at least two tiers");
+    let mut cuts = Vec::with_capacity(tier_costs.len() - 1);
+    let mut floor = 0u64;
+    for pair in tier_costs.windows(2) {
+        let model = CostModel::new(n, k, pair[0], pair[1]).with_rent(include_rent);
+        let r = optimal_r(&model, false).r.min(n);
+        floor = floor.max(r);
+        cuts.push(floor);
+    }
+    cuts
+}
+
 /// Compare all four strategies (AllA, AllB, changeover at r*, migrate at
 /// r*) and return them sorted by expected total cost (cheapest first).
 pub fn rank_strategies(model: &CostModel) -> Vec<(Strategy, f64)> {
@@ -342,6 +366,19 @@ mod tests {
         let m = interior_model();
         let unc = optimal_r(&m, false);
         assert_eq!(hot_demand(&m, false), unc.r.min(m.k));
+    }
+
+    #[test]
+    fn optimal_cuts_degenerates_and_is_monotone() {
+        let m = interior_model();
+        let cuts = optimal_cuts(&[m.a, m.b], m.n, m.k, false);
+        assert_eq!(cuts, vec![optimal_r(&m, false).r]);
+        // three tiers: nondecreasing cuts within [0, n]
+        let warm = PerDocCosts { write: 2e-5, read: 3e-5, rent_window: 0.0 };
+        let cuts3 = optimal_cuts(&[m.a, warm, m.b], m.n, m.k, false);
+        assert_eq!(cuts3.len(), 2);
+        assert!(cuts3[0] <= cuts3[1]);
+        assert!(cuts3[1] <= m.n);
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Quota arbitration over live sessions — the strategy boundary of the
+//! engine.
+//!
+//! An [`Arbiter`] maps the set of currently-open sessions to per-session
+//! [`PlacementPlan`]s and per-tier quotas. The engine re-invokes it on
+//! *every* open/close event (online re-arbitration), so quotas are no
+//! longer fixed at admission: a stream closing mid-run releases its hot
+//! share and the survivors' plans are recomputed from the closed forms.
+//!
+//! [`ProportionalArbiter`] is the default strategy and reproduces the
+//! original fleet arbitration exactly in the two-tier case: per-session
+//! closed-form optima ([`crate::cost::optimal_r`] via
+//! [`PlacementPlan::optimal`]), demands `min(r*, K)`, proportional
+//! largest-remainder allocation
+//! ([`crate::fleet::capacity::allocate_proportional`]) per capacity-limited
+//! tier, and budget-clamped changeover parameters. Alternative strategies
+//! (e.g. the submodular water-filling allocator of arXiv:2005.07893) plug
+//! in behind the same trait (ROADMAP follow-up).
+
+use super::topology::TierTopology;
+use crate::cost::PerDocCosts;
+use crate::fleet::capacity::allocate_proportional;
+use crate::policy::PlacementPlan;
+
+/// What the arbiter sees of one live session.
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    /// Engine-assigned session id.
+    pub id: u64,
+    /// Declared stream length.
+    pub n: u64,
+    /// Retained-set size (top-K).
+    pub k: u64,
+    /// Effective per-tier costs (length = topology tiers).
+    pub tier_costs: Vec<PerDocCosts>,
+    /// Whether the session's economics include rent.
+    pub include_rent: bool,
+    /// Naive sessions ignore quotas (capacity-oblivious baseline); the
+    /// arbiter still computes their hypothetical assignment for reporting.
+    pub naive: bool,
+}
+
+/// The arbiter's verdict for one session.
+#[derive(Debug, Clone)]
+pub struct PlanAssignment {
+    pub id: u64,
+    /// The session's unconstrained closed-form optimum.
+    pub unconstrained: PlacementPlan,
+    /// The budget-clamped plan the session should run.
+    pub plan: PlacementPlan,
+    /// Hot demand per tier, `min(band width, K)` under the plan *before*
+    /// this tier's clamp was applied.
+    pub demand: Vec<u64>,
+    /// Assigned quota per tier (None = unbounded tier, no quota).
+    pub quota: Vec<Option<u64>>,
+    /// Analytic expected cost at the unconstrained optimum.
+    pub analytic_unconstrained: f64,
+    /// Analytic expected cost at the budgeted plan.
+    pub analytic_budgeted: f64,
+}
+
+/// Pluggable arbitration strategy.
+pub trait Arbiter: Send {
+    /// Strategy name for reports.
+    fn name(&self) -> String;
+
+    /// Compute assignments for every live session. Called by the engine on
+    /// each open/close event; must be deterministic in its inputs.
+    fn arbitrate(
+        &self,
+        sessions: &[SessionSnapshot],
+        topology: &TierTopology,
+    ) -> Vec<PlanAssignment>;
+}
+
+/// Demand-proportional quota allocation with largest-remainder rounding —
+/// the closed-form arbitration of the original fleet, generalized to every
+/// capacity-limited tier of an N-tier topology (clamped hot → cold, so
+/// overflow cascades toward the sink tier).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProportionalArbiter;
+
+impl Arbiter for ProportionalArbiter {
+    fn name(&self) -> String {
+        "proportional".into()
+    }
+
+    fn arbitrate(
+        &self,
+        sessions: &[SessionSnapshot],
+        topology: &TierTopology,
+    ) -> Vec<PlanAssignment> {
+        let m = topology.num_tiers();
+        let unconstrained: Vec<PlacementPlan> = sessions
+            .iter()
+            .map(|s| PlacementPlan::optimal(&s.tier_costs, s.n, s.k, s.include_rent))
+            .collect();
+        let mut plans = unconstrained.clone();
+        let mut demands: Vec<Vec<u64>> = vec![vec![0; m]; sessions.len()];
+        let mut quotas: Vec<Vec<Option<u64>>> = vec![vec![None; m]; sessions.len()];
+        // hot → cold: each clamp pushes displaced load into colder bands,
+        // which the next tier's demand computation then sees.
+        for tier in topology.capacitated() {
+            let cap = topology.tier(tier).capacity.unwrap_or(usize::MAX) as u64;
+            let tier_demands: Vec<u64> = plans.iter().map(|p| p.demand(tier)).collect();
+            let alloc = allocate_proportional(cap, &tier_demands);
+            for (i, (&q, &d)) in alloc.iter().zip(tier_demands.iter()).enumerate() {
+                demands[i][tier.0] = d;
+                quotas[i][tier.0] = Some(q);
+                plans[i].clamp_tier_to_quota(tier, q);
+            }
+        }
+        sessions
+            .iter()
+            .zip(unconstrained)
+            .zip(plans)
+            .zip(demands.into_iter().zip(quotas))
+            .map(|(((s, unc), plan), (demand, quota))| {
+                let analytic_unconstrained = unc.analytic_cost(&s.tier_costs, s.include_rent);
+                let analytic_budgeted = plan.analytic_cost(&s.tier_costs, s.include_rent);
+                PlanAssignment {
+                    id: s.id,
+                    unconstrained: unc,
+                    plan,
+                    demand,
+                    quota,
+                    analytic_unconstrained,
+                    analytic_budgeted,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{optimal_r, optimal_r_budgeted, CostModel};
+    use crate::storage::TierId;
+
+    fn pd(w: f64, r: f64) -> PerDocCosts {
+        PerDocCosts { write: w, read: r, rent_window: 0.0 }
+    }
+
+    fn snap(id: u64, n: u64, k: u64) -> SessionSnapshot {
+        SessionSnapshot {
+            id,
+            n,
+            k,
+            tier_costs: vec![pd(1.0, 4.0), pd(3.0, 0.5)],
+            include_rent: false,
+            naive: false,
+        }
+    }
+
+    #[test]
+    fn two_tier_matches_closed_form_budget_clamp() {
+        let topo = TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5))
+            .with_capacity(TierId::A, Some(40));
+        let sessions: Vec<_> = (0..4).map(|i| snap(i, 1000, 50)).collect();
+        let out = ProportionalArbiter.arbitrate(&sessions, &topo);
+        assert_eq!(out.len(), 4);
+        let model = CostModel::new(1000, 50, pd(1.0, 4.0), pd(3.0, 0.5)).with_rent(false);
+        let unc = optimal_r(&model, false);
+        let total_quota: u64 = out.iter().map(|a| a.quota[0].unwrap()).sum();
+        assert!(total_quota <= 40);
+        for a in &out {
+            assert_eq!(a.unconstrained.r(), unc.r);
+            assert_eq!(a.demand[0], unc.r.min(50));
+            let q = a.quota[0].unwrap();
+            let budgeted = optimal_r_budgeted(&model, false, q);
+            assert_eq!(a.plan.r(), budgeted.r, "plan must match the budget clamp");
+            assert!((a.analytic_budgeted - budgeted.cost).abs() < 1e-12);
+            assert!((a.analytic_unconstrained - unc.cost).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ample_capacity_leaves_plans_unconstrained() {
+        let topo = TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5))
+            .with_capacity(TierId::A, Some(10_000));
+        let sessions: Vec<_> = (0..3).map(|i| snap(i, 1000, 20)).collect();
+        for a in ProportionalArbiter.arbitrate(&sessions, &topo) {
+            assert_eq!(a.plan, a.unconstrained);
+            assert_eq!(a.quota[0], Some(a.demand[0]));
+            assert!((a.analytic_budgeted - a.analytic_unconstrained).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn three_tier_allocates_every_capacitated_tier() {
+        let topo = TierTopology::from_costs(vec![pd(1.0, 4.0), pd(2.0, 1.5), pd(3.0, 0.5)])
+            .unwrap()
+            .with_capacity(TierId(0), Some(6))
+            .with_capacity(TierId(1), Some(12));
+        let sessions: Vec<_> = (0..3)
+            .map(|i| SessionSnapshot {
+                id: i,
+                n: 500,
+                k: 20,
+                tier_costs: topo.default_costs(),
+                include_rent: false,
+                naive: false,
+            })
+            .collect();
+        let out = ProportionalArbiter.arbitrate(&sessions, &topo);
+        let hot: u64 = out.iter().map(|a| a.quota[0].unwrap()).sum();
+        let warm: u64 = out.iter().map(|a| a.quota[1].unwrap()).sum();
+        assert!(hot <= 6);
+        assert!(warm <= 12);
+        for a in &out {
+            // clamped plans respect their quotas band-by-band
+            assert!(a.plan.demand(TierId(0)) <= a.quota[0].unwrap());
+            assert!(a.plan.demand(TierId(1)) <= a.quota[1].unwrap());
+            assert_eq!(a.quota[2], None, "sink tier carries no quota");
+        }
+    }
+}

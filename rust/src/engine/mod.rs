@@ -1,0 +1,654 @@
+//! `engine` — the session-based, N-tier, backend-agnostic placement API.
+//!
+//! This module is the single codepath behind every placement surface in
+//! the crate: the batch executor and streaming pipeline
+//! ([`crate::policy::PlacementEngine`] / [`crate::pipeline::run_pipeline`])
+//! and the multi-stream fleet ([`crate::fleet::run_fleet`]) are thin
+//! compatibility wrappers over it (see `docs/adr/ADR-002-engine-api.md`).
+//!
+//! ```text
+//!   Engine::builder()
+//!       .topology(TierTopology)      // N tiers, hot → cold, capacities
+//!       .backend(dyn StorageBackend) // default: the in-tree StorageSim
+//!       .arbiter(dyn Arbiter)        // default: ProportionalArbiter
+//!       .build()?
+//!       │
+//!       ├─ open_stream(SessionSpec) ─────► StreamSession (re-arbitrates)
+//!       │      session.observe(score)     plan/naive modes, or
+//!       │      session.observe_with_policy(...)   external policies
+//!       │      session.finish()  /  session.finish_release()
+//!       │                                         (re-arbitrates)
+//!       └─ settle_rent / ledger / assignments / peak_occupancy ...
+//! ```
+//!
+//! **Online re-arbitration.** Every `open_stream` and every finish re-runs
+//! the [`Arbiter`] over the live sessions, so quotas are no longer fixed
+//! at admission: a session closing mid-run (via
+//! [`StreamSession::finish_release`]) frees its hot residents and the
+//! survivors' closed-form quotas and changeover plans are recomputed on
+//! the spot. Plan changes apply to *future* placements only — already
+//! resident documents are never evicted by a quota shrink.
+//!
+//! The engine is internally synchronized (`Arc<Mutex>`), so sessions are
+//! independent handles: the fleet's placer drives many of them
+//! interleaved, and they may be moved across threads.
+
+pub mod arbiter;
+pub mod session;
+pub mod topology;
+
+pub use arbiter::{Arbiter, PlanAssignment, ProportionalArbiter, SessionSnapshot};
+pub use session::{SessionOutcome, SessionSpec};
+pub use topology::{TierSpec, TierTopology};
+
+use crate::policy::{PlacementPlan, PlacementPolicy};
+use crate::storage::{Ledger, StorageBackend, StorageSim, TierId};
+use anyhow::{anyhow, bail, Result};
+use session::{SessionState, INDEX_BITS};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Engine internals behind the session handles.
+struct Shared {
+    backend: Box<dyn StorageBackend>,
+    topology: TierTopology,
+    arbiter: Box<dyn Arbiter>,
+    sessions: BTreeMap<u64, SessionState>,
+    next_id: u64,
+    rearbitrations: u64,
+    last_assignments: Vec<PlanAssignment>,
+}
+
+impl Shared {
+    /// Validate `spec` and admit it as a new session (no re-arbitration —
+    /// callers run that once per open event or once per batch).
+    fn admit(&mut self, spec: &SessionSpec) -> Result<u64> {
+        if spec.n == 0 {
+            bail!("session stream length must be positive");
+        }
+        if spec.n >= 1u64 << INDEX_BITS {
+            bail!("session stream too long for id namespacing (N={})", spec.n);
+        }
+        let id = self.next_id;
+        if id >= 1u64 << (64 - INDEX_BITS) {
+            bail!("session id space exhausted");
+        }
+        // Naive sessions demote other sessions' residents behind the
+        // arbiter's back, which would corrupt arbitrated sessions'
+        // per-tier occupancy accounting — an engine runs one contention
+        // mode at a time.
+        if let Some(existing) = self.sessions.values().next() {
+            if existing.naive != spec.naive {
+                bail!(
+                    "cannot mix naive and arbitrated sessions on one engine \
+                     (existing sessions are {})",
+                    if existing.naive { "naive" } else { "arbitrated" }
+                );
+            }
+        }
+        // A policy-driven session's migration orders move residents behind
+        // the arbiter's back — it must own the engine exclusively.
+        if self.sessions.values().any(|s| s.policy_driven) {
+            bail!("a policy-driven session owns this engine exclusively");
+        }
+        let tier_costs = match spec.tier_costs.clone() {
+            Some(c) => {
+                if c.len() != self.topology.num_tiers() {
+                    bail!(
+                        "session declares {} tier costs for a {}-tier topology",
+                        c.len(),
+                        self.topology.num_tiers()
+                    );
+                }
+                c
+            }
+            None => self.topology.default_costs(),
+        };
+        let k = spec.k.clamp(1, spec.n);
+        // the backend charges the *effective* costs: rent zeroed when the
+        // session's economics exclude it
+        let effective: Vec<crate::cost::PerDocCosts> = tier_costs
+            .iter()
+            .map(|c| crate::cost::PerDocCosts {
+                rent_window: if spec.include_rent { c.rent_window } else { 0.0 },
+                ..*c
+            })
+            .collect();
+        self.backend.register_stream(id, effective)?;
+        self.next_id += 1;
+        let state = SessionState::new(
+            id,
+            spec.n,
+            k,
+            tier_costs,
+            spec.include_rent,
+            spec.naive,
+            spec.record_series,
+        );
+        self.sessions.insert(id, state);
+        Ok(id)
+    }
+
+    /// Re-run the arbiter over the live sessions and apply the verdict
+    /// (naive sessions keep their unconstrained plans, quota-free).
+    ///
+    /// Residents orphaned by plain (non-release) finishes still occupy
+    /// their slots, so each capacitated tier's capacity is reduced by its
+    /// orphan count before allocation — quotas never promise capacity
+    /// that is not actually free.
+    fn rearbitrate(&mut self) {
+        let snapshots: Vec<SessionSnapshot> =
+            self.sessions.values().map(|s| s.snapshot()).collect();
+        let mut topology = self.topology.clone();
+        for tier in self.topology.capacitated() {
+            let orphaned = self
+                .backend
+                .residents(tier)
+                .iter()
+                .filter(|r| !r.owner.is_some_and(|o| self.sessions.contains_key(&o)))
+                .count();
+            if orphaned > 0 {
+                let cap = self.topology.tier(tier).capacity.unwrap_or(usize::MAX);
+                topology = topology.with_capacity(tier, Some(cap.saturating_sub(orphaned)));
+            }
+        }
+        let assignments = self.arbiter.arbitrate(&snapshots, &topology);
+        for a in &assignments {
+            if let Some(s) = self.sessions.get_mut(&a.id) {
+                if s.naive {
+                    s.plan = a.unconstrained.clone();
+                    s.quotas = vec![None; self.topology.num_tiers()];
+                } else {
+                    s.plan = a.plan.clone();
+                    s.quotas = a.quota.clone();
+                }
+            }
+        }
+        self.rearbitrations += 1;
+        self.last_assignments = assignments;
+    }
+}
+
+/// The tier-placement engine: shared storage + arbiter + live sessions.
+pub struct Engine {
+    shared: Arc<Mutex<Shared>>,
+}
+
+/// Builder for [`Engine`].
+pub struct EngineBuilder {
+    topology: Option<TierTopology>,
+    backend: Option<Box<dyn StorageBackend>>,
+    arbiter: Box<dyn Arbiter>,
+    charge_rent: bool,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self {
+            topology: None,
+            backend: None,
+            arbiter: Box::new(ProportionalArbiter),
+            charge_rent: true,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// The tier hierarchy (required).
+    pub fn topology(mut self, topology: TierTopology) -> Self {
+        self.topology = Some(topology);
+        self
+    }
+
+    /// Custom storage backend (default: a fresh [`StorageSim`] built from
+    /// the topology). The backend's tier count must match the topology.
+    pub fn backend(mut self, backend: Box<dyn StorageBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Custom arbitration strategy (default: [`ProportionalArbiter`]).
+    pub fn arbiter(mut self, arbiter: Box<dyn Arbiter>) -> Self {
+        self.arbiter = arbiter;
+        self
+    }
+
+    /// Whether the default simulator charges rent (per-session rent is
+    /// additionally controlled by [`SessionSpec::include_rent`]).
+    pub fn charge_rent(mut self, charge: bool) -> Self {
+        self.charge_rent = charge;
+        self
+    }
+
+    pub fn build(self) -> Result<Engine> {
+        let topology = self
+            .topology
+            .ok_or_else(|| anyhow!("engine builder: a tier topology is required"))?;
+        topology.validate()?;
+        let mut backend: Box<dyn StorageBackend> = match self.backend {
+            Some(b) => b,
+            None => {
+                Box::new(StorageSim::with_tiers(topology.default_costs(), self.charge_rent))
+            }
+        };
+        if backend.num_tiers() != topology.num_tiers() {
+            bail!(
+                "backend has {} tiers but the topology declares {}",
+                backend.num_tiers(),
+                topology.num_tiers()
+            );
+        }
+        for (i, spec) in topology.tiers().iter().enumerate() {
+            backend.set_capacity(TierId(i), spec.capacity);
+        }
+        Ok(Engine {
+            shared: Arc::new(Mutex::new(Shared {
+                backend,
+                topology,
+                arbiter: self.arbiter,
+                sessions: BTreeMap::new(),
+                next_id: 0,
+                rearbitrations: 0,
+                last_assignments: Vec::new(),
+            })),
+        })
+    }
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Open a new stream session. Registers the session's economics with
+    /// the backend, admits it, and triggers re-arbitration over all live
+    /// sessions.
+    pub fn open_stream(&self, spec: SessionSpec) -> Result<StreamSession> {
+        let mut g = self.shared.lock().unwrap();
+        let id = g.admit(&spec)?;
+        g.rearbitrate();
+        Ok(StreamSession { id, shared: Arc::clone(&self.shared) })
+    }
+
+    /// Open many sessions as one admission event: all specs are admitted,
+    /// then the arbiter runs once over the full set — equivalent to (but
+    /// much cheaper than) opening them one by one, since intermediate
+    /// verdicts would be discarded anyway. On error, previously admitted
+    /// specs from this batch remain open (arbitrated by the next event).
+    pub fn open_streams(&self, specs: Vec<SessionSpec>) -> Result<Vec<StreamSession>> {
+        let mut g = self.shared.lock().unwrap();
+        let mut handles = Vec::with_capacity(specs.len());
+        let mut failure = None;
+        for spec in &specs {
+            match g.admit(spec) {
+                Ok(id) => {
+                    handles.push(StreamSession { id, shared: Arc::clone(&self.shared) })
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        // arbitrate whatever was admitted, error or not, so no session is
+        // ever left running its placeholder plan
+        g.rearbitrate();
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(handles),
+        }
+    }
+
+    /// Settle rent for everything resident as of window fraction `at`
+    /// (call once at end of window, before finishing end-of-run sessions).
+    pub fn settle_rent(&self, at: f64) {
+        self.shared.lock().unwrap().backend.settle_rent(at);
+    }
+
+    /// Snapshot of the engine-wide ledger.
+    pub fn ledger(&self) -> Ledger {
+        self.shared.lock().unwrap().backend.ledger().clone()
+    }
+
+    /// Snapshot of one session's attributed ledger.
+    pub fn stream_ledger(&self, id: u64) -> Ledger {
+        self.shared.lock().unwrap().backend.stream_ledger(id)
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.shared.lock().unwrap().topology.num_tiers()
+    }
+
+    /// High-water mark of simultaneous residents on `tier`.
+    pub fn peak_occupancy(&self, tier: TierId) -> usize {
+        self.shared.lock().unwrap().backend.peak_occupancy(tier)
+    }
+
+    /// Current residents of `tier`.
+    pub fn resident_len(&self, tier: TierId) -> usize {
+        self.shared.lock().unwrap().backend.resident_len(tier)
+    }
+
+    /// Number of currently open sessions.
+    pub fn live_sessions(&self) -> usize {
+        self.shared.lock().unwrap().sessions.len()
+    }
+
+    /// How many times the arbiter has run (one per open/close event).
+    pub fn rearbitrations(&self) -> u64 {
+        self.shared.lock().unwrap().rearbitrations
+    }
+
+    /// The most recent arbitration verdict (one entry per then-live
+    /// session).
+    pub fn assignments(&self) -> Vec<PlanAssignment> {
+        self.shared.lock().unwrap().last_assignments.clone()
+    }
+
+    pub fn arbiter_name(&self) -> String {
+        self.shared.lock().unwrap().arbiter.name()
+    }
+
+    pub fn backend_name(&self) -> String {
+        self.shared.lock().unwrap().backend.backend_name()
+    }
+}
+
+/// Handle to one open stream session. Independent of the engine handle:
+/// sessions score/place/finish on their own, through the shared state.
+pub struct StreamSession {
+    id: u64,
+    shared: Arc<Mutex<Shared>>,
+}
+
+impl StreamSession {
+    /// Engine-assigned session id (also the ledger-attribution stream id).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Observe the next document under the session's (arbitrated) plan.
+    pub fn observe(&mut self, score: f64) -> Result<()> {
+        let mut g = self.shared.lock().unwrap();
+        let Shared { backend, sessions, .. } = &mut *g;
+        let s = sessions
+            .get_mut(&self.id)
+            .ok_or_else(|| anyhow!("session {} is closed", self.id))?;
+        s.observe(backend.as_mut(), score)
+    }
+
+    /// Observe the next document, deferring placement to an external
+    /// policy (single-stream compatibility path). The policy's migration
+    /// orders run against the shared backend outside the arbiter's
+    /// accounting, so a policy-driven session must own the engine
+    /// exclusively — multi-session engines reject this call.
+    pub fn observe_with_policy(
+        &mut self,
+        score: f64,
+        policy: &mut dyn PlacementPolicy,
+    ) -> Result<()> {
+        let mut g = self.shared.lock().unwrap();
+        if g.sessions.len() > 1 {
+            bail!("observe_with_policy requires exclusive engine ownership");
+        }
+        let Shared { backend, sessions, .. } = &mut *g;
+        let s = sessions
+            .get_mut(&self.id)
+            .ok_or_else(|| anyhow!("session {} is closed", self.id))?;
+        s.observe_with_policy(backend.as_mut(), score, policy)
+    }
+
+    /// Documents observed so far.
+    pub fn observed(&self) -> u64 {
+        self.with_state(|s| s.observed()).unwrap_or(0)
+    }
+
+    /// Whether the declared stream length has been fully observed.
+    pub fn done(&self) -> bool {
+        self.with_state(|s| s.done()).unwrap_or(true)
+    }
+
+    /// Current top-K threshold score (None until K docs seen).
+    pub fn threshold(&self) -> Option<f64> {
+        self.with_state(|s| s.threshold()).flatten()
+    }
+
+    /// The plan the session is currently running (re-arbitrated live).
+    pub fn plan(&self) -> Option<PlacementPlan> {
+        self.with_state(|s| s.plan.clone())
+    }
+
+    /// The session's current per-tier quotas.
+    pub fn quotas(&self) -> Vec<Option<u64>> {
+        self.with_state(|s| s.quotas.clone()).unwrap_or_default()
+    }
+
+    /// Residents of `tier` on the shared backend (diagnostics).
+    pub fn tier_len(&self, tier: TierId) -> usize {
+        self.shared.lock().unwrap().backend.resident_len(tier)
+    }
+
+    /// Finish at end of window: consumer-read the retained top-K, close
+    /// the session, re-arbitrate. Residents stay where they are (the
+    /// caller settles rent engine-wide); use
+    /// [`StreamSession::finish_release`] to free capacity mid-run.
+    pub fn finish(self) -> Result<SessionOutcome> {
+        self.finish_inner(false)
+    }
+
+    /// Finish mid-run: consumer-read the retained top-K, then delete the
+    /// session's residents (settling their rent), releasing its tier
+    /// capacity to the surviving sessions via re-arbitration.
+    pub fn finish_release(self) -> Result<SessionOutcome> {
+        self.finish_inner(true)
+    }
+
+    fn finish_inner(self, release: bool) -> Result<SessionOutcome> {
+        let mut g = self.shared.lock().unwrap();
+        let Shared { backend, sessions, .. } = &mut *g;
+        let mut s = sessions
+            .remove(&self.id)
+            .ok_or_else(|| anyhow!("session {} is closed", self.id))?;
+        let outcome = s.finish(backend.as_mut())?;
+        if release {
+            s.release(backend.as_mut())?;
+        }
+        g.rearbitrate();
+        Ok(outcome)
+    }
+
+    fn with_state<T>(&self, f: impl FnOnce(&SessionState) -> T) -> Option<T> {
+        self.shared.lock().unwrap().sessions.get(&self.id).map(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, PerDocCosts};
+    use crate::util::Rng;
+
+    fn pd(w: f64, r: f64) -> PerDocCosts {
+        PerDocCosts { write: w, read: r, rent_window: 0.0 }
+    }
+
+    fn two_tier_engine(hot_cap: Option<usize>) -> Engine {
+        Engine::builder()
+            .topology(
+                TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5))
+                    .with_capacity(TierId::A, hot_cap),
+            )
+            .charge_rent(false)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_requires_topology() {
+        assert!(Engine::builder().build().is_err());
+    }
+
+    #[test]
+    fn single_session_runs_to_completion() {
+        let engine = two_tier_engine(None);
+        let mut s = engine
+            .open_stream(SessionSpec::new(200, 10).with_rent(false))
+            .unwrap();
+        assert_eq!(s.id(), 0);
+        assert_eq!(engine.live_sessions(), 1);
+        assert_eq!(engine.rearbitrations(), 1);
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            s.observe(rng.next_f64()).unwrap();
+        }
+        assert!(s.done());
+        assert!(s.observe(0.5).is_err(), "overlong stream must error");
+        engine.settle_rent(1.0);
+        let out = s.finish().unwrap();
+        assert_eq!(out.retained.len(), 10);
+        assert_eq!(out.hot_reads() + out.cold_reads(), 10);
+        assert_eq!(engine.live_sessions(), 0);
+        assert_eq!(engine.rearbitrations(), 2);
+        assert!(engine.ledger().total() > 0.0);
+    }
+
+    #[test]
+    fn open_close_events_rearbitrate_quotas() {
+        // two sessions share a tight hot tier; closing one mid-run must
+        // grow the survivor's quota
+        let engine = two_tier_engine(Some(10));
+        let spec = || SessionSpec::from_model(
+            &CostModel::new(400, 20, pd(1.0, 4.0), pd(3.0, 0.5)).with_rent(false),
+        );
+        let mut a = engine.open_stream(spec()).unwrap();
+        let mut b = engine.open_stream(spec()).unwrap();
+        let quota_contended = b.quotas()[0].unwrap();
+        assert!(quota_contended <= 5, "two sessions split 10 slots");
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            a.observe(rng.next_f64()).unwrap();
+            b.observe(rng.next_f64()).unwrap();
+        }
+        let before = engine.rearbitrations();
+        a.finish_release().unwrap();
+        assert_eq!(engine.rearbitrations(), before + 1);
+        let quota_alone = b.quotas()[0].unwrap();
+        assert!(
+            quota_alone > quota_contended,
+            "released capacity must flow to the survivor \
+             ({quota_contended} -> {quota_alone})"
+        );
+        for _ in 0..200 {
+            b.observe(rng.next_f64()).unwrap();
+        }
+        assert!(engine.peak_occupancy(TierId::A) <= 10);
+        engine.settle_rent(1.0);
+        b.finish().unwrap();
+    }
+
+    #[test]
+    fn session_ids_and_ledgers_are_disjoint() {
+        let engine = two_tier_engine(None);
+        let mut a = engine
+            .open_stream(SessionSpec::new(50, 5).with_rent(false))
+            .unwrap();
+        let mut b = engine
+            .open_stream(SessionSpec::new(50, 5).with_rent(false))
+            .unwrap();
+        assert_eq!((a.id(), b.id()), (0, 1));
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            a.observe(rng.next_f64()).unwrap();
+            b.observe(rng.next_f64()).unwrap();
+        }
+        engine.settle_rent(1.0);
+        a.finish().unwrap();
+        b.finish().unwrap();
+        let total = engine.ledger().total();
+        let split = engine.stream_ledger(0).total() + engine.stream_ledger(1).total();
+        assert!((total - split).abs() < 1e-9, "engine ${total} vs sessions ${split}");
+    }
+
+    #[test]
+    fn three_tier_topology_places_in_bands() {
+        // economics with interior cuts at both boundaries:
+        //   hot→warm  frac = (2−1)/(4−1.9) ≈ 0.48
+        //   warm→cold frac = (3−2)/(1.9−0.2) ≈ 0.59
+        let topo = TierTopology::from_costs(vec![
+            pd(1.0, 4.0),
+            pd(2.0, 1.9),
+            pd(3.0, 0.2),
+        ])
+        .unwrap();
+        let engine = Engine::builder().topology(topo).charge_rent(false).build().unwrap();
+        assert_eq!(engine.num_tiers(), 3);
+        let mut s = engine
+            .open_stream(SessionSpec::new(300, 12).with_rent(false))
+            .unwrap();
+        let plan = s.plan().unwrap();
+        assert_eq!(plan.num_tiers(), 3);
+        assert!(plan.cuts()[0] > 0 && plan.cuts()[0] < plan.cuts()[1]);
+        assert!(plan.cuts()[1] < 300);
+        // strictly increasing scores: every document enters the top-K, so
+        // every non-empty band deterministically receives writes
+        for i in 0..300 {
+            s.observe(i as f64).unwrap();
+        }
+        engine.settle_rent(1.0);
+        let out = s.finish().unwrap();
+        assert_eq!(out.retained.len(), 12);
+        let ledger = engine.ledger();
+        for t in 0..3 {
+            assert!(ledger.tier(TierId(t)).writes > 0, "tier {t} never written");
+        }
+    }
+
+    #[test]
+    fn closed_session_handle_errors() {
+        let engine = two_tier_engine(None);
+        let s = engine.open_stream(SessionSpec::new(10, 2)).unwrap();
+        let sid = s.id();
+        s.finish().unwrap();
+        let mut ghost = StreamSession { id: sid, shared: Arc::clone(&engine.shared) };
+        assert!(ghost.observe(0.5).is_err());
+        assert!(ghost.finish().is_err());
+    }
+
+    #[test]
+    fn spec_validation() {
+        let engine = two_tier_engine(None);
+        assert!(engine.open_stream(SessionSpec::new(0, 1)).is_err());
+        let wrong_arity = SessionSpec::new(10, 2).with_costs(vec![pd(1.0, 1.0)]);
+        assert!(engine.open_stream(wrong_arity).is_err());
+    }
+
+    #[test]
+    fn mixed_contention_modes_rejected() {
+        let engine = two_tier_engine(Some(4));
+        let _a = engine.open_stream(SessionSpec::new(50, 5)).unwrap();
+        let naive = SessionSpec::new(50, 5).with_naive(true);
+        assert!(engine.open_stream(naive).is_err(), "mode mixing must be rejected");
+        // same mode is fine
+        assert!(engine.open_stream(SessionSpec::new(50, 5)).is_ok());
+    }
+
+    #[test]
+    fn policy_mode_requires_exclusive_engine() {
+        use crate::policy::SingleTier;
+        // multi-session engine: policy-mode observation is rejected
+        let engine = two_tier_engine(None);
+        let mut a = engine.open_stream(SessionSpec::new(20, 2)).unwrap();
+        let _b = engine.open_stream(SessionSpec::new(20, 2)).unwrap();
+        let mut p = SingleTier::new(TierId::A);
+        assert!(a.observe_with_policy(0.5, &mut p).is_err());
+
+        // exclusive engine: policy mode works, and then locks out opens
+        let engine = two_tier_engine(None);
+        let mut solo = engine.open_stream(SessionSpec::new(20, 2)).unwrap();
+        solo.observe_with_policy(0.5, &mut p).unwrap();
+        assert!(
+            engine.open_stream(SessionSpec::new(20, 2)).is_err(),
+            "a policy-driven session owns the engine exclusively"
+        );
+    }
+}

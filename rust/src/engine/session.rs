@@ -1,0 +1,377 @@
+//! Per-session state: one top-K stream's runtime against the shared
+//! backend.
+//!
+//! This is the single implementation of the observe/place/finish lifecycle
+//! that both the batch/pipeline world (via
+//! [`crate::policy::PlacementEngine`]) and the fleet world (via
+//! [`crate::fleet::run_fleet`]) now run through. A session either follows
+//! an N-tier [`PlacementPlan`] under the engine's quotas (plan mode: the
+//! arbitrated fleet path, with degradation toward colder tiers), runs the
+//! same plan capacity-obliviously with reactive oldest-first demotion
+//! (naive mode: the ablation baseline), or defers each placement to an
+//! external [`PlacementPolicy`] (policy mode: the single-stream
+//! pipeline/executor path, including the reactive baselines).
+//!
+//! Document ids are namespaced per session (`gid = id << INDEX_BITS |
+//! index`) so many sessions can share one backend; every operation is
+//! attributed to the owning session for per-stream ledger mirroring.
+
+use crate::cost::PerDocCosts;
+use crate::policy::{MigrationOrder, PlacementPlan, PlacementPolicy};
+use crate::storage::{StorageBackend, TierId};
+use crate::topk::{BoundedTopK, Eviction, Scored};
+use anyhow::{bail, Result};
+
+use super::arbiter::SessionSnapshot;
+
+/// Bits of the global document id reserved for the stream-local index.
+pub(crate) const INDEX_BITS: u32 = 40;
+
+/// Declarative description of a stream to open on an engine.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    /// Declared stream length (observations beyond it error).
+    pub n: u64,
+    /// Retained-set size (top-K); clamped to `[1, n]` at open.
+    pub k: u64,
+    /// Per-tier effective costs for this session's documents (None →
+    /// topology defaults). Length must equal the topology's tier count.
+    pub tier_costs: Option<Vec<PerDocCosts>>,
+    /// Whether this session's economics include rent (rent is zeroed in
+    /// the backend registration otherwise).
+    pub include_rent: bool,
+    /// Capacity-oblivious baseline: ignore quotas, demote reactively.
+    pub naive: bool,
+    /// Record the cumulative-writes series (Fig. 8 instrumentation).
+    pub record_series: bool,
+}
+
+impl SessionSpec {
+    pub fn new(n: u64, k: u64) -> Self {
+        Self {
+            n,
+            k,
+            tier_costs: None,
+            include_rent: true,
+            naive: false,
+            record_series: false,
+        }
+    }
+
+    /// Two-tier spec straight from a [`crate::cost::CostModel`].
+    pub fn from_model(model: &crate::cost::CostModel) -> Self {
+        Self {
+            n: model.n,
+            k: model.k,
+            tier_costs: Some(vec![model.a, model.b]),
+            include_rent: model.include_rent,
+            naive: false,
+            record_series: false,
+        }
+    }
+
+    pub fn with_costs(mut self, costs: Vec<PerDocCosts>) -> Self {
+        self.tier_costs = Some(costs);
+        self
+    }
+
+    pub fn with_rent(mut self, include: bool) -> Self {
+        self.include_rent = include;
+        self
+    }
+
+    pub fn with_naive(mut self, naive: bool) -> Self {
+        self.naive = naive;
+        self
+    }
+
+    pub fn with_series(mut self, record: bool) -> Self {
+        self.record_series = record;
+        self
+    }
+}
+
+/// Outcome of one finished session.
+#[derive(Debug, Clone)]
+pub struct SessionOutcome {
+    pub id: u64,
+    /// Final top-K stream-local indices (best first).
+    pub retained: Vec<u64>,
+    /// Which tier each retained document was read from (stream-local ids).
+    pub read_from: Vec<(u64, TierId)>,
+    /// Reactive demotions this session triggered (naive mode only).
+    pub demotions_caused: u64,
+    /// Cumulative organic writes after each document (empty unless the
+    /// spec asked for the series).
+    pub cumulative_writes: Vec<u64>,
+}
+
+impl SessionOutcome {
+    /// Final reads served by the hottest tier.
+    pub fn hot_reads(&self) -> u64 {
+        self.read_from.iter().filter(|(_, t)| t.0 == 0).count() as u64
+    }
+
+    /// Final reads served by any colder tier.
+    pub fn cold_reads(&self) -> u64 {
+        self.read_from.len() as u64 - self.hot_reads()
+    }
+}
+
+/// Internal per-session runtime state (owned by the engine).
+pub(crate) struct SessionState {
+    pub id: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Model costs per tier (rent NOT zeroed — the arbiter's view).
+    pub tier_costs: Vec<PerDocCosts>,
+    pub include_rent: bool,
+    pub naive: bool,
+    /// Current plan (re-assigned by the arbiter on open/close events).
+    pub plan: PlacementPlan,
+    /// Current per-tier quotas (None = no quota on that tier).
+    pub quotas: Vec<Option<u64>>,
+    tracker: BoundedTopK,
+    next_index: u64,
+    /// This session's resident count per tier under proactive placement.
+    in_use: Vec<usize>,
+    /// Set once `observe_with_policy` has run: the session is driven by an
+    /// external policy whose migration orders bypass the arbiter, so the
+    /// engine refuses to admit further sessions alongside it.
+    pub(crate) policy_driven: bool,
+    demotions_caused: u64,
+    writes: u64,
+    series: Option<Vec<u64>>,
+}
+
+impl SessionState {
+    pub fn new(
+        id: u64,
+        n: u64,
+        k: u64,
+        tier_costs: Vec<PerDocCosts>,
+        include_rent: bool,
+        naive: bool,
+        record_series: bool,
+    ) -> Self {
+        let tiers = tier_costs.len();
+        // Placeholder all-to-sink plan: the engine re-arbitrates on every
+        // open before any observation, so this is never executed — and if
+        // it ever were, the unbounded sink is the safe tier. The real plan
+        // is computed once, by that arbitration, instead of twice.
+        let plan = PlacementPlan::from_cuts(vec![0; tiers - 1], n, k)
+            .expect("all-zero cuts are always a valid plan");
+        Self {
+            id,
+            n,
+            k,
+            tier_costs,
+            include_rent,
+            naive,
+            plan,
+            quotas: vec![None; tiers],
+            tracker: BoundedTopK::new(k as usize),
+            next_index: 0,
+            in_use: vec![0; tiers],
+            policy_driven: false,
+            demotions_caused: 0,
+            writes: 0,
+            series: if record_series { Some(Vec::with_capacity(n as usize)) } else { None },
+        }
+    }
+
+    /// Namespaced global document id for this session's `index`.
+    pub fn gid(&self, index: u64) -> u64 {
+        (self.id << INDEX_BITS) | index
+    }
+
+    pub fn observed(&self) -> u64 {
+        self.next_index
+    }
+
+    pub fn done(&self) -> bool {
+        self.next_index >= self.n
+    }
+
+    pub fn threshold(&self) -> Option<f64> {
+        self.tracker.threshold().map(|s| s.score)
+    }
+
+    /// The arbiter's view of this session.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            id: self.id,
+            n: self.n,
+            k: self.k,
+            tier_costs: self.tier_costs.clone(),
+            include_rent: self.include_rent,
+            naive: self.naive,
+        }
+    }
+
+    /// Observe the next document under the session's plan (plan/naive
+    /// modes). Must be called in stream order.
+    pub fn observe(&mut self, backend: &mut dyn StorageBackend, score: f64) -> Result<()> {
+        let i = self.begin_observation(backend)?;
+        let at = i as f64 / self.n as f64;
+        match self.tracker.offer(Scored::new(i, score)) {
+            Eviction::Rejected => {}
+            Eviction::Accepted => self.write_planned(backend, i, at)?,
+            Eviction::Replaced { victim } => {
+                let vgid = self.gid(victim.index);
+                if let Some(t) = backend.locate(vgid) {
+                    self.in_use[t.0] = self.in_use[t.0].saturating_sub(1);
+                }
+                backend.delete(vgid, at)?;
+                self.write_planned(backend, i, at)?;
+            }
+        }
+        self.record_series_point();
+        Ok(())
+    }
+
+    /// Observe the next document, deferring placement to an external
+    /// policy (the single-stream pipeline/executor path). The policy's
+    /// migration orders run against the shared backend, so policy-mode
+    /// sessions should own the engine exclusively.
+    pub fn observe_with_policy(
+        &mut self,
+        backend: &mut dyn StorageBackend,
+        score: f64,
+        policy: &mut dyn PlacementPolicy,
+    ) -> Result<()> {
+        self.policy_driven = true;
+        let i = self.begin_observation(backend)?;
+        let at = i as f64 / self.n as f64;
+        match self.tracker.offer(Scored::new(i, score)) {
+            Eviction::Rejected => {}
+            Eviction::Accepted => {
+                let tier = policy.place(i, self.n);
+                backend.put(self.gid(i), tier, at)?;
+                self.writes += 1;
+            }
+            Eviction::Replaced { victim } => {
+                backend.delete(self.gid(victim.index), at)?;
+                let tier = policy.place(i, self.n);
+                backend.put(self.gid(i), tier, at)?;
+                self.writes += 1;
+            }
+        }
+        for order in policy.on_step(i, self.n, &*backend) {
+            match order {
+                MigrationOrder::All { from, to } => {
+                    backend.migrate_all(from, to, at)?;
+                }
+                MigrationOrder::Doc { doc, to } => {
+                    backend.migrate_doc(doc, to, at)?;
+                }
+            }
+        }
+        self.record_series_point();
+        Ok(())
+    }
+
+    fn begin_observation(&mut self, backend: &mut dyn StorageBackend) -> Result<u64> {
+        let i = self.next_index;
+        if i >= self.n {
+            bail!("session {} longer than declared N={}", self.id, self.n);
+        }
+        self.next_index += 1;
+        backend.set_attribution(Some(self.id));
+        Ok(i)
+    }
+
+    fn record_series_point(&mut self) {
+        if let Some(s) = self.series.as_mut() {
+            s.push(self.writes);
+        }
+    }
+
+    /// Capacity- and quota-aware write of an accepted document: place in
+    /// the plan's tier, degrading toward the sink on quota exhaustion or
+    /// full tiers (arbitrated), or reactively demoting the oldest resident
+    /// of the contended tier (naive).
+    fn write_planned(
+        &mut self,
+        backend: &mut dyn StorageBackend,
+        index: u64,
+        at: f64,
+    ) -> Result<()> {
+        let gid = self.gid(index);
+        let sink = self.plan.num_tiers() - 1;
+        let mut tier = self.plan.tier_for(index).0;
+        if self.naive {
+            // Capacity-oblivious: the session believes its unconstrained
+            // plan; on a full tier, demote the oldest resident — possibly
+            // another session's — to the nearest colder tier with room
+            // (shared-cache thrash). The unbounded sink always has room.
+            while tier < sink && !backend.has_room(TierId(tier)) {
+                match backend.oldest_resident(TierId(tier)) {
+                    Some(victim) => {
+                        let mut dest = tier + 1;
+                        while dest < sink && !backend.has_room(TierId(dest)) {
+                            dest += 1;
+                        }
+                        backend.migrate_doc(victim, TierId(dest), at)?;
+                        self.demotions_caused += 1;
+                        break;
+                    }
+                    None => tier += 1, // zero-capacity tier: spill colder
+                }
+            }
+        } else {
+            // Arbitrated: degrade over-quota placements toward the sink
+            // (never reject). The has_room check is a safety net — with
+            // Σ quotas ≤ capacity it is unreachable.
+            while tier < sink {
+                let quota_ok = match self.quotas[tier] {
+                    Some(q) => (self.in_use[tier] as u64) < q,
+                    None => true,
+                };
+                if quota_ok && backend.has_room(TierId(tier)) {
+                    break;
+                }
+                tier += 1;
+            }
+        }
+        backend.put(gid, TierId(tier), at)?;
+        self.in_use[tier] += 1;
+        self.writes += 1;
+        Ok(())
+    }
+
+    /// End of session: consumer reads the retained top-K. The caller
+    /// settles rent (once, engine-wide) before finishing sessions at the
+    /// end of the window; mid-run closers release their residents via
+    /// [`SessionState::release`] instead.
+    pub fn finish(&mut self, backend: &mut dyn StorageBackend) -> Result<SessionOutcome> {
+        backend.set_attribution(Some(self.id));
+        let retained: Vec<u64> = self.tracker.sorted_desc().iter().map(|s| s.index).collect();
+        let mut read_from = Vec::with_capacity(retained.len());
+        for &d in &retained {
+            let tier = backend.read(self.gid(d))?;
+            read_from.push((d, tier));
+        }
+        Ok(SessionOutcome {
+            id: self.id,
+            retained,
+            read_from,
+            demotions_caused: self.demotions_caused,
+            cumulative_writes: self.series.take().unwrap_or_default(),
+        })
+    }
+
+    /// Delete every resident this session still owns (settling their rent
+    /// at the session's current window fraction), releasing its capacity
+    /// for the surviving sessions. Returns the number of documents freed.
+    pub fn release(&self, backend: &mut dyn StorageBackend) -> Result<u64> {
+        let at = (self.next_index.min(self.n)) as f64 / self.n as f64;
+        backend.set_attribution(Some(self.id));
+        let docs = backend.docs_of_stream(self.id);
+        let freed = docs.len() as u64;
+        for d in docs {
+            backend.delete(d, at)?;
+        }
+        Ok(freed)
+    }
+}

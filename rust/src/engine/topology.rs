@@ -1,0 +1,159 @@
+//! Tier topology: the ordered (hot → cold) hierarchy of storage tiers an
+//! engine runs over, with per-tier default economics and capacities.
+
+use crate::cost::{CostModel, PerDocCosts};
+use crate::storage::TierId;
+use anyhow::{bail, Result};
+
+/// One tier of the hierarchy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierSpec {
+    /// Human-readable name (defaults to the [`TierId`] label).
+    pub name: String,
+    /// Default effective per-document costs (sessions may override their
+    /// own via per-stream registration).
+    pub costs: PerDocCosts,
+    /// Capacity in simultaneous resident documents (None = unbounded).
+    pub capacity: Option<usize>,
+}
+
+/// An ordered tier hierarchy, hottest first. The last tier is the overflow
+/// sink and should normally be unbounded (placement degrades *toward* it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierTopology {
+    tiers: Vec<TierSpec>,
+}
+
+impl TierTopology {
+    /// Build from per-tier cost defaults, all tiers unbounded.
+    pub fn from_costs(costs: Vec<PerDocCosts>) -> Result<Self> {
+        if costs.len() < 2 {
+            bail!("topology needs at least two tiers (got {})", costs.len());
+        }
+        Ok(Self {
+            tiers: costs
+                .into_iter()
+                .enumerate()
+                .map(|(i, costs)| TierSpec {
+                    name: TierId(i).label(),
+                    costs,
+                    capacity: None,
+                })
+                .collect(),
+        })
+    }
+
+    /// The paper's two-tier setup (A hot, B cold), unbounded.
+    pub fn two_tier(a: PerDocCosts, b: PerDocCosts) -> Self {
+        Self::from_costs(vec![a, b]).expect("two tiers are always valid")
+    }
+
+    /// Two-tier topology straight from a [`CostModel`].
+    pub fn from_model(model: &CostModel) -> Self {
+        Self::two_tier(model.a, model.b)
+    }
+
+    /// Set one tier's capacity (builder-style).
+    pub fn with_capacity(mut self, tier: TierId, capacity: Option<usize>) -> Self {
+        assert!(tier.0 < self.tiers.len(), "unknown tier {tier:?}");
+        self.tiers[tier.0].capacity = capacity;
+        self
+    }
+
+    /// Name one tier (builder-style).
+    pub fn with_name(mut self, tier: TierId, name: &str) -> Self {
+        assert!(tier.0 < self.tiers.len(), "unknown tier {tier:?}");
+        self.tiers[tier.0].name = name.to_string();
+        self
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn tiers(&self) -> &[TierSpec] {
+        &self.tiers
+    }
+
+    pub fn tier(&self, t: TierId) -> &TierSpec {
+        &self.tiers[t.0]
+    }
+
+    /// Default per-tier costs, in tier order.
+    pub fn default_costs(&self) -> Vec<PerDocCosts> {
+        self.tiers.iter().map(|t| t.costs).collect()
+    }
+
+    /// Capacity per tier, in tier order.
+    pub fn capacities(&self) -> Vec<Option<usize>> {
+        self.tiers.iter().map(|t| t.capacity).collect()
+    }
+
+    /// Ids of the capacity-limited tiers (the ones the arbiter allocates).
+    pub fn capacitated(&self) -> Vec<TierId> {
+        self.tiers
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.capacity.is_some())
+            .map(|(i, _)| TierId(i))
+            .collect()
+    }
+
+    /// Validate invariants the engine relies on: ≥ 2 tiers and an
+    /// unbounded coldest tier (the degradation sink).
+    pub fn validate(&self) -> Result<()> {
+        if self.tiers.len() < 2 {
+            bail!("topology needs at least two tiers");
+        }
+        if let Some(last) = self.tiers.last() {
+            if last.capacity.is_some() {
+                bail!(
+                    "the coldest tier ('{}') must be unbounded — it is the \
+                     degradation sink",
+                    last.name
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pd(w: f64) -> PerDocCosts {
+        PerDocCosts { write: w, read: 1.0, rent_window: 0.0 }
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let t = TierTopology::from_costs(vec![pd(1.0), pd(2.0), pd(3.0)])
+            .unwrap()
+            .with_capacity(TierId(0), Some(8))
+            .with_capacity(TierId(1), Some(64))
+            .with_name(TierId(0), "nvme");
+        assert_eq!(t.num_tiers(), 3);
+        assert_eq!(t.tier(TierId(0)).name, "nvme");
+        assert_eq!(t.capacitated(), vec![TierId(0), TierId(1)]);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(TierTopology::from_costs(vec![pd(1.0)]).is_err());
+        let capped_sink =
+            TierTopology::two_tier(pd(1.0), pd(2.0)).with_capacity(TierId::B, Some(4));
+        assert!(capped_sink.validate().is_err());
+    }
+
+    #[test]
+    fn from_model_matches_two_tier() {
+        let m = CostModel::new(100, 10, pd(1.0), pd(2.0));
+        let t = TierTopology::from_model(&m);
+        assert_eq!(t.num_tiers(), 2);
+        assert_eq!(t.tier(TierId::A).costs, m.a);
+        assert_eq!(t.tier(TierId::B).costs, m.b);
+        assert_eq!(t.tier(TierId::B).name, "B");
+    }
+}

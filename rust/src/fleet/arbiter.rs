@@ -1,18 +1,18 @@
-//! The fleet arbiter: turns per-stream analytic demand into hot-tier
-//! quotas and budget-constrained changeover parameters.
+//! The fleet arbiter: compatibility wrapper over the engine's
+//! [`crate::engine::ProportionalArbiter`] for the two-tier fleet.
 //!
-//! For each stream the arbiter evaluates the closed-form optimum
-//! ([`crate::cost::optimal_r`]) and its hot-tier demand `min(r*, K)`
-//! ([`crate::cost::hot_demand`]). If aggregate demand fits the shared hot
-//! capacity every stream runs unconstrained; otherwise quotas are assigned
-//! proportionally to demand ([`super::capacity::allocate_proportional`])
-//! and each stream's changeover parameter is *recomputed under its
-//! shrunken budget* ([`crate::cost::optimal_r_budgeted`]) — over-quota
-//! documents degrade to cold placement rather than being rejected.
+//! Since the `shptier::engine` redesign (ADR-002) the quota math — per-
+//! stream closed-form optima, demands `min(r*, K)`, proportional
+//! largest-remainder allocation, budget-clamped changeover parameters —
+//! lives in [`crate::engine::arbiter`], where it generalizes to N-tier
+//! topologies and is re-run online on every session open/close. This
+//! module keeps the original static two-tier surface (`arbitrate` over a
+//! spec list, one shot) that the fleet reports and the E-FLEET experiment
+//! are written against; its numbers are bit-identical to the engine's
+//! verdict at admission time.
 
-use super::capacity::{allocate_proportional, peak_occupancy};
-use super::stream::StreamSpec;
-use crate::cost::{budget_clamp, optimal_r};
+use super::stream::{StreamSpec, HOT};
+use crate::engine::{Arbiter as _, ProportionalArbiter, SessionSnapshot, TierTopology};
 
 /// Per-stream slice of an arbitration outcome.
 #[derive(Debug, Clone, Copy)]
@@ -57,35 +57,44 @@ impl Arbitration {
 }
 
 /// Compute quotas and budgeted changeover parameters for `specs` sharing
-/// `hot_capacity` resident slots of tier A.
+/// `hot_capacity` resident slots of tier A (static admission-time view of
+/// the engine's online arbitration).
 pub fn arbitrate(specs: &[StreamSpec], hot_capacity: u64) -> Arbitration {
-    // one optimizer run per stream; demand and the budget clamp reuse it
-    let unconstrained: Vec<_> = specs.iter().map(|s| optimal_r(&s.model, false)).collect();
-    let demands: Vec<u64> = specs
+    if specs.is_empty() {
+        return Arbitration {
+            hot_capacity,
+            plans: Vec::new(),
+            aggregate_demand: 0,
+            oversubscribed: false,
+        };
+    }
+    let capacity = usize::try_from(hot_capacity).unwrap_or(usize::MAX);
+    let topology = TierTopology::two_tier(specs[0].model.a, specs[0].model.b)
+        .with_capacity(HOT, Some(capacity));
+    let snapshots: Vec<SessionSnapshot> = specs
         .iter()
-        .zip(unconstrained.iter())
-        .map(|(s, unc)| peak_occupancy(unc.r, s.model.k))
-        .collect();
-    let aggregate_demand: u64 = demands.iter().sum();
-    let quotas = allocate_proportional(hot_capacity, &demands);
-
-    let plans = specs
-        .iter()
-        .zip(unconstrained.iter())
-        .zip(demands.iter().zip(quotas.iter()))
-        .map(|((spec, unc), (&demand, &quota))| {
-            let budgeted = budget_clamp(&spec.model, false, *unc, quota);
-            StreamPlan {
-                r_unconstrained: unc.r,
-                demand,
-                quota,
-                r_budgeted: budgeted.r,
-                analytic_unconstrained: unc.cost,
-                analytic_budgeted: budgeted.cost,
-            }
+        .map(|s| SessionSnapshot {
+            id: s.id,
+            n: s.model.n,
+            k: s.model.k,
+            tier_costs: vec![s.model.a, s.model.b],
+            include_rent: s.model.include_rent,
+            naive: false,
         })
         .collect();
-
+    let assignments = ProportionalArbiter.arbitrate(&snapshots, &topology);
+    let plans: Vec<StreamPlan> = assignments
+        .iter()
+        .map(|a| StreamPlan {
+            r_unconstrained: a.unconstrained.r(),
+            demand: a.demand[HOT.0],
+            quota: a.quota[HOT.0].unwrap_or(0),
+            r_budgeted: a.plan.r(),
+            analytic_unconstrained: a.analytic_unconstrained,
+            analytic_budgeted: a.analytic_budgeted,
+        })
+        .collect();
+    let aggregate_demand: u64 = plans.iter().map(|p| p.demand).sum();
     Arbitration {
         hot_capacity,
         plans,
@@ -150,5 +159,30 @@ mod tests {
         assert_eq!(arb.plans[0].quota, 30);
         assert_eq!(arb.plans[1].quota, 10);
         assert_eq!(arb.plans[2].quota, 10);
+    }
+
+    #[test]
+    fn matches_closed_form_budget_clamp() {
+        // parity with the pre-engine arbiter: every number reproduces the
+        // optimal_r / budget_clamp closed forms directly
+        let specs: Vec<_> = (0..4).map(|i| spec(i, 1000, 50)).collect();
+        let arb = arbitrate(&specs, 40);
+        for (s, p) in specs.iter().zip(arb.plans.iter()) {
+            let unc = crate::cost::optimal_r(&s.model, false);
+            assert_eq!(p.r_unconstrained, unc.r);
+            assert_eq!(p.demand, unc.r.min(s.model.k));
+            let clamped = crate::cost::budget_clamp(&s.model, false, unc, p.quota);
+            assert_eq!(p.r_budgeted, clamped.r);
+            assert!((p.analytic_budgeted - clamped.cost).abs() < 1e-12);
+            assert!((p.analytic_unconstrained - unc.cost).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_fleet_is_trivial() {
+        let arb = arbitrate(&[], 16);
+        assert!(arb.plans.is_empty());
+        assert!(!arb.oversubscribed);
+        assert_eq!(arb.aggregate_demand, 0);
     }
 }

@@ -1,6 +1,11 @@
 //! Hot-tier capacity planning: per-stream demand curves and the
 //! proportional quota allocation used by the arbiter.
 //!
+//! [`allocate_proportional`] is tier-agnostic and is invoked once per
+//! capacity-limited tier by the engine's N-tier
+//! [`crate::engine::ProportionalArbiter`] (hot → cold, so clamped load
+//! cascades toward the sink tier).
+//!
 //! Each stream's *demand* is the expected peak number of its documents
 //! simultaneously resident in the hot tier under its unconstrained optimum
 //! (`min(r*, K)`, see [`crate::cost::hot_demand`]); the analytic occupancy

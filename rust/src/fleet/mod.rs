@@ -12,17 +12,20 @@
 //!   demand exceeds capacity; each stream's changeover parameter is
 //!   recomputed under its shrunken budget
 //!   ([`crate::cost::optimal_r_budgeted`]). Over-quota writes degrade to
-//!   cold placement — never rejected.
+//!   cold placement — never rejected. Since ADR-002 the math lives in
+//!   [`crate::engine::arbiter`] (where it is also re-run online); this
+//!   module keeps the static admission-time surface.
 //! - [`scheduler`] runs the streams on a worker pool with bounded channels
-//!   (the [`crate::pipeline`] thread topology), placing against a shared
-//!   [`crate::storage::StorageSim`] extended with per-tier capacity and
-//!   per-stream ledger attribution.
+//!   (the [`crate::pipeline`] thread topology), placing through one
+//!   [`crate::engine::StreamSession`] per stream over a shared
+//!   capacity-limited [`crate::storage::StorageBackend`].
 //! - [`FleetMode::Naive`] is the ablation baseline: capacity-oblivious
 //!   per-stream optima with reactive oldest-first demotion on contention —
 //!   the shared-cache behaviour the arbiter is designed to beat (see the
 //!   `fleet` experiment, `shptier exp --id fleet`).
 //!
-//! See `docs/adr/ADR-001-fleet-subsystem.md` for the design rationale.
+//! See `docs/adr/ADR-001-fleet-subsystem.md` for the design rationale and
+//! `docs/adr/ADR-002-engine-api.md` for the engine port.
 
 pub mod arbiter;
 pub mod capacity;
@@ -34,7 +37,7 @@ pub use arbiter::{arbitrate, Arbitration, StreamPlan};
 pub use capacity::allocate_proportional;
 pub use report::{FleetReport, StreamReport};
 pub use scheduler::{run_fleet, FleetConfig, FleetMode};
-pub use stream::{generate_series, SeriesProfile, StreamSpec, StreamState, COLD, HOT};
+pub use stream::{generate_series, SeriesProfile, StreamSpec, COLD, HOT};
 
 use crate::cost::{CostModel, PerDocCosts};
 

@@ -1,5 +1,6 @@
 //! The fleet scheduler: M concurrent top-K streams multiplexed over the
-//! shared capacity-limited storage simulator by a worker pool.
+//! shared capacity-limited storage by a worker pool — a thin compatibility
+//! wrapper over [`crate::engine::Engine`] since ADR-002.
 //!
 //! Thread topology (reuses the [`crate::pipeline`] idiom — std threads +
 //! bounded `sync_channel` = backpressure):
@@ -8,16 +9,16 @@
 //!   worker 0 (streams 0, W, 2W, ...) ─┐
 //!   worker 1 (streams 1, W+1, ...)   ─┼─(sync_channel: scored batches)──> placer
 //!        ...                         ─┘       (stream_id, score)*batch      │
-//!                                                        shared StorageSim ─┘
+//!                                       one engine StreamSession per stream ─┘
 //! ```
 //!
 //! Workers own the expensive per-document work — synthetic series
 //! generation from each stream's interestingness profile plus native RBF
 //! scoring — and interleave their assigned streams round-robin so all
-//! streams progress concurrently. The placer thread owns the shared
-//! simulator and the per-stream [`StreamState`]s; per-stream document order
-//! is preserved because each stream is produced by exactly one worker and
-//! `mpsc` delivery is FIFO per sender.
+//! streams progress concurrently. The placer thread drives one
+//! [`crate::engine::StreamSession`] per stream against the shared engine;
+//! per-stream document order is preserved because each stream is produced
+//! by exactly one worker and `mpsc` delivery is FIFO per sender.
 //!
 //! Per-stream score sequences are seeded independently of the worker
 //! count, so placement outcomes depend on worker count only through
@@ -26,10 +27,9 @@
 
 use super::arbiter::{arbitrate, Arbitration};
 use super::report::{FleetReport, StreamReport};
-use super::stream::{generate_series, StreamSpec, StreamState, HOT};
-use crate::cost::{CostModel, PerDocCosts};
+use super::stream::{generate_series, StreamSpec, HOT};
+use crate::engine::{Engine, StreamSession, TierTopology};
 use crate::interestingness::RbfScorer;
-use crate::storage::StorageSim;
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::sync_channel;
 use std::time::Instant;
@@ -92,16 +92,6 @@ fn stream_seed(fleet_seed: u64, stream_id: u64) -> u64 {
     fleet_seed ^ stream_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
-/// Per-tier effective costs a stream registers with the shared simulator
-/// (rent zeroed when the stream's model excludes it).
-fn stream_tier_costs(model: &CostModel) -> Vec<PerDocCosts> {
-    let adjust = |c: PerDocCosts| PerDocCosts {
-        rent_window: if model.include_rent { c.rent_window } else { 0.0 },
-        ..c
-    };
-    vec![adjust(model.a), adjust(model.b)]
-}
-
 /// Run a fleet of `specs` under `config`. Returns the reconciled report.
 pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetReport> {
     if specs.is_empty() {
@@ -113,27 +103,23 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
         }
     }
     let started = Instant::now();
+    // Static admission-time arbitration for the report; the engine
+    // recomputes the identical verdict internally as the sessions open.
     let arbitration: Arbitration = arbitrate(specs, config.hot_capacity);
 
-    // ---- shared simulator --------------------------------------------------
+    // ---- engine over the shared capacity-limited backend -------------------
     let charge_rent = specs.iter().any(|s| s.model.include_rent);
-    let mut sim = StorageSim::two_tier(specs[0].model.a, specs[0].model.b, charge_rent);
-    sim.set_capacity(HOT, Some(config.hot_capacity as usize));
-    for s in specs {
-        sim.register_stream(s.id, stream_tier_costs(&s.model))?;
-    }
-
-    // ---- per-stream placer states -----------------------------------------
-    let mut states: Vec<StreamState> = specs
-        .iter()
-        .zip(arbitration.plans.iter())
-        .map(|(s, plan)| match config.mode {
-            FleetMode::Arbitrated => {
-                StreamState::new(s, plan.r_budgeted, plan.quota as usize, false)
-            }
-            FleetMode::Naive => StreamState::new(s, plan.r_unconstrained, usize::MAX, true),
-        })
-        .collect();
+    let capacity = usize::try_from(config.hot_capacity).unwrap_or(usize::MAX);
+    let engine = Engine::builder()
+        .topology(
+            TierTopology::two_tier(specs[0].model.a, specs[0].model.b)
+                .with_capacity(HOT, Some(capacity)),
+        )
+        .charge_rent(charge_rent)
+        .build()?;
+    let naive = config.mode == FleetMode::Naive;
+    let mut sessions: Vec<StreamSession> =
+        engine.open_streams(specs.iter().map(|s| s.session_spec(naive)).collect())?;
     let total_docs: u64 = specs.iter().map(|s| s.model.n).sum();
 
     // ---- worker pool -------------------------------------------------------
@@ -195,7 +181,7 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
     while received < total_docs {
         let Ok(chunk) = rx.recv() else { break };
         for (sid, score) in chunk {
-            states[sid as usize].observe(&mut sim, score as f64)?;
+            sessions[sid as usize].observe(score as f64)?;
             received += 1;
         }
     }
@@ -209,12 +195,20 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
     }
 
     // ---- settle + finish ---------------------------------------------------
-    sim.settle_rent(1.0);
-    let mut streams = Vec::with_capacity(states.len());
-    for (state, (spec, plan)) in
-        states.iter_mut().zip(specs.iter().zip(arbitration.plans.iter()))
+    engine.settle_rent(1.0);
+    // capture the plans the streams actually ran BEFORE finishing anything:
+    // every finish re-arbitrates the survivors, mutating their plans
+    let r_effectives: Vec<u64> = sessions
+        .iter()
+        .map(|s| s.plan().map(|p| p.r()).unwrap_or(0))
+        .collect();
+    let mut streams = Vec::with_capacity(sessions.len());
+    for ((session, r_effective), (spec, plan)) in sessions
+        .into_iter()
+        .zip(r_effectives)
+        .zip(specs.iter().zip(arbitration.plans.iter()))
     {
-        let outcome = state.finish(&mut sim)?;
+        let outcome = session.finish()?;
         let analytic = match config.mode {
             FleetMode::Arbitrated => plan.analytic_budgeted,
             FleetMode::Naive => plan.analytic_unconstrained,
@@ -225,11 +219,11 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
             k: spec.model.k,
             demand: plan.demand,
             quota: plan.quota,
-            r_effective: state.effective_r(),
+            r_effective,
             analytic,
-            measured: sim.stream_ledger(spec.id).total(),
-            hot_reads: outcome.hot_reads,
-            cold_reads: outcome.cold_reads,
+            measured: engine.stream_ledger(spec.id).total(),
+            hot_reads: outcome.hot_reads(),
+            cold_reads: outcome.cold_reads(),
             demotions_caused: outcome.demotions_caused,
         });
     }
@@ -246,8 +240,8 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
         workers,
         streams,
         arbitration,
-        ledger: sim.ledger().clone(),
-        hot_peak: sim.peak_occupancy(HOT) as u64,
+        ledger: engine.ledger(),
+        hot_peak: engine.peak_occupancy(HOT) as u64,
         docs_processed: total_docs,
         wall,
         throughput_docs_per_sec: throughput,
@@ -328,6 +322,19 @@ mod tests {
         }
         let rel = (a.total_cost() - b.total_cost()).abs() / a.total_cost().max(1e-12);
         assert!(rel < 1e-9, "fleet totals diverged: rel {rel}");
+    }
+
+    #[test]
+    fn r_effective_reflects_engine_plans() {
+        let specs = demo_fleet(4, 200, 8, true, 5);
+        let contended = run_fleet(&specs, &tiny_config(FleetMode::Arbitrated, 6, 2)).unwrap();
+        for (s, p) in contended.streams.iter().zip(contended.arbitration.plans.iter()) {
+            assert_eq!(s.r_effective, p.r_budgeted, "stream {}", s.id);
+        }
+        let naive = run_fleet(&specs, &tiny_config(FleetMode::Naive, 6, 2)).unwrap();
+        for (s, p) in naive.streams.iter().zip(naive.arbitration.plans.iter()) {
+            assert_eq!(s.r_effective, p.r_unconstrained, "stream {}", s.id);
+        }
     }
 
     #[test]

@@ -1,27 +1,21 @@
 //! One stream of a fleet: its spec (workload + economics + interestingness
-//! profile) and its placer-side runtime state against the shared simulator.
+//! profile) and the synthetic series generators that drive it.
 //!
-//! Mirrors [`crate::policy::PlacementEngine`]'s observe/finish lifecycle,
-//! but operates on a *shared* [`StorageSim`]: document ids are namespaced
-//! per stream, every operation is attributed to the owning stream, and the
-//! hot-tier write path is capacity-aware — arbitrated streams degrade
-//! over-quota writes to the cold tier, naive streams reactively demote the
-//! oldest hot resident (cross-stream interference included) to make room.
+//! The per-stream *runtime* state that used to live here (`StreamState`)
+//! moved into the engine as [`crate::engine::StreamSession`] (ADR-002):
+//! the fleet scheduler now opens one engine session per stream and the
+//! observe/place/finish lifecycle — gid namespacing, attributed charges,
+//! quota degradation, reactive demotion — is the engine's single
+//! implementation, shared with the pipeline.
 
 use crate::cost::CostModel;
-use crate::policy::QuotaChangeover;
-use crate::storage::{StorageSim, TierId};
-use crate::topk::{BoundedTopK, Eviction, Scored};
+use crate::storage::TierId;
 use crate::util::Rng;
-use anyhow::{bail, Result};
 
 /// The shared hot tier (capacity-limited) of a fleet run.
 pub const HOT: TierId = TierId::A;
 /// The shared cold tier (unbounded) of a fleet run.
 pub const COLD: TierId = TierId::B;
-
-/// Bits of the global document id reserved for the stream-local index.
-const INDEX_BITS: u32 = 40;
 
 /// Shape of a stream's synthetic document series — its "interestingness
 /// profile". Scores come from running the generated series through the
@@ -79,161 +73,10 @@ impl StreamSpec {
     pub fn new(id: u64, model: CostModel, profile: SeriesProfile) -> Self {
         Self { id, model, profile }
     }
-}
 
-/// Outcome of one finished stream.
-#[derive(Debug, Clone)]
-pub struct StreamOutcome {
-    pub id: u64,
-    /// Final top-K stream-local indices (best first).
-    pub retained: Vec<u64>,
-    /// Final reads served from the hot tier.
-    pub hot_reads: u64,
-    /// Final reads served from the cold tier.
-    pub cold_reads: u64,
-    /// Reactive demotions this stream triggered (naive mode only).
-    pub demotions_caused: u64,
-}
-
-/// Placer-side runtime state of one stream.
-pub struct StreamState {
-    pub id: u64,
-    pub n: u64,
-    pub k: u64,
-    /// Effective changeover index (budgeted in arbitrated mode).
-    r: u64,
-    /// Hot-tier quota in simultaneous residents (ignored in naive mode).
-    quota: usize,
-    /// Naive mode: ignore the quota, demote reactively on pressure.
-    naive: bool,
-    tracker: BoundedTopK,
-    next_index: u64,
-    hot_in_use: usize,
-    demotions_caused: u64,
-}
-
-impl StreamState {
-    pub fn new(spec: &StreamSpec, r: u64, quota: usize, naive: bool) -> Self {
-        assert!(spec.id < 1u64 << (64 - INDEX_BITS), "stream id too large");
-        assert!(spec.model.n < 1u64 << INDEX_BITS, "stream too long");
-        let k = (spec.model.k as usize).min(spec.model.n as usize);
-        Self {
-            id: spec.id,
-            n: spec.model.n,
-            k: spec.model.k,
-            r,
-            quota,
-            naive,
-            tracker: BoundedTopK::new(k),
-            next_index: 0,
-            hot_in_use: 0,
-            demotions_caused: 0,
-        }
-    }
-
-    /// Namespaced global document id for this stream's `index`.
-    pub fn gid(&self, index: u64) -> u64 {
-        (self.id << INDEX_BITS) | index
-    }
-
-    pub fn observed(&self) -> u64 {
-        self.next_index
-    }
-
-    pub fn done(&self) -> bool {
-        self.next_index >= self.n
-    }
-
-    pub fn effective_r(&self) -> u64 {
-        self.r
-    }
-
-    /// Observe the stream's next document (must be called in stream order).
-    pub fn observe(&mut self, sim: &mut StorageSim, score: f64) -> Result<()> {
-        let i = self.next_index;
-        if i >= self.n {
-            bail!("stream {} longer than declared N={}", self.id, self.n);
-        }
-        self.next_index += 1;
-        let at = i as f64 / self.n as f64;
-        sim.set_attribution(Some(self.id));
-        match self.tracker.offer(Scored::new(i, score)) {
-            Eviction::Rejected => {}
-            Eviction::Accepted => self.write(sim, i, at)?,
-            Eviction::Replaced { victim } => {
-                let vgid = self.gid(victim.index);
-                if sim.locate(vgid) == Some(HOT) {
-                    self.hot_in_use = self.hot_in_use.saturating_sub(1);
-                }
-                sim.delete(vgid, at)?;
-                self.write(sim, i, at)?;
-            }
-        }
-        Ok(())
-    }
-
-    /// Capacity-aware write of an accepted document.
-    fn write(&mut self, sim: &mut StorageSim, index: u64, at: f64) -> Result<()> {
-        let gid = self.gid(index);
-        let wants_hot = if self.naive {
-            // capacity-oblivious: the stream believes its unconstrained r*
-            index < self.r
-        } else {
-            QuotaChangeover::wants_hot(self.r, self.quota, index, self.hot_in_use)
-        };
-        if !wants_hot {
-            sim.put(gid, COLD, at)?;
-            return Ok(());
-        }
-        if !sim.has_room(HOT) {
-            if self.naive {
-                // Reactive demotion (shared-cache behaviour): push the
-                // oldest hot resident — possibly another stream's — cold,
-                // paying a migration hop, then take the freed slot.
-                match sim.oldest_resident(HOT) {
-                    Some(victim) => {
-                        sim.migrate_doc(victim, COLD, at)?;
-                        self.demotions_caused += 1;
-                    }
-                    None => {
-                        // hot capacity is zero: nothing to demote
-                        sim.put(gid, COLD, at)?;
-                        return Ok(());
-                    }
-                }
-            } else {
-                // Arbitrated quotas make this unreachable (Σ quotas ≤ C);
-                // degrade to cold as a safety net rather than failing.
-                sim.put(gid, COLD, at)?;
-                return Ok(());
-            }
-        }
-        sim.put(gid, HOT, at)?;
-        self.hot_in_use += 1;
-        Ok(())
-    }
-
-    /// End of stream: consumer reads the retained top-K. The caller settles
-    /// rent fleet-wide (once) before finishing any stream.
-    pub fn finish(&mut self, sim: &mut StorageSim) -> Result<StreamOutcome> {
-        sim.set_attribution(Some(self.id));
-        let retained: Vec<u64> = self.tracker.sorted_desc().iter().map(|s| s.index).collect();
-        let mut hot_reads = 0u64;
-        let mut cold_reads = 0u64;
-        for &d in &retained {
-            if sim.read(self.gid(d))? == HOT {
-                hot_reads += 1;
-            } else {
-                cold_reads += 1;
-            }
-        }
-        Ok(StreamOutcome {
-            id: self.id,
-            retained,
-            hot_reads,
-            cold_reads,
-            demotions_caused: self.demotions_caused,
-        })
+    /// The engine session spec for this stream (fleet mode decides naive).
+    pub fn session_spec(&self, naive: bool) -> crate::engine::SessionSpec {
+        crate::engine::SessionSpec::from_model(&self.model).with_naive(naive)
     }
 }
 
@@ -241,6 +84,7 @@ impl StreamState {
 mod tests {
     use super::*;
     use crate::cost::PerDocCosts;
+    use crate::engine::{Engine, TierTopology};
     use crate::policy::{run_policy, Changeover};
 
     fn model(n: u64, k: u64) -> CostModel {
@@ -258,71 +102,40 @@ mod tests {
     }
 
     #[test]
-    fn single_stream_matches_placement_engine() {
-        // An unconstrained stream on an uncapped shared sim must reproduce
-        // the single-stream Changeover run exactly (same economics).
+    fn single_session_matches_batch_changeover() {
+        // An unconstrained engine session running its plan on an uncapped
+        // backend must reproduce the single-stream Changeover run exactly
+        // when the plan's cut equals the policy's r (same economics).
         let m = model(600, 10);
         let scores = random_scores(600, 42);
-        let r_cut = 250u64;
+
+        let engine = Engine::builder()
+            .topology(TierTopology::from_model(&m))
+            .charge_rent(m.include_rent)
+            .build()
+            .unwrap();
+        let spec = StreamSpec::new(0, m.clone(), SeriesProfile::Mixed { p_oscillatory: 0.5 });
+        let mut session = engine.open_stream(spec.session_spec(false)).unwrap();
+        let r_cut = session.plan().unwrap().r();
 
         let mut plain = Changeover::new(r_cut);
         let reference = run_policy(&scores, &m, &mut plain).unwrap();
 
-        let spec = StreamSpec::new(0, m.clone(), SeriesProfile::Mixed { p_oscillatory: 0.5 });
-        let mut sim = StorageSim::two_tier(m.a, m.b, m.include_rent);
-        let mut st = StreamState::new(&spec, r_cut, m.k as usize, false);
         for &s in &scores {
-            st.observe(&mut sim, s).unwrap();
+            session.observe(s).unwrap();
         }
-        assert!(st.done());
-        sim.settle_rent(1.0);
-        let out = st.finish(&mut sim).unwrap();
+        assert!(session.done());
+        engine.settle_rent(1.0);
+        let out = session.finish().unwrap();
         assert_eq!(out.retained, reference.retained);
-        let total = sim.ledger().total();
+        let total = engine.ledger().total();
         assert!(
             (total - reference.total_cost()).abs() < 1e-9,
-            "fleet stream ${total} vs engine ${}",
+            "engine session ${total} vs batch ${}",
             reference.total_cost()
         );
-        // and the per-stream ledger equals the whole ledger (single stream)
-        assert!((sim.stream_ledger(0).total() - total).abs() < 1e-12);
-    }
-
-    #[test]
-    fn quota_zero_stream_writes_only_cold() {
-        let m = model(200, 5);
-        let spec = StreamSpec::new(0, m.clone(), SeriesProfile::Noisy { level: 10.0 });
-        let mut sim = StorageSim::two_tier(m.a, m.b, false);
-        let mut st = StreamState::new(&spec, 100, 0, false);
-        for &s in &random_scores(200, 7) {
-            st.observe(&mut sim, s).unwrap();
-        }
-        assert_eq!(sim.tier(HOT).peak_len(), 0);
-    }
-
-    #[test]
-    fn naive_stream_demotes_under_pressure() {
-        let m = model(300, 8);
-        let spec = StreamSpec::new(0, m.clone(), SeriesProfile::Noisy { level: 10.0 });
-        let mut sim = StorageSim::two_tier(m.a, m.b, false);
-        sim.set_capacity(HOT, Some(3));
-        let mut st = StreamState::new(&spec, 200, usize::MAX, true);
-        for &s in &random_scores(300, 9) {
-            st.observe(&mut sim, s).unwrap();
-        }
-        assert!(st.demotions_caused > 0, "pressure must trigger demotions");
-        assert!(sim.peak_occupancy(HOT) <= 3);
-        assert!(sim.ledger().migration_total() > 0.0);
-    }
-
-    #[test]
-    fn gid_namespacing_is_disjoint() {
-        let m = model(100, 3);
-        let noisy = SeriesProfile::Noisy { level: 1.0 };
-        let a = StreamState::new(&StreamSpec::new(1, m.clone(), noisy), 10, 3, false);
-        let b = StreamState::new(&StreamSpec::new(2, m, noisy), 10, 3, false);
-        assert_ne!(a.gid(5), b.gid(5));
-        assert_eq!(a.gid(5) >> INDEX_BITS, 1);
+        // and the per-stream ledger equals the whole ledger (one session)
+        assert!((engine.stream_ledger(0).total() - total).abs() < 1e-12);
     }
 
     #[test]
@@ -337,5 +150,16 @@ mod tests {
             assert_eq!(s.len(), 128);
             assert!(s.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn session_spec_carries_economics_and_mode() {
+        let spec = StreamSpec::new(3, model(100, 5), SeriesProfile::Noisy { level: 1.0 });
+        let s = spec.session_spec(true);
+        assert!(s.naive);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.k, 5);
+        assert_eq!(s.tier_costs.as_ref().unwrap().len(), 2);
+        assert!(s.include_rent);
     }
 }

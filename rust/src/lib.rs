@@ -20,15 +20,33 @@
 //! `artifacts/*.hlo.txt` + `manifest.json`, and [`runtime`] loads them via
 //! the PJRT C API.
 //!
-//! Start with [`cost::case_study_1`], [`policy`], and
+//! ## The engine
+//!
+//! Every placement surface runs through one codepath: [`engine`], a
+//! session-based, N-tier, backend-agnostic API. An [`engine::Engine`] is
+//! built over a [`storage::StorageBackend`] (the simulator
+//! [`storage::StorageSim`] is the reference implementation) and an
+//! [`engine::TierTopology`]; [`engine::Engine::open_stream`] hands out
+//! dynamic [`engine::StreamSession`]s that score/place/finish
+//! independently, and every open/close event re-runs the
+//! [`engine::Arbiter`]'s closed-form quota computation over the live
+//! sessions (online re-arbitration). The single-stream batch executor
+//! ([`policy::run_policy`]), the streaming [`pipeline`], and the
+//! multi-stream [`fleet`] are thin compatibility wrappers over it (see
+//! `docs/adr/ADR-002-engine-api.md`).
+//!
+//! Start with [`cost::case_study_1`], [`policy`], [`engine`], and
 //! [`pipeline`]; the `shptier` binary exposes every paper
 //! experiment via `shptier exp --id <E#>`. Multi-tenant serving —
 //! many concurrent top-K streams arbitrated over shared, capacity-limited
-//! tiers — lives in [`fleet`] (`shptier fleet --streams 16`).
+//! tiers — lives in [`fleet`] (`shptier fleet --streams 16`), and
+//! `shptier engine` demos a 3-tier fleet with a mid-run stream closure
+//! triggering online re-arbitration.
 
 pub mod benchkit;
 pub mod config;
 pub mod cost;
+pub mod engine;
 pub mod exp;
 pub mod fleet;
 pub mod interestingness;

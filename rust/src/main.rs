@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run [--config <path>]        run the streaming pipeline from a TOML config
 //!   fleet [--streams M] [...]    run M concurrent top-K streams over shared tiers
+//!   engine [--tiers 3] [...]     N-tier engine demo with online re-arbitration
 //!   exp --id <id> [--quick]      regenerate a paper table/figure (see DESIGN.md §4)
 //!   optimize [--preset <p>]      print r* and the strategy ranking for an economy
 //!   validate [--quick]           Monte-Carlo validation suite (E1, E2, A2)
@@ -11,7 +12,7 @@
 //! Argument parsing is hand-rolled: the vendored crate set has no clap.
 
 use anyhow::{bail, Context, Result};
-use shptier::config::{FleetLaunchConfig, LaunchConfig, ScorerKind};
+use shptier::config::{EngineDemoConfig, FleetLaunchConfig, LaunchConfig, ScorerKind};
 use shptier::cost::{case_study_1, case_study_2, expected_cost, rank_strategies};
 use shptier::exp;
 use shptier::pipeline::{native_scorer_factory, pjrt_scorer_factory, run_pipeline};
@@ -27,16 +28,34 @@ fn main() {
     }
 }
 
+/// Whether a CLI token is a flag. Only `--`-prefixed tokens whose
+/// remainder is *not* a number count: negative numbers (`-1`, `-2.5`, even
+/// a stray `--3`) are always values, so `shptier foo --offset -1` binds
+/// `-1` to `offset` instead of misparsing it as the next flag. The numeric
+/// exception requires a digit/sign/dot lead-in so that word-shaped flags
+/// the f64 parser would accept (`--inf`, `--nan`) still parse as flags.
+fn is_flag_token(tok: &str) -> bool {
+    match tok.strip_prefix("--") {
+        Some("") | None => false,
+        Some(rest) => {
+            let numeric_looking = rest
+                .starts_with(|c: char| c.is_ascii_digit() || c == '.' || c == '-' || c == '+');
+            !(numeric_looking && rest.parse::<f64>().is_ok())
+        }
+    }
+}
+
 /// Parse `--key value` / `--flag` style args after the subcommand.
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
-        let Some(key) = a.strip_prefix("--") else {
+        if !is_flag_token(a) {
             bail!("unexpected argument '{a}' (expected --key [value])");
-        };
-        let takes_value = i + 1 < args.len() && !args[i + 1].starts_with("--");
+        }
+        let key = a.strip_prefix("--").expect("flag tokens start with --");
+        let takes_value = i + 1 < args.len() && !is_flag_token(&args[i + 1]);
         if takes_value {
             out.insert(key.to_string(), args[i + 1].clone());
             i += 2;
@@ -65,6 +84,7 @@ fn real_main() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&flags),
         "fleet" => cmd_fleet(&flags, seed),
+        "engine" => cmd_engine(&flags, seed),
         "exp" => {
             let id = flags.get("id").map(String::as_str).unwrap_or("all");
             exp::run(id, seed, quick)
@@ -209,6 +229,184 @@ fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// `shptier engine` — the N-tier engine demo: concurrent sessions over a
+/// 3-tier (by default) topology, one closing mid-run with
+/// `finish_release`, so the arbiter's online re-arbitration visibly grows
+/// the survivors' quotas and a late joiner is admitted into the freed
+/// capacity.
+fn cmd_engine(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
+    use shptier::engine::{Engine, SessionSpec, TierTopology};
+    use shptier::policy::PlacementPlan;
+    use shptier::storage::TierId;
+
+    let mut demo = match flags.get("config") {
+        Some(path) => EngineDemoConfig::from_file(std::path::Path::new(path))?,
+        None => EngineDemoConfig::from_toml("")?,
+    };
+    let parse_u64 = |key: &str| -> Result<Option<u64>> {
+        flags
+            .get(key)
+            .map(|s| s.parse::<u64>().with_context(|| format!("--{key} must be an integer")))
+            .transpose()
+    };
+    if let Some(m) = parse_u64("streams")? {
+        demo.streams = m as usize;
+    }
+    if let Some(n) = parse_u64("docs")? {
+        demo.docs = n;
+    }
+    if let Some(k) = parse_u64("k")? {
+        demo.k = k;
+    }
+    if let Some(t) = parse_u64("tiers")? {
+        demo.tiers = t as usize;
+    }
+    if let Some(c) = parse_u64("capacity")? {
+        demo.hot_capacity = c;
+    }
+    if flags.contains_key("seed") {
+        demo.seed = seed;
+    }
+    // one shared rule set for flags and TOML (clamp soft knobs, reject
+    // nonsensical ones)
+    let demo = demo.normalized()?;
+
+    let costs = demo.tier_costs();
+    let k = demo.k.min(demo.docs);
+    let per_stream_demand =
+        PlacementPlan::optimal(&costs, demo.docs, k, false).demand(TierId(0));
+    let hot_capacity = if demo.hot_capacity == 0 {
+        (per_stream_demand * demo.streams as u64 / 2).max(1)
+    } else {
+        demo.hot_capacity
+    };
+    let mut topology = TierTopology::from_costs(costs.clone())?
+        .with_capacity(TierId(0), Some(usize::try_from(hot_capacity).unwrap_or(usize::MAX)));
+    if demo.tiers > 2 {
+        // a mid ("warm") tier with 4× the hot capacity
+        let warm = usize::try_from(hot_capacity * 4).unwrap_or(usize::MAX);
+        topology = topology.with_capacity(TierId(1), Some(warm));
+    }
+    let capacities = topology.capacities();
+    let engine = Engine::builder().topology(topology).charge_rent(false).build()?;
+
+    println!(
+        "engine demo: {} sessions × {} docs (K={}), {} tiers, hot capacity {} \
+         (per-stream demand {}), arbiter '{}', backend '{}'",
+        demo.streams,
+        demo.docs,
+        k,
+        demo.tiers,
+        hot_capacity,
+        per_stream_demand,
+        engine.arbiter_name(),
+        engine.backend_name(),
+    );
+
+    let spec = || SessionSpec::new(demo.docs, k).with_rent(false);
+    let mut sessions = Vec::with_capacity(demo.streams);
+    for _ in 0..demo.streams {
+        sessions.push(engine.open_stream(spec())?);
+    }
+    println!(
+        "admission: {} re-arbitrations; session quotas {:?}",
+        engine.rearbitrations(),
+        sessions[0].quotas(),
+    );
+
+    // phase 1: run everyone to the closure point
+    let mut rng = shptier::util::Rng::new(demo.seed);
+    let close_at = demo.docs * demo.close_percent.min(100) / 100;
+    for _ in 0..close_at {
+        for s in sessions.iter_mut() {
+            s.observe(rng.next_f64())?;
+        }
+    }
+
+    // mid-run closure: session 0 finishes early and releases its residents
+    let survivor_quotas_before = sessions[1].quotas();
+    let closer = sessions.remove(0);
+    let closed_id = closer.id();
+    let out0 = closer.finish_release()?;
+    let survivor_quotas_after = sessions[0].quotas();
+    println!(
+        "closed session {closed_id} mid-run at {}% ({} retained, {}/{} hot/cold \
+         reads); re-arbitration #{} grew survivor quotas {:?} -> {:?}",
+        demo.close_percent,
+        out0.retained.len(),
+        out0.hot_reads(),
+        out0.cold_reads(),
+        engine.rearbitrations(),
+        survivor_quotas_before,
+        survivor_quotas_after,
+    );
+
+    // a late joiner is admitted into the freed capacity
+    let mut late = engine.open_stream(spec())?;
+    println!(
+        "late session {} admitted with quotas {:?} (re-arbitration #{})",
+        late.id(),
+        late.quotas(),
+        engine.rearbitrations(),
+    );
+
+    // phase 2: drive every open session to completion
+    loop {
+        let mut progressed = false;
+        for s in sessions.iter_mut().chain(std::iter::once(&mut late)) {
+            if !s.done() {
+                s.observe(rng.next_f64())?;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    engine.settle_rent(1.0);
+
+    let mut table = Table::new(
+        &format!(
+            "engine demo — {} tiers, hot capacity {}, {} re-arbitrations",
+            demo.tiers,
+            hot_capacity,
+            engine.rearbitrations()
+        ),
+        &["session", "cuts", "quotas", "retained", "hot/cold reads", "measured $"],
+    );
+    let mut rows = Vec::new();
+    for s in sessions.into_iter().chain(std::iter::once(late)) {
+        let id = s.id();
+        let cuts = s.plan().map(|p| format!("{:?}", p.cuts())).unwrap_or_default();
+        let quotas = format!("{:?}", s.quotas());
+        let out = s.finish()?;
+        rows.push((id, cuts, quotas, out));
+    }
+    for (id, cuts, quotas, out) in &rows {
+        table.row(vec![
+            id.to_string(),
+            cuts.clone(),
+            quotas.clone(),
+            out.retained.len().to_string(),
+            format!("{}/{}", out.hot_reads(), out.cold_reads()),
+            format!("{:.4}", engine.stream_ledger(*id).total()),
+        ]);
+    }
+    println!("{}", table.render());
+
+    for (t, cap) in capacities.iter().enumerate() {
+        if let Some(c) = cap {
+            let peak = engine.peak_occupancy(TierId(t));
+            println!(
+                "tier {t}: peak occupancy {peak} / capacity {c} {}",
+                if peak <= *c { "(ok)" } else { "(VIOLATED)" }
+            );
+        }
+    }
+    println!("engine ledger: {}", engine.ledger().summary());
+    Ok(())
+}
+
 fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
     let preset = flags.get("preset").map(String::as_str).unwrap_or("case-study-1");
     let model = match preset {
@@ -235,6 +433,8 @@ USAGE:
   shptier run [--config configs/case_study_2.toml]
   shptier fleet [--streams M] [--docs N] [--k K] [--capacity C]
                 [--workers W] [--mode arbitrated|naive] [--config configs/fleet.toml]
+  shptier engine [--streams M] [--docs N] [--k K] [--tiers 2..4]
+                 [--capacity C] [--config configs/engine.toml]
   shptier exp --id <{}> [--quick] [--seed N]
   shptier optimize [--preset case-study-1|case-study-2]
   shptier validate [--quick]
@@ -243,4 +443,60 @@ USAGE:
         shptier::VERSION,
         exp::EXPERIMENT_IDS.join("|")
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_accepts_negative_number_values() {
+        // `--offset -1` must bind -1 to `offset`, not misparse it as a flag
+        let f = parse_flags(&argv(&["--offset", "-1", "--quick"])).unwrap();
+        assert_eq!(f.get("offset").map(String::as_str), Some("-1"));
+        assert_eq!(f.get("quick").map(String::as_str), Some("true"));
+        // floats and even double-dashed numbers are values too
+        let f = parse_flags(&argv(&["--delta", "-2.5", "--scale", "--3"])).unwrap();
+        assert_eq!(f.get("delta").map(String::as_str), Some("-2.5"));
+        assert_eq!(f.get("scale").map(String::as_str), Some("--3"));
+    }
+
+    #[test]
+    fn parse_flags_key_value_and_boolean() {
+        let f =
+            parse_flags(&argv(&["--streams", "8", "--mode", "naive", "--quick"])).unwrap();
+        assert_eq!(f.get("streams").map(String::as_str), Some("8"));
+        assert_eq!(f.get("mode").map(String::as_str), Some("naive"));
+        assert_eq!(f.get("quick").map(String::as_str), Some("true"));
+        assert!(parse_flags(&argv(&[])).unwrap().is_empty());
+        // adjacent boolean flags stay boolean
+        let f = parse_flags(&argv(&["--a", "--b"])).unwrap();
+        assert_eq!(f.get("a").map(String::as_str), Some("true"));
+        assert_eq!(f.get("b").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn parse_flags_rejects_stray_tokens() {
+        assert!(parse_flags(&argv(&["stray"])).is_err());
+        assert!(parse_flags(&argv(&["--a", "1", "stray"])).is_err());
+        assert!(parse_flags(&argv(&["-x"])).is_err());
+    }
+
+    #[test]
+    fn flag_token_classification() {
+        assert!(is_flag_token("--mode"));
+        assert!(is_flag_token("--k"));
+        // word-shaped tokens the f64 parser would accept are still flags
+        assert!(is_flag_token("--nan"));
+        assert!(is_flag_token("--inf"));
+        assert!(!is_flag_token("-1"));
+        assert!(!is_flag_token("-2.5"));
+        assert!(!is_flag_token("--3"));
+        assert!(!is_flag_token("--"));
+        assert!(!is_flag_token("value"));
+    }
 }

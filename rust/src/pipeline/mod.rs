@@ -20,6 +20,11 @@
 //! The scorer thread *constructs* its `Scorer` inside the thread (PJRT
 //! handles are not `Send`); the placer assigns stream indices in arrival
 //! order, which defines the stream's document order.
+//!
+//! Since ADR-002 the placer stage is a compatibility wrapper over
+//! [`crate::engine::Engine`]: [`crate::policy::PlacementEngine`] drives a
+//! single engine session in policy mode, so the pipeline, the batch
+//! executor, and the fleet all share the engine's one placement codepath.
 
 pub mod report;
 

@@ -1,16 +1,22 @@
-//! Incremental placement engine: the online core shared by the batch trace
-//! executor ([`super::executor::run_policy`]) and the streaming pipeline
+//! Incremental placement engine: the single-stream compatibility facade
+//! over [`crate::engine::Engine`], shared by the batch trace executor
+//! ([`super::executor::run_policy`]) and the streaming pipeline
 //! ([`crate::pipeline`]).
 //!
-//! Feed `(index, score)` observations in stream order; the engine maintains
-//! the top-K tracker, executes the policy's placements/migrations against
-//! the storage simulator, and finishes with the end-of-stream consumer read.
+//! Feed `(index, score)` observations in stream order; the underlying
+//! engine session maintains the top-K tracker, executes the policy's
+//! placements/migrations against the storage backend, and finishes with
+//! the end-of-stream consumer read. This struct used to own the whole
+//! state machine; since the `shptier::engine` redesign (ADR-002) it is a
+//! thin wrapper over a one-session engine with an uncapacitated two-tier
+//! topology — the two-tier degenerate case of the N-tier API, bit-
+//! compatible with the pre-engine behaviour.
 
-use super::{MigrationOrder, PlacementPolicy};
+use super::PlacementPolicy;
 use crate::cost::CostModel;
-use crate::storage::{StorageSim, TierId};
-use crate::topk::{BoundedTopK, Eviction, Scored};
-use anyhow::Result;
+use crate::engine::{Engine, SessionSpec, StreamSession, TierTopology};
+use crate::storage::TierId;
+use anyhow::{anyhow, Result};
 
 /// Outcome of a finished run (batch or streaming).
 #[derive(Debug, Clone)]
@@ -32,14 +38,11 @@ impl RunResult {
     }
 }
 
-/// Online placement state machine.
+/// Online placement state machine (single-stream engine facade).
 pub struct PlacementEngine {
-    sim: StorageSim,
-    tracker: BoundedTopK,
+    engine: Engine,
+    session: Option<StreamSession>,
     n: u64,
-    next_index: u64,
-    writes: u64,
-    series: Option<Vec<u64>>,
     policy_name: String,
 }
 
@@ -52,88 +55,57 @@ impl PlacementEngine {
         record_series: bool,
     ) -> Self {
         assert!(n > 0);
-        let k = (model.k as usize).min(n as usize);
-        Self {
-            sim: StorageSim::two_tier(model.a, model.b, model.include_rent),
-            tracker: BoundedTopK::new(k),
-            n,
-            next_index: 0,
-            writes: 0,
-            series: if record_series { Some(Vec::with_capacity(n as usize)) } else { None },
-            policy_name: policy.name(),
-        }
+        let engine = Engine::builder()
+            .topology(TierTopology::from_model(model))
+            .charge_rent(model.include_rent)
+            .build()
+            .expect("a two-tier topology is always valid");
+        let spec = SessionSpec::from_model(model);
+        let session = engine
+            .open_stream(SessionSpec { n, record_series, ..spec })
+            .expect("a fresh engine admits its first session");
+        Self { engine, session: Some(session), n, policy_name: policy.name() }
     }
 
-    /// Observe the next document. Must be called in stream order.
-    pub fn observe(
-        &mut self,
-        score: f64,
-        policy: &mut dyn PlacementPolicy,
-    ) -> Result<()> {
-        let i = self.next_index;
-        assert!(i < self.n, "stream longer than declared N");
-        self.next_index += 1;
-        let at = i as f64 / self.n as f64;
-        match self.tracker.offer(Scored::new(i, score)) {
-            Eviction::Rejected => {}
-            Eviction::Accepted => {
-                let tier = policy.place(i, self.n);
-                self.sim.put(i, tier, at)?;
-                self.writes += 1;
-            }
-            Eviction::Replaced { victim } => {
-                self.sim.delete(victim.index, at)?;
-                let tier = policy.place(i, self.n);
-                self.sim.put(i, tier, at)?;
-                self.writes += 1;
-            }
-        }
-        for order in policy.on_step(i, self.n, &self.sim) {
-            match order {
-                MigrationOrder::All { from, to } => {
-                    self.sim.migrate_all(from, to, at)?;
-                }
-                MigrationOrder::Doc { doc, to } => {
-                    self.sim.migrate_doc(doc, to, at)?;
-                }
-            }
-        }
-        if let Some(s) = self.series.as_mut() {
-            s.push(self.writes);
-        }
-        Ok(())
+    /// Observe the next document. Must be called in stream order; errors
+    /// once the declared stream length is exceeded.
+    pub fn observe(&mut self, score: f64, policy: &mut dyn PlacementPolicy) -> Result<()> {
+        self.session
+            .as_mut()
+            .ok_or_else(|| anyhow!("placement engine already finished"))?
+            .observe_with_policy(score, policy)
     }
 
     /// Documents observed so far.
     pub fn observed(&self) -> u64 {
-        self.next_index
+        self.session.as_ref().map(|s| s.observed()).unwrap_or(self.n)
     }
 
-    /// Read-only view of the storage simulator (tests and diagnostics).
-    pub fn sim(&self) -> &StorageSim {
-        &self.sim
+    /// Residents of `tier` on the underlying backend (tests/diagnostics;
+    /// replaces the pre-engine `sim()` accessor).
+    pub fn tier_len(&self, tier: TierId) -> usize {
+        self.engine.resident_len(tier)
     }
 
     /// Current top-K threshold score (None until K docs seen).
     pub fn threshold(&self) -> Option<f64> {
-        self.tracker.threshold().map(|s| s.score)
+        self.session.as_ref().and_then(|s| s.threshold())
     }
 
     /// End of stream: settle rent, consumer reads the top-K.
     pub fn finish(mut self) -> Result<RunResult> {
-        self.sim.settle_rent(1.0);
-        let retained: Vec<u64> = self.tracker.sorted_desc().iter().map(|s| s.index).collect();
-        let mut read_from = Vec::with_capacity(retained.len());
-        for &doc in &retained {
-            let tier = self.sim.read(doc)?;
-            read_from.push((doc, tier));
-        }
+        let session = self
+            .session
+            .take()
+            .ok_or_else(|| anyhow!("placement engine already finished"))?;
+        self.engine.settle_rent(1.0);
+        let out = session.finish()?;
         Ok(RunResult {
             policy: self.policy_name,
-            ledger: self.sim.ledger().clone(),
-            retained,
-            read_from,
-            cumulative_writes: self.series.unwrap_or_default(),
+            ledger: self.engine.ledger(),
+            retained: out.retained,
+            read_from: out.read_from,
+            cumulative_writes: out.cumulative_writes,
         })
     }
 }
@@ -186,6 +158,7 @@ mod tests {
         assert!(e.threshold().is_none());
         e.observe(0.6, &mut p).unwrap();
         assert_eq!(e.threshold(), Some(0.5));
+        assert_eq!(e.tier_len(TierId::A), 3);
     }
 
     #[test]

@@ -9,17 +9,19 @@
 
 mod engine;
 mod executor;
+mod plan;
 mod quota;
 mod reactive;
 mod shp_policies;
 
 pub use engine::{PlacementEngine, RunResult};
 pub use executor::{run_policy, run_policy_with_trace};
+pub use plan::PlacementPlan;
 pub use quota::{QuotaChangeover, QuotaChangeoverMigrate};
 pub use reactive::{AgeBasedDemotion, SkiRental};
 pub use shp_policies::{Changeover, ChangeoverMigrate, SingleTier};
 
-use crate::storage::{StorageSim, TierId};
+use crate::storage::{StorageBackend, TierId};
 
 /// A migration the policy wants executed after the current step.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,10 +43,16 @@ pub trait PlacementPolicy {
     /// of a stream of length `n`.
     fn place(&mut self, index: u64, n: u64) -> TierId;
 
-    /// Optional migrations after observing document `index`. `sim` provides
-    /// read-only visibility of current residency (reactive policies inspect
+    /// Optional migrations after observing document `index`. `storage`
+    /// provides read-only visibility of current residency through the
+    /// backend-agnostic [`StorageBackend`] view (reactive policies inspect
     /// it; proactive policies ignore it).
-    fn on_step(&mut self, _index: u64, _n: u64, _sim: &StorageSim) -> Vec<MigrationOrder> {
+    fn on_step(
+        &mut self,
+        _index: u64,
+        _n: u64,
+        _storage: &dyn StorageBackend,
+    ) -> Vec<MigrationOrder> {
         Vec::new()
     }
 }

@@ -1,0 +1,361 @@
+//! N-tier placement plans — the generalization of the paper's two-tier
+//! changeover rule.
+//!
+//! The paper's Algorithm C places "the first `r` documents in A, the rest
+//! in B". Over an ordered hierarchy of `m` tiers (hot → cold) the natural
+//! generalization is a vector of `m − 1` *changeover indices* (one per tier
+//! boundary): document index `i` lands in the first tier `j` whose cut
+//! `cuts[j]` exceeds `i`, i.e. tier `j` owns the index band
+//! `[cuts[j−1], cuts[j])` (with `cuts[−1] = 0` and `cuts[m−1] = N`
+//! implicit). A two-tier plan `cuts = [r]` degenerates exactly to
+//! [`super::Changeover`] / [`super::QuotaChangeover`]; the optional
+//! `migrate` flag reproduces the DO_MIGRATE family in the two-tier case.
+//!
+//! The closed-form machinery carries over band-by-band: expected writes
+//! into tier `j` are `W(cuts[j]) − W(cuts[j−1])` (harmonic sums, eq. 11),
+//! a survivor is read from tier `j` with probability `width_j / N`
+//! (the i.u.d. assumption behind eq. 15), and each band's rent is the
+//! integrated expected occupancy of the band. For `m = 2` the plan's
+//! analytic cost delegates to [`crate::cost::expected_cost`] so the
+//! degenerate case is bit-identical with the pre-engine code paths.
+
+use crate::cost::{
+    expected_cost, expected_writes, optimal_cuts, CostModel, PerDocCosts, Strategy,
+};
+use crate::storage::TierId;
+use anyhow::{bail, Result};
+
+/// An N-tier proactive placement plan: nondecreasing changeover indices,
+/// one per tier boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementPlan {
+    /// Changeover index per tier boundary (`len = num_tiers − 1`),
+    /// nondecreasing, each in `[0, n]`.
+    cuts: Vec<u64>,
+    /// Stream length.
+    n: u64,
+    /// Retained-set size (top-K).
+    k: u64,
+    /// Two-tier only: bulk-migrate all hot residents at `i == cuts[0]`
+    /// (the paper's DO_MIGRATE family). Ignored for `num_tiers > 2`.
+    migrate: bool,
+}
+
+impl PlacementPlan {
+    /// Validated construction from raw cuts.
+    pub fn from_cuts(cuts: Vec<u64>, n: u64, k: u64) -> Result<Self> {
+        if cuts.is_empty() {
+            bail!("placement plan needs at least one changeover index (two tiers)");
+        }
+        if n == 0 || k == 0 || k > n {
+            bail!("placement plan requires 0 < K <= N (got K={k}, N={n})");
+        }
+        let mut prev = 0u64;
+        for (j, &c) in cuts.iter().enumerate() {
+            if c > n {
+                bail!("cut {j} = {c} exceeds stream length {n}");
+            }
+            if c < prev {
+                bail!("cuts must be nondecreasing (cut {j} = {c} < {prev})");
+            }
+            prev = c;
+        }
+        Ok(Self { cuts, n, k, migrate: false })
+    }
+
+    /// The paper's two-tier changeover at `r` (no migration).
+    pub fn two_tier(r: u64, n: u64, k: u64) -> Self {
+        Self { cuts: vec![r.min(n)], n, k: k.min(n).max(1), migrate: false }
+    }
+
+    /// The paper's two-tier changeover-with-migration at `r`.
+    pub fn two_tier_migrate(r: u64, n: u64, k: u64) -> Self {
+        Self { migrate: true, ..Self::two_tier(r, n, k) }
+    }
+
+    /// Closed-form optimal plan for a tier hierarchy: each boundary's cut is
+    /// the two-tier optimum between its adjacent tiers
+    /// ([`crate::cost::optimal_cuts`]), made nondecreasing by a running
+    /// maximum (a document never returns to a hotter tier later in the
+    /// stream). For two tiers this *is* `r*`.
+    pub fn optimal(tier_costs: &[PerDocCosts], n: u64, k: u64, include_rent: bool) -> Self {
+        assert!(tier_costs.len() >= 2, "need at least two tiers");
+        let k = k.min(n).max(1);
+        let cuts = optimal_cuts(tier_costs, n, k, include_rent);
+        Self { cuts, n, k, migrate: false }
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn k(&self) -> u64 {
+        self.k
+    }
+
+    pub fn cuts(&self) -> &[u64] {
+        &self.cuts
+    }
+
+    pub fn migrates(&self) -> bool {
+        self.migrate && self.num_tiers() == 2
+    }
+
+    /// The two-tier changeover parameter (first cut) — the quantity
+    /// reported as `r` everywhere in the two-tier world.
+    pub fn r(&self) -> u64 {
+        self.cuts[0]
+    }
+
+    /// Index band `[lo, hi)` owned by `tier`.
+    pub fn band(&self, tier: TierId) -> (u64, u64) {
+        let lo = if tier.0 == 0 { 0 } else { self.cuts[tier.0 - 1] };
+        let hi = if tier.0 == self.cuts.len() { self.n } else { self.cuts[tier.0] };
+        (lo, hi)
+    }
+
+    /// Proactive tier for stream index `i` (hotter tiers own earlier bands).
+    pub fn tier_for(&self, index: u64) -> TierId {
+        for (j, &c) in self.cuts.iter().enumerate() {
+            if index < c {
+                return TierId(j);
+            }
+        }
+        TierId(self.cuts.len())
+    }
+
+    /// Peak simultaneous residents `tier` can see from this stream:
+    /// `min(band width, K)` (the live set is the current top-K, and only
+    /// band indices are ever written there).
+    pub fn demand(&self, tier: TierId) -> u64 {
+        let (lo, hi) = self.band(tier);
+        (hi - lo).min(self.k)
+    }
+
+    /// Shrink `tier`'s band until its demand fits `quota`, pushing the
+    /// displaced indices into the next colder tier. The two-tier case
+    /// reproduces the arbiter's budget clamp (`r = quota` whenever
+    /// `min(r, K) > quota`). Bands of later tiers are untouched (their cuts
+    /// only ever move down, preserving monotonicity).
+    pub fn clamp_tier_to_quota(&mut self, tier: TierId, quota: u64) {
+        if tier.0 >= self.cuts.len() {
+            return; // the coldest tier is the overflow sink — never clamped
+        }
+        if self.demand(tier) <= quota {
+            return;
+        }
+        let (lo, _) = self.band(tier);
+        self.cuts[tier.0] = lo + quota;
+    }
+
+    /// The degenerate two-tier [`Strategy`], if this is a two-tier plan.
+    pub fn strategy(&self) -> Option<Strategy> {
+        if self.num_tiers() != 2 {
+            return None;
+        }
+        Some(if self.migrate {
+            Strategy::ChangeoverMigrate { r: self.cuts[0] }
+        } else {
+            Strategy::Changeover { r: self.cuts[0] }
+        })
+    }
+
+    /// Analytic expected total cost of running this plan over `tier_costs`.
+    ///
+    /// Two-tier plans delegate to [`crate::cost::expected_cost`] (exact
+    /// degenerate compatibility); N > 2 uses the band generalization:
+    /// harmonic write sums per band, `width/N` read split, and the
+    /// integrated expected band occupancy for rent.
+    pub fn analytic_cost(&self, tier_costs: &[PerDocCosts], include_rent: bool) -> f64 {
+        assert_eq!(tier_costs.len(), self.num_tiers(), "cost entries must match tiers");
+        if self.num_tiers() == 2 {
+            let model = CostModel::new(self.n, self.k, tier_costs[0], tier_costs[1])
+                .with_rent(include_rent);
+            return expected_cost(&model, self.strategy().unwrap()).total();
+        }
+        let (n, k) = (self.n, self.k);
+        let kf = k as f64;
+        let nf = n as f64;
+        let mut total = 0.0;
+        for (j, costs) in tier_costs.iter().enumerate() {
+            let (lo, hi) = self.band(TierId(j));
+            // writes: harmonic band sum (paper eq. 11 per band)
+            let w = expected_writes(hi, k) - expected_writes(lo, k);
+            total += w * costs.write;
+            // reads: survivor lands in the band w.p. width/N (eq. 15 i.u.d.)
+            total += kf * ((hi - lo) as f64 / nf) * costs.read;
+            // rent: integrated expected occupancy of the band
+            if include_rent {
+                total += band_occupancy_time(lo, hi, n, k) * costs.rent_window;
+            }
+        }
+        total
+    }
+}
+
+/// `∫₀ᴺ occ_band(t) dt / N` in doc-windows, where the expected number of
+/// live documents from band `[lo, hi)` at observation time `t` is
+/// `min(t, K) · (min(hi, t) − lo)⁺ / t` (current top-K i.u.d. over `0..t`).
+fn band_occupancy_time(lo: u64, hi: u64, n: u64, k: u64) -> f64 {
+    if hi <= lo || n == 0 {
+        return 0.0;
+    }
+    let (lo, hi, nf) = (lo as f64, hi as f64, n as f64);
+    // inside the band: ∫ min(t,K)(t−lo)/t dt = F1 − lo·F2
+    let inside = int_min_tk(lo, hi, k) - lo * int_min_tk_over_t(lo, hi, k);
+    // after the band: ∫ min(t,K)(hi−lo)/t dt
+    let after = (hi - lo) * int_min_tk_over_t(hi, nf, k);
+    (inside + after) / nf
+}
+
+/// `∫_a^b min(t, K) dt` for `0 ≤ a ≤ b`.
+fn int_min_tk(a: f64, b: f64, k: u64) -> f64 {
+    let kf = k as f64;
+    if b <= kf {
+        0.5 * (b * b - a * a)
+    } else if a >= kf {
+        kf * (b - a)
+    } else {
+        0.5 * (kf * kf - a * a) + kf * (b - kf)
+    }
+}
+
+/// `∫_a^b min(t, K)/t dt` for `0 ≤ a ≤ b` (the integrand is 1 below K).
+fn int_min_tk_over_t(a: f64, b: f64, k: u64) -> f64 {
+    let kf = k as f64;
+    if b <= a {
+        0.0
+    } else if b <= kf {
+        b - a
+    } else if a >= kf {
+        if a <= 0.0 { 0.0 } else { kf * (b / a).ln() }
+    } else {
+        (kf - a) + kf * (b / kf).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::optimal_r;
+
+    fn costs(w: f64, r: f64, s: f64) -> PerDocCosts {
+        PerDocCosts { write: w, read: r, rent_window: s }
+    }
+
+    #[test]
+    fn two_tier_degenerates_to_changeover() {
+        let p = PlacementPlan::two_tier(10, 100, 5);
+        assert_eq!(p.num_tiers(), 2);
+        assert_eq!(p.tier_for(9), TierId::A);
+        assert_eq!(p.tier_for(10), TierId::B);
+        assert_eq!(p.band(TierId::A), (0, 10));
+        assert_eq!(p.band(TierId::B), (10, 100));
+        assert_eq!(p.demand(TierId::A), 5); // min(10, K=5)
+        assert_eq!(p.strategy(), Some(Strategy::Changeover { r: 10 }));
+        let m = PlacementPlan::two_tier_migrate(10, 100, 5);
+        assert!(m.migrates());
+        assert_eq!(m.strategy(), Some(Strategy::ChangeoverMigrate { r: 10 }));
+    }
+
+    #[test]
+    fn from_cuts_validates() {
+        assert!(PlacementPlan::from_cuts(vec![], 10, 1).is_err());
+        assert!(PlacementPlan::from_cuts(vec![11], 10, 1).is_err());
+        assert!(PlacementPlan::from_cuts(vec![5, 3], 10, 1).is_err());
+        assert!(PlacementPlan::from_cuts(vec![3], 10, 0).is_err());
+        let p = PlacementPlan::from_cuts(vec![3, 7], 10, 2).unwrap();
+        assert_eq!(p.num_tiers(), 3);
+        assert_eq!(p.tier_for(2), TierId(0));
+        assert_eq!(p.tier_for(3), TierId(1));
+        assert_eq!(p.tier_for(7), TierId(2));
+        assert_eq!(p.band(TierId(1)), (3, 7));
+    }
+
+    #[test]
+    fn clamp_matches_two_tier_budget_clamp() {
+        // demand = min(r, K) = 20 > quota 4 → r = quota
+        let mut p = PlacementPlan::two_tier(50, 200, 20);
+        p.clamp_tier_to_quota(TierId::A, 4);
+        assert_eq!(p.r(), 4);
+        // quota already satisfied → untouched
+        let mut q = PlacementPlan::two_tier(50, 200, 20);
+        q.clamp_tier_to_quota(TierId::A, 20);
+        assert_eq!(q.r(), 50);
+        // the coldest tier is never clamped
+        let mut c = PlacementPlan::two_tier(50, 200, 20);
+        c.clamp_tier_to_quota(TierId::B, 1);
+        assert_eq!(c.r(), 50);
+    }
+
+    #[test]
+    fn clamp_middle_tier_preserves_monotonicity() {
+        let mut p = PlacementPlan::from_cuts(vec![10, 40], 100, 30).unwrap();
+        // tier 1 band [10, 40): demand min(30, 30) = 30 > 5 → hi = 10 + 5
+        p.clamp_tier_to_quota(TierId(1), 5);
+        assert_eq!(p.cuts(), &[10, 15]);
+        assert_eq!(p.demand(TierId(1)), 5);
+        // displaced indices now belong to the coldest tier
+        assert_eq!(p.tier_for(20), TierId(2));
+    }
+
+    #[test]
+    fn optimal_two_tier_matches_optimal_r() {
+        let a = costs(1e-6, 1e-4, 0.0);
+        let b = costs(5e-5, 1e-6, 0.0);
+        let p = PlacementPlan::optimal(&[a, b], 100_000, 100, false);
+        let m = CostModel::new(100_000, 100, a, b).with_rent(false);
+        assert_eq!(p.r(), optimal_r(&m, false).r);
+        // and the analytic cost agrees with the closed form exactly
+        let want = expected_cost(&m, Strategy::Changeover { r: p.r() }).total();
+        assert!((p.analytic_cost(&[a, b], false) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimal_three_tier_is_monotone() {
+        // hot cheap to write / dear to read, warm intermediate, cold reverse
+        let tiers = [
+            costs(1.0, 4.0, 0.0),
+            costs(2.0, 1.5, 0.0),
+            costs(3.0, 0.5, 0.0),
+        ];
+        let p = PlacementPlan::optimal(&tiers, 1000, 20, false);
+        assert_eq!(p.num_tiers(), 3);
+        assert!(p.cuts()[0] <= p.cuts()[1]);
+        assert!(p.cuts()[1] <= 1000);
+    }
+
+    #[test]
+    fn three_tier_analytic_conserves_writes_and_reads() {
+        let tiers = [costs(1.0, 0.0, 0.0), costs(1.0, 0.0, 0.0), costs(1.0, 0.0, 0.0)];
+        let p = PlacementPlan::from_cuts(vec![100, 400], 1000, 10).unwrap();
+        // identical unit write costs → total = expected writes over the stream
+        let total = p.analytic_cost(&tiers, false);
+        assert!((total - expected_writes(1000, 10)).abs() < 1e-9);
+        // unit read costs → total = K
+        let reads = [costs(0.0, 1.0, 0.0), costs(0.0, 1.0, 0.0), costs(0.0, 1.0, 0.0)];
+        assert!((p.analytic_cost(&reads, false) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn three_tier_rent_is_bounded_by_k() {
+        // unit rent everywhere: total resident doc-time ≤ K doc-windows
+        let rents = [costs(0.0, 0.0, 1.0), costs(0.0, 0.0, 1.0), costs(0.0, 0.0, 1.0)];
+        let p = PlacementPlan::from_cuts(vec![50, 300], 1000, 25).unwrap();
+        let rent = p.analytic_cost(&rents, true);
+        assert!(rent > 0.0);
+        assert!(rent <= 25.0 + 1e-9, "rent {rent} exceeds K doc-windows");
+    }
+
+    #[test]
+    fn occupancy_integral_edges() {
+        assert_eq!(band_occupancy_time(5, 5, 100, 10), 0.0);
+        // whole-stream band of a K=N stream: everything resident to the end
+        let full = band_occupancy_time(0, 100, 100, 100);
+        assert!((full - 50.0).abs() < 1e-9); // ∫ t dt / N = N/2
+    }
+}

@@ -15,15 +15,17 @@
 //! [`crate::cost::optimal_r_budgeted`], which clamps `r = quota` whenever
 //! the unconstrained optimum's demand `min(r*, K)` would not fit.
 //!
-//! The occupancy count is resynced from the simulator after every step
-//! (`on_step`), so single-stream runs track tier-A residency exactly. In a
-//! shared simulator the fleet's [`crate::fleet::stream::StreamState`]
-//! tracks per-stream counts itself and consults [`QuotaChangeover::wants_hot`]
-//! directly.
+//! The occupancy count is resynced from the storage backend after every
+//! step (`on_step`), so single-stream runs track tier-A residency exactly.
+//! On a shared backend the engine's session state
+//! ([`crate::engine::StreamSession`]) tracks per-stream counts itself and
+//! applies the same quota-degradation rule through its N-tier
+//! [`super::PlacementPlan`]; [`QuotaChangeover::wants_hot`] remains the
+//! two-tier reference form.
 
 use super::{MigrationOrder, PlacementPolicy};
 use crate::cost::{optimal_r_budgeted, CostModel};
-use crate::storage::{StorageSim, TierId};
+use crate::storage::{StorageBackend, TierId};
 
 /// "First r to A, the rest to B", with at most `quota` simultaneous hot
 /// residents; over-quota placements degrade to B. No migration.
@@ -74,11 +76,16 @@ impl PlacementPolicy for QuotaChangeover {
         }
     }
 
-    fn on_step(&mut self, _index: u64, _n: u64, sim: &StorageSim) -> Vec<MigrationOrder> {
+    fn on_step(
+        &mut self,
+        _index: u64,
+        _n: u64,
+        storage: &dyn StorageBackend,
+    ) -> Vec<MigrationOrder> {
         // Resync with actual residency: evictions free hot slots for later
         // (still index < r) documents. Between resyncs the internal count
         // only over-estimates, so the quota is never exceeded.
-        self.hot_in_use = sim.tier(TierId::A).len();
+        self.hot_in_use = storage.resident_len(TierId::A);
         Vec::new()
     }
 }
@@ -120,13 +127,18 @@ impl PlacementPolicy for QuotaChangeoverMigrate {
         }
     }
 
-    fn on_step(&mut self, index: u64, _n: u64, sim: &StorageSim) -> Vec<MigrationOrder> {
+    fn on_step(
+        &mut self,
+        index: u64,
+        _n: u64,
+        storage: &dyn StorageBackend,
+    ) -> Vec<MigrationOrder> {
         if !self.migrated && index >= self.r {
             self.migrated = true;
             self.hot_in_use = 0;
             vec![MigrationOrder::All { from: TierId::A, to: TierId::B }]
         } else {
-            self.hot_in_use = sim.tier(TierId::A).len();
+            self.hot_in_use = storage.resident_len(TierId::A);
             Vec::new()
         }
     }
@@ -190,7 +202,7 @@ mod tests {
         let mut ever_hot = 0usize;
         for _ in 0..500 {
             engine.observe(rng.next_f64(), &mut p).unwrap();
-            let hot = engine.sim().tier(TierId::A).len();
+            let hot = engine.tier_len(TierId::A);
             assert!(hot <= quota, "hot occupancy {hot} > quota {quota}");
             ever_hot = ever_hot.max(hot);
         }

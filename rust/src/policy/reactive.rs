@@ -3,7 +3,7 @@
 //! model of the write process.
 
 use super::{MigrationOrder, PlacementPolicy};
-use crate::storage::{StorageSim, TierId};
+use crate::storage::{StorageBackend, TierId};
 
 /// Age-based demotion ("document age as a predictor of document heat",
 /// e.g. f4 [Muralidhar et al. 2014]): write everything hot (A); after each
@@ -30,13 +30,17 @@ impl PlacementPolicy for AgeBasedDemotion {
         TierId::A
     }
 
-    fn on_step(&mut self, index: u64, n: u64, sim: &StorageSim) -> Vec<MigrationOrder> {
+    fn on_step(
+        &mut self,
+        index: u64,
+        n: u64,
+        storage: &dyn StorageBackend,
+    ) -> Vec<MigrationOrder> {
         let now = index as f64 / n as f64;
         let mut orders = Vec::new();
-        for doc in sim.tier(TierId::A).docs() {
-            let written = sim.tier(TierId::A).get(doc).unwrap().written_at;
-            if now - written > self.age_frac {
-                orders.push(MigrationOrder::Doc { doc, to: TierId::B });
+        for r in storage.residents(TierId::A) {
+            if now - r.written_at > self.age_frac {
+                orders.push(MigrationOrder::Doc { doc: r.doc, to: TierId::B });
             }
         }
         orders
@@ -84,17 +88,21 @@ impl PlacementPolicy for SkiRental {
         TierId::A
     }
 
-    fn on_step(&mut self, index: u64, n: u64, sim: &StorageSim) -> Vec<MigrationOrder> {
+    fn on_step(
+        &mut self,
+        index: u64,
+        n: u64,
+        storage: &dyn StorageBackend,
+    ) -> Vec<MigrationOrder> {
         let tau = self.break_even_frac();
         if !tau.is_finite() {
             return Vec::new();
         }
         let now = index as f64 / n as f64;
         let mut orders = Vec::new();
-        for doc in sim.tier(TierId::A).docs() {
-            let written = sim.tier(TierId::A).get(doc).unwrap().written_at;
-            if now - written >= tau {
-                orders.push(MigrationOrder::Doc { doc, to: TierId::B });
+        for r in storage.residents(TierId::A) {
+            if now - r.written_at >= tau {
+                orders.push(MigrationOrder::Doc { doc: r.doc, to: TierId::B });
             }
         }
         orders

@@ -2,7 +2,7 @@
 //! single-tier baselines of Tables I–II.
 
 use super::{MigrationOrder, PlacementPolicy};
-use crate::storage::{StorageSim, TierId};
+use crate::storage::{StorageBackend, TierId};
 
 /// Everything to one tier (Table I/II "Cost all storage A/B" rows).
 #[derive(Debug, Clone, Copy)]
@@ -83,7 +83,12 @@ impl PlacementPolicy for ChangeoverMigrate {
         }
     }
 
-    fn on_step(&mut self, index: u64, _n: u64, _sim: &StorageSim) -> Vec<MigrationOrder> {
+    fn on_step(
+        &mut self,
+        index: u64,
+        _n: u64,
+        _storage: &dyn StorageBackend,
+    ) -> Vec<MigrationOrder> {
         if !self.migrated && index >= self.r {
             self.migrated = true;
             vec![MigrationOrder::All { from: TierId::A, to: TierId::B }]

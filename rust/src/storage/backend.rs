@@ -1,0 +1,271 @@
+//! The storage abstraction behind the engine: a backend-agnostic view of
+//! tiered object storage.
+//!
+//! [`StorageBackend`] is extracted from the concrete [`StorageSim`] so the
+//! placement engine ([`crate::engine`]), the policies
+//! ([`crate::policy::PlacementPolicy::on_step`]), and the fleet wrappers
+//! all program against a trait instead of the simulator struct. The
+//! simulator is the first (reference) implementation; a real-filesystem or
+//! object-store backend can be dropped in without touching policy or
+//! engine code (ROADMAP follow-up).
+//!
+//! Contract notes, normative for every implementation:
+//!
+//! - Tiers are addressed by [`TierId`] with indices `0..num_tiers()`,
+//!   ordered hot → cold by convention.
+//! - Time is the stream-window fraction `at ∈ [0, 1]`; rent accrues from a
+//!   document's write (or last settle) to its delete/migrate/settle.
+//! - Every charge lands in the run-wide [`Ledger`]; when an attribution
+//!   stream is set, charges for documents owned by stream `s` are mirrored
+//!   into `stream_ledger(s)` so `ledger().total() == Σ stream totals`.
+//! - `put`/`migrate_doc` must refuse to overfill a capacity-limited tier;
+//!   callers degrade or demote explicitly (the arbiter's
+//!   degradation-over-rejection rule lives above the backend).
+
+use super::ledger::Ledger;
+use super::sim::StorageSim;
+use super::tier::{Resident, TierId};
+use crate::cost::PerDocCosts;
+use anyhow::Result;
+
+/// Backend-agnostic tiered storage, as required by the placement engine.
+///
+/// Object-safe on purpose: the engine holds `Box<dyn StorageBackend>` and
+/// policies receive `&dyn StorageBackend` in
+/// [`crate::policy::PlacementPolicy::on_step`].
+pub trait StorageBackend: Send {
+    /// Implementation name for reports (e.g. `"sim"`).
+    fn backend_name(&self) -> String;
+
+    /// Number of tiers, hot → cold.
+    fn num_tiers(&self) -> usize;
+
+    // ---- operations --------------------------------------------------------
+
+    /// Write `doc` into `tier` at window fraction `at`, owned by the
+    /// current attribution stream. Fails if the tier is at capacity or the
+    /// document is already resident.
+    fn put(&mut self, doc: u64, tier: TierId, at: f64) -> Result<()>;
+
+    /// Delete (prune) `doc` at window fraction `at`, settling its rent.
+    /// Returns the tier it was resident in.
+    fn delete(&mut self, doc: u64, at: f64) -> Result<TierId>;
+
+    /// Consumer read of a resident document (does not remove it). Returns
+    /// the serving tier.
+    fn read(&mut self, doc: u64) -> Result<TierId>;
+
+    /// Move `doc` to `to` at window fraction `at`: settle source rent,
+    /// charge a source read + destination write, tag both as migration
+    /// hops. Fails if the destination is at capacity.
+    fn migrate_doc(&mut self, doc: u64, to: TierId, at: f64) -> Result<()>;
+
+    /// Bulk-migrate every resident of `from` into `to`. Returns the number
+    /// of documents moved; fails partway if `to` fills up.
+    fn migrate_all(&mut self, from: TierId, to: TierId, at: f64) -> Result<u64>;
+
+    /// Settle rent for everything still resident as of window fraction
+    /// `at`, resetting the rent clocks (idempotent at a fixed `at`).
+    fn settle_rent(&mut self, at: f64);
+
+    // ---- residency views ---------------------------------------------------
+
+    /// Tier currently holding `doc`, if any.
+    fn locate(&self, doc: u64) -> Option<TierId>;
+
+    /// Number of residents of `tier`.
+    fn resident_len(&self, tier: TierId) -> usize;
+
+    /// Snapshot of `tier`'s residents, sorted by doc id (deterministic).
+    fn residents(&self, tier: TierId) -> Vec<Resident>;
+
+    /// Total resident documents across tiers.
+    fn resident_count(&self) -> usize;
+
+    /// The longest-resident document of `tier` (reactive-demotion victim).
+    fn oldest_resident(&self, tier: TierId) -> Option<u64>;
+
+    /// Owning stream of a resident document, if any.
+    fn owner_of(&self, doc: u64) -> Option<u64>;
+
+    /// Resident documents owned by `stream`, across all tiers, sorted.
+    fn docs_of_stream(&self, stream: u64) -> Vec<u64>;
+
+    // ---- capacity ----------------------------------------------------------
+
+    /// Limit `tier` to `capacity` simultaneous residents (None = unbounded).
+    fn set_capacity(&mut self, tier: TierId, capacity: Option<usize>);
+
+    /// Capacity limit of `tier` (None = unbounded).
+    fn capacity(&self, tier: TierId) -> Option<usize>;
+
+    /// Whether `tier` can accept one more resident.
+    fn has_room(&self, tier: TierId) -> bool;
+
+    /// High-water mark of simultaneous residents on `tier`.
+    fn peak_occupancy(&self, tier: TierId) -> usize;
+
+    // ---- accounting --------------------------------------------------------
+
+    /// Attribute subsequent writes to `stream` (None = unattributed).
+    fn set_attribution(&mut self, stream: Option<u64>);
+
+    /// Install per-tier effective costs for one stream's documents. The
+    /// vector length must equal `num_tiers()`.
+    fn register_stream(&mut self, stream: u64, costs: Vec<PerDocCosts>) -> Result<()>;
+
+    /// The run-wide ledger.
+    fn ledger(&self) -> &Ledger;
+
+    /// The accumulated ledger of one stream (empty if it never operated).
+    fn stream_ledger(&self, stream: u64) -> Ledger;
+}
+
+impl StorageBackend for StorageSim {
+    fn backend_name(&self) -> String {
+        "sim".into()
+    }
+
+    fn num_tiers(&self) -> usize {
+        StorageSim::num_tiers(self)
+    }
+
+    fn put(&mut self, doc: u64, tier: TierId, at: f64) -> Result<()> {
+        StorageSim::put(self, doc, tier, at)
+    }
+
+    fn delete(&mut self, doc: u64, at: f64) -> Result<TierId> {
+        StorageSim::delete(self, doc, at)
+    }
+
+    fn read(&mut self, doc: u64) -> Result<TierId> {
+        StorageSim::read(self, doc)
+    }
+
+    fn migrate_doc(&mut self, doc: u64, to: TierId, at: f64) -> Result<()> {
+        StorageSim::migrate_doc(self, doc, to, at)
+    }
+
+    fn migrate_all(&mut self, from: TierId, to: TierId, at: f64) -> Result<u64> {
+        StorageSim::migrate_all(self, from, to, at)
+    }
+
+    fn settle_rent(&mut self, at: f64) {
+        StorageSim::settle_rent(self, at)
+    }
+
+    fn locate(&self, doc: u64) -> Option<TierId> {
+        StorageSim::locate(self, doc)
+    }
+
+    fn resident_len(&self, tier: TierId) -> usize {
+        self.tier(tier).len()
+    }
+
+    fn residents(&self, tier: TierId) -> Vec<Resident> {
+        let t = self.tier(tier);
+        let mut v: Vec<Resident> = t.docs().iter().map(|d| *t.get(*d).unwrap()).collect();
+        v.sort_by_key(|r| r.doc);
+        v
+    }
+
+    fn resident_count(&self) -> usize {
+        StorageSim::resident_count(self)
+    }
+
+    fn oldest_resident(&self, tier: TierId) -> Option<u64> {
+        StorageSim::oldest_resident(self, tier)
+    }
+
+    fn owner_of(&self, doc: u64) -> Option<u64> {
+        StorageSim::owner_of(self, doc)
+    }
+
+    fn docs_of_stream(&self, stream: u64) -> Vec<u64> {
+        StorageSim::docs_of_stream(self, stream)
+    }
+
+    fn set_capacity(&mut self, tier: TierId, capacity: Option<usize>) {
+        StorageSim::set_capacity(self, tier, capacity)
+    }
+
+    fn capacity(&self, tier: TierId) -> Option<usize> {
+        self.tier(tier).capacity()
+    }
+
+    fn has_room(&self, tier: TierId) -> bool {
+        StorageSim::has_room(self, tier)
+    }
+
+    fn peak_occupancy(&self, tier: TierId) -> usize {
+        StorageSim::peak_occupancy(self, tier)
+    }
+
+    fn set_attribution(&mut self, stream: Option<u64>) {
+        StorageSim::set_attribution(self, stream)
+    }
+
+    fn register_stream(&mut self, stream: u64, costs: Vec<PerDocCosts>) -> Result<()> {
+        StorageSim::register_stream(self, stream, costs)
+    }
+
+    fn ledger(&self) -> &Ledger {
+        StorageSim::ledger(self)
+    }
+
+    fn stream_ledger(&self, stream: u64) -> Ledger {
+        StorageSim::stream_ledger(self, stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> StorageSim {
+        StorageSim::two_tier(
+            PerDocCosts { write: 1.0, read: 2.0, rent_window: 3.0 },
+            PerDocCosts { write: 2.0, read: 1.0, rent_window: 1.0 },
+            true,
+        )
+    }
+
+    #[test]
+    fn sim_implements_backend_roundtrip() {
+        let mut b: Box<dyn StorageBackend> = Box::new(sim());
+        assert_eq!(b.backend_name(), "sim");
+        assert_eq!(b.num_tiers(), 2);
+        b.set_attribution(Some(3));
+        b.put(1, TierId::A, 0.0).unwrap();
+        b.put(2, TierId::B, 0.1).unwrap();
+        assert_eq!(b.locate(1), Some(TierId::A));
+        assert_eq!(b.resident_len(TierId::A), 1);
+        assert_eq!(b.resident_count(), 2);
+        assert_eq!(b.owner_of(2), Some(3));
+        assert_eq!(b.docs_of_stream(3), vec![1, 2]);
+        let rs = b.residents(TierId::A);
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].doc, 1);
+        assert_eq!(b.read(1).unwrap(), TierId::A);
+        b.migrate_doc(1, TierId::B, 0.5).unwrap();
+        assert_eq!(b.locate(1), Some(TierId::B));
+        b.settle_rent(1.0);
+        assert!(b.ledger().total() > 0.0);
+        assert!((b.ledger().total() - b.stream_ledger(3).total()).abs() < 1e-12);
+        assert_eq!(b.delete(1, 1.0).unwrap(), TierId::B);
+    }
+
+    #[test]
+    fn backend_capacity_view() {
+        let mut b: Box<dyn StorageBackend> = Box::new(sim());
+        assert_eq!(b.capacity(TierId::A), None);
+        b.set_capacity(TierId::A, Some(1));
+        assert_eq!(b.capacity(TierId::A), Some(1));
+        assert!(b.has_room(TierId::A));
+        b.put(7, TierId::A, 0.0).unwrap();
+        assert!(!b.has_room(TierId::A));
+        assert!(b.put(8, TierId::A, 0.0).is_err());
+        assert_eq!(b.peak_occupancy(TierId::A), 1);
+        assert_eq!(b.oldest_resident(TierId::A), Some(7));
+    }
+}

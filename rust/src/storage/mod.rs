@@ -2,10 +2,12 @@
 //! substrate for trace-driven validation of the analytic model (paper §VIII)
 //! and for the streaming pipeline's placement decisions.
 
+pub mod backend;
 pub mod ledger;
 pub mod sim;
 pub mod tier;
 
+pub use backend::StorageBackend;
 pub use ledger::{Ledger, TierCharges};
 pub use sim::StorageSim;
 pub use tier::{Resident, TierId, TierState};

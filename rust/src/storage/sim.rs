@@ -135,6 +135,19 @@ impl StorageSim {
         self.tier(tier).oldest()
     }
 
+    /// Resident documents owned by `stream`, across all tiers (sorted).
+    /// Used by the engine to release a closing session's residents.
+    pub fn docs_of_stream(&self, stream: u64) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .tiers
+            .iter()
+            .flat_map(|t| t.docs())
+            .filter(|&d| self.owner_of(d) == Some(stream))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Effective costs of `tier` for documents owned by `owner`.
     fn costs_for(&self, owner: Option<u64>, tier: TierId) -> PerDocCosts {
         owner

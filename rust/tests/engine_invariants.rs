@@ -1,0 +1,328 @@
+//! Engine invariants (ADR-002), via the in-tree `propcheck` harness:
+//!
+//! (a) ledger conservation across arbitrary interleavings of
+//!     `open_stream` / `observe` / `finish` / `finish_release`;
+//! (b) online re-arbitration never exceeds per-tier capacity, and matches
+//!     the static arbiter exactly when no stream closes mid-run;
+//! plus the 3-tier mid-run-closure demo the API redesign unlocks, and a
+//! parity check that a policy-mode engine session reproduces the batch
+//! executor bit-for-bit.
+
+use shptier::cost::{CostModel, PerDocCosts};
+use shptier::engine::{Engine, SessionSpec, StreamSession, TierTopology};
+use shptier::fleet::{arbitrate, SeriesProfile, StreamSpec};
+use shptier::policy::{run_policy, Changeover};
+use shptier::propcheck::{check, Config};
+use shptier::storage::TierId;
+use shptier::util::Rng;
+
+fn cfg(cases: u32) -> Config {
+    Config { cases, seed: 0xE1161E }
+}
+
+fn hot() -> PerDocCosts {
+    PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.4 }
+}
+
+fn warm() -> PerDocCosts {
+    PerDocCosts { write: 2.0, read: 1.9, rent_window: 0.2 }
+}
+
+fn cold() -> PerDocCosts {
+    PerDocCosts { write: 3.0, read: 0.2, rent_window: 0.1 }
+}
+
+fn topology(three_tier: bool, hot_capacity: usize) -> TierTopology {
+    if three_tier {
+        TierTopology::from_costs(vec![hot(), warm(), cold()])
+            .unwrap()
+            .with_capacity(TierId(0), Some(hot_capacity))
+            .with_capacity(TierId(1), Some(hot_capacity * 3))
+    } else {
+        TierTopology::two_tier(hot(), cold()).with_capacity(TierId(0), Some(hot_capacity))
+    }
+}
+
+#[derive(Debug)]
+struct EngineCase {
+    /// Per-session (n, k).
+    sessions: Vec<(u64, u64)>,
+    hot_capacity: usize,
+    three_tier: bool,
+    rent: bool,
+    schedule_seed: u64,
+}
+
+fn engine_case(rng: &mut Rng) -> EngineCase {
+    let m = 2 + rng.next_below(4) as usize;
+    let sessions = (0..m)
+        .map(|_| {
+            let n = 30 + rng.next_below(90);
+            let k = 1 + rng.next_below(8).min(n - 1);
+            (n, k)
+        })
+        .collect();
+    EngineCase {
+        sessions,
+        hot_capacity: 1 + rng.next_below(12) as usize,
+        three_tier: rng.next_below(2) == 1,
+        rent: rng.next_below(2) == 1,
+        schedule_seed: rng.next_u64(),
+    }
+}
+
+/// (a) Conservation + capacity under arbitrary open/observe/finish
+/// interleavings, including mid-run `finish_release` closures.
+#[test]
+fn prop_engine_ledger_conserved_across_interleavings() {
+    check("engine-conservation", cfg(12), engine_case, |case| {
+        let topo = topology(case.three_tier, case.hot_capacity);
+        let capacities = topo.capacities();
+        let engine = Engine::builder()
+            .topology(topo)
+            .charge_rent(case.rent)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let mut rng = Rng::new(case.schedule_seed);
+        let mut pending = case.sessions.clone();
+        pending.reverse(); // pop() opens in declaration order
+        let mut live: Vec<StreamSession> = Vec::new();
+        let mut opened = 0u64;
+        let mut finished = 0usize;
+        while !pending.is_empty() || !live.is_empty() {
+            let can_open = !pending.is_empty();
+            if can_open && (live.is_empty() || rng.next_below(10) < 3) {
+                let (n, k) = pending.pop().unwrap();
+                let spec = SessionSpec::new(n, k).with_rent(case.rent);
+                live.push(engine.open_stream(spec).map_err(|e| e.to_string())?);
+                opened += 1;
+                continue;
+            }
+            let idx = rng.next_below(live.len() as u64) as usize;
+            let done = live[idx].done();
+            // occasionally close a session mid-run, releasing capacity
+            if done || (live[idx].observed() > 5 && rng.next_below(20) == 0) {
+                let s = live.swap_remove(idx);
+                if done && rng.next_below(2) == 0 {
+                    s.finish().map_err(|e| e.to_string())?;
+                } else {
+                    s.finish_release().map_err(|e| e.to_string())?;
+                }
+                finished += 1;
+            } else {
+                live[idx].observe(rng.next_f64()).map_err(|e| e.to_string())?;
+            }
+        }
+        if opened != case.sessions.len() as u64 || finished != case.sessions.len() {
+            return Err(format!("schedule lost sessions: {opened} opened, {finished} done"));
+        }
+        engine.settle_rent(1.0);
+
+        // capacity invariant: every capacitated tier's high-water mark
+        for (t, cap) in capacities.iter().enumerate() {
+            if let Some(c) = cap {
+                let peak = engine.peak_occupancy(TierId(t));
+                if peak > *c {
+                    return Err(format!("tier {t} peak {peak} > capacity {c}"));
+                }
+            }
+        }
+
+        // conservation: engine ledger == Σ per-session attributed ledgers
+        let total = engine.ledger().total();
+        let split: f64 = (0..opened).map(|id| engine.stream_ledger(id).total()).sum();
+        if (total - split).abs() > 1e-6 * total.abs().max(1.0) {
+            return Err(format!("conservation violated: engine ${total} != Σ ${split}"));
+        }
+        for (_, charges) in engine.ledger().tiers() {
+            if charges.write_cost < 0.0 || charges.read_cost < 0.0 || charges.rent_cost < 0.0 {
+                return Err("negative charge".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (b) With no mid-run closures, the engine's online verdict after the
+/// last open equals the static arbiter's admission-time plan exactly.
+#[test]
+fn prop_online_matches_static_arbiter_without_closures() {
+    check("engine-static-parity", cfg(20), engine_case, |case| {
+        // two-tier only: the static fleet arbiter is a two-tier surface
+        let engine = Engine::builder()
+            .topology(topology(false, case.hot_capacity))
+            .charge_rent(false)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let specs: Vec<StreamSpec> = case
+            .sessions
+            .iter()
+            .enumerate()
+            .map(|(i, &(n, k))| {
+                StreamSpec::new(
+                    i as u64,
+                    CostModel::new(n, k, hot(), cold()).with_rent(false),
+                    SeriesProfile::Noisy { level: 1.0 },
+                )
+            })
+            .collect();
+        let mut live: Vec<StreamSession> = Vec::new();
+        for spec in &specs {
+            live.push(
+                engine
+                    .open_stream(spec.session_spec(false))
+                    .map_err(|e| e.to_string())?,
+            );
+        }
+        let expected = arbitrate(&specs, case.hot_capacity as u64);
+        for (session, plan) in live.iter().zip(expected.plans.iter()) {
+            let got_r = session.plan().map(|p| p.r()).unwrap_or(u64::MAX);
+            if got_r != plan.r_budgeted {
+                return Err(format!(
+                    "session {}: online r {} != static r {}",
+                    session.id(),
+                    got_r,
+                    plan.r_budgeted
+                ));
+            }
+            let got_quota = session.quotas()[0];
+            if got_quota != Some(plan.quota) {
+                return Err(format!(
+                    "session {}: online quota {:?} != static {}",
+                    session.id(),
+                    got_quota,
+                    plan.quota
+                ));
+            }
+        }
+        // run everything to completion: capacity must hold throughout
+        let mut rng = Rng::new(case.schedule_seed);
+        loop {
+            let mut progressed = false;
+            for s in live.iter_mut() {
+                if !s.done() {
+                    s.observe(rng.next_f64()).map_err(|e| e.to_string())?;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        if engine.peak_occupancy(TierId(0)) > case.hot_capacity {
+            return Err(format!(
+                "peak {} > capacity {}",
+                engine.peak_occupancy(TierId(0)),
+                case.hot_capacity
+            ));
+        }
+        engine.settle_rent(1.0);
+        for s in live {
+            s.finish().map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    });
+}
+
+/// The redesign's acceptance demo: a 3-tier topology where a mid-run
+/// stream closure triggers quota recomputation for the survivors and a
+/// late joiner is admitted into the freed capacity.
+#[test]
+fn three_tier_mid_run_closure_rearbitrates() {
+    let engine = Engine::builder()
+        .topology(topology(true, 12))
+        .charge_rent(false)
+        .build()
+        .unwrap();
+    let spec = || SessionSpec::new(500, 24).with_rent(false);
+    let mut a = engine.open_stream(spec()).unwrap();
+    let mut b = engine.open_stream(spec()).unwrap();
+    assert_eq!(engine.rearbitrations(), 2);
+    let contended_quota = b.quotas()[0].expect("hot tier is capacitated");
+    assert!(contended_quota <= 6, "two sessions split 12 hot slots");
+
+    let mut rng = Rng::new(41);
+    for _ in 0..250 {
+        a.observe(rng.next_f64()).unwrap();
+        b.observe(rng.next_f64()).unwrap();
+    }
+    let hot_before_close = engine.resident_len(TierId(0));
+    let out_a = a.finish_release().unwrap();
+    assert_eq!(out_a.hot_reads() + out_a.cold_reads(), 24);
+    assert_eq!(engine.rearbitrations(), 3, "closure must re-run the arbiter");
+    // the closure released a's residents...
+    assert!(engine.resident_len(TierId(0)) <= hot_before_close);
+    // ...and the survivor's quota grew on the spot
+    let solo_quota = b.quotas()[0].unwrap();
+    assert!(
+        solo_quota > contended_quota,
+        "survivor quota must grow ({contended_quota} -> {solo_quota})"
+    );
+
+    // a late joiner shares with b only — admission reflects live sessions
+    let mut late = engine.open_stream(spec()).unwrap();
+    assert_eq!(engine.rearbitrations(), 4);
+    assert!(late.quotas()[0].unwrap() >= contended_quota);
+
+    loop {
+        let mut progressed = false;
+        for s in [&mut b, &mut late] {
+            if !s.done() {
+                s.observe(rng.next_f64()).unwrap();
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    // capacity invariants held throughout, on both capacitated tiers
+    assert!(engine.peak_occupancy(TierId(0)) <= 12);
+    assert!(engine.peak_occupancy(TierId(1)) <= 36);
+    engine.settle_rent(1.0);
+    b.finish().unwrap();
+    late.finish().unwrap();
+    let total = engine.ledger().total();
+    let split: f64 = (0..3).map(|id| engine.stream_ledger(id).total()).sum();
+    assert!((total - split).abs() < 1e-9 * total.max(1.0));
+}
+
+/// Policy-mode parity: one engine session driving a classic policy
+/// reproduces `run_policy` exactly (the two-tier degenerate case of the
+/// N-tier API is bit-compatible).
+#[test]
+fn policy_mode_session_matches_batch_executor() {
+    let m = CostModel::new(
+        700,
+        12,
+        PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.4 },
+        PerDocCosts { write: 3.0, read: 0.5, rent_window: 0.1 },
+    );
+    let mut rng = Rng::new(99);
+    let scores: Vec<f64> = (0..700).map(|_| rng.next_f64()).collect();
+
+    let mut reference_policy = Changeover::new(280);
+    let reference = run_policy(&scores, &m, &mut reference_policy).unwrap();
+
+    let engine = Engine::builder()
+        .topology(TierTopology::from_model(&m))
+        .charge_rent(m.include_rent)
+        .build()
+        .unwrap();
+    let mut session = engine.open_stream(SessionSpec::from_model(&m)).unwrap();
+    let mut policy = Changeover::new(280);
+    for &s in &scores {
+        session.observe_with_policy(s, &mut policy).unwrap();
+    }
+    engine.settle_rent(1.0);
+    let out = session.finish().unwrap();
+
+    assert_eq!(out.retained, reference.retained);
+    assert_eq!(out.read_from, reference.read_from);
+    let total = engine.ledger().total();
+    assert!(
+        (total - reference.total_cost()).abs() < 1e-12 * reference.total_cost().max(1.0),
+        "engine ${total} vs executor ${}",
+        reference.total_cost()
+    );
+}

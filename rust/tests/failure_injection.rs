@@ -7,7 +7,7 @@ use shptier::pipeline::{run_pipeline, PipelineConfig, ScorerFactory};
 use shptier::policy::{Changeover, MigrationOrder, PlacementPolicy};
 use shptier::runtime::{Manifest, Scorer};
 use shptier::ssa::oscillator_sweep;
-use shptier::storage::{StorageSim, TierId};
+use shptier::storage::{StorageBackend, TierId};
 
 fn tiny_model(n: u64, k: u64) -> CostModel {
     CostModel::new(
@@ -96,7 +96,12 @@ impl PlacementPolicy for RoguePolicy {
         TierId::A
     }
 
-    fn on_step(&mut self, i: u64, _n: u64, _sim: &StorageSim) -> Vec<MigrationOrder> {
+    fn on_step(
+        &mut self,
+        i: u64,
+        _n: u64,
+        _storage: &dyn StorageBackend,
+    ) -> Vec<MigrationOrder> {
         if i == 5 {
             vec![MigrationOrder::Doc { doc: 999_999, to: TierId::B }]
         } else {
