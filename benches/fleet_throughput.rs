@@ -67,7 +67,12 @@ fn main() {
 
     report_scaling(b.results());
 
-    let path = std::path::Path::new("benches/baselines/fleet_throughput.json");
+    // Resolve relative to the crate manifest, not the process CWD: cargo
+    // runs bench binaries with CWD = the package root (rust/), while the
+    // baseline lives under the repository root's benches/.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../benches/baselines/fleet_throughput.json");
+    let path = path.as_path();
     if std::env::var_os("SHPTIER_BENCH_RECORD").is_some() {
         match std::fs::write(path, baseline_json(b.results()).dump()) {
             Ok(()) => println!("recorded baseline to {}", path.display()),

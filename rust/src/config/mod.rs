@@ -301,6 +301,7 @@ impl FleetLaunchConfig {
 /// hot_capacity = 16        # hottest-tier slots (0 → half aggregate demand)
 /// seed = 7
 /// close_percent = 50       # close session 0 after this % of its stream
+/// backend = "sim"          # sim | fs:<root>  (real-FS backend, ADR-003)
 /// ```
 #[derive(Debug, Clone)]
 pub struct EngineDemoConfig {
@@ -313,6 +314,9 @@ pub struct EngineDemoConfig {
     pub seed: u64,
     /// Percentage of session 0's stream after which it closes mid-run.
     pub close_percent: u64,
+    /// Storage backend selector: `sim` or `fs:<root>` (see
+    /// [`crate::engine::BackendSpec::parse`]).
+    pub backend: String,
 }
 
 impl EngineDemoConfig {
@@ -334,6 +338,11 @@ impl EngineDemoConfig {
             hot_capacity: get_u64("engine.hot_capacity", 0)?,
             seed: get_u64("engine.seed", 20190412)?,
             close_percent: get_u64("engine.close_percent", 50)?,
+            backend: t
+                .get_path("engine.backend")
+                .and_then(|v| v.as_str())
+                .unwrap_or("sim")
+                .to_string(),
         }
         .normalized()
     }
@@ -348,6 +357,9 @@ impl EngineDemoConfig {
         if self.close_percent > 100 {
             bail!("config: engine.close_percent must be in 0..=100");
         }
+        // validate the backend selector early, with the config-file spelling
+        crate::engine::BackendSpec::parse(&self.backend)
+            .map_err(|e| anyhow!("config: engine.backend: {e}"))?;
         self.streams = self.streams.max(2);
         self.docs = self.docs.max(10);
         self.k = self.k.max(1);
@@ -561,5 +573,16 @@ heterogeneous = false
         assert_eq!(c.close_percent, 25);
         assert!(EngineDemoConfig::from_toml("[engine]\ntiers = 7\n").is_err());
         assert!(EngineDemoConfig::from_toml("[engine]\nclose_percent = 101\n").is_err());
+    }
+
+    #[test]
+    fn engine_config_backend_selection() {
+        let c = EngineDemoConfig::from_toml("").unwrap();
+        assert_eq!(c.backend, "sim");
+        let c =
+            EngineDemoConfig::from_toml("[engine]\nbackend = \"fs:/tmp/shptier\"\n").unwrap();
+        assert_eq!(c.backend, "fs:/tmp/shptier");
+        assert!(EngineDemoConfig::from_toml("[engine]\nbackend = \"s3\"\n").is_err());
+        assert!(EngineDemoConfig::from_toml("[engine]\nbackend = \"fs:\"\n").is_err());
     }
 }

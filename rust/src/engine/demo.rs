@@ -1,0 +1,353 @@
+//! `engine::demo` — the seeded N-tier engine demo as a library function.
+//!
+//! The demo (M concurrent sessions over an N-tier topology, one closing
+//! mid-run with `finish_release`, a late joiner admitted into the freed
+//! capacity) used to live inside the CLI. It is a library routine now so
+//! three callers share one code path:
+//!
+//! - `shptier engine [--backend sim|fs:<root>]` (the CLI),
+//! - the sim ↔ fs **reconciliation harness** ([`reconcile_backends`]):
+//!   the same seeded demo runs against [`crate::storage::StorageSim`] and
+//!   [`FsBackend`], and the per-stream ledger totals must agree to within
+//!   rounding,
+//! - the integration tests (`rust/tests/backend_parity.rs`).
+//!
+//! Determinism contract: given one [`EngineDemoConfig`], every backend
+//! must produce the identical op sequence — the demo draws all randomness
+//! from the config seed, and backends differ only in substrate (memory vs
+//! files), never in admission/placement behavior.
+
+use super::{Engine, SessionSpec, TierOvercommit, TierTopology};
+use crate::config::EngineDemoConfig;
+use crate::policy::PlacementPlan;
+use crate::storage::{FsBackend, TierId};
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Which [`crate::storage::StorageBackend`] the demo engine runs over.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum BackendSpec {
+    /// The in-memory reference simulator.
+    #[default]
+    Sim,
+    /// The real-filesystem backend rooted at `root` (ADR-003).
+    Fs { root: PathBuf },
+}
+
+impl BackendSpec {
+    /// Parse a CLI / TOML selector: `sim` or `fs:<root>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "sim" {
+            return Ok(Self::Sim);
+        }
+        match s.strip_prefix("fs:") {
+            Some(root) if !root.is_empty() => Ok(Self::Fs { root: PathBuf::from(root) }),
+            _ => bail!("unknown backend '{s}' (expected `sim` or `fs:<root>`)"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Self::Sim => "sim".into(),
+            Self::Fs { root } => format!("fs:{}", root.display()),
+        }
+    }
+}
+
+/// One finished session of the demo (final-table row).
+#[derive(Debug, Clone)]
+pub struct SessionRow {
+    pub id: u64,
+    pub cuts: Vec<u64>,
+    pub quotas: Vec<Option<u64>>,
+    pub retained: usize,
+    pub hot_reads: u64,
+    pub cold_reads: u64,
+    /// Measured $ from the session's attributed ledger.
+    pub measured: f64,
+}
+
+/// Everything the demo produced, backend-agnostic.
+#[derive(Debug, Clone)]
+pub struct EngineDemoReport {
+    pub backend: String,
+    pub arbiter: String,
+    pub tiers: usize,
+    pub hot_capacity: u64,
+    pub per_stream_demand: u64,
+    pub rearbitrations: u64,
+    /// Milestone lines in demo order (admission, closure, late join, …).
+    pub events: Vec<String>,
+    /// Final per-session rows, session-id ascending.
+    pub rows: Vec<SessionRow>,
+    pub capacities: Vec<Option<usize>>,
+    pub peaks: Vec<usize>,
+    pub overcommits: Vec<TierOvercommit>,
+    /// Engine-wide ledger total ($).
+    pub total: f64,
+    pub ledger_summary: String,
+}
+
+impl EngineDemoReport {
+    /// Measured $ of one stream, if it ran.
+    pub fn stream_total(&self, id: u64) -> Option<f64> {
+        self.rows.iter().find(|r| r.id == id).map(|r| r.measured)
+    }
+}
+
+/// Run the seeded engine demo against the given backend. `demo` must be
+/// normalized ([`EngineDemoConfig::normalized`]); for `fs` backends the
+/// root is created on demand and must be fresh (no journal): the demo's
+/// session ids — and therefore its namespaced document ids — restart at
+/// 0 every run, so residents journaled by a previous run would collide
+/// with this one's. Use the `FsBackend` API directly (or the
+/// `backend_parity` tests) to exercise journal recovery.
+pub fn run_engine_demo(
+    demo: &EngineDemoConfig,
+    backend: &BackendSpec,
+) -> Result<EngineDemoReport> {
+    let costs = demo.tier_costs();
+    let k = demo.k.min(demo.docs);
+    let per_stream_demand =
+        PlacementPlan::optimal(&costs, demo.docs, k, false).demand(TierId(0));
+    let hot_capacity = if demo.hot_capacity == 0 {
+        (per_stream_demand * demo.streams as u64 / 2).max(1)
+    } else {
+        demo.hot_capacity
+    };
+    let mut topology = TierTopology::from_costs(costs.clone())?.with_capacity(
+        TierId(0),
+        Some(usize::try_from(hot_capacity).unwrap_or(usize::MAX)),
+    );
+    if demo.tiers > 2 {
+        // a mid ("warm") tier with 4× the hot capacity
+        let warm = usize::try_from(hot_capacity * 4).unwrap_or(usize::MAX);
+        topology = topology.with_capacity(TierId(1), Some(warm));
+    }
+    let capacities = topology.capacities();
+
+    let mut events = Vec::new();
+    let builder = Engine::builder().topology(topology).charge_rent(false);
+    let engine = match backend {
+        BackendSpec::Sim => builder.build()?,
+        BackendSpec::Fs { root } => {
+            if root.join("journal.log").exists() {
+                bail!(
+                    "engine demo needs a fresh fs root, but {} already holds a \
+                     journal from a previous run (demo session/document ids \
+                     restart at 0 and would collide with the journaled \
+                     residents) — point --backend fs: at an empty directory",
+                    root.display()
+                );
+            }
+            let fs = FsBackend::open(root, costs.clone(), false)?;
+            builder.backend(Box::new(fs)).build()?
+        }
+    };
+
+    events.push(format!(
+        "engine demo: {} sessions × {} docs (K={}), {} tiers, hot capacity {} \
+         (per-stream demand {}), arbiter '{}', backend '{}'",
+        demo.streams,
+        demo.docs,
+        k,
+        demo.tiers,
+        hot_capacity,
+        per_stream_demand,
+        engine.arbiter_name(),
+        engine.backend_name(),
+    ));
+
+    let spec = || SessionSpec::new(demo.docs, k).with_rent(false);
+    let mut sessions = Vec::with_capacity(demo.streams);
+    for _ in 0..demo.streams {
+        sessions.push(engine.open_stream(spec())?);
+    }
+    events.push(format!(
+        "admission: {} re-arbitrations; session quotas {:?}",
+        engine.rearbitrations(),
+        sessions[0].quotas(),
+    ));
+
+    // phase 1: run everyone to the closure point
+    let mut rng = crate::util::Rng::new(demo.seed);
+    let close_at = demo.docs * demo.close_percent.min(100) / 100;
+    for _ in 0..close_at {
+        for s in sessions.iter_mut() {
+            s.observe(rng.next_f64())?;
+        }
+    }
+
+    // mid-run closure: session 0 finishes early and releases its residents
+    let survivor_quotas_before = sessions[1].quotas();
+    let closer = sessions.remove(0);
+    let closer_id = closer.id();
+    let closer_cuts = closer.plan().map(|p| p.cuts().to_vec()).unwrap_or_default();
+    let closer_quotas = closer.quotas();
+    let out0 = closer.finish_release()?;
+    let survivor_quotas_after = sessions[0].quotas();
+    events.push(format!(
+        "closed session {closer_id} mid-run at {}% ({} retained, {}/{} hot/cold \
+         reads); re-arbitration #{} grew survivor quotas {:?} -> {:?}",
+        demo.close_percent,
+        out0.retained.len(),
+        out0.hot_reads(),
+        out0.cold_reads(),
+        engine.rearbitrations(),
+        survivor_quotas_before,
+        survivor_quotas_after,
+    ));
+
+    // a late joiner is admitted into the freed capacity
+    let mut late = engine.open_stream(spec())?;
+    events.push(format!(
+        "late session {} admitted with quotas {:?} (re-arbitration #{})",
+        late.id(),
+        late.quotas(),
+        engine.rearbitrations(),
+    ));
+
+    // phase 2: drive every open session to completion
+    loop {
+        let mut progressed = false;
+        for s in sessions.iter_mut().chain(std::iter::once(&mut late)) {
+            if !s.done() {
+                s.observe(rng.next_f64())?;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    engine.settle_rent(1.0)?;
+
+    let mut rows = vec![SessionRow {
+        id: closer_id,
+        cuts: closer_cuts,
+        quotas: closer_quotas,
+        retained: out0.retained.len(),
+        hot_reads: out0.hot_reads(),
+        cold_reads: out0.cold_reads(),
+        measured: engine.stream_ledger(closer_id).total(),
+    }];
+    for s in sessions.into_iter().chain(std::iter::once(late)) {
+        let id = s.id();
+        let cuts = s.plan().map(|p| p.cuts().to_vec()).unwrap_or_default();
+        let quotas = s.quotas();
+        let out = s.finish()?;
+        rows.push(SessionRow {
+            id,
+            cuts,
+            quotas,
+            retained: out.retained.len(),
+            hot_reads: out.hot_reads(),
+            cold_reads: out.cold_reads(),
+            measured: engine.stream_ledger(id).total(),
+        });
+    }
+    rows.sort_by_key(|r| r.id);
+
+    let peaks = (0..capacities.len())
+        .map(|t| engine.peak_occupancy(TierId(t)))
+        .collect();
+    Ok(EngineDemoReport {
+        backend: backend.label(),
+        arbiter: engine.arbiter_name(),
+        tiers: demo.tiers,
+        hot_capacity,
+        per_stream_demand,
+        rearbitrations: engine.rearbitrations(),
+        events,
+        rows,
+        capacities,
+        peaks,
+        overcommits: engine.overcommits(),
+        total: engine.ledger().total(),
+        ledger_summary: engine.ledger().summary(),
+    })
+}
+
+/// Outcome of a sim ↔ fs reconciliation run.
+#[derive(Debug, Clone)]
+pub struct ReconcileReport {
+    pub sim: EngineDemoReport,
+    pub fs: EngineDemoReport,
+    /// Largest |sim − fs| across per-stream totals ($).
+    pub max_stream_delta: f64,
+    /// |sim − fs| of the engine-wide totals ($).
+    pub total_delta: f64,
+}
+
+/// Relative tolerance for ledger parity ("within rounding").
+const PARITY_TOL: f64 = 1e-9;
+
+/// Run the same seeded demo against [`crate::storage::StorageSim`] and
+/// [`FsBackend`] (rooted at `fs_root`, which must not already hold a
+/// journal) and assert ledger parity: the engine-wide total and every
+/// per-stream total must agree to within rounding. Errors spell out the
+/// first divergence.
+pub fn reconcile_backends(
+    demo: &EngineDemoConfig,
+    fs_root: &Path,
+) -> Result<ReconcileReport> {
+    if fs_root.join("journal.log").exists() {
+        bail!(
+            "reconciliation needs a fresh fs root, but {} already holds a journal",
+            fs_root.display()
+        );
+    }
+    let sim = run_engine_demo(demo, &BackendSpec::Sim)?;
+    let fs = run_engine_demo(demo, &BackendSpec::Fs { root: fs_root.to_path_buf() })?;
+
+    let scale = sim.total.abs().max(1.0);
+    let total_delta = (sim.total - fs.total).abs();
+    if total_delta > PARITY_TOL * scale {
+        bail!(
+            "ledger parity violated: sim total ${:.6} vs fs total ${:.6}",
+            sim.total,
+            fs.total
+        );
+    }
+    if sim.rows.len() != fs.rows.len() {
+        bail!(
+            "session count diverged: sim ran {} sessions, fs ran {}",
+            sim.rows.len(),
+            fs.rows.len()
+        );
+    }
+    let mut max_stream_delta = 0.0f64;
+    for (s, f) in sim.rows.iter().zip(fs.rows.iter()) {
+        if s.id != f.id {
+            bail!("session id order diverged: sim {} vs fs {}", s.id, f.id);
+        }
+        let delta = (s.measured - f.measured).abs();
+        if delta > PARITY_TOL * s.measured.abs().max(1.0) {
+            bail!(
+                "stream {} parity violated: sim ${:.6} vs fs ${:.6}",
+                s.id,
+                s.measured,
+                f.measured
+            );
+        }
+        max_stream_delta = max_stream_delta.max(delta);
+    }
+    Ok(ReconcileReport { sim, fs, max_stream_delta, total_delta })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_spec_parses() {
+        assert_eq!(BackendSpec::parse("sim").unwrap(), BackendSpec::Sim);
+        assert_eq!(
+            BackendSpec::parse("fs:/tmp/x").unwrap(),
+            BackendSpec::Fs { root: PathBuf::from("/tmp/x") }
+        );
+        assert!(BackendSpec::parse("fs:").is_err());
+        assert!(BackendSpec::parse("s3://bucket").is_err());
+        assert_eq!(BackendSpec::parse("fs:/a/b").unwrap().label(), "fs:/a/b");
+    }
+}

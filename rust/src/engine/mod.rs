@@ -31,13 +31,25 @@
 //!
 //! The engine is internally synchronized (`Arc<Mutex>`), so sessions are
 //! independent handles: the fleet's placer drives many of them
-//! interleaved, and they may be moved across threads.
+//! interleaved, and they may be moved across threads. The lock recovers
+//! from poisoning — a session that panics mid-operation does not brick
+//! the surviving sessions (see [`Engine::poison_recoveries`]).
+//!
+//! The default backend is the in-memory [`StorageSim`]; pass
+//! [`crate::storage::FsBackend`] to [`EngineBuilder::backend`] to place
+//! real files on real tier directories (`shptier engine --backend
+//! fs:<root>`), with ledger parity checked by
+//! [`demo::reconcile_backends`].
 
 pub mod arbiter;
+pub mod demo;
 pub mod session;
 pub mod topology;
 
 pub use arbiter::{Arbiter, PlanAssignment, ProportionalArbiter, SessionSnapshot};
+pub use demo::{
+    reconcile_backends, run_engine_demo, BackendSpec, EngineDemoReport, ReconcileReport,
+};
 pub use session::{SessionOutcome, SessionSpec};
 pub use topology::{TierSpec, TierTopology};
 
@@ -46,7 +58,20 @@ use crate::storage::{Ledger, StorageBackend, StorageSim, TierId};
 use anyhow::{anyhow, bail, Result};
 use session::{SessionState, INDEX_BITS};
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// A capacitated tier whose orphaned residents (left by plain finishes of
+/// now-closed sessions) consume its entire capacity: the arbiter would
+/// silently allocate zero slots to every live session, starving them all.
+/// Surfaced in the arbitration report instead of being clamped away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierOvercommit {
+    pub tier: TierId,
+    /// Configured capacity of the tier.
+    pub capacity: usize,
+    /// Residents owned by no live session.
+    pub orphaned: usize,
+}
 
 /// Engine internals behind the session handles.
 struct Shared {
@@ -57,6 +82,48 @@ struct Shared {
     next_id: u64,
     rearbitrations: u64,
     last_assignments: Vec<PlanAssignment>,
+    /// Tiers whose orphans swallowed their whole capacity at the last
+    /// arbitration (empty = healthy).
+    last_overcommits: Vec<TierOvercommit>,
+    /// Times a poisoned engine lock was recovered (a session panicked
+    /// while holding it).
+    poison_recoveries: u64,
+}
+
+/// Lock the shared engine state, recovering from mutex poisoning: a
+/// session that panics mid-operation must not brick every surviving
+/// session in the fleet. The engine's per-operation mutations are small
+/// and the accounting invariants are checked by the invariant tests, so
+/// recovery (rather than propagating the panic to innocent sessions) is
+/// the right default; the recovery count is surfaced via
+/// [`Engine::poison_recoveries`] for monitoring.
+fn lock_shared(shared: &Mutex<Shared>) -> MutexGuard<'_, Shared> {
+    match shared.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            shared.clear_poison();
+            let mut g = poisoned.into_inner();
+            g.poison_recoveries += 1;
+            g
+        }
+    }
+}
+
+/// Re-arbitrate, rolling back the just-admitted sessions if the arbiter
+/// panics. Without this, a panicking custom [`Arbiter`] inside
+/// `open_stream` would — now that the lock recovers from poisoning —
+/// leave ghost sessions behind (admitted, but no handle ever returned to
+/// finish them), silently shrinking every future quota. The panic is
+/// re-raised to the opener.
+fn rearbitrate_or_rollback(g: &mut Shared, admitted: &[u64]) {
+    let result =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| g.rearbitrate()));
+    if let Err(panic) = result {
+        for id in admitted {
+            g.sessions.remove(id);
+        }
+        std::panic::resume_unwind(panic);
+    }
 }
 
 impl Shared {
@@ -140,6 +207,7 @@ impl Shared {
         let snapshots: Vec<SessionSnapshot> =
             self.sessions.values().map(|s| s.snapshot()).collect();
         let mut topology = self.topology.clone();
+        self.last_overcommits.clear();
         for tier in self.topology.capacitated() {
             let orphaned = self
                 .backend
@@ -149,6 +217,18 @@ impl Shared {
                 .count();
             if orphaned > 0 {
                 let cap = self.topology.tier(tier).capacity.unwrap_or(usize::MAX);
+                if orphaned >= cap && !self.sessions.is_empty() {
+                    // over-commit: the clamp below would hand every live
+                    // session a zero quota with no signal — record it in
+                    // the arbitration report instead of starving silently
+                    // (callers like the CLI render it; the library itself
+                    // stays quiet)
+                    self.last_overcommits.push(TierOvercommit {
+                        tier,
+                        capacity: cap,
+                        orphaned,
+                    });
+                }
                 topology = topology.with_capacity(tier, Some(cap.saturating_sub(orphaned)));
             }
         }
@@ -250,6 +330,8 @@ impl EngineBuilder {
                 next_id: 0,
                 rearbitrations: 0,
                 last_assignments: Vec::new(),
+                last_overcommits: Vec::new(),
+                poison_recoveries: 0,
             })),
         })
     }
@@ -264,9 +346,9 @@ impl Engine {
     /// the backend, admits it, and triggers re-arbitration over all live
     /// sessions.
     pub fn open_stream(&self, spec: SessionSpec) -> Result<StreamSession> {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = lock_shared(&self.shared);
         let id = g.admit(&spec)?;
-        g.rearbitrate();
+        rearbitrate_or_rollback(&mut g, &[id]);
         Ok(StreamSession { id, shared: Arc::clone(&self.shared) })
     }
 
@@ -276,7 +358,7 @@ impl Engine {
     /// verdicts would be discarded anyway. On error, previously admitted
     /// specs from this batch remain open (arbitrated by the next event).
     pub fn open_streams(&self, specs: Vec<SessionSpec>) -> Result<Vec<StreamSession>> {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = lock_shared(&self.shared);
         let mut handles = Vec::with_capacity(specs.len());
         let mut failure = None;
         for spec in &specs {
@@ -292,7 +374,8 @@ impl Engine {
         }
         // arbitrate whatever was admitted, error or not, so no session is
         // ever left running its placeholder plan
-        g.rearbitrate();
+        let admitted: Vec<u64> = handles.iter().map(|h| h.id).collect();
+        rearbitrate_or_rollback(&mut g, &admitted);
         match failure {
             Some(e) => Err(e),
             None => Ok(handles),
@@ -301,56 +384,71 @@ impl Engine {
 
     /// Settle rent for everything resident as of window fraction `at`
     /// (call once at end of window, before finishing end-of-run sessions).
-    pub fn settle_rent(&self, at: f64) {
-        self.shared.lock().unwrap().backend.settle_rent(at);
+    /// Fallible: durable backends journal the settlement.
+    pub fn settle_rent(&self, at: f64) -> Result<()> {
+        lock_shared(&self.shared).backend.settle_rent(at)
     }
 
     /// Snapshot of the engine-wide ledger.
     pub fn ledger(&self) -> Ledger {
-        self.shared.lock().unwrap().backend.ledger().clone()
+        lock_shared(&self.shared).backend.ledger().clone()
     }
 
     /// Snapshot of one session's attributed ledger.
     pub fn stream_ledger(&self, id: u64) -> Ledger {
-        self.shared.lock().unwrap().backend.stream_ledger(id)
+        lock_shared(&self.shared).backend.stream_ledger(id)
     }
 
     pub fn num_tiers(&self) -> usize {
-        self.shared.lock().unwrap().topology.num_tiers()
+        lock_shared(&self.shared).topology.num_tiers()
     }
 
     /// High-water mark of simultaneous residents on `tier`.
     pub fn peak_occupancy(&self, tier: TierId) -> usize {
-        self.shared.lock().unwrap().backend.peak_occupancy(tier)
+        lock_shared(&self.shared).backend.peak_occupancy(tier)
     }
 
     /// Current residents of `tier`.
     pub fn resident_len(&self, tier: TierId) -> usize {
-        self.shared.lock().unwrap().backend.resident_len(tier)
+        lock_shared(&self.shared).backend.resident_len(tier)
     }
 
     /// Number of currently open sessions.
     pub fn live_sessions(&self) -> usize {
-        self.shared.lock().unwrap().sessions.len()
+        lock_shared(&self.shared).sessions.len()
     }
 
     /// How many times the arbiter has run (one per open/close event).
     pub fn rearbitrations(&self) -> u64 {
-        self.shared.lock().unwrap().rearbitrations
+        lock_shared(&self.shared).rearbitrations
     }
 
     /// The most recent arbitration verdict (one entry per then-live
     /// session).
     pub fn assignments(&self) -> Vec<PlanAssignment> {
-        self.shared.lock().unwrap().last_assignments.clone()
+        lock_shared(&self.shared).last_assignments.clone()
+    }
+
+    /// Capacitated tiers whose orphaned residents swallowed their entire
+    /// capacity at the last arbitration — live sessions are starved of
+    /// those tiers until capacity is released (empty = healthy). Part of
+    /// the arbitration report alongside [`Engine::assignments`].
+    pub fn overcommits(&self) -> Vec<TierOvercommit> {
+        lock_shared(&self.shared).last_overcommits.clone()
+    }
+
+    /// Times the engine lock was recovered after a session panicked while
+    /// holding it (0 = no panics; survivors keep operating either way).
+    pub fn poison_recoveries(&self) -> u64 {
+        lock_shared(&self.shared).poison_recoveries
     }
 
     pub fn arbiter_name(&self) -> String {
-        self.shared.lock().unwrap().arbiter.name()
+        lock_shared(&self.shared).arbiter.name()
     }
 
     pub fn backend_name(&self) -> String {
-        self.shared.lock().unwrap().backend.backend_name()
+        lock_shared(&self.shared).backend.backend_name()
     }
 }
 
@@ -369,7 +467,7 @@ impl StreamSession {
 
     /// Observe the next document under the session's (arbitrated) plan.
     pub fn observe(&mut self, score: f64) -> Result<()> {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = lock_shared(&self.shared);
         let Shared { backend, sessions, .. } = &mut *g;
         let s = sessions
             .get_mut(&self.id)
@@ -387,7 +485,7 @@ impl StreamSession {
         score: f64,
         policy: &mut dyn PlacementPolicy,
     ) -> Result<()> {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = lock_shared(&self.shared);
         if g.sessions.len() > 1 {
             bail!("observe_with_policy requires exclusive engine ownership");
         }
@@ -425,7 +523,7 @@ impl StreamSession {
 
     /// Residents of `tier` on the shared backend (diagnostics).
     pub fn tier_len(&self, tier: TierId) -> usize {
-        self.shared.lock().unwrap().backend.resident_len(tier)
+        lock_shared(&self.shared).backend.resident_len(tier)
     }
 
     /// Finish at end of window: consumer-read the retained top-K, close
@@ -444,7 +542,7 @@ impl StreamSession {
     }
 
     fn finish_inner(self, release: bool) -> Result<SessionOutcome> {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = lock_shared(&self.shared);
         let Shared { backend, sessions, .. } = &mut *g;
         let mut s = sessions
             .remove(&self.id)
@@ -458,7 +556,7 @@ impl StreamSession {
     }
 
     fn with_state<T>(&self, f: impl FnOnce(&SessionState) -> T) -> Option<T> {
-        self.shared.lock().unwrap().sessions.get(&self.id).map(f)
+        lock_shared(&self.shared).sessions.get(&self.id).map(f)
     }
 }
 
@@ -503,7 +601,7 @@ mod tests {
         }
         assert!(s.done());
         assert!(s.observe(0.5).is_err(), "overlong stream must error");
-        engine.settle_rent(1.0);
+        engine.settle_rent(1.0).unwrap();
         let out = s.finish().unwrap();
         assert_eq!(out.retained.len(), 10);
         assert_eq!(out.hot_reads() + out.cold_reads(), 10);
@@ -542,7 +640,7 @@ mod tests {
             b.observe(rng.next_f64()).unwrap();
         }
         assert!(engine.peak_occupancy(TierId::A) <= 10);
-        engine.settle_rent(1.0);
+        engine.settle_rent(1.0).unwrap();
         b.finish().unwrap();
     }
 
@@ -561,7 +659,7 @@ mod tests {
             a.observe(rng.next_f64()).unwrap();
             b.observe(rng.next_f64()).unwrap();
         }
-        engine.settle_rent(1.0);
+        engine.settle_rent(1.0).unwrap();
         a.finish().unwrap();
         b.finish().unwrap();
         let total = engine.ledger().total();
@@ -594,7 +692,7 @@ mod tests {
         for i in 0..300 {
             s.observe(i as f64).unwrap();
         }
-        engine.settle_rent(1.0);
+        engine.settle_rent(1.0).unwrap();
         let out = s.finish().unwrap();
         assert_eq!(out.retained.len(), 12);
         let ledger = engine.ledger();
@@ -630,6 +728,101 @@ mod tests {
         assert!(engine.open_stream(naive).is_err(), "mode mixing must be rejected");
         // same mode is fine
         assert!(engine.open_stream(SessionSpec::new(50, 5)).is_ok());
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_for_survivors() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let engine = two_tier_engine(Some(8));
+        let mut survivor = engine
+            .open_stream(SessionSpec::new(50, 5).with_rent(false))
+            .unwrap();
+        survivor.observe(0.3).unwrap();
+        // poison the engine lock the way a panicking session would: die
+        // while holding it
+        let shared = Arc::clone(&engine.shared);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = shared.lock().unwrap();
+            panic!("session panicked mid-operation");
+        }));
+        assert!(result.is_err());
+        // the survivor keeps observing, finishing, and reading ledgers —
+        // no PoisonError propagates
+        survivor.observe(0.9).unwrap();
+        assert!(engine.poison_recoveries() >= 1);
+        engine.settle_rent(1.0).unwrap();
+        let out = survivor.finish().unwrap();
+        assert_eq!(out.retained.len(), 2);
+        assert!(engine.ledger().total() > 0.0);
+    }
+
+    #[test]
+    fn panicking_arbiter_rolls_back_the_admission() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        struct PanickingArbiter;
+        impl Arbiter for PanickingArbiter {
+            fn name(&self) -> String {
+                "panicking".into()
+            }
+            fn arbitrate(
+                &self,
+                _sessions: &[SessionSnapshot],
+                _topology: &TierTopology,
+            ) -> Vec<PlanAssignment> {
+                panic!("injected arbiter panic");
+            }
+        }
+        let engine = Engine::builder()
+            .topology(TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5)))
+            .arbiter(Box::new(PanickingArbiter))
+            .charge_rent(false)
+            .build()
+            .unwrap();
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            engine.open_stream(SessionSpec::new(10, 2))
+        }));
+        assert!(attempt.is_err(), "the arbiter panic must reach the opener");
+        // the half-admitted session was rolled back: no ghost shrinking
+        // future quotas, and the engine still answers queries
+        assert_eq!(engine.live_sessions(), 0);
+        assert!(engine.poison_recoveries() >= 1);
+    }
+
+    #[test]
+    fn orphan_overcommit_is_surfaced_not_silent() {
+        // hot tier with 3 slots and hot-dominant economics (everything
+        // places hot): a session fills it, finishes WITHOUT releasing,
+        // and its residents become orphans that swallow the capacity
+        let engine = Engine::builder()
+            .topology(
+                TierTopology::two_tier(pd(0.1, 0.1), pd(10.0, 10.0))
+                    .with_capacity(TierId::A, Some(3)),
+            )
+            .charge_rent(false)
+            .build()
+            .unwrap();
+        let mut a = engine
+            .open_stream(SessionSpec::new(10, 3).with_rent(false))
+            .unwrap();
+        for i in 0..10 {
+            a.observe(i as f64).unwrap(); // increasing: top-3 all hot
+        }
+        a.finish().unwrap(); // plain finish: residents stay as orphans
+        assert_eq!(engine.resident_len(TierId::A), 3);
+        assert!(engine.overcommits().is_empty(), "no live sessions: not an over-commit");
+        // a new session arrives: every hot slot is orphaned, so its hot
+        // quota silently clamps to 0 — the report must say so
+        let b = engine
+            .open_stream(SessionSpec::new(10, 3).with_rent(false))
+            .unwrap();
+        let over = engine.overcommits();
+        assert_eq!(over.len(), 1);
+        assert_eq!(over[0].tier, TierId::A);
+        assert_eq!(over[0].capacity, 3);
+        assert_eq!(over[0].orphaned, 3);
+        assert_eq!(b.quotas()[0], Some(0), "the clamp itself is unchanged");
+        // releasing the orphans is out of scope here; close cleanly
+        drop(b);
     }
 
     #[test]

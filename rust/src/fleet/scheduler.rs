@@ -195,7 +195,7 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
     }
 
     // ---- settle + finish ---------------------------------------------------
-    engine.settle_rent(1.0);
+    engine.settle_rent(1.0)?;
     // capture the plans the streams actually ran BEFORE finishing anything:
     // every finish re-arbitrates the survivors, mutating their plans
     let r_effectives: Vec<u64> = sessions

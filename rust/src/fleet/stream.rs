@@ -125,7 +125,7 @@ mod tests {
             session.observe(s).unwrap();
         }
         assert!(session.done());
-        engine.settle_rent(1.0);
+        engine.settle_rent(1.0).unwrap();
         let out = session.finish().unwrap();
         assert_eq!(out.retained, reference.retained);
         let total = engine.ledger().total();

@@ -24,8 +24,10 @@
 //!
 //! Every placement surface runs through one codepath: [`engine`], a
 //! session-based, N-tier, backend-agnostic API. An [`engine::Engine`] is
-//! built over a [`storage::StorageBackend`] (the simulator
-//! [`storage::StorageSim`] is the reference implementation) and an
+//! built over a [`storage::StorageBackend`] — the simulator
+//! [`storage::StorageSim`] (reference) or the real-filesystem
+//! [`storage::FsBackend`] (documents as files, write-ahead journal,
+//! crash recovery; ADR-003) — and an
 //! [`engine::TierTopology`]; [`engine::Engine::open_stream`] hands out
 //! dynamic [`engine::StreamSession`]s that score/place/finish
 //! independently, and every open/close event re-runs the

@@ -4,6 +4,8 @@
 //!   run [--config <path>]        run the streaming pipeline from a TOML config
 //!   fleet [--streams M] [...]    run M concurrent top-K streams over shared tiers
 //!   engine [--tiers 3] [...]     N-tier engine demo with online re-arbitration
+//!                                (--backend fs:<root> for the real-FS backend,
+//!                                 --reconcile for sim-vs-fs ledger parity)
 //!   exp --id <id> [--quick]      regenerate a paper table/figure (see DESIGN.md §4)
 //!   optimize [--preset <p>]      print r* and the strategy ranking for an economy
 //!   validate [--quick]           Monte-Carlo validation suite (E1, E2, A2)
@@ -233,11 +235,12 @@ fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
 /// 3-tier (by default) topology, one closing mid-run with
 /// `finish_release`, so the arbiter's online re-arbitration visibly grows
 /// the survivors' quotas and a late joiner is admitted into the freed
-/// capacity.
+/// capacity. Runs over the in-memory simulator by default; `--backend
+/// fs:<root>` places real files on real tier directories (ADR-003), and
+/// `--reconcile` runs the same seeded demo on both backends and asserts
+/// ledger parity.
 fn cmd_engine(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
-    use shptier::engine::{Engine, SessionSpec, TierTopology};
-    use shptier::policy::PlacementPlan;
-    use shptier::storage::TierId;
+    use shptier::engine::{reconcile_backends, run_engine_demo, BackendSpec};
 
     let mut demo = match flags.get("config") {
         Some(path) => EngineDemoConfig::from_file(std::path::Path::new(path))?,
@@ -267,144 +270,87 @@ fn cmd_engine(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     if flags.contains_key("seed") {
         demo.seed = seed;
     }
+    if let Some(b) = flags.get("backend") {
+        demo.backend = b.clone();
+    }
     // one shared rule set for flags and TOML (clamp soft knobs, reject
     // nonsensical ones)
     let demo = demo.normalized()?;
+    let backend = BackendSpec::parse(&demo.backend)?;
 
-    let costs = demo.tier_costs();
-    let k = demo.k.min(demo.docs);
-    let per_stream_demand =
-        PlacementPlan::optimal(&costs, demo.docs, k, false).demand(TierId(0));
-    let hot_capacity = if demo.hot_capacity == 0 {
-        (per_stream_demand * demo.streams as u64 / 2).max(1)
-    } else {
-        demo.hot_capacity
-    };
-    let mut topology = TierTopology::from_costs(costs.clone())?
-        .with_capacity(TierId(0), Some(usize::try_from(hot_capacity).unwrap_or(usize::MAX)));
-    if demo.tiers > 2 {
-        // a mid ("warm") tier with 4× the hot capacity
-        let warm = usize::try_from(hot_capacity * 4).unwrap_or(usize::MAX);
-        topology = topology.with_capacity(TierId(1), Some(warm));
-    }
-    let capacities = topology.capacities();
-    let engine = Engine::builder().topology(topology).charge_rent(false).build()?;
-
-    println!(
-        "engine demo: {} sessions × {} docs (K={}), {} tiers, hot capacity {} \
-         (per-stream demand {}), arbiter '{}', backend '{}'",
-        demo.streams,
-        demo.docs,
-        k,
-        demo.tiers,
-        hot_capacity,
-        per_stream_demand,
-        engine.arbiter_name(),
-        engine.backend_name(),
-    );
-
-    let spec = || SessionSpec::new(demo.docs, k).with_rent(false);
-    let mut sessions = Vec::with_capacity(demo.streams);
-    for _ in 0..demo.streams {
-        sessions.push(engine.open_stream(spec())?);
-    }
-    println!(
-        "admission: {} re-arbitrations; session quotas {:?}",
-        engine.rearbitrations(),
-        sessions[0].quotas(),
-    );
-
-    // phase 1: run everyone to the closure point
-    let mut rng = shptier::util::Rng::new(demo.seed);
-    let close_at = demo.docs * demo.close_percent.min(100) / 100;
-    for _ in 0..close_at {
-        for s in sessions.iter_mut() {
-            s.observe(rng.next_f64())?;
-        }
-    }
-
-    // mid-run closure: session 0 finishes early and releases its residents
-    let survivor_quotas_before = sessions[1].quotas();
-    let closer = sessions.remove(0);
-    let closed_id = closer.id();
-    let out0 = closer.finish_release()?;
-    let survivor_quotas_after = sessions[0].quotas();
-    println!(
-        "closed session {closed_id} mid-run at {}% ({} retained, {}/{} hot/cold \
-         reads); re-arbitration #{} grew survivor quotas {:?} -> {:?}",
-        demo.close_percent,
-        out0.retained.len(),
-        out0.hot_reads(),
-        out0.cold_reads(),
-        engine.rearbitrations(),
-        survivor_quotas_before,
-        survivor_quotas_after,
-    );
-
-    // a late joiner is admitted into the freed capacity
-    let mut late = engine.open_stream(spec())?;
-    println!(
-        "late session {} admitted with quotas {:?} (re-arbitration #{})",
-        late.id(),
-        late.quotas(),
-        engine.rearbitrations(),
-    );
-
-    // phase 2: drive every open session to completion
-    loop {
-        let mut progressed = false;
-        for s in sessions.iter_mut().chain(std::iter::once(&mut late)) {
-            if !s.done() {
-                s.observe(rng.next_f64())?;
-                progressed = true;
+    if flags.contains_key("reconcile") {
+        // without an explicit fs root, reconcile over a scratch directory
+        // (pre-cleaned against pid reuse, removed again afterwards)
+        let (root, scratch) = match &backend {
+            BackendSpec::Fs { root } => (root.clone(), false),
+            BackendSpec::Sim => {
+                let root = std::env::temp_dir()
+                    .join(format!("shptier-reconcile-{}", std::process::id()));
+                let _ = std::fs::remove_dir_all(&root);
+                (root, true)
             }
+        };
+        let rep = reconcile_backends(&demo, &root);
+        if scratch {
+            let _ = std::fs::remove_dir_all(&root);
         }
-        if !progressed {
-            break;
-        }
+        let rep = rep?;
+        print_engine_demo(&rep.fs);
+        println!(
+            "reconciliation: sim total ${:.4} vs fs total ${:.4} \
+             (Δtotal {:.3e}, max per-stream Δ {:.3e}) — ledger parity holds",
+            rep.sim.total, rep.fs.total, rep.total_delta, rep.max_stream_delta
+        );
+        return Ok(());
     }
-    engine.settle_rent(1.0);
 
+    let report = run_engine_demo(&demo, &backend)?;
+    print_engine_demo(&report);
+    Ok(())
+}
+
+fn print_engine_demo(report: &shptier::engine::EngineDemoReport) {
+    for event in &report.events {
+        println!("{event}");
+    }
     let mut table = Table::new(
         &format!(
-            "engine demo — {} tiers, hot capacity {}, {} re-arbitrations",
-            demo.tiers,
-            hot_capacity,
-            engine.rearbitrations()
+            "engine demo — {} tiers, hot capacity {}, {} re-arbitrations, backend '{}'",
+            report.tiers, report.hot_capacity, report.rearbitrations, report.backend
         ),
         &["session", "cuts", "quotas", "retained", "hot/cold reads", "measured $"],
     );
-    let mut rows = Vec::new();
-    for s in sessions.into_iter().chain(std::iter::once(late)) {
-        let id = s.id();
-        let cuts = s.plan().map(|p| format!("{:?}", p.cuts())).unwrap_or_default();
-        let quotas = format!("{:?}", s.quotas());
-        let out = s.finish()?;
-        rows.push((id, cuts, quotas, out));
-    }
-    for (id, cuts, quotas, out) in &rows {
+    for r in &report.rows {
         table.row(vec![
-            id.to_string(),
-            cuts.clone(),
-            quotas.clone(),
-            out.retained.len().to_string(),
-            format!("{}/{}", out.hot_reads(), out.cold_reads()),
-            format!("{:.4}", engine.stream_ledger(*id).total()),
+            r.id.to_string(),
+            format!("{:?}", r.cuts),
+            format!("{:?}", r.quotas),
+            r.retained.to_string(),
+            format!("{}/{}", r.hot_reads, r.cold_reads),
+            format!("{:.4}", r.measured),
         ]);
     }
     println!("{}", table.render());
 
-    for (t, cap) in capacities.iter().enumerate() {
+    for (t, cap) in report.capacities.iter().enumerate() {
         if let Some(c) = cap {
-            let peak = engine.peak_occupancy(TierId(t));
+            let peak = report.peaks[t];
             println!(
                 "tier {t}: peak occupancy {peak} / capacity {c} {}",
                 if peak <= *c { "(ok)" } else { "(VIOLATED)" }
             );
         }
     }
-    println!("engine ledger: {}", engine.ledger().summary());
-    Ok(())
+    for o in &report.overcommits {
+        println!(
+            "WARNING: tier {} over-committed — {} orphaned residents fill its \
+             capacity of {}; live sessions get no quota there",
+            o.tier.label(),
+            o.orphaned,
+            o.capacity
+        );
+    }
+    println!("engine ledger: {}", report.ledger_summary);
 }
 
 fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
@@ -434,7 +380,8 @@ USAGE:
   shptier fleet [--streams M] [--docs N] [--k K] [--capacity C]
                 [--workers W] [--mode arbitrated|naive] [--config configs/fleet.toml]
   shptier engine [--streams M] [--docs N] [--k K] [--tiers 2..4]
-                 [--capacity C] [--config configs/engine.toml]
+                 [--capacity C] [--backend sim|fs:<root>] [--reconcile]
+                 [--config configs/engine.toml]
   shptier exp --id <{}> [--quick] [--seed N]
   shptier optimize [--preset case-study-1|case-study-2]
   shptier validate [--quick]

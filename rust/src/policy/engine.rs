@@ -98,7 +98,7 @@ impl PlacementEngine {
             .session
             .take()
             .ok_or_else(|| anyhow!("placement engine already finished"))?;
-        self.engine.settle_rent(1.0);
+        self.engine.settle_rent(1.0)?;
         let out = session.finish()?;
         Ok(RunResult {
             policy: self.policy_name,

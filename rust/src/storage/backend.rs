@@ -5,9 +5,10 @@
 //! placement engine ([`crate::engine`]), the policies
 //! ([`crate::policy::PlacementPolicy::on_step`]), and the fleet wrappers
 //! all program against a trait instead of the simulator struct. The
-//! simulator is the first (reference) implementation; a real-filesystem or
-//! object-store backend can be dropped in without touching policy or
-//! engine code (ROADMAP follow-up).
+//! simulator is the reference implementation; [`super::fs::FsBackend`]
+//! is the real-filesystem implementation (one directory per tier,
+//! documents as files, a write-ahead journal for crash recovery — see
+//! `docs/adr/ADR-003-fs-backend.md`).
 //!
 //! Contract notes, normative for every implementation:
 //!
@@ -61,12 +62,16 @@ pub trait StorageBackend: Send {
     fn migrate_doc(&mut self, doc: u64, to: TierId, at: f64) -> Result<()>;
 
     /// Bulk-migrate every resident of `from` into `to`. Returns the number
-    /// of documents moved; fails partway if `to` fills up.
+    /// of documents moved. All-or-nothing: implementations must pre-check
+    /// destination headroom so a doomed bulk migration fails without
+    /// moving a single document (residency, rent clocks, and the ledger
+    /// stay untouched).
     fn migrate_all(&mut self, from: TierId, to: TierId, at: f64) -> Result<u64>;
 
     /// Settle rent for everything still resident as of window fraction
     /// `at`, resetting the rent clocks (idempotent at a fixed `at`).
-    fn settle_rent(&mut self, at: f64);
+    /// Fallible because durable backends journal the settlement.
+    fn settle_rent(&mut self, at: f64) -> Result<()>;
 
     // ---- residency views ---------------------------------------------------
 
@@ -150,8 +155,9 @@ impl StorageBackend for StorageSim {
         StorageSim::migrate_all(self, from, to, at)
     }
 
-    fn settle_rent(&mut self, at: f64) {
-        StorageSim::settle_rent(self, at)
+    fn settle_rent(&mut self, at: f64) -> Result<()> {
+        StorageSim::settle_rent(self, at);
+        Ok(())
     }
 
     fn locate(&self, doc: u64) -> Option<TierId> {
@@ -249,7 +255,7 @@ mod tests {
         assert_eq!(b.read(1).unwrap(), TierId::A);
         b.migrate_doc(1, TierId::B, 0.5).unwrap();
         assert_eq!(b.locate(1), Some(TierId::B));
-        b.settle_rent(1.0);
+        b.settle_rent(1.0).unwrap();
         assert!(b.ledger().total() > 0.0);
         assert!((b.ledger().total() - b.stream_ledger(3).total()).abs() < 1e-12);
         assert_eq!(b.delete(1, 1.0).unwrap(), TierId::B);

@@ -1,13 +1,18 @@
-//! Simulated tiered object storage with exact cost accounting — the
-//! substrate for trace-driven validation of the analytic model (paper §VIII)
-//! and for the streaming pipeline's placement decisions.
+//! Tiered object storage with exact cost accounting — the substrate for
+//! trace-driven validation of the analytic model (paper §VIII) and for the
+//! streaming pipeline's placement decisions. Two [`StorageBackend`]
+//! implementations share one accounting contract: the in-memory
+//! [`StorageSim`] (reference) and the real-filesystem [`FsBackend`]
+//! (documents as files, write-ahead journal, crash recovery — ADR-003).
 
 pub mod backend;
+pub mod fs;
 pub mod ledger;
 pub mod sim;
 pub mod tier;
 
 pub use backend::StorageBackend;
+pub use fs::{FsBackend, RecoveryReport};
 pub use ledger::{Ledger, TierCharges};
 pub use sim::StorageSim;
 pub use tier::{Resident, TierId, TierState};

@@ -295,9 +295,35 @@ impl StorageSim {
     }
 
     /// Bulk-migrate every resident of `from` into `to` (paper Fig. 3,
-    /// DO_MIGRATE branch at `i == r`). Fails partway if `to` fills up.
+    /// DO_MIGRATE branch at `i == r`).
+    ///
+    /// All-or-nothing: destination headroom is checked up front, so a
+    /// doomed bulk migration fails without moving a single document —
+    /// residency, rent clocks, and the ledger are untouched. (It used to
+    /// fail partway, leaving the backend half-migrated with rent clocks
+    /// split across two tiers.)
     pub fn migrate_all(&mut self, from: TierId, to: TierId, at: f64) -> Result<u64> {
+        if from.0 >= self.tiers.len() {
+            bail!("unknown tier {from:?}");
+        }
+        if to.0 >= self.tiers.len() {
+            bail!("unknown tier {to:?}");
+        }
+        if from == to {
+            return Ok(0);
+        }
         let docs = self.tier(from).docs();
+        if let Some(free) = self.tier(to).remaining() {
+            if free < docs.len() {
+                bail!(
+                    "migrate_all: tier {} has {} free slots for {} documents — \
+                     aborted with nothing moved",
+                    to.label(),
+                    free,
+                    docs.len()
+                );
+            }
+        }
         let n = docs.len() as u64;
         for doc in docs {
             self.migrate_doc(doc, to, at)?;
@@ -403,6 +429,40 @@ mod tests {
         assert_eq!(n, 5);
         assert_eq!(s.tier(TierId::A).len(), 0);
         assert_eq!(s.tier(TierId::B).len(), 5);
+    }
+
+    #[test]
+    fn doomed_migrate_all_is_a_noop() {
+        let mut s = sim();
+        for d in 0..4 {
+            s.put(d, TierId::A, 0.1).unwrap();
+        }
+        s.put(10, TierId::B, 0.1).unwrap();
+        s.set_capacity(TierId::B, Some(3)); // room for 2 more, 4 needed
+        let residents_before = s.tier(TierId::A).docs();
+        let ledger_before = s.ledger().clone();
+        assert!(s.migrate_all(TierId::A, TierId::B, 0.5).is_err());
+        // all-or-nothing: nothing moved, nothing charged
+        assert_eq!(s.tier(TierId::A).docs(), residents_before);
+        assert_eq!(s.tier(TierId::B).len(), 1);
+        assert_eq!(s.ledger().total(), ledger_before.total());
+        assert_eq!(s.ledger().total_writes(), ledger_before.total_writes());
+        assert_eq!(s.ledger().migration_total(), 0.0);
+        // rent clocks untouched: a later full migration settles from 0.1
+        s.set_capacity(TierId::B, None);
+        s.migrate_all(TierId::A, TierId::B, 0.5).unwrap();
+        let a = s.ledger().tier(TierId::A);
+        assert!((a.rent_cost - 4.0 * 0.4 * 100.0).abs() < 1e-9, "rent {}", a.rent_cost);
+    }
+
+    #[test]
+    fn migrate_all_same_tier_is_trivially_empty() {
+        let mut s = sim();
+        s.put(1, TierId::A, 0.0).unwrap();
+        let before = s.ledger().total();
+        assert_eq!(s.migrate_all(TierId::A, TierId::A, 0.5).unwrap(), 0);
+        assert_eq!(s.ledger().total(), before);
+        assert_eq!(s.locate(1), Some(TierId::A));
     }
 
     #[test]

@@ -1,10 +1,13 @@
-//! Dependency-free utilities: deterministic RNG, numeric helpers.
+//! Dependency-free utilities: deterministic RNG, numeric helpers, and
+//! test-support scratch directories.
 
 pub mod math;
 pub mod rng;
+pub mod scratch;
 
 pub use math::{
     binary_entropy, golden_section_min, grid_min, harmonic, harmonic_diff, mean,
     percentile_sorted, rel_err, sigmoid, std_dev, EULER_MASCHERONI,
 };
 pub use rng::{Rng, SplitMix64};
+pub use scratch::scratch_dir;

@@ -1,0 +1,34 @@
+//! Scratch directories for tests that exercise real file IO (the
+//! vendored crate set has no `tempfile`). Test-support code, but compiled
+//! into the library so the `storage::fs` unit tests and the integration
+//! suites (`engine_invariants`, `backend_parity`) share one copy.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A unique, pre-cleaned directory path under the system temp dir:
+/// `<tmp>/shptier-<tag>-<pid>-<counter>`. The directory itself is NOT
+/// created (backends create their own roots); any leftover from a
+/// recycled pid is removed. Callers clean up with `remove_dir_all` when
+/// done (best-effort).
+pub fn scratch_dir(tag: &str) -> PathBuf {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let p = std::env::temp_dir()
+        .join(format!("shptier-{tag}-{}-{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_dirs_are_unique() {
+        let a = scratch_dir("x");
+        let b = scratch_dir("x");
+        assert_ne!(a, b);
+        assert!(!a.exists());
+    }
+}

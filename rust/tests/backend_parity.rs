@@ -1,0 +1,219 @@
+//! Sim ↔ FS backend parity and durability (ADR-003), plus the
+//! shared-engine robustness fixes that a real, fallible backend makes
+//! urgent:
+//!
+//! - the seeded 3-tier engine demo produces identical per-stream ledger
+//!   totals on `StorageSim` and `FsBackend` (the reconciliation harness);
+//! - a killed-and-restarted `FsBackend` rebuilds residency and ledger
+//!   state from its write-ahead journal;
+//! - a doomed `migrate_all` into a too-small tier is a no-op on both
+//!   backends (residency and ledger untouched);
+//! - a session that panics mid-operation does not brick the engine for
+//!   survivors (mutex-poison recovery).
+
+use shptier::config::EngineDemoConfig;
+use shptier::cost::PerDocCosts;
+use shptier::engine::{reconcile_backends, Engine, SessionSpec, TierTopology};
+use shptier::policy::{MigrationOrder, PlacementPolicy};
+use shptier::storage::{FsBackend, StorageBackend, StorageSim, TierId};
+use std::path::PathBuf;
+
+/// Unique scratch directory under the system temp dir.
+fn scratch(tag: &str) -> PathBuf {
+    shptier::util::scratch_dir(&format!("parity-{tag}"))
+}
+
+fn pd(w: f64, r: f64) -> PerDocCosts {
+    PerDocCosts { write: w, read: r, rent_window: 0.0 }
+}
+
+/// Acceptance: the seeded 3-tier fleet demo (mid-run closure, late
+/// joiner, online re-arbitration) lands identical per-stream ledger
+/// totals on both backends.
+#[test]
+fn seeded_demo_ledger_parity_sim_vs_fs() {
+    let demo = EngineDemoConfig::from_toml(
+        "[engine]\nstreams = 3\ndocs = 300\nk = 12\ntiers = 3\nclose_percent = 50\n",
+    )
+    .unwrap();
+    let root = scratch("reconcile");
+    let rep = reconcile_backends(&demo, &root).expect("ledger parity must hold");
+    // 3 initial sessions + 1 late joiner, each with a measured total
+    assert_eq!(rep.sim.rows.len(), 4);
+    assert_eq!(rep.fs.rows.len(), 4);
+    assert!(rep.sim.total > 0.0);
+    assert!(rep.total_delta <= 1e-9 * rep.sim.total.max(1.0));
+    assert!(rep.fs.backend.starts_with("fs:"), "backend was {}", rep.fs.backend);
+    assert_eq!(rep.sim.backend, "sim");
+    // per-stream totals agree pairwise (the harness already asserted it;
+    // spot-check the report it handed back)
+    for (s, f) in rep.sim.rows.iter().zip(rep.fs.rows.iter()) {
+        assert_eq!(s.id, f.id);
+        assert!(
+            (s.measured - f.measured).abs() <= 1e-9 * s.measured.abs().max(1.0),
+            "stream {}: sim ${} vs fs ${}",
+            s.id,
+            s.measured,
+            f.measured
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: kill an engine mid-run (drop it — the in-memory state is
+/// gone) and reopen the FS backend on the same root: residency, the
+/// engine-wide ledger, and the per-stream ledger are rebuilt from the
+/// journal alone.
+#[test]
+fn killed_engine_fs_backend_rebuilds_from_journal() {
+    let root = scratch("restart");
+    let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
+    let total_before;
+    let stream_before;
+    let hot_before;
+    let cold_before;
+    {
+        let topo = TierTopology::two_tier(costs[0], costs[1])
+            .with_capacity(TierId::A, Some(8));
+        let backend = FsBackend::open(&root, costs.clone(), false).unwrap();
+        let engine = Engine::builder()
+            .topology(topo)
+            .backend(Box::new(backend))
+            .build()
+            .unwrap();
+        let mut s = engine
+            .open_stream(SessionSpec::new(200, 10).with_rent(false))
+            .unwrap();
+        let mut rng = shptier::util::Rng::new(7);
+        for _ in 0..120 {
+            s.observe(rng.next_f64()).unwrap();
+        }
+        total_before = engine.ledger().total();
+        stream_before = engine.stream_ledger(s.id()).total();
+        hot_before = engine.resident_len(TierId::A);
+        cold_before = engine.resident_len(TierId::B);
+        assert!(total_before > 0.0);
+        assert!(hot_before + cold_before > 0);
+        // dropped here without finish/settle: a process kill
+    }
+    let reopened = FsBackend::open(&root, costs, false).unwrap();
+    let rec = reopened.recovery().expect("a journal was replayed");
+    assert!(rec.ops_replayed > 0);
+    assert!((reopened.ledger().total() - total_before).abs() < 1e-9);
+    assert!((reopened.stream_ledger(0).total() - stream_before).abs() < 1e-9);
+    assert_eq!(reopened.resident_len(TierId::A), hot_before);
+    assert_eq!(reopened.resident_len(TierId::B), cold_before);
+    // every rebuilt resident is backed by a real file it can serve
+    for tier in [TierId::A, TierId::B] {
+        for r in reopened.residents(tier) {
+            let path = root.join(format!("tier-{}", tier.0)).join(format!("{}.doc", r.doc));
+            assert!(path.exists(), "resident {} missing its file", r.doc);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: a bulk migration into a tier without headroom moves
+/// nothing and charges nothing — on both backends.
+#[test]
+fn doomed_migrate_all_is_noop_on_both_backends() {
+    let root = scratch("migall");
+    let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
+    let backends: Vec<Box<dyn StorageBackend>> = vec![
+        Box::new(StorageSim::with_tiers(costs.clone(), true)),
+        Box::new(FsBackend::open(&root, costs.clone(), true).unwrap()),
+    ];
+    for mut b in backends {
+        let name = b.backend_name();
+        for d in 0..5 {
+            b.put(d, TierId::A, 0.1).unwrap();
+        }
+        b.put(100, TierId::B, 0.1).unwrap();
+        b.set_capacity(TierId::B, Some(4)); // 3 free slots, 5 needed
+        let total = b.ledger().total();
+        let writes = b.ledger().total_writes();
+        assert!(
+            b.migrate_all(TierId::A, TierId::B, 0.5).is_err(),
+            "{name}: doomed migrate_all must fail"
+        );
+        assert_eq!(b.resident_len(TierId::A), 5, "{name}: residency must be untouched");
+        assert_eq!(b.resident_len(TierId::B), 1, "{name}");
+        assert_eq!(b.ledger().total(), total, "{name}: ledger must be untouched");
+        assert_eq!(b.ledger().total_writes(), writes, "{name}");
+        assert_eq!(b.ledger().migration_total(), 0.0, "{name}");
+        // with headroom restored the same call succeeds atomically
+        b.set_capacity(TierId::B, None);
+        assert_eq!(b.migrate_all(TierId::A, TierId::B, 0.5).unwrap(), 5, "{name}");
+        assert_eq!(b.resident_len(TierId::A), 0, "{name}");
+        assert_eq!(b.resident_len(TierId::B), 6, "{name}");
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// A policy that panics in `on_step` at one stream index — after the
+/// placement landed, so the engine state stays consistent and the panic
+/// happens while the engine lock is held.
+struct PanicAt {
+    panic_at: u64,
+}
+
+impl PlacementPolicy for PanicAt {
+    fn name(&self) -> String {
+        "panic-at".into()
+    }
+
+    fn place(&mut self, _index: u64, _n: u64) -> TierId {
+        TierId::A
+    }
+
+    fn on_step(
+        &mut self,
+        index: u64,
+        _n: u64,
+        _storage: &dyn StorageBackend,
+    ) -> Vec<MigrationOrder> {
+        if index == self.panic_at {
+            panic!("injected session panic at index {index}");
+        }
+        Vec::new()
+    }
+}
+
+/// A session panicking mid-operation (while holding the engine lock) must
+/// not take the engine down with it: subsequent calls recover the lock
+/// instead of propagating `PoisonError`, and the session can even resume.
+#[test]
+fn panicked_session_does_not_brick_the_engine() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let engine = Engine::builder()
+        .topology(TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5)))
+        .charge_rent(false)
+        .build()
+        .unwrap();
+    let mut session = engine
+        .open_stream(SessionSpec::new(50, 5).with_rent(false))
+        .unwrap();
+    let mut policy = PanicAt { panic_at: 3 };
+    for i in 0..3 {
+        session.observe_with_policy(0.1 * i as f64, &mut policy).unwrap();
+    }
+    let panicked = catch_unwind(AssertUnwindSafe(|| {
+        session.observe_with_policy(0.9, &mut policy).unwrap();
+    }));
+    assert!(panicked.is_err(), "the injected panic must fire");
+    // the engine answers queries instead of panicking with PoisonError...
+    assert_eq!(engine.live_sessions(), 1);
+    assert!(engine.ledger().total() > 0.0);
+    assert!(engine.poison_recoveries() >= 1, "the poisoned lock was recovered");
+    // ...and the session finishes its stream normally
+    let mut policy = PanicAt { panic_at: u64::MAX };
+    for i in 4..50 {
+        session.observe_with_policy(0.01 * i as f64, &mut policy).unwrap();
+    }
+    engine.settle_rent(1.0).unwrap();
+    let out = session.finish().unwrap();
+    assert_eq!(out.retained.len(), 5);
+    let total = engine.ledger().total();
+    let split = engine.stream_ledger(0).total();
+    assert!((total - split).abs() < 1e-9, "conservation survives the panic");
+}

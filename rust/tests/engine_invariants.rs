@@ -1,7 +1,9 @@
 //! Engine invariants (ADR-002), via the in-tree `propcheck` harness:
 //!
 //! (a) ledger conservation across arbitrary interleavings of
-//!     `open_stream` / `observe` / `finish` / `finish_release`;
+//!     `open_stream` / `observe` / `finish` / `finish_release` — run
+//!     against BOTH backends (`StorageSim` and the real-filesystem
+//!     `FsBackend` over a scratch directory, ADR-003);
 //! (b) online re-arbitration never exceeds per-tier capacity, and matches
 //!     the static arbiter exactly when no stream closes mid-run;
 //! plus the 3-tier mid-run-closure demo the API redesign unlocks, and a
@@ -13,11 +15,17 @@ use shptier::engine::{Engine, SessionSpec, StreamSession, TierTopology};
 use shptier::fleet::{arbitrate, SeriesProfile, StreamSpec};
 use shptier::policy::{run_policy, Changeover};
 use shptier::propcheck::{check, Config};
-use shptier::storage::TierId;
+use shptier::storage::{FsBackend, TierId};
 use shptier::util::Rng;
+use std::path::PathBuf;
 
 fn cfg(cases: u32) -> Config {
     Config { cases, seed: 0xE1161E }
+}
+
+/// Unique scratch directory for an `FsBackend` case.
+fn scratch(tag: &str) -> PathBuf {
+    shptier::util::scratch_dir(&format!("invariants-{tag}"))
 }
 
 fn hot() -> PerDocCosts {
@@ -72,17 +80,19 @@ fn engine_case(rng: &mut Rng) -> EngineCase {
 }
 
 /// (a) Conservation + capacity under arbitrary open/observe/finish
-/// interleavings, including mid-run `finish_release` closures.
-#[test]
-fn prop_engine_ledger_conserved_across_interleavings() {
-    check("engine-conservation", cfg(12), engine_case, |case| {
+/// interleavings, including mid-run `finish_release` closures. The same
+/// property runs against both backends (`fs_root` selects `FsBackend`).
+fn conservation_case(case: &EngineCase, fs_root: Option<&PathBuf>) -> Result<(), String> {
+    {
         let topo = topology(case.three_tier, case.hot_capacity);
         let capacities = topo.capacities();
-        let engine = Engine::builder()
-            .topology(topo)
-            .charge_rent(case.rent)
-            .build()
-            .map_err(|e| e.to_string())?;
+        let mut builder = Engine::builder().topology(topo.clone()).charge_rent(case.rent);
+        if let Some(root) = fs_root {
+            let backend = FsBackend::open(root, topo.default_costs(), case.rent)
+                .map_err(|e| e.to_string())?;
+            builder = builder.backend(Box::new(backend));
+        }
+        let engine = builder.build().map_err(|e| e.to_string())?;
         let mut rng = Rng::new(case.schedule_seed);
         let mut pending = case.sessions.clone();
         pending.reverse(); // pop() opens in declaration order
@@ -116,7 +126,7 @@ fn prop_engine_ledger_conserved_across_interleavings() {
         if opened != case.sessions.len() as u64 || finished != case.sessions.len() {
             return Err(format!("schedule lost sessions: {opened} opened, {finished} done"));
         }
-        engine.settle_rent(1.0);
+        engine.settle_rent(1.0).map_err(|e| e.to_string())?;
 
         // capacity invariant: every capacitated tier's high-water mark
         for (t, cap) in capacities.iter().enumerate() {
@@ -140,6 +150,24 @@ fn prop_engine_ledger_conserved_across_interleavings() {
             }
         }
         Ok(())
+    }
+}
+
+#[test]
+fn prop_engine_ledger_conserved_across_interleavings() {
+    check("engine-conservation", cfg(12), engine_case, |case| conservation_case(case, None));
+}
+
+/// The same conservation + capacity invariants over the real-filesystem
+/// backend: every case gets a fresh scratch root (fewer cases — each one
+/// does real file IO).
+#[test]
+fn prop_engine_ledger_conserved_on_fs_backend() {
+    check("engine-conservation-fs", cfg(6), engine_case, |case| {
+        let root = scratch("conservation");
+        let result = conservation_case(case, Some(&root));
+        let _ = std::fs::remove_dir_all(&root);
+        result
     });
 }
 
@@ -216,7 +244,7 @@ fn prop_online_matches_static_arbiter_without_closures() {
                 case.hot_capacity
             ));
         }
-        engine.settle_rent(1.0);
+        engine.settle_rent(1.0).map_err(|e| e.to_string())?;
         for s in live {
             s.finish().map_err(|e| e.to_string())?;
         }
@@ -279,7 +307,7 @@ fn three_tier_mid_run_closure_rearbitrates() {
     // capacity invariants held throughout, on both capacitated tiers
     assert!(engine.peak_occupancy(TierId(0)) <= 12);
     assert!(engine.peak_occupancy(TierId(1)) <= 36);
-    engine.settle_rent(1.0);
+    engine.settle_rent(1.0).unwrap();
     b.finish().unwrap();
     late.finish().unwrap();
     let total = engine.ledger().total();
@@ -314,7 +342,7 @@ fn policy_mode_session_matches_batch_executor() {
     for &s in &scores {
         session.observe_with_policy(s, &mut policy).unwrap();
     }
-    engine.settle_rent(1.0);
+    engine.settle_rent(1.0).unwrap();
     let out = session.finish().unwrap();
 
     assert_eq!(out.retained, reference.retained);
