@@ -32,6 +32,7 @@ fn fleet_config(workers: usize, hot_capacity: u64) -> FleetConfig {
         t_len: 256,
         seed: 1,
         mode: FleetMode::Arbitrated,
+        ..FleetConfig::default()
     }
 }
 

@@ -30,7 +30,8 @@
 use crate::cost::{case_study_1, case_study_2, optimal_r, CostModel, PerDocCosts};
 use crate::pipeline::PipelineConfig;
 use crate::policy::{
-    AgeBasedDemotion, Changeover, ChangeoverMigrate, PlacementPolicy, SingleTier, SkiRental,
+    AgeBasedDemotion, Changeover, ChangeoverMigrate, PlacementPolicy, PlanFamily, SingleTier,
+    SkiRental,
 };
 use crate::serdes::TomlValue;
 use crate::storage::TierId;
@@ -203,6 +204,8 @@ impl LaunchConfig {
 /// workers = 4
 /// hot_capacity = 64        # omit → half the aggregate analytic demand
 /// mode = "arbitrated"      # arbitrated | naive
+/// family = "keep"          # keep | migrate | auto (strategy family)
+/// backend = "sim"          # sim | fs:<root>  (fresh root, ADR-003)
 /// seed = 7
 /// t_len = 256
 /// batch = 16
@@ -212,6 +215,7 @@ impl LaunchConfig {
 /// n_docs = 2000            # per-stream base length
 /// k = 32                   # per-stream base top-K
 /// heterogeneous = true     # cycle economy classes / K / N across streams
+/// economy = "demo"         # demo | rent-dominated (case-study-2 shape)
 /// ```
 #[derive(Debug, Clone)]
 pub struct FleetLaunchConfig {
@@ -245,17 +249,42 @@ impl FleetLaunchConfig {
             "naive" => crate::fleet::FleetMode::Naive,
             other => bail!("config: unknown fleet mode '{other}'"),
         };
+        let family = PlanFamily::parse(
+            t.get_path("fleet.family").and_then(|v| v.as_str()).unwrap_or("keep"),
+        )
+        .map_err(|e| anyhow!("config: fleet.family: {e}"))?;
+        let backend = crate::engine::BackendSpec::parse(
+            t.get_path("fleet.backend").and_then(|v| v.as_str()).unwrap_or("sim"),
+        )
+        .map_err(|e| anyhow!("config: fleet.backend: {e}"))?;
         let n_docs = get_u64("fleet.workload.n_docs", 2_000)?.max(1);
         let k = get_u64("fleet.workload.k", 32)?.max(1);
         let heterogeneous = t
             .get_path("fleet.workload.heterogeneous")
             .and_then(|v| v.as_bool())
             .unwrap_or(true);
-
-        let specs = crate::fleet::demo_fleet(streams, n_docs, k, heterogeneous, seed);
+        let specs = match t
+            .get_path("fleet.workload.economy")
+            .and_then(|v| v.as_str())
+            .unwrap_or("demo")
+        {
+            "demo" => crate::fleet::demo_fleet(streams, n_docs, k, heterogeneous, seed),
+            "rent-dominated" => {
+                crate::fleet::rent_dominated_fleet(streams, n_docs, k, seed)
+            }
+            other => bail!("config: unknown fleet economy '{other}'"),
+        };
+        // the default-capacity heuristic uses the demand of the family
+        // the streams will actually run; Auto resolves per stream, so it
+        // reserves for whichever family is hungrier
         let aggregate_demand: u64 = specs
             .iter()
-            .map(|s| crate::cost::hot_demand(&s.model, false))
+            .map(|s| match family {
+                PlanFamily::Keep => crate::cost::hot_demand(&s.model, false),
+                PlanFamily::Migrate => crate::cost::hot_demand(&s.model, true),
+                PlanFamily::Auto => crate::cost::hot_demand(&s.model, false)
+                    .max(crate::cost::hot_demand(&s.model, true)),
+            })
             .sum();
         let hot_capacity = match t.get_path("fleet.hot_capacity") {
             Some(v) => v
@@ -275,6 +304,8 @@ impl FleetLaunchConfig {
                 t_len,
                 seed,
                 mode,
+                family,
+                backend,
             },
         })
     }
@@ -302,6 +333,7 @@ impl FleetLaunchConfig {
 /// seed = 7
 /// close_percent = 50       # close session 0 after this % of its stream
 /// backend = "sim"          # sim | fs:<root>  (real-FS backend, ADR-003)
+/// family = "keep"          # keep | migrate | auto (strategy family)
 /// ```
 #[derive(Debug, Clone)]
 pub struct EngineDemoConfig {
@@ -317,6 +349,8 @@ pub struct EngineDemoConfig {
     /// Storage backend selector: `sim` or `fs:<root>` (see
     /// [`crate::engine::BackendSpec::parse`]).
     pub backend: String,
+    /// Strategy family the demo sessions run (keep | migrate | auto).
+    pub family: PlanFamily,
 }
 
 impl EngineDemoConfig {
@@ -343,6 +377,10 @@ impl EngineDemoConfig {
                 .and_then(|v| v.as_str())
                 .unwrap_or("sim")
                 .to_string(),
+            family: PlanFamily::parse(
+                t.get_path("engine.family").and_then(|v| v.as_str()).unwrap_or("keep"),
+            )
+            .map_err(|e| anyhow!("config: engine.family: {e}"))?,
         }
         .normalized()
     }
@@ -545,6 +583,28 @@ heterogeneous = false
     }
 
     #[test]
+    fn fleet_config_family_backend_and_economy() {
+        let c = FleetLaunchConfig::from_toml(
+            "[fleet]\nfamily = \"migrate\"\nbackend = \"fs:/tmp/x\"\n\
+             [fleet.workload]\neconomy = \"rent-dominated\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.config.family, PlanFamily::Migrate);
+        assert!(matches!(c.config.backend, crate::engine::BackendSpec::Fs { .. }));
+        assert!(c.specs.iter().all(|s| s.model.include_rent));
+        // defaults stay keep/sim/demo
+        let d = FleetLaunchConfig::from_toml("").unwrap();
+        assert_eq!(d.config.family, PlanFamily::Keep);
+        assert_eq!(d.config.backend, crate::engine::BackendSpec::Sim);
+        // bad selectors are rejected with the config spelling
+        assert!(FleetLaunchConfig::from_toml("[fleet]\nfamily = \"x\"\n").is_err());
+        assert!(FleetLaunchConfig::from_toml("[fleet]\nbackend = \"s3\"\n").is_err());
+        assert!(
+            FleetLaunchConfig::from_toml("[fleet.workload]\neconomy = \"x\"\n").is_err()
+        );
+    }
+
+    #[test]
     fn engine_config_defaults_and_tiers() {
         let c = EngineDemoConfig::from_toml("").unwrap();
         assert_eq!(c.tiers, 3);
@@ -573,6 +633,15 @@ heterogeneous = false
         assert_eq!(c.close_percent, 25);
         assert!(EngineDemoConfig::from_toml("[engine]\ntiers = 7\n").is_err());
         assert!(EngineDemoConfig::from_toml("[engine]\nclose_percent = 101\n").is_err());
+    }
+
+    #[test]
+    fn engine_config_family_selection() {
+        let c = EngineDemoConfig::from_toml("").unwrap();
+        assert_eq!(c.family, PlanFamily::Keep);
+        let c = EngineDemoConfig::from_toml("[engine]\nfamily = \"auto\"\n").unwrap();
+        assert_eq!(c.family, PlanFamily::Auto);
+        assert!(EngineDemoConfig::from_toml("[engine]\nfamily = \"x\"\n").is_err());
     }
 
     #[test]

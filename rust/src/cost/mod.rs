@@ -16,7 +16,8 @@ pub use model::{
 };
 pub use optimizer::{
     budget_clamp, closed_form_frac_migration, closed_form_frac_no_migration, hot_demand,
-    numeric_optimal_r, optimal_cuts, optimal_r, optimal_r_budgeted, rank_strategies, OptimalR,
+    numeric_optimal_r, optimal_cuts, optimal_cuts_family, optimal_r, optimal_r_budgeted,
+    rank_strategies, OptimalR,
 };
 pub use pricing::{
     azure_blob_gpv1, case_study_1, case_study_2, efs, inter_cloud_channel, s3_standard, scaled,

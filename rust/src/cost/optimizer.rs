@@ -201,12 +201,27 @@ pub fn optimal_cuts(
     k: u64,
     include_rent: bool,
 ) -> Vec<u64> {
+    optimal_cuts_family(tier_costs, n, k, include_rent, false)
+}
+
+/// [`optimal_cuts`] generalized over the strategy family: with
+/// `migrate = true` each boundary's cut comes from the DO_MIGRATE closed
+/// form (paper eq. 21 per adjacent pair — the rent-ratio form), the basis
+/// of [`crate::policy::PlacementPlan::optimal_migrate`]. For two tiers
+/// this is exactly `optimal_r(model, migrate).r`.
+pub fn optimal_cuts_family(
+    tier_costs: &[crate::cost::PerDocCosts],
+    n: u64,
+    k: u64,
+    include_rent: bool,
+    migrate: bool,
+) -> Vec<u64> {
     assert!(tier_costs.len() >= 2, "need at least two tiers");
     let mut cuts = Vec::with_capacity(tier_costs.len() - 1);
     let mut floor = 0u64;
     for pair in tier_costs.windows(2) {
         let model = CostModel::new(n, k, pair[0], pair[1]).with_rent(include_rent);
-        let r = optimal_r(&model, false).r.min(n);
+        let r = optimal_r(&model, migrate).r.min(n);
         floor = floor.max(r);
         cuts.push(floor);
     }

@@ -3,24 +3,35 @@
 //!
 //! An [`Arbiter`] maps the set of currently-open sessions to per-session
 //! [`PlacementPlan`]s and per-tier quotas. The engine re-invokes it on
-//! *every* open/close event (online re-arbitration), so quotas are no
-//! longer fixed at admission: a stream closing mid-run releases its hot
-//! share and the survivors' plans are recomputed from the closed forms.
+//! *every* open/close event **and on every changeover demotion** (online
+//! re-arbitration), so quotas are no longer fixed at admission: a stream
+//! closing mid-run — or bulk-demoting its hot residents at a migrate
+//! boundary — releases its hot share and the survivors' plans are
+//! recomputed from the closed forms. That second trigger is *time-phased
+//! quota lending*: capacity a migrate-family stream only needed until its
+//! changeover flows back to the pool and is re-lent to still-admitting
+//! streams mid-run.
+//!
+//! **Plan families.** Each session declares a [`PlanFamily`]: the keep
+//! (no-migration) changeover, the DO_MIGRATE changeover, or `Auto`
+//! (whichever closed form prices cheaper for the stream's economics).
+//! The snapshot carries the declaration; the arbiter resolves it.
 //!
 //! [`ProportionalArbiter`] is the default strategy and reproduces the
-//! original fleet arbitration exactly in the two-tier case: per-session
-//! closed-form optima ([`crate::cost::optimal_r`] via
-//! [`PlacementPlan::optimal`]), demands `min(r*, K)`, proportional
+//! original fleet arbitration exactly in the two-tier keep case:
+//! per-session closed-form optima ([`crate::cost::optimal_r`] via
+//! [`PlacementPlan::optimal_family`]), demands `min(r*, K)`, proportional
 //! largest-remainder allocation
 //! ([`crate::fleet::capacity::allocate_proportional`]) per capacity-limited
 //! tier, and budget-clamped changeover parameters. Alternative strategies
 //! (e.g. the submodular water-filling allocator of arXiv:2005.07893) plug
-//! in behind the same trait (ROADMAP follow-up).
+//! in behind the same trait (ROADMAP follow-up); [`StaticArbiter`] is the
+//! frozen-verdict baseline used by the staggered-admission experiment.
 
 use super::topology::TierTopology;
 use crate::cost::PerDocCosts;
 use crate::fleet::capacity::allocate_proportional;
-use crate::policy::PlacementPlan;
+use crate::policy::{PlacementPlan, PlanFamily};
 
 /// What the arbiter sees of one live session.
 #[derive(Debug, Clone)]
@@ -38,18 +49,62 @@ pub struct SessionSnapshot {
     /// Naive sessions ignore quotas (capacity-oblivious baseline); the
     /// arbiter still computes their hypothetical assignment for reporting.
     pub naive: bool,
+    /// The strategy family the session asked for (`Auto` is resolved by
+    /// the arbiter).
+    pub family: PlanFamily,
+    /// Documents observed so far (0 at admission).
+    pub observed: u64,
+    /// The session's current residents per tier (length = topology tiers).
+    pub in_use: Vec<u64>,
+    /// Per-boundary changeover demotions already executed (length =
+    /// tiers − 1). A fired boundary means the session's residents left
+    /// that tier for good — its demand there collapses to what it still
+    /// physically holds, and the freed slots are re-lent.
+    pub fired: Vec<bool>,
+}
+
+impl SessionSnapshot {
+    /// A fresh (admission-time) snapshot: nothing observed, nothing
+    /// resident, nothing fired. The static/fleet surfaces arbitrate from
+    /// these.
+    pub fn fresh(
+        id: u64,
+        n: u64,
+        k: u64,
+        tier_costs: Vec<PerDocCosts>,
+        include_rent: bool,
+        family: PlanFamily,
+    ) -> Self {
+        let tiers = tier_costs.len();
+        Self {
+            id,
+            n,
+            k,
+            tier_costs,
+            include_rent,
+            naive: false,
+            family,
+            observed: 0,
+            in_use: vec![0; tiers],
+            fired: vec![false; tiers.saturating_sub(1)],
+        }
+    }
 }
 
 /// The arbiter's verdict for one session.
 #[derive(Debug, Clone)]
 pub struct PlanAssignment {
     pub id: u64,
+    /// The family the arbiter resolved for the session (`Auto` inputs
+    /// come back as the concrete winner).
+    pub family: PlanFamily,
     /// The session's unconstrained closed-form optimum.
     pub unconstrained: PlacementPlan,
     /// The budget-clamped plan the session should run.
     pub plan: PlacementPlan,
     /// Hot demand per tier, `min(band width, K)` under the plan *before*
-    /// this tier's clamp was applied.
+    /// this tier's clamp was applied (collapsed to current holdings for
+    /// tiers the session already demoted out of).
     pub demand: Vec<u64>,
     /// Assigned quota per tier (None = unbounded tier, no quota).
     pub quota: Vec<Option<u64>>,
@@ -65,7 +120,8 @@ pub trait Arbiter: Send {
     fn name(&self) -> String;
 
     /// Compute assignments for every live session. Called by the engine on
-    /// each open/close event; must be deterministic in its inputs.
+    /// each open/close/changeover event; must be deterministic in its
+    /// inputs.
     fn arbitrate(
         &self,
         sessions: &[SessionSnapshot],
@@ -76,7 +132,7 @@ pub trait Arbiter: Send {
 /// Demand-proportional quota allocation with largest-remainder rounding —
 /// the closed-form arbitration of the original fleet, generalized to every
 /// capacity-limited tier of an N-tier topology (clamped hot → cold, so
-/// overflow cascades toward the sink tier).
+/// overflow cascades toward the sink tier) and to both strategy families.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ProportionalArbiter;
 
@@ -93,7 +149,9 @@ impl Arbiter for ProportionalArbiter {
         let m = topology.num_tiers();
         let unconstrained: Vec<PlacementPlan> = sessions
             .iter()
-            .map(|s| PlacementPlan::optimal(&s.tier_costs, s.n, s.k, s.include_rent))
+            .map(|s| {
+                PlacementPlan::optimal_family(&s.tier_costs, s.n, s.k, s.include_rent, s.family)
+            })
             .collect();
         let mut plans = unconstrained.clone();
         let mut demands: Vec<Vec<u64>> = vec![vec![0; m]; sessions.len()];
@@ -102,7 +160,23 @@ impl Arbiter for ProportionalArbiter {
         // which the next tier's demand computation then sees.
         for tier in topology.capacitated() {
             let cap = topology.tier(tier).capacity.unwrap_or(usize::MAX) as u64;
-            let tier_demands: Vec<u64> = plans.iter().map(|p| p.demand(tier)).collect();
+            // time-phased lending: a session that already executed its
+            // changeover demotion out of `tier` holds (and will hold) only
+            // its residual residents there — never the full min(band, K);
+            // everyone else's demand floors at what they currently hold so
+            // a quota shrink never promises slots that are not free.
+            let tier_demands: Vec<u64> = plans
+                .iter()
+                .zip(sessions.iter())
+                .map(|(p, s)| {
+                    let held = s.in_use.get(tier.0).copied().unwrap_or(0);
+                    if s.fired.get(tier.0).copied().unwrap_or(false) {
+                        held
+                    } else {
+                        p.demand(tier).max(held)
+                    }
+                })
+                .collect();
             let alloc = allocate_proportional(cap, &tier_demands);
             for (i, (&q, &d)) in alloc.iter().zip(tier_demands.iter()).enumerate() {
                 demands[i][tier.0] = d;
@@ -120,6 +194,7 @@ impl Arbiter for ProportionalArbiter {
                 let analytic_budgeted = plan.analytic_cost(&s.tier_costs, s.include_rent);
                 PlanAssignment {
                     id: s.id,
+                    family: plan.family(),
                     unconstrained: unc,
                     plan,
                     demand,
@@ -128,6 +203,47 @@ impl Arbiter for ProportionalArbiter {
                     analytic_budgeted,
                 }
             })
+            .collect()
+    }
+}
+
+/// The frozen-verdict arbiter: always returns a pre-computed assignment
+/// set, filtered to the sessions that are actually live. This is the
+/// "static t=0 quotas" baseline of the staggered-admission experiment —
+/// capacity is split over the *whole* expected fleet up front, so early
+/// arrivals never borrow the slots of streams that have not shown up yet
+/// and closed streams never return theirs. A live session with no entry
+/// in the precomputed set keeps its previous plan (the engine applies
+/// verdicts by id).
+pub struct StaticArbiter {
+    assignments: Vec<PlanAssignment>,
+}
+
+impl StaticArbiter {
+    pub fn new(assignments: Vec<PlanAssignment>) -> Self {
+        Self { assignments }
+    }
+
+    /// Freeze [`ProportionalArbiter`]'s verdict over the full expected
+    /// session set.
+    pub fn precompute(sessions: &[SessionSnapshot], topology: &TierTopology) -> Self {
+        Self::new(ProportionalArbiter.arbitrate(sessions, topology))
+    }
+}
+
+impl Arbiter for StaticArbiter {
+    fn name(&self) -> String {
+        "static".into()
+    }
+
+    fn arbitrate(
+        &self,
+        sessions: &[SessionSnapshot],
+        _topology: &TierTopology,
+    ) -> Vec<PlanAssignment> {
+        sessions
+            .iter()
+            .filter_map(|s| self.assignments.iter().find(|a| a.id == s.id).cloned())
             .collect()
     }
 }
@@ -143,14 +259,7 @@ mod tests {
     }
 
     fn snap(id: u64, n: u64, k: u64) -> SessionSnapshot {
-        SessionSnapshot {
-            id,
-            n,
-            k,
-            tier_costs: vec![pd(1.0, 4.0), pd(3.0, 0.5)],
-            include_rent: false,
-            naive: false,
-        }
+        SessionSnapshot::fresh(id, n, k, vec![pd(1.0, 4.0), pd(3.0, 0.5)], false, PlanFamily::Keep)
     }
 
     #[test]
@@ -165,6 +274,7 @@ mod tests {
         let total_quota: u64 = out.iter().map(|a| a.quota[0].unwrap()).sum();
         assert!(total_quota <= 40);
         for a in &out {
+            assert_eq!(a.family, PlanFamily::Keep);
             assert_eq!(a.unconstrained.r(), unc.r);
             assert_eq!(a.demand[0], unc.r.min(50));
             let q = a.quota[0].unwrap();
@@ -194,13 +304,15 @@ mod tests {
             .with_capacity(TierId(0), Some(6))
             .with_capacity(TierId(1), Some(12));
         let sessions: Vec<_> = (0..3)
-            .map(|i| SessionSnapshot {
-                id: i,
-                n: 500,
-                k: 20,
-                tier_costs: topo.default_costs(),
-                include_rent: false,
-                naive: false,
+            .map(|i| {
+                SessionSnapshot::fresh(
+                    i,
+                    500,
+                    20,
+                    topo.default_costs(),
+                    false,
+                    PlanFamily::Keep,
+                )
             })
             .collect();
         let out = ProportionalArbiter.arbitrate(&sessions, &topo);
@@ -214,5 +326,84 @@ mod tests {
             assert!(a.plan.demand(TierId(1)) <= a.quota[1].unwrap());
             assert_eq!(a.quota[2], None, "sink tier carries no quota");
         }
+    }
+
+    /// Rent-dominated two-tier economy where the DO_MIGRATE closed form
+    /// wins: the migrate family is honored and `Auto` resolves to it.
+    fn rent_snap(id: u64, family: PlanFamily) -> SessionSnapshot {
+        let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 };
+        let b = PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 };
+        SessionSnapshot::fresh(id, 2000, 32, vec![a, b], true, family)
+    }
+
+    #[test]
+    fn migrate_family_is_assigned_and_auto_resolves() {
+        let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 };
+        let b = PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 };
+        let topo = TierTopology::two_tier(a, b).with_capacity(TierId::A, Some(1_000));
+        let sessions =
+            vec![rent_snap(0, PlanFamily::Migrate), rent_snap(1, PlanFamily::Auto)];
+        let out = ProportionalArbiter.arbitrate(&sessions, &topo);
+        let model = CostModel::new(2000, 32, a, b);
+        let mig = optimal_r(&model, true);
+        for a in &out {
+            assert_eq!(a.family, PlanFamily::Migrate);
+            assert!(a.plan.migrates());
+            assert_eq!(a.unconstrained.r(), mig.r);
+            assert!((a.analytic_unconstrained - mig.cost).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fired_changeover_lends_its_quota_to_survivors() {
+        // two streams share a tight hot tier; stream 0 has executed its
+        // changeover demotion (fired, holds nothing hot) — its hot quota
+        // collapses and stream 1 inherits the whole tier
+        let topo = TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5))
+            .with_capacity(TierId::A, Some(10));
+        let mut fired = snap(0, 1000, 50);
+        fired.family = PlanFamily::Migrate;
+        fired.observed = 600;
+        fired.fired = vec![true];
+        fired.in_use = vec![0, 40];
+        let fresh = snap(1, 1000, 50);
+        let out = ProportionalArbiter.arbitrate(&[fired, fresh], &topo);
+        assert_eq!(out[0].demand[0], 0, "fired stream demands nothing hot");
+        assert_eq!(out[0].quota[0], Some(0));
+        assert_eq!(out[1].quota[0], Some(10), "survivor inherits the full tier");
+    }
+
+    #[test]
+    fn held_residents_floor_the_demand() {
+        // a keep-family stream that is past its hot band still *holds* its
+        // residents: demand must not collapse below the holdings
+        let topo = TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5))
+            .with_capacity(TierId::A, Some(10));
+        let mut holder = snap(0, 1000, 50);
+        holder.observed = 1000;
+        holder.in_use = vec![8, 42];
+        let out = ProportionalArbiter.arbitrate(&[holder], &topo);
+        assert!(out[0].demand[0] >= 8, "demand {} < held 8", out[0].demand[0]);
+    }
+
+    #[test]
+    fn static_arbiter_freezes_the_admission_verdict() {
+        let topo = TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5))
+            .with_capacity(TierId::A, Some(20));
+        let all: Vec<_> = (0..4).map(|i| snap(i, 1000, 50)).collect();
+        let frozen = StaticArbiter::precompute(&all, &topo);
+        let want = ProportionalArbiter.arbitrate(&all, &topo);
+        // a subset of live sessions gets exactly its frozen slice — no
+        // re-lending of the absentees' quotas
+        let live = vec![all[1].clone(), all[3].clone()];
+        let got = frozen.arbitrate(&live, &topo);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].id, 1);
+        assert_eq!(got[1].id, 3);
+        assert_eq!(got[0].quota, want[1].quota);
+        assert_eq!(got[1].quota, want[3].quota);
+        // an unknown session id simply gets no verdict
+        let stranger = snap(9, 100, 5);
+        assert!(frozen.arbitrate(&[stranger], &topo).is_empty());
     }
 }

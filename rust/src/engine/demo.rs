@@ -131,7 +131,7 @@ pub fn run_engine_demo(
     let engine = match backend {
         BackendSpec::Sim => builder.build()?,
         BackendSpec::Fs { root } => {
-            if root.join("journal.log").exists() {
+            if FsBackend::has_journal(root) {
                 bail!(
                     "engine demo needs a fresh fs root, but {} already holds a \
                      journal from a previous run (demo session/document ids \
@@ -147,18 +147,19 @@ pub fn run_engine_demo(
 
     events.push(format!(
         "engine demo: {} sessions × {} docs (K={}), {} tiers, hot capacity {} \
-         (per-stream demand {}), arbiter '{}', backend '{}'",
+         (per-stream demand {}), family '{}', arbiter '{}', backend '{}'",
         demo.streams,
         demo.docs,
         k,
         demo.tiers,
         hot_capacity,
         per_stream_demand,
+        demo.family.label(),
         engine.arbiter_name(),
         engine.backend_name(),
     ));
 
-    let spec = || SessionSpec::new(demo.docs, k).with_rent(false);
+    let spec = || SessionSpec::new(demo.docs, k).with_rent(false).with_family(demo.family);
     let mut sessions = Vec::with_capacity(demo.streams);
     for _ in 0..demo.streams {
         sessions.push(engine.open_stream(spec())?);
@@ -291,7 +292,7 @@ pub fn reconcile_backends(
     demo: &EngineDemoConfig,
     fs_root: &Path,
 ) -> Result<ReconcileReport> {
-    if fs_root.join("journal.log").exists() {
+    if FsBackend::has_journal(fs_root) {
         bail!(
             "reconciliation needs a fresh fs root, but {} already holds a journal",
             fs_root.display()

@@ -21,13 +21,22 @@
 //!       └─ settle_rent / ledger / assignments / peak_occupancy ...
 //! ```
 //!
-//! **Online re-arbitration.** Every `open_stream` and every finish re-runs
-//! the [`Arbiter`] over the live sessions, so quotas are no longer fixed
-//! at admission: a session closing mid-run (via
-//! [`StreamSession::finish_release`]) frees its hot residents and the
-//! survivors' closed-form quotas and changeover plans are recomputed on
-//! the spot. Plan changes apply to *future* placements only — already
-//! resident documents are never evicted by a quota shrink.
+//! **Online re-arbitration.** Every `open_stream`, every finish, and
+//! every changeover demotion re-runs the [`Arbiter`] over the live
+//! sessions, so quotas are no longer fixed at admission: a session
+//! closing mid-run (via [`StreamSession::finish_release`]) — or a
+//! migrate-family session bulk-demoting its hot residents at a plan
+//! boundary — frees capacity and the survivors' closed-form quotas and
+//! changeover plans are recomputed on the spot (*time-phased quota
+//! lending*). Plan changes apply to *future* placements only — already
+//! resident documents are never evicted by a quota shrink, and a fired
+//! changeover boundary never re-opens.
+//!
+//! **Plan families.** [`SessionSpec::with_family`] selects the paper's
+//! strategy family per stream: `Keep` (no migration), `Migrate`
+//! (DO_MIGRATE — every boundary bulk-demotes, the winner when rent
+//! dominates transport, e.g. case-study-2 economies), or `Auto`
+//! (whichever closed form prices cheaper).
 //!
 //! The engine is internally synchronized (`Arc<Mutex>`), so sessions are
 //! independent handles: the fleet's placer drives many of them
@@ -46,12 +55,16 @@ pub mod demo;
 pub mod session;
 pub mod topology;
 
-pub use arbiter::{Arbiter, PlanAssignment, ProportionalArbiter, SessionSnapshot};
+pub use arbiter::{
+    Arbiter, PlanAssignment, ProportionalArbiter, SessionSnapshot, StaticArbiter,
+};
 pub use demo::{
     reconcile_backends, run_engine_demo, BackendSpec, EngineDemoReport, ReconcileReport,
 };
 pub use session::{SessionOutcome, SessionSpec};
 pub use topology::{TierSpec, TierTopology};
+
+pub use crate::policy::PlanFamily;
 
 use crate::policy::{PlacementPlan, PlacementPolicy};
 use crate::storage::{Ledger, StorageBackend, StorageSim, TierId};
@@ -191,6 +204,7 @@ impl Shared {
             spec.include_rent,
             spec.naive,
             spec.record_series,
+            spec.family,
         );
         self.sessions.insert(id, state);
         Ok(id)
@@ -236,10 +250,10 @@ impl Shared {
         for a in &assignments {
             if let Some(s) = self.sessions.get_mut(&a.id) {
                 if s.naive {
-                    s.plan = a.unconstrained.clone();
+                    s.apply_plan(a.unconstrained.clone());
                     s.quotas = vec![None; self.topology.num_tiers()];
                 } else {
-                    s.plan = a.plan.clone();
+                    s.apply_plan(a.plan.clone());
                     s.quotas = a.quota.clone();
                 }
             }
@@ -466,13 +480,22 @@ impl StreamSession {
     }
 
     /// Observe the next document under the session's (arbitrated) plan.
+    /// A changeover demotion firing mid-observation triggers an immediate
+    /// re-arbitration: the capacity it freed is re-lent to the surviving
+    /// sessions on the spot (time-phased quota lending).
     pub fn observe(&mut self, score: f64) -> Result<()> {
         let mut g = lock_shared(&self.shared);
-        let Shared { backend, sessions, .. } = &mut *g;
-        let s = sessions
-            .get_mut(&self.id)
-            .ok_or_else(|| anyhow!("session {} is closed", self.id))?;
-        s.observe(backend.as_mut(), score)
+        let fired = {
+            let Shared { backend, sessions, .. } = &mut *g;
+            let s = sessions
+                .get_mut(&self.id)
+                .ok_or_else(|| anyhow!("session {} is closed", self.id))?;
+            s.observe(backend.as_mut(), score)?
+        };
+        if fired {
+            g.rearbitrate();
+        }
+        Ok(())
     }
 
     /// Observe the next document, deferring placement to an external
@@ -823,6 +846,58 @@ mod tests {
         assert_eq!(b.quotas()[0], Some(0), "the clamp itself is unchanged");
         // releasing the orphans is out of scope here; close cleanly
         drop(b);
+    }
+
+    #[test]
+    fn quota_starved_migrate_stream_recovers_when_capacity_is_lent() {
+        use crate::policy::PlanFamily;
+        // rent-dominated economy: interior DO_MIGRATE optimum
+        let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 };
+        let b = PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 };
+        let engine = Engine::builder()
+            .topology(TierTopology::two_tier(a, b).with_capacity(TierId::A, Some(5)))
+            .build()
+            .unwrap();
+        // a hot-hungry keep stream swallows the whole tier: hot dominates
+        // its economics everywhere, so r* = N and demand = K = 50 — with
+        // capacity 5, largest-remainder hands it all five slots...
+        let hog_hot = PerDocCosts { write: 0.1, read: 0.1, rent_window: 0.01 };
+        let hog_cold = PerDocCosts { write: 5.0, read: 5.0, rent_window: 1.0 };
+        let mut hog = engine
+            .open_stream(SessionSpec::new(1000, 50).with_costs(vec![hog_hot, hog_cold]))
+            .unwrap();
+        // ...so the migrate stream is admitted with a zero hot quota: its
+        // cut clamps to 0 and its changeover boundary is due immediately
+        let mut starved = engine
+            .open_stream(
+                SessionSpec::new(100, 5)
+                    .with_costs(vec![a, b])
+                    .with_family(PlanFamily::Migrate),
+            )
+            .unwrap();
+        assert_eq!(starved.quotas()[0], Some(0));
+        assert_eq!(starved.plan().unwrap().r(), 0);
+        let mut rng = Rng::new(11);
+        for _ in 0..2 {
+            hog.observe(rng.next_f64()).unwrap();
+            starved.observe(rng.next_f64()).unwrap(); // empty demotion: stays armed
+        }
+        // the hog closes: its five slots are re-lent, and the starved
+        // stream's boundary must RE-OPEN at the unconstrained migrate r*
+        // (an empty demotion must not have pinned the cut at 0)
+        hog.finish_release().unwrap();
+        let r = starved.plan().unwrap().r();
+        assert!(r > 5, "re-lent capacity must re-open the hot band (r={r})");
+        while !starved.done() {
+            starved.observe(rng.next_f64()).unwrap();
+        }
+        engine.settle_rent(1.0).unwrap();
+        let out = starved.finish().unwrap();
+        let ledger = engine.stream_ledger(1);
+        assert!(ledger.tier(TierId::A).writes > 0, "the hot band was used");
+        assert!(ledger.migration_total() > 0.0, "the changeover demotion fired");
+        assert_eq!(out.hot_reads(), 0, "post-changeover reads are all cold");
+        assert_eq!(engine.resident_len(TierId::A), 0, "hot tier handed back");
     }
 
     #[test]

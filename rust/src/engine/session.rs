@@ -17,7 +17,7 @@
 //! attributed to the owning session for per-stream ledger mirroring.
 
 use crate::cost::PerDocCosts;
-use crate::policy::{MigrationOrder, PlacementPlan, PlacementPolicy};
+use crate::policy::{MigrationOrder, PlacementPlan, PlacementPolicy, PlanFamily};
 use crate::storage::{StorageBackend, TierId};
 use crate::topk::{BoundedTopK, Eviction, Scored};
 use anyhow::{bail, Result};
@@ -44,6 +44,9 @@ pub struct SessionSpec {
     pub naive: bool,
     /// Record the cumulative-writes series (Fig. 8 instrumentation).
     pub record_series: bool,
+    /// Strategy family the arbiter should plan for this session (keep /
+    /// migrate / auto).
+    pub family: PlanFamily,
 }
 
 impl SessionSpec {
@@ -55,6 +58,7 @@ impl SessionSpec {
             include_rent: true,
             naive: false,
             record_series: false,
+            family: PlanFamily::Keep,
         }
     }
 
@@ -67,6 +71,7 @@ impl SessionSpec {
             include_rent: model.include_rent,
             naive: false,
             record_series: false,
+            family: PlanFamily::Keep,
         }
     }
 
@@ -87,6 +92,11 @@ impl SessionSpec {
 
     pub fn with_series(mut self, record: bool) -> Self {
         self.record_series = record;
+        self
+    }
+
+    pub fn with_family(mut self, family: PlanFamily) -> Self {
+        self.family = family;
         self
     }
 }
@@ -127,10 +137,17 @@ pub(crate) struct SessionState {
     pub tier_costs: Vec<PerDocCosts>,
     pub include_rent: bool,
     pub naive: bool,
-    /// Current plan (re-assigned by the arbiter on open/close events).
+    /// Strategy family the arbiter plans for this session.
+    pub family: PlanFamily,
+    /// Current plan (re-assigned by the arbiter on open/close events via
+    /// [`SessionState::apply_plan`]).
     pub plan: PlacementPlan,
     /// Current per-tier quotas (None = no quota on that tier).
     pub quotas: Vec<Option<u64>>,
+    /// Per-boundary changeover demotions already executed, recording the
+    /// cut they fired at (None = not fired). A fired boundary never
+    /// re-opens: re-arbitrated plans are clamped back to the fired cut.
+    fired: Vec<Option<u64>>,
     tracker: BoundedTopK,
     next_index: u64,
     /// This session's resident count per tier under proactive placement.
@@ -145,6 +162,7 @@ pub(crate) struct SessionState {
 }
 
 impl SessionState {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: u64,
         n: u64,
@@ -153,6 +171,7 @@ impl SessionState {
         include_rent: bool,
         naive: bool,
         record_series: bool,
+        family: PlanFamily,
     ) -> Self {
         let tiers = tier_costs.len();
         // Placeholder all-to-sink plan: the engine re-arbitrates on every
@@ -168,8 +187,10 @@ impl SessionState {
             tier_costs,
             include_rent,
             naive,
+            family,
             plan,
             quotas: vec![None; tiers],
+            fired: vec![None; tiers - 1],
             tracker: BoundedTopK::new(k as usize),
             next_index: 0,
             in_use: vec![0; tiers],
@@ -206,12 +227,32 @@ impl SessionState {
             tier_costs: self.tier_costs.clone(),
             include_rent: self.include_rent,
             naive: self.naive,
+            family: self.family,
+            observed: self.next_index,
+            in_use: self.in_use.iter().map(|&u| u as u64).collect(),
+            fired: self.fired.iter().map(|f| f.is_some()).collect(),
         }
     }
 
+    /// Install a (re-)arbitrated plan, clamping any boundary this session
+    /// has already demoted across back to the cut it fired at: a grown
+    /// quota must never re-open a fired changeover — indices past it would
+    /// place hot again with no second demotion coming, silently undoing
+    /// the capacity the changeover lent back to the pool.
+    pub fn apply_plan(&mut self, mut plan: PlacementPlan) {
+        for (j, f) in self.fired.iter().enumerate() {
+            if let Some(cut_at_fire) = f {
+                plan.clamp_cut_at_most(j, *cut_at_fire);
+            }
+        }
+        self.plan = plan;
+    }
+
     /// Observe the next document under the session's plan (plan/naive
-    /// modes). Must be called in stream order.
-    pub fn observe(&mut self, backend: &mut dyn StorageBackend, score: f64) -> Result<()> {
+    /// modes). Must be called in stream order. Returns `true` when a
+    /// changeover demotion fired — capacity was freed and the caller
+    /// should re-arbitrate (time-phased quota lending).
+    pub fn observe(&mut self, backend: &mut dyn StorageBackend, score: f64) -> Result<bool> {
         let i = self.begin_observation(backend)?;
         let at = i as f64 / self.n as f64;
         match self.tracker.offer(Scored::new(i, score)) {
@@ -226,8 +267,104 @@ impl SessionState {
                 self.write_planned(backend, i, at)?;
             }
         }
+        let fired = self.fire_due_boundaries(backend, i, at)?;
         self.record_series_point();
-        Ok(())
+        Ok(fired)
+    }
+
+    /// Execute every due changeover demotion of the plan (the DO_MIGRATE
+    /// boundaries): for each not-yet-fired boundary `j` with
+    /// `migrate[j]` and `i >= cuts[j]`, bulk-demote this session's
+    /// residents of tier `j` into the next colder tier with headroom.
+    /// Boundaries fire hot → cold, so co-located cuts cascade documents
+    /// through several hops in one step — mirroring the analytic model.
+    ///
+    /// A boundary is recorded as fired only when documents actually
+    /// moved: an empty demotion (e.g. a quota-starved stream whose cut
+    /// was clamped to 0 before it ever placed hot) leaves the boundary
+    /// armed, so a later quota grant can still re-open the band — there
+    /// are no stranded residents whose second demotion could be missed,
+    /// and pinning the cut would lock the stream cold for life. The
+    /// `in_use` check keeps the armed-but-empty case O(1) per step.
+    ///
+    /// Returns `true` if anything fired (capacity was freed).
+    fn fire_due_boundaries(
+        &mut self,
+        backend: &mut dyn StorageBackend,
+        i: u64,
+        at: f64,
+    ) -> Result<bool> {
+        if !self.plan.migrates() {
+            return Ok(false);
+        }
+        let mut any = false;
+        for j in 0..self.fired.len() {
+            if self.fired[j].is_some() || !self.plan.migrate_at(j) {
+                continue;
+            }
+            let cut = self.plan.cuts()[j];
+            if i < cut {
+                break; // cuts are nondecreasing: nothing colder is due
+            }
+            if self.in_use[j] == 0 {
+                continue; // nothing to demote: leave the boundary armed
+            }
+            let moved = self.bulk_demote(backend, j, at)?;
+            if moved > 0 {
+                self.fired[j] = Some(cut);
+                any = true;
+            }
+        }
+        Ok(any)
+    }
+
+    /// The changeover demotion itself: move every resident this session
+    /// still holds in tier `j` to the next colder tier that can take the
+    /// whole batch (the unbounded sink always qualifies). When the
+    /// session is the tier's sole occupant the move goes through the
+    /// backend's all-or-nothing [`StorageBackend::migrate_all`] (one
+    /// journaled bulk op on durable backends); on a shared tier only the
+    /// session's own documents move, one checked hop each. Returns the
+    /// number of documents moved.
+    fn bulk_demote(
+        &mut self,
+        backend: &mut dyn StorageBackend,
+        j: usize,
+        at: f64,
+    ) -> Result<u64> {
+        let from = TierId(j);
+        let mine: Vec<u64> = backend
+            .residents(from)
+            .iter()
+            .filter(|r| r.owner == Some(self.id))
+            .map(|r| r.doc)
+            .collect();
+        if mine.is_empty() {
+            return Ok(0);
+        }
+        let sink = self.plan.num_tiers() - 1;
+        let mut dest = j + 1;
+        while dest < sink {
+            let room = match backend.capacity(TierId(dest)) {
+                Some(cap) => cap.saturating_sub(backend.resident_len(TierId(dest))),
+                None => usize::MAX,
+            };
+            if room >= mine.len() {
+                break;
+            }
+            dest += 1;
+        }
+        let to = TierId(dest);
+        if backend.resident_len(from) == mine.len() {
+            backend.migrate_all(from, to, at)?;
+        } else {
+            for doc in &mine {
+                backend.migrate_doc(*doc, to, at)?;
+            }
+        }
+        self.in_use[dest] += mine.len();
+        self.in_use[j] = self.in_use[j].saturating_sub(mine.len());
+        Ok(mine.len() as u64)
     }
 
     /// Observe the next document, deferring placement to an external

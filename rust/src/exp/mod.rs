@@ -43,6 +43,8 @@ pub const EXPERIMENT_IDS: &[&str] = &[
     "ablation-policies",
     "ablation-ordering",
     "fleet",
+    "fleet-family",
+    "fleet-staggered",
     "all",
 ];
 
@@ -121,6 +123,36 @@ pub fn run(id: &str, seed: u64, quick: bool) -> Result<()> {
             let t_len = if quick { 64 } else { 256 };
             let specs = crate::fleet::demo_fleet(m, n, k, true, seed);
             let (table, series, _) = fleet::e_fleet(&specs, seed, t_len, points)?;
+            println!("{}", table.render());
+            emit(&series)?;
+        }
+        "fleet-family" => {
+            // rent-dominated (case-study-2 shape) fleet: keep vs migrate
+            // vs auto, measured against the closed forms
+            let (m, n, k) = if quick { (3, 400, 10) } else { (8, 2_000, 32) };
+            let t_len = if quick { 48 } else { 128 };
+            let specs = crate::fleet::rent_dominated_fleet(m, n, k, seed);
+            let (table, series, cmp) = fleet::e_fleet_family(&specs, seed, t_len)?;
+            println!("{}", table.render());
+            emit(&series)?;
+            println!(
+                "migrate family saves {:+.1}% over keep at ample capacity \
+                 (measured ${:.4} vs ${:.4})",
+                cmp.saving() * 100.0,
+                cmp.migrate_total,
+                cmp.keep_total
+            );
+        }
+        "fleet-staggered" => {
+            // arrival process: streams open over time; online
+            // re-arbitration + quota lending vs static t=0 quotas
+            let (m, n, k) = if quick { (4, 300, 8) } else { (8, 1_500, 24) };
+            let t_len = if quick { 48 } else { 128 };
+            let specs = crate::fleet::rent_dominated_fleet(m, n, k, seed);
+            let capacity = (m as u64 * k / 2).max(1); // contended: half Σ K
+            let stride = n / (m as u64).max(1);
+            let (table, series, _) =
+                fleet::e_fleet_staggered(&specs, capacity, stride, seed, t_len)?;
             println!("{}", table.render());
             emit(&series)?;
         }

@@ -13,10 +13,13 @@
 
 use super::stream::{StreamSpec, HOT};
 use crate::engine::{Arbiter as _, ProportionalArbiter, SessionSnapshot, TierTopology};
+use crate::policy::PlanFamily;
 
 /// Per-stream slice of an arbitration outcome.
 #[derive(Debug, Clone, Copy)]
 pub struct StreamPlan {
+    /// The strategy family the arbiter resolved for the stream.
+    pub family: PlanFamily,
     /// Unconstrained optimal changeover index.
     pub r_unconstrained: u64,
     /// Hot-tier demand `min(r*, K)` in resident documents.
@@ -56,10 +59,33 @@ impl Arbitration {
     }
 }
 
+/// The admission-time [`SessionSnapshot`] of one fleet stream under a
+/// strategy family (nothing observed, nothing resident).
+pub(crate) fn snapshot_of(spec: &StreamSpec, family: PlanFamily) -> SessionSnapshot {
+    SessionSnapshot::fresh(
+        spec.id,
+        spec.model.n,
+        spec.model.k,
+        vec![spec.model.a, spec.model.b],
+        spec.model.include_rent,
+        family,
+    )
+}
+
 /// Compute quotas and budgeted changeover parameters for `specs` sharing
 /// `hot_capacity` resident slots of tier A (static admission-time view of
-/// the engine's online arbitration).
+/// the engine's online arbitration), keep family.
 pub fn arbitrate(specs: &[StreamSpec], hot_capacity: u64) -> Arbitration {
+    arbitrate_with(specs, hot_capacity, PlanFamily::Keep)
+}
+
+/// [`arbitrate`] with an explicit strategy family for every stream
+/// (`Auto` resolves per stream to the analytically cheaper family).
+pub fn arbitrate_with(
+    specs: &[StreamSpec],
+    hot_capacity: u64,
+    family: PlanFamily,
+) -> Arbitration {
     if specs.is_empty() {
         return Arbitration {
             hot_capacity,
@@ -71,21 +97,13 @@ pub fn arbitrate(specs: &[StreamSpec], hot_capacity: u64) -> Arbitration {
     let capacity = usize::try_from(hot_capacity).unwrap_or(usize::MAX);
     let topology = TierTopology::two_tier(specs[0].model.a, specs[0].model.b)
         .with_capacity(HOT, Some(capacity));
-    let snapshots: Vec<SessionSnapshot> = specs
-        .iter()
-        .map(|s| SessionSnapshot {
-            id: s.id,
-            n: s.model.n,
-            k: s.model.k,
-            tier_costs: vec![s.model.a, s.model.b],
-            include_rent: s.model.include_rent,
-            naive: false,
-        })
-        .collect();
+    let snapshots: Vec<SessionSnapshot> =
+        specs.iter().map(|s| snapshot_of(s, family)).collect();
     let assignments = ProportionalArbiter.arbitrate(&snapshots, &topology);
     let plans: Vec<StreamPlan> = assignments
         .iter()
         .map(|a| StreamPlan {
+            family: a.family,
             r_unconstrained: a.unconstrained.r(),
             demand: a.demand[HOT.0],
             quota: a.quota[HOT.0].unwrap_or(0),
@@ -184,5 +202,40 @@ mod tests {
         assert!(arb.plans.is_empty());
         assert!(!arb.oversubscribed);
         assert_eq!(arb.aggregate_demand, 0);
+    }
+
+    #[test]
+    fn migrate_family_reproduces_the_migrate_closed_form() {
+        // rent-dominated stream: the migrate r* comes from eq. 21 and the
+        // budget clamp runs against the same family
+        let specs: Vec<_> = (0..3)
+            .map(|i| {
+                StreamSpec::new(
+                    i,
+                    CostModel::new(
+                        2000,
+                        32,
+                        PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 },
+                        PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 },
+                    ),
+                    SeriesProfile::Mixed { p_oscillatory: 0.5 },
+                )
+            })
+            .collect();
+        let arb = arbitrate_with(&specs, 1000, PlanFamily::Migrate);
+        for (s, p) in specs.iter().zip(arb.plans.iter()) {
+            assert_eq!(p.family, PlanFamily::Migrate);
+            let unc = crate::cost::optimal_r(&s.model, true);
+            assert_eq!(p.r_unconstrained, unc.r);
+            assert_eq!(p.demand, unc.r.min(s.model.k));
+            assert!((p.analytic_unconstrained - unc.cost).abs() < 1e-12);
+        }
+        // under pressure the clamp prices the *migrate* family
+        let tight = arbitrate_with(&specs, 12, PlanFamily::Migrate);
+        for (s, p) in specs.iter().zip(tight.plans.iter()) {
+            let clamped = crate::cost::optimal_r_budgeted(&s.model, true, p.quota);
+            assert_eq!(p.r_budgeted, clamped.r);
+            assert!((p.analytic_budgeted - clamped.cost).abs() < 1e-12);
+        }
     }
 }

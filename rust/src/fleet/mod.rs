@@ -33,7 +33,7 @@ pub mod report;
 pub mod scheduler;
 pub mod stream;
 
-pub use arbiter::{arbitrate, Arbitration, StreamPlan};
+pub use arbiter::{arbitrate, arbitrate_with, Arbitration, StreamPlan};
 pub use capacity::allocate_proportional;
 pub use report::{FleetReport, StreamReport};
 pub use scheduler::{run_fleet, FleetConfig, FleetMode};
@@ -103,6 +103,36 @@ pub fn demo_fleet(
         .collect()
 }
 
+/// Build a deterministic rent-dominated demo fleet of `m` streams — the
+/// case-study-2 economy shape at fleet scale: the hot tier writes and
+/// reads for free but charges dearly for occupancy (EFS-like), the cold
+/// tier is the reverse (S3-like), rent included. The DO_MIGRATE closed
+/// form has an interior optimum at `r*/N = w_B / (rent_A − rent_B) = 0.2`
+/// and beats the best keep-family parameter — the regime the migrate
+/// family exists for. `salt` perturbs the interestingness profile mix
+/// only (economics stay fixed so the family comparison is clean).
+pub fn rent_dominated_fleet(
+    m: usize,
+    n_per_stream: u64,
+    k_base: u64,
+    salt: u64,
+) -> Vec<StreamSpec> {
+    let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 };
+    let b = PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 };
+    (0..m)
+        .map(|i| {
+            let n = n_per_stream.max(1);
+            let k = k_base.clamp(1, n);
+            let profile = match (i as u64 + salt) % 3 {
+                0 => SeriesProfile::Mixed { p_oscillatory: 0.3 },
+                1 => SeriesProfile::Oscillatory { period: 32.0 },
+                _ => SeriesProfile::Noisy { level: 12.0 },
+            };
+            StreamSpec::new(i as u64, CostModel::new(n, k, a, b), profile)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +159,30 @@ mod tests {
     fn demo_fleet_demands_are_positive() {
         for s in demo_fleet(6, 500, 8, true, 2) {
             assert!(crate::cost::hot_demand(&s.model, false) >= 1, "stream {}", s.id);
+        }
+    }
+
+    #[test]
+    fn rent_dominated_fleet_prefers_the_migrate_family() {
+        use crate::cost::{expected_cost, optimal_r, Strategy};
+        for s in rent_dominated_fleet(4, 2000, 32, 0) {
+            assert!(s.model.include_rent);
+            let mig = optimal_r(&s.model, true);
+            assert!(mig.interior, "migrate optimum must be interior");
+            // the DO_MIGRATE optimum undercuts both single-tier baselines
+            // and the best keep-family parameter
+            let all_b = expected_cost(&s.model, Strategy::AllB).total();
+            let all_a = expected_cost(&s.model, Strategy::AllA).total();
+            let keep = optimal_r(&s.model, false);
+            assert!(mig.cost < all_b, "stream {}: {} !< AllB {all_b}", s.id, mig.cost);
+            assert!(mig.cost < all_a, "stream {}: {} !< AllA {all_a}", s.id, mig.cost);
+            assert!(
+                mig.cost < keep.cost,
+                "stream {}: migrate {} !< keep {}",
+                s.id,
+                mig.cost,
+                keep.cost
+            );
         }
     }
 }

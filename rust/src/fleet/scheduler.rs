@@ -25,11 +25,13 @@
 //! cross-stream arrival interleaving (which arbitrated mode is, by
 //! construction, insensitive to).
 
-use super::arbiter::{arbitrate, Arbitration};
+use super::arbiter::{arbitrate_with, Arbitration};
 use super::report::{FleetReport, StreamReport};
 use super::stream::{generate_series, StreamSpec, HOT};
-use crate::engine::{Engine, StreamSession, TierTopology};
+use crate::engine::{BackendSpec, Engine, StreamSession, TierTopology};
 use crate::interestingness::RbfScorer;
+use crate::policy::PlanFamily;
+use crate::storage::FsBackend;
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::sync_channel;
 use std::time::Instant;
@@ -62,6 +64,15 @@ pub struct FleetConfig {
     /// Fleet seed; per-stream generators fork deterministically from it.
     pub seed: u64,
     pub mode: FleetMode,
+    /// Strategy family every stream runs (`keep` | `migrate` | `auto`).
+    /// Migrate-family streams bulk-demote at their changeover and the
+    /// freed hot capacity is re-lent mid-run, which makes contended
+    /// migrate runs sensitive to cross-stream arrival interleaving (and
+    /// therefore to the worker count).
+    pub family: PlanFamily,
+    /// Storage substrate: the in-memory simulator or the real-filesystem
+    /// backend (`fs:<root>`, ADR-003 — the root must be fresh).
+    pub backend: BackendSpec,
 }
 
 impl Default for FleetConfig {
@@ -74,6 +85,8 @@ impl Default for FleetConfig {
             t_len: 256,
             seed: 20190412,
             mode: FleetMode::Arbitrated,
+            family: PlanFamily::Keep,
+            backend: BackendSpec::Sim,
         }
     }
 }
@@ -87,8 +100,9 @@ struct WorkerStream {
 }
 
 /// Per-stream RNG seed, independent of worker partitioning so results are
-/// reproducible across worker counts.
-fn stream_seed(fleet_seed: u64, stream_id: u64) -> u64 {
+/// reproducible across worker counts (also used by the staggered-admission
+/// experiment so its score sequences match `run_fleet`'s).
+pub(crate) fn stream_seed(fleet_seed: u64, stream_id: u64) -> u64 {
     fleet_seed ^ stream_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
@@ -104,22 +118,37 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
     }
     let started = Instant::now();
     // Static admission-time arbitration for the report; the engine
-    // recomputes the identical verdict internally as the sessions open.
-    let arbitration: Arbitration = arbitrate(specs, config.hot_capacity);
+    // recomputes the identical verdict internally as the sessions open
+    // (changeover demotions may re-arbitrate it away mid-run).
+    let arbitration: Arbitration =
+        arbitrate_with(specs, config.hot_capacity, config.family);
 
     // ---- engine over the shared capacity-limited backend -------------------
     let charge_rent = specs.iter().any(|s| s.model.include_rent);
     let capacity = usize::try_from(config.hot_capacity).unwrap_or(usize::MAX);
-    let engine = Engine::builder()
+    let mut builder = Engine::builder()
         .topology(
             TierTopology::two_tier(specs[0].model.a, specs[0].model.b)
                 .with_capacity(HOT, Some(capacity)),
         )
-        .charge_rent(charge_rent)
-        .build()?;
+        .charge_rent(charge_rent);
+    if let BackendSpec::Fs { root } = &config.backend {
+        if FsBackend::has_journal(root) {
+            bail!(
+                "fleet needs a fresh fs root, but {} already holds a journal \
+                 from a previous run (stream/document ids restart at 0 and \
+                 would collide with the journaled residents)",
+                root.display()
+            );
+        }
+        let costs = vec![specs[0].model.a, specs[0].model.b];
+        builder = builder.backend(Box::new(FsBackend::open(root, costs, charge_rent)?));
+    }
+    let engine = builder.build()?;
     let naive = config.mode == FleetMode::Naive;
-    let mut sessions: Vec<StreamSession> =
-        engine.open_streams(specs.iter().map(|s| s.session_spec(naive)).collect())?;
+    let mut sessions: Vec<StreamSession> = engine.open_streams(
+        specs.iter().map(|s| s.session_spec_with(naive, config.family)).collect(),
+    )?;
     let total_docs: u64 = specs.iter().map(|s| s.model.n).sum();
 
     // ---- worker pool -------------------------------------------------------
@@ -262,6 +291,7 @@ mod tests {
             t_len: 64,
             seed: 7,
             mode,
+            ..FleetConfig::default()
         }
     }
 
@@ -343,5 +373,49 @@ mod tests {
         let mut specs = demo_fleet(2, 50, 3, false, 1);
         specs[1].id = 5;
         assert!(run_fleet(&specs, &FleetConfig::default()).is_err());
+    }
+
+    #[test]
+    fn migrate_family_fleet_completes_and_conserves() {
+        let specs = crate::fleet::rent_dominated_fleet(3, 300, 10, 2);
+        let mut cfg = tiny_config(FleetMode::Arbitrated, 64, 1);
+        cfg.family = crate::policy::PlanFamily::Migrate;
+        let report = run_fleet(&specs, &cfg).unwrap();
+        assert_eq!(report.streams.len(), 3);
+        // the changeover demotions actually happened
+        assert!(report.ledger.migration_total() > 0.0, "no changeover demotion fired");
+        // conservation holds with mid-run bulk demotions in play
+        let total = report.total_cost();
+        assert!(
+            (total - report.per_stream_total()).abs() < 1e-6 * total.max(1.0),
+            "fleet ${total} vs Σ streams ${}",
+            report.per_stream_total()
+        );
+        for s in &report.streams {
+            assert_eq!(s.hot_reads + s.cold_reads, s.k.min(s.n));
+            assert_eq!(s.hot_reads, 0, "migrated streams read everything cold");
+        }
+    }
+
+    #[test]
+    fn fleet_runs_on_the_fs_backend() {
+        let specs = demo_fleet(2, 80, 4, true, 5);
+        let root = crate::util::scratch_dir("fleet-fs");
+        let mut cfg = tiny_config(FleetMode::Arbitrated, 8, 1);
+        cfg.backend = BackendSpec::Fs { root: root.clone() };
+        let fs_report = run_fleet(&specs, &cfg).unwrap();
+        // parity with the sim on the identical seeded run
+        let sim_report =
+            run_fleet(&specs, &tiny_config(FleetMode::Arbitrated, 8, 1)).unwrap();
+        assert!(
+            (fs_report.total_cost() - sim_report.total_cost()).abs()
+                < 1e-9 * sim_report.total_cost().max(1.0),
+            "fs ${} vs sim ${}",
+            fs_report.total_cost(),
+            sim_report.total_cost()
+        );
+        // a stale root is refused, not silently corrupted
+        assert!(run_fleet(&specs, &cfg).is_err());
+        let _ = std::fs::remove_dir_all(&root);
     }
 }

@@ -78,6 +78,15 @@ impl StreamSpec {
     pub fn session_spec(&self, naive: bool) -> crate::engine::SessionSpec {
         crate::engine::SessionSpec::from_model(&self.model).with_naive(naive)
     }
+
+    /// [`StreamSpec::session_spec`] with an explicit strategy family.
+    pub fn session_spec_with(
+        &self,
+        naive: bool,
+        family: crate::policy::PlanFamily,
+    ) -> crate::engine::SessionSpec {
+        self.session_spec(naive).with_family(family)
+    }
 }
 
 #[cfg(test)]

@@ -30,12 +30,15 @@
 //! crash recovery; ADR-003) — and an
 //! [`engine::TierTopology`]; [`engine::Engine::open_stream`] hands out
 //! dynamic [`engine::StreamSession`]s that score/place/finish
-//! independently, and every open/close event re-runs the
+//! independently, and every open/close/changeover event re-runs the
 //! [`engine::Arbiter`]'s closed-form quota computation over the live
-//! sessions (online re-arbitration). The single-stream batch executor
-//! ([`policy::run_policy`]), the streaming [`pipeline`], and the
-//! multi-stream [`fleet`] are thin compatibility wrappers over it (see
-//! `docs/adr/ADR-002-engine-api.md`).
+//! sessions (online re-arbitration). Sessions run either of the paper's
+//! strategy families ([`policy::PlanFamily`]): keep, or DO_MIGRATE —
+//! N-tier migrate schedules whose changeover demotions return hot
+//! capacity to the pool mid-run (time-phased quota lending; ADR-004).
+//! The single-stream batch executor ([`policy::run_policy`]), the
+//! streaming [`pipeline`], and the multi-stream [`fleet`] are thin
+//! compatibility wrappers over it (see `docs/adr/ADR-002-engine-api.md`).
 //!
 //! Start with [`cost::case_study_1`], [`policy`], [`engine`], and
 //! [`pipeline`]; the `shptier` binary exposes every paper

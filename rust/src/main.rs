@@ -217,13 +217,22 @@ fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
             other => bail!("unknown fleet mode '{other}' (arbitrated | naive)"),
         };
     }
+    if let Some(family) = flags.get("family") {
+        launch.config.family = shptier::policy::PlanFamily::parse(family)?;
+    }
+    if let Some(backend) = flags.get("backend") {
+        launch.config.backend = shptier::engine::BackendSpec::parse(backend)?;
+    }
 
     println!(
-        "launching fleet: {} streams, hot capacity {}, {} workers, mode {:?}",
+        "launching fleet: {} streams, hot capacity {}, {} workers, mode {:?}, \
+         family {}, backend '{}'",
         launch.specs.len(),
         launch.config.hot_capacity,
         launch.config.workers,
-        launch.config.mode
+        launch.config.mode,
+        launch.config.family.label(),
+        launch.config.backend.label()
     );
     let report = shptier::fleet::run_fleet(&launch.specs, &launch.config)?;
     println!("{}", report.table().render());
@@ -272,6 +281,9 @@ fn cmd_engine(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     }
     if let Some(b) = flags.get("backend") {
         demo.backend = b.clone();
+    }
+    if let Some(f) = flags.get("family") {
+        demo.family = shptier::policy::PlanFamily::parse(f)?;
     }
     // one shared rule set for flags and TOML (clamp soft knobs, reject
     // nonsensical ones)
@@ -378,10 +390,12 @@ fn print_usage() {
 USAGE:
   shptier run [--config configs/case_study_2.toml]
   shptier fleet [--streams M] [--docs N] [--k K] [--capacity C]
-                [--workers W] [--mode arbitrated|naive] [--config configs/fleet.toml]
+                [--workers W] [--mode arbitrated|naive]
+                [--family keep|migrate|auto] [--backend sim|fs:<root>]
+                [--config configs/fleet.toml]
   shptier engine [--streams M] [--docs N] [--k K] [--tiers 2..4]
                  [--capacity C] [--backend sim|fs:<root>] [--reconcile]
-                 [--config configs/engine.toml]
+                 [--family keep|migrate|auto] [--config configs/engine.toml]
   shptier exp --id <{}> [--quick] [--seed N]
   shptier optimize [--preset case-study-1|case-study-2]
   shptier validate [--quick]

@@ -16,7 +16,7 @@ mod shp_policies;
 
 pub use engine::{PlacementEngine, RunResult};
 pub use executor::{run_policy, run_policy_with_trace};
-pub use plan::PlacementPlan;
+pub use plan::{PlacementPlan, PlanFamily};
 pub use quota::{QuotaChangeover, QuotaChangeoverMigrate};
 pub use reactive::{AgeBasedDemotion, SkiRental};
 pub use shp_policies::{Changeover, ChangeoverMigrate, SingleTier};

@@ -1,5 +1,5 @@
 //! N-tier placement plans — the generalization of the paper's two-tier
-//! changeover rule.
+//! changeover rule, for both strategy families (keep and DO_MIGRATE).
 //!
 //! The paper's Algorithm C places "the first `r` documents in A, the rest
 //! in B". Over an ordered hierarchy of `m` tiers (hot → cold) the natural
@@ -8,44 +8,118 @@
 //! `cuts[j]` exceeds `i`, i.e. tier `j` owns the index band
 //! `[cuts[j−1], cuts[j])` (with `cuts[−1] = 0` and `cuts[m−1] = N`
 //! implicit). A two-tier plan `cuts = [r]` degenerates exactly to
-//! [`super::Changeover`] / [`super::QuotaChangeover`]; the optional
-//! `migrate` flag reproduces the DO_MIGRATE family in the two-tier case.
+//! [`super::Changeover`] / [`super::QuotaChangeover`].
+//!
+//! **Migrate schedules.** The paper's DO_MIGRATE family (Fig. 3) carries a
+//! per-boundary flag: when the stream reaches `i == cuts[j]` and
+//! `migrate[j]` is set, every one of the stream's residents still in tier
+//! `j` is bulk-demoted into the next colder tier — the *changeover
+//! demotion*. Flags cascade: with consecutive boundaries flagged, a
+//! document placed in the hottest band steps down one tier at each
+//! changeover it survives, ending in the coldest flagged-through tier.
+//! `cuts = [r]`, `migrate = [true]` reproduces
+//! [`super::ChangeoverMigrate`] / [`super::QuotaChangeoverMigrate`]
+//! exactly. The flag vector always has one entry per boundary — a
+//! mismatched arity is a construction error
+//! ([`PlacementPlan::from_cuts_migrate`]), not a silently dropped request
+//! (the old two-tier encoding used to mask the flag for >2 tiers).
 //!
 //! The closed-form machinery carries over band-by-band: expected writes
 //! into tier `j` are `W(cuts[j]) − W(cuts[j−1])` (harmonic sums, eq. 11),
-//! a survivor is read from tier `j` with probability `width_j / N`
-//! (the i.u.d. assumption behind eq. 15), and each band's rent is the
-//! integrated expected occupancy of the band. For `m = 2` the plan's
+//! a survivor is read from the band's *final* tier (its cascade target)
+//! with probability `width_j / N` (the i.u.d. assumption behind eq. 15),
+//! each changeover demotion moves the expected live residents of its tier
+//! (eq. 19 per boundary), and rent integrates the expected per-tier
+//! occupancy with the demotions folded in. For `m = 2` the plan's
 //! analytic cost delegates to [`crate::cost::expected_cost`] so the
 //! degenerate case is bit-identical with the pre-engine code paths.
 
 use crate::cost::{
-    expected_cost, expected_writes, optimal_cuts, CostModel, PerDocCosts, Strategy,
+    expected_cost, expected_writes, optimal_cuts_family, CostModel, PerDocCosts, Strategy,
 };
 use crate::storage::TierId;
 use anyhow::{bail, Result};
 
+/// Which strategy family a stream runs (the arbiter's plan-family
+/// dimension): the no-migration changeover, the DO_MIGRATE changeover
+/// (every boundary carries a changeover demotion), or the analytically
+/// cheaper of the two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanFamily {
+    /// No migration: residents stay where they were written (paper
+    /// eqs. 14–17).
+    #[default]
+    Keep,
+    /// Bulk-demote at every changeover boundary (paper eqs. 18–21,
+    /// Fig. 3 DO_MIGRATE) — the winner whenever rent dominates transport.
+    Migrate,
+    /// Per-stream choice: whichever family's closed-form optimum prices
+    /// cheaper under the stream's economics.
+    Auto,
+}
+
+impl PlanFamily {
+    /// Parse a config/CLI selector (`keep` | `migrate` | `auto`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "keep" => Ok(Self::Keep),
+            "migrate" => Ok(Self::Migrate),
+            "auto" => Ok(Self::Auto),
+            other => bail!("unknown plan family '{other}' (keep | migrate | auto)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Keep => "keep",
+            Self::Migrate => "migrate",
+            Self::Auto => "auto",
+        }
+    }
+}
+
 /// An N-tier proactive placement plan: nondecreasing changeover indices,
-/// one per tier boundary.
+/// one per tier boundary, each optionally carrying a changeover demotion.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlacementPlan {
     /// Changeover index per tier boundary (`len = num_tiers − 1`),
     /// nondecreasing, each in `[0, n]`.
     cuts: Vec<u64>,
+    /// Per-boundary DO_MIGRATE flag (`len = cuts.len()`): bulk-demote the
+    /// stream's residents of tier `j` into tier `j+1` at `i == cuts[j]`.
+    migrate: Vec<bool>,
     /// Stream length.
     n: u64,
     /// Retained-set size (top-K).
     k: u64,
-    /// Two-tier only: bulk-migrate all hot residents at `i == cuts[0]`
-    /// (the paper's DO_MIGRATE family). Ignored for `num_tiers > 2`.
-    migrate: bool,
 }
 
 impl PlacementPlan {
-    /// Validated construction from raw cuts.
+    /// Validated construction from raw cuts (keep family: no demotions).
     pub fn from_cuts(cuts: Vec<u64>, n: u64, k: u64) -> Result<Self> {
+        let migrate = vec![false; cuts.len()];
+        Self::from_cuts_migrate(cuts, migrate, n, k)
+    }
+
+    /// Validated construction from raw cuts plus a per-boundary migrate
+    /// schedule. `migrate.len()` must equal `cuts.len()` — asking for a
+    /// migration schedule that does not match the tier hierarchy is an
+    /// explicit error, never a silently dropped flag.
+    pub fn from_cuts_migrate(
+        cuts: Vec<u64>,
+        migrate: Vec<bool>,
+        n: u64,
+        k: u64,
+    ) -> Result<Self> {
         if cuts.is_empty() {
             bail!("placement plan needs at least one changeover index (two tiers)");
+        }
+        if migrate.len() != cuts.len() {
+            bail!(
+                "migrate schedule has {} flags for {} tier boundaries",
+                migrate.len(),
+                cuts.len()
+            );
         }
         if n == 0 || k == 0 || k > n {
             bail!("placement plan requires 0 < K <= N (got K={k}, N={n})");
@@ -60,29 +134,90 @@ impl PlacementPlan {
             }
             prev = c;
         }
-        Ok(Self { cuts, n, k, migrate: false })
+        Ok(Self { cuts, migrate, n, k })
     }
 
     /// The paper's two-tier changeover at `r` (no migration).
     pub fn two_tier(r: u64, n: u64, k: u64) -> Self {
-        Self { cuts: vec![r.min(n)], n, k: k.min(n).max(1), migrate: false }
+        Self {
+            cuts: vec![r.min(n)],
+            migrate: vec![false],
+            n,
+            k: k.min(n).max(1),
+        }
     }
 
     /// The paper's two-tier changeover-with-migration at `r`.
     pub fn two_tier_migrate(r: u64, n: u64, k: u64) -> Self {
-        Self { migrate: true, ..Self::two_tier(r, n, k) }
+        Self { migrate: vec![true], ..Self::two_tier(r, n, k) }
     }
 
-    /// Closed-form optimal plan for a tier hierarchy: each boundary's cut is
-    /// the two-tier optimum between its adjacent tiers
+    /// Set every boundary's changeover-demotion flag (the full DO_MIGRATE
+    /// cascade, builder-style).
+    pub fn with_migration(mut self) -> Self {
+        for f in self.migrate.iter_mut() {
+            *f = true;
+        }
+        self
+    }
+
+    /// Closed-form optimal keep-family plan for a tier hierarchy: each
+    /// boundary's cut is the two-tier optimum between its adjacent tiers
     /// ([`crate::cost::optimal_cuts`]), made nondecreasing by a running
     /// maximum (a document never returns to a hotter tier later in the
     /// stream). For two tiers this *is* `r*`.
     pub fn optimal(tier_costs: &[PerDocCosts], n: u64, k: u64, include_rent: bool) -> Self {
         assert!(tier_costs.len() >= 2, "need at least two tiers");
         let k = k.min(n).max(1);
-        let cuts = optimal_cuts(tier_costs, n, k, include_rent);
-        Self { cuts, n, k, migrate: false }
+        let cuts = optimal_cuts_family(tier_costs, n, k, include_rent, false);
+        let migrate = vec![false; cuts.len()];
+        Self { cuts, migrate, n, k }
+    }
+
+    /// Closed-form optimal migrate-family plan: per-boundary cuts from the
+    /// migration closed form (paper eq. 21 per adjacent pair), every
+    /// boundary carrying a changeover demotion. For two tiers this is the
+    /// paper's DO_MIGRATE optimum `r*` ([`crate::cost::optimal_r`] with
+    /// `migrate = true`).
+    pub fn optimal_migrate(
+        tier_costs: &[PerDocCosts],
+        n: u64,
+        k: u64,
+        include_rent: bool,
+    ) -> Self {
+        assert!(tier_costs.len() >= 2, "need at least two tiers");
+        let k = k.min(n).max(1);
+        let cuts = optimal_cuts_family(tier_costs, n, k, include_rent, true);
+        let migrate = vec![true; cuts.len()];
+        Self { cuts, migrate, n, k }
+    }
+
+    /// Closed-form optimal plan for a family: [`PlacementPlan::optimal`]
+    /// (keep), [`PlacementPlan::optimal_migrate`], or — for
+    /// [`PlanFamily::Auto`] — whichever of the two prices cheaper under
+    /// [`PlacementPlan::analytic_cost`].
+    pub fn optimal_family(
+        tier_costs: &[PerDocCosts],
+        n: u64,
+        k: u64,
+        include_rent: bool,
+        family: PlanFamily,
+    ) -> Self {
+        match family {
+            PlanFamily::Keep => Self::optimal(tier_costs, n, k, include_rent),
+            PlanFamily::Migrate => Self::optimal_migrate(tier_costs, n, k, include_rent),
+            PlanFamily::Auto => {
+                let keep = Self::optimal(tier_costs, n, k, include_rent);
+                let mig = Self::optimal_migrate(tier_costs, n, k, include_rent);
+                if mig.analytic_cost(tier_costs, include_rent)
+                    < keep.analytic_cost(tier_costs, include_rent)
+                {
+                    mig
+                } else {
+                    keep
+                }
+            }
+        }
     }
 
     pub fn num_tiers(&self) -> usize {
@@ -101,8 +236,28 @@ impl PlacementPlan {
         &self.cuts
     }
 
+    /// Per-boundary changeover-demotion flags (`len = num_tiers − 1`).
+    pub fn migrate_flags(&self) -> &[bool] {
+        &self.migrate
+    }
+
+    /// Whether boundary `j` carries a changeover demotion.
+    pub fn migrate_at(&self, boundary: usize) -> bool {
+        self.migrate.get(boundary).copied().unwrap_or(false)
+    }
+
+    /// Whether any boundary carries a changeover demotion.
     pub fn migrates(&self) -> bool {
-        self.migrate && self.num_tiers() == 2
+        self.migrate.iter().any(|&m| m)
+    }
+
+    /// The family this plan belongs to (migrate iff any boundary demotes).
+    pub fn family(&self) -> PlanFamily {
+        if self.migrates() {
+            PlanFamily::Migrate
+        } else {
+            PlanFamily::Keep
+        }
     }
 
     /// The two-tier changeover parameter (first cut) — the quantity
@@ -128,11 +283,32 @@ impl PlacementPlan {
         TierId(self.cuts.len())
     }
 
+    /// The tier where band `tier`'s survivors end the stream: the cascade
+    /// target through every consecutive demoting boundary that actually
+    /// fires mid-stream (a boundary with `cut == N` never fires — indices
+    /// stop at `N − 1`).
+    pub fn final_tier(&self, tier: TierId) -> TierId {
+        let mut q = tier.0;
+        while q < self.cuts.len() && self.migrate[q] && self.cuts[q] < self.n {
+            q += 1;
+        }
+        TierId(q)
+    }
+
     /// Peak simultaneous residents `tier` can see from this stream:
-    /// `min(band width, K)` (the live set is the current top-K, and only
-    /// band indices are ever written there).
+    /// `min(reachable index range, K)`. For a keep plan that range is the
+    /// tier's own band (only band indices are ever written there); a
+    /// migrate schedule additionally cascades every hotter band that
+    /// demotes into `tier`, so just before `tier`'s own boundary fires it
+    /// can hold all live documents with index below its band end — the
+    /// quota a capacitated middle tier must reserve for the bulk arrival.
     pub fn demand(&self, tier: TierId) -> u64 {
-        let (lo, hi) = self.band(tier);
+        let (_, hi) = self.band(tier);
+        let mut j = tier.0;
+        while j > 0 && self.migrate[j - 1] && self.cuts[j - 1] < self.n {
+            j -= 1;
+        }
+        let lo = if j == 0 { 0 } else { self.cuts[j - 1] };
         (hi - lo).min(self.k)
     }
 
@@ -152,12 +328,26 @@ impl PlacementPlan {
         self.cuts[tier.0] = lo + quota;
     }
 
+    /// Cap `boundary`'s cut (and every hotter cut, to preserve
+    /// monotonicity) at `max`. Used by the engine when re-arbitration
+    /// hands a session a new plan after one of its boundaries already
+    /// fired: a fired changeover must never re-open (indices past the
+    /// fired cut would otherwise place hot again with no second demotion
+    /// coming).
+    pub fn clamp_cut_at_most(&mut self, boundary: usize, max: u64) {
+        for c in self.cuts.iter_mut().take(boundary + 1) {
+            if *c > max {
+                *c = max;
+            }
+        }
+    }
+
     /// The degenerate two-tier [`Strategy`], if this is a two-tier plan.
     pub fn strategy(&self) -> Option<Strategy> {
         if self.num_tiers() != 2 {
             return None;
         }
-        Some(if self.migrate {
+        Some(if self.migrate[0] {
             Strategy::ChangeoverMigrate { r: self.cuts[0] }
         } else {
             Strategy::Changeover { r: self.cuts[0] }
@@ -167,9 +357,11 @@ impl PlacementPlan {
     /// Analytic expected total cost of running this plan over `tier_costs`.
     ///
     /// Two-tier plans delegate to [`crate::cost::expected_cost`] (exact
-    /// degenerate compatibility); N > 2 uses the band generalization:
-    /// harmonic write sums per band, `width/N` read split, and the
-    /// integrated expected band occupancy for rent.
+    /// degenerate compatibility, both families); N > 2 uses the band
+    /// generalization: harmonic write sums per band, `width/N` read split
+    /// against each band's cascade-final tier, one expected-resident
+    /// demotion charge per firing boundary, and integrated expected
+    /// per-tier occupancy for rent (demotions folded in).
     pub fn analytic_cost(&self, tier_costs: &[PerDocCosts], include_rent: bool) -> f64 {
         assert_eq!(tier_costs.len(), self.num_tiers(), "cost entries must match tiers");
         if self.num_tiers() == 2 {
@@ -186,12 +378,103 @@ impl PlacementPlan {
             // writes: harmonic band sum (paper eq. 11 per band)
             let w = expected_writes(hi, k) - expected_writes(lo, k);
             total += w * costs.write;
-            // reads: survivor lands in the band w.p. width/N (eq. 15 i.u.d.)
-            total += kf * ((hi - lo) as f64 / nf) * costs.read;
-            // rent: integrated expected occupancy of the band
-            if include_rent {
-                total += band_occupancy_time(lo, hi, n, k) * costs.rent_window;
+            // reads: survivor born in the band w.p. width/N (eq. 15
+            // i.u.d.), served by the band's cascade-final tier
+            let dest = self.final_tier(TierId(j));
+            total += kf * ((hi - lo) as f64 / nf) * tier_costs[dest.0].read;
+        }
+        total += self.transport_cost(tier_costs);
+        if include_rent {
+            total += if self.migrates() {
+                self.migrate_rent(tier_costs)
+            } else {
+                (0..tier_costs.len())
+                    .map(|j| {
+                        let (lo, hi) = self.band(TierId(j));
+                        band_occupancy_time(lo, hi, n, k) * tier_costs[j].rent_window
+                    })
+                    .sum::<f64>()
+            };
+        }
+        total
+    }
+
+    /// Expected $ of the changeover demotions (eq. 19 generalized): when
+    /// boundary `j` fires at `t = cuts[j]`, the stream's expected live
+    /// residents of tier `j` — `min(t, K) · mass_j / t` under the i.u.d.
+    /// assumption, where `mass_j` is the index measure that has cascaded
+    /// into tier `j` by then — each pay a source read plus a destination
+    /// write. Boundaries fire hot → cold, so co-located cuts cascade a
+    /// document through several hops in one step, exactly like the
+    /// executor.
+    fn transport_cost(&self, tier_costs: &[PerDocCosts]) -> f64 {
+        let n = self.n;
+        let k = self.k;
+        let mut mass = vec![0.0f64; self.num_tiers()];
+        let mut total = 0.0;
+        for j in 0..self.cuts.len() {
+            let (lo, hi) = self.band(TierId(j));
+            mass[j] += (hi - lo) as f64;
+            let t = self.cuts[j];
+            if self.migrate[j] && t > 0 && t < n && mass[j] > 0.0 {
+                let live = t.min(k) as f64;
+                let moved = live * mass[j] / t as f64;
+                total += moved * (tier_costs[j].read + tier_costs[j + 1].write);
+                mass[j + 1] += mass[j];
+                mass[j] = 0.0;
             }
+        }
+        total
+    }
+
+    /// Integrated expected rent of a migrate-schedule plan: segment the
+    /// stream at the distinct cut values; within a segment the fired
+    /// boundary set is fixed, so each completed band's live mass sits at a
+    /// fixed cascade target while the active band grows linearly. Uses
+    /// the same `min(t, K)/t` i.u.d. kernel as the no-migration occupancy
+    /// integral; with no flags set it reduces to exactly that integral.
+    fn migrate_rent(&self, tier_costs: &[PerDocCosts]) -> f64 {
+        let (n, k) = (self.n, self.k);
+        let nf = n as f64;
+        let m = self.num_tiers();
+        let mut bps: Vec<u64> =
+            self.cuts.iter().copied().filter(|&c| c > 0 && c < n).collect();
+        bps.push(n);
+        bps.sort_unstable();
+        bps.dedup();
+        let mut total = 0.0;
+        let mut lo_seg = 0u64;
+        for &hi_seg in &bps {
+            if hi_seg <= lo_seg {
+                continue;
+            }
+            // band owning [lo_seg, hi_seg): constant within the segment
+            let active = self.tier_for(lo_seg).0;
+            // completed bands sit at their cascade target (boundaries
+            // `< active` have all fired by lo_seg)
+            let mut mass = vec![0.0f64; m];
+            for j in 0..active {
+                let (blo, bhi) = self.band(TierId(j));
+                if bhi <= blo {
+                    continue;
+                }
+                let mut q = j;
+                while q < active && self.migrate[q] {
+                    q += 1;
+                }
+                mass[q] += (bhi - blo) as f64;
+            }
+            let f2 = int_min_tk_over_t(lo_seg as f64, hi_seg as f64, k);
+            let f1 = int_min_tk(lo_seg as f64, hi_seg as f64, k);
+            for (q, &mq) in mass.iter().enumerate() {
+                if mq > 0.0 {
+                    total += tier_costs[q].rent_window * mq * f2 / nf;
+                }
+            }
+            // the active band's live length is t − band_lo
+            let (band_lo, _) = self.band(TierId(active));
+            total += tier_costs[active].rent_window * (f1 - band_lo as f64 * f2) / nf;
+            lo_seg = hi_seg;
         }
         total
     }
@@ -257,8 +540,11 @@ mod tests {
         assert_eq!(p.band(TierId::B), (10, 100));
         assert_eq!(p.demand(TierId::A), 5); // min(10, K=5)
         assert_eq!(p.strategy(), Some(Strategy::Changeover { r: 10 }));
+        assert_eq!(p.family(), PlanFamily::Keep);
         let m = PlacementPlan::two_tier_migrate(10, 100, 5);
         assert!(m.migrates());
+        assert!(m.migrate_at(0));
+        assert_eq!(m.family(), PlanFamily::Migrate);
         assert_eq!(m.strategy(), Some(Strategy::ChangeoverMigrate { r: 10 }));
     }
 
@@ -274,6 +560,66 @@ mod tests {
         assert_eq!(p.tier_for(3), TierId(1));
         assert_eq!(p.tier_for(7), TierId(2));
         assert_eq!(p.band(TierId(1)), (3, 7));
+    }
+
+    #[test]
+    fn migrate_arity_mismatch_is_a_construction_error() {
+        // the old encoding silently masked the migrate flag beyond two
+        // tiers; a schedule that does not match the hierarchy now errors
+        assert!(PlacementPlan::from_cuts_migrate(vec![3, 7], vec![true], 10, 2).is_err());
+        assert!(
+            PlacementPlan::from_cuts_migrate(vec![3], vec![true, false], 10, 2).is_err()
+        );
+        let p =
+            PlacementPlan::from_cuts_migrate(vec![3, 7], vec![true, false], 10, 2).unwrap();
+        assert!(p.migrates());
+        assert!(p.migrate_at(0));
+        assert!(!p.migrate_at(1));
+        // and a >2-tier migrate schedule is honored, not dropped
+        assert_eq!(p.migrate_flags(), &[true, false]);
+    }
+
+    #[test]
+    fn final_tier_follows_the_cascade() {
+        let p = PlacementPlan::from_cuts_migrate(
+            vec![10, 40, 70],
+            vec![true, true, false],
+            100,
+            8,
+        )
+        .unwrap();
+        // band 0 cascades through both flagged boundaries into tier 2
+        assert_eq!(p.final_tier(TierId(0)), TierId(2));
+        assert_eq!(p.final_tier(TierId(1)), TierId(2));
+        assert_eq!(p.final_tier(TierId(2)), TierId(2));
+        assert_eq!(p.final_tier(TierId(3)), TierId(3));
+        // a boundary at N never fires: no cascade through it
+        let q = PlacementPlan::from_cuts_migrate(
+            vec![10, 100, 100],
+            vec![true, true, true],
+            100,
+            8,
+        )
+        .unwrap();
+        assert_eq!(q.final_tier(TierId(0)), TierId(1));
+    }
+
+    #[test]
+    fn demand_accounts_for_cascading_demotions() {
+        // keep plan: each tier's demand is its own band width capped at K
+        let keep = PlacementPlan::from_cuts(vec![30, 40], 100, 20).unwrap();
+        assert_eq!(keep.demand(TierId(1)), 10);
+        // migrate plan: tier 1 receives band 0's bulk demotion at i=30 —
+        // just before its own boundary it can hold every live document
+        // with index < 40, i.e. min(40, K) residents
+        let mig = keep.clone().with_migration();
+        assert_eq!(mig.demand(TierId(0)), 20); // min(30, K) unchanged
+        assert_eq!(mig.demand(TierId(1)), 20); // min(40, K), not min(10, K)
+        // a non-demoting hotter boundary breaks the cascade
+        let partial =
+            PlacementPlan::from_cuts_migrate(vec![30, 40], vec![false, true], 100, 20)
+                .unwrap();
+        assert_eq!(partial.demand(TierId(1)), 10);
     }
 
     #[test]
@@ -304,6 +650,17 @@ mod tests {
     }
 
     #[test]
+    fn clamp_cut_at_most_caps_the_prefix() {
+        let mut p = PlacementPlan::from_cuts(vec![10, 40, 60], 100, 30).unwrap();
+        p.clamp_cut_at_most(1, 25);
+        assert_eq!(p.cuts(), &[10, 25, 60]);
+        // a cap below a hotter cut pulls the whole prefix down (monotone)
+        let mut q = PlacementPlan::from_cuts(vec![30, 40, 60], 100, 30).unwrap();
+        q.clamp_cut_at_most(1, 20);
+        assert_eq!(q.cuts(), &[20, 20, 60]);
+    }
+
+    #[test]
     fn optimal_two_tier_matches_optimal_r() {
         let a = costs(1e-6, 1e-4, 0.0);
         let b = costs(5e-5, 1e-6, 0.0);
@@ -313,6 +670,34 @@ mod tests {
         // and the analytic cost agrees with the closed form exactly
         let want = expected_cost(&m, Strategy::Changeover { r: p.r() }).total();
         assert!((p.analytic_cost(&[a, b], false) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimal_migrate_two_tier_matches_optimal_r_migrate() {
+        // rent-dominated economics with an interior migrate optimum
+        let a = costs(0.0, 0.0, 7e-5);
+        let b = costs(5e-6, 5e-6, 5.4e-6);
+        let m = CostModel::new(100_000, 100, a, b);
+        let p = PlacementPlan::optimal_migrate(&[a, b], 100_000, 100, true);
+        assert!(p.migrates());
+        assert_eq!(p.r(), optimal_r(&m, true).r);
+        let want = expected_cost(&m, Strategy::ChangeoverMigrate { r: p.r() }).total();
+        assert!((p.analytic_cost(&[a, b], true) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimal_family_auto_picks_the_cheaper() {
+        // rent-dominated: migrate wins
+        let a = costs(0.0, 0.0, 1.2);
+        let b = costs(0.2, 0.01, 0.2);
+        let p = PlacementPlan::optimal_family(&[a, b], 2000, 32, true, PlanFamily::Auto);
+        assert!(p.migrates(), "auto must pick the migrate family here");
+        // transaction-dominated, rent excluded: keep wins (migration is a
+        // pure extra charge)
+        let a = costs(1e-6, 1e-4, 0.0);
+        let b = costs(5e-5, 1e-6, 0.0);
+        let q = PlacementPlan::optimal_family(&[a, b], 100_000, 100, false, PlanFamily::Auto);
+        assert!(!q.migrates(), "auto must pick the keep family here");
     }
 
     #[test]
@@ -342,6 +727,29 @@ mod tests {
     }
 
     #[test]
+    fn three_tier_migrate_transport_and_reads() {
+        // unit write in every tier, read free: transport = expected moved
+        // docs × (read_src + write_dst) = moved × 1
+        let w = [costs(1.0, 0.0, 0.0), costs(1.0, 0.0, 0.0), costs(1.0, 0.0, 0.0)];
+        let keep = PlacementPlan::from_cuts(vec![100, 400], 1000, 10).unwrap();
+        let mig = keep.clone().with_migration();
+        let extra = mig.analytic_cost(&w, false) - keep.analytic_cost(&w, false);
+        // boundary 0 at t=100: min(100,10)·100/100 = 10 docs; boundary 1
+        // at t=400: 10·400/400 = 10 docs; each hop pays the unit write
+        assert!((extra - 20.0).abs() < 1e-9, "transport extra = {extra}");
+        // reads: every band's survivor is served by the coldest tier (the
+        // final K reads cost 10 × 1), while each demotion hop pays its
+        // source read: 10 docs × $4 at boundary 0, 10 docs × $2 at
+        // boundary 1
+        let reads = [costs(0.0, 4.0, 0.0), costs(0.0, 2.0, 0.0), costs(0.0, 1.0, 0.0)];
+        let r = mig.analytic_cost(&reads, false);
+        assert!(
+            (r - (10.0 + 40.0 + 20.0)).abs() < 1e-9,
+            "sink reads + demotion reads: {r}"
+        );
+    }
+
+    #[test]
     fn three_tier_rent_is_bounded_by_k() {
         // unit rent everywhere: total resident doc-time ≤ K doc-windows
         let rents = [costs(0.0, 0.0, 1.0), costs(0.0, 0.0, 1.0), costs(0.0, 0.0, 1.0)];
@@ -349,6 +757,29 @@ mod tests {
         let rent = p.analytic_cost(&rents, true);
         assert!(rent > 0.0);
         assert!(rent <= 25.0 + 1e-9, "rent {rent} exceeds K doc-windows");
+        // a migrate schedule shuffles docs between tiers but conserves the
+        // total resident doc-time (unit rent everywhere → identical total)
+        let pm = p.clone().with_migration();
+        let rent_m = pm.analytic_cost(&rents, true);
+        assert!(
+            (rent - rent_m).abs() < 1e-9,
+            "unit-rent totals must agree: keep {rent} vs migrate {rent_m}"
+        );
+    }
+
+    #[test]
+    fn migrate_rent_moves_occupancy_to_colder_tiers() {
+        // rent only in the hot tier: demoting at the boundary must cut the
+        // bill vs keeping residents hot to the end
+        let rents = [costs(0.0, 0.0, 1.0), costs(0.0, 0.0, 0.0), costs(0.0, 0.0, 0.0)];
+        let keep = PlacementPlan::from_cuts(vec![100, 400], 1000, 10).unwrap();
+        let mig = keep.clone().with_migration();
+        let keep_rent = keep.analytic_cost(&rents, true);
+        let mig_rent = mig.analytic_cost(&rents, true);
+        assert!(
+            mig_rent < keep_rent,
+            "demotion must cut hot rent ({mig_rent} !< {keep_rent})"
+        );
     }
 
     #[test]
@@ -357,5 +788,14 @@ mod tests {
         // whole-stream band of a K=N stream: everything resident to the end
         let full = band_occupancy_time(0, 100, 100, 100);
         assert!((full - 50.0).abs() < 1e-9); // ∫ t dt / N = N/2
+    }
+
+    #[test]
+    fn plan_family_parses() {
+        assert_eq!(PlanFamily::parse("keep").unwrap(), PlanFamily::Keep);
+        assert_eq!(PlanFamily::parse("migrate").unwrap(), PlanFamily::Migrate);
+        assert_eq!(PlanFamily::parse("auto").unwrap(), PlanFamily::Auto);
+        assert!(PlanFamily::parse("chaos").is_err());
+        assert_eq!(PlanFamily::Migrate.label(), "migrate");
     }
 }

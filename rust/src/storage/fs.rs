@@ -98,6 +98,14 @@ pub struct FsBackend {
 }
 
 impl FsBackend {
+    /// Whether `root` already holds a write-ahead journal from a previous
+    /// backend instance. The fresh-root guards of the demo/fleet surfaces
+    /// use this (their stream and document ids restart at 0, so journaled
+    /// residents from an earlier run would collide).
+    pub fn has_journal(root: impl AsRef<Path>) -> bool {
+        root.as_ref().join(JOURNAL_FILE).exists()
+    }
+
     /// Open (or create) a backend rooted at `root` with one directory per
     /// tier. If `root` already holds a journal, the accounting state is
     /// rebuilt from it and the document files are reconciled; the declared

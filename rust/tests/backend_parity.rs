@@ -14,7 +14,7 @@
 use shptier::config::EngineDemoConfig;
 use shptier::cost::PerDocCosts;
 use shptier::engine::{reconcile_backends, Engine, SessionSpec, TierTopology};
-use shptier::policy::{MigrationOrder, PlacementPolicy};
+use shptier::policy::{MigrationOrder, PlacementPolicy, PlanFamily};
 use shptier::storage::{FsBackend, StorageBackend, StorageSim, TierId};
 use std::path::PathBuf;
 
@@ -147,6 +147,100 @@ fn doomed_migrate_all_is_noop_on_both_backends() {
         assert_eq!(b.resident_len(TierId::A), 0, "{name}");
         assert_eq!(b.resident_len(TierId::B), 6, "{name}");
     }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance (migrate-family scheduling): drive a migrate-family session
+/// past its changeover demotion on both backends, kill the engines
+/// mid-run (drop without settle/finish), emulate the crash window of the
+/// bulk migration on the FS root (the journal recorded `migall` but a
+/// document file never moved), and assert journal replay reconverges to
+/// the sim's residency and per-stream ledgers.
+#[test]
+fn killed_mid_bulk_migration_replays_to_sim_state() {
+    // rent-dominated two-tier economy: the DO_MIGRATE optimum is interior
+    // (r*/N = 0.4/1.9 ≈ 0.21), so the changeover demotion fires mid-run
+    let costs = vec![
+        PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 },
+        PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 },
+    ];
+    let root = scratch("migkill");
+    // Identical seeded run on a backend: stop 20 documents past the
+    // boundary and report (ledger total, stream-0 ledger, residency).
+    let run = |fs_root: Option<&PathBuf>| -> (f64, f64, usize, usize) {
+        let topo = TierTopology::two_tier(costs[0], costs[1])
+            .with_capacity(TierId::A, Some(16));
+        let mut builder = Engine::builder().topology(topo).charge_rent(true);
+        if let Some(root) = fs_root {
+            builder = builder
+                .backend(Box::new(FsBackend::open(root, costs.clone(), true).unwrap()));
+        }
+        let engine = builder.build().unwrap();
+        let mut s = engine
+            .open_stream(SessionSpec::new(300, 12).with_family(PlanFamily::Migrate))
+            .unwrap();
+        let r = s.plan().unwrap().r();
+        assert!(r > 12 && r < 280, "boundary must be interior (r={r})");
+        let mut rng = shptier::util::Rng::new(5);
+        for _ in 0..(r + 20) {
+            s.observe(rng.next_f64()).unwrap();
+        }
+        assert_eq!(
+            engine.resident_len(TierId::A),
+            0,
+            "the changeover demotion must have emptied the hot tier"
+        );
+        (
+            engine.ledger().total(),
+            engine.stream_ledger(s.id()).total(),
+            engine.resident_len(TierId::A),
+            engine.resident_len(TierId::B),
+        )
+        // engines dropped here without settle/finish: a process kill
+    };
+    let (sim_total, sim_stream, sim_hot, sim_cold) = run(None);
+    let (fs_total, fs_stream, fs_hot, fs_cold) = run(Some(&root));
+    assert!((sim_total - fs_total).abs() < 1e-9 * sim_total.max(1.0));
+    assert!((sim_stream - fs_stream).abs() < 1e-9 * sim_stream.max(1.0));
+    assert_eq!((sim_hot, sim_cold), (fs_hot, fs_cold));
+
+    // emulate the crash window inside the bulk migration: the journal
+    // holds the op, but one document's file never left the hot directory
+    let cold_dir = root.join("tier-1");
+    let moved = std::fs::read_dir(&cold_dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .find(|e| e.path().extension() == Some(std::ffi::OsStr::new("doc")))
+        .expect("a migrated document file exists");
+    let stale = root.join("tier-0").join(moved.file_name());
+    std::fs::rename(moved.path(), &stale).unwrap();
+
+    // reopen: replay + file reconciliation must reconverge to the sim
+    let reopened = FsBackend::open(&root, costs, true).unwrap();
+    let rec = reopened.recovery().expect("a journal was replayed");
+    assert!(rec.ops_replayed > 0);
+    assert!(
+        rec.files_recreated >= 1 && rec.files_removed >= 1,
+        "the torn file move must be repaired (recreated {}, removed {})",
+        rec.files_recreated,
+        rec.files_removed
+    );
+    assert_eq!(reopened.resident_len(TierId::A), sim_hot);
+    assert_eq!(reopened.resident_len(TierId::B), sim_cold);
+    assert!((reopened.ledger().total() - sim_total).abs() < 1e-9 * sim_total.max(1.0));
+    assert!(
+        (reopened.stream_ledger(0).total() - sim_stream).abs()
+            < 1e-9 * sim_stream.max(1.0)
+    );
+    // every rebuilt resident is backed by a real file in the right tier
+    for tier in [TierId::A, TierId::B] {
+        for r in reopened.residents(tier) {
+            let path =
+                root.join(format!("tier-{}", tier.0)).join(format!("{}.doc", r.doc));
+            assert!(path.exists(), "resident {} missing its file", r.doc);
+        }
+    }
+    assert!(!stale.exists(), "the stale hot copy must be reconciled away");
     let _ = std::fs::remove_dir_all(&root);
 }
 

@@ -11,13 +11,16 @@ fn every_experiment_id_runs_quick() {
         // fig7/fig8 need artifacts or fall back to the demo scorer; both ok.
         exp::run(id, 7, true).unwrap_or_else(|e| panic!("exp {id} failed: {e:#}"));
     }
-    // the figure experiments must have produced CSVs
+    // the figure/fleet experiments must have produced CSVs
     for csv in [
         "fig4_cost_vs_r.csv",
         "fig5_cost_vs_r.csv",
         "fig6_classifier.csv",
         "fig7_interestingness_trace.csv",
         "fig8_cumulative_writes.csv",
+        "fleet_capacity_sweep.csv",
+        "fleet_family.csv",
+        "fleet_staggered.csv",
     ] {
         assert!(dir.join(csv).exists(), "{csv} missing");
     }

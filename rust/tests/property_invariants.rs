@@ -3,11 +3,14 @@
 //! `propcheck` harness (proptest is not in the vendored crate set).
 
 use shptier::cost::{expected_cost, CostModel, PerDocCosts, Strategy};
+use shptier::engine::{
+    Arbiter, Engine, PlanAssignment, SessionSnapshot, SessionSpec, TierTopology,
+};
 use shptier::fleet::{run_fleet, FleetConfig, FleetMode, SeriesProfile, StreamSpec};
 use shptier::interestingness::extract;
 use shptier::policy::{
     run_policy, run_policy_with_trace, AgeBasedDemotion, Changeover, ChangeoverMigrate,
-    PlacementPolicy, SingleTier, SkiRental,
+    PlacementPlan, PlacementPolicy, PlanFamily, QuotaChangeoverMigrate, SingleTier, SkiRental,
 };
 use shptier::propcheck::{check, gens, Config};
 use shptier::serdes::{Json, TomlValue};
@@ -261,6 +264,7 @@ fn prop_fleet_ledger_conservation_and_capacity() {
             t_len: 32,
             seed: case.seed,
             mode: if case.naive { FleetMode::Naive } else { FleetMode::Arbitrated },
+            ..FleetConfig::default()
         };
         let report = run_fleet(&case.specs, &config).map_err(|e| e.to_string())?;
 
@@ -368,6 +372,286 @@ fn prop_toml_never_panics() {
         },
         |src| {
             let _ = TomlValue::parse(src); // must not panic
+            Ok(())
+        },
+    );
+}
+
+/// A test arbiter that pins every session to a fixed two-tier migrate
+/// plan with a fixed hot quota — the harness for the plan-family
+/// equivalence property (the engine otherwise only runs closed-form
+/// optima, which would not cover arbitrary (r, quota) draws).
+struct FixedMigratePlan {
+    r: u64,
+    quota: u64,
+}
+
+impl Arbiter for FixedMigratePlan {
+    fn name(&self) -> String {
+        "fixed-migrate".into()
+    }
+
+    fn arbitrate(
+        &self,
+        sessions: &[SessionSnapshot],
+        _topology: &TierTopology,
+    ) -> Vec<PlanAssignment> {
+        sessions
+            .iter()
+            .map(|s| {
+                let plan = PlacementPlan::two_tier_migrate(self.r, s.n, s.k);
+                PlanAssignment {
+                    id: s.id,
+                    family: PlanFamily::Migrate,
+                    unconstrained: plan.clone(),
+                    plan,
+                    demand: vec![0, 0],
+                    quota: vec![Some(self.quota), None],
+                    analytic_unconstrained: 0.0,
+                    analytic_budgeted: 0.0,
+                }
+            })
+            .collect()
+    }
+}
+
+#[derive(Debug)]
+struct MigrateEquivalenceCase {
+    scores: Vec<f64>,
+    k: u64,
+    r: u64,
+    quota: u64,
+    rent: bool,
+}
+
+fn migrate_equivalence_case(rng: &mut Rng) -> MigrateEquivalenceCase {
+    let scores = gens::score_vec(40, 300)(rng);
+    let n = scores.len() as u64;
+    let k = 1 + rng.next_below(n.min(12));
+    // Draw (r, quota) from the regimes the arbiter actually configures —
+    // `r ≤ quota` (the budget clamp) or `quota > min(r, K)` (demand
+    // fits). There the reference policy's one-step-conservative
+    // occupancy resync (see `policy::quota` docs) can never bind
+    // mid-step, so the two implementations must agree bit-for-bit.
+    // (`r > N` exercises the never-firing boundary, `r = 0` full
+    // degradation to the cold tier.)
+    let (r, quota) = if rng.next_below(2) == 0 {
+        let r = rng.next_below(n + 4); // may exceed N
+        let quota = r.min(n).min(k) + 1 + rng.next_below(4);
+        (r, quota)
+    } else {
+        let quota = rng.next_below(k + 3);
+        (rng.next_below(n + 4).min(quota), quota)
+    };
+    MigrateEquivalenceCase { scores, k, r, quota, rent: rng.next_below(2) == 1 }
+}
+
+/// Plan-family equivalence: an engine session running the N-tier migrate
+/// encoding with a single cut must be bit-compatible with the two-tier
+/// reference policy `QuotaChangeoverMigrate` — identical retained set,
+/// identical read trace, identical per-tier op counts, identical ledger
+/// totals — over seeded streams and arbitrary (r, quota) draws.
+#[test]
+fn prop_single_cut_migrate_plan_equals_quota_changeover_migrate() {
+    check(
+        "migrate-plan-equivalence",
+        cfg(40),
+        migrate_equivalence_case,
+        |case| {
+            let n = case.scores.len() as u64;
+            let mut rng = Rng::new(case.r * 131 + case.quota);
+            let m = model_for(n, case.k, &mut rng).with_rent(case.rent);
+
+            // reference: the quota-constrained two-tier migrate policy
+            let mut reference = QuotaChangeoverMigrate::new(case.r, case.quota as usize);
+            let want = run_policy(&case.scores, &m, &mut reference)
+                .map_err(|e| e.to_string())?;
+
+            // engine: plan mode with the pinned single-cut migrate plan
+            let engine = Engine::builder()
+                .topology(TierTopology::from_model(&m))
+                .charge_rent(m.include_rent)
+                .arbiter(Box::new(FixedMigratePlan { r: case.r, quota: case.quota }))
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut session = engine
+                .open_stream(SessionSpec::from_model(&m))
+                .map_err(|e| e.to_string())?;
+            for &s in &case.scores {
+                session.observe(s).map_err(|e| e.to_string())?;
+            }
+            engine.settle_rent(1.0).map_err(|e| e.to_string())?;
+            let got = session.finish().map_err(|e| e.to_string())?;
+            let ledger = engine.ledger();
+
+            if got.retained != want.retained {
+                return Err(format!(
+                    "retained diverged: {:?} vs {:?}",
+                    got.retained, want.retained
+                ));
+            }
+            if got.read_from != want.read_from {
+                return Err(format!(
+                    "read trace diverged: {:?} vs {:?}",
+                    got.read_from, want.read_from
+                ));
+            }
+            for t in [TierId::A, TierId::B] {
+                let (a, b) = (ledger.tier(t), want.ledger.tier(t));
+                if a.writes != b.writes || a.reads != b.reads || a.deletes != b.deletes {
+                    return Err(format!(
+                        "tier {t:?} action trace diverged: \
+                         {}/{}/{} vs {}/{}/{} (w/r/d)",
+                        a.writes, a.reads, a.deletes, b.writes, b.reads, b.deletes
+                    ));
+                }
+                if a.migration_ops != b.migration_ops {
+                    return Err(format!(
+                        "tier {t:?} migration ops {} vs {}",
+                        a.migration_ops, b.migration_ops
+                    ));
+                }
+            }
+            let (total, want_total) = (ledger.total(), want.ledger.total());
+            if (total - want_total).abs() > 1e-9 * want_total.abs().max(1.0) {
+                return Err(format!("ledger totals diverged: {total} vs {want_total}"));
+            }
+            let (mig, want_mig) =
+                (ledger.migration_total(), want.ledger.migration_total());
+            if (mig - want_mig).abs() > 1e-9 * want_mig.abs().max(1.0) {
+                return Err(format!("migration totals diverged: {mig} vs {want_mig}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug)]
+struct DemotionConservationCase {
+    tiers: usize,
+    /// Per-session (n, k, family).
+    sessions: Vec<(u64, u64, PlanFamily)>,
+    hot_capacity: usize,
+    rent: bool,
+    schedule_seed: u64,
+}
+
+fn demotion_conservation_case(rng: &mut Rng) -> DemotionConservationCase {
+    let tiers = 2 + rng.next_below(3) as usize;
+    let m = 2 + rng.next_below(3) as usize;
+    let sessions = (0..m)
+        .map(|_| {
+            let n = 40 + rng.next_below(120);
+            let k = 1 + rng.next_below(8).min(n - 1);
+            let family = match rng.next_below(3) {
+                0 => PlanFamily::Keep,
+                1 => PlanFamily::Migrate,
+                _ => PlanFamily::Auto,
+            };
+            (n, k, family)
+        })
+        .collect();
+    DemotionConservationCase {
+        tiers,
+        sessions,
+        hot_capacity: 1 + rng.next_below(10) as usize,
+        rent: rng.next_below(2) == 1,
+        schedule_seed: rng.next_u64(),
+    }
+}
+
+/// Conservation across bulk demotions: for random topologies, plan
+/// families, and interleavings, no document is ever lost or
+/// double-resident — after every observation the backend holds exactly
+/// `Σ min(observed_s, K_s)` documents (the sim's `put` rejects double
+/// residency, so a cascade bug surfaces as an error, and the count
+/// catches losses); at the end every session reads its full top-K and
+/// the ledger conserves.
+#[test]
+fn prop_no_doc_lost_or_duplicated_across_bulk_demotions() {
+    check(
+        "bulk-demotion-conservation",
+        cfg(12),
+        demotion_conservation_case,
+        |case| {
+            let mut rng = Rng::new(case.schedule_seed);
+            // random rent-bearing economics, hotter tiers dearer to rent
+            // so migrate boundaries land at interior cuts often enough
+            let costs: Vec<PerDocCosts> = (0..case.tiers)
+                .map(|t| PerDocCosts {
+                    write: rng.range_f64(0.0, 2.0),
+                    read: rng.range_f64(0.0, 2.0),
+                    rent_window: rng.range_f64(0.0, 2.0) * (case.tiers - t) as f64,
+                })
+                .collect();
+            let mut topo = TierTopology::from_costs(costs).map_err(|e| e.to_string())?;
+            topo = topo.with_capacity(TierId(0), Some(case.hot_capacity));
+            if case.tiers > 2 {
+                topo = topo.with_capacity(TierId(1), Some(case.hot_capacity * 3));
+            }
+            let capacities = topo.capacities();
+            let engine = Engine::builder()
+                .topology(topo)
+                .charge_rent(case.rent)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut live = Vec::new();
+            for &(n, k, family) in &case.sessions {
+                let spec = SessionSpec::new(n, k).with_rent(case.rent).with_family(family);
+                live.push(engine.open_stream(spec).map_err(|e| e.to_string())?);
+            }
+            let expected_resident = |live: &[shptier::engine::StreamSession]| -> u64 {
+                live.iter()
+                    .zip(case.sessions.iter())
+                    .map(|(s, &(n, k, _))| s.observed().min(n).min(k))
+                    .sum()
+            };
+            loop {
+                let open: Vec<usize> = (0..live.len())
+                    .filter(|&i| !live[i].done())
+                    .collect();
+                if open.is_empty() {
+                    break;
+                }
+                let pick = open[rng.next_below(open.len() as u64) as usize];
+                live[pick].observe(rng.next_f64()).map_err(|e| e.to_string())?;
+                // conservation: every accepted document resident exactly once
+                let total: usize =
+                    (0..case.tiers).map(|t| engine.resident_len(TierId(t))).sum();
+                let want = expected_resident(&live);
+                if total as u64 != want {
+                    return Err(format!(
+                        "resident count {total} != expected {want} after a step"
+                    ));
+                }
+            }
+            // capacity held throughout (bulk demotions must respect it)
+            for (t, cap) in capacities.iter().enumerate() {
+                if let Some(c) = cap {
+                    let peak = engine.peak_occupancy(TierId(t));
+                    if peak > *c {
+                        return Err(format!("tier {t} peak {peak} > capacity {c}"));
+                    }
+                }
+            }
+            engine.settle_rent(1.0).map_err(|e| e.to_string())?;
+            let mut ids = Vec::new();
+            for (s, &(n, k, _)) in live.into_iter().zip(case.sessions.iter()) {
+                ids.push(s.id());
+                let out = s.finish().map_err(|e| e.to_string())?;
+                if out.retained.len() as u64 != k.min(n) {
+                    return Err(format!(
+                        "retained {} != K {}",
+                        out.retained.len(),
+                        k.min(n)
+                    ));
+                }
+            }
+            let total = engine.ledger().total();
+            let split: f64 = ids.iter().map(|&id| engine.stream_ledger(id).total()).sum();
+            if (total - split).abs() > 1e-6 * total.abs().max(1.0) {
+                return Err(format!("conservation violated: ${total} != Σ ${split}"));
+            }
             Ok(())
         },
     );
