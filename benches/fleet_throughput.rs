@@ -17,6 +17,7 @@
 
 use shptier::benchkit::{BenchResult, Bencher};
 use shptier::cost::hot_demand;
+use shptier::engine::BackendSpec;
 use shptier::fleet::{demo_fleet, run_fleet, FleetConfig, FleetMode};
 use shptier::serdes::Json;
 use std::collections::BTreeMap;
@@ -64,6 +65,41 @@ fn main() {
         b.bench(&format!("fleet_scaling/streams=16,workers={w}"), total16, || {
             run_fleet(&specs16, &cfg).unwrap().docs_processed
         });
+    }
+
+    // ---- substrate overhead: one small fleet per StorageBackend ----------
+    // (sim = accounting only; fs = files + WAL; obj = request-counted
+    // keyspace + manifest log). Durable roots are fresh per iteration —
+    // the fleet surface refuses stale journals — but their removal is
+    // deferred until after the bench so the timed body measures backend
+    // work, not directory cleanup.
+    let specs4 = demo_fleet(4, 200, 8, true, 1);
+    let total4: u64 = specs4.iter().map(|s| s.model.n).sum();
+    let cap4 = contended_capacity(&specs4);
+    let mut used_roots: Vec<std::path::PathBuf> = Vec::new();
+    for backend in ["sim", "fs", "obj"] {
+        let specs = specs4.clone();
+        let roots = &mut used_roots;
+        b.bench(&format!("fleet_backend/streams=4,backend={backend}"), total4, || {
+            let mut cfg = fleet_config(1, cap4);
+            cfg.backend = match backend {
+                "fs" => {
+                    let root = shptier::util::scratch_dir("bench-fs");
+                    roots.push(root.clone());
+                    BackendSpec::Fs { root }
+                }
+                "obj" => {
+                    let root = shptier::util::scratch_dir("bench-obj");
+                    roots.push(root.clone());
+                    BackendSpec::Obj { root }
+                }
+                _ => BackendSpec::Sim,
+            };
+            run_fleet(&specs, &cfg).unwrap().docs_processed
+        });
+    }
+    for root in used_roots {
+        let _ = std::fs::remove_dir_all(root);
     }
 
     report_scaling(b.results());

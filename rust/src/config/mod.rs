@@ -205,7 +205,8 @@ impl LaunchConfig {
 /// hot_capacity = 64        # omit → half the aggregate analytic demand
 /// mode = "arbitrated"      # arbitrated | naive
 /// family = "keep"          # keep | migrate | auto (strategy family)
-/// backend = "sim"          # sim | fs:<root>  (fresh root, ADR-003)
+/// backend = "sim"          # sim | fs:<root> | obj:<root>  (fresh root;
+///                          #   ADR-003 fs, ADR-005 object store)
 /// seed = 7
 /// t_len = 256
 /// batch = 16
@@ -332,7 +333,8 @@ impl FleetLaunchConfig {
 /// hot_capacity = 16        # hottest-tier slots (0 → half aggregate demand)
 /// seed = 7
 /// close_percent = 50       # close session 0 after this % of its stream
-/// backend = "sim"          # sim | fs:<root>  (real-FS backend, ADR-003)
+/// backend = "sim"          # sim | fs:<root> | obj:<root>
+///                          #   (fs = ADR-003, object store = ADR-005)
 /// family = "keep"          # keep | migrate | auto (strategy family)
 /// ```
 #[derive(Debug, Clone)]
@@ -346,8 +348,8 @@ pub struct EngineDemoConfig {
     pub seed: u64,
     /// Percentage of session 0's stream after which it closes mid-run.
     pub close_percent: u64,
-    /// Storage backend selector: `sim` or `fs:<root>` (see
-    /// [`crate::engine::BackendSpec::parse`]).
+    /// Storage backend selector: `sim`, `fs:<root>`, or `obj:<root>`
+    /// (see [`crate::engine::BackendSpec::parse`]).
     pub backend: String,
     /// Strategy family the demo sessions run (keep | migrate | auto).
     pub family: PlanFamily,
@@ -592,6 +594,9 @@ heterogeneous = false
         assert_eq!(c.config.family, PlanFamily::Migrate);
         assert!(matches!(c.config.backend, crate::engine::BackendSpec::Fs { .. }));
         assert!(c.specs.iter().all(|s| s.model.include_rent));
+        // the object-store backend parses through the same selector
+        let o = FleetLaunchConfig::from_toml("[fleet]\nbackend = \"obj:/tmp/b\"\n").unwrap();
+        assert!(matches!(o.config.backend, crate::engine::BackendSpec::Obj { .. }));
         // defaults stay keep/sim/demo
         let d = FleetLaunchConfig::from_toml("").unwrap();
         assert_eq!(d.config.family, PlanFamily::Keep);
@@ -599,6 +604,7 @@ heterogeneous = false
         // bad selectors are rejected with the config spelling
         assert!(FleetLaunchConfig::from_toml("[fleet]\nfamily = \"x\"\n").is_err());
         assert!(FleetLaunchConfig::from_toml("[fleet]\nbackend = \"s3\"\n").is_err());
+        assert!(FleetLaunchConfig::from_toml("[fleet]\nbackend = \"obj:\"\n").is_err());
         assert!(
             FleetLaunchConfig::from_toml("[fleet.workload]\neconomy = \"x\"\n").is_err()
         );
@@ -651,7 +657,11 @@ heterogeneous = false
         let c =
             EngineDemoConfig::from_toml("[engine]\nbackend = \"fs:/tmp/shptier\"\n").unwrap();
         assert_eq!(c.backend, "fs:/tmp/shptier");
+        let c =
+            EngineDemoConfig::from_toml("[engine]\nbackend = \"obj:/tmp/shp\"\n").unwrap();
+        assert_eq!(c.backend, "obj:/tmp/shp");
         assert!(EngineDemoConfig::from_toml("[engine]\nbackend = \"s3\"\n").is_err());
         assert!(EngineDemoConfig::from_toml("[engine]\nbackend = \"fs:\"\n").is_err());
+        assert!(EngineDemoConfig::from_toml("[engine]\nbackend = \"obj:\"\n").is_err());
     }
 }

@@ -5,11 +5,11 @@
 //! capacity) used to live inside the CLI. It is a library routine now so
 //! three callers share one code path:
 //!
-//! - `shptier engine [--backend sim|fs:<root>]` (the CLI),
-//! - the sim ↔ fs **reconciliation harness** ([`reconcile_backends`]):
-//!   the same seeded demo runs against [`crate::storage::StorageSim`] and
-//!   [`FsBackend`], and the per-stream ledger totals must agree to within
-//!   rounding,
+//! - `shptier engine [--backend sim|fs:<root>|obj:<root>]` (the CLI),
+//! - the **reconciliation harness** ([`reconcile_backends`]): the same
+//!   seeded demo runs against [`crate::storage::StorageSim`] and a
+//!   durable backend ([`FsBackend`] or [`ObjectBackend`]), and the
+//!   per-stream ledger totals must agree to within rounding,
 //! - the integration tests (`rust/tests/backend_parity.rs`).
 //!
 //! Determinism contract: given one [`EngineDemoConfig`], every backend
@@ -19,10 +19,11 @@
 
 use super::{Engine, SessionSpec, TierOvercommit, TierTopology};
 use crate::config::EngineDemoConfig;
+use crate::cost::PerDocCosts;
 use crate::policy::PlacementPlan;
-use crate::storage::{FsBackend, TierId};
+use crate::storage::{FsBackend, ObjectBackend, StorageBackend, TierId};
 use anyhow::{bail, Result};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 /// Which [`crate::storage::StorageBackend`] the demo engine runs over.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -32,25 +33,99 @@ pub enum BackendSpec {
     Sim,
     /// The real-filesystem backend rooted at `root` (ADR-003).
     Fs { root: PathBuf },
+    /// The S3-style object-store backend rooted at `root` (ADR-005).
+    Obj { root: PathBuf },
 }
 
+const BACKEND_GRAMMAR: &str = "`sim`, `fs:<root>`, or `obj:<root>`";
+
 impl BackendSpec {
-    /// Parse a CLI / TOML selector: `sim` or `fs:<root>`.
+    /// Parse a CLI / TOML selector: `sim`, `fs:<root>`, or `obj:<root>`.
+    /// Malformed and unknown specs are rejected here, with the fix
+    /// spelled out — not discovered later by a runtime root check.
     pub fn parse(s: &str) -> Result<Self> {
         if s == "sim" {
             return Ok(Self::Sim);
         }
-        match s.strip_prefix("fs:") {
-            Some(root) if !root.is_empty() => Ok(Self::Fs { root: PathBuf::from(root) }),
-            _ => bail!("unknown backend '{s}' (expected `sim` or `fs:<root>`)"),
+        if let Some((scheme, root)) = s.split_once(':') {
+            let spec = match scheme {
+                "fs" => Self::Fs { root: PathBuf::from(root) },
+                "obj" => Self::Obj { root: PathBuf::from(root) },
+                "sim" => bail!(
+                    "backend 'sim' takes no root (got '{s}'); write plain `sim`"
+                ),
+                other => bail!(
+                    "unknown backend scheme '{other}:' in '{s}' (expected {BACKEND_GRAMMAR})"
+                ),
+            };
+            if root.is_empty() {
+                bail!(
+                    "backend '{s}' is missing its root directory \
+                     (expected `{scheme}:<root>`, e.g. `{scheme}:/tmp/tiers`)"
+                );
+            }
+            if root.chars().all(char::is_whitespace) {
+                bail!("backend '{s}' has a blank root directory");
+            }
+            return Ok(spec);
         }
+        bail!("unknown backend '{s}' (expected {BACKEND_GRAMMAR})")
     }
 
     pub fn label(&self) -> String {
         match self {
             Self::Sim => "sim".into(),
             Self::Fs { root } => format!("fs:{}", root.display()),
+            Self::Obj { root } => format!("obj:{}", root.display()),
         }
+    }
+
+    /// Whether the spec's root already holds durable state (a journal /
+    /// manifest log) from a previous run. Always false for `sim`.
+    pub fn has_state(&self) -> bool {
+        match self {
+            Self::Sim => false,
+            Self::Fs { root } => FsBackend::has_journal(root),
+            Self::Obj { root } => ObjectBackend::has_manifest(root),
+        }
+    }
+
+    /// The shared fresh-root guard: demo/fleet surfaces restart their
+    /// stream and document ids at 0 every run, so residents journaled by
+    /// a previous run would collide with this one's.
+    pub fn ensure_fresh(&self, surface: &str) -> Result<()> {
+        if self.has_state() {
+            bail!(
+                "{surface} needs a fresh {} root, but {} already holds a \
+                 journal from a previous run (stream/document ids restart \
+                 at 0 and would collide with the journaled residents) — \
+                 point it at an empty directory",
+                match self {
+                    Self::Obj { .. } => "object-store",
+                    _ => "fs",
+                },
+                self.label()
+            );
+        }
+        Ok(())
+    }
+
+    /// Open the durable backend this spec names over a fresh root (`None`
+    /// for `sim` — the engine builder constructs its own simulator).
+    pub fn open_fresh(
+        &self,
+        costs: Vec<PerDocCosts>,
+        charge_rent: bool,
+        surface: &str,
+    ) -> Result<Option<Box<dyn StorageBackend>>> {
+        self.ensure_fresh(surface)?;
+        Ok(match self {
+            Self::Sim => None,
+            Self::Fs { root } => Some(Box::new(FsBackend::open(root, costs, charge_rent)?)),
+            Self::Obj { root } => {
+                Some(Box::new(ObjectBackend::open(root, costs, charge_rent)?))
+            }
+        })
     }
 }
 
@@ -96,12 +171,13 @@ impl EngineDemoReport {
 }
 
 /// Run the seeded engine demo against the given backend. `demo` must be
-/// normalized ([`EngineDemoConfig::normalized`]); for `fs` backends the
-/// root is created on demand and must be fresh (no journal): the demo's
-/// session ids — and therefore its namespaced document ids — restart at
-/// 0 every run, so residents journaled by a previous run would collide
-/// with this one's. Use the `FsBackend` API directly (or the
-/// `backend_parity` tests) to exercise journal recovery.
+/// normalized ([`EngineDemoConfig::normalized`]); for durable backends
+/// (`fs:`/`obj:`) the root is created on demand and must be fresh (no
+/// journal): the demo's session ids — and therefore its namespaced
+/// document ids — restart at 0 every run, so residents journaled by a
+/// previous run would collide with this one's. Use the `FsBackend` /
+/// `ObjectBackend` APIs directly (or the `backend_parity` tests) to
+/// exercise journal recovery.
 pub fn run_engine_demo(
     demo: &EngineDemoConfig,
     backend: &BackendSpec,
@@ -127,23 +203,11 @@ pub fn run_engine_demo(
     let capacities = topology.capacities();
 
     let mut events = Vec::new();
-    let builder = Engine::builder().topology(topology).charge_rent(false);
-    let engine = match backend {
-        BackendSpec::Sim => builder.build()?,
-        BackendSpec::Fs { root } => {
-            if FsBackend::has_journal(root) {
-                bail!(
-                    "engine demo needs a fresh fs root, but {} already holds a \
-                     journal from a previous run (demo session/document ids \
-                     restart at 0 and would collide with the journaled \
-                     residents) — point --backend fs: at an empty directory",
-                    root.display()
-                );
-            }
-            let fs = FsBackend::open(root, costs.clone(), false)?;
-            builder.backend(Box::new(fs)).build()?
-        }
-    };
+    let mut builder = Engine::builder().topology(topology).charge_rent(false);
+    if let Some(durable) = backend.open_fresh(costs.clone(), false, "engine demo")? {
+        builder = builder.backend(durable);
+    }
+    let engine = builder.build()?;
 
     events.push(format!(
         "engine demo: {} sessions × {} docs (K={}), {} tiers, hot capacity {} \
@@ -269,14 +333,15 @@ pub fn run_engine_demo(
     })
 }
 
-/// Outcome of a sim ↔ fs reconciliation run.
+/// Outcome of a sim ↔ durable-backend reconciliation run.
 #[derive(Debug, Clone)]
 pub struct ReconcileReport {
     pub sim: EngineDemoReport,
-    pub fs: EngineDemoReport,
-    /// Largest |sim − fs| across per-stream totals ($).
+    /// The durable side (`fs:` or `obj:`).
+    pub other: EngineDemoReport,
+    /// Largest |sim − other| across per-stream totals ($).
     pub max_stream_delta: f64,
-    /// |sim − fs| of the engine-wide totals ($).
+    /// |sim − other| of the engine-wide totals ($).
     pub total_delta: f64,
 }
 
@@ -284,56 +349,56 @@ pub struct ReconcileReport {
 const PARITY_TOL: f64 = 1e-9;
 
 /// Run the same seeded demo against [`crate::storage::StorageSim`] and
-/// [`FsBackend`] (rooted at `fs_root`, which must not already hold a
-/// journal) and assert ledger parity: the engine-wide total and every
-/// per-stream total must agree to within rounding. Errors spell out the
-/// first divergence.
+/// the durable backend `other` names (`fs:`/`obj:` over a fresh root) and
+/// assert ledger parity: the engine-wide total and every per-stream total
+/// must agree to within rounding. Errors spell out the first divergence.
 pub fn reconcile_backends(
     demo: &EngineDemoConfig,
-    fs_root: &Path,
+    other: &BackendSpec,
 ) -> Result<ReconcileReport> {
-    if FsBackend::has_journal(fs_root) {
-        bail!(
-            "reconciliation needs a fresh fs root, but {} already holds a journal",
-            fs_root.display()
-        );
+    if matches!(other, BackendSpec::Sim) {
+        bail!("reconciliation compares sim against a durable backend; pass fs:<root> or obj:<root>");
     }
+    other.ensure_fresh("reconciliation")?;
     let sim = run_engine_demo(demo, &BackendSpec::Sim)?;
-    let fs = run_engine_demo(demo, &BackendSpec::Fs { root: fs_root.to_path_buf() })?;
+    let other = run_engine_demo(demo, other)?;
 
     let scale = sim.total.abs().max(1.0);
-    let total_delta = (sim.total - fs.total).abs();
+    let total_delta = (sim.total - other.total).abs();
     if total_delta > PARITY_TOL * scale {
         bail!(
-            "ledger parity violated: sim total ${:.6} vs fs total ${:.6}",
+            "ledger parity violated: sim total ${:.6} vs {} total ${:.6}",
             sim.total,
-            fs.total
+            other.backend,
+            other.total
         );
     }
-    if sim.rows.len() != fs.rows.len() {
+    if sim.rows.len() != other.rows.len() {
         bail!(
-            "session count diverged: sim ran {} sessions, fs ran {}",
+            "session count diverged: sim ran {} sessions, {} ran {}",
             sim.rows.len(),
-            fs.rows.len()
+            other.backend,
+            other.rows.len()
         );
     }
     let mut max_stream_delta = 0.0f64;
-    for (s, f) in sim.rows.iter().zip(fs.rows.iter()) {
-        if s.id != f.id {
-            bail!("session id order diverged: sim {} vs fs {}", s.id, f.id);
+    for (s, o) in sim.rows.iter().zip(other.rows.iter()) {
+        if s.id != o.id {
+            bail!("session id order diverged: sim {} vs {}", s.id, o.id);
         }
-        let delta = (s.measured - f.measured).abs();
+        let delta = (s.measured - o.measured).abs();
         if delta > PARITY_TOL * s.measured.abs().max(1.0) {
             bail!(
-                "stream {} parity violated: sim ${:.6} vs fs ${:.6}",
+                "stream {} parity violated: sim ${:.6} vs {} ${:.6}",
                 s.id,
                 s.measured,
-                f.measured
+                other.backend,
+                o.measured
             );
         }
         max_stream_delta = max_stream_delta.max(delta);
     }
-    Ok(ReconcileReport { sim, fs, max_stream_delta, total_delta })
+    Ok(ReconcileReport { sim, other, max_stream_delta, total_delta })
 }
 
 #[cfg(test)]
@@ -347,8 +412,57 @@ mod tests {
             BackendSpec::parse("fs:/tmp/x").unwrap(),
             BackendSpec::Fs { root: PathBuf::from("/tmp/x") }
         );
-        assert!(BackendSpec::parse("fs:").is_err());
-        assert!(BackendSpec::parse("s3://bucket").is_err());
+        assert_eq!(
+            BackendSpec::parse("obj:/tmp/buckets").unwrap(),
+            BackendSpec::Obj { root: PathBuf::from("/tmp/buckets") }
+        );
         assert_eq!(BackendSpec::parse("fs:/a/b").unwrap().label(), "fs:/a/b");
+        assert_eq!(BackendSpec::parse("obj:/a/b").unwrap().label(), "obj:/a/b");
+    }
+
+    /// The satellite fix: malformed and unknown specs fail at parse time
+    /// with the fix spelled out — not at run time via the root guard.
+    #[test]
+    fn backend_spec_rejects_malformed_specs_with_actionable_errors() {
+        let err = |s: &str| format!("{:#}", BackendSpec::parse(s).unwrap_err());
+        // missing roots name the grammar and an example
+        assert!(err("fs:").contains("missing its root"), "{}", err("fs:"));
+        assert!(err("fs:").contains("fs:/tmp/tiers"), "{}", err("fs:"));
+        assert!(err("obj:").contains("obj:/tmp/tiers"), "{}", err("obj:"));
+        // blank root
+        assert!(err("obj:   ").contains("blank root"), "{}", err("obj:   "));
+        // unknown schemes name themselves and the valid set
+        assert!(err("s3://bucket").contains("unknown backend scheme 's3:'"));
+        assert!(err("s3://bucket").contains("obj:<root>"));
+        assert!(err("http:x").contains("unknown backend scheme"));
+        // sim takes no root
+        assert!(err("sim:/tmp/x").contains("takes no root"));
+        // bare unknown words still list the grammar
+        assert!(err("objectstore").contains("expected"));
+        assert!(err("").contains("expected"));
+    }
+
+    #[test]
+    fn fresh_root_guard_covers_both_durable_backends() {
+        use crate::storage::{FsBackend, ObjectBackend};
+        let fs_root = crate::util::scratch_dir("spec-fresh-fs");
+        let obj_root = crate::util::scratch_dir("spec-fresh-obj");
+        let fs_spec = BackendSpec::Fs { root: fs_root.clone() };
+        let obj_spec = BackendSpec::Obj { root: obj_root.clone() };
+        assert!(!fs_spec.has_state());
+        assert!(!obj_spec.has_state());
+        assert!(fs_spec.ensure_fresh("test").is_ok());
+        let costs = vec![
+            crate::cost::PerDocCosts { write: 1.0, read: 1.0, rent_window: 0.0 },
+            crate::cost::PerDocCosts { write: 2.0, read: 0.5, rent_window: 0.0 },
+        ];
+        drop(FsBackend::open(&fs_root, costs.clone(), false).unwrap());
+        drop(ObjectBackend::open(&obj_root, costs, false).unwrap());
+        assert!(fs_spec.has_state());
+        assert!(obj_spec.has_state());
+        let msg = format!("{:#}", obj_spec.ensure_fresh("the demo").unwrap_err());
+        assert!(msg.contains("the demo") && msg.contains("empty directory"), "{msg}");
+        let _ = std::fs::remove_dir_all(&fs_root);
+        let _ = std::fs::remove_dir_all(&obj_root);
     }
 }

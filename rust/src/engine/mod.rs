@@ -47,8 +47,13 @@
 //! The default backend is the in-memory [`StorageSim`]; pass
 //! [`crate::storage::FsBackend`] to [`EngineBuilder::backend`] to place
 //! real files on real tier directories (`shptier engine --backend
-//! fs:<root>`), with ledger parity checked by
-//! [`demo::reconcile_backends`].
+//! fs:<root>`), or [`crate::storage::ObjectBackend`] for the S3-style
+//! keyspace (`--backend obj:<root>`, ADR-005 — bucket per tier, flat
+//! keys, request-counted verbs), with ledger parity against the sim
+//! checked by [`demo::reconcile_backends`]. Durable backends journal
+//! every operation; [`Engine::checkpoint`] snapshots residency + ledgers
+//! and compacts the journal so long-running deployments replay live
+//! state, not history.
 
 pub mod arbiter;
 pub mod demo;
@@ -401,6 +406,22 @@ impl Engine {
     /// Fallible: durable backends journal the settlement.
     pub fn settle_rent(&self, at: f64) -> Result<()> {
         lock_shared(&self.shared).backend.settle_rent(at)
+    }
+
+    /// Checkpoint + compact the backend's journal (see
+    /// [`StorageBackend::checkpoint`]): residency and ledgers are
+    /// snapshotted, the replay history is folded away, and accounting is
+    /// untouched. A free no-op on the in-memory simulator. Long-running
+    /// deployments call this periodically so the journal's size tracks
+    /// live state instead of op count.
+    pub fn checkpoint(&self) -> Result<crate::storage::CheckpointReport> {
+        lock_shared(&self.shared).backend.checkpoint()
+    }
+
+    /// Journal op records a kill-and-reopen would replay on top of the
+    /// latest checkpoint (0 on the simulator).
+    pub fn journal_ops(&self) -> u64 {
+        lock_shared(&self.shared).backend.journal_ops()
     }
 
     /// Snapshot of the engine-wide ledger.

@@ -322,10 +322,11 @@ impl SessionState {
     /// still holds in tier `j` to the next colder tier that can take the
     /// whole batch (the unbounded sink always qualifies). When the
     /// session is the tier's sole occupant the move goes through the
-    /// backend's all-or-nothing [`StorageBackend::migrate_all`] (one
-    /// journaled bulk op on durable backends); on a shared tier only the
-    /// session's own documents move, one checked hop each. Returns the
-    /// number of documents moved.
+    /// backend's all-or-nothing [`StorageBackend::migrate_all`]; on a
+    /// shared tier the session's own documents move as one
+    /// [`StorageBackend::migrate_stream`] batch. Either way a durable
+    /// backend journals O(1) records for the whole demotion, not one per
+    /// document (ADR-005). Returns the number of documents moved.
     fn bulk_demote(
         &mut self,
         backend: &mut dyn StorageBackend,
@@ -333,13 +334,12 @@ impl SessionState {
         at: f64,
     ) -> Result<u64> {
         let from = TierId(j);
-        let mine: Vec<u64> = backend
+        let mine = backend
             .residents(from)
             .iter()
             .filter(|r| r.owner == Some(self.id))
-            .map(|r| r.doc)
-            .collect();
-        if mine.is_empty() {
+            .count();
+        if mine == 0 {
             return Ok(0);
         }
         let sink = self.plan.num_tiers() - 1;
@@ -349,22 +349,21 @@ impl SessionState {
                 Some(cap) => cap.saturating_sub(backend.resident_len(TierId(dest))),
                 None => usize::MAX,
             };
-            if room >= mine.len() {
+            if room >= mine {
                 break;
             }
             dest += 1;
         }
         let to = TierId(dest);
-        if backend.resident_len(from) == mine.len() {
-            backend.migrate_all(from, to, at)?;
+        let moved = if backend.resident_len(from) == mine {
+            backend.migrate_all(from, to, at)?
         } else {
-            for doc in &mine {
-                backend.migrate_doc(*doc, to, at)?;
-            }
-        }
-        self.in_use[dest] += mine.len();
-        self.in_use[j] = self.in_use[j].saturating_sub(mine.len());
-        Ok(mine.len() as u64)
+            backend.migrate_stream(self.id, from, to, at)?
+        };
+        let moved_n = moved as usize;
+        self.in_use[dest] += moved_n;
+        self.in_use[j] = self.in_use[j].saturating_sub(moved_n);
+        Ok(moved)
     }
 
     /// Observe the next document, deferring placement to an external

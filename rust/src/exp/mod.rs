@@ -44,6 +44,7 @@ pub const EXPERIMENT_IDS: &[&str] = &[
     "ablation-ordering",
     "fleet",
     "fleet-family",
+    "fleet-family-ablation",
     "fleet-staggered",
     "all",
 ];
@@ -141,6 +142,28 @@ pub fn run(id: &str, seed: u64, quick: bool) -> Result<()> {
                 cmp.saving() * 100.0,
                 cmp.migrate_total,
                 cmp.keep_total
+            );
+        }
+        "fleet-family-ablation" => {
+            // the full 2×2 {arbitrated, naive} × {keep, migrate} grid on
+            // a contended rent-dominated fleet (ROADMAP: the naive-migrate
+            // cell was the missing quadrant)
+            let (m, n, k) = if quick { (3, 400, 10) } else { (8, 2_000, 32) };
+            let t_len = if quick { 48 } else { 128 };
+            let specs = crate::fleet::rent_dominated_fleet(m, n, k, seed);
+            let (table, series, cells) = fleet::e_fleet_family_ablation(&specs, seed, t_len)?;
+            println!("{}", table.render());
+            emit(&series)?;
+            let naive_migrate = cells
+                .iter()
+                .find(|c| {
+                    c.mode == crate::fleet::FleetMode::Naive
+                        && c.family == crate::policy::PlanFamily::Migrate
+                })
+                .expect("the 2x2 grid has its naive-migrate cell");
+            println!(
+                "naive-migrate cell: ${:.4} with {} reactive demotions (hot peak {})",
+                naive_migrate.total, naive_migrate.demotions, naive_migrate.hot_peak
             );
         }
         "fleet-staggered" => {

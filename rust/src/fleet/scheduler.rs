@@ -31,7 +31,6 @@ use super::stream::{generate_series, StreamSpec, HOT};
 use crate::engine::{BackendSpec, Engine, StreamSession, TierTopology};
 use crate::interestingness::RbfScorer;
 use crate::policy::PlanFamily;
-use crate::storage::FsBackend;
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::sync_channel;
 use std::time::Instant;
@@ -70,8 +69,9 @@ pub struct FleetConfig {
     /// migrate runs sensitive to cross-stream arrival interleaving (and
     /// therefore to the worker count).
     pub family: PlanFamily,
-    /// Storage substrate: the in-memory simulator or the real-filesystem
-    /// backend (`fs:<root>`, ADR-003 — the root must be fresh).
+    /// Storage substrate: the in-memory simulator, the real-filesystem
+    /// backend (`fs:<root>`, ADR-003), or the S3-style object store
+    /// (`obj:<root>`, ADR-005) — durable roots must be fresh.
     pub backend: BackendSpec,
 }
 
@@ -132,17 +132,9 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
                 .with_capacity(HOT, Some(capacity)),
         )
         .charge_rent(charge_rent);
-    if let BackendSpec::Fs { root } = &config.backend {
-        if FsBackend::has_journal(root) {
-            bail!(
-                "fleet needs a fresh fs root, but {} already holds a journal \
-                 from a previous run (stream/document ids restart at 0 and \
-                 would collide with the journaled residents)",
-                root.display()
-            );
-        }
-        let costs = vec![specs[0].model.a, specs[0].model.b];
-        builder = builder.backend(Box::new(FsBackend::open(root, costs, charge_rent)?));
+    let costs = vec![specs[0].model.a, specs[0].model.b];
+    if let Some(durable) = config.backend.open_fresh(costs, charge_rent, "fleet")? {
+        builder = builder.backend(durable);
     }
     let engine = builder.build()?;
     let naive = config.mode == FleetMode::Naive;
@@ -412,6 +404,28 @@ mod tests {
                 < 1e-9 * sim_report.total_cost().max(1.0),
             "fs ${} vs sim ${}",
             fs_report.total_cost(),
+            sim_report.total_cost()
+        );
+        // a stale root is refused, not silently corrupted
+        assert!(run_fleet(&specs, &cfg).is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn fleet_runs_on_the_object_backend() {
+        let specs = demo_fleet(2, 80, 4, true, 5);
+        let root = crate::util::scratch_dir("fleet-obj");
+        let mut cfg = tiny_config(FleetMode::Arbitrated, 8, 1);
+        cfg.backend = BackendSpec::Obj { root: root.clone() };
+        let obj_report = run_fleet(&specs, &cfg).unwrap();
+        // parity with the sim on the identical seeded run
+        let sim_report =
+            run_fleet(&specs, &tiny_config(FleetMode::Arbitrated, 8, 1)).unwrap();
+        assert!(
+            (obj_report.total_cost() - sim_report.total_cost()).abs()
+                < 1e-9 * sim_report.total_cost().max(1.0),
+            "obj ${} vs sim ${}",
+            obj_report.total_cost(),
             sim_report.total_cost()
         );
         // a stale root is refused, not silently corrupted

@@ -25,9 +25,12 @@
 //! Every placement surface runs through one codepath: [`engine`], a
 //! session-based, N-tier, backend-agnostic API. An [`engine::Engine`] is
 //! built over a [`storage::StorageBackend`] — the simulator
-//! [`storage::StorageSim`] (reference) or the real-filesystem
-//! [`storage::FsBackend`] (documents as files, write-ahead journal,
-//! crash recovery; ADR-003) — and an
+//! [`storage::StorageSim`] (reference), the real-filesystem
+//! [`storage::FsBackend`] (documents as files; ADR-003), or the
+//! S3-style [`storage::ObjectBackend`] (bucket per tier, flat object
+//! keys, request-counted verbs; ADR-005), the durable pair sharing one
+//! write-ahead journal with checkpoint/compaction, bulk `migrate_stream`
+//! batching, and crash recovery — and an
 //! [`engine::TierTopology`]; [`engine::Engine::open_stream`] hands out
 //! dynamic [`engine::StreamSession`]s that score/place/finish
 //! independently, and every open/close/changeover event re-runs the

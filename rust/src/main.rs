@@ -4,8 +4,9 @@
 //!   run [--config <path>]        run the streaming pipeline from a TOML config
 //!   fleet [--streams M] [...]    run M concurrent top-K streams over shared tiers
 //!   engine [--tiers 3] [...]     N-tier engine demo with online re-arbitration
-//!                                (--backend fs:<root> for the real-FS backend,
-//!                                 --reconcile for sim-vs-fs ledger parity)
+//!                                (--backend fs:<root> | obj:<root> for the
+//!                                 durable backends, --reconcile for
+//!                                 sim-vs-durable ledger parity)
 //!   exp --id <id> [--quick]      regenerate a paper table/figure (see DESIGN.md §4)
 //!   optimize [--preset <p>]      print r* and the strategy ranking for an economy
 //!   validate [--quick]           Monte-Carlo validation suite (E1, E2, A2)
@@ -291,27 +292,29 @@ fn cmd_engine(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     let backend = BackendSpec::parse(&demo.backend)?;
 
     if flags.contains_key("reconcile") {
-        // without an explicit fs root, reconcile over a scratch directory
-        // (pre-cleaned against pid reuse, removed again afterwards)
-        let (root, scratch) = match &backend {
-            BackendSpec::Fs { root } => (root.clone(), false),
+        // without an explicit durable root, reconcile the FS backend over
+        // a scratch directory (pre-cleaned against pid reuse, removed
+        // again afterwards); fs:/obj: roots are reconciled in place
+        let (spec, scratch) = match &backend {
             BackendSpec::Sim => {
                 let root = std::env::temp_dir()
                     .join(format!("shptier-reconcile-{}", std::process::id()));
                 let _ = std::fs::remove_dir_all(&root);
-                (root, true)
+                (BackendSpec::Fs { root: root.clone() }, Some(root))
             }
+            durable => (durable.clone(), None),
         };
-        let rep = reconcile_backends(&demo, &root);
-        if scratch {
+        let rep = reconcile_backends(&demo, &spec);
+        if let Some(root) = scratch {
             let _ = std::fs::remove_dir_all(&root);
         }
         let rep = rep?;
-        print_engine_demo(&rep.fs);
+        print_engine_demo(&rep.other);
         println!(
-            "reconciliation: sim total ${:.4} vs fs total ${:.4} \
+            "reconciliation: sim total ${:.4} vs {} total ${:.4} \
              (Δtotal {:.3e}, max per-stream Δ {:.3e}) — ledger parity holds",
-            rep.sim.total, rep.fs.total, rep.total_delta, rep.max_stream_delta
+            rep.sim.total, rep.other.backend, rep.other.total, rep.total_delta,
+            rep.max_stream_delta
         );
         return Ok(());
     }
@@ -391,11 +394,13 @@ USAGE:
   shptier run [--config configs/case_study_2.toml]
   shptier fleet [--streams M] [--docs N] [--k K] [--capacity C]
                 [--workers W] [--mode arbitrated|naive]
-                [--family keep|migrate|auto] [--backend sim|fs:<root>]
+                [--family keep|migrate|auto]
+                [--backend sim|fs:<root>|obj:<root>]
                 [--config configs/fleet.toml]
   shptier engine [--streams M] [--docs N] [--k K] [--tiers 2..4]
-                 [--capacity C] [--backend sim|fs:<root>] [--reconcile]
-                 [--family keep|migrate|auto] [--config configs/engine.toml]
+                 [--capacity C] [--backend sim|fs:<root>|obj:<root>]
+                 [--reconcile] [--family keep|migrate|auto]
+                 [--config configs/engine.toml]
   shptier exp --id <{}> [--quick] [--seed N]
   shptier optimize [--preset case-study-1|case-study-2]
   shptier validate [--quick]

@@ -4,11 +4,14 @@
 //! [`StorageBackend`] is extracted from the concrete [`StorageSim`] so the
 //! placement engine ([`crate::engine`]), the policies
 //! ([`crate::policy::PlacementPolicy::on_step`]), and the fleet wrappers
-//! all program against a trait instead of the simulator struct. The
-//! simulator is the reference implementation; [`super::fs::FsBackend`]
-//! is the real-filesystem implementation (one directory per tier,
-//! documents as files, a write-ahead journal for crash recovery — see
-//! `docs/adr/ADR-003-fs-backend.md`).
+//! all program against a trait instead of the simulator struct. Three
+//! implementations share the contract: the simulator (reference), the
+//! real-filesystem [`super::fs::FsBackend`] (one directory per tier,
+//! documents as files — ADR-003), and the S3-style
+//! [`super::object::ObjectBackend`] (bucket per tier, flat object keys,
+//! request-counted verbs — ADR-005); the latter two are the same
+//! journaled machinery over different substrates
+//! ([`super::durable::DurableBackend`]).
 //!
 //! Contract notes, normative for every implementation:
 //!
@@ -28,6 +31,19 @@ use super::sim::StorageSim;
 use super::tier::{Resident, TierId};
 use crate::cost::PerDocCosts;
 use anyhow::Result;
+
+/// What a [`StorageBackend::checkpoint`] accomplished.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CheckpointReport {
+    /// Journal op records the snapshot made replay-redundant (0 on
+    /// memory-only backends, which have no replay history to fold).
+    pub ops_folded: u64,
+    /// Live documents captured in the snapshot.
+    pub live_docs: u64,
+    /// Journal op records remaining after compaction (0 when the
+    /// compaction completed).
+    pub ops_after: u64,
+}
 
 /// Backend-agnostic tiered storage, as required by the placement engine.
 ///
@@ -68,10 +84,31 @@ pub trait StorageBackend: Send {
     /// stay untouched).
     fn migrate_all(&mut self, from: TierId, to: TierId, at: f64) -> Result<u64>;
 
+    /// Bulk-migrate every resident of `from` *owned by `stream`* into
+    /// `to` — the per-stream changeover-demotion batch. Charges must be
+    /// identical to the equivalent sequence of `migrate_doc` hops, and
+    /// all-or-nothing like `migrate_all` (destination headroom pre-checked
+    /// against the batch size). Durable implementations journal the whole
+    /// batch as ONE record, so a demotion of S documents costs O(1)
+    /// journal writes, not O(S). Returns the number of documents moved.
+    fn migrate_stream(&mut self, stream: u64, from: TierId, to: TierId, at: f64) -> Result<u64>;
+
     /// Settle rent for everything still resident as of window fraction
     /// `at`, resetting the rent clocks (idempotent at a fixed `at`).
     /// Fallible because durable backends journal the settlement.
     fn settle_rent(&mut self, at: f64) -> Result<()>;
+
+    /// Snapshot residency + ledgers into the journal and compact it, so
+    /// the replay history (and the journal's size) becomes a function of
+    /// live state instead of op count. Accounting is unchanged — a
+    /// checkpoint charges nothing. Memory-only backends (the sim) ARE
+    /// their own snapshot: the call is a free no-op that reports zero
+    /// folded ops.
+    fn checkpoint(&mut self) -> Result<CheckpointReport>;
+
+    /// Op records a reopen would replay on top of the latest checkpoint
+    /// (0 on memory-only backends and right after a compaction).
+    fn journal_ops(&self) -> u64;
 
     // ---- residency views ---------------------------------------------------
 
@@ -155,9 +192,26 @@ impl StorageBackend for StorageSim {
         StorageSim::migrate_all(self, from, to, at)
     }
 
+    fn migrate_stream(&mut self, stream: u64, from: TierId, to: TierId, at: f64) -> Result<u64> {
+        StorageSim::migrate_stream(self, stream, from, to, at)
+    }
+
     fn settle_rent(&mut self, at: f64) -> Result<()> {
         StorageSim::settle_rent(self, at);
         Ok(())
+    }
+
+    fn checkpoint(&mut self) -> Result<CheckpointReport> {
+        // the in-memory state is its own snapshot; nothing to fold
+        Ok(CheckpointReport {
+            ops_folded: 0,
+            live_docs: StorageSim::resident_count(self) as u64,
+            ops_after: 0,
+        })
+    }
+
+    fn journal_ops(&self) -> u64 {
+        0
     }
 
     fn locate(&self, doc: u64) -> Option<TierId> {
@@ -273,5 +327,32 @@ mod tests {
         assert!(b.put(8, TierId::A, 0.0).is_err());
         assert_eq!(b.peak_occupancy(TierId::A), 1);
         assert_eq!(b.oldest_resident(TierId::A), Some(7));
+    }
+
+    #[test]
+    fn sim_checkpoint_is_a_free_noop_with_no_journal() {
+        let mut b: Box<dyn StorageBackend> = Box::new(sim());
+        b.set_attribution(Some(2));
+        b.put(1, TierId::A, 0.0).unwrap();
+        b.put(2, TierId::B, 0.1).unwrap();
+        assert_eq!(b.journal_ops(), 0, "memory-only: no replay history");
+        let before = b.ledger().total();
+        let report = b.checkpoint().unwrap();
+        assert_eq!(report, CheckpointReport { ops_folded: 0, live_docs: 2, ops_after: 0 });
+        assert_eq!(b.ledger().total(), before, "a checkpoint charges nothing");
+    }
+
+    #[test]
+    fn sim_migrate_stream_through_the_trait() {
+        let mut b: Box<dyn StorageBackend> = Box::new(sim());
+        b.set_attribution(Some(5));
+        b.put(1, TierId::A, 0.0).unwrap();
+        b.put(2, TierId::A, 0.1).unwrap();
+        b.set_attribution(Some(6));
+        b.put(3, TierId::A, 0.2).unwrap();
+        assert_eq!(b.migrate_stream(5, TierId::A, TierId::B, 0.5).unwrap(), 2);
+        assert_eq!(b.locate(3), Some(TierId::A));
+        assert_eq!(b.docs_of_stream(5), vec![1, 2]);
+        assert_eq!(b.resident_len(TierId::B), 2);
     }
 }

@@ -1,0 +1,485 @@
+//! `storage::durable` — the journaled [`StorageBackend`] shared by every
+//! durable substrate (ADR-005).
+//!
+//! ADR-003 built the real-filesystem backend as *one accounting state
+//! machine, two substrates*: an inner [`StorageSim`] owns all residency
+//! bookkeeping and charge accounting (so ledger parity with the simulator
+//! is structural), and real IO plus a write-ahead journal layer on top.
+//! This module extracts that layering so the filesystem backend
+//! ([`super::fs::FsBackend`]) and the S3-style object-store backend
+//! ([`super::object::ObjectBackend`]) are the *same* backend over
+//! different [`DocStore`] substrates — journaling, checkpoint/compaction,
+//! crash recovery, and wedge-on-failure semantics are written once.
+//!
+//! ## Durability contract
+//!
+//! Every state-changing operation appends one journal record *before*
+//! touching the substrate (see [`super::journal`] for the grammar).
+//! Opening a root that already holds a journal replays it (latest
+//! complete checkpoint + op suffix), then reconciles the substrate's
+//! documents against the replayed residency — recreating what is
+//! missing, removing what nothing owns, rewriting torn payloads.
+//! Capacities and the ambient attribution stream are *runtime*
+//! configuration, not durable state: callers re-apply them after open.
+//!
+//! If a journal append or substrate operation fails mid-run the backend
+//! wedges: every subsequent operation errors until the backend is
+//! reopened from the journal, which restores the invariant that the
+//! journal is the single source of truth.
+
+use super::backend::{CheckpointReport, StorageBackend};
+use super::journal::{self, Journal};
+use super::ledger::Ledger;
+use super::sim::StorageSim;
+use super::tier::{Resident, TierId};
+use crate::cost::PerDocCosts;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A substrate that physically holds one document payload per resident:
+/// files in tier directories ([`super::fs::FsStore`]) or objects in
+/// per-tier buckets ([`super::object::ObjectStore`]). All residency
+/// *logic* lives above, in [`DurableBackend`]; implementations only move
+/// bytes and report what exists.
+pub trait DocStore: Send {
+    /// Substrate name for reports (e.g. `"fs"`).
+    fn name(&self) -> &'static str;
+
+    /// Create the per-tier containers under the root (idempotent).
+    fn prepare(&mut self, tiers: usize) -> Result<()>;
+
+    /// Store `doc`'s payload in `tier` (overwriting any stale copy).
+    fn write_doc(&mut self, tier: TierId, doc: u64, at: f64) -> Result<()>;
+
+    /// Remove `doc` from `tier`. Already-missing payloads succeed (the
+    /// crash window between journal append and substrate op).
+    fn remove_doc(&mut self, tier: TierId, doc: u64) -> Result<()>;
+
+    /// Move `doc` between tiers. A missing source is repaired by writing
+    /// a fresh payload at the destination.
+    fn move_doc(&mut self, from: TierId, to: TierId, doc: u64, at: f64) -> Result<()>;
+
+    /// Serve a consumer read of `doc` from `tier`, verifying the payload.
+    fn read_doc(&mut self, tier: TierId, doc: u64) -> Result<()>;
+
+    /// Doc ids whose payloads exist in `tier` (foreign entries skipped).
+    fn list_docs(&mut self, tier: TierId) -> Result<Vec<u64>>;
+
+    /// Whether `doc`'s payload in `tier` is intact (recovery validation).
+    fn doc_intact(&mut self, tier: TierId, doc: u64) -> bool;
+}
+
+/// The 16-byte document payload every substrate stores: the doc id (LE)
+/// followed by the written-at `f64` bits (LE) — real bytes the read path
+/// verifies, not a zero-length marker. Shared here so the format cannot
+/// drift between substrates.
+pub(crate) fn doc_payload(doc: u64, at: f64) -> [u8; 16] {
+    let mut bytes = [0u8; 16];
+    bytes[..8].copy_from_slice(&doc.to_le_bytes());
+    bytes[8..].copy_from_slice(&at.to_bits().to_le_bytes());
+    bytes
+}
+
+/// Whether stored `bytes` serve `doc` — the shared read-path/recovery
+/// intactness check (the id prefix must match).
+pub(crate) fn payload_intact(bytes: &[u8], doc: u64) -> bool {
+    bytes.len() >= 8 && bytes[..8] == doc.to_le_bytes()
+}
+
+/// Scan one substrate container for managed document keys: entries named
+/// `<doc><suffix>` parse to ids, foreign entries are skipped, output
+/// sorted. Shared by both substrates so the key grammar cannot drift.
+pub(crate) fn scan_keys(dir: &Path, suffix: &str) -> Result<Vec<u64>> {
+    let mut docs = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?
+    {
+        let name = entry?.file_name();
+        let Some(stem) = name.to_string_lossy().strip_suffix(suffix).map(String::from)
+        else {
+            continue; // not a managed entry
+        };
+        if let Ok(doc) = stem.parse::<u64>() {
+            docs.push(doc);
+        }
+    }
+    docs.sort_unstable();
+    Ok(docs)
+}
+
+/// What opening over a pre-existing journal rebuilt.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Journal op records replayed into the accounting state (records
+    /// folded into a loaded checkpoint are not re-counted).
+    pub ops_replayed: u64,
+    /// Complete checkpoint blocks loaded (the latest one seeds the state).
+    pub checkpoints_loaded: u64,
+    /// Resident document payloads that were missing (or torn) on the
+    /// substrate and recreated.
+    pub files_recreated: u64,
+    /// Substrate payloads with no resident backing them, removed.
+    pub files_removed: u64,
+    /// Whether a torn trailing record (or torn checkpoint block) was
+    /// dropped, or a torn header healed.
+    pub truncated_tail: bool,
+}
+
+/// A [`StorageBackend`] that journals every operation and stores one
+/// payload per resident in a [`DocStore`] substrate. See the module docs
+/// for the layout and the durability contract; `FsBackend` and
+/// `ObjectBackend` are the two instantiations.
+pub struct DurableBackend<S: DocStore> {
+    pub(crate) store: S,
+    /// The accounting + residency state machine (same code as the sim).
+    state: StorageSim,
+    journal: Journal,
+    costs: Vec<PerDocCosts>,
+    charge_rent: bool,
+    /// Mirror of the sim's ambient attribution (journaled per `put`).
+    attribution: Option<u64>,
+    /// Set on a failed journal append / substrate op: the in-memory state
+    /// and the durable record may disagree, so all further ops refuse.
+    wedged: Option<String>,
+    recovery: Option<RecoveryReport>,
+}
+
+/// Open (or recover) a durable backend: substrate `store`, journal at
+/// `journal_path`. If the journal exists, the accounting state is rebuilt
+/// from it and the substrate reconciled; the declared `costs` and
+/// `charge_rent` must match the journal header exactly.
+pub(crate) fn open_durable<S: DocStore>(
+    mut store: S,
+    journal_path: PathBuf,
+    costs: Vec<PerDocCosts>,
+    charge_rent: bool,
+) -> Result<DurableBackend<S>> {
+    if costs.len() < 2 {
+        bail!(
+            "{} backend needs at least two tiers (got {})",
+            store.name(),
+            costs.len()
+        );
+    }
+    store.prepare(costs.len())?;
+    let (state, journal, recovery) = if journal_path.exists() {
+        let replay = journal::replay(&journal_path, &costs, charge_rent)?;
+        let mut report = RecoveryReport {
+            ops_replayed: replay.ops_replayed,
+            checkpoints_loaded: replay.checkpoints_loaded,
+            truncated_tail: replay.truncated_tail,
+            ..RecoveryReport::default()
+        };
+        reconcile_store(&mut store, &replay.state, &mut report)?;
+        let journal = Journal::open_append(journal_path, replay.ops_replayed)?;
+        (replay.state, journal, Some(report))
+    } else {
+        let journal = Journal::create(journal_path, &costs, charge_rent)?;
+        (StorageSim::with_tiers(costs.clone(), charge_rent), journal, None)
+    };
+    Ok(DurableBackend {
+        store,
+        state,
+        journal,
+        costs,
+        charge_rent,
+        attribution: None,
+        wedged: None,
+        recovery,
+    })
+}
+
+/// Reconcile the substrate's payloads against the replayed residency:
+/// recreate what is missing, rewrite what is torn, remove what nothing
+/// owns.
+fn reconcile_store<S: DocStore>(
+    store: &mut S,
+    state: &StorageSim,
+    report: &mut RecoveryReport,
+) -> Result<()> {
+    for t in 0..state.num_tiers() {
+        let tier = TierId(t);
+        let mut expected: BTreeMap<u64, f64> = state
+            .tier(tier)
+            .docs()
+            .into_iter()
+            .map(|d| (d, state.tier(tier).get(d).expect("doc listed").written_at))
+            .collect();
+        for doc in store.list_docs(tier)? {
+            match expected.remove(&doc) {
+                Some(at) => {
+                    // a crash mid-write can leave a torn payload under a
+                    // matching key — validate what read_doc will check and
+                    // rewrite from the replayed state if it is corrupt
+                    if !store.doc_intact(tier, doc) {
+                        store.write_doc(tier, doc, at).with_context(|| {
+                            format!("rewriting torn payload for doc {doc}")
+                        })?;
+                        report.files_recreated += 1;
+                    }
+                }
+                None => {
+                    store
+                        .remove_doc(tier, doc)
+                        .with_context(|| format!("removing orphan payload {doc}"))?;
+                    report.files_removed += 1;
+                }
+            }
+        }
+        for (doc, at) in expected {
+            store
+                .write_doc(tier, doc, at)
+                .with_context(|| format!("recreating payload for doc {doc}"))?;
+            report.files_recreated += 1;
+        }
+    }
+    Ok(())
+}
+
+impl<S: DocStore> DurableBackend<S> {
+    /// `fsync` the journal on every append (power-loss durability, not
+    /// just process death). Off by default: process-death durability only
+    /// needs the flush.
+    pub fn with_sync(mut self, sync: bool) -> Self {
+        self.journal.set_sync(sync);
+        self
+    }
+
+    /// The recovery report, if this backend was opened over an existing
+    /// journal (None on a fresh root).
+    pub fn recovery(&self) -> Option<&RecoveryReport> {
+        self.recovery.as_ref()
+    }
+
+    /// Declared per-tier cost tables (the journal-header economics).
+    pub fn tier_costs(&self) -> &[PerDocCosts] {
+        &self.costs
+    }
+
+    fn ensure_live(&self) -> Result<()> {
+        if let Some(why) = &self.wedged {
+            bail!(
+                "{} backend is wedged ({why}) — reopen from the journal to recover",
+                self.store.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// Append one journal record. A failure wedges the backend: the
+    /// applied state is no longer durably recorded.
+    fn append(&mut self, line: String) -> Result<()> {
+        let res = self.journal.append_op(&line);
+        if let Err(e) = &res {
+            self.wedged = Some(format!("journal append failed: {e:#}"));
+        }
+        res
+    }
+
+    /// Run a substrate operation, wedging the backend on failure (the
+    /// journal already records the op, so only a reopen can reconcile).
+    fn store_op(&mut self, res: Result<()>, what: &str) -> Result<()> {
+        match res {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.wedged = Some(format!("{what}: {e:#}"));
+                bail!("{what}: {e:#} (backend wedged; reopen to recover from the journal)");
+            }
+        }
+    }
+}
+
+impl<S: DocStore> StorageBackend for DurableBackend<S> {
+    fn backend_name(&self) -> String {
+        self.store.name().into()
+    }
+
+    fn num_tiers(&self) -> usize {
+        self.state.num_tiers()
+    }
+
+    fn put(&mut self, doc: u64, tier: TierId, at: f64) -> Result<()> {
+        self.ensure_live()?;
+        self.state.put(doc, tier, at)?;
+        let owner = match self.attribution {
+            Some(s) => s.to_string(),
+            None => "-".into(),
+        };
+        self.append(format!("put {doc} {} {} {owner}", tier.0, journal::fmt_bits(at)))?;
+        let res = self.store.write_doc(tier, doc, at);
+        self.store_op(res, "writing document payload")
+    }
+
+    fn delete(&mut self, doc: u64, at: f64) -> Result<TierId> {
+        self.ensure_live()?;
+        let tier = self.state.delete(doc, at)?;
+        self.append(format!("del {doc} {}", journal::fmt_bits(at)))?;
+        let res = self.store.remove_doc(tier, doc);
+        self.store_op(res, "removing document payload").map(|()| tier)
+    }
+
+    fn read(&mut self, doc: u64) -> Result<TierId> {
+        self.ensure_live()?;
+        let Some(tier) = self.state.locate(doc) else {
+            bail!("read: doc {doc} not resident");
+        };
+        self.store.read_doc(tier, doc)?;
+        self.state.read(doc)?;
+        self.append(format!("read {doc}"))?;
+        Ok(tier)
+    }
+
+    fn migrate_doc(&mut self, doc: u64, to: TierId, at: f64) -> Result<()> {
+        self.ensure_live()?;
+        let Some(from) = self.state.locate(doc) else {
+            bail!("migrate: doc {doc} not resident");
+        };
+        if from == to {
+            return Ok(());
+        }
+        self.state.migrate_doc(doc, to, at)?;
+        self.append(format!("mig {doc} {} {}", to.0, journal::fmt_bits(at)))?;
+        let res = self.store.move_doc(from, to, doc, at);
+        self.store_op(res, "moving document payload")
+    }
+
+    fn migrate_all(&mut self, from: TierId, to: TierId, at: f64) -> Result<u64> {
+        self.ensure_live()?;
+        let tiers = self.state.num_tiers();
+        if from.0 >= tiers || to.0 >= tiers {
+            // delegate the bounds error (moves nothing)
+            return self.state.migrate_all(from, to, at);
+        }
+        let docs = self.state.tier(from).docs();
+        // all-or-nothing headroom check happens inside the state machine;
+        // a doomed migration journals and moves nothing
+        let n = self.state.migrate_all(from, to, at)?;
+        if n == 0 {
+            return Ok(0); // same-tier or empty source: nothing to record
+        }
+        self.append(format!("migall {} {} {}", from.0, to.0, journal::fmt_bits(at)))?;
+        for doc in docs {
+            let res = self.store.move_doc(from, to, doc, at);
+            self.store_op(res, "moving document payload")?;
+        }
+        Ok(n)
+    }
+
+    fn migrate_stream(&mut self, stream: u64, from: TierId, to: TierId, at: f64) -> Result<u64> {
+        self.ensure_live()?;
+        // all-or-nothing headroom check inside the state machine, which
+        // hands back the member set so the substrate moves reuse its scan
+        let docs = self.state.migrate_stream_docs(stream, from, to, at)?;
+        let n = docs.len() as u64;
+        if n == 0 {
+            return Ok(0);
+        }
+        // ONE journal record for the whole batch — replay recomputes the
+        // member set deterministically from the journal prefix
+        self.append(format!(
+            "migstream {stream} {} {} {}",
+            from.0,
+            to.0,
+            journal::fmt_bits(at)
+        ))?;
+        for doc in docs {
+            let res = self.store.move_doc(from, to, doc, at);
+            self.store_op(res, "moving document payload")?;
+        }
+        Ok(n)
+    }
+
+    fn settle_rent(&mut self, at: f64) -> Result<()> {
+        self.ensure_live()?;
+        self.state.settle_rent(at);
+        self.append(format!("settle {}", journal::fmt_bits(at)))
+    }
+
+    fn checkpoint(&mut self) -> Result<CheckpointReport> {
+        self.ensure_live()?;
+        let ops_folded = self.journal.ops();
+        let res = self
+            .journal
+            .checkpoint(&self.state, &self.costs, self.charge_rent);
+        if let Err(e) = &res {
+            self.wedged = Some(format!("checkpoint failed: {e:#}"));
+        }
+        res?;
+        Ok(CheckpointReport {
+            ops_folded,
+            live_docs: self.state.resident_count() as u64,
+            ops_after: self.journal.ops(),
+        })
+    }
+
+    fn journal_ops(&self) -> u64 {
+        self.journal.ops()
+    }
+
+    fn locate(&self, doc: u64) -> Option<TierId> {
+        self.state.locate(doc)
+    }
+
+    fn resident_len(&self, tier: TierId) -> usize {
+        self.state.tier(tier).len()
+    }
+
+    fn residents(&self, tier: TierId) -> Vec<Resident> {
+        let t = self.state.tier(tier);
+        let mut v: Vec<Resident> = t.docs().iter().map(|d| *t.get(*d).unwrap()).collect();
+        v.sort_by_key(|r| r.doc);
+        v
+    }
+
+    fn resident_count(&self) -> usize {
+        self.state.resident_count()
+    }
+
+    fn oldest_resident(&self, tier: TierId) -> Option<u64> {
+        self.state.oldest_resident(tier)
+    }
+
+    fn owner_of(&self, doc: u64) -> Option<u64> {
+        self.state.owner_of(doc)
+    }
+
+    fn docs_of_stream(&self, stream: u64) -> Vec<u64> {
+        self.state.docs_of_stream(stream)
+    }
+
+    fn set_capacity(&mut self, tier: TierId, capacity: Option<usize>) {
+        self.state.set_capacity(tier, capacity);
+    }
+
+    fn capacity(&self, tier: TierId) -> Option<usize> {
+        self.state.tier(tier).capacity()
+    }
+
+    fn has_room(&self, tier: TierId) -> bool {
+        self.state.has_room(tier)
+    }
+
+    fn peak_occupancy(&self, tier: TierId) -> usize {
+        self.state.peak_occupancy(tier)
+    }
+
+    fn set_attribution(&mut self, stream: Option<u64>) {
+        self.attribution = stream;
+        self.state.set_attribution(stream);
+    }
+
+    fn register_stream(&mut self, stream: u64, costs: Vec<PerDocCosts>) -> Result<()> {
+        self.ensure_live()?;
+        self.state.register_stream(stream, costs.clone())?;
+        self.append(format!("reg {stream} {}", journal::fmt_costs(&costs)))
+    }
+
+    fn ledger(&self) -> &Ledger {
+        self.state.ledger()
+    }
+
+    fn stream_ledger(&self, stream: u64) -> Ledger {
+        self.state.stream_ledger(stream)
+    }
+}

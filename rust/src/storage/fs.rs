@@ -7,103 +7,137 @@
 //! transport charges computed from the same [`PerDocCosts`] tables as the
 //! simulator.
 //!
-//! ## Design: one accounting state machine, two substrates
+//! Since ADR-005 the backend is an instantiation of the shared
+//! [`DurableBackend`] machinery: [`FsStore`] supplies the file substrate
+//! (write/rename/remove under `<root>/tier-<i>/<doc>.doc`), and the
+//! journaling, checkpoint/compaction, crash recovery, and
+//! wedge-on-failure semantics live in [`super::durable`] /
+//! [`super::journal`] — shared verbatim with the object-store backend.
+//! The write-ahead journal lives at `<root>/journal.log`.
 //!
-//! The backend delegates *all* residency bookkeeping and charge accounting
-//! to an inner [`StorageSim`] — the exact code path the simulator runs —
-//! and layers real file IO plus a durable write-ahead journal on top. This
-//! makes ledger parity between `sim` and `fs` structural rather than
-//! coincidental: the reconciliation harness
-//! ([`crate::engine::demo::reconcile_backends`]) asserts it end-to-end.
-//!
-//! ## Write-ahead journal and crash recovery
-//!
-//! Every state-changing operation appends one line to `<root>/journal.log`
-//! *before* touching any document file:
-//!
-//! ```text
-//! shptier-fs v1 rent=<0|1> costs=<w:r:rw,...>      # header (f64 hex bits)
-//! put <doc> <tier> <at-bits> <owner|->
-//! del <doc> <at-bits>
-//! read <doc>
-//! mig <doc> <to> <at-bits>
-//! migall <from> <to> <at-bits>
-//! settle <at-bits>
-//! reg <stream> <w:r:rw,...>
-//! ```
-//!
-//! Window fractions and costs are encoded as hexadecimal `f64::to_bits`,
-//! so replay is bit-exact. [`FsBackend::open`] on a root with an existing
-//! journal replays it into a fresh accounting state (`locate` /
-//! `residents` / ledger totals are rebuilt exactly), drops a torn trailing
-//! line if the process died mid-append, and then reconciles the document
-//! files against the replayed residency — recreating missing files and
-//! removing orphans. Capacities and the ambient attribution stream are
-//! *runtime* configuration, not durable state: callers (the engine
-//! builder) re-apply them after open, exactly as they do for a fresh
-//! simulator.
-//!
-//! If a journal append or file operation fails mid-run the backend wedges:
-//! every subsequent operation errors until the backend is reopened from
-//! the journal, which restores the invariant that the journal is the
-//! single source of truth.
+//! [`StorageSim`]: super::sim::StorageSim
+//! [`PerDocCosts`]: crate::cost::PerDocCosts
 
-use super::backend::StorageBackend;
-use super::ledger::Ledger;
-use super::sim::StorageSim;
-use super::tier::{Resident, TierId};
-use crate::cost::PerDocCosts;
+use super::durable::{
+    doc_payload, open_durable, payload_intact, scan_keys, DocStore, DurableBackend,
+};
 use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
-use std::fs::{self, File, OpenOptions};
-use std::io::{BufWriter, Write};
+use std::fs;
 use std::path::{Path, PathBuf};
 
-const JOURNAL_FILE: &str = "journal.log";
-const JOURNAL_MAGIC: &str = "shptier-fs";
-const JOURNAL_VERSION: u32 = 1;
+use super::tier::TierId;
 
-/// What [`FsBackend::open`] rebuilt from a pre-existing journal.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct RecoveryReport {
-    /// Journal operations replayed into the accounting state.
-    pub ops_replayed: u64,
-    /// Resident document files that were missing on disk and recreated.
-    pub files_recreated: u64,
-    /// On-disk document files with no resident backing them, removed.
-    pub files_removed: u64,
-    /// Whether a torn (partially written) trailing line was dropped.
-    pub truncated_tail: bool,
+const JOURNAL_FILE: &str = "journal.log";
+
+fn write_doc_file(path: &Path, doc: u64, at: f64) -> std::io::Result<()> {
+    fs::write(path, doc_payload(doc, at))
+}
+
+/// The filesystem substrate: one directory per tier, one `<doc>.doc` file
+/// per resident, migrations as renames.
+pub struct FsStore {
+    root: PathBuf,
+}
+
+impl FsStore {
+    fn tier_dir(&self, tier: TierId) -> PathBuf {
+        self.root.join(format!("tier-{}", tier.0))
+    }
+
+    fn doc_path(&self, tier: TierId, doc: u64) -> PathBuf {
+        self.tier_dir(tier).join(format!("{doc}.doc"))
+    }
+}
+
+impl DocStore for FsStore {
+    fn name(&self) -> &'static str {
+        "fs"
+    }
+
+    fn prepare(&mut self, tiers: usize) -> Result<()> {
+        fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating backend root {}", self.root.display()))?;
+        for i in 0..tiers {
+            let dir = self.tier_dir(TierId(i));
+            fs::create_dir_all(&dir)
+                .with_context(|| format!("creating tier directory {}", dir.display()))?;
+        }
+        Ok(())
+    }
+
+    fn write_doc(&mut self, tier: TierId, doc: u64, at: f64) -> Result<()> {
+        let path = self.doc_path(tier, doc);
+        write_doc_file(&path, doc, at)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    fn remove_doc(&mut self, tier: TierId, doc: u64) -> Result<()> {
+        let path = self.doc_path(tier, doc);
+        match fs::remove_file(&path) {
+            // already gone: a crash window earlier never materialized it
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            res => res.with_context(|| format!("removing {}", path.display())),
+        }
+    }
+
+    fn move_doc(&mut self, from: TierId, to: TierId, doc: u64, at: f64) -> Result<()> {
+        let src = self.doc_path(from, doc);
+        let dst = self.doc_path(to, doc);
+        match fs::rename(&src, &dst) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                // crash window between journal append and file op: repair
+                // by recreating the payload at the destination
+                write_doc_file(&dst, doc, at)
+                    .with_context(|| format!("recreating migrated file {}", dst.display()))
+            }
+            Err(e) => {
+                Err(e).with_context(|| format!("moving {} to {}", src.display(), dst.display()))
+            }
+        }
+    }
+
+    fn read_doc(&mut self, tier: TierId, doc: u64) -> Result<()> {
+        let path = self.doc_path(tier, doc);
+        let bytes =
+            fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if !payload_intact(&bytes, doc) {
+            bail!("corrupt document file {}", path.display());
+        }
+        Ok(())
+    }
+
+    fn list_docs(&mut self, tier: TierId) -> Result<Vec<u64>> {
+        scan_keys(&self.tier_dir(tier), ".doc")
+    }
+
+    fn doc_intact(&mut self, tier: TierId, doc: u64) -> bool {
+        fs::read(self.doc_path(tier, doc))
+            .map(|b| payload_intact(&b, doc))
+            .unwrap_or(false)
+    }
 }
 
 /// A [`StorageBackend`] backed by real directories and files, with a
-/// write-ahead journal for crash recovery. See the module docs for the
-/// layout and the durability contract.
-pub struct FsBackend {
-    root: PathBuf,
-    /// The accounting + residency state machine (same code as the sim).
-    state: StorageSim,
-    journal: BufWriter<File>,
-    costs: Vec<PerDocCosts>,
-    /// Mirror of the sim's ambient attribution (journaled per `put`).
-    attribution: Option<u64>,
-    /// `fsync` the journal on every append (durable against power loss,
-    /// not just process death). Off by default: process-death durability
-    /// only needs the flush.
-    sync_writes: bool,
-    /// Set on a failed journal append / file op: the in-memory state and
-    /// the durable record may disagree, so all further ops are refused.
-    wedged: Option<String>,
-    recovery: Option<RecoveryReport>,
-}
+/// write-ahead journal for crash recovery.
+///
+/// [`StorageBackend`]: super::backend::StorageBackend
+pub type FsBackend = DurableBackend<FsStore>;
 
-impl FsBackend {
+impl DurableBackend<FsStore> {
     /// Whether `root` already holds a write-ahead journal from a previous
     /// backend instance. The fresh-root guards of the demo/fleet surfaces
     /// use this (their stream and document ids restart at 0, so journaled
     /// residents from an earlier run would collide).
     pub fn has_journal(root: impl AsRef<Path>) -> bool {
-        root.as_ref().join(JOURNAL_FILE).exists()
+        Self::journal_path(root).exists()
+    }
+
+    /// Where a backend rooted at `root` keeps its write-ahead journal —
+    /// the single source of the file name (tests and tooling resolve it
+    /// here instead of hardcoding the literal).
+    pub fn journal_path(root: impl AsRef<Path>) -> PathBuf {
+        root.as_ref().join(JOURNAL_FILE)
     }
 
     /// Open (or create) a backend rooted at `root` with one directory per
@@ -112,524 +146,28 @@ impl FsBackend {
     /// `costs` and `charge_rent` must match the journal header exactly.
     pub fn open(
         root: impl Into<PathBuf>,
-        costs: Vec<PerDocCosts>,
+        costs: Vec<crate::cost::PerDocCosts>,
         charge_rent: bool,
     ) -> Result<Self> {
         let root = root.into();
-        if costs.len() < 2 {
-            bail!("fs backend needs at least two tiers (got {})", costs.len());
-        }
-        fs::create_dir_all(&root)
-            .with_context(|| format!("creating backend root {}", root.display()))?;
-        for i in 0..costs.len() {
-            let dir = root.join(format!("tier-{i}"));
-            fs::create_dir_all(&dir)
-                .with_context(|| format!("creating tier directory {}", dir.display()))?;
-        }
-        let journal_path = root.join(JOURNAL_FILE);
-        let (state, recovery, journal) = if journal_path.exists() {
-            recover(&root, &journal_path, &costs, charge_rent)?
-        } else {
-            let mut file = File::create(&journal_path)
-                .with_context(|| format!("creating journal {}", journal_path.display()))?;
-            file.write_all(header_line(&costs, charge_rent).as_bytes())
-                .context("writing journal header")?;
-            (StorageSim::with_tiers(costs.clone(), charge_rent), None, file)
-        };
-        Ok(Self {
-            root,
-            state,
-            journal: BufWriter::new(journal),
-            costs,
-            attribution: None,
-            sync_writes: false,
-            wedged: None,
-            recovery,
-        })
-    }
-
-    /// `fsync` the journal on every append (power-loss durability).
-    pub fn with_sync(mut self, sync: bool) -> Self {
-        self.sync_writes = sync;
-        self
+        let journal_path = Self::journal_path(&root);
+        open_durable(FsStore { root }, journal_path, costs, charge_rent)
     }
 
     /// Backend root directory.
     pub fn root(&self) -> &Path {
-        &self.root
-    }
-
-    /// The recovery report, if this backend was opened over an existing
-    /// journal (None on a fresh root).
-    pub fn recovery(&self) -> Option<&RecoveryReport> {
-        self.recovery.as_ref()
-    }
-
-    /// Declared per-tier cost tables (the journal-header economics).
-    pub fn tier_costs(&self) -> &[PerDocCosts] {
-        &self.costs
-    }
-
-    fn doc_path(&self, tier: TierId, doc: u64) -> PathBuf {
-        self.root.join(format!("tier-{}", tier.0)).join(format!("{doc}.doc"))
-    }
-
-    fn ensure_live(&self) -> Result<()> {
-        if let Some(why) = &self.wedged {
-            bail!("fs backend is wedged ({why}) — reopen from the journal to recover");
-        }
-        Ok(())
-    }
-
-    /// Append one journal line (flushing, optionally fsyncing). A failure
-    /// wedges the backend: the applied state is no longer durably
-    /// recorded.
-    fn append(&mut self, line: String) -> Result<()> {
-        let res = (|| -> Result<()> {
-            self.journal.write_all(line.as_bytes())?;
-            self.journal.write_all(b"\n")?;
-            self.journal.flush()?;
-            if self.sync_writes {
-                self.journal.get_ref().sync_data()?;
-            }
-            Ok(())
-        })();
-        if let Err(e) = &res {
-            self.wedged = Some(format!("journal append failed: {e:#}"));
-        }
-        res
-    }
-
-    /// Run a document-file operation, wedging the backend on failure (the
-    /// journal already records the op, so only a reopen can reconcile).
-    fn file_op(&mut self, res: std::io::Result<()>, what: &str) -> Result<()> {
-        match res {
-            Ok(()) => Ok(()),
-            Err(e) => {
-                self.wedged = Some(format!("{what}: {e}"));
-                bail!("{what}: {e} (backend wedged; reopen to recover from the journal)");
-            }
-        }
-    }
-
-    /// Move a document file between tier directories. A missing source
-    /// (crash window between journal append and file op) is repaired by
-    /// recreating the file at the destination.
-    fn move_doc_file(&mut self, from: TierId, to: TierId, doc: u64, at: f64) -> Result<()> {
-        let src = self.doc_path(from, doc);
-        let dst = self.doc_path(to, doc);
-        match fs::rename(&src, &dst) {
-            Ok(()) => Ok(()),
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                let res = write_doc_file(&dst, doc, at);
-                self.file_op(res, "recreating migrated document file")
-            }
-            Err(e) => self.file_op(Err(e), "moving document file"),
-        }
-    }
-}
-
-// ---- journal encoding ------------------------------------------------------
-
-fn fmt_bits(x: f64) -> String {
-    format!("{:x}", x.to_bits())
-}
-
-fn parse_bits(s: &str) -> Result<f64> {
-    u64::from_str_radix(s, 16)
-        .map(f64::from_bits)
-        .with_context(|| format!("bad f64 bits '{s}'"))
-}
-
-fn fmt_costs(costs: &[PerDocCosts]) -> String {
-    costs
-        .iter()
-        .map(|c| {
-            format!(
-                "{}:{}:{}",
-                fmt_bits(c.write),
-                fmt_bits(c.read),
-                fmt_bits(c.rent_window)
-            )
-        })
-        .collect::<Vec<_>>()
-        .join(",")
-}
-
-fn parse_costs(s: &str) -> Result<Vec<PerDocCosts>> {
-    s.split(',')
-        .map(|entry| {
-            let mut it = entry.split(':');
-            let write = parse_bits(it.next().unwrap_or(""))?;
-            let read = parse_bits(it.next().context("cost entry missing read")?)?;
-            let rent_window = parse_bits(it.next().context("cost entry missing rent")?)?;
-            if it.next().is_some() {
-                bail!("cost entry '{entry}' has trailing fields");
-            }
-            Ok(PerDocCosts { write, read, rent_window })
-        })
-        .collect()
-}
-
-fn header_line(costs: &[PerDocCosts], charge_rent: bool) -> String {
-    format!(
-        "{JOURNAL_MAGIC} v{JOURNAL_VERSION} rent={} costs={}\n",
-        u8::from(charge_rent),
-        fmt_costs(costs)
-    )
-}
-
-fn parse_u64(s: &str) -> Result<u64> {
-    s.parse::<u64>().with_context(|| format!("bad integer '{s}'"))
-}
-
-/// Apply one journal line to the accounting state. Journal lines are only
-/// written for operations that already succeeded, so replay against an
-/// uncapacitated fresh state must succeed too.
-fn replay_line(state: &mut StorageSim, line: &str) -> Result<()> {
-    let mut parts = line.split(' ');
-    let op = parts.next().unwrap_or("");
-    let mut next = |what: &str| -> Result<&str> {
-        parts.next().with_context(|| format!("'{op}' record missing {what}"))
-    };
-    match op {
-        "put" => {
-            let doc = parse_u64(next("doc")?)?;
-            let tier = parse_u64(next("tier")?)? as usize;
-            let at = parse_bits(next("at")?)?;
-            let owner = match next("owner")? {
-                "-" => None,
-                s => Some(parse_u64(s)?),
-            };
-            state.set_attribution(owner);
-            state.put(doc, TierId(tier), at)?;
-        }
-        "del" => {
-            let doc = parse_u64(next("doc")?)?;
-            let at = parse_bits(next("at")?)?;
-            state.delete(doc, at)?;
-        }
-        "read" => {
-            let doc = parse_u64(next("doc")?)?;
-            state.read(doc)?;
-        }
-        "mig" => {
-            let doc = parse_u64(next("doc")?)?;
-            let to = parse_u64(next("to")?)? as usize;
-            let at = parse_bits(next("at")?)?;
-            state.migrate_doc(doc, TierId(to), at)?;
-        }
-        "migall" => {
-            let from = parse_u64(next("from")?)? as usize;
-            let to = parse_u64(next("to")?)? as usize;
-            let at = parse_bits(next("at")?)?;
-            state.migrate_all(TierId(from), TierId(to), at)?;
-        }
-        "settle" => {
-            let at = parse_bits(next("at")?)?;
-            state.settle_rent(at);
-        }
-        "reg" => {
-            let stream = parse_u64(next("stream")?)?;
-            let costs = parse_costs(next("costs")?)?;
-            state.register_stream(stream, costs)?;
-        }
-        other => bail!("unknown journal op '{other}'"),
-    }
-    Ok(())
-}
-
-// ---- document files --------------------------------------------------------
-
-/// Document payload: the doc id plus its written-at bits — real bytes the
-/// read path verifies, not a zero-length marker.
-fn write_doc_file(path: &Path, doc: u64, at: f64) -> std::io::Result<()> {
-    let mut bytes = [0u8; 16];
-    bytes[..8].copy_from_slice(&doc.to_le_bytes());
-    bytes[8..].copy_from_slice(&at.to_bits().to_le_bytes());
-    fs::write(path, bytes)
-}
-
-// ---- recovery --------------------------------------------------------------
-
-fn recover(
-    root: &Path,
-    journal_path: &Path,
-    costs: &[PerDocCosts],
-    charge_rent: bool,
-) -> Result<(StorageSim, Option<RecoveryReport>, File)> {
-    let text = fs::read_to_string(journal_path)
-        .with_context(|| format!("reading journal {}", journal_path.display()))?;
-    let mut report = RecoveryReport::default();
-    // Replay with unbounded capacities: the journal only records
-    // operations that succeeded, and capacity is runtime configuration
-    // that the caller re-applies after open.
-    let mut state = StorageSim::with_tiers(costs.to_vec(), charge_rent);
-    let mut valid_len = 0usize;
-    let mut saw_header = false;
-    for (idx, seg) in text.split_inclusive('\n').enumerate() {
-        if !seg.ends_with('\n') {
-            // torn trailing write: the op never durably happened
-            report.truncated_tail = true;
-            break;
-        }
-        let line = &seg[..seg.len() - 1];
-        if !saw_header {
-            let expected = header_line(costs, charge_rent);
-            if seg != expected {
-                bail!(
-                    "journal {} header mismatch: backend opened with different \
-                     economics (journal '{}', expected '{}')",
-                    journal_path.display(),
-                    line,
-                    expected.trim_end()
-                );
-            }
-            saw_header = true;
-        } else if !line.is_empty() {
-            replay_line(&mut state, line)
-                .with_context(|| format!("journal line {}", idx + 1))?;
-            report.ops_replayed += 1;
-        }
-        valid_len += seg.len();
-    }
-    if !saw_header {
-        // No complete header means no operation was ever durably recorded
-        // (ops only follow a header): the process died while the journal
-        // was being created. Heal with a fresh header (below) instead of
-        // bricking the root; the reconcile pass removes any stray files.
-        report.truncated_tail = true;
-    }
-    state.set_attribution(None);
-
-    // Reconcile document files against the replayed residency: recreate
-    // what is missing, remove what nothing owns.
-    for t in 0..costs.len() {
-        let tier = TierId(t);
-        let mut expected: BTreeMap<u64, f64> = state
-            .tier(tier)
-            .docs()
-            .into_iter()
-            .map(|d| (d, state.tier(tier).get(d).expect("doc listed").written_at))
-            .collect();
-        let dir = root.join(format!("tier-{t}"));
-        for entry in
-            fs::read_dir(&dir).with_context(|| format!("listing {}", dir.display()))?
-        {
-            let entry = entry?;
-            let name = entry.file_name();
-            let Some(stem) = name.to_string_lossy().strip_suffix(".doc").map(String::from)
-            else {
-                continue; // not a managed document file
-            };
-            let resident_at = stem.parse::<u64>().ok().and_then(|doc| {
-                expected.remove(&doc).map(|at| (doc, at))
-            });
-            match resident_at {
-                Some((doc, at)) => {
-                    // a crash mid-write can leave a torn payload under a
-                    // matching name — validate what read() will check and
-                    // rewrite from the replayed state if it is corrupt
-                    let intact = fs::read(entry.path())
-                        .map(|b| b.len() >= 8 && b[..8] == doc.to_le_bytes())
-                        .unwrap_or(false);
-                    if !intact {
-                        write_doc_file(&entry.path(), doc, at).with_context(|| {
-                            format!("rewriting torn file {}", entry.path().display())
-                        })?;
-                        report.files_recreated += 1;
-                    }
-                }
-                None => {
-                    fs::remove_file(entry.path()).with_context(|| {
-                        format!("removing orphan file {}", entry.path().display())
-                    })?;
-                    report.files_removed += 1;
-                }
-            }
-        }
-        for (doc, at) in expected {
-            let path = dir.join(format!("{doc}.doc"));
-            write_doc_file(&path, doc, at)
-                .with_context(|| format!("recreating {}", path.display()))?;
-            report.files_recreated += 1;
-        }
-    }
-
-    // Drop the torn tail (if any) so appends start on a clean line; a
-    // torn *header* resets the whole journal to a fresh header.
-    if !saw_header {
-        fs::write(journal_path, header_line(costs, charge_rent))
-            .context("rewriting torn journal header")?;
-    } else if report.truncated_tail {
-        let file = OpenOptions::new().write(true).open(journal_path)?;
-        file.set_len(valid_len as u64)
-            .context("truncating torn journal tail")?;
-    }
-    let file = OpenOptions::new().append(true).open(journal_path)?;
-    Ok((state, Some(report), file))
-}
-
-// ---- the StorageBackend impl -----------------------------------------------
-
-impl StorageBackend for FsBackend {
-    fn backend_name(&self) -> String {
-        "fs".into()
-    }
-
-    fn num_tiers(&self) -> usize {
-        self.state.num_tiers()
-    }
-
-    fn put(&mut self, doc: u64, tier: TierId, at: f64) -> Result<()> {
-        self.ensure_live()?;
-        self.state.put(doc, tier, at)?;
-        let owner = match self.attribution {
-            Some(s) => s.to_string(),
-            None => "-".into(),
-        };
-        self.append(format!("put {doc} {} {} {owner}", tier.0, fmt_bits(at)))?;
-        let res = write_doc_file(&self.doc_path(tier, doc), doc, at);
-        self.file_op(res, "writing document file")
-    }
-
-    fn delete(&mut self, doc: u64, at: f64) -> Result<TierId> {
-        self.ensure_live()?;
-        let tier = self.state.delete(doc, at)?;
-        self.append(format!("del {doc} {}", fmt_bits(at)))?;
-        match fs::remove_file(self.doc_path(tier, doc)) {
-            // already gone: a crash window earlier never materialized it
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(tier),
-            res => self.file_op(res, "removing document file").map(|()| tier),
-        }
-    }
-
-    fn read(&mut self, doc: u64) -> Result<TierId> {
-        self.ensure_live()?;
-        let Some(tier) = self.state.locate(doc) else {
-            bail!("read: doc {doc} not resident");
-        };
-        let path = self.doc_path(tier, doc);
-        let bytes =
-            fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
-        if bytes.len() < 8 || bytes[..8] != doc.to_le_bytes() {
-            bail!("corrupt document file {}", path.display());
-        }
-        self.state.read(doc)?;
-        self.append(format!("read {doc}"))?;
-        Ok(tier)
-    }
-
-    fn migrate_doc(&mut self, doc: u64, to: TierId, at: f64) -> Result<()> {
-        self.ensure_live()?;
-        let Some(from) = self.state.locate(doc) else {
-            bail!("migrate: doc {doc} not resident");
-        };
-        if from == to {
-            return Ok(());
-        }
-        self.state.migrate_doc(doc, to, at)?;
-        self.append(format!("mig {doc} {} {}", to.0, fmt_bits(at)))?;
-        self.move_doc_file(from, to, doc, at)
-    }
-
-    fn migrate_all(&mut self, from: TierId, to: TierId, at: f64) -> Result<u64> {
-        self.ensure_live()?;
-        let tiers = self.state.num_tiers();
-        if from.0 >= tiers || to.0 >= tiers {
-            // delegate the bounds error (moves nothing)
-            return self.state.migrate_all(from, to, at);
-        }
-        let docs = self.state.tier(from).docs();
-        // all-or-nothing headroom check happens inside the state machine;
-        // a doomed migration journals and moves nothing
-        let n = self.state.migrate_all(from, to, at)?;
-        if n == 0 {
-            return Ok(0); // same-tier or empty source: nothing to record
-        }
-        self.append(format!("migall {} {} {}", from.0, to.0, fmt_bits(at)))?;
-        for doc in docs {
-            self.move_doc_file(from, to, doc, at)?;
-        }
-        Ok(n)
-    }
-
-    fn settle_rent(&mut self, at: f64) -> Result<()> {
-        self.ensure_live()?;
-        self.state.settle_rent(at);
-        self.append(format!("settle {}", fmt_bits(at)))
-    }
-
-    fn locate(&self, doc: u64) -> Option<TierId> {
-        self.state.locate(doc)
-    }
-
-    fn resident_len(&self, tier: TierId) -> usize {
-        self.state.tier(tier).len()
-    }
-
-    fn residents(&self, tier: TierId) -> Vec<Resident> {
-        let t = self.state.tier(tier);
-        let mut v: Vec<Resident> = t.docs().iter().map(|d| *t.get(*d).unwrap()).collect();
-        v.sort_by_key(|r| r.doc);
-        v
-    }
-
-    fn resident_count(&self) -> usize {
-        self.state.resident_count()
-    }
-
-    fn oldest_resident(&self, tier: TierId) -> Option<u64> {
-        self.state.oldest_resident(tier)
-    }
-
-    fn owner_of(&self, doc: u64) -> Option<u64> {
-        self.state.owner_of(doc)
-    }
-
-    fn docs_of_stream(&self, stream: u64) -> Vec<u64> {
-        self.state.docs_of_stream(stream)
-    }
-
-    fn set_capacity(&mut self, tier: TierId, capacity: Option<usize>) {
-        self.state.set_capacity(tier, capacity);
-    }
-
-    fn capacity(&self, tier: TierId) -> Option<usize> {
-        self.state.tier(tier).capacity()
-    }
-
-    fn has_room(&self, tier: TierId) -> bool {
-        self.state.has_room(tier)
-    }
-
-    fn peak_occupancy(&self, tier: TierId) -> usize {
-        self.state.peak_occupancy(tier)
-    }
-
-    fn set_attribution(&mut self, stream: Option<u64>) {
-        self.attribution = stream;
-        self.state.set_attribution(stream);
-    }
-
-    fn register_stream(&mut self, stream: u64, costs: Vec<PerDocCosts>) -> Result<()> {
-        self.ensure_live()?;
-        self.state.register_stream(stream, costs.clone())?;
-        self.append(format!("reg {stream} {}", fmt_costs(&costs)))
-    }
-
-    fn ledger(&self) -> &Ledger {
-        self.state.ledger()
-    }
-
-    fn stream_ledger(&self, stream: u64) -> Ledger {
-        self.state.stream_ledger(stream)
+        &self.store.root
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::backend::StorageBackend;
+    use super::super::sim::StorageSim;
     use super::*;
+    use crate::cost::PerDocCosts;
+    use std::fs::OpenOptions;
+    use std::io::Write;
 
     fn scratch(tag: &str) -> PathBuf {
         crate::util::scratch_dir(&format!("fs-{tag}"))
@@ -642,33 +180,15 @@ mod tests {
         ]
     }
 
-    fn ledgers_equal(a: &Ledger, b: &Ledger) -> bool {
+    fn ledgers_equal(a: &super::super::Ledger, b: &super::super::Ledger) -> bool {
         (a.total() - b.total()).abs() < 1e-12
             && a.total_writes() == b.total_writes()
             && a.total_reads() == b.total_reads()
             && (a.migration_total() - b.migration_total()).abs() < 1e-12
     }
 
-    /// Drive the same op sequence through the sim and the fs backend.
-    fn mixed_ops(b: &mut dyn StorageBackend) {
-        b.set_attribution(Some(0));
-        b.register_stream(
-            0,
-            vec![
-                PerDocCosts { write: 1.5, read: 9.0, rent_window: 50.0 },
-                PerDocCosts { write: 2.5, read: 19.0, rent_window: 150.0 },
-            ],
-        )
-        .unwrap();
-        b.put(1, TierId::A, 0.0).unwrap();
-        b.put(2, TierId::A, 0.1).unwrap();
-        b.set_attribution(Some(1));
-        b.put(3, TierId::B, 0.2).unwrap();
-        b.read(1).unwrap();
-        b.migrate_doc(2, TierId::B, 0.5).unwrap();
-        b.delete(3, 0.6).unwrap();
-        b.settle_rent(1.0).unwrap();
-    }
+    // the canonical parity op sequence, shared with the object suite
+    use crate::util::backends::exercise_mixed_ops as mixed_ops;
 
     #[test]
     fn fs_matches_sim_ledger_exactly() {
@@ -864,6 +384,119 @@ mod tests {
         assert_eq!(b.capacity(TierId::A), None);
         b.set_capacity(TierId::A, Some(1));
         assert!(!b.has_room(TierId::A));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    fn journal_op_lines(root: &Path) -> Vec<String> {
+        fs::read_to_string(root.join(JOURNAL_FILE))
+            .unwrap()
+            .lines()
+            .skip(1) // header
+            .map(String::from)
+            .collect()
+    }
+
+    #[test]
+    fn migrate_stream_journals_one_record_per_batch() {
+        let root = scratch("migstream");
+        let mut b = FsBackend::open(&root, costs(), false).unwrap();
+        b.set_attribution(Some(7));
+        for d in 0..6 {
+            b.put(d, TierId::A, 0.1).unwrap();
+        }
+        b.set_attribution(Some(8));
+        b.put(100, TierId::A, 0.1).unwrap();
+        let ops_before = b.journal_ops();
+        assert_eq!(b.migrate_stream(7, TierId::A, TierId::B, 0.5).unwrap(), 6);
+        assert_eq!(b.journal_ops(), ops_before + 1, "one record for six documents");
+        let last = journal_op_lines(&root).pop().unwrap();
+        assert!(last.starts_with("migstream 7 0 1 "), "{last}");
+        // only stream 7's documents moved, files followed
+        assert_eq!(b.resident_len(TierId::A), 1);
+        assert_eq!(b.resident_len(TierId::B), 6);
+        assert!(root.join("tier-0").join("100.doc").exists());
+        assert!(root.join("tier-1").join("3.doc").exists());
+        // a kill-and-reopen replays the batch from the single record
+        drop(b);
+        let b = FsBackend::open(&root, costs(), false).unwrap();
+        assert_eq!(b.resident_len(TierId::B), 6);
+        assert_eq!(b.owner_of(100), Some(8));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn doomed_migrate_stream_is_a_noop() {
+        let root = scratch("migstream-doomed");
+        let mut b = FsBackend::open(&root, costs(), true).unwrap();
+        b.set_attribution(Some(1));
+        for d in 0..4 {
+            b.put(d, TierId::A, 0.1).unwrap();
+        }
+        b.set_capacity(TierId::B, Some(2));
+        let before = b.ledger().total();
+        let ops = b.journal_ops();
+        assert!(b.migrate_stream(1, TierId::A, TierId::B, 0.5).is_err());
+        assert_eq!(b.resident_len(TierId::A), 4, "all-or-nothing");
+        assert_eq!(b.ledger().total(), before);
+        assert_eq!(b.journal_ops(), ops, "a doomed batch is not journaled");
+        // a stream with no residents in the source is an empty batch
+        assert_eq!(b.migrate_stream(9, TierId::A, TierId::B, 0.5).unwrap(), 0);
+        assert_eq!(b.journal_ops(), ops);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn checkpoint_compacts_and_reopen_replays_suffix() {
+        let root = scratch("ckpt");
+        let total;
+        let stream0;
+        {
+            let mut b = FsBackend::open(&root, costs(), true).unwrap();
+            mixed_ops(&mut b);
+            let ops = b.journal_ops();
+            assert!(ops >= 8);
+            let report = b.checkpoint().unwrap();
+            assert_eq!(report.ops_folded, ops);
+            assert_eq!(report.ops_after, 0);
+            assert_eq!(report.live_docs, b.resident_count() as u64);
+            assert_eq!(b.journal_ops(), 0);
+            // post-checkpoint ops form the replay suffix
+            b.put(50, TierId::A, 0.7).unwrap();
+            b.read(50).unwrap();
+            assert_eq!(b.journal_ops(), 2);
+            total = b.ledger().total();
+            stream0 = b.stream_ledger(0).total();
+            // killed here
+        }
+        let b = FsBackend::open(&root, costs(), true).unwrap();
+        let rec = b.recovery().unwrap().clone();
+        assert_eq!(rec.checkpoints_loaded, 1);
+        assert_eq!(rec.ops_replayed, 2, "only the suffix replays");
+        assert!((b.ledger().total() - total).abs() < 1e-12);
+        assert!((b.stream_ledger(0).total() - stream0).abs() < 1e-12);
+        assert_eq!(b.locate(50), Some(TierId::A));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn checkpointed_journal_size_tracks_live_state_not_op_count() {
+        let root = scratch("ckpt-size");
+        let mut b = FsBackend::open(&root, costs(), false).unwrap();
+        // churn: many ops, tiny live state
+        for round in 0..50u64 {
+            b.put(round, TierId::A, 0.0).unwrap();
+            b.migrate_doc(round, TierId::B, 0.4).unwrap();
+            b.delete(round, 0.8).unwrap();
+        }
+        b.put(1000, TierId::A, 0.9).unwrap();
+        b.checkpoint().unwrap();
+        let lines = fs::read_to_string(root.join(JOURNAL_FILE)).unwrap().lines().count();
+        // header + begin/end + 1 cdoc + ledger rows (2 tiers) + peaks (2)
+        assert!(lines <= 10, "compacted journal has {lines} lines");
+        drop(b);
+        let b = FsBackend::open(&root, costs(), false).unwrap();
+        assert_eq!(b.locate(1000), Some(TierId::A));
+        assert_eq!(b.resident_count(), 1);
         let _ = fs::remove_dir_all(&root);
     }
 }

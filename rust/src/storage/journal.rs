@@ -1,0 +1,617 @@
+//! The write-ahead journal shared by every durable [`StorageBackend`]
+//! (ADR-003 laid it down for the filesystem backend; ADR-005 extracts it
+//! here so the object-store backend's manifest log is the same machinery).
+//!
+//! ## Record grammar
+//!
+//! One line per record; window fractions, costs, and ledger dollars are
+//! hexadecimal `f64::to_bits`, so replay is bit-exact:
+//!
+//! ```text
+//! shptier-fs v1 rent=<0|1> costs=<w:r:rw,...>      # header
+//! put <doc> <tier> <at-bits> <owner|->
+//! del <doc> <at-bits>
+//! read <doc>
+//! mig <doc> <to> <at-bits>
+//! migall <from> <to> <at-bits>
+//! migstream <stream> <from> <to> <at-bits>         # one record per bulk batch
+//! settle <at-bits>
+//! reg <stream> <w:r:rw,...>
+//! ckpt-begin <body-lines>                          # checkpoint block...
+//! cdoc <doc> <tier> <at-bits> <owner|->            #   residency + rent clock
+//! creg <stream> <w:r:rw,...>                       #   stream economics
+//! cled <stream|-> <tier> <charges...>              #   ledger rows (run + per-stream)
+//! cpeak <tier> <peak>                              #   occupancy high-water marks
+//! ckpt-end                                         # ...complete only with this
+//! ```
+//!
+//! ## Checkpoint / compaction (two-phase)
+//!
+//! [`Journal::checkpoint`] first *appends* a checkpoint block to the live
+//! journal (a kill here leaves `header + ops + torn block`, and recovery
+//! falls back to replaying the ops), then *compacts*: the journal is
+//! rewritten as `header + block` into a temp file and atomically renamed
+//! over the old one (a kill here leaves either file intact — never a
+//! mix). After compaction the journal's length is a function of live
+//! state only, never of operation count.
+//!
+//! ## Replay
+//!
+//! [`replay`] scans the journal once: the latest *complete* checkpoint
+//! block resets the accounting state to its snapshot, op records apply on
+//! top, a torn trailing line (or torn checkpoint block) is dropped, and a
+//! torn *header* heals to a fresh journal. The file is healed in place so
+//! subsequent appends land on a clean line.
+
+use super::ledger::TierCharges;
+use super::sim::StorageSim;
+use super::tier::TierId;
+use crate::cost::PerDocCosts;
+use anyhow::{bail, Context, Result};
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+pub(crate) const JOURNAL_MAGIC: &str = "shptier-fs";
+pub(crate) const JOURNAL_VERSION: u32 = 1;
+
+// ---- scalar encoding -------------------------------------------------------
+
+pub(crate) fn fmt_bits(x: f64) -> String {
+    format!("{:x}", x.to_bits())
+}
+
+pub(crate) fn parse_bits(s: &str) -> Result<f64> {
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .with_context(|| format!("bad f64 bits '{s}'"))
+}
+
+pub(crate) fn parse_u64(s: &str) -> Result<u64> {
+    s.parse::<u64>().with_context(|| format!("bad integer '{s}'"))
+}
+
+pub(crate) fn fmt_costs(costs: &[PerDocCosts]) -> String {
+    costs
+        .iter()
+        .map(|c| {
+            format!(
+                "{}:{}:{}",
+                fmt_bits(c.write),
+                fmt_bits(c.read),
+                fmt_bits(c.rent_window)
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+pub(crate) fn parse_costs(s: &str) -> Result<Vec<PerDocCosts>> {
+    s.split(',')
+        .map(|entry| {
+            let mut it = entry.split(':');
+            let write = parse_bits(it.next().unwrap_or(""))?;
+            let read = parse_bits(it.next().context("cost entry missing read")?)?;
+            let rent_window = parse_bits(it.next().context("cost entry missing rent")?)?;
+            if it.next().is_some() {
+                bail!("cost entry '{entry}' has trailing fields");
+            }
+            Ok(PerDocCosts { write, read, rent_window })
+        })
+        .collect()
+}
+
+pub(crate) fn header_line(costs: &[PerDocCosts], charge_rent: bool) -> String {
+    format!(
+        "{JOURNAL_MAGIC} v{JOURNAL_VERSION} rent={} costs={}\n",
+        u8::from(charge_rent),
+        fmt_costs(costs)
+    )
+}
+
+fn fmt_owner(owner: Option<u64>) -> String {
+    match owner {
+        Some(s) => s.to_string(),
+        None => "-".into(),
+    }
+}
+
+fn parse_owner(s: &str) -> Result<Option<u64>> {
+    match s {
+        "-" => Ok(None),
+        other => Ok(Some(parse_u64(other)?)),
+    }
+}
+
+fn fmt_charges(c: &TierCharges) -> String {
+    format!(
+        "{} {} {} {} {} {} {} {} {}",
+        c.writes,
+        fmt_bits(c.write_cost),
+        c.reads,
+        fmt_bits(c.read_cost),
+        c.deletes,
+        fmt_bits(c.rent_doc_windows),
+        fmt_bits(c.rent_cost),
+        c.migration_ops,
+        fmt_bits(c.migration_cost)
+    )
+}
+
+// ---- op replay -------------------------------------------------------------
+
+/// Apply one journal op record to the accounting state. Op records are
+/// only written for operations that already succeeded, so replay against
+/// an uncapacitated fresh state must succeed too.
+pub(crate) fn replay_line(state: &mut StorageSim, line: &str) -> Result<()> {
+    let mut parts = line.split(' ');
+    let op = parts.next().unwrap_or("");
+    let mut next = |what: &str| -> Result<&str> {
+        parts.next().with_context(|| format!("'{op}' record missing {what}"))
+    };
+    match op {
+        "put" => {
+            let doc = parse_u64(next("doc")?)?;
+            let tier = parse_u64(next("tier")?)? as usize;
+            let at = parse_bits(next("at")?)?;
+            let owner = parse_owner(next("owner")?)?;
+            state.set_attribution(owner);
+            state.put(doc, TierId(tier), at)?;
+        }
+        "del" => {
+            let doc = parse_u64(next("doc")?)?;
+            let at = parse_bits(next("at")?)?;
+            state.delete(doc, at)?;
+        }
+        "read" => {
+            let doc = parse_u64(next("doc")?)?;
+            state.read(doc)?;
+        }
+        "mig" => {
+            let doc = parse_u64(next("doc")?)?;
+            let to = parse_u64(next("to")?)? as usize;
+            let at = parse_bits(next("at")?)?;
+            state.migrate_doc(doc, TierId(to), at)?;
+        }
+        "migall" => {
+            let from = parse_u64(next("from")?)? as usize;
+            let to = parse_u64(next("to")?)? as usize;
+            let at = parse_bits(next("at")?)?;
+            state.migrate_all(TierId(from), TierId(to), at)?;
+        }
+        "migstream" => {
+            let stream = parse_u64(next("stream")?)?;
+            let from = parse_u64(next("from")?)? as usize;
+            let to = parse_u64(next("to")?)? as usize;
+            let at = parse_bits(next("at")?)?;
+            state.migrate_stream(stream, TierId(from), TierId(to), at)?;
+        }
+        "settle" => {
+            let at = parse_bits(next("at")?)?;
+            state.settle_rent(at);
+        }
+        "reg" => {
+            let stream = parse_u64(next("stream")?)?;
+            let costs = parse_costs(next("costs")?)?;
+            state.register_stream(stream, costs)?;
+        }
+        other => bail!("unknown journal op '{other}'"),
+    }
+    Ok(())
+}
+
+// ---- checkpoint encoding ---------------------------------------------------
+
+/// Serialize the full accounting state as a checkpoint block (every line
+/// `\n`-terminated, `ckpt-begin`/`ckpt-end` included). Deterministic:
+/// docs, streams, and ledger rows come out sorted.
+pub(crate) fn checkpoint_block(state: &StorageSim) -> String {
+    let mut body: Vec<String> = Vec::new();
+    for t in 0..state.num_tiers() {
+        let tier = state.tier(TierId(t));
+        for doc in tier.docs() {
+            let r = tier.get(doc).expect("doc listed by its tier");
+            body.push(format!(
+                "cdoc {doc} {t} {} {}",
+                fmt_bits(r.written_at),
+                fmt_owner(r.owner)
+            ));
+        }
+    }
+    for (stream, costs) in state.registered_streams() {
+        body.push(format!("creg {stream} {}", fmt_costs(costs)));
+    }
+    for (tier, charges) in state.ledger().tiers() {
+        body.push(format!("cled - {} {}", tier.0, fmt_charges(charges)));
+    }
+    for (stream, ledger) in state.stream_ledgers() {
+        for (tier, charges) in ledger.tiers() {
+            body.push(format!("cled {stream} {} {}", tier.0, fmt_charges(charges)));
+        }
+    }
+    for t in 0..state.num_tiers() {
+        let peak = state.tier(TierId(t)).peak_len();
+        if peak > 0 {
+            body.push(format!("cpeak {t} {peak}"));
+        }
+    }
+    let mut out = format!("ckpt-begin {}\n", body.len());
+    for line in &body {
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push_str("ckpt-end\n");
+    out
+}
+
+/// Rebuild the accounting state from a complete checkpoint block body.
+fn restore_checkpoint(
+    body: &[&str],
+    costs: &[PerDocCosts],
+    charge_rent: bool,
+) -> Result<StorageSim> {
+    let mut state = StorageSim::with_tiers(costs.to_vec(), charge_rent);
+    for line in body {
+        let mut parts = line.split(' ');
+        let op = parts.next().unwrap_or("");
+        let mut next = |what: &str| -> Result<&str> {
+            parts
+                .next()
+                .with_context(|| format!("'{op}' checkpoint record missing {what}"))
+        };
+        match op {
+            "cdoc" => {
+                let doc = parse_u64(next("doc")?)?;
+                let tier = parse_u64(next("tier")?)? as usize;
+                let at = parse_bits(next("at")?)?;
+                let owner = parse_owner(next("owner")?)?;
+                state.restore_resident(doc, TierId(tier), at, owner)?;
+            }
+            "creg" => {
+                let stream = parse_u64(next("stream")?)?;
+                let costs = parse_costs(next("costs")?)?;
+                state.register_stream(stream, costs)?;
+            }
+            "cled" => {
+                let stream = parse_owner(next("stream")?)?;
+                let tier = parse_u64(next("tier")?)? as usize;
+                let charges = TierCharges {
+                    writes: parse_u64(next("writes")?)?,
+                    write_cost: parse_bits(next("write_cost")?)?,
+                    reads: parse_u64(next("reads")?)?,
+                    read_cost: parse_bits(next("read_cost")?)?,
+                    deletes: parse_u64(next("deletes")?)?,
+                    rent_doc_windows: parse_bits(next("rent_doc_windows")?)?,
+                    rent_cost: parse_bits(next("rent_cost")?)?,
+                    migration_ops: parse_u64(next("migration_ops")?)?,
+                    migration_cost: parse_bits(next("migration_cost")?)?,
+                };
+                state.restore_tier_charges(stream, TierId(tier), charges);
+            }
+            "cpeak" => {
+                let tier = parse_u64(next("tier")?)? as usize;
+                let peak = parse_u64(next("peak")?)? as usize;
+                state.restore_peak(TierId(tier), peak);
+            }
+            other => bail!("unknown checkpoint record '{other}'"),
+        }
+    }
+    state.set_attribution(None);
+    Ok(state)
+}
+
+// ---- replay ----------------------------------------------------------------
+
+/// What a journal scan rebuilt and healed.
+pub(crate) struct Replay {
+    /// The rebuilt accounting state.
+    pub state: StorageSim,
+    /// Op records applied *on top of the latest complete checkpoint* —
+    /// the replay suffix. Ops a loaded checkpoint folded away are not
+    /// counted: their effect arrived via the snapshot, not replay.
+    pub ops_replayed: u64,
+    /// Complete checkpoint blocks loaded (the last one wins).
+    pub checkpoints_loaded: u64,
+    /// Whether a torn trailing line / torn checkpoint block was dropped,
+    /// or a torn header healed.
+    pub truncated_tail: bool,
+}
+
+/// Scan `path`, rebuild the accounting state (latest complete checkpoint
+/// + op suffix), and heal the file in place: drop a torn tail or torn
+/// checkpoint block, rewrite a torn header, remove a stale compaction
+/// temp file. The declared `costs`/`charge_rent` must match the header.
+pub(crate) fn replay(path: &Path, costs: &[PerDocCosts], charge_rent: bool) -> Result<Replay> {
+    let _ = fs::remove_file(tmp_path(path)); // stale compaction attempt
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading journal {}", path.display()))?;
+    let mut state = StorageSim::with_tiers(costs.to_vec(), charge_rent);
+    let mut ops_replayed = 0u64;
+    let mut checkpoints_loaded = 0u64;
+    let mut truncated_tail = false;
+    let mut saw_header = false;
+    let mut valid_len = 0usize;
+
+    let segs: Vec<&str> = text.split_inclusive('\n').collect();
+    let mut i = 0usize;
+    while i < segs.len() {
+        let seg = segs[i];
+        if !seg.ends_with('\n') {
+            // torn trailing write: the record never durably happened
+            truncated_tail = true;
+            break;
+        }
+        let line = &seg[..seg.len() - 1];
+        if !saw_header {
+            let expected = header_line(costs, charge_rent);
+            if seg != expected {
+                bail!(
+                    "journal {} header mismatch: backend opened with different \
+                     economics (journal '{}', expected '{}')",
+                    path.display(),
+                    line,
+                    expected.trim_end()
+                );
+            }
+            saw_header = true;
+            valid_len += seg.len();
+            i += 1;
+            continue;
+        }
+        if line.is_empty() {
+            valid_len += seg.len();
+            i += 1;
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("ckpt-begin ") {
+            let declared = parse_u64(rest.trim())
+                .with_context(|| format!("journal line {}", i + 1))?
+                as usize;
+            // collect the block: complete only if `ckpt-end` arrives on a
+            // complete line
+            let mut body: Vec<&str> = Vec::new();
+            let mut block_len = seg.len();
+            let mut j = i + 1;
+            let mut complete = false;
+            while j < segs.len() {
+                let s = segs[j];
+                if !s.ends_with('\n') {
+                    break;
+                }
+                let l = &s[..s.len() - 1];
+                block_len += s.len();
+                j += 1;
+                if l == "ckpt-end" {
+                    complete = true;
+                    break;
+                }
+                body.push(l);
+            }
+            if !complete {
+                // torn checkpoint: the snapshot never durably finished —
+                // keep the state replayed so far and drop the block
+                truncated_tail = true;
+                break;
+            }
+            if body.len() != declared {
+                bail!(
+                    "journal {} checkpoint at line {} declares {} records but \
+                     carries {}",
+                    path.display(),
+                    i + 1,
+                    declared,
+                    body.len()
+                );
+            }
+            state = restore_checkpoint(&body, costs, charge_rent)
+                .with_context(|| format!("journal checkpoint at line {}", i + 1))?;
+            checkpoints_loaded += 1;
+            // the snapshot superseded everything replayed so far: the
+            // replay suffix (and the report's op count) restarts here
+            ops_replayed = 0;
+            valid_len += block_len;
+            i = j;
+            continue;
+        }
+        replay_line(&mut state, line)
+            .with_context(|| format!("journal line {}", i + 1))?;
+        ops_replayed += 1;
+        valid_len += seg.len();
+        i += 1;
+    }
+    if !saw_header {
+        // No complete header means no operation was ever durably recorded
+        // (records only follow a header): the process died while the
+        // journal was being created. Heal with a fresh header instead of
+        // bricking the root.
+        truncated_tail = true;
+    }
+    state.set_attribution(None);
+
+    // Heal in place so appends land on a clean line.
+    if !saw_header {
+        fs::write(path, header_line(costs, charge_rent))
+            .context("rewriting torn journal header")?;
+    } else if truncated_tail {
+        let file = OpenOptions::new().write(true).open(path)?;
+        file.set_len(valid_len as u64)
+            .context("truncating torn journal tail")?;
+    }
+    Ok(Replay { state, ops_replayed, checkpoints_loaded, truncated_tail })
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+// ---- the append handle -----------------------------------------------------
+
+/// Append handle over a journal file: every record is flushed (and
+/// optionally fsynced) before the caller touches any substrate, and the
+/// op counter tracks the replay suffix on top of the latest checkpoint.
+pub(crate) struct Journal {
+    path: PathBuf,
+    writer: BufWriter<File>,
+    sync_writes: bool,
+    ops: u64,
+}
+
+impl Journal {
+    /// Create a fresh journal holding only the header.
+    pub fn create(path: PathBuf, costs: &[PerDocCosts], charge_rent: bool) -> Result<Self> {
+        let mut file = File::create(&path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        file.write_all(header_line(costs, charge_rent).as_bytes())
+            .context("writing journal header")?;
+        Ok(Self { path, writer: BufWriter::new(file), sync_writes: false, ops: 0 })
+    }
+
+    /// Reopen an existing (already healed) journal for appends.
+    /// `suffix_ops` is the op count [`replay`] found past the latest
+    /// checkpoint.
+    pub fn open_append(path: PathBuf, suffix_ops: u64) -> Result<Self> {
+        let file = OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("reopening journal {}", path.display()))?;
+        Ok(Self { path, writer: BufWriter::new(file), sync_writes: false, ops: suffix_ops })
+    }
+
+    /// `fsync` on every append (power-loss durability, not just process
+    /// death).
+    pub fn set_sync(&mut self, sync: bool) {
+        self.sync_writes = sync;
+    }
+
+    /// Op records currently in the replay suffix (0 right after a
+    /// checkpoint or on a fresh journal).
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    fn write_flush(&mut self, bytes: &[u8]) -> Result<()> {
+        self.writer.write_all(bytes)?;
+        self.writer.flush()?;
+        if self.sync_writes {
+            self.writer.get_ref().sync_data()?;
+        }
+        Ok(())
+    }
+
+    /// Append one op record (no trailing newline in `line`).
+    pub fn append_op(&mut self, line: &str) -> Result<()> {
+        self.write_flush(format!("{line}\n").as_bytes())?;
+        self.ops += 1;
+        Ok(())
+    }
+
+    /// Checkpoint + compact (two-phase, see the module docs): append the
+    /// state snapshot to the live journal, then atomically rewrite the
+    /// journal as `header + snapshot`. On success the replay suffix is
+    /// empty and the journal's size is a function of live state only.
+    pub fn checkpoint(
+        &mut self,
+        state: &StorageSim,
+        costs: &[PerDocCosts],
+        charge_rent: bool,
+    ) -> Result<()> {
+        let block = checkpoint_block(state);
+        // phase 1: the snapshot reaches the durable log before anything
+        // is thrown away (a kill here replays the old history instead)
+        self.write_flush(block.as_bytes()).context("appending checkpoint block")?;
+        // phase 2: compact via temp file + atomic rename
+        let tmp = tmp_path(&self.path);
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(header_line(costs, charge_rent).as_bytes())?;
+            f.write_all(block.as_bytes())?;
+            f.flush()?;
+            if self.sync_writes {
+                f.sync_data()?;
+            }
+        }
+        fs::rename(&tmp, &self.path).context("installing compacted journal")?;
+        let file = OpenOptions::new().append(true).open(&self.path)?;
+        self.writer = BufWriter::new(file);
+        self.ops = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs() -> Vec<PerDocCosts> {
+        vec![
+            PerDocCosts { write: 1.0, read: 10.0, rent_window: 100.0 },
+            PerDocCosts { write: 2.0, read: 20.0, rent_window: 200.0 },
+        ]
+    }
+
+    fn seeded_state() -> StorageSim {
+        let mut s = StorageSim::with_tiers(costs(), true);
+        s.register_stream(
+            3,
+            vec![
+                PerDocCosts { write: 1.5, read: 9.0, rent_window: 50.0 },
+                PerDocCosts { write: 2.5, read: 19.0, rent_window: 150.0 },
+            ],
+        )
+        .unwrap();
+        s.set_attribution(Some(3));
+        s.put(1, TierId::A, 0.0).unwrap();
+        s.put(2, TierId::A, 0.1).unwrap();
+        s.set_attribution(None);
+        s.put(5, TierId::B, 0.2).unwrap();
+        s.read(1).unwrap();
+        s.migrate_doc(2, TierId::B, 0.5).unwrap();
+        s.delete(5, 0.6).unwrap();
+        s
+    }
+
+    #[test]
+    fn checkpoint_block_roundtrips_the_full_state() {
+        let state = seeded_state();
+        let block = checkpoint_block(&state);
+        let body: Vec<&str> = block
+            .lines()
+            .filter(|l| !l.starts_with("ckpt-begin") && *l != "ckpt-end")
+            .collect();
+        let restored = restore_checkpoint(&body, &costs(), true).unwrap();
+        assert_eq!(restored.resident_count(), state.resident_count());
+        assert_eq!(restored.locate(1), state.locate(1));
+        assert_eq!(restored.locate(2), state.locate(2));
+        assert_eq!(restored.owner_of(1), Some(3));
+        assert_eq!(restored.ledger().total().to_bits(), state.ledger().total().to_bits());
+        assert_eq!(
+            restored.stream_ledger(3).total().to_bits(),
+            state.stream_ledger(3).total().to_bits()
+        );
+        assert_eq!(
+            restored.tier(TierId::A).peak_len(),
+            state.tier(TierId::A).peak_len()
+        );
+        // rent clocks survive: settling both charges identical rent
+        let mut a = state;
+        let mut b = restored;
+        a.settle_rent(1.0);
+        b.settle_rent(1.0);
+        assert_eq!(a.ledger().total().to_bits(), b.ledger().total().to_bits());
+    }
+
+    #[test]
+    fn checkpoint_declared_count_is_validated() {
+        let root = crate::util::scratch_dir("journal-count");
+        fs::create_dir_all(&root).unwrap();
+        let path = root.join("journal.log");
+        let mut text = header_line(&costs(), false);
+        text.push_str("ckpt-begin 2\ncpeak 0 1\nckpt-end\n");
+        fs::write(&path, text).unwrap();
+        assert!(replay(&path, &costs(), false).is_err());
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -73,6 +73,13 @@ impl Ledger {
         c.migration_cost += cost;
     }
 
+    /// Overwrite one tier's accumulated charges — journal-checkpoint
+    /// restore only (normal accounting goes through the `charge_*` /
+    /// `tag_migration` paths).
+    pub(crate) fn restore_tier(&mut self, t: TierId, charges: TierCharges) {
+        self.tiers.insert(t, charges);
+    }
+
     pub fn tier(&self, t: TierId) -> TierCharges {
         self.tiers.get(&t).copied().unwrap_or_default()
     }

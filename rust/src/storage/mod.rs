@@ -1,18 +1,28 @@
 //! Tiered object storage with exact cost accounting — the substrate for
 //! trace-driven validation of the analytic model (paper §VIII) and for the
-//! streaming pipeline's placement decisions. Two [`StorageBackend`]
+//! streaming pipeline's placement decisions. Three [`StorageBackend`]
 //! implementations share one accounting contract: the in-memory
-//! [`StorageSim`] (reference) and the real-filesystem [`FsBackend`]
-//! (documents as files, write-ahead journal, crash recovery — ADR-003).
+//! [`StorageSim`] (reference), the real-filesystem [`FsBackend`]
+//! (documents as files — ADR-003), and the S3-style [`ObjectBackend`]
+//! (bucket per tier, flat object keys, request-counted GET/PUT/DELETE/COPY
+//! — ADR-005). The durable pair is one journaled state machine
+//! ([`DurableBackend`]) over two [`DocStore`] substrates: write-ahead
+//! journaling, checkpoint/compaction, and kill-and-restart recovery are
+//! shared verbatim.
 
 pub mod backend;
+pub mod durable;
 pub mod fs;
+mod journal;
 pub mod ledger;
+pub mod object;
 pub mod sim;
 pub mod tier;
 
-pub use backend::StorageBackend;
-pub use fs::{FsBackend, RecoveryReport};
+pub use backend::{CheckpointReport, StorageBackend};
+pub use durable::{DocStore, DurableBackend, RecoveryReport};
+pub use fs::{FsBackend, FsStore};
 pub use ledger::{Ledger, TierCharges};
+pub use object::{ObjectBackend, ObjectStore, RequestCounts};
 pub use sim::StorageSim;
 pub use tier::{Resident, TierId, TierState};

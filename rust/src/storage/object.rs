@@ -1,0 +1,443 @@
+//! `storage::object` — the S3-style object-store [`StorageBackend`]
+//! (ADR-005).
+//!
+//! The paper's two cloud case studies price tier placement against
+//! object-store economics: per-request GET/PUT plus occupancy rent. This
+//! backend executes plans against exactly that surface — an
+//! [`ObjectStore`] keyspace with **one bucket per tier** and **flat
+//! object keys** (`<doc>.obj`), where every operation is an explicit,
+//! counted request:
+//!
+//! - organic writes are `PUT`s, consumer reads are verified `GET`s,
+//!   prunes are `DELETE`s;
+//! - a migration hop is the S3 idiom `COPY` + `DELETE` (objects are
+//!   immutable; there is no rename);
+//! - crash recovery reconciles each bucket with `LIST` + repair
+//!   `PUT`/`DELETE`s.
+//!
+//! Request counts are surfaced per verb ([`ObjectBackend::request_counts`])
+//! so a run can be reconciled against a priced request budget, and the
+//! store carries two simulation knobs for failure-mode testing:
+//! per-request latency ([`ObjectBackend::with_latency`]) and an injected
+//! outage ([`ObjectBackend::with_failure_after`] — every request past the
+//! first `n` fails, wedging the backend exactly as a real endpoint outage
+//! would).
+//!
+//! Durability: the backend is an instantiation of the shared
+//! [`DurableBackend`] machinery (see ADR-005 and [`super::durable`]); its
+//! **manifest log** (`<root>/manifest.log`, outside the keyspace) is the
+//! same write-ahead journal as the filesystem backend's, with the same
+//! checkpoint/compaction and torn-record healing. The keyspace itself is
+//! hosted on local directories — the store is a faithful *semantic* model
+//! of an object endpoint (flat keys, copy-not-rename, per-request
+//! accounting), not an HTTP client; swapping in a real client behind
+//! [`ObjectStore`]'s verbs is a ROADMAP follow-up.
+//!
+//! [`StorageBackend`]: super::backend::StorageBackend
+
+use super::durable::{
+    doc_payload, open_durable, payload_intact, scan_keys, DocStore, DurableBackend,
+};
+use super::tier::TierId;
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const MANIFEST_FILE: &str = "manifest.log";
+
+/// Requests issued to the object store, by verb.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequestCounts {
+    pub get: u64,
+    pub put: u64,
+    pub delete: u64,
+    pub copy: u64,
+    pub list: u64,
+}
+
+impl RequestCounts {
+    /// Total requests across verbs.
+    pub fn total(&self) -> u64 {
+        self.get + self.put + self.delete + self.copy + self.list
+    }
+}
+
+/// An S3-style keyspace over local directories: one bucket per tier, flat
+/// object keys, request-counted verbs, simulated latency and outage
+/// injection. All residency logic lives above, in [`DurableBackend`].
+pub struct ObjectStore {
+    root: PathBuf,
+    counts: RequestCounts,
+    /// Simulated per-request latency (None = no delay).
+    latency: Option<Duration>,
+    /// Injected outage: requests beyond the first `n` fail.
+    fail_after: Option<u64>,
+}
+
+impl ObjectStore {
+    fn new(root: PathBuf) -> Self {
+        Self { root, counts: RequestCounts::default(), latency: None, fail_after: None }
+    }
+
+    fn bucket_dir(&self, tier: TierId) -> PathBuf {
+        self.root.join(format!("tier-{}", tier.0))
+    }
+
+    fn key(doc: u64) -> String {
+        format!("{doc}.obj")
+    }
+
+    fn object_path(&self, tier: TierId, doc: u64) -> PathBuf {
+        self.bucket_dir(tier).join(Self::key(doc))
+    }
+
+    /// Account one request: apply the latency knob, then the outage knob.
+    fn request(&mut self, verb: &str) -> Result<()> {
+        if let Some(d) = self.latency {
+            std::thread::sleep(d);
+        }
+        let issued = self.counts.total();
+        match verb {
+            "GET" => self.counts.get += 1,
+            "PUT" => self.counts.put += 1,
+            "DELETE" => self.counts.delete += 1,
+            "COPY" => self.counts.copy += 1,
+            "LIST" => self.counts.list += 1,
+            other => unreachable!("unknown verb {other}"),
+        }
+        if let Some(n) = self.fail_after {
+            if issued >= n {
+                bail!("injected object-store outage: {verb} request #{} refused", issued + 1);
+            }
+        }
+        Ok(())
+    }
+
+    // ---- the verb surface (counted requests) -------------------------------
+
+    fn put_object(&mut self, tier: TierId, doc: u64, at: f64) -> Result<()> {
+        self.request("PUT")?;
+        let path = self.object_path(tier, doc);
+        fs::write(&path, doc_payload(doc, at))
+            .with_context(|| format!("PUT {}", path.display()))
+    }
+
+    fn get_object(&mut self, tier: TierId, doc: u64) -> Result<Vec<u8>> {
+        self.request("GET")?;
+        let path = self.object_path(tier, doc);
+        fs::read(&path).with_context(|| format!("GET {}", path.display()))
+    }
+
+    /// S3 semantics: deleting a missing key succeeds.
+    fn delete_object(&mut self, tier: TierId, doc: u64) -> Result<()> {
+        self.request("DELETE")?;
+        let path = self.object_path(tier, doc);
+        match fs::remove_file(&path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            res => res.with_context(|| format!("DELETE {}", path.display())),
+        }
+    }
+
+    /// Errors if the source object is missing (the caller repairs).
+    fn copy_object(&mut self, from: TierId, to: TierId, doc: u64) -> Result<()> {
+        self.request("COPY")?;
+        let src = self.object_path(from, doc);
+        let dst = self.object_path(to, doc);
+        fs::copy(&src, &dst)
+            .map(|_| ())
+            .with_context(|| format!("COPY {} -> {}", src.display(), dst.display()))
+    }
+
+    fn list_bucket(&mut self, tier: TierId) -> Result<Vec<u64>> {
+        self.request("LIST")?;
+        scan_keys(&self.bucket_dir(tier), ".obj")
+    }
+}
+
+impl DocStore for ObjectStore {
+    fn name(&self) -> &'static str {
+        "object"
+    }
+
+    fn prepare(&mut self, tiers: usize) -> Result<()> {
+        fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating backend root {}", self.root.display()))?;
+        for i in 0..tiers {
+            let dir = self.bucket_dir(TierId(i));
+            fs::create_dir_all(&dir)
+                .with_context(|| format!("creating bucket {}", dir.display()))?;
+        }
+        Ok(())
+    }
+
+    fn write_doc(&mut self, tier: TierId, doc: u64, at: f64) -> Result<()> {
+        self.put_object(tier, doc, at)
+    }
+
+    fn remove_doc(&mut self, tier: TierId, doc: u64) -> Result<()> {
+        self.delete_object(tier, doc)
+    }
+
+    fn move_doc(&mut self, from: TierId, to: TierId, doc: u64, at: f64) -> Result<()> {
+        // the S3 idiom: objects are immutable, a move is COPY + DELETE
+        match self.copy_object(from, to, doc) {
+            Ok(()) => self.delete_object(from, doc),
+            // crash window between journal append and object op: repair
+            // by writing a fresh payload at the destination (a COPY that
+            // failed for another reason — e.g. an outage — propagates)
+            Err(_) if !self.object_path(from, doc).exists() => self.put_object(to, doc, at),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn read_doc(&mut self, tier: TierId, doc: u64) -> Result<()> {
+        let bytes = self.get_object(tier, doc)?;
+        if !payload_intact(&bytes, doc) {
+            bail!("corrupt object {}", self.object_path(tier, doc).display());
+        }
+        Ok(())
+    }
+
+    fn list_docs(&mut self, tier: TierId) -> Result<Vec<u64>> {
+        self.list_bucket(tier)
+    }
+
+    fn doc_intact(&mut self, tier: TierId, doc: u64) -> bool {
+        self.get_object(tier, doc)
+            .map(|b| payload_intact(&b, doc))
+            .unwrap_or(false)
+    }
+}
+
+/// A [`StorageBackend`] backed by an S3-style object keyspace (bucket per
+/// tier, flat keys, COPY+DELETE migrations) with a manifest log for crash
+/// recovery. See the module docs.
+///
+/// [`StorageBackend`]: super::backend::StorageBackend
+pub type ObjectBackend = DurableBackend<ObjectStore>;
+
+impl DurableBackend<ObjectStore> {
+    /// Whether `root` already holds a manifest log from a previous backend
+    /// instance (the fresh-root guard of the demo/fleet surfaces).
+    pub fn has_manifest(root: impl AsRef<Path>) -> bool {
+        Self::manifest_path(root).exists()
+    }
+
+    /// Where a backend rooted at `root` keeps its manifest log — the
+    /// single source of the file name (tests and tooling resolve it here
+    /// instead of hardcoding the literal).
+    pub fn manifest_path(root: impl AsRef<Path>) -> PathBuf {
+        root.as_ref().join(MANIFEST_FILE)
+    }
+
+    /// Open (or create) an object backend rooted at `root`, one bucket per
+    /// tier. If `root` already holds a manifest log, the accounting state
+    /// is rebuilt from it and the buckets are reconciled; the declared
+    /// `costs` and `charge_rent` must match the manifest header exactly.
+    pub fn open(
+        root: impl Into<PathBuf>,
+        costs: Vec<crate::cost::PerDocCosts>,
+        charge_rent: bool,
+    ) -> Result<Self> {
+        let root = root.into();
+        let manifest = Self::manifest_path(&root);
+        open_durable(ObjectStore::new(root), manifest, costs, charge_rent)
+    }
+
+    /// Backend root directory (the keyspace host).
+    pub fn root(&self) -> &Path {
+        &self.store.root
+    }
+
+    /// Requests issued so far, by verb (recovery reconciliation included).
+    pub fn request_counts(&self) -> RequestCounts {
+        self.store.counts
+    }
+
+    /// Simulate per-request latency (None = no delay).
+    pub fn with_latency(mut self, latency: Option<Duration>) -> Self {
+        self.store.latency = latency;
+        self
+    }
+
+    /// Inject an outage: every request past the first `n` fails, wedging
+    /// the backend mid-operation exactly as a real endpoint outage would.
+    pub fn with_failure_after(mut self, n: u64) -> Self {
+        self.store.fail_after = Some(n);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::StorageBackend;
+    use super::super::fs::FsBackend;
+    use super::super::sim::StorageSim;
+    use super::*;
+    use crate::cost::PerDocCosts;
+
+    fn scratch(tag: &str) -> PathBuf {
+        crate::util::scratch_dir(&format!("obj-{tag}"))
+    }
+
+    fn costs() -> Vec<PerDocCosts> {
+        vec![
+            PerDocCosts { write: 1.0, read: 10.0, rent_window: 100.0 },
+            PerDocCosts { write: 2.0, read: 20.0, rent_window: 200.0 },
+        ]
+    }
+
+    // the canonical parity op sequence, shared with the fs suite
+    use crate::util::backends::exercise_mixed_ops as mixed_ops;
+
+    #[test]
+    fn object_matches_sim_and_fs_ledgers_exactly() {
+        let obj_root = scratch("parity");
+        let fs_root = scratch("parity-fs");
+        let mut sim: Box<dyn StorageBackend> = Box::new(StorageSim::with_tiers(costs(), true));
+        let mut fsb: Box<dyn StorageBackend> =
+            Box::new(FsBackend::open(&fs_root, costs(), true).unwrap());
+        let mut obj: Box<dyn StorageBackend> =
+            Box::new(ObjectBackend::open(&obj_root, costs(), true).unwrap());
+        mixed_ops(sim.as_mut());
+        mixed_ops(fsb.as_mut());
+        mixed_ops(obj.as_mut());
+        assert_eq!(obj.backend_name(), "object");
+        assert_eq!(obj.ledger().total().to_bits(), sim.ledger().total().to_bits());
+        assert_eq!(obj.ledger().total().to_bits(), fsb.ledger().total().to_bits());
+        for s in [0, 1] {
+            assert_eq!(
+                obj.stream_ledger(s).total().to_bits(),
+                sim.stream_ledger(s).total().to_bits(),
+                "stream {s} ledgers diverge"
+            );
+        }
+        assert_eq!(obj.locate(2), sim.locate(2));
+        assert_eq!(obj.resident_count(), sim.resident_count());
+        let _ = fs::remove_dir_all(&obj_root);
+        let _ = fs::remove_dir_all(&fs_root);
+    }
+
+    #[test]
+    fn requests_are_counted_per_verb_and_migrations_are_copy_delete() {
+        let root = scratch("verbs");
+        let mut b = ObjectBackend::open(&root, costs(), false).unwrap();
+        assert_eq!(b.request_counts(), RequestCounts::default());
+        b.put(7, TierId::A, 0.0).unwrap();
+        assert_eq!(b.request_counts().put, 1);
+        assert!(root.join("tier-0").join("7.obj").exists());
+        b.read(7).unwrap();
+        assert_eq!(b.request_counts().get, 1);
+        b.migrate_doc(7, TierId::B, 0.5).unwrap();
+        let c = b.request_counts();
+        assert_eq!((c.copy, c.delete), (1, 1), "a hop is COPY + DELETE");
+        assert!(!root.join("tier-0").join("7.obj").exists());
+        assert!(root.join("tier-1").join("7.obj").exists());
+        b.delete(7, 0.9).unwrap();
+        assert_eq!(b.request_counts().delete, 2);
+        assert!(!root.join("tier-1").join("7.obj").exists());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn reopen_rebuilds_from_the_manifest_log() {
+        let root = scratch("reopen");
+        let total;
+        {
+            let mut b = ObjectBackend::open(&root, costs(), true).unwrap();
+            mixed_ops(&mut b);
+            total = b.ledger().total();
+            // dropped without clean shutdown: a process kill
+        }
+        assert!(ObjectBackend::has_manifest(&root));
+        let b = ObjectBackend::open(&root, costs(), true).unwrap();
+        let rec = b.recovery().expect("reopen must report recovery");
+        assert!(rec.ops_replayed >= 8);
+        assert_eq!(rec.files_recreated, 0);
+        assert_eq!(rec.files_removed, 0);
+        assert_eq!(b.ledger().total().to_bits(), total.to_bits());
+        assert_eq!(b.locate(2), Some(TierId::B));
+        // recovery reconciliation itself issued counted requests
+        assert!(b.request_counts().list >= 2, "one LIST per bucket");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn recovery_reconciles_missing_torn_and_orphan_objects() {
+        let root = scratch("reconcile");
+        {
+            let mut b = ObjectBackend::open(&root, costs(), false).unwrap();
+            b.put(1, TierId::A, 0.0).unwrap();
+            b.put(2, TierId::B, 0.1).unwrap();
+        }
+        fs::remove_file(root.join("tier-0").join("1.obj")).unwrap();
+        fs::write(root.join("tier-1").join("2.obj"), b"xx").unwrap();
+        fs::write(root.join("tier-1").join("99.obj"), b"stray").unwrap();
+        let mut b = ObjectBackend::open(&root, costs(), false).unwrap();
+        let rec = b.recovery().unwrap().clone();
+        assert_eq!(rec.files_recreated, 2, "missing object + torn payload");
+        assert_eq!(rec.files_removed, 1);
+        assert_eq!(b.read(1).unwrap(), TierId::A);
+        assert_eq!(b.read(2).unwrap(), TierId::B);
+        assert!(!root.join("tier-1").join("99.obj").exists());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn injected_outage_wedges_and_reopen_recovers() {
+        let root = scratch("outage");
+        {
+            let mut b = ObjectBackend::open(&root, costs(), false).unwrap().with_failure_after(2);
+            b.put(1, TierId::A, 0.0).unwrap();
+            b.put(2, TierId::A, 0.1).unwrap();
+            // request #3 is refused mid-operation: journaled but not stored
+            let err = b.put(3, TierId::A, 0.2).unwrap_err();
+            assert!(format!("{err:#}").contains("outage"), "{err:#}");
+            // wedged: even previously-fine ops now refuse
+            let err = b.read(1).unwrap_err();
+            assert!(format!("{err:#}").contains("wedged"), "{err:#}");
+        }
+        // reopen without the knob: the journal is the source of truth and
+        // the missing object is recreated
+        let mut b = ObjectBackend::open(&root, costs(), false).unwrap();
+        assert!(b.recovery().unwrap().files_recreated >= 1);
+        assert_eq!(b.read(3).unwrap(), TierId::A);
+        assert_eq!(b.resident_count(), 3);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn latency_knob_delays_requests() {
+        let root = scratch("latency");
+        let mut b = ObjectBackend::open(&root, costs(), false)
+            .unwrap()
+            .with_latency(Some(Duration::from_millis(2)));
+        let started = std::time::Instant::now();
+        for d in 0..5 {
+            b.put(d, TierId::A, 0.0).unwrap();
+        }
+        // 5 PUTs × ≥2ms simulated round-trips
+        assert!(started.elapsed() >= Duration::from_millis(10));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn checkpoint_compacts_the_manifest() {
+        let root = scratch("ckpt");
+        let mut b = ObjectBackend::open(&root, costs(), true).unwrap();
+        mixed_ops(&mut b);
+        let ops = b.journal_ops();
+        assert!(ops >= 8);
+        let report = b.checkpoint().unwrap();
+        assert_eq!((report.ops_folded, report.ops_after), (ops, 0));
+        let total = b.ledger().total();
+        drop(b);
+        let b = ObjectBackend::open(&root, costs(), true).unwrap();
+        let rec = b.recovery().unwrap();
+        assert_eq!(rec.checkpoints_loaded, 1);
+        assert_eq!(rec.ops_replayed, 0);
+        assert_eq!(b.ledger().total().to_bits(), total.to_bits());
+        let _ = fs::remove_dir_all(&root);
+    }
+}

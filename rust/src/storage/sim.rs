@@ -135,6 +135,22 @@ impl StorageSim {
         self.tier(tier).oldest()
     }
 
+    /// Resident documents owned by `stream` within one tier (sorted) —
+    /// the member set of a [`StorageSim::migrate_stream`] batch.
+    pub fn stream_docs_in(&self, stream: u64, tier: TierId) -> Vec<u64> {
+        if tier.0 >= self.tiers.len() {
+            return Vec::new();
+        }
+        let t = self.tier(tier);
+        let mut v: Vec<u64> = t
+            .docs()
+            .into_iter()
+            .filter(|&d| t.get(d).and_then(|r| r.owner) == Some(stream))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Resident documents owned by `stream`, across all tiers (sorted).
     /// Used by the engine to release a closing session's residents.
     pub fn docs_of_stream(&self, stream: u64) -> Vec<u64> {
@@ -329,6 +345,120 @@ impl StorageSim {
             self.migrate_doc(doc, to, at)?;
         }
         Ok(n)
+    }
+
+    /// Bulk-migrate every resident of `from` *owned by `stream`* into
+    /// `to` — the per-stream changeover-demotion batch (ADR-005). Charges
+    /// are identical to the equivalent sequence of [`StorageSim::migrate_doc`]
+    /// hops; durable backends journal the whole batch as one record.
+    ///
+    /// All-or-nothing: destination headroom is pre-checked against the
+    /// batch size, so a doomed batch fails without moving a document.
+    /// Returns the number of documents moved (0 for an empty batch or
+    /// `from == to`).
+    pub fn migrate_stream(
+        &mut self,
+        stream: u64,
+        from: TierId,
+        to: TierId,
+        at: f64,
+    ) -> Result<u64> {
+        Ok(self.migrate_stream_docs(stream, from, to, at)?.len() as u64)
+    }
+
+    /// [`StorageSim::migrate_stream`], returning the moved doc ids — the
+    /// durable backends reuse the batch's one tier scan for their
+    /// substrate moves instead of recomputing it.
+    pub(crate) fn migrate_stream_docs(
+        &mut self,
+        stream: u64,
+        from: TierId,
+        to: TierId,
+        at: f64,
+    ) -> Result<Vec<u64>> {
+        if from.0 >= self.tiers.len() {
+            bail!("unknown tier {from:?}");
+        }
+        if to.0 >= self.tiers.len() {
+            bail!("unknown tier {to:?}");
+        }
+        if from == to {
+            return Ok(Vec::new());
+        }
+        let docs = self.stream_docs_in(stream, from);
+        if docs.is_empty() {
+            return Ok(docs);
+        }
+        if let Some(free) = self.tier(to).remaining() {
+            if free < docs.len() {
+                bail!(
+                    "migrate_stream: tier {} has {} free slots for stream {}'s \
+                     {} documents — aborted with nothing moved",
+                    to.label(),
+                    free,
+                    stream,
+                    docs.len()
+                );
+            }
+        }
+        for &doc in &docs {
+            self.migrate_doc(doc, to, at)?;
+        }
+        Ok(docs)
+    }
+
+    // ---- checkpoint restore (journal recovery, ADR-005) --------------------
+
+    /// Re-seat a resident exactly as a checkpoint recorded it — residency,
+    /// rent clock, and ownership, with *no* charge (the ledger rows are
+    /// restored separately). Rejects double residency and unknown tiers.
+    pub(crate) fn restore_resident(
+        &mut self,
+        doc: u64,
+        tier: TierId,
+        written_at: f64,
+        owner: Option<u64>,
+    ) -> Result<()> {
+        if tier.0 >= self.tiers.len() {
+            bail!("unknown tier {tier:?}");
+        }
+        if let Some(existing) = self.locate(doc) {
+            bail!("doc {doc} already resident in tier {existing:?}");
+        }
+        self.tier_mut(tier).insert_owned(doc, written_at, owner);
+        Ok(())
+    }
+
+    /// Restore a tier's occupancy high-water mark (checkpoints preserve
+    /// peaks the compacted history can no longer reproduce).
+    pub(crate) fn restore_peak(&mut self, tier: TierId, peak: usize) {
+        if tier.0 < self.tiers.len() {
+            self.tier_mut(tier).note_peak(peak);
+        }
+    }
+
+    /// Restore one ledger row (run-wide for `stream = None`, else the
+    /// stream's mirror).
+    pub(crate) fn restore_tier_charges(
+        &mut self,
+        stream: Option<u64>,
+        tier: TierId,
+        charges: super::ledger::TierCharges,
+    ) {
+        match stream {
+            None => self.ledger.restore_tier(tier, charges),
+            Some(s) => {
+                self.stream_ledgers.entry(s).or_default().restore_tier(tier, charges)
+            }
+        }
+    }
+
+    /// Iterate the registered per-stream cost tables (checkpoint
+    /// serialization).
+    pub(crate) fn registered_streams(
+        &self,
+    ) -> impl Iterator<Item = (&u64, &Vec<PerDocCosts>)> {
+        self.stream_costs.iter()
     }
 
     /// End of stream: settle rent for everything still resident (they
@@ -561,6 +691,68 @@ mod tests {
         assert_eq!(s.ledger().tier(TierId::A).write_cost, 6.0);
         // wrong arity rejected
         assert!(s.register_stream(8, vec![]).is_err());
+    }
+
+    #[test]
+    fn migrate_stream_moves_only_the_streams_batch() {
+        let mut s = sim();
+        s.set_attribution(Some(0));
+        s.put(1, TierId::A, 0.1).unwrap();
+        s.put(2, TierId::A, 0.2).unwrap();
+        s.set_attribution(Some(1));
+        s.put(3, TierId::A, 0.3).unwrap();
+        assert_eq!(s.stream_docs_in(0, TierId::A), vec![1, 2]);
+        assert_eq!(s.migrate_stream(0, TierId::A, TierId::B, 0.5).unwrap(), 2);
+        assert_eq!(s.locate(1), Some(TierId::B));
+        assert_eq!(s.locate(3), Some(TierId::A), "stream 1's doc stays");
+        // charges landed on the owning stream, tagged as migration hops
+        assert!(s.stream_ledger(0).migration_total() > 0.0);
+        assert_eq!(s.stream_ledger(1).migration_total(), 0.0);
+        // empty batch and same-tier are free no-ops
+        assert_eq!(s.migrate_stream(9, TierId::A, TierId::B, 0.6).unwrap(), 0);
+        assert_eq!(s.migrate_stream(1, TierId::A, TierId::A, 0.6).unwrap(), 0);
+    }
+
+    #[test]
+    fn doomed_migrate_stream_is_all_or_nothing() {
+        let mut s = sim();
+        s.set_attribution(Some(0));
+        for d in 0..3 {
+            s.put(d, TierId::A, 0.1).unwrap();
+        }
+        s.set_capacity(TierId::B, Some(2));
+        let before = s.ledger().total();
+        assert!(s.migrate_stream(0, TierId::A, TierId::B, 0.5).is_err());
+        assert_eq!(s.tier(TierId::A).len(), 3);
+        assert_eq!(s.ledger().total(), before);
+        assert_eq!(s.ledger().migration_total(), 0.0);
+    }
+
+    #[test]
+    fn migrate_stream_matches_per_doc_hops_bit_for_bit() {
+        let drive = |bulk: bool| -> StorageSim {
+            let mut s = sim();
+            s.set_attribution(Some(4));
+            for d in 0..5 {
+                s.put(d, TierId::A, 0.05 * d as f64).unwrap();
+            }
+            if bulk {
+                s.migrate_stream(4, TierId::A, TierId::B, 0.5).unwrap();
+            } else {
+                for d in s.stream_docs_in(4, TierId::A) {
+                    s.migrate_doc(d, TierId::B, 0.5).unwrap();
+                }
+            }
+            s.settle_rent(1.0);
+            s
+        };
+        let (a, b) = (drive(true), drive(false));
+        assert_eq!(a.ledger().total().to_bits(), b.ledger().total().to_bits());
+        assert_eq!(
+            a.stream_ledger(4).total().to_bits(),
+            b.stream_ledger(4).total().to_bits()
+        );
+        assert_eq!(a.ledger().migration_total(), b.ledger().migration_total());
     }
 
     #[test]

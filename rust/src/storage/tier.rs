@@ -86,6 +86,12 @@ impl TierState {
         self.peak_len
     }
 
+    /// Raise the high-water mark to at least `peak` (journal-checkpoint
+    /// restore: compaction erases the history the mark came from).
+    pub fn note_peak(&mut self, peak: usize) {
+        self.peak_len = self.peak_len.max(peak);
+    }
+
     pub fn contains(&self, doc: u64) -> bool {
         self.residents.contains_key(&doc)
     }

@@ -1,0 +1,207 @@
+//! Test-support: the backend conformance harness (ADR-005).
+//!
+//! Every [`StorageBackend`] invariant should hold on every
+//! implementation, so the integration suites (`engine_invariants`,
+//! `backend_parity`, the conservation properties in
+//! `property_invariants`) parametrize over ONE list of backends instead
+//! of hand-copying sim/fs pairs: add a backend kind here and the whole
+//! conformance surface runs against it.
+//!
+//! Like [`super::scratch`], this is test-support code compiled into the
+//! library so unit suites and integration suites share one copy.
+
+use crate::cost::PerDocCosts;
+use crate::storage::{FsBackend, ObjectBackend, StorageBackend, StorageSim, TierId};
+use std::path::{Path, PathBuf};
+
+/// One [`StorageBackend`] implementation, as the conformance harness
+/// names it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The in-memory reference simulator.
+    Sim,
+    /// The real-filesystem backend (ADR-003).
+    Fs,
+    /// The S3-style object-store backend (ADR-005).
+    Object,
+}
+
+/// Every implementation, in reference-first order.
+pub const ALL_BACKENDS: [BackendKind; 3] =
+    [BackendKind::Sim, BackendKind::Fs, BackendKind::Object];
+
+/// The journaled implementations — the ones kill-and-restart recovery
+/// invariants apply to.
+pub const DURABLE_BACKENDS: [BackendKind; 2] = [BackendKind::Fs, BackendKind::Object];
+
+impl BackendKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Sim => "sim",
+            Self::Fs => "fs",
+            Self::Object => "object",
+        }
+    }
+
+    /// Open a fresh backend of this kind. Durable kinds get a new scratch
+    /// root (returned so the caller can reopen after a simulated kill and
+    /// remove it when done); the sim returns `None`.
+    pub fn open(
+        self,
+        tag: &str,
+        costs: Vec<PerDocCosts>,
+        charge_rent: bool,
+    ) -> anyhow::Result<(Box<dyn StorageBackend>, Option<PathBuf>)> {
+        match self {
+            Self::Sim => Ok((Box::new(StorageSim::with_tiers(costs, charge_rent)), None)),
+            Self::Fs => {
+                let root = super::scratch_dir(&format!("conf-fs-{tag}"));
+                let b = FsBackend::open(&root, costs, charge_rent)?;
+                Ok((Box::new(b), Some(root)))
+            }
+            Self::Object => {
+                let root = super::scratch_dir(&format!("conf-obj-{tag}"));
+                let b = ObjectBackend::open(&root, costs, charge_rent)?;
+                Ok((Box::new(b), Some(root)))
+            }
+        }
+    }
+
+    /// The durable log a backend of this kind keeps under `root` (`None`
+    /// for the sim) — resolved through the backends' own path helpers so
+    /// tests never hardcode the file names.
+    pub fn journal_path(self, root: &Path) -> Option<PathBuf> {
+        match self {
+            Self::Sim => None,
+            Self::Fs => Some(FsBackend::journal_path(root)),
+            Self::Object => Some(ObjectBackend::manifest_path(root)),
+        }
+    }
+
+    /// Reopen a durable backend from its root (journal recovery). The sim
+    /// has no durable state: reopening it is a fresh, empty simulator —
+    /// which is exactly why recovery invariants iterate
+    /// [`DURABLE_BACKENDS`].
+    pub fn reopen(
+        self,
+        root: Option<&Path>,
+        costs: Vec<PerDocCosts>,
+        charge_rent: bool,
+    ) -> anyhow::Result<Box<dyn StorageBackend>> {
+        match (self, root) {
+            (Self::Sim, _) => Ok(Box::new(StorageSim::with_tiers(costs, charge_rent))),
+            (Self::Fs, Some(root)) => {
+                Ok(Box::new(FsBackend::open(root, costs, charge_rent)?))
+            }
+            (Self::Object, Some(root)) => {
+                Ok(Box::new(ObjectBackend::open(root, costs, charge_rent)?))
+            }
+            (kind, None) => anyhow::bail!("{} backend needs its root to reopen", kind.label()),
+        }
+    }
+}
+
+/// The canonical mixed op sequence the per-backend unit suites drive for
+/// ledger-parity checks on a two-tier backend: a stream registration,
+/// attributed puts from two streams, a consumer read, a per-doc
+/// migration, a delete, and an end-of-window settle. One copy on
+/// purpose — extend it here and every backend's parity coverage moves
+/// together.
+pub fn exercise_mixed_ops(b: &mut dyn StorageBackend) {
+    b.set_attribution(Some(0));
+    b.register_stream(
+        0,
+        vec![
+            PerDocCosts { write: 1.5, read: 9.0, rent_window: 50.0 },
+            PerDocCosts { write: 2.5, read: 19.0, rent_window: 150.0 },
+        ],
+    )
+    .unwrap();
+    b.put(1, TierId::A, 0.0).unwrap();
+    b.put(2, TierId::A, 0.1).unwrap();
+    b.set_attribution(Some(1));
+    b.put(3, TierId::B, 0.2).unwrap();
+    b.read(1).unwrap();
+    b.migrate_doc(2, TierId::B, 0.5).unwrap();
+    b.delete(3, 0.6).unwrap();
+    b.settle_rent(1.0).unwrap();
+}
+
+/// Run one invariant against every backend implementation, panicking
+/// with the backend's label on the first failure (mirrors the
+/// `propcheck` Result<(), String> convention).
+pub fn for_each_backend<F>(tag: &str, mut f: F)
+where
+    F: FnMut(BackendKind) -> Result<(), String>,
+{
+    for kind in ALL_BACKENDS {
+        if let Err(e) = f(kind) {
+            panic!("[{tag}] backend '{}': {e}", kind.label());
+        }
+    }
+}
+
+/// [`for_each_backend`], restricted to the journaled implementations.
+pub fn for_each_durable_backend<F>(tag: &str, mut f: F)
+where
+    F: FnMut(BackendKind) -> Result<(), String>,
+{
+    for kind in DURABLE_BACKENDS {
+        if let Err(e) = f(kind) {
+            panic!("[{tag}] backend '{}': {e}", kind.label());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::TierId;
+
+    fn costs() -> Vec<PerDocCosts> {
+        vec![
+            PerDocCosts { write: 1.0, read: 2.0, rent_window: 0.0 },
+            PerDocCosts { write: 2.0, read: 1.0, rent_window: 0.0 },
+        ]
+    }
+
+    #[test]
+    fn every_kind_opens_operates_and_labels() {
+        for_each_backend("harness-smoke", |kind| {
+            let (mut b, root) =
+                kind.open("smoke", costs(), false).map_err(|e| e.to_string())?;
+            if b.backend_name() != kind.label() {
+                return Err(format!("label {} != {}", b.backend_name(), kind.label()));
+            }
+            b.put(1, TierId::A, 0.0).map_err(|e| e.to_string())?;
+            if b.locate(1) != Some(TierId::A) {
+                return Err("lost the document".into());
+            }
+            if let Some(root) = root {
+                let _ = std::fs::remove_dir_all(root);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn durable_kinds_survive_reopen_and_sim_does_not() {
+        for kind in ALL_BACKENDS {
+            let (mut b, root) = kind.open("reopen", costs(), false).unwrap();
+            b.put(9, TierId::B, 0.2).unwrap();
+            drop(b);
+            let reopened = kind.reopen(root.as_deref(), costs(), false).unwrap();
+            let expect = if DURABLE_BACKENDS.contains(&kind) { Some(TierId::B) } else { None };
+            assert_eq!(reopened.locate(9), expect, "kind {}", kind.label());
+            if let Some(root) = root {
+                let _ = std::fs::remove_dir_all(root);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "backend 'sim'")]
+    fn harness_panics_name_the_backend() {
+        for_each_backend("harness-panics", |_| Err("injected".into()));
+    }
+}

@@ -1,10 +1,15 @@
 //! Dependency-free utilities: deterministic RNG, numeric helpers, and
-//! test-support scratch directories.
+//! test support (scratch directories, the backend conformance harness).
 
+pub mod backends;
 pub mod math;
 pub mod rng;
 pub mod scratch;
 
+pub use backends::{
+    for_each_backend, for_each_durable_backend, BackendKind, ALL_BACKENDS,
+    DURABLE_BACKENDS,
+};
 pub use math::{
     binary_entropy, golden_section_min, grid_min, harmonic, harmonic_diff, mean,
     percentile_sorted, rel_err, sigmoid, std_dev, EULER_MASCHERONI,

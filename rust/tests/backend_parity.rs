@@ -1,21 +1,31 @@
-//! Sim ↔ FS backend parity and durability (ADR-003), plus the
-//! shared-engine robustness fixes that a real, fallible backend makes
-//! urgent:
+//! Backend parity and durability (ADR-003 / ADR-005), through the shared
+//! conformance harness (`shptier::util::for_each_backend`): every
+//! invariant here runs against one list of `StorageBackend`
+//! implementations — sim, the real-filesystem `FsBackend`, and the
+//! S3-style `ObjectBackend` — instead of hand-copied sim/fs pairs.
 //!
 //! - the seeded 3-tier engine demo produces identical per-stream ledger
-//!   totals on `StorageSim` and `FsBackend` (the reconciliation harness);
-//! - a killed-and-restarted `FsBackend` rebuilds residency and ledger
-//!   state from its write-ahead journal;
-//! - a doomed `migrate_all` into a too-small tier is a no-op on both
-//!   backends (residency and ledger untouched);
+//!   totals on the sim and on BOTH durable backends (the reconciliation
+//!   harness);
+//! - a killed-and-restarted durable backend rebuilds residency and ledger
+//!   state from its write-ahead journal — with and without a checkpoint
+//!   in the history;
+//! - a doomed `migrate_all` / `migrate_stream` into a too-small tier is a
+//!   no-op on every backend (residency and ledger untouched);
+//! - a shared-tier changeover demotion of S documents journals O(1)
+//!   records via `migrate_stream`, not O(S) — and a kill mid-batch
+//!   replays back to sim parity;
 //! - a session that panics mid-operation does not brick the engine for
 //!   survivors (mutex-poison recovery).
 
 use shptier::config::EngineDemoConfig;
 use shptier::cost::PerDocCosts;
-use shptier::engine::{reconcile_backends, Engine, SessionSpec, TierTopology};
+use shptier::engine::{
+    reconcile_backends, BackendSpec, Engine, SessionSpec, TierTopology,
+};
 use shptier::policy::{MigrationOrder, PlacementPolicy, PlanFamily};
-use shptier::storage::{FsBackend, StorageBackend, StorageSim, TierId};
+use shptier::storage::{StorageBackend, TierId};
+use shptier::util::{for_each_backend, for_each_durable_backend};
 use std::path::PathBuf;
 
 /// Unique scratch directory under the system temp dir.
@@ -29,219 +39,334 @@ fn pd(w: f64, r: f64) -> PerDocCosts {
 
 /// Acceptance: the seeded 3-tier fleet demo (mid-run closure, late
 /// joiner, online re-arbitration) lands identical per-stream ledger
-/// totals on both backends.
+/// totals on the sim and on each durable backend — sim↔obj parity holds
+/// exactly as sim↔fs does.
 #[test]
-fn seeded_demo_ledger_parity_sim_vs_fs() {
+fn seeded_demo_ledger_parity_sim_vs_durable_backends() {
     let demo = EngineDemoConfig::from_toml(
         "[engine]\nstreams = 3\ndocs = 300\nk = 12\ntiers = 3\nclose_percent = 50\n",
     )
     .unwrap();
-    let root = scratch("reconcile");
-    let rep = reconcile_backends(&demo, &root).expect("ledger parity must hold");
-    // 3 initial sessions + 1 late joiner, each with a measured total
-    assert_eq!(rep.sim.rows.len(), 4);
-    assert_eq!(rep.fs.rows.len(), 4);
-    assert!(rep.sim.total > 0.0);
-    assert!(rep.total_delta <= 1e-9 * rep.sim.total.max(1.0));
-    assert!(rep.fs.backend.starts_with("fs:"), "backend was {}", rep.fs.backend);
-    assert_eq!(rep.sim.backend, "sim");
-    // per-stream totals agree pairwise (the harness already asserted it;
-    // spot-check the report it handed back)
-    for (s, f) in rep.sim.rows.iter().zip(rep.fs.rows.iter()) {
-        assert_eq!(s.id, f.id);
+    for (label, spec) in [
+        ("fs", BackendSpec::Fs { root: scratch("reconcile-fs") }),
+        ("obj", BackendSpec::Obj { root: scratch("reconcile-obj") }),
+    ] {
+        let rep = reconcile_backends(&demo, &spec)
+            .unwrap_or_else(|e| panic!("{label}: ledger parity must hold: {e:#}"));
+        // 3 initial sessions + 1 late joiner, each with a measured total
+        assert_eq!(rep.sim.rows.len(), 4, "{label}");
+        assert_eq!(rep.other.rows.len(), 4, "{label}");
+        assert!(rep.sim.total > 0.0);
+        assert!(rep.total_delta <= 1e-9 * rep.sim.total.max(1.0), "{label}");
         assert!(
-            (s.measured - f.measured).abs() <= 1e-9 * s.measured.abs().max(1.0),
-            "stream {}: sim ${} vs fs ${}",
-            s.id,
-            s.measured,
-            f.measured
+            rep.other.backend.starts_with(&format!("{label}:")),
+            "backend was {}",
+            rep.other.backend
         );
+        assert_eq!(rep.sim.backend, "sim");
+        for (s, o) in rep.sim.rows.iter().zip(rep.other.rows.iter()) {
+            assert_eq!(s.id, o.id);
+            assert!(
+                (s.measured - o.measured).abs() <= 1e-9 * s.measured.abs().max(1.0),
+                "{label} stream {}: sim ${} vs durable ${}",
+                s.id,
+                s.measured,
+                o.measured
+            );
+        }
+        if let BackendSpec::Fs { root } | BackendSpec::Obj { root } = spec {
+            let _ = std::fs::remove_dir_all(root);
+        }
     }
-    let _ = std::fs::remove_dir_all(&root);
 }
 
 /// Acceptance: kill an engine mid-run (drop it — the in-memory state is
-/// gone) and reopen the FS backend on the same root: residency, the
-/// engine-wide ledger, and the per-stream ledger are rebuilt from the
-/// journal alone.
+/// gone) and reopen each durable backend on the same root: residency,
+/// the engine-wide ledger, and the per-stream ledger are rebuilt from
+/// the journal alone. A mid-run checkpoint must not change what recovery
+/// reconverges to.
 #[test]
-fn killed_engine_fs_backend_rebuilds_from_journal() {
-    let root = scratch("restart");
-    let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
-    let total_before;
-    let stream_before;
-    let hot_before;
-    let cold_before;
-    {
-        let topo = TierTopology::two_tier(costs[0], costs[1])
-            .with_capacity(TierId::A, Some(8));
-        let backend = FsBackend::open(&root, costs.clone(), false).unwrap();
-        let engine = Engine::builder()
-            .topology(topo)
-            .backend(Box::new(backend))
-            .build()
-            .unwrap();
-        let mut s = engine
-            .open_stream(SessionSpec::new(200, 10).with_rent(false))
-            .unwrap();
-        let mut rng = shptier::util::Rng::new(7);
-        for _ in 0..120 {
-            s.observe(rng.next_f64()).unwrap();
+fn killed_engine_durable_backends_rebuild_from_journal() {
+    for_each_durable_backend("killed-engine", |kind| {
+        for checkpoint_mid_run in [false, true] {
+            let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
+            let (backend, root) = kind
+                .open("killed-engine", costs.clone(), false)
+                .map_err(|e| e.to_string())?;
+            let total_before;
+            let stream_before;
+            let hot_before;
+            let cold_before;
+            {
+                let topo = TierTopology::two_tier(costs[0], costs[1])
+                    .with_capacity(TierId::A, Some(8));
+                let engine = Engine::builder()
+                    .topology(topo)
+                    .backend(backend)
+                    .build()
+                    .map_err(|e| e.to_string())?;
+                let mut s = engine
+                    .open_stream(SessionSpec::new(200, 10).with_rent(false))
+                    .map_err(|e| e.to_string())?;
+                let mut rng = shptier::util::Rng::new(7);
+                for i in 0..120 {
+                    s.observe(rng.next_f64()).map_err(|e| e.to_string())?;
+                    if checkpoint_mid_run && i == 60 {
+                        let report = engine.checkpoint().map_err(|e| e.to_string())?;
+                        if report.ops_after != 0 {
+                            return Err(format!(
+                                "compaction left {} ops",
+                                report.ops_after
+                            ));
+                        }
+                    }
+                }
+                total_before = engine.ledger().total();
+                stream_before = engine.stream_ledger(s.id()).total();
+                hot_before = engine.resident_len(TierId::A);
+                cold_before = engine.resident_len(TierId::B);
+                if total_before <= 0.0 || hot_before + cold_before == 0 {
+                    return Err("run produced no state".into());
+                }
+                // dropped here without finish/settle: a process kill
+            }
+            let reopened = kind
+                .reopen(root.as_deref(), costs, false)
+                .map_err(|e| e.to_string())?;
+            if (reopened.ledger().total() - total_before).abs() > 1e-9 {
+                return Err(format!(
+                    "ckpt={checkpoint_mid_run}: ledger {} != {}",
+                    reopened.ledger().total(),
+                    total_before
+                ));
+            }
+            if (reopened.stream_ledger(0).total() - stream_before).abs() > 1e-9 {
+                return Err("stream ledger diverged".into());
+            }
+            if reopened.resident_len(TierId::A) != hot_before
+                || reopened.resident_len(TierId::B) != cold_before
+            {
+                return Err("residency diverged".into());
+            }
+            if let Some(root) = root {
+                let _ = std::fs::remove_dir_all(root);
+            }
         }
-        total_before = engine.ledger().total();
-        stream_before = engine.stream_ledger(s.id()).total();
-        hot_before = engine.resident_len(TierId::A);
-        cold_before = engine.resident_len(TierId::B);
-        assert!(total_before > 0.0);
-        assert!(hot_before + cold_before > 0);
-        // dropped here without finish/settle: a process kill
-    }
-    let reopened = FsBackend::open(&root, costs, false).unwrap();
-    let rec = reopened.recovery().expect("a journal was replayed");
-    assert!(rec.ops_replayed > 0);
-    assert!((reopened.ledger().total() - total_before).abs() < 1e-9);
-    assert!((reopened.stream_ledger(0).total() - stream_before).abs() < 1e-9);
-    assert_eq!(reopened.resident_len(TierId::A), hot_before);
-    assert_eq!(reopened.resident_len(TierId::B), cold_before);
-    // every rebuilt resident is backed by a real file it can serve
-    for tier in [TierId::A, TierId::B] {
-        for r in reopened.residents(tier) {
-            let path = root.join(format!("tier-{}", tier.0)).join(format!("{}.doc", r.doc));
-            assert!(path.exists(), "resident {} missing its file", r.doc);
-        }
-    }
-    let _ = std::fs::remove_dir_all(&root);
+        Ok(())
+    });
 }
 
 /// Acceptance: a bulk migration into a tier without headroom moves
-/// nothing and charges nothing — on both backends.
+/// nothing and charges nothing — on every backend, for both bulk ops
+/// (`migrate_all` and the per-stream `migrate_stream`).
 #[test]
-fn doomed_migrate_all_is_noop_on_both_backends() {
-    let root = scratch("migall");
-    let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
-    let backends: Vec<Box<dyn StorageBackend>> = vec![
-        Box::new(StorageSim::with_tiers(costs.clone(), true)),
-        Box::new(FsBackend::open(&root, costs.clone(), true).unwrap()),
-    ];
-    for mut b in backends {
+fn doomed_bulk_migrations_are_noops_on_every_backend() {
+    for_each_backend("doomed-bulk", |kind| {
+        let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
+        let (mut b, root) =
+            kind.open("doomed-bulk", costs, true).map_err(|e| e.to_string())?;
         let name = b.backend_name();
+        b.set_attribution(Some(0));
         for d in 0..5 {
-            b.put(d, TierId::A, 0.1).unwrap();
+            b.put(d, TierId::A, 0.1).map_err(|e| e.to_string())?;
         }
-        b.put(100, TierId::B, 0.1).unwrap();
+        b.put(100, TierId::B, 0.1).map_err(|e| e.to_string())?;
         b.set_capacity(TierId::B, Some(4)); // 3 free slots, 5 needed
         let total = b.ledger().total();
         let writes = b.ledger().total_writes();
-        assert!(
-            b.migrate_all(TierId::A, TierId::B, 0.5).is_err(),
-            "{name}: doomed migrate_all must fail"
-        );
-        assert_eq!(b.resident_len(TierId::A), 5, "{name}: residency must be untouched");
-        assert_eq!(b.resident_len(TierId::B), 1, "{name}");
-        assert_eq!(b.ledger().total(), total, "{name}: ledger must be untouched");
-        assert_eq!(b.ledger().total_writes(), writes, "{name}");
-        assert_eq!(b.ledger().migration_total(), 0.0, "{name}");
-        // with headroom restored the same call succeeds atomically
+        if b.migrate_all(TierId::A, TierId::B, 0.5).is_ok() {
+            return Err(format!("{name}: doomed migrate_all must fail"));
+        }
+        if b.migrate_stream(0, TierId::A, TierId::B, 0.5).is_ok() {
+            return Err(format!("{name}: doomed migrate_stream must fail"));
+        }
+        if b.resident_len(TierId::A) != 5 || b.resident_len(TierId::B) != 1 {
+            return Err(format!("{name}: residency must be untouched"));
+        }
+        if b.ledger().total() != total
+            || b.ledger().total_writes() != writes
+            || b.ledger().migration_total() != 0.0
+        {
+            return Err(format!("{name}: ledger must be untouched"));
+        }
+        // with headroom restored the same calls succeed atomically
         b.set_capacity(TierId::B, None);
-        assert_eq!(b.migrate_all(TierId::A, TierId::B, 0.5).unwrap(), 5, "{name}");
-        assert_eq!(b.resident_len(TierId::A), 0, "{name}");
-        assert_eq!(b.resident_len(TierId::B), 6, "{name}");
+        let moved =
+            b.migrate_stream(0, TierId::A, TierId::B, 0.5).map_err(|e| e.to_string())?;
+        if moved != 5 {
+            return Err(format!("{name}: moved {moved} != 5"));
+        }
+        if b.resident_len(TierId::A) != 0 || b.resident_len(TierId::B) != 6 {
+            return Err(format!("{name}: post-bulk residency wrong"));
+        }
+        if let Some(root) = root {
+            let _ = std::fs::remove_dir_all(root);
+        }
+        Ok(())
+    });
+}
+
+/// Rent-dominated two-tier economy (interior DO_MIGRATE optimum) plus a
+/// hot-hungry keep stream sharing the tier, so the migrate stream's
+/// changeover demotion takes the shared-tier `migrate_stream` path.
+fn shared_tier_migrate_engine(
+    backend: Option<Box<dyn StorageBackend>>,
+) -> (Engine, shptier::engine::StreamSession, shptier::engine::StreamSession) {
+    let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 };
+    let b = PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 };
+    let hog_hot = PerDocCosts { write: 0.1, read: 0.1, rent_window: 0.01 };
+    let hog_cold = PerDocCosts { write: 5.0, read: 5.0, rent_window: 1.0 };
+    let topo = TierTopology::two_tier(a, b).with_capacity(TierId::A, Some(64));
+    let mut builder = Engine::builder().topology(topo).charge_rent(true);
+    if let Some(backend) = backend {
+        builder = builder.backend(backend);
     }
+    let engine = builder.build().unwrap();
+    let hog = engine
+        .open_stream(SessionSpec::new(300, 10).with_costs(vec![hog_hot, hog_cold]))
+        .unwrap();
+    let migrator = engine
+        .open_stream(
+            SessionSpec::new(300, 12)
+                .with_costs(vec![a, b])
+                .with_family(PlanFamily::Migrate),
+        )
+        .unwrap();
+    (engine, hog, migrator)
+}
+
+/// The tier-costs the shared engine's durable backend must declare.
+fn shared_tier_costs() -> Vec<PerDocCosts> {
+    vec![
+        PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 },
+        PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 },
+    ]
+}
+
+/// Drive both streams `steps` documents with one seeded score sequence.
+fn drive(
+    hog: &mut shptier::engine::StreamSession,
+    migrator: &mut shptier::engine::StreamSession,
+    steps: u64,
+    rng: &mut shptier::util::Rng,
+) {
+    for _ in 0..steps {
+        hog.observe(rng.next_f64()).unwrap();
+        migrator.observe(rng.next_f64()).unwrap();
+    }
+}
+
+/// Acceptance (ADR-005): a shared-tier changeover demotion of S documents
+/// writes O(1) journal records — exactly one `migstream` record, zero
+/// per-document `mig` hops.
+#[test]
+fn shared_tier_demotion_journals_one_record_not_one_per_doc() {
+    let costs = shared_tier_costs();
+    let root = scratch("o1-journal");
+    let backend = shptier::storage::FsBackend::open(&root, costs, true).unwrap();
+    let (engine, mut hog, mut migrator) = shared_tier_migrate_engine(Some(Box::new(backend)));
+    let r = migrator.plan().unwrap().r();
+    assert!(r > 12 && r < 280, "boundary must be interior (r={r})");
+    let mut rng = shptier::util::Rng::new(5);
+    drive(&mut hog, &mut migrator, r + 20, &mut rng);
+    // the migrate stream demoted out of hot; the hog still holds hot
+    // residents, so the demotion ran on a SHARED tier
+    let demoted = engine.stream_ledger(migrator.id());
+    assert!(demoted.migration_total() > 0.0, "the changeover demotion fired");
+    assert!(engine.resident_len(TierId::A) > 0, "the hog still shares the tier");
+    let batch = demoted.tiers().map(|(_, c)| c.migration_ops).sum::<u64>() / 2;
+    assert!(batch >= 5, "a real batch demoted (S = {batch})");
+    drop((hog, migrator, engine));
+    let journal =
+        std::fs::read_to_string(shptier::storage::FsBackend::journal_path(&root)).unwrap();
+    let migstream_records =
+        journal.lines().filter(|l| l.starts_with("migstream ")).count();
+    let per_doc_hops = journal.lines().filter(|l| l.starts_with("mig ")).count();
+    assert_eq!(migstream_records, 1, "one record for the whole batch");
+    assert_eq!(per_doc_hops, 0, "no per-document hops journaled");
     let _ = std::fs::remove_dir_all(&root);
 }
 
-/// Acceptance (migrate-family scheduling): drive a migrate-family session
-/// past its changeover demotion on both backends, kill the engines
-/// mid-run (drop without settle/finish), emulate the crash window of the
-/// bulk migration on the FS root (the journal recorded `migall` but a
-/// document file never moved), and assert journal replay reconverges to
-/// the sim's residency and per-stream ledgers.
+/// Acceptance: drive the shared-tier migrate-family demotion on sim and
+/// on each durable backend, kill the engines mid-run, emulate the crash
+/// window of the batch (the journal holds `migstream` but one payload
+/// never left the hot container), and assert replay + reconciliation
+/// reconverge to the sim's residency and per-stream ledgers.
 #[test]
-fn killed_mid_bulk_migration_replays_to_sim_state() {
-    // rent-dominated two-tier economy: the DO_MIGRATE optimum is interior
-    // (r*/N = 0.4/1.9 ≈ 0.21), so the changeover demotion fires mid-run
-    let costs = vec![
-        PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 },
-        PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 },
-    ];
-    let root = scratch("migkill");
-    // Identical seeded run on a backend: stop 20 documents past the
-    // boundary and report (ledger total, stream-0 ledger, residency).
-    let run = |fs_root: Option<&PathBuf>| -> (f64, f64, usize, usize) {
-        let topo = TierTopology::two_tier(costs[0], costs[1])
-            .with_capacity(TierId::A, Some(16));
-        let mut builder = Engine::builder().topology(topo).charge_rent(true);
-        if let Some(root) = fs_root {
-            builder = builder
-                .backend(Box::new(FsBackend::open(root, costs.clone(), true).unwrap()));
-        }
-        let engine = builder.build().unwrap();
-        let mut s = engine
-            .open_stream(SessionSpec::new(300, 12).with_family(PlanFamily::Migrate))
-            .unwrap();
-        let r = s.plan().unwrap().r();
-        assert!(r > 12 && r < 280, "boundary must be interior (r={r})");
+fn killed_mid_migrate_stream_replays_to_sim_state() {
+    // the sim reference run
+    let (sim_total, sim_stream, sim_hot, sim_cold);
+    {
+        let (engine, mut hog, mut migrator) = shared_tier_migrate_engine(None);
+        let r = migrator.plan().unwrap().r();
         let mut rng = shptier::util::Rng::new(5);
-        for _ in 0..(r + 20) {
-            s.observe(rng.next_f64()).unwrap();
-        }
-        assert_eq!(
-            engine.resident_len(TierId::A),
-            0,
-            "the changeover demotion must have emptied the hot tier"
-        );
-        (
-            engine.ledger().total(),
-            engine.stream_ledger(s.id()).total(),
-            engine.resident_len(TierId::A),
-            engine.resident_len(TierId::B),
-        )
-        // engines dropped here without settle/finish: a process kill
-    };
-    let (sim_total, sim_stream, sim_hot, sim_cold) = run(None);
-    let (fs_total, fs_stream, fs_hot, fs_cold) = run(Some(&root));
-    assert!((sim_total - fs_total).abs() < 1e-9 * sim_total.max(1.0));
-    assert!((sim_stream - fs_stream).abs() < 1e-9 * sim_stream.max(1.0));
-    assert_eq!((sim_hot, sim_cold), (fs_hot, fs_cold));
-
-    // emulate the crash window inside the bulk migration: the journal
-    // holds the op, but one document's file never left the hot directory
-    let cold_dir = root.join("tier-1");
-    let moved = std::fs::read_dir(&cold_dir)
-        .unwrap()
-        .filter_map(|e| e.ok())
-        .find(|e| e.path().extension() == Some(std::ffi::OsStr::new("doc")))
-        .expect("a migrated document file exists");
-    let stale = root.join("tier-0").join(moved.file_name());
-    std::fs::rename(moved.path(), &stale).unwrap();
-
-    // reopen: replay + file reconciliation must reconverge to the sim
-    let reopened = FsBackend::open(&root, costs, true).unwrap();
-    let rec = reopened.recovery().expect("a journal was replayed");
-    assert!(rec.ops_replayed > 0);
-    assert!(
-        rec.files_recreated >= 1 && rec.files_removed >= 1,
-        "the torn file move must be repaired (recreated {}, removed {})",
-        rec.files_recreated,
-        rec.files_removed
-    );
-    assert_eq!(reopened.resident_len(TierId::A), sim_hot);
-    assert_eq!(reopened.resident_len(TierId::B), sim_cold);
-    assert!((reopened.ledger().total() - sim_total).abs() < 1e-9 * sim_total.max(1.0));
-    assert!(
-        (reopened.stream_ledger(0).total() - sim_stream).abs()
-            < 1e-9 * sim_stream.max(1.0)
-    );
-    // every rebuilt resident is backed by a real file in the right tier
-    for tier in [TierId::A, TierId::B] {
-        for r in reopened.residents(tier) {
-            let path =
-                root.join(format!("tier-{}", tier.0)).join(format!("{}.doc", r.doc));
-            assert!(path.exists(), "resident {} missing its file", r.doc);
-        }
+        drive(&mut hog, &mut migrator, r + 20, &mut rng);
+        sim_total = engine.ledger().total();
+        sim_stream = engine.stream_ledger(migrator.id()).total();
+        sim_hot = engine.resident_len(TierId::A);
+        sim_cold = engine.resident_len(TierId::B);
     }
-    assert!(!stale.exists(), "the stale hot copy must be reconciled away");
-    let _ = std::fs::remove_dir_all(&root);
+    for_each_durable_backend("killed-migstream", |kind| {
+        let costs = shared_tier_costs();
+        let (backend, root) = kind
+            .open("killed-migstream", costs.clone(), true)
+            .map_err(|e| e.to_string())?;
+        let root = root.expect("durable kinds have roots");
+        {
+            let (engine, mut hog, mut migrator) =
+                shared_tier_migrate_engine(Some(backend));
+            let r = migrator.plan().unwrap().r();
+            let mut rng = shptier::util::Rng::new(5);
+            drive(&mut hog, &mut migrator, r + 20, &mut rng);
+            let total = engine.ledger().total();
+            if (total - sim_total).abs() > 1e-9 * sim_total.max(1.0) {
+                return Err(format!("live parity broken: {total} vs {sim_total}"));
+            }
+            // killed here: engines dropped without settle/finish
+        }
+        // emulate the crash window inside the batch: one migrated payload
+        // never left the hot container (a stale hot copy remains, the
+        // cold copy is gone)
+        let cold_dir = root.join("tier-1");
+        let moved = std::fs::read_dir(&cold_dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .find(|e| {
+                let n = e.file_name();
+                let n = n.to_string_lossy();
+                n.ends_with(".doc") || n.ends_with(".obj")
+            })
+            .expect("a migrated payload exists");
+        let stale = root.join("tier-0").join(moved.file_name());
+        std::fs::rename(moved.path(), &stale).unwrap();
+
+        let reopened =
+            kind.reopen(Some(&root), costs, true).map_err(|e| e.to_string())?;
+        if reopened.resident_len(TierId::A) != sim_hot
+            || reopened.resident_len(TierId::B) != sim_cold
+        {
+            return Err(format!(
+                "residency diverged: {}/{} vs sim {}/{}",
+                reopened.resident_len(TierId::A),
+                reopened.resident_len(TierId::B),
+                sim_hot,
+                sim_cold
+            ));
+        }
+        if (reopened.ledger().total() - sim_total).abs() > 1e-9 * sim_total.max(1.0) {
+            return Err("ledger diverged after replay".into());
+        }
+        if (reopened.stream_ledger(1).total() - sim_stream).abs()
+            > 1e-9 * sim_stream.max(1.0)
+        {
+            return Err("per-stream ledger diverged after replay".into());
+        }
+        if stale.exists() {
+            return Err("the stale hot copy must be reconciled away".into());
+        }
+        let _ = std::fs::remove_dir_all(&root);
+        Ok(())
+    });
 }
 
 /// A policy that panics in `on_step` at one stream index — after the

@@ -2,8 +2,10 @@
 //!
 //! (a) ledger conservation across arbitrary interleavings of
 //!     `open_stream` / `observe` / `finish` / `finish_release` — run
-//!     against BOTH backends (`StorageSim` and the real-filesystem
-//!     `FsBackend` over a scratch directory, ADR-003);
+//!     against EVERY `StorageBackend` implementation (sim, the
+//!     real-filesystem `FsBackend`, and the object-store `ObjectBackend`)
+//!     through the shared conformance harness
+//!     (`shptier::util::for_each_backend`, ADR-005);
 //! (b) online re-arbitration never exceeds per-tier capacity, and matches
 //!     the static arbiter exactly when no stream closes mid-run;
 //! plus the 3-tier mid-run-closure demo the API redesign unlocks, and a
@@ -15,17 +17,11 @@ use shptier::engine::{Engine, SessionSpec, StreamSession, TierTopology};
 use shptier::fleet::{arbitrate, SeriesProfile, StreamSpec};
 use shptier::policy::{run_policy, Changeover};
 use shptier::propcheck::{check, Config};
-use shptier::storage::{FsBackend, TierId};
-use shptier::util::Rng;
-use std::path::PathBuf;
+use shptier::storage::TierId;
+use shptier::util::{for_each_backend, BackendKind, Rng};
 
 fn cfg(cases: u32) -> Config {
     Config { cases, seed: 0xE1161E }
-}
-
-/// Unique scratch directory for an `FsBackend` case.
-fn scratch(tag: &str) -> PathBuf {
-    shptier::util::scratch_dir(&format!("invariants-{tag}"))
 }
 
 fn hot() -> PerDocCosts {
@@ -81,18 +77,21 @@ fn engine_case(rng: &mut Rng) -> EngineCase {
 
 /// (a) Conservation + capacity under arbitrary open/observe/finish
 /// interleavings, including mid-run `finish_release` closures. The same
-/// property runs against both backends (`fs_root` selects `FsBackend`).
-fn conservation_case(case: &EngineCase, fs_root: Option<&PathBuf>) -> Result<(), String> {
-    {
-        let topo = topology(case.three_tier, case.hot_capacity);
-        let capacities = topo.capacities();
-        let mut builder = Engine::builder().topology(topo.clone()).charge_rent(case.rent);
-        if let Some(root) = fs_root {
-            let backend = FsBackend::open(root, topo.default_costs(), case.rent)
-                .map_err(|e| e.to_string())?;
-            builder = builder.backend(Box::new(backend));
-        }
-        let engine = builder.build().map_err(|e| e.to_string())?;
+/// property runs against every backend implementation (`kind` selects
+/// one through the conformance harness).
+fn conservation_case(case: &EngineCase, kind: BackendKind) -> Result<(), String> {
+    let topo = topology(case.three_tier, case.hot_capacity);
+    let capacities = topo.capacities();
+    let (backend, root) = kind
+        .open("engine-conservation", topo.default_costs(), case.rent)
+        .map_err(|e| e.to_string())?;
+    let result = (|| -> Result<(), String> {
+        let engine = Engine::builder()
+            .topology(topo)
+            .charge_rent(case.rent)
+            .backend(backend)
+            .build()
+            .map_err(|e| e.to_string())?;
         let mut rng = Rng::new(case.schedule_seed);
         let mut pending = case.sessions.clone();
         pending.reverse(); // pop() opens in declaration order
@@ -150,24 +149,27 @@ fn conservation_case(case: &EngineCase, fs_root: Option<&PathBuf>) -> Result<(),
             }
         }
         Ok(())
+    })();
+    if let Some(root) = root {
+        let _ = std::fs::remove_dir_all(root);
     }
+    result
 }
 
+/// One list of backends, every invariant on all three: the conformance
+/// harness runs the conservation property against sim, fs, and object.
+/// Durable kinds get fewer cases — each one does real IO.
 #[test]
-fn prop_engine_ledger_conserved_across_interleavings() {
-    check("engine-conservation", cfg(12), engine_case, |case| conservation_case(case, None));
-}
-
-/// The same conservation + capacity invariants over the real-filesystem
-/// backend: every case gets a fresh scratch root (fewer cases — each one
-/// does real file IO).
-#[test]
-fn prop_engine_ledger_conserved_on_fs_backend() {
-    check("engine-conservation-fs", cfg(6), engine_case, |case| {
-        let root = scratch("conservation");
-        let result = conservation_case(case, Some(&root));
-        let _ = std::fs::remove_dir_all(&root);
-        result
+fn prop_engine_ledger_conserved_on_every_backend() {
+    for_each_backend("engine-conservation", |kind| {
+        let cases = if kind == BackendKind::Sim { 12 } else { 5 };
+        check(
+            &format!("engine-conservation-{}", kind.label()),
+            cfg(cases),
+            engine_case,
+            |case| conservation_case(case, kind),
+        );
+        Ok(())
     });
 }
 

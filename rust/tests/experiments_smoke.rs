@@ -20,6 +20,7 @@ fn every_experiment_id_runs_quick() {
         "fig8_cumulative_writes.csv",
         "fleet_capacity_sweep.csv",
         "fleet_family.csv",
+        "fleet_family_ablation.csv",
         "fleet_staggered.csv",
     ] {
         assert!(dir.join(csv).exists(), "{csv} missing");

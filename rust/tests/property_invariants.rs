@@ -14,9 +14,9 @@ use shptier::policy::{
 };
 use shptier::propcheck::{check, gens, Config};
 use shptier::serdes::{Json, TomlValue};
-use shptier::storage::TierId;
+use shptier::storage::{StorageBackend, StorageSim, TierId};
 use shptier::topk::{rank_cmp, BoundedTopK, FullRankTracker, Scored};
-use shptier::util::Rng;
+use shptier::util::{for_each_backend, for_each_durable_backend, BackendKind, Rng};
 
 fn cfg(cases: u32) -> Config {
     Config { cases, seed: 0xC0FFEE }
@@ -566,95 +566,312 @@ fn demotion_conservation_case(rng: &mut Rng) -> DemotionConservationCase {
 /// `Σ min(observed_s, K_s)` documents (the sim's `put` rejects double
 /// residency, so a cascade bug surfaces as an error, and the count
 /// catches losses); at the end every session reads its full top-K and
-/// the ledger conserves.
+/// the ledger conserves. The property runs on every backend through the
+/// conformance harness (sim, fs, object — fewer cases on the durable
+/// kinds, which do real IO).
 #[test]
 fn prop_no_doc_lost_or_duplicated_across_bulk_demotions() {
-    check(
-        "bulk-demotion-conservation",
-        cfg(12),
-        demotion_conservation_case,
-        |case| {
-            let mut rng = Rng::new(case.schedule_seed);
-            // random rent-bearing economics, hotter tiers dearer to rent
-            // so migrate boundaries land at interior cuts often enough
-            let costs: Vec<PerDocCosts> = (0..case.tiers)
-                .map(|t| PerDocCosts {
-                    write: rng.range_f64(0.0, 2.0),
-                    read: rng.range_f64(0.0, 2.0),
-                    rent_window: rng.range_f64(0.0, 2.0) * (case.tiers - t) as f64,
-                })
-                .collect();
-            let mut topo = TierTopology::from_costs(costs).map_err(|e| e.to_string())?;
-            topo = topo.with_capacity(TierId(0), Some(case.hot_capacity));
-            if case.tiers > 2 {
-                topo = topo.with_capacity(TierId(1), Some(case.hot_capacity * 3));
+    for_each_backend("bulk-demotion-conservation", |kind| {
+        let cases = if kind == BackendKind::Sim { 12 } else { 4 };
+        check(
+            &format!("bulk-demotion-conservation-{}", kind.label()),
+            cfg(cases),
+            demotion_conservation_case,
+            |case| demotion_conservation_holds(case, kind),
+        );
+        Ok(())
+    });
+}
+
+fn demotion_conservation_holds(
+    case: &DemotionConservationCase,
+    kind: BackendKind,
+) -> Result<(), String> {
+    let mut rng = Rng::new(case.schedule_seed);
+    // random rent-bearing economics, hotter tiers dearer to rent
+    // so migrate boundaries land at interior cuts often enough
+    let costs: Vec<PerDocCosts> = (0..case.tiers)
+        .map(|t| PerDocCosts {
+            write: rng.range_f64(0.0, 2.0),
+            read: rng.range_f64(0.0, 2.0),
+            rent_window: rng.range_f64(0.0, 2.0) * (case.tiers - t) as f64,
+        })
+        .collect();
+    let mut topo = TierTopology::from_costs(costs).map_err(|e| e.to_string())?;
+    topo = topo.with_capacity(TierId(0), Some(case.hot_capacity));
+    if case.tiers > 2 {
+        topo = topo.with_capacity(TierId(1), Some(case.hot_capacity * 3));
+    }
+    let capacities = topo.capacities();
+    let (backend, scratch_root) = kind
+        .open("bulk-demotion", topo.default_costs(), case.rent)
+        .map_err(|e| e.to_string())?;
+    let result = (|| -> Result<(), String> {
+        let engine = Engine::builder()
+            .topology(topo)
+            .charge_rent(case.rent)
+            .backend(backend)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let mut live = Vec::new();
+        for &(n, k, family) in &case.sessions {
+            let spec = SessionSpec::new(n, k).with_rent(case.rent).with_family(family);
+            live.push(engine.open_stream(spec).map_err(|e| e.to_string())?);
+        }
+        let expected_resident = |live: &[shptier::engine::StreamSession]| -> u64 {
+            live.iter()
+                .zip(case.sessions.iter())
+                .map(|(s, &(n, k, _))| s.observed().min(n).min(k))
+                .sum()
+        };
+        loop {
+            let open: Vec<usize> = (0..live.len()).filter(|&i| !live[i].done()).collect();
+            if open.is_empty() {
+                break;
             }
-            let capacities = topo.capacities();
-            let engine = Engine::builder()
-                .topology(topo)
-                .charge_rent(case.rent)
-                .build()
-                .map_err(|e| e.to_string())?;
-            let mut live = Vec::new();
-            for &(n, k, family) in &case.sessions {
-                let spec = SessionSpec::new(n, k).with_rent(case.rent).with_family(family);
-                live.push(engine.open_stream(spec).map_err(|e| e.to_string())?);
+            let pick = open[rng.next_below(open.len() as u64) as usize];
+            live[pick].observe(rng.next_f64()).map_err(|e| e.to_string())?;
+            // conservation: every accepted document resident exactly once
+            let total: usize =
+                (0..case.tiers).map(|t| engine.resident_len(TierId(t))).sum();
+            let want = expected_resident(&live);
+            if total as u64 != want {
+                return Err(format!(
+                    "resident count {total} != expected {want} after a step"
+                ));
             }
-            let expected_resident = |live: &[shptier::engine::StreamSession]| -> u64 {
-                live.iter()
-                    .zip(case.sessions.iter())
-                    .map(|(s, &(n, k, _))| s.observed().min(n).min(k))
-                    .sum()
-            };
-            loop {
-                let open: Vec<usize> = (0..live.len())
-                    .filter(|&i| !live[i].done())
-                    .collect();
-                if open.is_empty() {
-                    break;
+        }
+        // capacity held throughout (bulk demotions must respect it)
+        for (t, cap) in capacities.iter().enumerate() {
+            if let Some(c) = cap {
+                let peak = engine.peak_occupancy(TierId(t));
+                if peak > *c {
+                    return Err(format!("tier {t} peak {peak} > capacity {c}"));
                 }
-                let pick = open[rng.next_below(open.len() as u64) as usize];
-                live[pick].observe(rng.next_f64()).map_err(|e| e.to_string())?;
-                // conservation: every accepted document resident exactly once
-                let total: usize =
-                    (0..case.tiers).map(|t| engine.resident_len(TierId(t))).sum();
-                let want = expected_resident(&live);
-                if total as u64 != want {
-                    return Err(format!(
-                        "resident count {total} != expected {want} after a step"
-                    ));
-                }
             }
-            // capacity held throughout (bulk demotions must respect it)
-            for (t, cap) in capacities.iter().enumerate() {
-                if let Some(c) = cap {
-                    let peak = engine.peak_occupancy(TierId(t));
-                    if peak > *c {
-                        return Err(format!("tier {t} peak {peak} > capacity {c}"));
+        }
+        engine.settle_rent(1.0).map_err(|e| e.to_string())?;
+        let mut ids = Vec::new();
+        for (s, &(n, k, _)) in live.into_iter().zip(case.sessions.iter()) {
+            ids.push(s.id());
+            let out = s.finish().map_err(|e| e.to_string())?;
+            if out.retained.len() as u64 != k.min(n) {
+                return Err(format!("retained {} != K {}", out.retained.len(), k.min(n)));
+            }
+        }
+        let total = engine.ledger().total();
+        let split: f64 = ids.iter().map(|&id| engine.stream_ledger(id).total()).sum();
+        if (total - split).abs() > 1e-6 * total.abs().max(1.0) {
+            return Err(format!("conservation violated: ${total} != Σ ${split}"));
+        }
+        Ok(())
+    })();
+    if let Some(root) = scratch_root {
+        let _ = std::fs::remove_dir_all(root);
+    }
+    result
+}
+
+// ---- journal checkpoint / replay equivalence (ADR-005) ---------------------
+
+#[derive(Debug)]
+struct ReplayCase {
+    n_ops: u64,
+    /// Op index at which backend A checkpoints (B never does).
+    ckpt_at: u64,
+    rent: bool,
+    seed: u64,
+}
+
+fn replay_case(rng: &mut Rng) -> ReplayCase {
+    let n_ops = 30 + rng.next_below(90);
+    ReplayCase {
+        n_ops,
+        ckpt_at: rng.next_below(n_ops),
+        rent: rng.next_below(2) == 1,
+        seed: rng.next_u64(),
+    }
+}
+
+/// Drive one random-walk op step, identically, on every backend in
+/// `targets`. Ops are chosen against the first target's (reference)
+/// state so they are always valid; uncapacitated tiers mean every op
+/// succeeds.
+fn random_op(
+    rng: &mut Rng,
+    next_doc: &mut u64,
+    at: f64,
+    targets: &mut [&mut dyn StorageBackend],
+) -> Result<(), String> {
+    let live = targets[0].docs_of_stream(0);
+    let live = if live.is_empty() { targets[0].docs_of_stream(1) } else { live };
+    let pick_live = |rng: &mut Rng, live: &[u64]| live[rng.next_below(live.len() as u64) as usize];
+    let choice = rng.next_below(10);
+    let doc = *next_doc;
+    let tier = TierId(rng.next_below(2) as usize);
+    let other = TierId(1 - tier.0);
+    let stream = rng.next_below(2);
+    let victim = if live.is_empty() { 0 } else { pick_live(rng, &live) };
+    for b in targets.iter_mut() {
+        match choice {
+            0..=3 => {
+                b.set_attribution(Some(stream));
+                b.put(doc, tier, at).map_err(|e| e.to_string())?;
+            }
+            4 if !live.is_empty() => {
+                b.delete(victim, at).map_err(|e| e.to_string())?;
+            }
+            5 if !live.is_empty() => {
+                b.read(victim).map_err(|e| e.to_string())?;
+            }
+            6 if !live.is_empty() => {
+                b.migrate_doc(victim, other, at).map_err(|e| e.to_string())?;
+            }
+            7 => {
+                b.migrate_all(tier, other, at).map_err(|e| e.to_string())?;
+            }
+            8 => {
+                b.migrate_stream(stream, tier, other, at).map_err(|e| e.to_string())?;
+            }
+            _ => {
+                b.settle_rent(at).map_err(|e| e.to_string())?;
+            }
+        }
+    }
+    if choice <= 3 {
+        *next_doc += 1;
+    }
+    Ok(())
+}
+
+fn backends_agree(
+    a: &dyn StorageBackend,
+    b: &dyn StorageBackend,
+    what: &str,
+) -> Result<(), String> {
+    for t in [TierId::A, TierId::B] {
+        if a.residents(t) != b.residents(t) {
+            return Err(format!("{what}: tier {t:?} residency diverged"));
+        }
+    }
+    if a.ledger().total().to_bits() != b.ledger().total().to_bits() {
+        return Err(format!(
+            "{what}: run ledgers diverged ({} vs {})",
+            a.ledger().total(),
+            b.ledger().total()
+        ));
+    }
+    for s in [0u64, 1] {
+        if a.stream_ledger(s).total().to_bits() != b.stream_ledger(s).total().to_bits() {
+            return Err(format!("{what}: stream {s} ledgers diverged"));
+        }
+    }
+    Ok(())
+}
+
+/// Replay equivalence (ADR-005): for random op histories,
+/// checkpoint-then-replay-suffix ≡ full-journal replay ≡ the live sim —
+/// on both durable backends — and after a final compaction the journal's
+/// size is a function of live state, never of op count.
+#[test]
+fn prop_checkpoint_replay_equals_full_replay() {
+    for_each_durable_backend("replay-equivalence", |kind| {
+        check(
+            &format!("replay-equivalence-{}", kind.label()),
+            cfg(6),
+            replay_case,
+            |case| {
+                let costs = vec![
+                    PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.5 },
+                    PerDocCosts { write: 3.0, read: 0.5, rent_window: 0.1 },
+                ];
+                let mut sim = StorageSim::with_tiers(costs.clone(), case.rent);
+                let (mut a, root_a) = kind
+                    .open("replay-a", costs.clone(), case.rent)
+                    .map_err(|e| e.to_string())?;
+                let (mut b, root_b) = kind
+                    .open("replay-b", costs.clone(), case.rent)
+                    .map_err(|e| e.to_string())?;
+                let result = (|| -> Result<(), String> {
+                    for reg_stream in [0u64, 1] {
+                        let stream_costs = vec![
+                            PerDocCosts {
+                                write: 1.0 + reg_stream as f64,
+                                read: 2.0,
+                                rent_window: 0.3,
+                            },
+                            PerDocCosts { write: 2.5, read: 0.4, rent_window: 0.05 },
+                        ];
+                        sim.register_stream(reg_stream, stream_costs.clone())
+                            .map_err(|e| e.to_string())?;
+                        a.register_stream(reg_stream, stream_costs.clone())
+                            .map_err(|e| e.to_string())?;
+                        b.register_stream(reg_stream, stream_costs)
+                            .map_err(|e| e.to_string())?;
                     }
+                    let mut rng = Rng::new(case.seed);
+                    let mut next_doc = 0u64;
+                    for i in 0..case.n_ops {
+                        let at = i as f64 / case.n_ops as f64;
+                        {
+                            let mut targets: Vec<&mut dyn StorageBackend> =
+                                vec![&mut sim, a.as_mut(), b.as_mut()];
+                            random_op(&mut rng, &mut next_doc, at, &mut targets)?;
+                        }
+                        if i == case.ckpt_at {
+                            // A checkpoints mid-history; B keeps its full
+                            // journal — accounting must be untouched
+                            a.checkpoint().map_err(|e| e.to_string())?;
+                            backends_agree(a.as_ref(), &sim, "post-checkpoint")?;
+                        }
+                    }
+                    backends_agree(a.as_ref(), &sim, "live A vs sim")?;
+                    backends_agree(b.as_ref(), &sim, "live B vs sim")?;
+                    Ok(())
+                })();
+                // kill both (drop) and reopen: checkpoint+suffix ≡ full log
+                drop(a);
+                drop(b);
+                let outcome = result.and_then(|()| {
+                    let mut a2 = kind
+                        .reopen(root_a.as_deref(), costs.clone(), case.rent)
+                        .map_err(|e| e.to_string())?;
+                    let b2 = kind
+                        .reopen(root_b.as_deref(), costs.clone(), case.rent)
+                        .map_err(|e| e.to_string())?;
+                    backends_agree(a2.as_ref(), &sim, "reopened A (ckpt+suffix)")?;
+                    backends_agree(b2.as_ref(), &sim, "reopened B (full journal)")?;
+                    // final compaction: journal length is bounded by live
+                    // state (docs + registered streams + ledger/peak rows),
+                    // independent of how many ops the history held
+                    a2.checkpoint().map_err(|e| e.to_string())?;
+                    let live = a2.resident_count();
+                    drop(a2);
+                    let journal_file = kind
+                        .journal_path(root_a.as_deref().expect("durable root"))
+                        .ok_or("this backend kind keeps no journal")?;
+                    let lines = std::fs::read_to_string(&journal_file)
+                        .map_err(|e| e.to_string())?
+                        .lines()
+                        .count();
+                    let bound = live + 16; // header/begin/end + regs + ledger + peaks
+                    if lines > bound {
+                        return Err(format!(
+                            "compacted journal has {lines} lines > bound {bound} \
+                             (live {live}, ops {})",
+                            case.n_ops
+                        ));
+                    }
+                    Ok(())
+                });
+                for root in [root_a, root_b].into_iter().flatten() {
+                    let _ = std::fs::remove_dir_all(root);
                 }
-            }
-            engine.settle_rent(1.0).map_err(|e| e.to_string())?;
-            let mut ids = Vec::new();
-            for (s, &(n, k, _)) in live.into_iter().zip(case.sessions.iter()) {
-                ids.push(s.id());
-                let out = s.finish().map_err(|e| e.to_string())?;
-                if out.retained.len() as u64 != k.min(n) {
-                    return Err(format!(
-                        "retained {} != K {}",
-                        out.retained.len(),
-                        k.min(n)
-                    ));
-                }
-            }
-            let total = engine.ledger().total();
-            let split: f64 = ids.iter().map(|&id| engine.stream_ledger(id).total()).sum();
-            if (total - split).abs() > 1e-6 * total.abs().max(1.0) {
-                return Err(format!("conservation violated: ${total} != Σ ${split}"));
-            }
-            Ok(())
-        },
-    );
+                outcome
+            },
+        );
+        Ok(())
+    });
 }
 
 /// Migration accounting: under ChangeoverMigrate everything is read from B,
