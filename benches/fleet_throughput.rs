@@ -11,9 +11,12 @@
 //! `SHPTIER_BENCH_TOLERANCE` (default 0.25, i.e. a 4× regression) times the
 //! baseline docs/sec is reported, and with `SHPTIER_BENCH_CHECK=1` (the CI
 //! gate) the process exits non-zero. A placeholder baseline (empty
-//! `results`) skips the comparison with a notice — the tolerance is
-//! deliberately loose because CI hardware differs from the recording host;
-//! the gate exists to catch order-of-magnitude regressions, not noise.
+//! `results`) skips the comparison with a notice in dev runs, but is itself
+//! **fatal** under `SHPTIER_BENCH_CHECK=1`: a checked run that compares
+//! nothing protects nothing, so CI records a baseline on the runner before
+//! checking. The tolerance is deliberately loose because CI hardware
+//! differs from the recording host; the gate exists to catch
+//! order-of-magnitude regressions, not noise.
 
 use shptier::benchkit::{BenchResult, Bencher};
 use shptier::cost::hot_demand;
@@ -131,7 +134,22 @@ fn main() {
                     std::process::exit(1);
                 }
             }
-            BaselineCheck::SkippedBenign(note) => println!("{note}"),
+            BaselineCheck::SkippedBenign(note) => {
+                println!("{note}");
+                if strict {
+                    // The CI gate must never pass vacuously: "no baseline"
+                    // is benign for a dev run, but a checked run that
+                    // compares nothing protects nothing.
+                    eprintln!(
+                        "SHPTIER_BENCH_CHECK=1 expects an armed gate, but the \
+                         baseline at {} is missing or still the committed \
+                         placeholder. Record one first:\n  SHPTIER_BENCH_RECORD=1 \
+                         cargo bench --bench fleet_throughput",
+                        path.display()
+                    );
+                    std::process::exit(1);
+                }
+            }
             BaselineCheck::Broken(note) => {
                 println!("{note}");
                 if strict {

@@ -52,6 +52,10 @@ pub struct SessionSnapshot {
     /// The strategy family the session asked for (`Auto` is resolved by
     /// the arbiter).
     pub family: PlanFamily,
+    /// Degraded admission (serve layer): the session runs pinned to the
+    /// sink, so it demands nothing from capacitated tiers beyond what it
+    /// physically holds.
+    pub pinned_cold: bool,
     /// Documents observed so far (0 at admission).
     pub observed: u64,
     /// The session's current residents per tier (length = topology tiers).
@@ -84,6 +88,7 @@ impl SessionSnapshot {
             include_rent,
             naive: false,
             family,
+            pinned_cold: false,
             observed: 0,
             in_use: vec![0; tiers],
             fired: vec![false; tiers.saturating_sub(1)],
@@ -170,7 +175,10 @@ impl Arbiter for ProportionalArbiter {
                 .zip(sessions.iter())
                 .map(|(p, s)| {
                     let held = s.in_use.get(tier.0).copied().unwrap_or(0);
-                    if s.fired.get(tier.0).copied().unwrap_or(false) {
+                    // a pinned-cold (degraded-admission) session never
+                    // places off the sink, so — like a fired changeover —
+                    // it demands only what it already holds
+                    if s.pinned_cold || s.fired.get(tier.0).copied().unwrap_or(false) {
                         held
                     } else {
                         p.demand(tier).max(held)
@@ -371,6 +379,21 @@ mod tests {
         assert_eq!(out[0].demand[0], 0, "fired stream demands nothing hot");
         assert_eq!(out[0].quota[0], Some(0));
         assert_eq!(out[1].quota[0], Some(10), "survivor inherits the full tier");
+    }
+
+    #[test]
+    fn pinned_cold_session_demands_nothing_hot() {
+        // a degraded admission never competes for the hot tier: the other
+        // stream inherits the whole capacity
+        let topo = TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5))
+            .with_capacity(TierId::A, Some(10));
+        let mut degraded = snap(0, 1000, 50);
+        degraded.pinned_cold = true;
+        let fresh = snap(1, 1000, 50);
+        let out = ProportionalArbiter.arbitrate(&[degraded, fresh], &topo);
+        assert_eq!(out[0].demand[0], 0, "pinned-cold stream demands nothing hot");
+        assert_eq!(out[0].quota[0], Some(0));
+        assert_eq!(out[1].quota[0], Some(10), "other stream inherits the full tier");
     }
 
     #[test]

@@ -106,6 +106,13 @@ struct Shared {
     /// Times a poisoned engine lock was recovered (a session panicked
     /// while holding it).
     poison_recoveries: u64,
+    /// Auto-checkpoint policy: checkpoint + compact when `journal_ops >
+    /// checkpoint_factor × live documents` (0 disables — ADR-005
+    /// follow-up, `engine.checkpoint_factor` in configs).
+    checkpoint_factor: u64,
+    /// Checkpoints the policy has triggered (not counting explicit
+    /// [`Engine::checkpoint`] calls).
+    auto_checkpoints: u64,
 }
 
 /// Lock the shared engine state, recovering from mutex poisoning: a
@@ -210,6 +217,7 @@ impl Shared {
             spec.naive,
             spec.record_series,
             spec.family,
+            spec.pinned_cold,
         );
         self.sessions.insert(id, state);
         Ok(id)
@@ -266,6 +274,26 @@ impl Shared {
         self.rearbitrations += 1;
         self.last_assignments = assignments;
     }
+
+    /// Enforce the auto-checkpoint policy: when the journal's replay
+    /// suffix outgrows `checkpoint_factor ×` the live document count, fold
+    /// it into a fresh snapshot. Keeps long-running deployments' journals
+    /// sized by live state, not by op history. Free on memory-only
+    /// backends (`journal_ops() == 0` always).
+    fn maybe_auto_checkpoint(&mut self) -> Result<()> {
+        if self.checkpoint_factor == 0 {
+            return Ok(());
+        }
+        let ops = self.backend.journal_ops();
+        // `max(1)` keeps the policy armed on an empty store: a journal
+        // full of deletes for dead documents still gets folded.
+        let live = (self.backend.resident_count() as u64).max(1);
+        if ops > self.checkpoint_factor.saturating_mul(live) {
+            self.backend.checkpoint()?;
+            self.auto_checkpoints += 1;
+        }
+        Ok(())
+    }
 }
 
 /// The tier-placement engine: shared storage + arbiter + live sessions.
@@ -279,6 +307,7 @@ pub struct EngineBuilder {
     backend: Option<Box<dyn StorageBackend>>,
     arbiter: Box<dyn Arbiter>,
     charge_rent: bool,
+    checkpoint_factor: u64,
 }
 
 impl Default for EngineBuilder {
@@ -288,6 +317,10 @@ impl Default for EngineBuilder {
             backend: None,
             arbiter: Box::new(ProportionalArbiter),
             charge_rent: true,
+            // off by default: batch surfaces checkpoint explicitly, and
+            // several acceptance tests inspect raw journal contents. The
+            // serve layer turns this on (default factor 8 in serve.toml).
+            checkpoint_factor: 0,
         }
     }
 }
@@ -319,6 +352,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Auto-checkpoint policy: trigger [`Engine::checkpoint`] whenever the
+    /// journal's replay suffix exceeds `factor ×` the live document count
+    /// (0 — the default — disables; long-running serve deployments run
+    /// with 8). Irrelevant for memory-only backends.
+    pub fn checkpoint_factor(mut self, factor: u64) -> Self {
+        self.checkpoint_factor = factor;
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let topology = self
             .topology
@@ -340,17 +382,24 @@ impl EngineBuilder {
         for (i, spec) in topology.tiers().iter().enumerate() {
             backend.set_capacity(TierId(i), spec.capacity);
         }
+        // Continue the id sequence past any streams a reopened durable
+        // backend replayed from its journal: reissuing a historical id
+        // would alias its documents and ledger lines. Fresh backends
+        // report no streams, so ids still start at 0.
+        let next_id = backend.stream_ids().iter().max().map_or(0, |m| m + 1);
         Ok(Engine {
             shared: Arc::new(Mutex::new(Shared {
                 backend,
                 topology,
                 arbiter: self.arbiter,
                 sessions: BTreeMap::new(),
-                next_id: 0,
+                next_id,
                 rearbitrations: 0,
                 last_assignments: Vec::new(),
                 last_overcommits: Vec::new(),
                 poison_recoveries: 0,
+                checkpoint_factor: self.checkpoint_factor,
+                auto_checkpoints: 0,
             })),
         })
     }
@@ -478,6 +527,12 @@ impl Engine {
         lock_shared(&self.shared).poison_recoveries
     }
 
+    /// Checkpoints triggered by the auto-checkpoint policy (see
+    /// [`EngineBuilder::checkpoint_factor`]).
+    pub fn auto_checkpoints(&self) -> u64 {
+        lock_shared(&self.shared).auto_checkpoints
+    }
+
     pub fn arbiter_name(&self) -> String {
         lock_shared(&self.shared).arbiter.name()
     }
@@ -516,7 +571,7 @@ impl StreamSession {
         if fired {
             g.rearbitrate();
         }
-        Ok(())
+        g.maybe_auto_checkpoint()
     }
 
     /// Observe the next document, deferring placement to an external
@@ -596,6 +651,7 @@ impl StreamSession {
             s.release(backend.as_mut())?;
         }
         g.rearbitrate();
+        g.maybe_auto_checkpoint()?;
         Ok(outcome)
     }
 
@@ -919,6 +975,113 @@ mod tests {
         assert!(ledger.migration_total() > 0.0, "the changeover demotion fired");
         assert_eq!(out.hot_reads(), 0, "post-changeover reads are all cold");
         assert_eq!(engine.resident_len(TierId::A), 0, "hot tier handed back");
+    }
+
+    #[test]
+    fn auto_checkpoint_bounds_journal_by_live_state() {
+        use crate::storage::FsBackend;
+        let root = crate::util::scratch_dir("auto-ckpt");
+        let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
+        let backend = FsBackend::open(&root, costs.clone(), false)
+            .unwrap()
+            .with_sync(false);
+        let factor = 8u64;
+        let engine = Engine::builder()
+            .topology(TierTopology::from_costs(costs).unwrap())
+            .backend(Box::new(backend))
+            .charge_rent(false)
+            .checkpoint_factor(factor)
+            .build()
+            .unwrap();
+        // long churn: many short sessions opened, run, and released — the
+        // op history grows without bound, the live state does not
+        let mut rng = Rng::new(21);
+        let mut max_live = 0u64;
+        for _ in 0..30 {
+            let mut s = engine
+                .open_stream(SessionSpec::new(40, 4).with_rent(false))
+                .unwrap();
+            for _ in 0..40 {
+                s.observe(rng.next_f64()).unwrap();
+            }
+            s.finish_release().unwrap();
+            let live = lock_shared(&engine.shared).backend.resident_count() as u64;
+            max_live = max_live.max(live);
+            assert!(
+                engine.journal_ops() <= factor * live.max(1) + 1,
+                "journal {} ops for {} live docs",
+                engine.journal_ops(),
+                live
+            );
+        }
+        assert!(engine.auto_checkpoints() > 0, "the policy never fired");
+        let _ = std::fs::remove_dir_all(root);
+
+        // factor 0 disables the policy entirely
+        let root2 = crate::util::scratch_dir("auto-ckpt-off");
+        let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
+        let backend = FsBackend::open(&root2, costs.clone(), false)
+            .unwrap()
+            .with_sync(false);
+        let engine = Engine::builder()
+            .topology(TierTopology::from_costs(costs).unwrap())
+            .backend(Box::new(backend))
+            .charge_rent(false)
+            .checkpoint_factor(0)
+            .build()
+            .unwrap();
+        let mut s = engine
+            .open_stream(SessionSpec::new(60, 3).with_rent(false))
+            .unwrap();
+        for _ in 0..60 {
+            s.observe(rng.next_f64()).unwrap();
+        }
+        s.finish_release().unwrap();
+        assert_eq!(engine.auto_checkpoints(), 0);
+        assert!(engine.journal_ops() > 0, "nothing folded the history");
+        let _ = std::fs::remove_dir_all(root2);
+    }
+
+    #[test]
+    fn reopened_backend_continues_the_id_sequence() {
+        use crate::storage::FsBackend;
+        let root = crate::util::scratch_dir("next-id");
+        let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
+        let topo = TierTopology::from_costs(costs.clone()).unwrap();
+        {
+            let backend = FsBackend::open(&root, costs.clone(), false)
+                .unwrap()
+                .with_sync(false);
+            let engine = Engine::builder()
+                .topology(topo.clone())
+                .backend(Box::new(backend))
+                .charge_rent(false)
+                .build()
+                .unwrap();
+            let mut s = engine
+                .open_stream(SessionSpec::new(10, 2).with_rent(false))
+                .unwrap();
+            assert_eq!(s.id(), 0);
+            for i in 0..10 {
+                s.observe(i as f64).unwrap();
+            }
+            s.finish().unwrap(); // residents stay: the journal knows stream 0
+        }
+        // reopen the same root: the replayed stream ids must not be reissued
+        let backend =
+            FsBackend::open(&root, costs.clone(), false).unwrap().with_sync(false);
+        let engine = Engine::builder()
+            .topology(topo)
+            .backend(Box::new(backend))
+            .charge_rent(false)
+            .build()
+            .unwrap();
+        let s = engine
+            .open_stream(SessionSpec::new(10, 2).with_rent(false))
+            .unwrap();
+        assert_eq!(s.id(), 1, "replayed stream 0 must keep its documents");
+        s.finish().unwrap();
+        let _ = std::fs::remove_dir_all(root);
     }
 
     #[test]

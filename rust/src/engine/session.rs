@@ -47,6 +47,10 @@ pub struct SessionSpec {
     /// Strategy family the arbiter should plan for this session (keep /
     /// migrate / auto).
     pub family: PlanFamily,
+    /// Degraded admission: every placement is pinned to the unbounded
+    /// sink tier regardless of the plan the arbiter would assign. Used by
+    /// the serve layer's degrade-to-cold admission verdict.
+    pub pinned_cold: bool,
 }
 
 impl SessionSpec {
@@ -59,6 +63,7 @@ impl SessionSpec {
             naive: false,
             record_series: false,
             family: PlanFamily::Keep,
+            pinned_cold: false,
         }
     }
 
@@ -72,6 +77,7 @@ impl SessionSpec {
             naive: false,
             record_series: false,
             family: PlanFamily::Keep,
+            pinned_cold: false,
         }
     }
 
@@ -97,6 +103,11 @@ impl SessionSpec {
 
     pub fn with_family(mut self, family: PlanFamily) -> Self {
         self.family = family;
+        self
+    }
+
+    pub fn with_pinned_cold(mut self, pinned: bool) -> Self {
+        self.pinned_cold = pinned;
         self
     }
 }
@@ -139,6 +150,9 @@ pub(crate) struct SessionState {
     pub naive: bool,
     /// Strategy family the arbiter plans for this session.
     pub family: PlanFamily,
+    /// Degraded admission: all cuts are clamped to 0 so every placement
+    /// lands on the unbounded sink (see [`SessionSpec::pinned_cold`]).
+    pub pinned_cold: bool,
     /// Current plan (re-assigned by the arbiter on open/close events via
     /// [`SessionState::apply_plan`]).
     pub plan: PlacementPlan,
@@ -172,6 +186,7 @@ impl SessionState {
         naive: bool,
         record_series: bool,
         family: PlanFamily,
+        pinned_cold: bool,
     ) -> Self {
         let tiers = tier_costs.len();
         // Placeholder all-to-sink plan: the engine re-arbitrates on every
@@ -188,6 +203,7 @@ impl SessionState {
             include_rent,
             naive,
             family,
+            pinned_cold,
             plan,
             quotas: vec![None; tiers],
             fired: vec![None; tiers - 1],
@@ -228,6 +244,7 @@ impl SessionState {
             include_rent: self.include_rent,
             naive: self.naive,
             family: self.family,
+            pinned_cold: self.pinned_cold,
             observed: self.next_index,
             in_use: self.in_use.iter().map(|&u| u as u64).collect(),
             fired: self.fired.iter().map(|f| f.is_some()).collect(),
@@ -240,6 +257,13 @@ impl SessionState {
     /// place hot again with no second demotion coming, silently undoing
     /// the capacity the changeover lent back to the pool.
     pub fn apply_plan(&mut self, mut plan: PlacementPlan) {
+        if self.pinned_cold {
+            // Degraded admission: no document of this session may occupy
+            // anything warmer than the sink, whatever the arbiter offered.
+            for j in 0..self.fired.len() {
+                plan.clamp_cut_at_most(j, 0);
+            }
+        }
         for (j, f) in self.fired.iter().enumerate() {
             if let Some(cut_at_fire) = f {
                 plan.clamp_cut_at_most(j, *cut_at_fire);

@@ -49,7 +49,10 @@
 //! many concurrent top-K streams arbitrated over shared, capacity-limited
 //! tiers — lives in [`fleet`] (`shptier fleet --streams 16`), and
 //! `shptier engine` demos a 3-tier fleet with a mid-run stream closure
-//! triggering online re-arbitration.
+//! triggering online re-arbitration. [`serve`] wraps the engine in a
+//! long-running, multi-tenant HTTP placement service (`shptier serve`)
+//! with quota-class admission control, per-tenant invoicing from the
+//! attributed ledgers, and journal-backed crash recovery (ADR-006).
 
 pub mod benchkit;
 pub mod config;
@@ -63,6 +66,7 @@ pub mod report;
 pub mod runtime;
 pub mod policy;
 pub mod propcheck;
+pub mod serve;
 pub mod ssa;
 pub mod serdes;
 pub mod shp;

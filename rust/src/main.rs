@@ -8,6 +8,8 @@
 //!                                 durable backends, --reconcile for
 //!                                 sim-vs-durable ledger parity)
 //!   exp --id <id> [--quick]      regenerate a paper table/figure (see DESIGN.md §4)
+//!   serve --config <toml>        multi-tenant HTTP placement server (ADR-006)
+//!   serve-soak [--kill]          concurrency + crash-recovery soak against serve
 //!   optimize [--preset <p>]      print r* and the strategy ranking for an economy
 //!   validate [--quick]           Monte-Carlo validation suite (E1, E2, A2)
 //!   sizing                       the §VIII sweep-sizing table
@@ -92,6 +94,8 @@ fn real_main() -> Result<()> {
             let id = flags.get("id").map(String::as_str).unwrap_or("all");
             exp::run(id, seed, quick)
         }
+        "serve" => cmd_serve(&flags),
+        "serve-soak" => cmd_serve_soak(&flags),
         "optimize" => cmd_optimize(&flags),
         "validate" => {
             exp::run("shp-classic", seed, quick)?;
@@ -368,6 +372,71 @@ fn print_engine_demo(report: &shptier::engine::EngineDemoReport) {
     println!("engine ledger: {}", report.ledger_summary);
 }
 
+/// `shptier serve` — run the multi-tenant placement server (ADR-006)
+/// until a client posts `/v1/shutdown`. Durable backends reopen with
+/// journal replay, so restarting on the same root resumes accounting.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let backend = shptier::engine::BackendSpec::parse(
+        flags.get("backend").map(String::as_str).unwrap_or("sim"),
+    )?;
+    let config = match flags.get("config") {
+        Some(path) => shptier::serve::ServeConfig::from_file(path)?,
+        None => bail!("serve needs --config <serve.toml> (see configs/serve.toml)"),
+    };
+    let tenants = config.book.tenants().len();
+    if tenants == 0 {
+        bail!("serve config defines no tenants; nobody could ever connect");
+    }
+    let server = shptier::serve::RunningServer::start(config, backend.clone())?;
+    // The soak harness and operators parse this exact line.
+    println!("listening on {}", server.local_addr());
+    println!(
+        "serving {} tenants over backend '{}' (POST /v1/shutdown to stop)",
+        tenants,
+        backend.label()
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    server.wait()?;
+    println!("drained and checkpointed; bye");
+    Ok(())
+}
+
+/// `shptier serve-soak` — the acceptance soak (ADR-006): many concurrent
+/// sessions across a mixed-class tenant roster, with `--kill` a SIGKILL
+/// mid-traffic and a journal-replay restart, then ledger-conservation
+/// and exactly-once-invoicing checks.
+fn cmd_serve_soak(flags: &HashMap<String, String>) -> Result<()> {
+    let backend_str = flags.get("backend").map(String::as_str).unwrap_or("sim");
+    let sessions: usize = flags
+        .get("sessions")
+        .map(|s| s.parse().context("--sessions must be an integer"))
+        .transpose()?
+        .unwrap_or(1000);
+    let threads: usize = flags
+        .get("threads")
+        .map(|s| s.parse().context("--threads must be an integer"))
+        .transpose()?
+        .unwrap_or(16);
+
+    let outcome = if flags.contains_key("kill") {
+        shptier::serve::soak::run_kill_restart_soak(backend_str, sessions, threads)?
+    } else {
+        let backend = shptier::engine::BackendSpec::parse(backend_str)?;
+        let (config_text, roster) = shptier::serve::soak::soak_config(6, 2);
+        let config = shptier::serve::ServeConfig::from_toml(&config_text)?;
+        let server = shptier::serve::RunningServer::start(config, backend)?;
+        let addr = server.local_addr();
+        println!("serve-soak: in-process server on {addr} ({sessions} sessions)");
+        let outcome =
+            shptier::serve::soak::drive_and_verify(addr, &roster, sessions, threads, 24, 4)?;
+        server.shutdown()?;
+        outcome
+    };
+    println!("{}", outcome.render());
+    Ok(())
+}
+
 fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
     let preset = flags.get("preset").map(String::as_str).unwrap_or("case-study-1");
     let model = match preset {
@@ -401,6 +470,9 @@ USAGE:
                  [--capacity C] [--backend sim|fs:<root>|obj:<root>]
                  [--reconcile] [--family keep|migrate|auto]
                  [--config configs/engine.toml]
+  shptier serve --config configs/serve.toml [--backend sim|fs:<root>|obj:<root>]
+  shptier serve-soak [--backend sim|fs:<root>] [--sessions 1000]
+                     [--threads 16] [--kill]
   shptier exp --id <{}> [--quick] [--seed N]
   shptier optimize [--preset case-study-1|case-study-2]
   shptier validate [--quick]

@@ -5,9 +5,20 @@
 //! `python/compile/aot.py`) is read with this hand-rolled parser. It
 //! supports the full JSON grammar except for `\u` surrogate pairs beyond the
 //! BMP (sufficient for machine-generated manifests).
+//!
+//! The parser also fronts the serve layer's network protocol, so it is
+//! hardened against untrusted input: numbers whose magnitude overflows
+//! `f64` are rejected (instead of silently becoming `inf`, which
+//! [`Json::dump`] could never round-trip), and nesting is limited to
+//! [`MAX_DEPTH`] so a bomb of `[[[[…` cannot blow the parse stack.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container nesting the parser accepts. Deep enough for any
+/// payload this crate emits, shallow enough that recursive descent on
+/// hostile input cannot exhaust the stack.
+pub const MAX_DEPTH: usize = 64;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,7 +48,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -159,6 +170,7 @@ fn write_escaped(s: &str, out: &mut String) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -231,9 +243,13 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        let n = text.parse::<f64>().map_err(|_| self.err("bad number"))?;
+        // `"1e999".parse::<f64>()` is Ok(inf): reject it here, because a
+        // non-finite Num has no JSON representation to round-trip through
+        if !n.is_finite() {
+            return Err(self.err("number out of range"));
+        }
+        Ok(Json::Num(n))
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -284,12 +300,24 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Guard one level of container nesting (errors abort the parse, so
+    /// the counter only needs unwinding on success paths).
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -300,6 +328,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -309,10 +338,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -328,6 +359,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -386,5 +418,37 @@ mod tests {
     fn unicode_content() {
         let j = Json::parse("\"héllo ☃\"").unwrap();
         assert_eq!(j.as_str(), Some("héllo ☃"));
+    }
+
+    #[test]
+    fn overflowing_numbers_are_rejected_not_inf() {
+        for src in ["1e999", "-1e999", "[1, 2e400]", "{\"x\": 1e309}"] {
+            let e = Json::parse(src).unwrap_err();
+            assert!(e.msg.contains("out of range"), "{src}: {e}");
+        }
+        // the largest finite doubles still parse
+        assert!(Json::parse("1.7976931348623157e308").is_ok());
+        assert!(Json::parse("-1.7976931348623157e308").is_ok());
+    }
+
+    #[test]
+    fn nesting_bomb_is_rejected_at_max_depth() {
+        let deep_ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let too_deep =
+            format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let e = Json::parse(&too_deep).unwrap_err();
+        assert!(e.msg.contains("nesting too deep"), "{e}");
+        // an unclosed bomb (the classic DoS shape) also fails cleanly
+        let bomb = "[".repeat(100_000);
+        assert!(Json::parse(&bomb).is_err());
+        // mixed array/object nesting counts every level
+        let mixed = "{\"a\":".repeat(40) + &"[".repeat(40) + "1"
+            + &"]".repeat(40)
+            + &"}".repeat(40);
+        assert!(Json::parse(&mixed).is_err());
+        // siblings do not accumulate depth
+        let wide = format!("[{}]", vec!["[1]"; 1000].join(","));
+        assert!(Json::parse(&wide).is_ok());
     }
 }

@@ -1,0 +1,145 @@
+//! Blocking std-only client for the placement server.
+//!
+//! One TCP connection per request (the server always answers
+//! `Connection: close`), typed payloads from [`crate::serve::wire`].
+//! Used by the `serve_*` test suites and the `shptier serve-soak`
+//! harness; it is deliberately the *only* HTTP client in the tree, so
+//! protocol drift between server and consumers shows up as a unit-test
+//! failure here rather than in an external tool.
+
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::cost::PerDocCosts;
+use crate::policy::PlanFamily;
+use crate::serdes::Json;
+use crate::serve::http;
+use crate::serve::wire::{
+    ErrorBody, FinishResponse, Invoice, ObserveRequest, ObserveResponse, OpenRequest,
+    OpenResponse, Status,
+};
+
+/// Outcome of an open attempt: servers say no with structure, and
+/// admission rejections are expected behaviour, not transport errors.
+#[derive(Debug, Clone)]
+pub enum OpenOutcome {
+    Admitted(OpenResponse),
+    /// 4xx with the machine-readable reason (`stream-quota`,
+    /// `hot-quota`, `bad-token`, …).
+    Rejected { status: u16, reason: Option<String>, error: String },
+}
+
+/// Blocking client bound to one server address.
+#[derive(Debug, Clone)]
+pub struct Client {
+    addr: SocketAddr,
+    timeout: Duration,
+}
+
+impl Client {
+    pub fn new(addr: SocketAddr) -> Self {
+        Self { addr, timeout: Duration::from_secs(30) }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json), String> {
+        let stream = TcpStream::connect(self.addr).map_err(|e| format!("connect: {e}"))?;
+        stream.set_read_timeout(Some(self.timeout)).map_err(|e| format!("timeout: {e}"))?;
+        stream.set_write_timeout(Some(self.timeout)).map_err(|e| format!("timeout: {e}"))?;
+        let mut stream = stream;
+        let payload = body.map(|j| j.dump()).unwrap_or_default();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: shptier\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+            payload.len()
+        )
+        .map_err(|e| format!("send: {e}"))?;
+        stream.flush().map_err(|e| format!("send: {e}"))?;
+        let resp = http::read_response(&mut stream)?;
+        let text = String::from_utf8(resp.body).map_err(|_| "response body is not utf-8")?;
+        let json = if text.is_empty() {
+            Json::Null
+        } else {
+            Json::parse(&text).map_err(|e| format!("response body: {e} in {text:?}"))?
+        };
+        Ok((resp.status, json))
+    }
+
+    fn expect_200(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json, String> {
+        let (status, json) = self.call(method, path, body)?;
+        if status == 200 {
+            Ok(json)
+        } else {
+            let detail = ErrorBody::from_json(&json)
+                .map(|e| e.error)
+                .unwrap_or_else(|_| json.dump());
+            Err(format!("{status}: {detail}"))
+        }
+    }
+
+    /// Open a stream with the server's configured economics.
+    pub fn open(
+        &self,
+        token: &str,
+        n: u64,
+        k: u64,
+        family: &str,
+        economics: Option<Vec<PerDocCosts>>,
+    ) -> Result<OpenOutcome, String> {
+        let family = PlanFamily::parse(family).map_err(|e| e.to_string())?;
+        self.open_request(&OpenRequest {
+            token: token.to_string(),
+            n,
+            k,
+            family,
+            include_rent: true,
+            economics,
+        })
+    }
+
+    /// Open with full control over the request payload.
+    pub fn open_request(&self, req: &OpenRequest) -> Result<OpenOutcome, String> {
+        let (status, json) = self.call("POST", "/v1/streams", Some(&req.to_json()))?;
+        if status == 200 {
+            return Ok(OpenOutcome::Admitted(OpenResponse::from_json(&json)?));
+        }
+        let err = ErrorBody::from_json(&json)
+            .unwrap_or_else(|_| ErrorBody::message(json.dump()));
+        Ok(OpenOutcome::Rejected { status, reason: err.reason, error: err.error })
+    }
+
+    /// Observe a batch of scores.
+    pub fn observe(&self, stream: &str, scores: &[f64]) -> Result<ObserveResponse, String> {
+        let body = ObserveRequest { scores: scores.to_vec() }.to_json();
+        let json =
+            self.expect_200("POST", &format!("/v1/streams/{stream}/observe"), Some(&body))?;
+        ObserveResponse::from_json(&json)
+    }
+
+    /// Finish the stream: consumer-read the top-K, close, bill.
+    pub fn finish(&self, stream: &str) -> Result<FinishResponse, String> {
+        let json = self.expect_200("POST", &format!("/v1/streams/{stream}/finish"), None)?;
+        FinishResponse::from_json(&json)
+    }
+
+    pub fn invoice(&self, tenant: &str) -> Result<Invoice, String> {
+        let json = self.expect_200("GET", &format!("/v1/tenants/{tenant}/invoice"), None)?;
+        Invoice::from_json(&json)
+    }
+
+    pub fn status(&self) -> Result<Status, String> {
+        let json = self.expect_200("GET", "/v1/status", None)?;
+        Status::from_json(&json)
+    }
+
+    /// Ask the server to drain and shut down (`shptier serve` exits
+    /// after its next poll of the flag).
+    pub fn request_shutdown(&self) -> Result<(), String> {
+        self.expect_200("POST", "/v1/shutdown", None).map(|_| ())
+    }
+}

@@ -1,0 +1,263 @@
+//! Minimal HTTP/1.1 framing on plain `std::io` streams.
+//!
+//! Just enough of RFC 9112 for the placement API, with the hardening the
+//! issue demands and nothing else: requests are `METHOD PATH HTTP/1.1`
+//! with a `Content-Length` body (no chunked transfer, no keep-alive —
+//! every response carries `Connection: close`). Oversized bodies are cut
+//! off at `max_body` *before* being buffered ([`ReadError::TooLarge`] →
+//! 413), malformed framing is [`ReadError::BadRequest`] → 400, and a
+//! stalled peer surfaces as an io timeout the server maps to a dropped
+//! connection. The reader is generic over [`Read`] so every failure mode
+//! unit-tests against an in-memory cursor as well as a raw `TcpStream`.
+
+use std::io::{Read, Write};
+
+/// Upper bound on the request head (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Declared or actual body beyond `max_body` (HTTP 413).
+    TooLarge { limit: usize },
+    /// Malformed framing (HTTP 400).
+    BadRequest(String),
+    /// Transport error — includes read timeouts; no response is owed.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::TooLarge { limit } => write!(f, "body exceeds {limit} bytes"),
+            Self::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            Self::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+/// Read one request. `max_body` bounds the `Content-Length` a client may
+/// declare; the head is bounded by [`MAX_HEAD_BYTES`].
+pub fn read_request<R: Read>(r: &mut R, max_body: usize) -> Result<Request, ReadError> {
+    // Accumulate until the blank line ends the head. Anything read past
+    // it is the start of the body.
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(ReadError::BadRequest(format!(
+                "request head exceeds {MAX_HEAD_BYTES} bytes"
+            )));
+        }
+        let mut chunk = [0u8; 1024];
+        let n = r.read(&mut chunk).map_err(ReadError::Io)?;
+        if n == 0 {
+            if buf.is_empty() {
+                // Peer connected and said nothing; not worth a 400.
+                return Err(ReadError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed before request",
+                )));
+            }
+            return Err(ReadError::BadRequest("truncated request head".to_string()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| ReadError::BadRequest("request head is not utf-8".to_string()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && p.starts_with('/') => (m, p, v),
+        _ => {
+            return Err(ReadError::BadRequest(format!(
+                "malformed request line {request_line:?}"
+            )))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::BadRequest(format!("unsupported version {version:?}")));
+    }
+
+    let mut content_length: usize = 0;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ReadError::BadRequest(format!("malformed header line {line:?}")));
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| ReadError::BadRequest(format!("bad content-length {value:?}")))?;
+        }
+    }
+    if content_length > max_body {
+        return Err(ReadError::TooLarge { limit: max_body });
+    }
+
+    let mut body = buf[head_end + 4..].to_vec();
+    if body.len() > content_length {
+        return Err(ReadError::BadRequest(
+            "body longer than declared content-length".to_string(),
+        ));
+    }
+    while body.len() < content_length {
+        let mut chunk = vec![0u8; (content_length - body.len()).min(4096)];
+        let n = r.read(&mut chunk).map_err(ReadError::Io)?;
+        if n == 0 {
+            return Err(ReadError::BadRequest("truncated body".to_string()));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+
+    Ok(Request { method: method.to_string(), path: path.to_string(), body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete JSON response. Always closes the connection.
+pub fn write_response<W: Write>(w: &mut W, status: u16, body: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status,
+        reason(status),
+        body.len(),
+        body
+    )?;
+    w.flush()
+}
+
+/// A response as read back by the client: status code + body bytes.
+#[derive(Debug, Clone)]
+pub struct RawResponse {
+    pub status: u16,
+    pub body: Vec<u8>,
+}
+
+/// Read a full response (the server always closes, so read to EOF and
+/// split on the head terminator).
+pub fn read_response<R: Read>(r: &mut R) -> Result<RawResponse, String> {
+    let mut all = Vec::new();
+    r.read_to_end(&mut all).map_err(|e| format!("reading response: {e}"))?;
+    let head_end = find_head_end(&all).ok_or("response missing head terminator")?;
+    let head =
+        std::str::from_utf8(&all[..head_end]).map_err(|_| "response head is not utf-8")?;
+    let status_line = head.split("\r\n").next().unwrap_or("");
+    let status = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| format!("malformed status line {status_line:?}"))?;
+    Ok(RawResponse { status, body: all[head_end + 4..].to_vec() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(raw: &str) -> Result<Request, ReadError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), 1024)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = req("POST /v1/streams HTTP/1.1\r\nContent-Length: 4\r\n\r\n{\"\"}").unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/streams");
+        assert_eq!(r.body, b"{\"\"}");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let r = req("GET /v1/status HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn oversized_declared_body_is_too_large() {
+        let e = req("POST /x HTTP/1.1\r\nContent-Length: 9999\r\n\r\n").unwrap_err();
+        assert!(matches!(e, ReadError::TooLarge { limit: 1024 }));
+    }
+
+    #[test]
+    fn malformed_request_lines_are_bad_requests() {
+        for raw in [
+            "GARBAGE\r\n\r\n",
+            "GET\r\n\r\n",
+            "GET /x SPDY/3\r\n\r\n",
+            "GET nopath HTTP/1.1\r\n\r\n",
+            "POST /x HTTP/1.1\r\nContent-Length: notanumber\r\n\r\n",
+            "POST /x HTTP/1.1\r\nnocolonheader\r\n\r\n",
+        ] {
+            let e = req(raw).unwrap_err();
+            assert!(matches!(e, ReadError::BadRequest(_)), "{raw:?} gave {e:?}");
+        }
+    }
+
+    #[test]
+    fn unbounded_head_is_rejected() {
+        let raw = format!("GET /x HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES * 2));
+        let e = req(&raw).unwrap_err();
+        assert!(matches!(e, ReadError::BadRequest(_)));
+    }
+
+    #[test]
+    fn truncated_body_is_a_bad_request() {
+        let e = req("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").unwrap_err();
+        assert!(matches!(e, ReadError::BadRequest(_)));
+    }
+
+    #[test]
+    fn response_round_trips() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "{\"error\":\"quota\"}").unwrap();
+        let resp = read_response(&mut Cursor::new(out)).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.body, b"{\"error\":\"quota\"}");
+        let text = String::from_utf8(
+            {
+                let mut o = Vec::new();
+                write_response(&mut o, 404, "{}").unwrap();
+                o
+            },
+        )
+        .unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(text.contains("Connection: close"));
+    }
+}

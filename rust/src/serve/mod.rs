@@ -1,0 +1,254 @@
+//! `serve` — the multi-tenant placement server over the session engine
+//! (ADR-006).
+//!
+//! The paper's a-priori placement makes tier allocation cheap enough to
+//! decide per stream with no reactive monitoring loop, which makes it
+//! natural to offer as a shared service: many tenants, one
+//! capacity-limited [`crate::engine::TierTopology`], analytic arbitration
+//! instead of telemetry. This module is that service — transport and
+//! tenancy at the edge, policy kept pure in [`crate::engine`]:
+//!
+//! ```text
+//!   shptier serve --backend fs:<root> --config configs/serve.toml
+//!       │
+//!       ├─ http    minimal HTTP/1.1 on std::net (no dependencies),
+//!       │          fixed worker pool, serdes::json bodies
+//!       ├─ tenancy TenantBook: tokens → tenants, quota classes,
+//!       │          admission (reject 429 / degrade-to-cold)
+//!       ├─ billing per-tenant invoices from the per-stream ledger
+//!       │          attribution the backends already track
+//!       └─ lifecycle graceful drain + checkpoint on shutdown;
+//!                  kill-and-restart recovers via journal replay
+//! ```
+//!
+//! Protocol (all bodies JSON):
+//!
+//! - `POST /v1/streams` — open: tenant token, `n`, `k`, plan family,
+//!   optional per-tier economics → session token (or `429` with a
+//!   machine-readable reason, or a degraded-to-cold admission).
+//! - `POST /v1/streams/{token}/observe` — a batch of scores.
+//! - `POST /v1/streams/{token}/finish` — consumer-read the top-K, close,
+//!   and bill the stream.
+//! - `GET /v1/tenants/{name}/invoice` — the tenant's invoice.
+//! - `GET /v1/status` — arbitration report, per-tier occupancy,
+//!   admission verdicts, journal health.
+//!
+//! [`client`] is the blocking std-only client used by the tests and the
+//! `shptier serve-soak` harness; [`soak`] drives thousands of concurrent
+//! sessions across tenants and verifies ledger conservation and
+//! exactly-once invoicing across a kill-and-restart.
+
+pub mod client;
+pub mod http;
+pub mod server;
+pub mod soak;
+pub mod tenancy;
+pub mod wire;
+
+pub use client::{Client, OpenOutcome};
+pub use server::{open_serving_backend, RunningServer};
+pub use tenancy::{AdmissionVerdict, ExceedPolicy, QuotaClass, Tenant, TenantBook};
+
+use crate::cost::PerDocCosts;
+use crate::serdes::TomlValue;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Server configuration, parsed from `configs/serve.toml`.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address (`port 0` = ephemeral, printed at startup).
+    pub addr: String,
+    /// Fixed worker-thread pool size.
+    pub workers: usize,
+    /// Per-connection read timeout in milliseconds (stalled clients are
+    /// dropped so they cannot pin a worker).
+    pub read_timeout_ms: u64,
+    /// Maximum request body size in bytes (`413` beyond it).
+    pub max_body_bytes: usize,
+    /// Tier count (2–4, preset economics hot → cold).
+    pub tiers: usize,
+    /// Capacity of the hot tier (colder tiers are unbounded).
+    pub hot_capacity: u64,
+    /// Whether the backend charges rent.
+    pub charge_rent: bool,
+    /// Auto-checkpoint factor (`engine.checkpoint_factor`): checkpoint
+    /// when `journal_ops > factor × live docs`; 0 disables.
+    pub checkpoint_factor: u64,
+    /// The tenant book: tokens, quota classes, price books.
+    pub book: TenantBook,
+}
+
+impl ServeConfig {
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading serve config {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let t = TomlValue::parse(text).map_err(|e| anyhow!("serve config: {e}"))?;
+        let get_u64 = |path: &str, default: u64| -> Result<u64> {
+            match t.get_path(path) {
+                Some(v) => v
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("serve config: {path} must be a non-negative integer")),
+                None => Ok(default),
+            }
+        };
+        let addr = match t.get_path("serve.addr") {
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow!("serve config: serve.addr must be a string"))?
+                .to_string(),
+            None => "127.0.0.1:0".to_string(),
+        };
+        let workers = get_u64("serve.workers", 8)? as usize;
+        if workers == 0 {
+            bail!("serve config: serve.workers must be at least 1");
+        }
+        let read_timeout_ms = get_u64("serve.read_timeout_ms", 5_000)?;
+        if read_timeout_ms == 0 {
+            bail!("serve config: serve.read_timeout_ms must be positive");
+        }
+        let max_body_bytes = get_u64("serve.max_body_bytes", 256 * 1024)? as usize;
+        if max_body_bytes == 0 {
+            bail!("serve config: serve.max_body_bytes must be positive");
+        }
+        let tiers = get_u64("engine.tiers", 2)? as usize;
+        if !(2..=4).contains(&tiers) {
+            bail!("serve config: engine.tiers must be between 2 and 4");
+        }
+        let hot_capacity = get_u64("engine.hot_capacity", 256)?;
+        if hot_capacity == 0 {
+            bail!("serve config: engine.hot_capacity must be positive");
+        }
+        let charge_rent = match t.get_path("engine.charge_rent") {
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow!("serve config: engine.charge_rent must be a bool"))?,
+            None => true,
+        };
+        let checkpoint_factor = get_u64("engine.checkpoint_factor", 8)?;
+        let book = TenantBook::from_toml(&t)?;
+        Ok(Self {
+            addr,
+            workers,
+            read_timeout_ms,
+            max_body_bytes,
+            tiers,
+            hot_capacity,
+            charge_rent,
+            checkpoint_factor,
+            book,
+        })
+    }
+
+    /// Preset per-tier economics, hot → cold (same presets as the engine
+    /// demo config: write costs increase, read costs decrease).
+    pub fn tier_costs(&self) -> Vec<PerDocCosts> {
+        let presets = [
+            PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.2 },
+            PerDocCosts { write: 2.0, read: 1.9, rent_window: 0.1 },
+            PerDocCosts { write: 3.0, read: 0.2, rent_window: 0.02 },
+            PerDocCosts { write: 4.0, read: 0.05, rent_window: 0.005 },
+        ];
+        presets[..self.tiers].to_vec()
+    }
+
+    /// The serve topology: hot tier capacity-limited, the rest unbounded
+    /// with the sink coldest.
+    pub fn topology(&self) -> Result<crate::engine::TierTopology> {
+        use crate::storage::TierId;
+        Ok(crate::engine::TierTopology::from_costs(self.tier_costs())?
+            .with_capacity(TierId(0), Some(self.hot_capacity as usize)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[serve]
+addr = "127.0.0.1:0"
+workers = 4
+read_timeout_ms = 1000
+max_body_bytes = 4096
+
+[engine]
+tiers = 3
+hot_capacity = 32
+checkpoint_factor = 4
+
+[classes.standard]
+max_streams = 8
+max_hot_docs = 64
+on_exceed = "reject"
+
+[classes.bulk]
+max_streams = 4
+max_hot_docs = 2
+on_exceed = "degrade"
+
+[tenants.acme]
+token = "tok-acme"
+class = "standard"
+price_multiplier = 1.5
+
+[tenants.bity]
+token = "tok-bity"
+class = "bulk"
+"#;
+
+    #[test]
+    fn parses_sample_config() {
+        let c = ServeConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.tiers, 3);
+        assert_eq!(c.hot_capacity, 32);
+        assert_eq!(c.checkpoint_factor, 4);
+        assert_eq!(c.max_body_bytes, 4096);
+        assert_eq!(c.tier_costs().len(), 3);
+        assert_eq!(c.book.tenants().len(), 2);
+        let acme = c.book.authenticate("tok-acme").unwrap();
+        assert_eq!(c.book.tenant(acme).name, "acme");
+        assert!((c.book.tenant(acme).price_multiplier - 1.5).abs() < 1e-12);
+        assert_eq!(c.book.tenant(acme).class.max_streams, 8);
+        assert_eq!(c.book.tenant(acme).class.on_exceed, ExceedPolicy::Reject);
+        let bity = c.book.authenticate("tok-bity").unwrap();
+        assert_eq!(c.book.tenant(bity).class.on_exceed, ExceedPolicy::Degrade);
+        assert!(c.book.authenticate("nope").is_none());
+    }
+
+    #[test]
+    fn defaults_and_validation() {
+        let c = ServeConfig::from_toml("[tenants.t]\ntoken = \"x\"\n").unwrap();
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.tiers, 2);
+        assert_eq!(c.checkpoint_factor, 8);
+        assert_eq!(c.book.tenants().len(), 1);
+        assert!(ServeConfig::from_toml("[serve]\nworkers = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[engine]\ntiers = 9\n").is_err());
+        assert!(ServeConfig::from_toml("[engine]\nhot_capacity = 0\n").is_err());
+        // a tenant without a token is unusable
+        assert!(ServeConfig::from_toml("[tenants.t]\nclass = \"standard\"\n").is_err());
+        // an unknown class is a config error, not a runtime surprise
+        assert!(
+            ServeConfig::from_toml("[tenants.t]\ntoken = \"x\"\nclass = \"nope\"\n").is_err()
+        );
+        // duplicate tokens would make authentication ambiguous
+        assert!(ServeConfig::from_toml(
+            "[tenants.a]\ntoken = \"x\"\n[tenants.b]\ntoken = \"x\"\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn topology_matches_tier_count() {
+        let c = ServeConfig::from_toml(SAMPLE).unwrap();
+        let topo = c.topology().unwrap();
+        assert_eq!(topo.num_tiers(), 3);
+        assert_eq!(topo.tier(crate::storage::TierId(0)).capacity, Some(32));
+        assert_eq!(topo.tier(crate::storage::TierId(2)).capacity, None);
+    }
+}

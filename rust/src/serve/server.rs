@@ -1,0 +1,759 @@
+//! The placement server: routing, session registry, billing records,
+//! sidecar invoicing log, and lifecycle (graceful drain / crash
+//! recovery).
+//!
+//! Threading model: one acceptor thread feeds accepted connections into
+//! an `mpsc` channel drained by a fixed pool of worker threads (the
+//! classic shared-`Receiver` pool — no dependencies). Every response
+//! closes its connection, so a worker is held for exactly one request
+//! and a handful of workers serve thousands of concurrent *sessions*:
+//! session state lives in the registry, not on a thread.
+//!
+//! Durability: engine state (residency, ledgers) recovers through the
+//! backend journal. What the journal cannot know is *who opened what* —
+//! tenancy is a serve-layer concept — so the server keeps a sidecar log
+//! (`serve.log` beside the journal) of `open`/`fin` lines, appended and
+//! flushed before the corresponding HTTP response is sent. Replaying it
+//! after a kill rebuilds stream→tenant attribution and the
+//! completed-stream set, which is what makes "every completed session is
+//! invoiced exactly once" hold across a SIGKILL.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::{BackendSpec, Engine, SessionSpec, StreamSession};
+use crate::serve::http::{self, ReadError, Request};
+use crate::serve::tenancy::{AdmissionControl, AdmissionVerdict};
+use crate::serve::wire::{
+    self, ErrorBody, FinishResponse, Invoice, InvoiceLine, ObserveRequest, ObserveResponse,
+    OpenRequest, OpenResponse, Status, TenantStatus, TierStatus,
+};
+use crate::serve::ServeConfig;
+use crate::storage::{FsBackend, ObjectBackend, StorageBackend, StorageSim, TierId};
+use crate::util::SplitMix64;
+
+/// Open the storage backend for serving. Unlike the demo surfaces'
+/// `open_fresh` (which refuses roots with prior state, because demo ids
+/// restart at 0), serving *wants* prior state: durable roots are opened
+/// with journal replay, and the engine continues the stream-id sequence
+/// past whatever was recovered.
+pub fn open_serving_backend(
+    spec: &BackendSpec,
+    costs: Vec<crate::cost::PerDocCosts>,
+    charge_rent: bool,
+) -> Result<Box<dyn StorageBackend>> {
+    Ok(match spec {
+        BackendSpec::Sim => Box::new(StorageSim::with_tiers(costs, charge_rent)),
+        BackendSpec::Fs { root } => Box::new(FsBackend::open(root, costs, charge_rent)?),
+        BackendSpec::Obj { root } => Box::new(ObjectBackend::open(root, costs, charge_rent)?),
+    })
+}
+
+/// Where the sidecar invoicing log lives for a durable root (`None` for
+/// the in-memory simulator: its state dies with the process anyway).
+fn sidecar_path(spec: &BackendSpec) -> Option<PathBuf> {
+    match spec {
+        BackendSpec::Sim => None,
+        BackendSpec::Fs { root } | BackendSpec::Obj { root } => Some(root.join("serve.log")),
+    }
+}
+
+/// Billing record for one stream, live or historical.
+#[derive(Debug, Clone)]
+struct StreamRecord {
+    tenant: String,
+    degraded: bool,
+    reserved_hot: u64,
+    completed: bool,
+}
+
+/// Live session entry behind its session token.
+struct SessionEntry {
+    /// `None` once finished (finish consumes the engine handle).
+    session: Option<StreamSession>,
+    stream_id: u64,
+    tenant_id: usize,
+    n: u64,
+    observed: u64,
+    reserved_hot: u64,
+    degraded: bool,
+}
+
+/// Append-only sidecar log (see module docs). Lines:
+///
+/// ```text
+/// open <stream_id> <reserved_hot> <degraded 0|1> <tenant name…>
+/// fin <stream_id>
+/// ```
+///
+/// The tenant name ends the line so names may contain spaces.
+struct Sidecar {
+    file: Option<std::fs::File>,
+}
+
+impl Sidecar {
+    fn append(&mut self, line: &str) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            writeln!(f, "{line}").context("appending to serve.log")?;
+            // Flush to the OS: survives process death (SIGKILL). Matches
+            // the journal's own durability posture — no fsync by default.
+            f.flush().context("flushing serve.log")?;
+        }
+        Ok(())
+    }
+}
+
+fn load_sidecar(path: &std::path::Path) -> Result<BTreeMap<u64, StreamRecord>> {
+    let mut records = BTreeMap::new();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(records),
+        Err(e) => return Err(anyhow!("reading {}: {e}", path.display())),
+    };
+    for (lineno, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(2, ' ');
+        let verb = parts.next().unwrap_or("");
+        let rest = parts.next().unwrap_or("");
+        match verb {
+            "open" => {
+                let mut f = rest.splitn(4, ' ');
+                let parse = |s: Option<&str>, what: &str| -> Result<u64> {
+                    s.and_then(|v| v.parse::<u64>().ok()).ok_or_else(|| {
+                        anyhow!("serve.log line {}: bad {what}: {line:?}", lineno + 1)
+                    })
+                };
+                let id = parse(f.next(), "stream id")?;
+                let reserved_hot = parse(f.next(), "reservation")?;
+                let degraded = parse(f.next(), "degraded flag")? != 0;
+                let tenant = f
+                    .next()
+                    .ok_or_else(|| anyhow!("serve.log line {}: missing tenant", lineno + 1))?
+                    .to_string();
+                records.insert(id, StreamRecord { tenant, degraded, reserved_hot, completed: false });
+            }
+            "fin" => {
+                let id = rest.trim().parse::<u64>().map_err(|_| {
+                    anyhow!("serve.log line {}: bad stream id: {line:?}", lineno + 1)
+                })?;
+                if let Some(r) = records.get_mut(&id) {
+                    r.completed = true;
+                }
+            }
+            other => bail!("serve.log line {}: unknown verb {other:?}", lineno + 1),
+        }
+    }
+    Ok(records)
+}
+
+/// Everything the workers share.
+struct ServerState {
+    engine: Engine,
+    config: ServeConfig,
+    backend_label: String,
+    admission: Mutex<AdmissionControl>,
+    /// Session token → live entry. Lock order: this map before an entry.
+    sessions: Mutex<BTreeMap<String, Arc<Mutex<SessionEntry>>>>,
+    /// Stream id → billing record (live and historical).
+    records: Mutex<BTreeMap<u64, StreamRecord>>,
+    sidecar: Mutex<Sidecar>,
+    nonce: Mutex<SplitMix64>,
+    /// Set by `POST /v1/shutdown`; `RunningServer::wait` watches it.
+    shutdown_requested: AtomicBool,
+    /// Tells the acceptor to stop accepting.
+    stop_accepting: AtomicBool,
+}
+
+/// A started server: address, threads, shared state.
+pub struct RunningServer {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl RunningServer {
+    /// Bind, recover, and start serving.
+    pub fn start(config: ServeConfig, backend: BackendSpec) -> Result<Self> {
+        let costs = config.tier_costs();
+        let storage = open_serving_backend(&backend, costs, config.charge_rent)?;
+        let engine = Engine::builder()
+            .topology(config.topology()?)
+            .backend(storage)
+            .charge_rent(config.charge_rent)
+            .checkpoint_factor(config.checkpoint_factor)
+            .build()?;
+
+        let mut admission = AdmissionControl::new(&config.book);
+        let mut records = BTreeMap::new();
+        let side_path = sidecar_path(&backend);
+        if let Some(path) = &side_path {
+            records = load_sidecar(path)?;
+            for r in records.values() {
+                if !r.completed {
+                    // The stream's documents were replayed into residency
+                    // but its session died with the old process: keep its
+                    // hot reservation counted against the tenant.
+                    if let Some(t) = config.book.by_name(&r.tenant) {
+                        admission.restore(t, r.reserved_hot);
+                    }
+                }
+            }
+        }
+        let sidecar = Sidecar {
+            file: match &side_path {
+                Some(path) => Some(
+                    std::fs::OpenOptions::new()
+                        .create(true)
+                        .append(true)
+                        .open(path)
+                        .with_context(|| format!("opening {}", path.display()))?,
+                ),
+                None => None,
+            },
+        };
+
+        let listener = TcpListener::bind(&config.addr)
+            .with_context(|| format!("binding {}", config.addr))?;
+        let addr = listener.local_addr()?;
+
+        let nonce_seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+            ^ u64::from(addr.port());
+        let state = Arc::new(ServerState {
+            engine,
+            backend_label: backend.label(),
+            config,
+            admission: Mutex::new(admission),
+            sessions: Mutex::new(BTreeMap::new()),
+            records: Mutex::new(records),
+            sidecar: Mutex::new(sidecar),
+            nonce: Mutex::new(SplitMix64::new(nonce_seed)),
+            shutdown_requested: AtomicBool::new(false),
+            stop_accepting: AtomicBool::new(false),
+        });
+
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::new();
+        for _ in 0..state.config.workers {
+            let rx = Arc::clone(&rx);
+            let state = Arc::clone(&state);
+            workers.push(std::thread::spawn(move || loop {
+                let conn = rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
+                match conn {
+                    Ok(stream) => handle_connection(&state, stream),
+                    Err(_) => break, // acceptor gone, queue drained
+                }
+            }));
+        }
+        let acceptor = {
+            let state = Arc::clone(&state);
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if state.stop_accepting.load(Ordering::SeqCst) {
+                        break; // tx drops here; workers drain and exit
+                    }
+                    if let Ok(stream) = conn {
+                        if tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                }
+            })
+        };
+
+        Ok(Self { addr, state, acceptor: Some(acceptor), workers })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until a client posts `/v1/shutdown`, then shut down
+    /// gracefully. This is what `shptier serve` runs.
+    pub fn wait(self) -> Result<()> {
+        while !self.state.shutdown_requested.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        self.shutdown()
+    }
+
+    /// Graceful shutdown: stop accepting, drain in-flight requests, then
+    /// checkpoint the backend so a later reopen replays a compact
+    /// journal. (A free no-op on the simulator.)
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop_threads();
+        self.state.engine.checkpoint()?;
+        Ok(())
+    }
+
+    /// Ungraceful stop for crash-recovery tests: threads are torn down
+    /// but *no* checkpoint is taken, leaving the journal exactly as a
+    /// killed process would — recovery must come from replay alone.
+    pub fn abort(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        self.state.stop_accepting.store(true, Ordering::SeqCst);
+        // Wake the acceptor out of its blocking accept.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request handling
+
+fn handle_connection(state: &ServerState, mut stream: TcpStream) {
+    let _ = stream
+        .set_read_timeout(Some(Duration::from_millis(state.config.read_timeout_ms)));
+    match http::read_request(&mut stream, state.config.max_body_bytes) {
+        Ok(req) => {
+            let (status, body) = route(state, &req);
+            let _ = http::write_response(&mut stream, status, &body.dump());
+        }
+        Err(ReadError::TooLarge { limit }) => {
+            let body = ErrorBody::with_reason(
+                format!("request body exceeds the {limit}-byte limit"),
+                "body-too-large",
+            );
+            let _ = http::write_response(&mut stream, 413, &body.to_json().dump());
+        }
+        Err(ReadError::BadRequest(msg)) => {
+            let body = ErrorBody::message(format!("bad request: {msg}"));
+            let _ = http::write_response(&mut stream, 400, &body.to_json().dump());
+        }
+        // Timeout or disconnect: the peer is gone or stalled; owing it a
+        // response would hold the worker. Drop the connection.
+        Err(ReadError::Io(_)) => {}
+    }
+}
+
+fn error(status: u16, body: ErrorBody) -> (u16, crate::serdes::Json) {
+    (status, body.to_json())
+}
+
+fn route(state: &ServerState, req: &Request) -> (u16, crate::serdes::Json) {
+    let path = req.path.split('?').next().unwrap_or("");
+    let segs: Vec<&str> = path.trim_matches('/').split('/').collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v1", "streams"]) => handle_open(state, &req.body),
+        ("POST", ["v1", "streams", token, "observe"]) => handle_observe(state, token, &req.body),
+        ("POST", ["v1", "streams", token, "finish"]) => handle_finish(state, token),
+        ("GET", ["v1", "tenants", name, "invoice"]) => handle_invoice(state, name),
+        ("GET", ["v1", "status"]) => handle_status(state),
+        ("POST", ["v1", "shutdown"]) => {
+            state.shutdown_requested.store(true, Ordering::SeqCst);
+            (200, wire::json_obj(vec![("draining", crate::serdes::Json::Bool(true))]))
+        }
+        // known path, wrong verb
+        (_, ["v1", "streams"]) | (_, ["v1", "status"]) | (_, ["v1", "shutdown"]) => {
+            error(405, ErrorBody::message(format!("{} not allowed here", req.method)))
+        }
+        _ => error(
+            404,
+            ErrorBody::with_reason(format!("no such route {}", req.path), "unknown-route"),
+        ),
+    }
+}
+
+fn handle_open(state: &ServerState, body: &[u8]) -> (u16, crate::serdes::Json) {
+    let json = match wire::parse_body(body) {
+        Ok(j) => j,
+        Err(e) => return error(400, e),
+    };
+    let open = match OpenRequest::from_json(&json) {
+        Ok(o) => o,
+        Err(msg) => return error(400, ErrorBody::message(msg)),
+    };
+    let Some(tenant_id) = state.config.book.authenticate(&open.token) else {
+        return error(401, ErrorBody::with_reason("unknown tenant token", "bad-token"));
+    };
+    let tenant_name = state.config.book.tenant(tenant_id).name.clone();
+
+    let costs = match &open.economics {
+        Some(custom) => {
+            if custom.len() != state.config.tiers {
+                return error(
+                    400,
+                    ErrorBody::message(format!(
+                        "economics has {} tiers but the server topology has {}",
+                        custom.len(),
+                        state.config.tiers
+                    )),
+                );
+            }
+            custom.clone()
+        }
+        None => state.config.tier_costs(),
+    };
+    if open.n == 0 || open.k == 0 || open.k > open.n {
+        return error(
+            400,
+            ErrorBody::message(format!("need 0 < k <= n, got n={} k={}", open.n, open.k)),
+        );
+    }
+
+    let demand = crate::serve::tenancy::analytic_hot_demand(
+        &costs,
+        open.n,
+        open.k,
+        open.include_rent,
+        open.family,
+    );
+    let verdict = {
+        let mut adm = state.admission.lock().unwrap_or_else(|e| e.into_inner());
+        adm.admit(&state.config.book, tenant_id, demand)
+    };
+    let (degraded, reserved_hot) = match verdict {
+        AdmissionVerdict::Rejected { reason } => {
+            return error(
+                429,
+                ErrorBody::with_reason(
+                    format!("tenant {tenant_name} exceeded its {reason}"),
+                    reason,
+                ),
+            );
+        }
+        AdmissionVerdict::Admitted { degraded, reserved_hot } => (degraded, reserved_hot),
+    };
+
+    let mut spec = SessionSpec::new(open.n, open.k)
+        .with_family(open.family)
+        .with_rent(open.include_rent)
+        .with_pinned_cold(degraded);
+    if open.economics.is_some() {
+        spec = spec.with_costs(costs);
+    }
+    let session = match state.engine.open_stream(spec) {
+        Ok(s) => s,
+        Err(e) => {
+            let mut adm = state.admission.lock().unwrap_or_else(|e| e.into_inner());
+            adm.release(tenant_id, reserved_hot);
+            return error(400, ErrorBody::message(format!("open failed: {e}")));
+        }
+    };
+    let stream_id = session.id();
+
+    // Record and journal the attribution *before* answering: once the
+    // client sees the token, a kill-and-restart must still know whose
+    // stream this was.
+    state
+        .records
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .insert(
+            stream_id,
+            StreamRecord {
+                tenant: tenant_name,
+                degraded,
+                reserved_hot,
+                completed: false,
+            },
+        );
+    {
+        let mut side = state.sidecar.lock().unwrap_or_else(|e| e.into_inner());
+        let tenant = &state.config.book.tenant(tenant_id).name;
+        if let Err(e) = side.append(&format!(
+            "open {stream_id} {reserved_hot} {} {tenant}",
+            u8::from(degraded)
+        )) {
+            return error(500, ErrorBody::message(format!("sidecar log: {e}")));
+        }
+    }
+
+    let token = {
+        let mut nonce = state.nonce.lock().unwrap_or_else(|e| e.into_inner());
+        format!("s-{stream_id}-{:016x}", nonce.next_u64())
+    };
+    let entry = SessionEntry {
+        session: Some(session),
+        stream_id,
+        tenant_id,
+        n: open.n,
+        observed: 0,
+        reserved_hot,
+        degraded,
+    };
+    state
+        .sessions
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .insert(token.clone(), Arc::new(Mutex::new(entry)));
+
+    (
+        200,
+        OpenResponse { stream: token, id: stream_id, degraded, reserved_hot }.to_json(),
+    )
+}
+
+fn lookup_session(
+    state: &ServerState,
+    token: &str,
+) -> Option<Arc<Mutex<SessionEntry>>> {
+    state
+        .sessions
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(token)
+        .cloned()
+}
+
+fn handle_observe(state: &ServerState, token: &str, body: &[u8]) -> (u16, crate::serdes::Json) {
+    let json = match wire::parse_body(body) {
+        Ok(j) => j,
+        Err(e) => return error(400, e),
+    };
+    let req = match ObserveRequest::from_json(&json) {
+        Ok(r) => r,
+        Err(msg) => return error(400, ErrorBody::message(msg)),
+    };
+    let Some(entry) = lookup_session(state, token) else {
+        return error(404, ErrorBody::with_reason("no such stream", "unknown-stream"));
+    };
+    let mut e = entry.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(session) = e.session.as_mut() else {
+        return error(400, ErrorBody::with_reason("stream already finished", "stream-finished"));
+    };
+    for (i, score) in req.scores.iter().enumerate() {
+        if !score.is_finite() {
+            return error(400, ErrorBody::message(format!("scores[{i}] is not finite")));
+        }
+        if let Err(err) = session.observe(*score) {
+            return error(400, ErrorBody::message(format!("observe failed: {err}")));
+        }
+        e.observed += 1;
+    }
+    let resp = ObserveResponse { observed: e.observed, done: e.observed >= e.n };
+    (200, resp.to_json())
+}
+
+fn handle_finish(state: &ServerState, token: &str) -> (u16, crate::serdes::Json) {
+    let Some(entry) = lookup_session(state, token) else {
+        return error(404, ErrorBody::with_reason("no such stream", "unknown-stream"));
+    };
+    let mut e = entry.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(session) = e.session.take() else {
+        return error(400, ErrorBody::with_reason("stream already finished", "stream-finished"));
+    };
+    let outcome = match session.finish() {
+        Ok(o) => o,
+        Err(err) => {
+            // The handle is consumed either way; the stream is done for.
+            return error(500, ErrorBody::message(format!("finish failed: {err}")));
+        }
+    };
+    let cost = state.engine.stream_ledger(e.stream_id).total();
+
+    // Journal completion before answering: a client that saw this
+    // response must find the stream invoiced as completed after a crash.
+    {
+        let mut side = state.sidecar.lock().unwrap_or_else(|e| e.into_inner());
+        if let Err(err) = side.append(&format!("fin {}", e.stream_id)) {
+            return error(500, ErrorBody::message(format!("sidecar log: {err}")));
+        }
+    }
+    if let Some(r) = state
+        .records
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get_mut(&e.stream_id)
+    {
+        r.completed = true;
+    }
+    {
+        let mut adm = state.admission.lock().unwrap_or_else(|e| e.into_inner());
+        adm.release(e.tenant_id, e.reserved_hot);
+    }
+    state
+        .sessions
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .remove(token);
+
+    let resp = FinishResponse {
+        retained: outcome.retained.len() as u64,
+        hot_reads: outcome.hot_reads(),
+        cold_reads: outcome.cold_reads(),
+        cost,
+    };
+    (200, resp.to_json())
+}
+
+fn handle_invoice(state: &ServerState, name: &str) -> (u16, crate::serdes::Json) {
+    let Some(tenant_id) = state.config.book.by_name(name) else {
+        return error(404, ErrorBody::with_reason("no such tenant", "unknown-tenant"));
+    };
+    let tenant = state.config.book.tenant(tenant_id);
+    let records = state.records.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let mut streams = Vec::new();
+    let mut cost_total = 0.0;
+    let mut billed_total = 0.0;
+    for (id, r) in records.iter().filter(|(_, r)| r.tenant == tenant.name) {
+        let cost = state.engine.stream_ledger(*id).total();
+        let billed = cost * tenant.price_multiplier;
+        cost_total += cost;
+        billed_total += billed;
+        streams.push(InvoiceLine {
+            stream_id: *id,
+            completed: r.completed,
+            degraded: r.degraded,
+            cost,
+            billed,
+        });
+    }
+    let inv = Invoice {
+        tenant: tenant.name.clone(),
+        price_multiplier: tenant.price_multiplier,
+        streams,
+        cost_total,
+        billed_total,
+    };
+    (200, inv.to_json())
+}
+
+fn handle_status(state: &ServerState) -> (u16, crate::serdes::Json) {
+    let tiers: Vec<TierStatus> = (0..state.config.tiers)
+        .map(|i| TierStatus {
+            occupancy: state.engine.resident_len(TierId(i)) as u64,
+            capacity: if i == 0 { Some(state.config.hot_capacity) } else { None },
+            peak: state.engine.peak_occupancy(TierId(i)) as u64,
+        })
+        .collect();
+    let tenants: Vec<TenantStatus> = {
+        let adm = state.admission.lock().unwrap_or_else(|e| e.into_inner());
+        state
+            .config
+            .book
+            .tenants()
+            .iter()
+            .zip(adm.usage())
+            .map(|(t, u)| TenantStatus {
+                tenant: t.name.clone(),
+                live_streams: u.live_streams,
+                reserved_hot: u.reserved_hot,
+                admitted: u.admitted,
+                degraded: u.degraded,
+                rejected: u.rejected,
+                last_rejection: u.last_rejection.map(str::to_string),
+            })
+            .collect()
+    };
+    let status = Status {
+        backend: state.backend_label.clone(),
+        arbiter: state.engine.arbiter_name(),
+        live_sessions: state.engine.live_sessions() as u64,
+        rearbitrations: state.engine.rearbitrations(),
+        overcommitted_tiers: state.engine.overcommits().len() as u64,
+        journal_ops: state.engine.journal_ops(),
+        auto_checkpoints: state.engine.auto_checkpoints(),
+        ledger_total: state.engine.ledger().total(),
+        tiers,
+        tenants,
+    };
+    (200, status.to_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::client::{Client, OpenOutcome};
+
+    fn test_config(extra: &str) -> ServeConfig {
+        ServeConfig::from_toml(&format!(
+            "[serve]\nworkers = 4\nread_timeout_ms = 2000\n\
+             [engine]\ntiers = 2\nhot_capacity = 64\n{extra}\
+             [tenants.alpha]\ntoken = \"tok-alpha\"\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn open_observe_finish_invoice_round_trip() {
+        let server = RunningServer::start(test_config(""), BackendSpec::Sim).unwrap();
+        let client = Client::new(server.local_addr());
+
+        let opened = client.open("tok-alpha", 20, 4, "keep", None).unwrap();
+        let OpenOutcome::Admitted(open) = opened else {
+            panic!("expected admission, got {opened:?}");
+        };
+        assert!(!open.degraded);
+
+        let scores: Vec<f64> = (0..20).map(|i| (i as f64) / 20.0).collect();
+        let obs = client.observe(&open.stream, &scores).unwrap();
+        assert_eq!(obs.observed, 20);
+        assert!(obs.done);
+
+        let fin = client.finish(&open.stream).unwrap();
+        assert_eq!(fin.retained, 4);
+        assert!(fin.cost > 0.0);
+
+        let inv = client.invoice("alpha").unwrap();
+        assert_eq!(inv.streams.len(), 1);
+        assert!(inv.streams[0].completed);
+        assert!((inv.cost_total - fin.cost).abs() < 1e-9);
+
+        let status = client.status().unwrap();
+        assert_eq!(status.live_sessions, 0);
+        assert_eq!(status.tenants.len(), 1);
+        assert_eq!(status.tenants[0].admitted, 1);
+        assert!((status.ledger_total - inv.cost_total).abs() < 1e-9 * inv.cost_total.abs().max(1.0));
+
+        client.request_shutdown().unwrap();
+        server.wait().unwrap();
+    }
+
+    #[test]
+    fn bad_tokens_and_routes_get_clean_errors() {
+        let server = RunningServer::start(test_config(""), BackendSpec::Sim).unwrap();
+        let client = Client::new(server.local_addr());
+
+        let opened = client.open("wrong-token", 10, 2, "keep", None).unwrap();
+        assert!(
+            matches!(&opened, OpenOutcome::Rejected { status: 401, reason, .. }
+                if reason.as_deref() == Some("bad-token")),
+            "got {opened:?}"
+        );
+        let err = client.observe("s-99-beef", &[0.5]).unwrap_err();
+        assert!(err.contains("404"), "got {err}");
+        let err = client.invoice("nobody").unwrap_err();
+        assert!(err.contains("404"), "got {err}");
+
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn double_finish_is_rejected_not_wedged() {
+        let server = RunningServer::start(test_config(""), BackendSpec::Sim).unwrap();
+        let client = Client::new(server.local_addr());
+        let OpenOutcome::Admitted(open) = client.open("tok-alpha", 5, 1, "keep", None).unwrap()
+        else {
+            panic!()
+        };
+        client.observe(&open.stream, &[0.1, 0.9, 0.2, 0.3, 0.4]).unwrap();
+        client.finish(&open.stream).unwrap();
+        let err = client.finish(&open.stream).unwrap_err();
+        assert!(err.contains("404"), "finished stream should be gone, got {err}");
+        server.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,381 @@
+//! Tenancy: tenant book, quota classes, and admission control.
+//!
+//! The tenant book is static configuration (`configs/serve.toml`): who may
+//! call the server (bearer tokens), what quota class each tenant belongs
+//! to, and each tenant's price multiplier (the per-tenant "price book" —
+//! raw ledger cost × multiplier = billed amount on the invoice).
+//!
+//! Admission is decided *before* the engine sees the stream, from the
+//! plan's analytic hot-tier demand ([`PlacementPlan::demand`]): the server
+//! reserves that many hot slots for the stream's lifetime. A stream that
+//! would push its tenant past `max_hot_docs` is either rejected (HTTP 429,
+//! machine-readable reason) or — under the `degrade` policy — admitted
+//! with every placement pinned to the sink tier
+//! (`SessionSpec::with_pinned_cold`), so it consumes no hot capacity at
+//! all. Exceeding `max_streams` always rejects: a degraded stream is
+//! still a live stream, so degrading could not relieve that quota.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cost::PerDocCosts;
+use crate::policy::{PlacementPlan, PlanFamily};
+use crate::serdes::TomlValue;
+use crate::storage::TierId;
+
+/// What to do when a stream would exceed its tenant's `max_hot_docs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExceedPolicy {
+    /// Refuse admission (HTTP 429, reason `hot-quota`).
+    Reject,
+    /// Admit, but pin every placement to the sink tier.
+    Degrade,
+}
+
+impl ExceedPolicy {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "reject" => Ok(Self::Reject),
+            "degrade" => Ok(Self::Degrade),
+            other => bail!("serve config: on_exceed must be \"reject\" or \"degrade\", got {other:?}"),
+        }
+    }
+}
+
+/// A quota class shared by any number of tenants.
+#[derive(Debug, Clone)]
+pub struct QuotaClass {
+    pub name: String,
+    /// Maximum concurrently-live streams per tenant.
+    pub max_streams: u64,
+    /// Maximum summed hot-tier demand across a tenant's live streams.
+    pub max_hot_docs: u64,
+    pub on_exceed: ExceedPolicy,
+}
+
+impl QuotaClass {
+    fn unlimited() -> Self {
+        Self {
+            name: "default".to_string(),
+            max_streams: u64::MAX,
+            max_hot_docs: u64::MAX,
+            on_exceed: ExceedPolicy::Reject,
+        }
+    }
+}
+
+/// One configured tenant.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub name: String,
+    /// Bearer token presented in the open request.
+    pub token: String,
+    pub class: QuotaClass,
+    /// Invoice multiplier: `billed = cost × price_multiplier`.
+    pub price_multiplier: f64,
+}
+
+/// The static tenant roster. Tenant ids are indices into [`tenants`]
+/// (sorted by name — `BTreeMap` iteration order of the config table).
+///
+/// [`tenants`]: TenantBook::tenants
+#[derive(Debug, Clone)]
+pub struct TenantBook {
+    tenants: Vec<Tenant>,
+}
+
+impl TenantBook {
+    pub fn from_toml(t: &TomlValue) -> Result<Self> {
+        let mut classes: BTreeMap<String, QuotaClass> = BTreeMap::new();
+        if let Some(v) = t.get("classes") {
+            let table = v
+                .as_table()
+                .ok_or_else(|| anyhow!("serve config: [classes] must be a table"))?;
+            for (name, body) in table {
+                let body = body
+                    .as_table()
+                    .ok_or_else(|| anyhow!("serve config: [classes.{name}] must be a table"))?;
+                let field_u64 = |key: &str| -> Result<u64> {
+                    match body.get(key) {
+                        Some(v) => v.as_u64().ok_or_else(|| {
+                            anyhow!("serve config: classes.{name}.{key} must be a non-negative integer")
+                        }),
+                        None => Ok(u64::MAX),
+                    }
+                };
+                let on_exceed = match body.get("on_exceed") {
+                    Some(v) => ExceedPolicy::parse(v.as_str().ok_or_else(|| {
+                        anyhow!("serve config: classes.{name}.on_exceed must be a string")
+                    })?)?,
+                    None => ExceedPolicy::Reject,
+                };
+                classes.insert(
+                    name.clone(),
+                    QuotaClass {
+                        name: name.clone(),
+                        max_streams: field_u64("max_streams")?,
+                        max_hot_docs: field_u64("max_hot_docs")?,
+                        on_exceed,
+                    },
+                );
+            }
+        }
+        let mut tenants = Vec::new();
+        if let Some(v) = t.get("tenants") {
+            let table = v
+                .as_table()
+                .ok_or_else(|| anyhow!("serve config: [tenants] must be a table"))?;
+            for (name, body) in table {
+                let body = body
+                    .as_table()
+                    .ok_or_else(|| anyhow!("serve config: [tenants.{name}] must be a table"))?;
+                let token = body
+                    .get("token")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("serve config: tenants.{name}.token (string) is required"))?
+                    .to_string();
+                if token.is_empty() {
+                    bail!("serve config: tenants.{name}.token must be non-empty");
+                }
+                let class = match body.get("class") {
+                    Some(v) => {
+                        let cname = v.as_str().ok_or_else(|| {
+                            anyhow!("serve config: tenants.{name}.class must be a string")
+                        })?;
+                        classes
+                            .get(cname)
+                            .cloned()
+                            .ok_or_else(|| {
+                                anyhow!("serve config: tenants.{name}.class references unknown class {cname:?}")
+                            })?
+                    }
+                    None => QuotaClass::unlimited(),
+                };
+                let price_multiplier = match body.get("price_multiplier") {
+                    Some(v) => {
+                        let m = v.as_f64().ok_or_else(|| {
+                            anyhow!("serve config: tenants.{name}.price_multiplier must be a number")
+                        })?;
+                        if !(m.is_finite() && m >= 0.0) {
+                            bail!("serve config: tenants.{name}.price_multiplier must be finite and non-negative");
+                        }
+                        m
+                    }
+                    None => 1.0,
+                };
+                tenants.push(Tenant { name: name.clone(), token, class, price_multiplier });
+            }
+        }
+        for i in 0..tenants.len() {
+            for j in (i + 1)..tenants.len() {
+                if tenants[i].token == tenants[j].token {
+                    bail!(
+                        "serve config: tenants {} and {} share a token",
+                        tenants[i].name,
+                        tenants[j].name
+                    );
+                }
+            }
+        }
+        Ok(Self { tenants })
+    }
+
+    pub fn tenants(&self) -> &[Tenant] {
+        &self.tenants
+    }
+
+    /// Token → tenant id.
+    pub fn authenticate(&self, token: &str) -> Option<usize> {
+        self.tenants.iter().position(|t| t.token == token)
+    }
+
+    /// Name → tenant id (invoice/status routes address tenants by name).
+    pub fn by_name(&self, name: &str) -> Option<usize> {
+        self.tenants.iter().position(|t| t.name == name)
+    }
+
+    pub fn tenant(&self, id: usize) -> &Tenant {
+        &self.tenants[id]
+    }
+}
+
+/// Outcome of an admission decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionVerdict {
+    /// Admitted; `reserved_hot` hot slots are now held until release.
+    Admitted { degraded: bool, reserved_hot: u64 },
+    /// Rejected with a machine-readable reason (`stream-quota` or
+    /// `hot-quota`).
+    Rejected { reason: &'static str },
+}
+
+/// Live per-tenant usage and verdict counters (surfaced in `/v1/status`).
+#[derive(Debug, Clone, Default)]
+pub struct TenantUsage {
+    pub live_streams: u64,
+    pub reserved_hot: u64,
+    pub admitted: u64,
+    pub degraded: u64,
+    pub rejected: u64,
+    pub last_rejection: Option<&'static str>,
+}
+
+/// Runtime admission state over a [`TenantBook`].
+#[derive(Debug)]
+pub struct AdmissionControl {
+    usage: Vec<TenantUsage>,
+}
+
+impl AdmissionControl {
+    pub fn new(book: &TenantBook) -> Self {
+        Self { usage: vec![TenantUsage::default(); book.tenants().len()] }
+    }
+
+    /// Decide admission for a stream with the given analytic hot demand.
+    /// On admission the reservation is taken immediately; the caller must
+    /// [`release`](Self::release) it when the stream finishes.
+    pub fn admit(&mut self, book: &TenantBook, tenant: usize, hot_demand: u64) -> AdmissionVerdict {
+        let class = &book.tenant(tenant).class;
+        let u = &mut self.usage[tenant];
+        if u.live_streams >= class.max_streams {
+            u.rejected += 1;
+            u.last_rejection = Some("stream-quota");
+            return AdmissionVerdict::Rejected { reason: "stream-quota" };
+        }
+        if u.reserved_hot.saturating_add(hot_demand) > class.max_hot_docs {
+            match class.on_exceed {
+                ExceedPolicy::Reject => {
+                    u.rejected += 1;
+                    u.last_rejection = Some("hot-quota");
+                    return AdmissionVerdict::Rejected { reason: "hot-quota" };
+                }
+                ExceedPolicy::Degrade => {
+                    // Pinned-cold streams place nothing hot, so they
+                    // reserve nothing.
+                    u.live_streams += 1;
+                    u.degraded += 1;
+                    return AdmissionVerdict::Admitted { degraded: true, reserved_hot: 0 };
+                }
+            }
+        }
+        u.live_streams += 1;
+        u.reserved_hot += hot_demand;
+        u.admitted += 1;
+        AdmissionVerdict::Admitted { degraded: false, reserved_hot: hot_demand }
+    }
+
+    /// Re-assert the hot reservation of an unfinished stream recovered
+    /// from the sidecar log after a restart. Journal replay rebuilds the
+    /// stream's residency but not its in-memory session, so the stream
+    /// can never finish: its documents keep holding hot capacity, and
+    /// this keeps the tenant's hot quota honest about that. The stream
+    /// quota is *not* restored — a dead session cannot be drained, and
+    /// counting it would wedge `max_streams` permanently. No verdict
+    /// counters are bumped.
+    pub fn restore(&mut self, tenant: usize, reserved_hot: u64) {
+        self.usage[tenant].reserved_hot += reserved_hot;
+    }
+
+    /// Return a finished stream's reservation to the pool.
+    pub fn release(&mut self, tenant: usize, reserved_hot: u64) {
+        let u = &mut self.usage[tenant];
+        u.live_streams = u.live_streams.saturating_sub(1);
+        u.reserved_hot = u.reserved_hot.saturating_sub(reserved_hot);
+    }
+
+    pub fn usage(&self) -> &[TenantUsage] {
+        &self.usage
+    }
+}
+
+/// Analytic hot-tier demand of the plan the engine will run for these
+/// parameters — the quantity admission reserves against `max_hot_docs`.
+pub fn analytic_hot_demand(
+    tier_costs: &[PerDocCosts],
+    n: u64,
+    k: u64,
+    include_rent: bool,
+    family: PlanFamily,
+) -> u64 {
+    PlacementPlan::optimal_family(tier_costs, n, k, include_rent, family).demand(TierId(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn book(max_streams: u64, max_hot: u64, policy: &str) -> TenantBook {
+        let toml = format!(
+            "[classes.c]\nmax_streams = {max_streams}\nmax_hot_docs = {max_hot}\non_exceed = \"{policy}\"\n\
+             [tenants.t]\ntoken = \"tok\"\nclass = \"c\"\n"
+        );
+        TenantBook::from_toml(&TomlValue::parse(&toml).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn stream_quota_rejects_even_under_degrade_policy() {
+        let b = book(2, 1_000, "degrade");
+        let mut ac = AdmissionControl::new(&b);
+        assert_eq!(
+            ac.admit(&b, 0, 10),
+            AdmissionVerdict::Admitted { degraded: false, reserved_hot: 10 }
+        );
+        assert_eq!(
+            ac.admit(&b, 0, 10),
+            AdmissionVerdict::Admitted { degraded: false, reserved_hot: 10 }
+        );
+        // a degraded stream is still a live stream: stream-quota binds
+        assert_eq!(
+            ac.admit(&b, 0, 10),
+            AdmissionVerdict::Rejected { reason: "stream-quota" }
+        );
+        assert_eq!(ac.usage()[0].rejected, 1);
+        assert_eq!(ac.usage()[0].last_rejection, Some("stream-quota"));
+        ac.release(0, 10);
+        assert_eq!(
+            ac.admit(&b, 0, 10),
+            AdmissionVerdict::Admitted { degraded: false, reserved_hot: 10 }
+        );
+    }
+
+    #[test]
+    fn hot_quota_rejects_or_degrades_by_policy() {
+        let b = book(100, 15, "reject");
+        let mut ac = AdmissionControl::new(&b);
+        assert!(matches!(ac.admit(&b, 0, 10), AdmissionVerdict::Admitted { degraded: false, .. }));
+        assert_eq!(ac.admit(&b, 0, 10), AdmissionVerdict::Rejected { reason: "hot-quota" });
+        assert_eq!(ac.usage()[0].last_rejection, Some("hot-quota"));
+
+        let b = book(100, 15, "degrade");
+        let mut ac = AdmissionControl::new(&b);
+        assert!(matches!(ac.admit(&b, 0, 10), AdmissionVerdict::Admitted { degraded: false, .. }));
+        let v = ac.admit(&b, 0, 10);
+        assert_eq!(v, AdmissionVerdict::Admitted { degraded: true, reserved_hot: 0 });
+        // the degraded stream reserved nothing, so a small stream still fits
+        assert!(matches!(ac.admit(&b, 0, 5), AdmissionVerdict::Admitted { degraded: false, .. }));
+        assert_eq!(ac.usage()[0].degraded, 1);
+        assert_eq!(ac.usage()[0].reserved_hot, 15);
+        assert_eq!(ac.usage()[0].live_streams, 3);
+    }
+
+    #[test]
+    fn restore_rebuilds_hot_reservation_without_counting_verdicts() {
+        let b = book(100, 100, "reject");
+        let mut ac = AdmissionControl::new(&b);
+        ac.restore(0, 7);
+        assert_eq!(ac.usage()[0].live_streams, 0);
+        assert_eq!(ac.usage()[0].reserved_hot, 7);
+        assert_eq!(ac.usage()[0].admitted, 0);
+    }
+
+    #[test]
+    fn analytic_demand_is_positive_when_hot_is_cheap_to_read() {
+        let costs = vec![
+            PerDocCosts { write: 1.0, read: 0.1, rent_window: 0.0 },
+            PerDocCosts { write: 1.0, read: 10.0, rent_window: 0.0 },
+        ];
+        let d = analytic_hot_demand(&costs, 100, 10, false, PlanFamily::Keep);
+        assert!(d >= 10, "hot-favouring economics should demand at least K hot, got {d}");
+    }
+}

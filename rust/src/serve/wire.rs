@@ -1,0 +1,727 @@
+//! Wire payloads of the placement protocol: typed request/response
+//! structs with `to_json`/`from_json`, built on the hardened
+//! [`crate::serdes::json`] codec.
+//!
+//! Every payload satisfies `from_json(parse(dump(to_json(x)))) == x`
+//! exactly — `dump` emits the shortest round-tripping decimal for
+//! finite floats and the parser rejects non-finite numbers outright —
+//! and the property tests at the bottom of this file pin that down over
+//! randomized invoices, status reports, and error bodies.
+
+use std::collections::BTreeMap;
+
+use crate::cost::PerDocCosts;
+use crate::policy::PlanFamily;
+use crate::serdes::Json;
+
+// ---------------------------------------------------------------------------
+// Json construction/extraction helpers
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn unum(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing or non-string field {key:?}"))
+}
+
+fn u64_field(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| format!("missing or non-integer field {key:?}"))
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("missing or non-numeric field {key:?}"))
+}
+
+fn bool_field(j: &Json, key: &str) -> Result<bool, String> {
+    j.get(key)
+        .and_then(|v| v.as_bool())
+        .ok_or_else(|| format!("missing or non-bool field {key:?}"))
+}
+
+fn arr_field<'a>(j: &'a Json, key: &str) -> Result<&'a [Json], String> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| format!("missing or non-array field {key:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+
+/// `POST /v1/streams` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenRequest {
+    pub token: String,
+    pub n: u64,
+    pub k: u64,
+    pub family: PlanFamily,
+    pub include_rent: bool,
+    /// Optional per-tier economics override (hot → cold, arity must match
+    /// the server topology); `None` = the server's configured presets.
+    pub economics: Option<Vec<PerDocCosts>>,
+}
+
+impl OpenRequest {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("token", Json::Str(self.token.clone())),
+            ("n", unum(self.n)),
+            ("k", unum(self.k)),
+            ("family", Json::Str(self.family.label().to_string())),
+            ("include_rent", Json::Bool(self.include_rent)),
+        ];
+        if let Some(tiers) = &self.economics {
+            fields.push((
+                "economics",
+                Json::Arr(
+                    tiers
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("write", Json::Num(c.write)),
+                                ("read", Json::Num(c.read)),
+                                ("rent_window", Json::Num(c.rent_window)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let family = PlanFamily::parse(&str_field(j, "family")?).map_err(|e| e.to_string())?;
+        let economics = match j.get("economics") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let arr = v.as_arr().ok_or("field \"economics\" must be an array")?;
+                let mut tiers = Vec::with_capacity(arr.len());
+                for (i, t) in arr.iter().enumerate() {
+                    let costs = PerDocCosts {
+                        write: f64_field(t, "write")
+                            .map_err(|e| format!("economics[{i}]: {e}"))?,
+                        read: f64_field(t, "read").map_err(|e| format!("economics[{i}]: {e}"))?,
+                        rent_window: f64_field(t, "rent_window")
+                            .map_err(|e| format!("economics[{i}]: {e}"))?,
+                    };
+                    tiers.push(costs);
+                }
+                Some(tiers)
+            }
+        };
+        Ok(Self {
+            token: str_field(j, "token")?,
+            n: u64_field(j, "n")?,
+            k: u64_field(j, "k")?,
+            family,
+            include_rent: bool_field(j, "include_rent").unwrap_or(true),
+            economics,
+        })
+    }
+}
+
+/// `POST /v1/streams/{token}/observe` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObserveRequest {
+    pub scores: Vec<f64>,
+}
+
+impl ObserveRequest {
+    pub fn to_json(&self) -> Json {
+        obj(vec![("scores", Json::Arr(self.scores.iter().map(|s| Json::Num(*s)).collect()))])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let arr = arr_field(j, "scores")?;
+        let mut scores = Vec::with_capacity(arr.len());
+        for (i, s) in arr.iter().enumerate() {
+            scores.push(s.as_f64().ok_or_else(|| format!("scores[{i}] must be a number"))?);
+        }
+        Ok(Self { scores })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+
+/// Success body for open.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenResponse {
+    /// Session token to use in stream routes.
+    pub stream: String,
+    /// Engine stream id (ledger attribution key).
+    pub id: u64,
+    /// True when admission degraded the stream to pinned-cold placement.
+    pub degraded: bool,
+    /// Hot slots reserved against the tenant's quota for this stream.
+    pub reserved_hot: u64,
+}
+
+impl OpenResponse {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("stream", Json::Str(self.stream.clone())),
+            ("id", unum(self.id)),
+            ("degraded", Json::Bool(self.degraded)),
+            ("reserved_hot", unum(self.reserved_hot)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            stream: str_field(j, "stream")?,
+            id: u64_field(j, "id")?,
+            degraded: bool_field(j, "degraded")?,
+            reserved_hot: u64_field(j, "reserved_hot")?,
+        })
+    }
+}
+
+/// Success body for observe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObserveResponse {
+    /// Documents observed so far (across all batches).
+    pub observed: u64,
+    /// True once all `n` documents have been observed.
+    pub done: bool,
+}
+
+impl ObserveResponse {
+    pub fn to_json(&self) -> Json {
+        obj(vec![("observed", unum(self.observed)), ("done", Json::Bool(self.done))])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self { observed: u64_field(j, "observed")?, done: bool_field(j, "done")? })
+    }
+}
+
+/// Success body for finish.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FinishResponse {
+    pub retained: u64,
+    pub hot_reads: u64,
+    pub cold_reads: u64,
+    /// The stream's attributed ledger total at finish time.
+    pub cost: f64,
+}
+
+impl FinishResponse {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("retained", unum(self.retained)),
+            ("hot_reads", unum(self.hot_reads)),
+            ("cold_reads", unum(self.cold_reads)),
+            ("cost", Json::Num(self.cost)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            retained: u64_field(j, "retained")?,
+            hot_reads: u64_field(j, "hot_reads")?,
+            cold_reads: u64_field(j, "cold_reads")?,
+            cost: f64_field(j, "cost")?,
+        })
+    }
+}
+
+/// Error body: machine-readable `reason` for admission rejections, byte
+/// `offset` for JSON parse errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorBody {
+    pub error: String,
+    pub reason: Option<String>,
+    pub offset: Option<u64>,
+}
+
+impl ErrorBody {
+    pub fn message(error: impl Into<String>) -> Self {
+        Self { error: error.into(), reason: None, offset: None }
+    }
+
+    pub fn with_reason(error: impl Into<String>, reason: impl Into<String>) -> Self {
+        Self { error: error.into(), reason: Some(reason.into()), offset: None }
+    }
+
+    pub fn parse_failure(e: &crate::serdes::JsonError) -> Self {
+        Self {
+            error: format!("invalid json: {}", e.msg),
+            reason: Some("bad-json".to_string()),
+            offset: Some(e.offset as u64),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("error", Json::Str(self.error.clone()))];
+        if let Some(r) = &self.reason {
+            fields.push(("reason", Json::Str(r.clone())));
+        }
+        if let Some(o) = self.offset {
+            fields.push(("offset", unum(o)));
+        }
+        obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            error: str_field(j, "error")?,
+            reason: j.get("reason").and_then(|v| v.as_str()).map(str::to_string),
+            offset: j.get("offset").and_then(|v| v.as_u64()),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Invoice
+
+/// One stream line on an invoice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InvoiceLine {
+    pub stream_id: u64,
+    pub completed: bool,
+    pub degraded: bool,
+    /// Raw attributed ledger total (conserved against the engine ledger).
+    pub cost: f64,
+    /// `cost × price_multiplier` — what the tenant owes.
+    pub billed: f64,
+}
+
+/// `GET /v1/tenants/{name}/invoice` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Invoice {
+    pub tenant: String,
+    pub price_multiplier: f64,
+    pub streams: Vec<InvoiceLine>,
+    pub cost_total: f64,
+    pub billed_total: f64,
+}
+
+impl Invoice {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("tenant", Json::Str(self.tenant.clone())),
+            ("price_multiplier", Json::Num(self.price_multiplier)),
+            (
+                "streams",
+                Json::Arr(
+                    self.streams
+                        .iter()
+                        .map(|s| {
+                            obj(vec![
+                                ("stream_id", unum(s.stream_id)),
+                                ("completed", Json::Bool(s.completed)),
+                                ("degraded", Json::Bool(s.degraded)),
+                                ("cost", Json::Num(s.cost)),
+                                ("billed", Json::Num(s.billed)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("cost_total", Json::Num(self.cost_total)),
+            ("billed_total", Json::Num(self.billed_total)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut streams = Vec::new();
+        for (i, s) in arr_field(j, "streams")?.iter().enumerate() {
+            streams.push(InvoiceLine {
+                stream_id: u64_field(s, "stream_id").map_err(|e| format!("streams[{i}]: {e}"))?,
+                completed: bool_field(s, "completed").map_err(|e| format!("streams[{i}]: {e}"))?,
+                degraded: bool_field(s, "degraded").map_err(|e| format!("streams[{i}]: {e}"))?,
+                cost: f64_field(s, "cost").map_err(|e| format!("streams[{i}]: {e}"))?,
+                billed: f64_field(s, "billed").map_err(|e| format!("streams[{i}]: {e}"))?,
+            });
+        }
+        Ok(Self {
+            tenant: str_field(j, "tenant")?,
+            price_multiplier: f64_field(j, "price_multiplier")?,
+            streams,
+            cost_total: f64_field(j, "cost_total")?,
+            billed_total: f64_field(j, "billed_total")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Status
+
+/// Per-tier occupancy line in the status report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TierStatus {
+    pub occupancy: u64,
+    /// `None` = unbounded tier.
+    pub capacity: Option<u64>,
+    pub peak: u64,
+}
+
+/// Per-tenant admission line in the status report (the admission half of
+/// the arbitration report: verdicts must be visible here, not only in
+/// HTTP responses).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantStatus {
+    pub tenant: String,
+    pub live_streams: u64,
+    pub reserved_hot: u64,
+    pub admitted: u64,
+    pub degraded: u64,
+    pub rejected: u64,
+    pub last_rejection: Option<String>,
+}
+
+/// `GET /v1/status` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Status {
+    pub backend: String,
+    pub arbiter: String,
+    pub live_sessions: u64,
+    pub rearbitrations: u64,
+    /// Tiers whose orphaned residents swallowed their capacity at the
+    /// last arbitration (0 = healthy).
+    pub overcommitted_tiers: u64,
+    pub journal_ops: u64,
+    pub auto_checkpoints: u64,
+    pub ledger_total: f64,
+    pub tiers: Vec<TierStatus>,
+    pub tenants: Vec<TenantStatus>,
+}
+
+impl Status {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("backend", Json::Str(self.backend.clone())),
+            ("arbiter", Json::Str(self.arbiter.clone())),
+            ("live_sessions", unum(self.live_sessions)),
+            ("rearbitrations", unum(self.rearbitrations)),
+            ("overcommitted_tiers", unum(self.overcommitted_tiers)),
+            ("journal_ops", unum(self.journal_ops)),
+            ("auto_checkpoints", unum(self.auto_checkpoints)),
+            ("ledger_total", Json::Num(self.ledger_total)),
+            (
+                "tiers",
+                Json::Arr(
+                    self.tiers
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("occupancy", unum(t.occupancy)),
+                                (
+                                    "capacity",
+                                    t.capacity.map_or(Json::Null, unum),
+                                ),
+                                ("peak", unum(t.peak)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "tenants",
+                Json::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("tenant", Json::Str(t.tenant.clone())),
+                                ("live_streams", unum(t.live_streams)),
+                                ("reserved_hot", unum(t.reserved_hot)),
+                                ("admitted", unum(t.admitted)),
+                                ("degraded", unum(t.degraded)),
+                                ("rejected", unum(t.rejected)),
+                                (
+                                    "last_rejection",
+                                    t.last_rejection
+                                        .as_ref()
+                                        .map_or(Json::Null, |r| Json::Str(r.clone())),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut tiers = Vec::new();
+        for (i, t) in arr_field(j, "tiers")?.iter().enumerate() {
+            let capacity = match t.get("capacity") {
+                None | Some(Json::Null) => None,
+                Some(v) => {
+                    Some(v.as_u64().ok_or_else(|| format!("tiers[{i}].capacity must be an integer"))?)
+                }
+            };
+            tiers.push(TierStatus {
+                occupancy: u64_field(t, "occupancy").map_err(|e| format!("tiers[{i}]: {e}"))?,
+                capacity,
+                peak: u64_field(t, "peak").map_err(|e| format!("tiers[{i}]: {e}"))?,
+            });
+        }
+        let mut tenants = Vec::new();
+        for (i, t) in arr_field(j, "tenants")?.iter().enumerate() {
+            tenants.push(TenantStatus {
+                tenant: str_field(t, "tenant").map_err(|e| format!("tenants[{i}]: {e}"))?,
+                live_streams: u64_field(t, "live_streams")
+                    .map_err(|e| format!("tenants[{i}]: {e}"))?,
+                reserved_hot: u64_field(t, "reserved_hot")
+                    .map_err(|e| format!("tenants[{i}]: {e}"))?,
+                admitted: u64_field(t, "admitted").map_err(|e| format!("tenants[{i}]: {e}"))?,
+                degraded: u64_field(t, "degraded").map_err(|e| format!("tenants[{i}]: {e}"))?,
+                rejected: u64_field(t, "rejected").map_err(|e| format!("tenants[{i}]: {e}"))?,
+                last_rejection: t
+                    .get("last_rejection")
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string),
+            });
+        }
+        Ok(Self {
+            backend: str_field(j, "backend")?,
+            arbiter: str_field(j, "arbiter")?,
+            live_sessions: u64_field(j, "live_sessions")?,
+            rearbitrations: u64_field(j, "rearbitrations")?,
+            overcommitted_tiers: u64_field(j, "overcommitted_tiers")?,
+            journal_ops: u64_field(j, "journal_ops")?,
+            auto_checkpoints: u64_field(j, "auto_checkpoints")?,
+            ledger_total: f64_field(j, "ledger_total")?,
+            tiers,
+            tenants,
+        })
+    }
+}
+
+/// Parse a request body and map failures to a 400-with-offset error.
+pub fn parse_body(body: &[u8]) -> Result<Json, ErrorBody> {
+    let text = std::str::from_utf8(body).map_err(|_| ErrorBody {
+        error: "body is not utf-8".to_string(),
+        reason: Some("bad-json".to_string()),
+        offset: None,
+    })?;
+    Json::parse(text).map_err(|e| ErrorBody::parse_failure(&e))
+}
+
+// keep `obj` available to the server module for ad-hoc payloads
+pub(crate) fn json_obj(fields: Vec<(&str, Json)>) -> Json {
+    obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{check, Config};
+    use crate::util::Rng;
+
+    // Generators. All floats are finite by construction; integers stay
+    // below 2^53 so Json::Num holds them exactly.
+
+    fn gen_money(rng: &mut Rng) -> f64 {
+        // exercise negative, fractional, large, and tiny magnitudes
+        let scale = match rng.next_below(4) {
+            0 => 1e-7,
+            1 => 1.0,
+            2 => 1e9,
+            _ => 1e15,
+        };
+        (rng.next_f64() - 0.5) * scale
+    }
+
+    fn gen_name(rng: &mut Rng) -> String {
+        // include chars that need JSON escaping
+        let alphabet = ["acme", "b\"quote", "uni\u{2603}code", "tab\there", "x\\y", ""];
+        alphabet[rng.next_below(alphabet.len() as u64) as usize].to_string()
+    }
+
+    fn gen_invoice(rng: &mut Rng) -> Invoice {
+        let n = rng.next_below(6) as usize;
+        let streams: Vec<InvoiceLine> = (0..n)
+            .map(|_| InvoiceLine {
+                stream_id: rng.next_below(1 << 24),
+                completed: rng.next_below(2) == 0,
+                degraded: rng.next_below(2) == 0,
+                cost: gen_money(rng),
+                billed: gen_money(rng),
+            })
+            .collect();
+        Invoice {
+            tenant: gen_name(rng),
+            price_multiplier: rng.next_f64() * 3.0,
+            cost_total: streams.iter().map(|s| s.cost).sum(),
+            billed_total: streams.iter().map(|s| s.billed).sum(),
+            streams,
+        }
+    }
+
+    fn gen_status(rng: &mut Rng) -> Status {
+        let tiers: Vec<TierStatus> = (0..(2 + rng.next_below(3) as usize))
+            .map(|_| TierStatus {
+                occupancy: rng.next_below(1 << 20),
+                capacity: if rng.next_below(2) == 0 { None } else { Some(rng.next_below(1 << 20)) },
+                peak: rng.next_below(1 << 20),
+            })
+            .collect();
+        let tenants: Vec<TenantStatus> = (0..rng.next_below(5) as usize)
+            .map(|_| TenantStatus {
+                tenant: gen_name(rng),
+                live_streams: rng.next_below(1000),
+                reserved_hot: rng.next_below(1 << 30),
+                admitted: rng.next_below(1 << 30),
+                degraded: rng.next_below(100),
+                rejected: rng.next_below(100),
+                last_rejection: if rng.next_below(2) == 0 {
+                    None
+                } else {
+                    Some("hot-quota".to_string())
+                },
+            })
+            .collect();
+        Status {
+            backend: gen_name(rng),
+            arbiter: "greedy".to_string(),
+            live_sessions: rng.next_below(2000),
+            rearbitrations: rng.next_below(1 << 40),
+            overcommitted_tiers: rng.next_below(4),
+            journal_ops: rng.next_below(1 << 50),
+            auto_checkpoints: rng.next_below(1000),
+            ledger_total: gen_money(rng),
+            tiers,
+            tenants,
+        }
+    }
+
+    fn gen_error(rng: &mut Rng) -> ErrorBody {
+        ErrorBody {
+            error: gen_name(rng),
+            reason: if rng.next_below(2) == 0 { None } else { Some("stream-quota".to_string()) },
+            offset: if rng.next_below(2) == 0 { None } else { Some(rng.next_below(1 << 40)) },
+        }
+    }
+
+    fn round_trip<T, F, G>(x: &T, to: F, from: G) -> Result<(), String>
+    where
+        T: PartialEq + std::fmt::Debug,
+        F: Fn(&T) -> Json,
+        G: Fn(&Json) -> Result<T, String>,
+    {
+        let wire = to(x).dump();
+        let parsed = Json::parse(&wire).map_err(|e| format!("reparse failed: {e} in {wire}"))?;
+        let back = from(&parsed)?;
+        if &back == x {
+            Ok(())
+        } else {
+            Err(format!("round trip drifted:\n  sent {x:?}\n  got  {back:?}\n  wire {wire}"))
+        }
+    }
+
+    #[test]
+    fn invoices_round_trip_exactly() {
+        check("invoice-roundtrip", Config::default(), gen_invoice, |inv| {
+            round_trip(inv, Invoice::to_json, Invoice::from_json)
+        });
+    }
+
+    #[test]
+    fn status_round_trips_exactly() {
+        check("status-roundtrip", Config::default(), gen_status, |st| {
+            round_trip(st, Status::to_json, Status::from_json)
+        });
+    }
+
+    #[test]
+    fn errors_round_trip_exactly() {
+        check("error-roundtrip", Config::default(), gen_error, |e| {
+            round_trip(e, ErrorBody::to_json, ErrorBody::from_json)
+        });
+    }
+
+    #[test]
+    fn open_and_observe_round_trip() {
+        check(
+            "open-roundtrip",
+            Config { cases: 64, ..Config::default() },
+            |rng: &mut Rng| OpenRequest {
+                token: gen_name(rng),
+                n: 1 + rng.next_below(1 << 30),
+                k: 1 + rng.next_below(1 << 10),
+                family: [PlanFamily::Keep, PlanFamily::Migrate, PlanFamily::Auto]
+                    [rng.next_below(3) as usize],
+                include_rent: rng.next_below(2) == 0,
+                economics: if rng.next_below(2) == 0 {
+                    None
+                } else {
+                    Some(
+                        (0..(2 + rng.next_below(3) as usize))
+                            .map(|_| PerDocCosts {
+                                write: rng.next_f64() * 10.0,
+                                read: rng.next_f64() * 10.0,
+                                rent_window: rng.next_f64(),
+                            })
+                            .collect(),
+                    )
+                },
+            },
+            |req| round_trip(req, OpenRequest::to_json, OpenRequest::from_json),
+        );
+        check(
+            "observe-roundtrip",
+            Config { cases: 64, ..Config::default() },
+            crate::propcheck::gens::score_vec(0, 50),
+            |scores| {
+                round_trip(
+                    &ObserveRequest { scores: scores.clone() },
+                    ObserveRequest::to_json,
+                    ObserveRequest::from_json,
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn non_finite_payloads_cannot_cross_the_wire() {
+        // dump() of a non-finite Num yields text the hardened parser
+        // refuses, so a corrupt in-memory value cannot silently reach a
+        // client as something else.
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let inv = Invoice {
+                tenant: "t".to_string(),
+                price_multiplier: 1.0,
+                streams: vec![],
+                cost_total: bad,
+                billed_total: 0.0,
+            };
+            let wire = inv.to_json().dump();
+            assert!(
+                Json::parse(&wire).is_err(),
+                "non-finite {bad} round-tripped via {wire}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_body_reports_byte_offset() {
+        let e = parse_body(b"{\"scores\": [1, 2, oops]}").unwrap_err();
+        assert_eq!(e.reason.as_deref(), Some("bad-json"));
+        assert_eq!(e.offset, Some(18));
+        let e = parse_body(&[0xff, 0xfe]).unwrap_err();
+        assert!(e.error.contains("utf-8"));
+    }
+
+    #[test]
+    fn deeply_nested_bodies_are_rejected() {
+        let bomb = format!("{}1{}", "[".repeat(100_000), "]".repeat(100_000));
+        let e = parse_body(bomb.as_bytes()).unwrap_err();
+        assert!(e.error.contains("nesting too deep"), "got {e:?}");
+    }
+}

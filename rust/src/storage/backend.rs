@@ -161,6 +161,12 @@ pub trait StorageBackend: Send {
 
     /// The accumulated ledger of one stream (empty if it never operated).
     fn stream_ledger(&self, stream: u64) -> Ledger;
+
+    /// Every stream id ever registered, sorted ascending. Durable
+    /// backends recover these from the journal, so an engine built over a
+    /// reopened root can continue the id sequence instead of reissuing
+    /// ids that already own documents and ledger lines.
+    fn stream_ids(&self) -> Vec<u64>;
 }
 
 impl StorageBackend for StorageSim {
@@ -275,6 +281,10 @@ impl StorageBackend for StorageSim {
 
     fn stream_ledger(&self, stream: u64) -> Ledger {
         StorageSim::stream_ledger(self, stream)
+    }
+
+    fn stream_ids(&self) -> Vec<u64> {
+        StorageSim::stream_ids(self)
     }
 }
 

@@ -482,4 +482,10 @@ impl<S: DocStore> StorageBackend for DurableBackend<S> {
     fn stream_ledger(&self, stream: u64) -> Ledger {
         self.state.stream_ledger(stream)
     }
+
+    fn stream_ids(&self) -> Vec<u64> {
+        // journal replay re-registers every stream into the substrate, so
+        // a reopened backend reports the full historical id set
+        self.state.stream_ids()
+    }
 }

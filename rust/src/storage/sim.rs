@@ -461,6 +461,11 @@ impl StorageSim {
         self.stream_costs.iter()
     }
 
+    /// Every stream id ever registered, sorted ascending (BTreeMap order).
+    pub fn stream_ids(&self) -> Vec<u64> {
+        self.stream_costs.keys().copied().collect()
+    }
+
     /// End of stream: settle rent for everything still resident (they
     /// occupied their tier until window fraction 1.0).
     pub fn settle_rent(&mut self, at: f64) {

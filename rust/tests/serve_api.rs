@@ -1,0 +1,334 @@
+//! Acceptance tests for the serve layer's HTTP hardening and admission
+//! control (ADR-006).
+//!
+//! The hardening tests speak *raw bytes* over a `TcpStream` on purpose:
+//! the typed client can only produce well-formed requests, and the whole
+//! point here is what the server does with malformed ones — oversized
+//! bodies (413), unknown routes (404), broken JSON (400 with the parse
+//! offset), and peers that stall mid-request (read timeout, dropped).
+//!
+//! The admission tests are the regression suite the issue demands: a
+//! quota rejection must be visible in the HTTP response (429 + reason)
+//! AND in the arbitration/status report, and likewise for degradation.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use shptier::cost::PerDocCosts;
+use shptier::engine::BackendSpec;
+use shptier::serve::client::{Client, OpenOutcome};
+use shptier::serve::wire::{ErrorBody, OpenRequest};
+use shptier::serve::{RunningServer, ServeConfig};
+
+/// Economics that make the hot tier unambiguously attractive for the
+/// retained top-K, so the analytic hot demand is exactly K and the
+/// hot-quota numbers below are deterministic.
+fn hot_friendly_economics() -> Vec<PerDocCosts> {
+    vec![
+        PerDocCosts { write: 1.0, read: 0.1, rent_window: 0.0 },
+        PerDocCosts { write: 1.0, read: 10.0, rent_window: 0.0 },
+    ]
+}
+
+fn start_server(classes_and_tenants: &str) -> RunningServer {
+    let config = ServeConfig::from_toml(&format!(
+        "[serve]\nworkers = 4\nread_timeout_ms = 400\nmax_body_bytes = 2048\n\
+         [engine]\ntiers = 2\nhot_capacity = 64\n{classes_and_tenants}"
+    ))
+    .expect("test config parses");
+    RunningServer::start(config, BackendSpec::Sim).expect("server starts")
+}
+
+fn default_server() -> RunningServer {
+    start_server("[tenants.alpha]\ntoken = \"tok-alpha\"\n")
+}
+
+/// Send raw bytes, read the raw response to EOF.
+fn raw_exchange(addr: std::net::SocketAddr, payload: &[u8]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(payload).expect("send");
+    // Read until EOF, but tolerate a reset once a full response is
+    // buffered: answering 413 without draining the body can leave unread
+    // bytes in the server's receive queue, which turns its close into RST.
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match s.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) => {
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+                panic!("read response: {e}");
+            }
+        }
+    }
+    let text = String::from_utf8(buf).expect("utf-8 response");
+    let (head, body) = text.split_once("\r\n\r\n").expect("response has a head");
+    let status: u16 = head
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+    (status, body.to_string())
+}
+
+fn error_body(body: &str) -> ErrorBody {
+    ErrorBody::from_json(&shptier::serdes::Json::parse(body).expect("error body is json"))
+        .expect("error body shape")
+}
+
+#[test]
+fn oversized_body_gets_413_before_buffering() {
+    let server = default_server();
+    let req = format!(
+        "POST /v1/streams HTTP/1.1\r\nContent-Length: 999999\r\n\r\n{}",
+        // send only a prefix: the server must answer from the declared
+        // length alone instead of reading 1 MB first
+        "x".repeat(64)
+    );
+    let (status, body) = raw_exchange(server.local_addr(), req.as_bytes());
+    assert_eq!(status, 413, "body: {body}");
+    let err = error_body(&body);
+    assert_eq!(err.reason.as_deref(), Some("body-too-large"));
+    assert!(err.error.contains("2048"), "{err:?} should name the limit");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn unknown_routes_get_404_with_reason() {
+    let server = default_server();
+    for path in ["/", "/v2/streams", "/v1/streamz", "/v1/streams/x/unknown"] {
+        let req = format!("GET {path} HTTP/1.1\r\n\r\n");
+        let (status, body) = raw_exchange(server.local_addr(), req.as_bytes());
+        assert_eq!(status, 404, "path {path} gave {body}");
+        assert_eq!(error_body(&body).reason.as_deref(), Some("unknown-route"));
+    }
+    // known route, wrong method
+    let (status, _) = raw_exchange(
+        server.local_addr(),
+        b"DELETE /v1/streams HTTP/1.1\r\n\r\n",
+    );
+    assert_eq!(status, 405);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_json_gets_400_with_parse_position() {
+    let server = default_server();
+    let bad = b"{\"token\": \"tok-alpha\", \"n\": oops}";
+    let req = format!(
+        "POST /v1/streams HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        bad.len()
+    );
+    let mut payload = req.into_bytes();
+    payload.extend_from_slice(bad);
+    let (status, body) = raw_exchange(server.local_addr(), &payload);
+    assert_eq!(status, 400, "body: {body}");
+    let err = error_body(&body);
+    assert_eq!(err.reason.as_deref(), Some("bad-json"));
+    // `oops` starts at byte 28 of the body; the client can point at it
+    assert_eq!(err.offset, Some(28), "{err:?}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_request_framing_gets_400() {
+    let server = default_server();
+    let (status, _) = raw_exchange(server.local_addr(), b"NONSENSE\r\n\r\n");
+    assert_eq!(status, 400);
+    let (status, _) =
+        raw_exchange(server.local_addr(), b"POST /v1/streams SPDY/3\r\n\r\n");
+    assert_eq!(status, 400);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn stalled_connections_are_dropped_at_the_read_timeout() {
+    let server = default_server();
+    let start = Instant::now();
+    let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    // half a request head, then silence
+    s.write_all(b"POST /v1/streams HTTP/1.1\r\nContent-").unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    let n = s.read_to_end(&mut buf).unwrap_or(0);
+    let elapsed = start.elapsed();
+    // no response is owed to a stalled peer: the server just hangs up
+    assert_eq!(n, 0, "expected a silent close, got {:?}", String::from_utf8_lossy(&buf));
+    assert!(
+        elapsed >= Duration::from_millis(300),
+        "dropped too early ({elapsed:?}) — timeout not applied?"
+    );
+    assert!(
+        elapsed < Duration::from_secs(8),
+        "dropped far too late ({elapsed:?}) — worker was pinned"
+    );
+    // and the worker is free again: a well-formed request still answers
+    let client = Client::new(server.local_addr());
+    assert!(client.status().is_ok());
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Admission regression: each verdict visible over HTTP and in the report
+
+const QUOTA_ROSTER: &str = "[classes.capped]\n\
+     max_streams = 2\n\
+     max_hot_docs = 6\n\
+     on_exceed = \"reject\"\n\
+     [classes.soft]\n\
+     max_streams = 100\n\
+     max_hot_docs = 6\n\
+     on_exceed = \"degrade\"\n\
+     [tenants.rigid]\ntoken = \"tok-rigid\"\nclass = \"capped\"\n\
+     [tenants.flex]\ntoken = \"tok-flex\"\nclass = \"soft\"\n";
+
+fn open_k4(client: &Client, token: &str) -> OpenOutcome {
+    client
+        .open_request(&OpenRequest {
+            token: token.to_string(),
+            n: 40,
+            k: 4,
+            family: shptier::policy::PlanFamily::Keep,
+            include_rent: false,
+            economics: Some(hot_friendly_economics()),
+        })
+        .expect("transport ok")
+}
+
+fn expect_admitted(outcome: OpenOutcome) -> shptier::serve::wire::OpenResponse {
+    match outcome {
+        OpenOutcome::Admitted(open) => open,
+        other => panic!("expected admission, got {other:?}"),
+    }
+}
+
+fn expect_rejected(outcome: OpenOutcome) -> (u16, Option<String>, String) {
+    match outcome {
+        OpenOutcome::Rejected { status, reason, error } => (status, reason, error),
+        other => panic!("expected rejection, got {other:?}"),
+    }
+}
+
+#[test]
+fn hot_quota_rejection_shows_in_http_and_in_the_report() {
+    let server = start_server(QUOTA_ROSTER);
+    let client = Client::new(server.local_addr());
+
+    // k=4 hot demand per stream; quota 6 admits one stream, not two
+    let first = expect_admitted(open_k4(&client, "tok-rigid"));
+    assert!(!first.degraded);
+    assert_eq!(first.reserved_hot, 4);
+
+    let (status, reason, error) = expect_rejected(open_k4(&client, "tok-rigid"));
+    assert_eq!(status, 429);
+    assert_eq!(reason.as_deref(), Some("hot-quota"));
+    assert!(error.contains("rigid"), "error names the tenant: {error}");
+
+    // the same verdict is in the status report
+    let st = client.status().expect("status");
+    let rigid = st.tenants.iter().find(|t| t.tenant == "rigid").unwrap();
+    assert_eq!(rigid.admitted, 1);
+    assert_eq!(rigid.rejected, 1);
+    assert_eq!(rigid.live_streams, 1);
+    assert_eq!(rigid.reserved_hot, 4);
+    assert_eq!(rigid.last_rejection.as_deref(), Some("hot-quota"));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn stream_quota_rejection_shows_in_http_and_in_the_report() {
+    let server = start_server(QUOTA_ROSTER);
+    let client = Client::new(server.local_addr());
+    // max_streams = 2: use tiny per-stream demand so only the stream
+    // count can bind
+    let open_small = |client: &Client| {
+        client
+            .open_request(&OpenRequest {
+                token: "tok-rigid".to_string(),
+                n: 8,
+                k: 1,
+                family: shptier::policy::PlanFamily::Keep,
+                include_rent: false,
+                economics: Some(hot_friendly_economics()),
+            })
+            .expect("transport ok")
+    };
+    assert!(matches!(open_small(&client), OpenOutcome::Admitted(_)));
+    assert!(matches!(open_small(&client), OpenOutcome::Admitted(_)));
+    let (status, reason, _) = expect_rejected(open_small(&client));
+    assert_eq!(status, 429);
+    assert_eq!(reason.as_deref(), Some("stream-quota"));
+    let st = client.status().expect("status");
+    let rigid = st.tenants.iter().find(|t| t.tenant == "rigid").unwrap();
+    assert_eq!(rigid.rejected, 1);
+    assert_eq!(rigid.last_rejection.as_deref(), Some("stream-quota"));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn degrade_policy_pins_cold_and_shows_in_both_places() {
+    let server = start_server(QUOTA_ROSTER);
+    let client = Client::new(server.local_addr());
+
+    let first = expect_admitted(open_k4(&client, "tok-flex"));
+    assert!(!first.degraded);
+
+    // second stream exceeds the hot quota → degraded admission, visible
+    // in the HTTP response
+    let second = expect_admitted(open_k4(&client, "tok-flex"));
+    assert!(second.degraded);
+    assert_eq!(second.reserved_hot, 0);
+
+    // ... and in the status report
+    let st = client.status().expect("status");
+    let flex = st.tenants.iter().find(|t| t.tenant == "flex").unwrap();
+    assert_eq!(flex.admitted, 1);
+    assert_eq!(flex.degraded, 1);
+    assert_eq!(flex.live_streams, 2);
+    assert_eq!(flex.reserved_hot, 4);
+
+    // the degraded stream really is pinned cold: run it and check no
+    // retained doc was read from the hot tier, despite hot-friendly
+    // economics that would otherwise put all of the top-K there
+    for s in [&first, &second] {
+        let scores: Vec<f64> = (0..40).map(|i| ((i * 37) % 40) as f64 / 40.0).collect();
+        client.observe(&s.stream, &scores).expect("observe");
+    }
+    let fin_hot = client.finish(&first.stream).expect("finish first");
+    let fin_cold = client.finish(&second.stream).expect("finish degraded");
+    assert!(fin_hot.hot_reads > 0, "control stream should read hot: {fin_hot:?}");
+    assert_eq!(fin_cold.hot_reads, 0, "degraded stream must not read hot: {fin_cold:?}");
+    assert_eq!(fin_cold.cold_reads, 4);
+
+    // finishing released the reservations
+    let st = client.status().expect("status");
+    let flex = st.tenants.iter().find(|t| t.tenant == "flex").unwrap();
+    assert_eq!(flex.live_streams, 0);
+    assert_eq!(flex.reserved_hot, 0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn custom_economics_must_match_the_topology_arity() {
+    let server = default_server();
+    let client = Client::new(server.local_addr());
+    let outcome = client
+        .open_request(&OpenRequest {
+            token: "tok-alpha".to_string(),
+            n: 10,
+            k: 2,
+            family: shptier::policy::PlanFamily::Keep,
+            include_rent: false,
+            economics: Some(vec![PerDocCosts { write: 1.0, read: 1.0, rent_window: 0.0 }]),
+        })
+        .expect("transport ok");
+    let (status, _, error) = expect_rejected(outcome);
+    assert_eq!(status, 400);
+    assert!(error.contains("1 tiers") && error.contains("2"), "{error}");
+    server.shutdown().unwrap();
+}

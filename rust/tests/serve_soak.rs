@@ -1,0 +1,110 @@
+//! In-process soak tests for the serve layer (ADR-006).
+//!
+//! The CI `serve-soak` job runs the full child-process SIGKILL variant
+//! (`shptier serve-soak --kill`); these tests keep the same invariants
+//! honest under `cargo test` without forking:
+//!
+//!   * sim: a mixed-tenant wave through open/observe/finish with the
+//!     tiny tenant's 429s provoked on purpose, then ledger conservation
+//!     and exactly-once invoicing via `soak::verify_invoices`.
+//!   * fs: a wave driven halfway, then `RunningServer::abort()` — the
+//!     in-process stand-in for a kill: worker threads die, **no**
+//!     checkpoint — then a restart on the same root. The second
+//!     incarnation must replay the journal, re-attribute every stream
+//!     from the sidecar, invoice unfinished streams as incomplete, and
+//!     still conserve the ledger across both lives.
+
+use std::collections::BTreeSet;
+
+use shptier::engine::BackendSpec;
+use shptier::serve::client::Client;
+use shptier::serve::{soak, RunningServer, ServeConfig};
+
+const N: u64 = 24;
+const K: u64 = 4;
+const THREADS: usize = 8;
+
+#[test]
+fn sim_soak_conserves_ledger_and_invoices_exactly_once() {
+    let (toml, roster) = soak::soak_config(4, 2);
+    let config = ServeConfig::from_toml(&toml).expect("soak config parses");
+    let server = RunningServer::start(config, BackendSpec::Sim).expect("server starts");
+    let outcome = soak::drive_and_verify(server.local_addr(), &roster, 96, THREADS, N, K)
+        .expect("soak drives clean");
+
+    assert_eq!(outcome.completed, outcome.opened, "every opened stream finished");
+    assert!(outcome.rejected >= 1, "tiny tenant must trip its stream quota");
+    assert!(outcome.peak_live >= 96, "sessions were concurrent, not serial");
+    assert!(outcome.verdict.ledger_total > 0.0);
+    assert_eq!(outcome.verdict.invoiced_completed, outcome.completed);
+    server.shutdown().expect("drain + checkpoint");
+}
+
+#[test]
+fn fs_soak_survives_abort_and_restart_with_full_attribution() {
+    let root = shptier::util::scratch_dir("serve-soak-fs");
+    let (toml, roster) = soak::soak_config(3, 1);
+    let backend = BackendSpec::Fs { root: root.clone() };
+
+    // ----- first incarnation: drive a wave halfway, then die rudely
+    let config = ServeConfig::from_toml(&toml).expect("config parses");
+    let server = RunningServer::start(config, backend.clone()).expect("first start");
+    let addr = server.local_addr();
+    let (live, stats) =
+        soak::open_wave(addr, &roster, 24, THREADS, N, K).expect("first wave opens");
+    assert_eq!(stats.opened, 24);
+    let (finished_half, abandoned_half) = live.split_at(live.len() / 2);
+    soak::observe_wave(addr, finished_half, N, THREADS).expect("observe finished half");
+    // the other half dies mid-stream: journaled writes, no finish
+    soak::observe_wave(addr, abandoned_half, N / 2, THREADS).expect("observe half way");
+    let completed_before =
+        soak::finish_wave(addr, finished_half, THREADS).expect("finish first half");
+    assert_eq!(completed_before.len(), finished_half.len());
+    // abort = stop the workers without Engine::checkpoint — state survives
+    // only through the journal + sidecar, exactly like a killed process
+    server.abort();
+
+    // ----- second incarnation: replay, then keep serving
+    let config = ServeConfig::from_toml(&toml).expect("config parses again");
+    let server = RunningServer::start(config, backend).expect("restart on same root");
+    let addr = server.local_addr();
+    let client = Client::new(addr);
+
+    let status = client.status().expect("status after restart");
+    assert_eq!(status.live_sessions, 0, "dead sessions are not resurrected");
+    assert!(status.journal_ops > 0, "the journal replayed");
+    assert!(status.ledger_total > 0.0, "replay restored the attributed ledger");
+
+    // unfinished wave-1 streams are invoiced — as incomplete
+    for s in abandoned_half {
+        let inv = client.invoice(&s.tenant).expect("invoice");
+        let line = inv
+            .streams
+            .iter()
+            .find(|l| l.stream_id == s.id)
+            .unwrap_or_else(|| panic!("stream {} missing from {}'s invoice", s.id, s.tenant));
+        assert!(!line.completed, "aborted stream {} must not bill as completed", s.id);
+        assert!(line.cost > 0.0, "its journaled writes still cost money");
+    }
+
+    // a second wave on the restarted server, ids continuing past wave 1
+    let (live2, _) = soak::open_wave(addr, &roster, 8, THREADS, N, K).expect("second wave");
+    let max_before = live.iter().map(|s| s.id).max().unwrap();
+    assert!(
+        live2.iter().all(|s| s.id > max_before),
+        "stream ids must continue after replay, not restart from zero"
+    );
+    soak::observe_wave(addr, &live2, N, THREADS).expect("observe second wave");
+    let completed_after = soak::finish_wave(addr, &live2, THREADS).expect("finish second wave");
+
+    // conservation + exactly-once across BOTH incarnations
+    let all_completed: BTreeSet<u64> =
+        completed_before.union(&completed_after).copied().collect();
+    let verdict =
+        soak::verify_invoices(addr, &roster, &all_completed).expect("cross-life verification");
+    assert_eq!(verdict.invoiced_completed as usize, all_completed.len());
+    // every wave-1 stream (finished or not) plus every wave-2 stream has a line
+    assert_eq!(verdict.invoiced_lines as usize, live.len() + live2.len());
+
+    server.shutdown().expect("clean drain this time");
+}
