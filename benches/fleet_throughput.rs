@@ -1,6 +1,8 @@
 //! Bench: fleet scheduler throughput — aggregate docs/sec vs stream count
-//! (M ∈ {1, 4, 16, 64}) and vs worker-pool size on a 16-stream fleet (the
-//! scaling acceptance criterion: ≥ 4× from 1 → 8 workers).
+//! (M ∈ {1, 4, 16, 64}), vs worker-pool size on a 16-stream fleet (the
+//! scaling acceptance criterion: ≥ 4× from 1 → 8 workers), vs storage
+//! backend, and with the ADR-007 adaptive arbiter off/on (its overhead
+//! dimension).
 //!
 //! Set `SHPTIER_BENCH_RECORD=1` to write the results as a baseline JSON to
 //! `benches/baselines/fleet_throughput.json` (see that file for the
@@ -103,6 +105,22 @@ fn main() {
     }
     for root in used_roots {
         let _ = std::fs::remove_dir_all(root);
+    }
+
+    // ---- adaptive overhead (ADR-007): drift-aware arbiter vs plain -------
+    // The admission estimator/detector run on every session either way;
+    // `adaptive=on` additionally arms the bandit arbiter and the
+    // drift-triggered re-derivation path. The pair rides the same
+    // regression gate as every other dimension, so a slowdown in the
+    // always-on observe-path bookkeeping shows up here first.
+    for adaptive in [false, true] {
+        let specs = specs4.clone();
+        let mut cfg = fleet_config(1, cap4);
+        cfg.adaptive = adaptive;
+        let label = if adaptive { "on" } else { "off" };
+        b.bench(&format!("fleet_adaptive/streams=4,adaptive={label}"), total4, || {
+            run_fleet(&specs, &cfg).unwrap().docs_processed
+        });
     }
 
     report_scaling(b.results());

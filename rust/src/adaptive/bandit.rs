@@ -1,0 +1,194 @@
+//! UCB-style bandit over plan families (ADR-007).
+//!
+//! The analytic family comparison ([`PlacementPlan::optimal_family`] with
+//! [`PlanFamily::Auto`]) trusts the a-priori cost model; when realized
+//! costs drift from it, the wrong family can keep winning forever. The
+//! bandit treats keep/migrate as arms, the realized attributed ledger
+//! cost of each finished stream as the reward, and the analytic cost as
+//! the prior mean ("Making the Cut: A Bandit-based Approach to Tiered
+//! Interviewing", arXiv:1906.09621): each arm tracks the mean
+//! realized/analytic cost ratio, blended with a unit prior of weight
+//! [`PRIOR_WEIGHT`] pseudo-observations, and the arm minimizing the
+//! LCB-adjusted predicted cost is chosen. With zero rewards observed the
+//! bandit defers to the closed forms outright, so a cold bandit is
+//! bit-for-bit indistinguishable from the analytic Auto resolution.
+
+use crate::engine::SessionSnapshot;
+use crate::policy::{PlacementPlan, PlanFamily};
+use std::collections::BTreeMap;
+
+/// Pseudo-observations behind the analytic prior (ratio 1.0) of each arm.
+pub const PRIOR_WEIGHT: f64 = 4.0;
+
+/// Exploration scale of the lower-confidence-bound bonus.
+pub const EXPLORE: f64 = 0.5;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct ArmStats {
+    pulls: u64,
+    /// Running mean of realized/analytic cost ratios rewarded to this arm.
+    mean_ratio: f64,
+}
+
+impl ArmStats {
+    fn update(&mut self, ratio: f64) {
+        self.pulls += 1;
+        self.mean_ratio += (ratio - self.mean_ratio) / self.pulls as f64;
+    }
+
+    /// Prior-blended cost ratio: `(W·1 + pulls·mean) / (W + pulls)`.
+    fn blended(&self) -> f64 {
+        (PRIOR_WEIGHT + self.pulls as f64 * self.mean_ratio)
+            / (PRIOR_WEIGHT + self.pulls as f64)
+    }
+}
+
+/// Keep-vs-migrate bandit shared by every Auto session of an
+/// [`crate::adaptive::AdaptiveArbiter`].
+#[derive(Debug, Default)]
+pub struct FamilyBandit {
+    keep: ArmStats,
+    migrate: ArmStats,
+    /// Total family resolutions — the bandit's time index `t`.
+    resolutions: u64,
+    /// Auto sessions whose family this bandit pinned while they run:
+    /// id → (chosen family, analytic cost of the chosen plan). Keeping
+    /// the choice here makes it stable across re-arbitrations — a live
+    /// stream never flips family mid-run.
+    open: BTreeMap<u64, (PlanFamily, f64)>,
+}
+
+impl FamilyBandit {
+    /// Resolve the concrete family for an Auto session (idempotent per
+    /// session id until [`FamilyBandit::reward`] retires it).
+    pub fn resolve(&mut self, s: &SessionSnapshot) -> PlanFamily {
+        if let Some(&(family, _)) = self.open.get(&s.id) {
+            return family;
+        }
+        let keep =
+            PlacementPlan::optimal(&s.tier_costs, s.n, s.k, s.include_rent);
+        let mig =
+            PlacementPlan::optimal_migrate(&s.tier_costs, s.n, s.k, s.include_rent);
+        let a_keep = keep.analytic_cost(&s.tier_costs, s.include_rent);
+        let a_mig = mig.analytic_cost(&s.tier_costs, s.include_rent);
+        let family = if self.keep.pulls + self.migrate.pulls == 0 {
+            // no rewards yet: defer to the closed forms (including their
+            // tie-break) so a cold bandit matches ProportionalArbiter
+            PlacementPlan::optimal_family(
+                &s.tier_costs,
+                s.n,
+                s.k,
+                s.include_rent,
+                PlanFamily::Auto,
+            )
+            .family()
+        } else {
+            let t = (self.resolutions + 1) as f64;
+            let index = |analytic: f64, arm: &ArmStats| {
+                let bonus = EXPLORE * (t.ln() / (PRIOR_WEIGHT + arm.pulls as f64)).sqrt();
+                analytic * (arm.blended() - bonus)
+            };
+            if index(a_mig, &self.migrate) < index(a_keep, &self.keep) {
+                PlanFamily::Migrate
+            } else {
+                PlanFamily::Keep
+            }
+        };
+        let analytic = if family == PlanFamily::Migrate { a_mig } else { a_keep };
+        self.resolutions += 1;
+        self.open.insert(s.id, (family, analytic));
+        family
+    }
+
+    /// Reward a finished session with its realized attributed ledger
+    /// cost. No-op for sessions the bandit never resolved (declared
+    /// families, naive streams) or degenerate analytic costs.
+    pub fn reward(&mut self, id: u64, realized_cost: f64) {
+        let Some((family, analytic)) = self.open.remove(&id) else {
+            return;
+        };
+        if !(analytic > 0.0) || !realized_cost.is_finite() || realized_cost < 0.0 {
+            return;
+        }
+        let ratio = realized_cost / analytic;
+        match family {
+            PlanFamily::Migrate => self.migrate.update(ratio),
+            _ => self.keep.update(ratio),
+        }
+    }
+
+    /// `(keep, migrate)` reward counts — observability for status pages.
+    pub fn pulls(&self) -> (u64, u64) {
+        (self.keep.pulls, self.migrate.pulls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PerDocCosts;
+    use crate::engine::SessionSnapshot;
+
+    fn rent_snap(id: u64) -> SessionSnapshot {
+        // rent-dominated economics where the migrate family wins
+        // analytically (same shape the engine tests use)
+        let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 };
+        let b = PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 };
+        SessionSnapshot::fresh(id, 2_000, 32, vec![a, b], true, PlanFamily::Auto)
+    }
+
+    #[test]
+    fn cold_bandit_matches_the_analytic_auto_resolution() {
+        let mut bandit = FamilyBandit::default();
+        let s = rent_snap(1);
+        let analytic = PlacementPlan::optimal_family(
+            &s.tier_costs,
+            s.n,
+            s.k,
+            s.include_rent,
+            PlanFamily::Auto,
+        )
+        .family();
+        assert_eq!(bandit.resolve(&s), analytic);
+        // and the choice is pinned for the session's lifetime
+        assert_eq!(bandit.resolve(&s), analytic);
+        assert_eq!(bandit.pulls(), (0, 0));
+    }
+
+    #[test]
+    fn consistently_bad_realized_costs_flip_the_family() {
+        let mut bandit = FamilyBandit::default();
+        let first = bandit.resolve(&rent_snap(0));
+        assert_eq!(first, PlanFamily::Migrate, "precondition: migrate wins a priori");
+        // migrate streams keep realizing 1000× their analytic cost…
+        for id in 0..12u64 {
+            let s = rent_snap(id);
+            let family = bandit.resolve(&s);
+            let analytic = PlacementPlan::optimal_family(
+                &s.tier_costs,
+                s.n,
+                s.k,
+                s.include_rent,
+                family,
+            )
+            .analytic_cost(&s.tier_costs, s.include_rent);
+            let realized = match family {
+                PlanFamily::Migrate => analytic * 1000.0,
+                _ => analytic,
+            };
+            bandit.reward(s.id, realized);
+        }
+        // …so the bandit learns to prefer keep
+        assert_eq!(bandit.resolve(&rent_snap(99)), PlanFamily::Keep);
+        let (keep_pulls, migrate_pulls) = bandit.pulls();
+        assert!(migrate_pulls >= 1);
+        assert!(keep_pulls + migrate_pulls == 12);
+    }
+
+    #[test]
+    fn rewards_for_unknown_sessions_are_ignored() {
+        let mut bandit = FamilyBandit::default();
+        bandit.reward(42, 123.0);
+        assert_eq!(bandit.pulls(), (0, 0));
+    }
+}

@@ -1,0 +1,288 @@
+//! Online admission-curve estimation and drift detection (ADR-007).
+//!
+//! Under the secretary model the `j`-th document of a uniformly-random
+//! stream enters the running top-K with probability `min(K, j)/j`
+//! (independently across `j`), so the admission count `A_i` after `i`
+//! documents follows the k/i law:
+//!
+//! ```text
+//!   E[A_i]   = Σ_{j≤i} min(K,j)/j          ≈ K·(1 + ln(i/K))
+//!   Var[A_i] = Σ_{K<j≤i} (K/j)(1 − K/j)    ≈ K·ln(i/K) − K + K²/i
+//! ```
+//!
+//! [`AdmissionEstimator`] tracks the realized count plus the *exact*
+//! running mean and variance of the law in O(1) state per observation
+//! (one add each — no history, no approximation error). The closed-form
+//! approximations above are exported for analysis and tests.
+//!
+//! [`DriftDetector`] runs a two-sided sequential test over the estimator:
+//! the stream is flagged as drifted the first time the realized count
+//! leaves the `c·sd(A_i)` envelope, with `c = sqrt(2·ln(2N/δ))` so a
+//! Gaussian-tail union bound over all `N` indices keeps the stream-level
+//! false-positive probability within the budget `δ`. Detection is
+//! single-shot per stream — the re-derivation it triggers must not thrash.
+
+/// Default stream-level false-positive budget of the drift detector.
+pub const DEFAULT_FP_BUDGET: f64 = 0.01;
+
+/// Closed-form approximation of the expected admission count after `i`
+/// documents of a top-`k` secretary stream.
+pub fn expected_admissions(k: u64, i: u64) -> f64 {
+    let kf = k as f64;
+    let fi = i as f64;
+    if fi <= kf {
+        fi
+    } else {
+        kf * (1.0 + (fi / kf).ln())
+    }
+}
+
+/// Closed-form approximation of the admission-count variance after `i`
+/// documents of a top-`k` secretary stream (0 for `i ≤ k`: the first `k`
+/// documents are always admitted).
+pub fn admission_variance(k: u64, i: u64) -> f64 {
+    let kf = k as f64;
+    let fi = i as f64;
+    if fi <= kf {
+        0.0
+    } else {
+        (kf * (fi / kf).ln() - kf + kf * kf / fi).max(0.0)
+    }
+}
+
+/// O(1)-state tracker of one stream's realized admission curve against
+/// the a-priori k/i law.
+#[derive(Debug, Clone)]
+pub struct AdmissionEstimator {
+    k: u64,
+    observed: u64,
+    admitted: u64,
+    /// Exact Σ min(K,j)/j over the observations so far.
+    expected_sum: f64,
+    /// Exact Σ p_j(1−p_j) over the observations so far.
+    var_sum: f64,
+}
+
+impl AdmissionEstimator {
+    pub fn new(k: u64) -> Self {
+        Self { k: k.max(1), observed: 0, admitted: 0, expected_sum: 0.0, var_sum: 0.0 }
+    }
+
+    /// Record one observation (did it enter the running top-K?).
+    pub fn record(&mut self, admitted: bool) {
+        self.observed += 1;
+        let p = (self.k as f64 / self.observed as f64).min(1.0);
+        self.expected_sum += p;
+        self.var_sum += p * (1.0 - p);
+        if admitted {
+            self.admitted += 1;
+        }
+    }
+
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// Realized admissions so far.
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Exact a-priori E[A_i] at the current index.
+    pub fn expected(&self) -> f64 {
+        self.expected_sum
+    }
+
+    /// Exact a-priori Var[A_i] at the current index.
+    pub fn variance(&self) -> f64 {
+        self.var_sum
+    }
+
+    /// Standardized deviation `|A_i − E[A_i]| / sd(A_i)` of the realized
+    /// count from the law (0 while the variance is still 0).
+    pub fn deviation(&self) -> f64 {
+        let sd = self.var_sum.sqrt();
+        if sd <= 0.0 {
+            0.0
+        } else {
+            (self.admitted as f64 - self.expected_sum).abs() / sd
+        }
+    }
+}
+
+/// Two-sided sequential drift test over an [`AdmissionEstimator`].
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    threshold: f64,
+    warmup: u64,
+    detected: Option<u64>,
+}
+
+impl DriftDetector {
+    /// Detector for a stream of declared length `n` and top-`k`, at the
+    /// [`DEFAULT_FP_BUDGET`].
+    pub fn new(n: u64, k: u64) -> Self {
+        Self::with_budget(n, k, DEFAULT_FP_BUDGET)
+    }
+
+    /// Detector with an explicit stream-level false-positive budget
+    /// `delta` (clamped to a sane range).
+    pub fn with_budget(n: u64, k: u64, delta: f64) -> Self {
+        let delta = delta.clamp(1e-12, 0.5);
+        let nf = n.max(2) as f64;
+        Self {
+            // Gaussian-tail union bound over the ≤ N two-sided tests:
+            // P(|Z| > c) ≤ 2·exp(−c²/2) per index, so c = sqrt(2·ln(2N/δ))
+            // spends at most δ across the whole stream.
+            threshold: (2.0 * (2.0 * nf / delta).ln()).sqrt(),
+            // the envelope is meaningless while Var[A_i] ≈ 0
+            warmup: (2 * k).max(32),
+            detected: None,
+        }
+    }
+
+    /// The `c` multiplier of the sd envelope.
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Index (documents observed) at which drift was flagged, if ever.
+    pub fn detected(&self) -> Option<u64> {
+        self.detected
+    }
+
+    /// Sequential check after an observation was recorded. Returns
+    /// `Some(index)` exactly once — on the first observation whose
+    /// realized count leaves the envelope — and `None` forever after.
+    pub fn check(&mut self, est: &AdmissionEstimator) -> Option<u64> {
+        if self.detected.is_some() || est.observed() < self.warmup {
+            return None;
+        }
+        if est.deviation() > self.threshold {
+            self.detected = Some(est.observed());
+            return self.detected;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::{BoundedTopK, Eviction, Scored};
+    use crate::util::Rng;
+
+    /// Drive a top-K tracker over `n` seeded uniform scores, feeding the
+    /// estimator + detector exactly as a session does.
+    fn drive(
+        n: u64,
+        k: u64,
+        seed: u64,
+        shift_at: Option<u64>,
+    ) -> (AdmissionEstimator, DriftDetector) {
+        let mut est = AdmissionEstimator::new(k);
+        let mut det = DriftDetector::new(n, k);
+        let mut tracker = BoundedTopK::new(k as usize);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            let mut score = rng.next_f64();
+            if let Some(at) = shift_at {
+                if i >= at {
+                    score += 1e3 + i as f64; // regime change: all admitted
+                }
+            }
+            let admitted =
+                !matches!(tracker.offer(Scored::new(i, score)), Eviction::Rejected);
+            est.record(admitted);
+            det.check(&est);
+        }
+        (est, det)
+    }
+
+    #[test]
+    fn estimator_converges_to_the_admission_law_on_long_streams() {
+        // the realized curve of a uniformly-random stream tracks E[A_i]
+        // (k/i law) to within a few sd — and the exact running sums agree
+        // with the closed forms
+        for (seed, k) in [(1u64, 8u64), (2, 16), (3, 64)] {
+            let n = 50_000u64;
+            let (est, det) = drive(n, k, seed, None);
+            assert_eq!(est.observed(), n);
+            let rel = est.admitted() as f64 / est.expected();
+            assert!(
+                (rel - 1.0).abs() < 0.1,
+                "k={k} seed={seed}: realized/expected = {rel}"
+            );
+            assert!(est.deviation() < det.threshold());
+            // closed forms vs exact running sums (harmonic-approx error)
+            let approx = expected_admissions(k, n);
+            assert!(
+                (approx - est.expected()).abs() < 1.0,
+                "E approx {approx} vs exact {}",
+                est.expected()
+            );
+            let vapprox = admission_variance(k, n);
+            assert!(
+                (vapprox - est.variance()).abs() < 2.0,
+                "Var approx {vapprox} vs exact {}",
+                est.variance()
+            );
+        }
+    }
+
+    #[test]
+    fn detector_false_positive_rate_respects_the_budget() {
+        // 200 independent no-drift streams at δ = 0.01: the union bound is
+        // conservative, so even a loose multiple of the budget (5×) leaves
+        // a deterministic margin for the seeded trials
+        let trials = 200u64;
+        let mut fps = 0u64;
+        for seed in 0..trials {
+            let (_, det) = drive(2_000, 16, 1000 + seed, None);
+            if det.detected().is_some() {
+                fps += 1;
+            }
+        }
+        let budget = DEFAULT_FP_BUDGET * 5.0;
+        assert!(
+            (fps as f64 / trials as f64) <= budget,
+            "{fps}/{trials} false positives exceeds {budget}"
+        );
+    }
+
+    #[test]
+    fn mid_stream_shift_is_detected_shortly_after_the_shift() {
+        let (n, k, s) = (4_000u64, 16u64, 2_000u64);
+        for seed in [7u64, 11, 42] {
+            let (_, det) = drive(n, k, seed, Some(s));
+            let d = det.detected().expect("the regime change must be flagged");
+            assert!(d > s, "detected at {d} before the shift at {s}");
+            // post-shift every document is admitted (+1/doc) while the law
+            // expects ~k/i, so the envelope is crossed within ~2c·sd docs
+            assert!(d < s + 200, "detection lag {} too large", d - s);
+        }
+    }
+
+    #[test]
+    fn detection_is_single_shot() {
+        let mut est = AdmissionEstimator::new(4);
+        let mut det = DriftDetector::new(1_000, 4);
+        for _ in 0..2_000 {
+            est.record(true); // pathological: everything admitted
+        }
+        assert!(det.check(&est).is_some());
+        est.record(true);
+        assert!(det.check(&est).is_none(), "a second firing would thrash");
+        assert!(det.detected().is_some());
+    }
+
+    #[test]
+    fn tighter_budgets_raise_the_threshold() {
+        let loose = DriftDetector::with_budget(1_000, 8, 0.1);
+        let tight = DriftDetector::with_budget(1_000, 8, 1e-6);
+        assert!(tight.threshold() > loose.threshold());
+        // longer streams run more tests → higher threshold at equal budget
+        let long = DriftDetector::with_budget(1_000_000, 8, 0.1);
+        assert!(long.threshold() > loose.threshold());
+    }
+}

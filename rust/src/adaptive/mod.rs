@@ -1,0 +1,255 @@
+//! `adaptive` — drift-aware online placement (ADR-007).
+//!
+//! The paper's placement is a priori: cuts are derived once from an
+//! assumed interestingness distribution and never revisited. This
+//! subsystem closes the observe → estimate → re-plan loop:
+//!
+//! 1. **Estimator** ([`AdmissionEstimator`]): every plan-mode session
+//!    tracks its realized admission curve against the secretary k/i law
+//!    in O(1) state per observation.
+//! 2. **Detector** ([`DriftDetector`]): a sequential test with a
+//!    stream-level false-positive budget flags the first index whose
+//!    realized curve leaves the a-priori envelope. On an adaptive engine
+//!    ([`crate::engine::EngineBuilder::adaptive`]) a detection triggers
+//!    an immediate re-arbitration through the ordinary ADR-004 path.
+//! 3. **Re-derivation** ([`suffix_restart_plan`]): no new placement math —
+//!    the suffix past the detection index is re-planned as a fresh
+//!    secretary stream via the existing [`crate::cost::optimal_cuts_family`]
+//!    closed forms, and the resulting absolute cuts flow through the same
+//!    quota allocation and fired-boundary clamps as any other plan.
+//! 4. **Bandit** ([`FamilyBandit`]): Auto sessions choose keep vs migrate
+//!    from realized finished-stream costs (UCB with the analytic cost as
+//!    prior mean) instead of trusting the a-priori comparison forever.
+//!
+//! All four are packaged as [`AdaptiveArbiter`], a drop-in
+//! [`crate::engine::Arbiter`] next to `ProportionalArbiter`/`StaticArbiter`;
+//! quota allocation is shared with `ProportionalArbiter`
+//! ([`crate::engine::arbiter::allocate_assignments`]), so adaptive
+//! placement composes with capacity lending unchanged.
+
+pub mod bandit;
+pub mod estimator;
+
+pub use bandit::FamilyBandit;
+pub use estimator::{
+    admission_variance, expected_admissions, AdmissionEstimator, DriftDetector,
+    DEFAULT_FP_BUDGET,
+};
+
+use crate::cost::{optimal_cuts_family, PerDocCosts};
+use crate::engine::arbiter::allocate_assignments;
+use crate::engine::{Arbiter, PlanAssignment, SessionSnapshot, TierTopology};
+use crate::policy::{PlacementPlan, PlanFamily};
+use std::sync::Mutex;
+
+/// Re-derive a plan after drift was detected at index `detected_at`:
+/// the prefix already streamed under the a-priori cuts, so only the
+/// suffix is re-planned — as a fresh secretary stream of length
+/// `n − detected_at` (the post-drift regime has its own k/i law), using
+/// the same closed forms that priced the original plan. The suffix cuts
+/// are shifted back to absolute indices; the base plan's migrate
+/// schedule is preserved. Falls back to the plain a-priori plan when the
+/// suffix is empty or the shifted cuts fail validation.
+pub fn suffix_restart_plan(
+    tier_costs: &[PerDocCosts],
+    n: u64,
+    k: u64,
+    include_rent: bool,
+    family: PlanFamily,
+    detected_at: u64,
+) -> PlacementPlan {
+    let base = PlacementPlan::optimal_family(tier_costs, n, k, include_rent, family);
+    let suffix = n.saturating_sub(detected_at);
+    if suffix == 0 {
+        return base;
+    }
+    let cuts = optimal_cuts_family(
+        tier_costs,
+        suffix,
+        k.min(suffix).max(1),
+        include_rent,
+        base.migrates(),
+    );
+    let abs: Vec<u64> = cuts.iter().map(|&c| (detected_at + c).min(n)).collect();
+    PlacementPlan::from_cuts_migrate(abs, base.migrate_flags().to_vec(), n, k)
+        .unwrap_or(base)
+}
+
+/// Drift-aware [`Arbiter`] (ADR-007): serves a-priori optimal plans until
+/// a session's drift detector fires, then suffix-restart plans derived
+/// from the detection index; resolves Auto families through the
+/// [`FamilyBandit`] instead of the static analytic comparison. Stateless
+/// apart from the bandit (all drift state rides in the session
+/// snapshots), so it recovers across engine restarts for free.
+pub struct AdaptiveArbiter {
+    bandit: Mutex<FamilyBandit>,
+}
+
+impl AdaptiveArbiter {
+    pub fn new() -> Self {
+        Self { bandit: Mutex::new(FamilyBandit::default()) }
+    }
+
+    /// `(keep, migrate)` bandit reward counts.
+    pub fn bandit_pulls(&self) -> (u64, u64) {
+        self.lock().pulls()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FamilyBandit> {
+        self.bandit.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl Default for AdaptiveArbiter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Arbiter for AdaptiveArbiter {
+    fn name(&self) -> String {
+        "adaptive".to_string()
+    }
+
+    fn arbitrate(
+        &self,
+        sessions: &[SessionSnapshot],
+        topology: &TierTopology,
+    ) -> Vec<PlanAssignment> {
+        let mut bandit = self.lock();
+        let unconstrained: Vec<PlacementPlan> = sessions
+            .iter()
+            .map(|s| {
+                let family = if s.family == PlanFamily::Auto && !s.naive && !s.pinned_cold
+                {
+                    bandit.resolve(s)
+                } else {
+                    s.family
+                };
+                match s.drift {
+                    Some(d) if d > 0 && d < s.n => suffix_restart_plan(
+                        &s.tier_costs,
+                        s.n,
+                        s.k,
+                        s.include_rent,
+                        family,
+                        d,
+                    ),
+                    _ => PlacementPlan::optimal_family(
+                        &s.tier_costs,
+                        s.n,
+                        s.k,
+                        s.include_rent,
+                        family,
+                    ),
+                }
+            })
+            .collect();
+        drop(bandit);
+        allocate_assignments(sessions, topology, unconstrained)
+    }
+
+    fn on_stream_finished(&self, session: &SessionSnapshot, realized_cost: f64) {
+        self.lock().reward(session.id, realized_cost);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ProportionalArbiter, TierTopology};
+    use crate::storage::TierId;
+
+    fn pd(write: f64, read: f64) -> PerDocCosts {
+        PerDocCosts { write, read, rent_window: 0.0 }
+    }
+
+    fn demo_costs() -> Vec<PerDocCosts> {
+        vec![pd(1.0, 4.0), pd(3.0, 0.5)]
+    }
+
+    fn snap(id: u64, n: u64, k: u64) -> SessionSnapshot {
+        SessionSnapshot::fresh(id, n, k, demo_costs(), false, PlanFamily::Keep)
+    }
+
+    #[test]
+    fn without_drift_adaptive_reproduces_proportional_placements() {
+        // identical snapshots through both arbiters, constrained and not:
+        // no drift and no bandit data → bit-for-bit equal assignments
+        let sessions: Vec<_> = (0..4)
+            .map(|id| {
+                let mut s = snap(id, 1_000 + 100 * id, 8 + id);
+                s.observed = 50 * id;
+                s.in_use = vec![id.min(4), 0];
+                s
+            })
+            .collect();
+        for cap in [None, Some(10usize)] {
+            let topo = TierTopology::two_tier(demo_costs()[0], demo_costs()[1])
+                .with_capacity(TierId::A, cap);
+            let base = ProportionalArbiter.arbitrate(&sessions, &topo);
+            let adapt = AdaptiveArbiter::new().arbitrate(&sessions, &topo);
+            assert_eq!(base.len(), adapt.len());
+            for (b, a) in base.iter().zip(adapt.iter()) {
+                assert_eq!(b.id, a.id);
+                assert_eq!(b.family, a.family);
+                assert_eq!(b.plan.cuts(), a.plan.cuts());
+                assert_eq!(b.unconstrained.cuts(), a.unconstrained.cuts());
+                assert_eq!(b.demand, a.demand);
+                assert_eq!(b.quota, a.quota);
+                assert_eq!(b.analytic_unconstrained, a.analytic_unconstrained);
+                assert_eq!(b.analytic_budgeted, a.analytic_budgeted);
+            }
+        }
+    }
+
+    #[test]
+    fn drifted_sessions_get_suffix_restart_plans() {
+        let arb = AdaptiveArbiter::new();
+        let topo = TierTopology::two_tier(demo_costs()[0], demo_costs()[1]);
+        let mut s = snap(0, 4_000, 16);
+        let baseline = arb.arbitrate(&[s.clone()], &topo)[0].plan.clone();
+        s.drift = Some(2_000);
+        let drifted = arb.arbitrate(&[s.clone()], &topo)[0].plan.clone();
+        let expected =
+            suffix_restart_plan(&s.tier_costs, s.n, s.k, s.include_rent, s.family, 2_000);
+        assert_eq!(drifted.cuts(), expected.cuts());
+        assert!(
+            drifted.r() > baseline.r(),
+            "the restarted cut must sit past the a-priori cut ({} vs {})",
+            drifted.r(),
+            baseline.r()
+        );
+        assert!(drifted.r() >= 2_000, "the already-streamed prefix is not re-planned");
+    }
+
+    #[test]
+    fn suffix_restart_scales_with_the_remaining_stream() {
+        let costs = demo_costs();
+        // the closed-form keep cut is a fixed fraction of the (remaining)
+        // stream, so a restart at s plans s + frac·(n−s)
+        let base = PlacementPlan::optimal(&costs, 2_000, 16, false);
+        let frac = base.r() as f64 / 2_000.0;
+        let restarted = suffix_restart_plan(&costs, 4_000, 16, false, PlanFamily::Keep, 3_000);
+        let expected = 3_000.0 + frac * 1_000.0;
+        let got = restarted.r() as f64;
+        assert!(
+            (got - expected).abs() <= 2.0,
+            "restart cut {got} vs expected {expected}"
+        );
+        // degenerate detections fall back to the a-priori plan
+        let at_end = suffix_restart_plan(&costs, 4_000, 16, false, PlanFamily::Keep, 4_000);
+        assert_eq!(at_end.cuts(), PlacementPlan::optimal(&costs, 4_000, 16, false).cuts());
+    }
+
+    #[test]
+    fn suffix_restart_preserves_the_migrate_schedule() {
+        let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 };
+        let b = PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 };
+        let costs = vec![a, b];
+        let plan = suffix_restart_plan(&costs, 2_000, 32, true, PlanFamily::Migrate, 1_000);
+        assert!(plan.migrates());
+        assert_eq!(plan.migrate_flags(), &[true]);
+        assert!(plan.r() >= 1_000);
+    }
+}

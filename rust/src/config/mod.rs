@@ -207,6 +207,7 @@ impl LaunchConfig {
 /// family = "keep"          # keep | migrate | auto (strategy family)
 /// backend = "sim"          # sim | fs:<root> | obj:<root>  (fresh root;
 ///                          #   ADR-003 fs, ADR-005 object store)
+/// adaptive = false         # drift-aware arbiter + re-derivation (ADR-007)
 /// seed = 7
 /// t_len = 256
 /// batch = 16
@@ -258,6 +259,10 @@ impl FleetLaunchConfig {
             t.get_path("fleet.backend").and_then(|v| v.as_str()).unwrap_or("sim"),
         )
         .map_err(|e| anyhow!("config: fleet.backend: {e}"))?;
+        let adaptive = t
+            .get_path("fleet.adaptive")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
         let n_docs = get_u64("fleet.workload.n_docs", 2_000)?.max(1);
         let k = get_u64("fleet.workload.k", 32)?.max(1);
         let heterogeneous = t
@@ -307,6 +312,7 @@ impl FleetLaunchConfig {
                 mode,
                 family,
                 backend,
+                adaptive,
             },
         })
     }
@@ -336,6 +342,7 @@ impl FleetLaunchConfig {
 /// backend = "sim"          # sim | fs:<root> | obj:<root>
 ///                          #   (fs = ADR-003, object store = ADR-005)
 /// family = "keep"          # keep | migrate | auto (strategy family)
+/// adaptive = false         # drift-aware arbiter + re-derivation (ADR-007)
 /// ```
 #[derive(Debug, Clone)]
 pub struct EngineDemoConfig {
@@ -353,6 +360,9 @@ pub struct EngineDemoConfig {
     pub backend: String,
     /// Strategy family the demo sessions run (keep | migrate | auto).
     pub family: PlanFamily,
+    /// Run under the drift-aware [`crate::adaptive::AdaptiveArbiter`] with
+    /// the drift→re-derivation trigger armed (ADR-007).
+    pub adaptive: bool,
 }
 
 impl EngineDemoConfig {
@@ -383,6 +393,10 @@ impl EngineDemoConfig {
                 t.get_path("engine.family").and_then(|v| v.as_str()).unwrap_or("keep"),
             )
             .map_err(|e| anyhow!("config: engine.family: {e}"))?,
+            adaptive: t
+                .get_path("engine.adaptive")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
         }
         .normalized()
     }
@@ -608,6 +622,18 @@ heterogeneous = false
         assert!(
             FleetLaunchConfig::from_toml("[fleet.workload]\neconomy = \"x\"\n").is_err()
         );
+    }
+
+    #[test]
+    fn fleet_and_engine_adaptive_keys() {
+        let d = FleetLaunchConfig::from_toml("").unwrap();
+        assert!(!d.config.adaptive);
+        let c = FleetLaunchConfig::from_toml("[fleet]\nadaptive = true\n").unwrap();
+        assert!(c.config.adaptive);
+        let e = EngineDemoConfig::from_toml("").unwrap();
+        assert!(!e.adaptive);
+        let e = EngineDemoConfig::from_toml("[engine]\nadaptive = true\n").unwrap();
+        assert!(e.adaptive);
     }
 
     #[test]

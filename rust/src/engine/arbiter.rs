@@ -65,6 +65,14 @@ pub struct SessionSnapshot {
     /// that tier for good — its demand there collapses to what it still
     /// physically holds, and the freed slots are re-lent.
     pub fired: Vec<bool>,
+    /// Documents admitted into the running top-K so far — the realized
+    /// admission curve the ADR-007 estimator tracks.
+    pub admissions: u64,
+    /// Index at which the session's drift detector flagged the realized
+    /// admission curve (`None` = still tracking the a-priori k/i law).
+    /// Drift-aware arbiters re-derive this session's cuts from the
+    /// detection index; others ignore it.
+    pub drift: Option<u64>,
 }
 
 impl SessionSnapshot {
@@ -92,6 +100,8 @@ impl SessionSnapshot {
             observed: 0,
             in_use: vec![0; tiers],
             fired: vec![false; tiers.saturating_sub(1)],
+            admissions: 0,
+            drift: None,
         }
     }
 }
@@ -132,6 +142,12 @@ pub trait Arbiter: Send {
         sessions: &[SessionSnapshot],
         topology: &TierTopology,
     ) -> Vec<PlanAssignment>;
+
+    /// Reward hook (ADR-007): the engine reports every finished session's
+    /// final snapshot and realized attributed ledger cost — the feedback
+    /// signal learning arbiters (e.g. the bandit in
+    /// `crate::adaptive::AdaptiveArbiter`) train on. Default: ignore.
+    fn on_stream_finished(&self, _session: &SessionSnapshot, _realized_cost: f64) {}
 }
 
 /// Demand-proportional quota allocation with largest-remainder rounding —
@@ -151,68 +167,84 @@ impl Arbiter for ProportionalArbiter {
         sessions: &[SessionSnapshot],
         topology: &TierTopology,
     ) -> Vec<PlanAssignment> {
-        let m = topology.num_tiers();
         let unconstrained: Vec<PlacementPlan> = sessions
             .iter()
             .map(|s| {
                 PlacementPlan::optimal_family(&s.tier_costs, s.n, s.k, s.include_rent, s.family)
             })
             .collect();
-        let mut plans = unconstrained.clone();
-        let mut demands: Vec<Vec<u64>> = vec![vec![0; m]; sessions.len()];
-        let mut quotas: Vec<Vec<Option<u64>>> = vec![vec![None; m]; sessions.len()];
-        // hot → cold: each clamp pushes displaced load into colder bands,
-        // which the next tier's demand computation then sees.
-        for tier in topology.capacitated() {
-            let cap = topology.tier(tier).capacity.unwrap_or(usize::MAX) as u64;
-            // time-phased lending: a session that already executed its
-            // changeover demotion out of `tier` holds (and will hold) only
-            // its residual residents there — never the full min(band, K);
-            // everyone else's demand floors at what they currently hold so
-            // a quota shrink never promises slots that are not free.
-            let tier_demands: Vec<u64> = plans
-                .iter()
-                .zip(sessions.iter())
-                .map(|(p, s)| {
-                    let held = s.in_use.get(tier.0).copied().unwrap_or(0);
-                    // a pinned-cold (degraded-admission) session never
-                    // places off the sink, so — like a fired changeover —
-                    // it demands only what it already holds
-                    if s.pinned_cold || s.fired.get(tier.0).copied().unwrap_or(false) {
-                        held
-                    } else {
-                        p.demand(tier).max(held)
-                    }
-                })
-                .collect();
-            let alloc = allocate_proportional(cap, &tier_demands);
-            for (i, (&q, &d)) in alloc.iter().zip(tier_demands.iter()).enumerate() {
-                demands[i][tier.0] = d;
-                quotas[i][tier.0] = Some(q);
-                plans[i].clamp_tier_to_quota(tier, q);
-            }
-        }
-        sessions
+        allocate_assignments(sessions, topology, unconstrained)
+    }
+}
+
+/// Capacity allocation over per-session unconstrained plans: proportional
+/// largest-remainder quotas per capacitated tier, budget clamps, and the
+/// final [`PlanAssignment`] assembly. This is everything of
+/// [`ProportionalArbiter`] past the plan derivation, factored out so
+/// strategies that derive plans differently (the drift-aware
+/// `crate::adaptive::AdaptiveArbiter`) share the exact same quota
+/// semantics — including time-phased lending and the pinned-cold /
+/// fired-boundary demand collapses.
+pub fn allocate_assignments(
+    sessions: &[SessionSnapshot],
+    topology: &TierTopology,
+    unconstrained: Vec<PlacementPlan>,
+) -> Vec<PlanAssignment> {
+    let m = topology.num_tiers();
+    let mut plans = unconstrained.clone();
+    let mut demands: Vec<Vec<u64>> = vec![vec![0; m]; sessions.len()];
+    let mut quotas: Vec<Vec<Option<u64>>> = vec![vec![None; m]; sessions.len()];
+    // hot → cold: each clamp pushes displaced load into colder bands,
+    // which the next tier's demand computation then sees.
+    for tier in topology.capacitated() {
+        let cap = topology.tier(tier).capacity.unwrap_or(usize::MAX) as u64;
+        // time-phased lending: a session that already executed its
+        // changeover demotion out of `tier` holds (and will hold) only
+        // its residual residents there — never the full min(band, K);
+        // everyone else's demand floors at what they currently hold so
+        // a quota shrink never promises slots that are not free.
+        let tier_demands: Vec<u64> = plans
             .iter()
-            .zip(unconstrained)
-            .zip(plans)
-            .zip(demands.into_iter().zip(quotas))
-            .map(|(((s, unc), plan), (demand, quota))| {
-                let analytic_unconstrained = unc.analytic_cost(&s.tier_costs, s.include_rent);
-                let analytic_budgeted = plan.analytic_cost(&s.tier_costs, s.include_rent);
-                PlanAssignment {
-                    id: s.id,
-                    family: plan.family(),
-                    unconstrained: unc,
-                    plan,
-                    demand,
-                    quota,
-                    analytic_unconstrained,
-                    analytic_budgeted,
+            .zip(sessions.iter())
+            .map(|(p, s)| {
+                let held = s.in_use.get(tier.0).copied().unwrap_or(0);
+                // a pinned-cold (degraded-admission) session never
+                // places off the sink, so — like a fired changeover —
+                // it demands only what it already holds
+                if s.pinned_cold || s.fired.get(tier.0).copied().unwrap_or(false) {
+                    held
+                } else {
+                    p.demand(tier).max(held)
                 }
             })
-            .collect()
+            .collect();
+        let alloc = allocate_proportional(cap, &tier_demands);
+        for (i, (&q, &d)) in alloc.iter().zip(tier_demands.iter()).enumerate() {
+            demands[i][tier.0] = d;
+            quotas[i][tier.0] = Some(q);
+            plans[i].clamp_tier_to_quota(tier, q);
+        }
     }
+    sessions
+        .iter()
+        .zip(unconstrained)
+        .zip(plans)
+        .zip(demands.into_iter().zip(quotas))
+        .map(|(((s, unc), plan), (demand, quota))| {
+            let analytic_unconstrained = unc.analytic_cost(&s.tier_costs, s.include_rent);
+            let analytic_budgeted = plan.analytic_cost(&s.tier_costs, s.include_rent);
+            PlanAssignment {
+                id: s.id,
+                family: plan.family(),
+                unconstrained: unc,
+                plan,
+                demand,
+                quota,
+                analytic_unconstrained,
+                analytic_budgeted,
+            }
+        })
+        .collect()
 }
 
 /// The frozen-verdict arbiter: always returns a pre-computed assignment

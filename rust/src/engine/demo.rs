@@ -207,6 +207,11 @@ pub fn run_engine_demo(
     if let Some(durable) = backend.open_fresh(costs.clone(), false, "engine demo")? {
         builder = builder.backend(durable);
     }
+    if demo.adaptive {
+        builder = builder
+            .arbiter(Box::new(crate::adaptive::AdaptiveArbiter::new()))
+            .adaptive(true);
+    }
     let engine = builder.build()?;
 
     events.push(format!(
@@ -286,6 +291,13 @@ pub fn run_engine_demo(
         }
     }
     engine.settle_rent(1.0)?;
+    if demo.adaptive {
+        events.push(format!(
+            "adaptive: {} drift detections, {} re-derivations",
+            engine.drift_detections(),
+            engine.drift_rederivations(),
+        ));
+    }
 
     let mut rows = vec![SessionRow {
         id: closer_id,

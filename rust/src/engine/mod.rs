@@ -61,8 +61,10 @@ pub mod session;
 pub mod topology;
 
 pub use arbiter::{
-    Arbiter, PlanAssignment, ProportionalArbiter, SessionSnapshot, StaticArbiter,
+    allocate_assignments, Arbiter, PlanAssignment, ProportionalArbiter, SessionSnapshot,
+    StaticArbiter,
 };
+pub use crate::adaptive::AdaptiveArbiter;
 pub use demo::{
     reconcile_backends, run_engine_demo, BackendSpec, EngineDemoReport, ReconcileReport,
 };
@@ -113,6 +115,17 @@ struct Shared {
     /// Checkpoints the policy has triggered (not counting explicit
     /// [`Engine::checkpoint`] calls).
     auto_checkpoints: u64,
+    /// Adaptive placement (ADR-007): when set, a session's drift
+    /// detection triggers an immediate re-arbitration so a drift-aware
+    /// arbiter can re-derive its cuts. The estimator/detector run either
+    /// way; this only arms the trigger.
+    adaptive: bool,
+    /// Sessions whose realized admission curve left the a-priori
+    /// envelope (counted whether or not the engine is adaptive).
+    drift_detections: u64,
+    /// Drift detections that triggered a re-arbitration (adaptive
+    /// engines only).
+    drift_rederivations: u64,
 }
 
 /// Lock the shared engine state, recovering from mutex poisoning: a
@@ -308,6 +321,7 @@ pub struct EngineBuilder {
     arbiter: Box<dyn Arbiter>,
     charge_rent: bool,
     checkpoint_factor: u64,
+    adaptive: bool,
 }
 
 impl Default for EngineBuilder {
@@ -321,6 +335,7 @@ impl Default for EngineBuilder {
             // several acceptance tests inspect raw journal contents. The
             // serve layer turns this on (default factor 8 in serve.toml).
             checkpoint_factor: 0,
+            adaptive: false,
         }
     }
 }
@@ -358,6 +373,18 @@ impl EngineBuilder {
     /// with 8). Irrelevant for memory-only backends.
     pub fn checkpoint_factor(mut self, factor: u64) -> Self {
         self.checkpoint_factor = factor;
+        self
+    }
+
+    /// Adaptive placement (ADR-007): when enabled, a session whose
+    /// realized admission curve drifts from the a-priori secretary law
+    /// triggers an immediate re-arbitration, so a drift-aware arbiter
+    /// (pair this with [`AdaptiveArbiter`]) re-derives its cuts from the
+    /// detection index. The per-session estimator and detector run
+    /// regardless — this flag only arms the re-arbitration trigger, so a
+    /// non-adaptive engine pays nothing beyond the O(1) tracking.
+    pub fn adaptive(mut self, adaptive: bool) -> Self {
+        self.adaptive = adaptive;
         self
     }
 
@@ -400,6 +427,9 @@ impl EngineBuilder {
                 poison_recoveries: 0,
                 checkpoint_factor: self.checkpoint_factor,
                 auto_checkpoints: 0,
+                adaptive: self.adaptive,
+                drift_detections: 0,
+                drift_rederivations: 0,
             })),
         })
     }
@@ -533,6 +563,19 @@ impl Engine {
         lock_shared(&self.shared).auto_checkpoints
     }
 
+    /// Sessions whose realized admission curve left the a-priori envelope
+    /// (the ADR-007 drift detector; counted on every engine, adaptive or
+    /// not).
+    pub fn drift_detections(&self) -> u64 {
+        lock_shared(&self.shared).drift_detections
+    }
+
+    /// Drift detections that triggered a plan re-derivation
+    /// ([`EngineBuilder::adaptive`] engines only).
+    pub fn drift_rederivations(&self) -> u64 {
+        lock_shared(&self.shared).drift_rederivations
+    }
+
     pub fn arbiter_name(&self) -> String {
         lock_shared(&self.shared).arbiter.name()
     }
@@ -558,17 +601,27 @@ impl StreamSession {
     /// Observe the next document under the session's (arbitrated) plan.
     /// A changeover demotion firing mid-observation triggers an immediate
     /// re-arbitration: the capacity it freed is re-lent to the surviving
-    /// sessions on the spot (time-phased quota lending).
+    /// sessions on the spot (time-phased quota lending). So does the
+    /// session's drift detector firing, when the engine was built with
+    /// [`EngineBuilder::adaptive`] — the re-run arbiter sees the detection
+    /// index in the snapshot and can re-derive the cuts (ADR-007).
     pub fn observe(&mut self, score: f64) -> Result<()> {
         let mut g = lock_shared(&self.shared);
-        let fired = {
+        let events = {
             let Shared { backend, sessions, .. } = &mut *g;
             let s = sessions
                 .get_mut(&self.id)
                 .ok_or_else(|| anyhow!("session {} is closed", self.id))?;
             s.observe(backend.as_mut(), score)?
         };
-        if fired {
+        if events.drift {
+            g.drift_detections += 1;
+        }
+        let rederive = events.drift && g.adaptive;
+        if rederive {
+            g.drift_rederivations += 1;
+        }
+        if events.fired || rederive {
             g.rearbitrate();
         }
         g.maybe_auto_checkpoint()
@@ -642,14 +695,19 @@ impl StreamSession {
 
     fn finish_inner(self, release: bool) -> Result<SessionOutcome> {
         let mut g = lock_shared(&self.shared);
-        let Shared { backend, sessions, .. } = &mut *g;
+        let Shared { backend, sessions, arbiter, .. } = &mut *g;
         let mut s = sessions
             .remove(&self.id)
             .ok_or_else(|| anyhow!("session {} is closed", self.id))?;
+        let snapshot = s.snapshot();
         let outcome = s.finish(backend.as_mut())?;
         if release {
             s.release(backend.as_mut())?;
         }
+        // reward signal for learning arbiters (ADR-007): the realized
+        // attributed cost of the finished stream, against its final
+        // snapshot (which carries the family and drift state)
+        arbiter.on_stream_finished(&snapshot, backend.stream_ledger(self.id).total());
         g.rearbitrate();
         g.maybe_auto_checkpoint()?;
         Ok(outcome)
@@ -975,6 +1033,76 @@ mod tests {
         assert!(ledger.migration_total() > 0.0, "the changeover demotion fired");
         assert_eq!(out.hot_reads(), 0, "post-changeover reads are all cold");
         assert_eq!(engine.resident_len(TierId::A), 0, "hot tier handed back");
+    }
+
+    #[test]
+    fn drift_rederivation_respects_fired_boundary_clamp() {
+        use crate::policy::PlanFamily;
+        // rent-dominated economy with an interior DO_MIGRATE optimum: the
+        // changeover fires mid-stream, and the suffix-restart cut a later
+        // drift detection derives necessarily lands past it
+        let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 };
+        let b = PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 };
+        let engine = Engine::builder()
+            .topology(TierTopology::two_tier(a, b).with_capacity(TierId::A, Some(64)))
+            .arbiter(Box::new(AdaptiveArbiter::new()))
+            .adaptive(true)
+            .build()
+            .unwrap();
+        let mut s = engine
+            .open_stream(
+                SessionSpec::new(400, 6)
+                    .with_costs(vec![a, b])
+                    .with_family(PlanFamily::Migrate),
+            )
+            .unwrap();
+        // phase 1 — secretary-conformant random scores: the realized
+        // admission curve tracks the a-priori law while the changeover
+        // boundary fires on schedule
+        let mut rng = Rng::new(11);
+        let mut fired_cut = None;
+        while fired_cut.is_none() {
+            s.observe(rng.next_f64()).unwrap();
+            if engine.stream_ledger(s.id()).migration_total() > 0.0 {
+                fired_cut = Some(s.plan().unwrap().r());
+            }
+            assert!(!s.done(), "the changeover never fired");
+        }
+        let fired_cut = fired_cut.unwrap();
+        assert!(fired_cut > 0);
+        assert_eq!(engine.drift_detections(), 0, "random phase must not drift");
+        // phase 2 — adversarial shift: every score beats the running
+        // threshold, the curve leaves the envelope, and the adaptive
+        // engine re-derives a suffix-restart plan whose cut sits past the
+        // already-executed boundary
+        let mut boost = 1e6;
+        while engine.drift_detections() == 0 {
+            assert!(!s.done(), "the shift was never detected");
+            boost += 1.0;
+            s.observe(boost).unwrap();
+        }
+        assert_eq!(engine.drift_rederivations(), 1);
+        // the bugfix under test (ADR-004 × ADR-007): apply_plan must clamp
+        // the re-derived cut back to the cut the boundary fired at — a
+        // re-opened changeover would place hot again with no second
+        // demotion coming
+        assert_eq!(
+            s.plan().unwrap().r(),
+            fired_cut,
+            "a drift re-derivation re-opened a fired changeover"
+        );
+        assert_eq!(engine.resident_len(TierId::A), 0);
+        while !s.done() {
+            boost += 1.0;
+            s.observe(boost).unwrap();
+        }
+        assert_eq!(
+            engine.resident_len(TierId::A),
+            0,
+            "post-clamp placements must all stay cold"
+        );
+        engine.settle_rent(1.0).unwrap();
+        s.finish().unwrap();
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! index`) so many sessions can share one backend; every operation is
 //! attributed to the owning session for per-stream ledger mirroring.
 
+use crate::adaptive::{AdmissionEstimator, DriftDetector};
 use crate::cost::PerDocCosts;
 use crate::policy::{MigrationOrder, PlacementPlan, PlacementPolicy, PlanFamily};
 use crate::storage::{StorageBackend, TierId};
@@ -139,6 +140,17 @@ impl SessionOutcome {
     }
 }
 
+/// What one plan-mode observation did (returned to the engine wrapper,
+/// which decides whether to re-arbitrate).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct ObserveEvents {
+    /// A changeover demotion fired — capacity was freed.
+    pub fired: bool,
+    /// The drift detector flagged this stream on *this* observation
+    /// (single-shot: never set again for the session).
+    pub drift: bool,
+}
+
 /// Internal per-session runtime state (owned by the engine).
 pub(crate) struct SessionState {
     pub id: u64,
@@ -163,6 +175,11 @@ pub(crate) struct SessionState {
     /// re-opens: re-arbitrated plans are clamped back to the fired cut.
     fired: Vec<Option<u64>>,
     tracker: BoundedTopK,
+    /// Realized admission curve vs the a-priori k/i law (ADR-007). Always
+    /// on — O(1) per observation — whether or not the engine is adaptive.
+    estimator: AdmissionEstimator,
+    /// Sequential drift test over the estimator (single-shot per session).
+    detector: DriftDetector,
     next_index: u64,
     /// This session's resident count per tier under proactive placement.
     in_use: Vec<usize>,
@@ -208,6 +225,8 @@ impl SessionState {
             quotas: vec![None; tiers],
             fired: vec![None; tiers - 1],
             tracker: BoundedTopK::new(k as usize),
+            estimator: AdmissionEstimator::new(k),
+            detector: DriftDetector::new(n, k),
             next_index: 0,
             in_use: vec![0; tiers],
             policy_driven: false,
@@ -248,6 +267,8 @@ impl SessionState {
             observed: self.next_index,
             in_use: self.in_use.iter().map(|&u| u as u64).collect(),
             fired: self.fired.iter().map(|f| f.is_some()).collect(),
+            admissions: self.estimator.admitted(),
+            drift: self.detector.detected(),
         }
     }
 
@@ -273,14 +294,21 @@ impl SessionState {
     }
 
     /// Observe the next document under the session's plan (plan/naive
-    /// modes). Must be called in stream order. Returns `true` when a
+    /// modes). Must be called in stream order. The outcome reports when a
     /// changeover demotion fired — capacity was freed and the caller
-    /// should re-arbitrate (time-phased quota lending).
-    pub fn observe(&mut self, backend: &mut dyn StorageBackend, score: f64) -> Result<bool> {
+    /// should re-arbitrate (time-phased quota lending) — and when the
+    /// drift detector first flagged the realized admission curve (an
+    /// adaptive engine re-arbitrates on that too, ADR-007).
+    pub fn observe(
+        &mut self,
+        backend: &mut dyn StorageBackend,
+        score: f64,
+    ) -> Result<ObserveEvents> {
         let i = self.begin_observation(backend)?;
         let at = i as f64 / self.n as f64;
+        let mut admitted = true;
         match self.tracker.offer(Scored::new(i, score)) {
-            Eviction::Rejected => {}
+            Eviction::Rejected => admitted = false,
             Eviction::Accepted => self.write_planned(backend, i, at)?,
             Eviction::Replaced { victim } => {
                 let vgid = self.gid(victim.index);
@@ -291,9 +319,11 @@ impl SessionState {
                 self.write_planned(backend, i, at)?;
             }
         }
+        self.estimator.record(admitted);
+        let drift = self.detector.check(&self.estimator).is_some();
         let fired = self.fire_due_boundaries(backend, i, at)?;
         self.record_series_point();
-        Ok(fired)
+        Ok(ObserveEvents { fired, drift })
     }
 
     /// Execute every due changeover demotion of the plan (the DO_MIGRATE

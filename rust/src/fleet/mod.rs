@@ -37,7 +37,7 @@ pub use arbiter::{arbitrate, arbitrate_with, Arbitration, StreamPlan};
 pub use capacity::allocate_proportional;
 pub use report::{FleetReport, StreamReport};
 pub use scheduler::{run_fleet, FleetConfig, FleetMode};
-pub use stream::{generate_series, SeriesProfile, StreamSpec, COLD, HOT};
+pub use stream::{generate_series, ScoreShift, SeriesProfile, StreamSpec, COLD, HOT};
 
 use crate::cost::{CostModel, PerDocCosts};
 
@@ -133,6 +133,45 @@ pub fn rent_dominated_fleet(
         .collect()
 }
 
+/// Build a deterministic drift-demo fleet of `m` streams (experiment
+/// E-DRIFT, ADR-007). Every stream runs the class-0 balanced economy of
+/// [`demo_fleet`] (interior `r*/N ≈ 0.57`, rent excluded) with the usual
+/// salted profile mix; with `shift_at = Some(s)` each stream's scores get
+/// a flat `+1000.0` boost from document `s` onward, so post-shift
+/// documents dominate the top-K and the a-priori secretary admission law
+/// breaks mid-stream. `shift_at = None` is the no-drift control fleet
+/// (identical economics and seeds, no shift).
+pub fn drift_fleet(
+    m: usize,
+    n_per_stream: u64,
+    k_base: u64,
+    shift_at: Option<u64>,
+    salt: u64,
+) -> Vec<StreamSpec> {
+    let a = PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.0 };
+    let b = PerDocCosts { write: 3.0, read: 0.5, rent_window: 0.0 };
+    (0..m)
+        .map(|i| {
+            let n = n_per_stream.max(1);
+            let k = k_base.clamp(1, n);
+            let profile = match (i as u64 + salt) % 3 {
+                0 => SeriesProfile::Mixed { p_oscillatory: 0.3 },
+                1 => SeriesProfile::Oscillatory { period: 32.0 },
+                _ => SeriesProfile::Noisy { level: 12.0 },
+            };
+            let spec = StreamSpec::new(
+                i as u64,
+                CostModel::new(n, k, a, b).with_rent(false),
+                profile,
+            );
+            match shift_at {
+                Some(at) => spec.with_shift(at, 1000.0),
+                None => spec,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +198,25 @@ mod tests {
     fn demo_fleet_demands_are_positive() {
         for s in demo_fleet(6, 500, 8, true, 2) {
             assert!(crate::cost::hot_demand(&s.model, false) >= 1, "stream {}", s.id);
+        }
+    }
+
+    #[test]
+    fn drift_fleet_shapes_and_shift() {
+        let shifted = drift_fleet(4, 1_000, 8, Some(400), 1);
+        assert_eq!(shifted.len(), 4);
+        for (i, s) in shifted.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+            assert!(!s.model.include_rent);
+            assert_eq!(s.shift, Some(ScoreShift { at: 400, boost: 1000.0 }));
+        }
+        let control = drift_fleet(4, 1_000, 8, None, 1);
+        assert!(control.iter().all(|s| s.shift.is_none()));
+        // identical apart from the shift, so the control is a fair baseline
+        for (a, b) in shifted.iter().zip(control.iter()) {
+            assert_eq!(a.profile, b.profile);
+            assert_eq!(a.model.n, b.model.n);
+            assert_eq!(a.model.k, b.model.k);
         }
     }
 

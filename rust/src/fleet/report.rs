@@ -43,6 +43,10 @@ pub struct FleetReport {
     pub ledger: Ledger,
     /// High-water mark of hot-tier occupancy over the run.
     pub hot_peak: u64,
+    /// Sessions whose drift detector fired (counted on every run; ADR-007).
+    pub drift_detections: u64,
+    /// Drift-triggered re-arbitrations (only under `--adaptive`).
+    pub drift_rederivations: u64,
     pub docs_processed: u64,
     pub wall: Duration,
     pub throughput_docs_per_sec: f64,
@@ -123,6 +127,7 @@ impl FleetReport {
         format!(
             "fleet: {} streams, {} docs in {:.2?} ({:.0} docs/s, {} workers)\n\
              hot tier: capacity {} | peak occupancy {} | aggregate demand {}{}\n\
+             drift: {} detections | {} re-derivations\n\
              cost: measured ${:.4} (Σ per-stream ${:.4}) | thrash ${:.4} over {} demotions\n\
              ledger: {}",
             self.streams.len(),
@@ -134,6 +139,8 @@ impl FleetReport {
             self.hot_peak,
             self.arbitration.aggregate_demand,
             if self.arbitration.oversubscribed { " (OVERSUBSCRIBED)" } else { "" },
+            self.drift_detections,
+            self.drift_rederivations,
             self.total_cost(),
             self.per_stream_total(),
             self.ledger.migration_total(),

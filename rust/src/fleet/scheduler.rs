@@ -73,6 +73,9 @@ pub struct FleetConfig {
     /// backend (`fs:<root>`, ADR-003), or the S3-style object store
     /// (`obj:<root>`, ADR-005) — durable roots must be fresh.
     pub backend: BackendSpec,
+    /// Run the fleet under the drift-aware [`crate::adaptive::AdaptiveArbiter`]
+    /// with the engine's drift→re-derivation trigger armed (ADR-007).
+    pub adaptive: bool,
 }
 
 impl Default for FleetConfig {
@@ -87,6 +90,7 @@ impl Default for FleetConfig {
             mode: FleetMode::Arbitrated,
             family: PlanFamily::Keep,
             backend: BackendSpec::Sim,
+            adaptive: false,
         }
     }
 }
@@ -95,8 +99,11 @@ impl Default for FleetConfig {
 struct WorkerStream {
     id: u64,
     remaining: u64,
+    /// Documents already produced (the shift index is a produced-count).
+    produced: u64,
     rng: crate::util::Rng,
     profile: super::stream::SeriesProfile,
+    shift: Option<super::stream::ScoreShift>,
 }
 
 /// Per-stream RNG seed, independent of worker partitioning so results are
@@ -136,6 +143,11 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
     if let Some(durable) = config.backend.open_fresh(costs, charge_rent, "fleet")? {
         builder = builder.backend(durable);
     }
+    if config.adaptive {
+        builder = builder
+            .arbiter(Box::new(crate::adaptive::AdaptiveArbiter::new()))
+            .adaptive(true);
+    }
     let engine = builder.build()?;
     let naive = config.mode == FleetMode::Naive;
     let mut sessions: Vec<StreamSession> = engine.open_streams(
@@ -157,8 +169,10 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
             .map(|(_, s)| WorkerStream {
                 id: s.id,
                 remaining: s.model.n,
+                produced: 0,
                 rng: crate::util::Rng::new(stream_seed(config.seed, s.id)),
                 profile: s.profile,
+                shift: s.shift,
             })
             .collect();
         let tx = tx.clone();
@@ -179,7 +193,17 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
                             let mut out = Vec::with_capacity(take);
                             for _ in 0..take {
                                 let series = generate_series(ws.profile, t_len, &mut ws.rng);
-                                out.push((ws.id, scorer.score_series(&series)));
+                                let mut score = scorer.score_series(&series);
+                                // distribution shift in f32, before the f64
+                                // widening, so shifted runs stay bit-exact
+                                // regardless of worker partitioning
+                                if let Some(sh) = ws.shift {
+                                    if ws.produced >= sh.at {
+                                        score += sh.boost;
+                                    }
+                                }
+                                ws.produced += 1;
+                                out.push((ws.id, score));
                             }
                             ws.remaining -= take as u64;
                             produced += take as u64;
@@ -263,6 +287,8 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
         arbitration,
         ledger: engine.ledger(),
         hot_peak: engine.peak_occupancy(HOT) as u64,
+        drift_detections: engine.drift_detections(),
+        drift_rederivations: engine.drift_rederivations(),
         docs_processed: total_docs,
         wall,
         throughput_docs_per_sec: throughput,
@@ -344,6 +370,34 @@ mod tests {
         }
         let rel = (a.total_cost() - b.total_cost()).abs() / a.total_cost().max(1e-12);
         assert!(rel < 1e-9, "fleet totals diverged: rel {rel}");
+    }
+
+    #[test]
+    fn adaptive_fleet_detects_drift_and_stays_deterministic() {
+        // shifted streams trip their drift detectors; with ample hot
+        // capacity (m·k) the streams stay decoupled, so per-stream
+        // outcomes are bitwise identical across worker counts even with
+        // drift-triggered re-arbitrations in play (ADR-007)
+        let specs = crate::fleet::drift_fleet(3, 600, 8, Some(300), 11);
+        let mut cfg = tiny_config(FleetMode::Arbitrated, 24, 1);
+        cfg.adaptive = true;
+        let a = run_fleet(&specs, &cfg).unwrap();
+        cfg.workers = 3;
+        let b = run_fleet(&specs, &cfg).unwrap();
+        assert!(a.drift_detections > 0, "the shift must be detected");
+        assert_eq!(
+            a.drift_rederivations, a.drift_detections,
+            "adaptive fleets re-derive on every detection"
+        );
+        assert_eq!(a.drift_detections, b.drift_detections);
+        for (x, y) in a.streams.iter().zip(b.streams.iter()) {
+            assert_eq!(x.measured, y.measured, "stream {}", x.id);
+        }
+        // without --adaptive the detectors still count, but nothing re-derives
+        cfg.adaptive = false;
+        let plain = run_fleet(&specs, &cfg).unwrap();
+        assert!(plain.drift_detections > 0);
+        assert_eq!(plain.drift_rederivations, 0);
     }
 
     #[test]

@@ -58,6 +58,20 @@ pub fn generate_series(profile: SeriesProfile, t_len: usize, rng: &mut Rng) -> V
     }
 }
 
+/// A mid-stream distribution shift: from document index `at` onward the
+/// stream's scores get a flat additive `boost` (applied in the scorer's
+/// f32 domain, before widening to f64, so shifted runs stay bit-exact
+/// across worker counts). Drives the E-DRIFT experiment (ADR-007): a
+/// large boost makes late documents dominate the top-K, invalidating the
+/// a-priori secretary admission law the static cuts were derived from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoreShift {
+    /// First document index (0-based, per stream) the boost applies to.
+    pub at: u64,
+    /// Additive score boost for documents at or after `at`.
+    pub boost: f32,
+}
+
 /// Full specification of one fleet stream.
 #[derive(Debug, Clone)]
 pub struct StreamSpec {
@@ -67,11 +81,19 @@ pub struct StreamSpec {
     pub model: CostModel,
     /// Interestingness profile driving the synthetic score stream.
     pub profile: SeriesProfile,
+    /// Optional mid-stream distribution shift (E-DRIFT workloads).
+    pub shift: Option<ScoreShift>,
 }
 
 impl StreamSpec {
     pub fn new(id: u64, model: CostModel, profile: SeriesProfile) -> Self {
-        Self { id, model, profile }
+        Self { id, model, profile, shift: None }
+    }
+
+    /// Apply a [`ScoreShift`] at document index `at` with additive `boost`.
+    pub fn with_shift(mut self, at: u64, boost: f32) -> Self {
+        self.shift = Some(ScoreShift { at, boost });
+        self
     }
 
     /// The engine session spec for this stream (fleet mode decides naive).
@@ -159,6 +181,14 @@ mod tests {
             assert_eq!(s.len(), 128);
             assert!(s.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn with_shift_records_the_shift() {
+        let spec = StreamSpec::new(0, model(100, 5), SeriesProfile::Noisy { level: 1.0 });
+        assert_eq!(spec.shift, None);
+        let shifted = spec.with_shift(40, 1000.0);
+        assert_eq!(shifted.shift, Some(ScoreShift { at: 40, boost: 1000.0 }));
     }
 
     #[test]

@@ -53,7 +53,14 @@
 //! long-running, multi-tenant HTTP placement service (`shptier serve`)
 //! with quota-class admission control, per-tenant invoicing from the
 //! attributed ledgers, and journal-backed crash recovery (ADR-006).
+//! [`adaptive`] closes the observe→estimate→re-plan loop the paper's
+//! a-priori model leaves open: per-session admission-curve estimation,
+//! drift detection under a false-positive budget, suffix-restart cut
+//! re-derivation through the same re-arbitration path, and a bandit over
+//! plan families (ADR-007; `--adaptive` on `shptier engine|fleet`,
+//! experiment E-DRIFT).
 
+pub mod adaptive;
 pub mod benchkit;
 pub mod config;
 pub mod cost;

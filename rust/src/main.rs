@@ -228,16 +228,20 @@ fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     if let Some(backend) = flags.get("backend") {
         launch.config.backend = shptier::engine::BackendSpec::parse(backend)?;
     }
+    if flags.contains_key("adaptive") {
+        launch.config.adaptive = true;
+    }
 
     println!(
         "launching fleet: {} streams, hot capacity {}, {} workers, mode {:?}, \
-         family {}, backend '{}'",
+         family {}, backend '{}'{}",
         launch.specs.len(),
         launch.config.hot_capacity,
         launch.config.workers,
         launch.config.mode,
         launch.config.family.label(),
-        launch.config.backend.label()
+        launch.config.backend.label(),
+        if launch.config.adaptive { ", adaptive" } else { "" }
     );
     let report = shptier::fleet::run_fleet(&launch.specs, &launch.config)?;
     println!("{}", report.table().render());
@@ -289,6 +293,9 @@ fn cmd_engine(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     }
     if let Some(f) = flags.get("family") {
         demo.family = shptier::policy::PlanFamily::parse(f)?;
+    }
+    if flags.contains_key("adaptive") {
+        demo.adaptive = true;
     }
     // one shared rule set for flags and TOML (clamp soft knobs, reject
     // nonsensical ones)
@@ -463,12 +470,12 @@ USAGE:
   shptier run [--config configs/case_study_2.toml]
   shptier fleet [--streams M] [--docs N] [--k K] [--capacity C]
                 [--workers W] [--mode arbitrated|naive]
-                [--family keep|migrate|auto]
+                [--family keep|migrate|auto] [--adaptive]
                 [--backend sim|fs:<root>|obj:<root>]
                 [--config configs/fleet.toml]
   shptier engine [--streams M] [--docs N] [--k K] [--tiers 2..4]
                  [--capacity C] [--backend sim|fs:<root>|obj:<root>]
-                 [--reconcile] [--family keep|migrate|auto]
+                 [--reconcile] [--family keep|migrate|auto] [--adaptive]
                  [--config configs/engine.toml]
   shptier serve --config configs/serve.toml [--backend sim|fs:<root>|obj:<root>]
   shptier serve-soak [--backend sim|fs:<root>] [--sessions 1000]

@@ -47,15 +47,24 @@ impl Client {
         self
     }
 
-    fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json), String> {
+    fn call(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+        bearer: Option<&str>,
+    ) -> Result<(u16, Json), String> {
         let stream = TcpStream::connect(self.addr).map_err(|e| format!("connect: {e}"))?;
         stream.set_read_timeout(Some(self.timeout)).map_err(|e| format!("timeout: {e}"))?;
         stream.set_write_timeout(Some(self.timeout)).map_err(|e| format!("timeout: {e}"))?;
         let mut stream = stream;
         let payload = body.map(|j| j.dump()).unwrap_or_default();
+        let auth = bearer
+            .map(|t| format!("Authorization: Bearer {t}\r\n"))
+            .unwrap_or_default();
         write!(
             stream,
-            "{method} {path} HTTP/1.1\r\nHost: shptier\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+            "{method} {path} HTTP/1.1\r\nHost: shptier\r\n{auth}Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
             payload.len()
         )
         .map_err(|e| format!("send: {e}"))?;
@@ -70,8 +79,14 @@ impl Client {
         Ok((resp.status, json))
     }
 
-    fn expect_200(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json, String> {
-        let (status, json) = self.call(method, path, body)?;
+    fn expect_200(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+        bearer: Option<&str>,
+    ) -> Result<Json, String> {
+        let (status, json) = self.call(method, path, body, bearer)?;
         if status == 200 {
             Ok(json)
         } else {
@@ -104,7 +119,7 @@ impl Client {
 
     /// Open with full control over the request payload.
     pub fn open_request(&self, req: &OpenRequest) -> Result<OpenOutcome, String> {
-        let (status, json) = self.call("POST", "/v1/streams", Some(&req.to_json()))?;
+        let (status, json) = self.call("POST", "/v1/streams", Some(&req.to_json()), None)?;
         if status == 200 {
             return Ok(OpenOutcome::Admitted(OpenResponse::from_json(&json)?));
         }
@@ -117,29 +132,38 @@ impl Client {
     pub fn observe(&self, stream: &str, scores: &[f64]) -> Result<ObserveResponse, String> {
         let body = ObserveRequest { scores: scores.to_vec() }.to_json();
         let json =
-            self.expect_200("POST", &format!("/v1/streams/{stream}/observe"), Some(&body))?;
+            self.expect_200("POST", &format!("/v1/streams/{stream}/observe"), Some(&body), None)?;
         ObserveResponse::from_json(&json)
     }
 
     /// Finish the stream: consumer-read the top-K, close, bill.
     pub fn finish(&self, stream: &str) -> Result<FinishResponse, String> {
-        let json = self.expect_200("POST", &format!("/v1/streams/{stream}/finish"), None)?;
+        let json = self.expect_200("POST", &format!("/v1/streams/{stream}/finish"), None, None)?;
         FinishResponse::from_json(&json)
     }
 
-    pub fn invoice(&self, tenant: &str) -> Result<Invoice, String> {
-        let json = self.expect_200("GET", &format!("/v1/tenants/{tenant}/invoice"), None)?;
+    /// Read a tenant's invoice. The bearer `token` must belong to that
+    /// same tenant — the server answers 403 otherwise.
+    pub fn invoice(&self, tenant: &str, token: &str) -> Result<Invoice, String> {
+        let json = self.expect_200(
+            "GET",
+            &format!("/v1/tenants/{tenant}/invoice"),
+            None,
+            Some(token),
+        )?;
         Invoice::from_json(&json)
     }
 
-    pub fn status(&self) -> Result<Status, String> {
-        let json = self.expect_200("GET", "/v1/status", None)?;
+    /// Read the server status report. Any configured tenant's token is
+    /// accepted (status is fleet-wide, not tenant-scoped).
+    pub fn status(&self, token: &str) -> Result<Status, String> {
+        let json = self.expect_200("GET", "/v1/status", None, Some(token))?;
         Status::from_json(&json)
     }
 
     /// Ask the server to drain and shut down (`shptier serve` exits
     /// after its next poll of the flag).
     pub fn request_shutdown(&self) -> Result<(), String> {
-        self.expect_200("POST", "/v1/shutdown", None).map(|_| ())
+        self.expect_200("POST", "/v1/shutdown", None, None).map(|_| ())
     }
 }

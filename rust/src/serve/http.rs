@@ -20,6 +20,9 @@ pub const MAX_HEAD_BYTES: usize = 8 * 1024;
 pub struct Request {
     pub method: String,
     pub path: String,
+    /// The token from an `Authorization: Bearer …` header, if one was
+    /// sent. Routes that require auth decide what its absence means.
+    pub bearer: Option<String>,
     pub body: Vec<u8>,
 }
 
@@ -92,6 +95,7 @@ pub fn read_request<R: Read>(r: &mut R, max_body: usize) -> Result<Request, Read
     }
 
     let mut content_length: usize = 0;
+    let mut bearer: Option<String> = None;
     for line in lines {
         if line.is_empty() {
             continue;
@@ -104,6 +108,15 @@ pub fn read_request<R: Read>(r: &mut R, max_body: usize) -> Result<Request, Read
                 .trim()
                 .parse::<usize>()
                 .map_err(|_| ReadError::BadRequest(format!("bad content-length {value:?}")))?;
+        } else if name.trim().eq_ignore_ascii_case("authorization") {
+            // Only the Bearer scheme is meaningful here; any other
+            // scheme leaves `bearer` unset and the route answers 401.
+            let value = value.trim();
+            if let Some(scheme) = value.get(..7) {
+                if scheme.eq_ignore_ascii_case("bearer ") {
+                    bearer = Some(value[7..].trim().to_string());
+                }
+            }
         }
     }
     if content_length > max_body {
@@ -125,7 +138,7 @@ pub fn read_request<R: Read>(r: &mut R, max_body: usize) -> Result<Request, Read
         body.extend_from_slice(&chunk[..n]);
     }
 
-    Ok(Request { method: method.to_string(), path: path.to_string(), body })
+    Ok(Request { method: method.to_string(), path: path.to_string(), bearer, body })
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
@@ -137,6 +150,8 @@ pub fn reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
         400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
         404 => "Not Found",
         405 => "Method Not Allowed",
         413 => "Payload Too Large",
@@ -206,6 +221,18 @@ mod tests {
         let r = req("GET /v1/status HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
         assert_eq!(r.method, "GET");
         assert!(r.body.is_empty());
+        assert_eq!(r.bearer, None);
+    }
+
+    #[test]
+    fn bearer_tokens_parse_case_insensitively() {
+        let r = req("GET /v1/status HTTP/1.1\r\nAuthorization: Bearer tok-a\r\n\r\n").unwrap();
+        assert_eq!(r.bearer.as_deref(), Some("tok-a"));
+        let r = req("GET /v1/status HTTP/1.1\r\nauthorization: bearer  tok-b \r\n\r\n").unwrap();
+        assert_eq!(r.bearer.as_deref(), Some("tok-b"));
+        // a non-Bearer scheme is not a bearer token
+        let r = req("GET /v1/status HTTP/1.1\r\nAuthorization: Basic dXNlcg==\r\n\r\n").unwrap();
+        assert_eq!(r.bearer, None);
     }
 
     #[test]

@@ -76,6 +76,15 @@ struct StreamRecord {
     completed: bool,
 }
 
+/// Per-tenant aggregate of completed streams folded out of the sidecar
+/// log at a past graceful shutdown. Their per-stream records are gone;
+/// the invoice carries these totals instead.
+#[derive(Debug, Clone, Copy, Default)]
+struct SettledTotals {
+    streams: u64,
+    cost: f64,
+}
+
 /// Live session entry behind its session token.
 struct SessionEntry {
     /// `None` once finished (finish consumes the engine handle).
@@ -93,11 +102,17 @@ struct SessionEntry {
 /// ```text
 /// open <stream_id> <reserved_hot> <degraded 0|1> <tenant name…>
 /// fin <stream_id>
+/// settled <streams> <cost bits hex> <tenant name…>
 /// ```
 ///
-/// The tenant name ends the line so names may contain spaces.
+/// The tenant name ends the line so names may contain spaces. `settled`
+/// lines are written only by the graceful-shutdown fold: finished
+/// streams collapse into one per-tenant aggregate (cost stored as f64
+/// bits so the fold is exact), keeping the log proportional to *live*
+/// streams instead of all streams ever served.
 struct Sidecar {
     file: Option<std::fs::File>,
+    path: Option<PathBuf>,
 }
 
 impl Sidecar {
@@ -112,11 +127,14 @@ impl Sidecar {
     }
 }
 
-fn load_sidecar(path: &std::path::Path) -> Result<BTreeMap<u64, StreamRecord>> {
+type SidecarState = (BTreeMap<u64, StreamRecord>, BTreeMap<String, SettledTotals>);
+
+fn load_sidecar(path: &std::path::Path) -> Result<SidecarState> {
     let mut records = BTreeMap::new();
+    let mut settled: BTreeMap<String, SettledTotals> = BTreeMap::new();
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(records),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((records, settled)),
         Err(e) => return Err(anyhow!("reading {}: {e}", path.display())),
     };
     for (lineno, line) in text.lines().enumerate() {
@@ -151,10 +169,34 @@ fn load_sidecar(path: &std::path::Path) -> Result<BTreeMap<u64, StreamRecord>> {
                     r.completed = true;
                 }
             }
+            "settled" => {
+                let mut f = rest.splitn(3, ' ');
+                let streams = f
+                    .next()
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .ok_or_else(|| {
+                        anyhow!("serve.log line {}: bad settled count: {line:?}", lineno + 1)
+                    })?;
+                let cost = f
+                    .next()
+                    .and_then(|v| u64::from_str_radix(v, 16).ok())
+                    .map(f64::from_bits)
+                    .filter(|c| c.is_finite())
+                    .ok_or_else(|| {
+                        anyhow!("serve.log line {}: bad settled cost: {line:?}", lineno + 1)
+                    })?;
+                let tenant = f
+                    .next()
+                    .ok_or_else(|| anyhow!("serve.log line {}: missing tenant", lineno + 1))?
+                    .to_string();
+                let e = settled.entry(tenant).or_default();
+                e.streams += streams;
+                e.cost += cost;
+            }
             other => bail!("serve.log line {}: unknown verb {other:?}", lineno + 1),
         }
     }
-    Ok(records)
+    Ok((records, settled))
 }
 
 /// Everything the workers share.
@@ -167,6 +209,8 @@ struct ServerState {
     sessions: Mutex<BTreeMap<String, Arc<Mutex<SessionEntry>>>>,
     /// Stream id → billing record (live and historical).
     records: Mutex<BTreeMap<u64, StreamRecord>>,
+    /// Tenant name → totals folded out of the sidecar at past shutdowns.
+    settled: Mutex<BTreeMap<String, SettledTotals>>,
     sidecar: Mutex<Sidecar>,
     nonce: Mutex<SplitMix64>,
     /// Set by `POST /v1/shutdown`; `RunningServer::wait` watches it.
@@ -197,9 +241,10 @@ impl RunningServer {
 
         let mut admission = AdmissionControl::new(&config.book);
         let mut records = BTreeMap::new();
+        let mut settled = BTreeMap::new();
         let side_path = sidecar_path(&backend);
         if let Some(path) = &side_path {
-            records = load_sidecar(path)?;
+            (records, settled) = load_sidecar(path)?;
             for r in records.values() {
                 if !r.completed {
                     // The stream's documents were replayed into residency
@@ -222,6 +267,7 @@ impl RunningServer {
                 ),
                 None => None,
             },
+            path: side_path,
         };
 
         let listener = TcpListener::bind(&config.addr)
@@ -240,6 +286,7 @@ impl RunningServer {
             admission: Mutex::new(admission),
             sessions: Mutex::new(BTreeMap::new()),
             records: Mutex::new(records),
+            settled: Mutex::new(settled),
             sidecar: Mutex::new(sidecar),
             nonce: Mutex::new(SplitMix64::new(nonce_seed)),
             shutdown_requested: AtomicBool::new(false),
@@ -292,12 +339,59 @@ impl RunningServer {
         self.shutdown()
     }
 
-    /// Graceful shutdown: stop accepting, drain in-flight requests, then
-    /// checkpoint the backend so a later reopen replays a compact
-    /// journal. (A free no-op on the simulator.)
+    /// Graceful shutdown: stop accepting, drain in-flight requests, fold
+    /// finished streams out of the sidecar log, then checkpoint the
+    /// backend so a later reopen replays a compact journal. (Both are
+    /// free no-ops on the simulator.)
     pub fn shutdown(mut self) -> Result<()> {
         self.stop_threads();
+        self.fold_sidecar()?;
         self.state.engine.checkpoint()?;
+        Ok(())
+    }
+
+    /// The sidecar counterpart of the journal checkpoint: completed
+    /// streams no longer need per-stream attribution (their ledgers are
+    /// frozen in the engine checkpoint), so their `open`/`fin` pairs
+    /// collapse into one `settled` aggregate per tenant and the log is
+    /// rewritten atomically (tmp + rename) to hold only settled lines
+    /// plus the still-unfinished opens. A SIGKILL never reaches this, so
+    /// an aborted process leaves the append-only log untouched for
+    /// replay.
+    fn fold_sidecar(&self) -> Result<()> {
+        let mut side = self.state.sidecar.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(path) = side.path.clone() else {
+            return Ok(());
+        };
+        let mut records = self.state.records.lock().unwrap_or_else(|e| e.into_inner());
+        let mut settled = self.state.settled.lock().unwrap_or_else(|e| e.into_inner());
+        let done: Vec<u64> =
+            records.iter().filter(|(_, r)| r.completed).map(|(id, _)| *id).collect();
+        for id in done {
+            let r = records.remove(&id).expect("id was just listed");
+            let cost = self.state.engine.stream_ledger(id).total();
+            let e = settled.entry(r.tenant).or_default();
+            e.streams += 1;
+            e.cost += cost;
+        }
+        let mut text = String::new();
+        for (tenant, s) in settled.iter() {
+            text.push_str(&format!("settled {} {:016x} {tenant}\n", s.streams, s.cost.to_bits()));
+        }
+        for (id, r) in records.iter() {
+            text.push_str(&format!(
+                "open {id} {} {} {}\n",
+                r.reserved_hot,
+                u8::from(r.degraded),
+                r.tenant
+            ));
+        }
+        let tmp = path.with_extension("log.tmp");
+        std::fs::write(&tmp, &text).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+        // the append handle points at the replaced inode; drop it
+        side.file = None;
         Ok(())
     }
 
@@ -360,8 +454,8 @@ fn route(state: &ServerState, req: &Request) -> (u16, crate::serdes::Json) {
         ("POST", ["v1", "streams"]) => handle_open(state, &req.body),
         ("POST", ["v1", "streams", token, "observe"]) => handle_observe(state, token, &req.body),
         ("POST", ["v1", "streams", token, "finish"]) => handle_finish(state, token),
-        ("GET", ["v1", "tenants", name, "invoice"]) => handle_invoice(state, name),
-        ("GET", ["v1", "status"]) => handle_status(state),
+        ("GET", ["v1", "tenants", name, "invoice"]) => handle_invoice(state, req, name),
+        ("GET", ["v1", "status"]) => handle_status(state, req),
         ("POST", ["v1", "shutdown"]) => {
             state.shutdown_requested.store(true, Ordering::SeqCst);
             (200, wire::json_obj(vec![("draining", crate::serdes::Json::Bool(true))]))
@@ -600,15 +694,56 @@ fn handle_finish(state: &ServerState, token: &str) -> (u16, crate::serdes::Json)
     (200, resp.to_json())
 }
 
-fn handle_invoice(state: &ServerState, name: &str) -> (u16, crate::serdes::Json) {
+/// Resolve the request's bearer token to a tenant id, or produce the 401
+/// the caller should answer with. Auth runs *before* any path-derived
+/// name resolution, so unauthenticated probes cannot distinguish
+/// existing tenants from unknown ones.
+fn authenticate(
+    state: &ServerState,
+    req: &Request,
+) -> Result<usize, (u16, crate::serdes::Json)> {
+    let Some(token) = req.bearer.as_deref() else {
+        return Err(error(
+            401,
+            ErrorBody::with_reason("missing bearer token", "missing-token"),
+        ));
+    };
+    state
+        .config
+        .book
+        .authenticate(token)
+        .ok_or_else(|| error(401, ErrorBody::with_reason("unknown tenant token", "bad-token")))
+}
+
+fn handle_invoice(state: &ServerState, req: &Request, name: &str) -> (u16, crate::serdes::Json) {
+    let caller = match authenticate(state, req) {
+        Ok(id) => id,
+        Err(resp) => return resp,
+    };
     let Some(tenant_id) = state.config.book.by_name(name) else {
         return error(404, ErrorBody::with_reason("no such tenant", "unknown-tenant"));
     };
+    if caller != tenant_id {
+        return error(
+            403,
+            ErrorBody::with_reason(
+                format!("token does not grant access to tenant {name}'s invoice"),
+                "wrong-tenant",
+            ),
+        );
+    }
     let tenant = state.config.book.tenant(tenant_id);
     let records = state.records.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let settled = state
+        .settled
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(&tenant.name)
+        .copied()
+        .unwrap_or_default();
     let mut streams = Vec::new();
-    let mut cost_total = 0.0;
-    let mut billed_total = 0.0;
+    let mut cost_total = settled.cost;
+    let mut billed_total = settled.cost * tenant.price_multiplier;
     for (id, r) in records.iter().filter(|(_, r)| r.tenant == tenant.name) {
         let cost = state.engine.stream_ledger(*id).total();
         let billed = cost * tenant.price_multiplier;
@@ -626,13 +761,18 @@ fn handle_invoice(state: &ServerState, name: &str) -> (u16, crate::serdes::Json)
         tenant: tenant.name.clone(),
         price_multiplier: tenant.price_multiplier,
         streams,
+        settled_streams: settled.streams,
+        settled_cost: settled.cost,
         cost_total,
         billed_total,
     };
     (200, inv.to_json())
 }
 
-fn handle_status(state: &ServerState) -> (u16, crate::serdes::Json) {
+fn handle_status(state: &ServerState, req: &Request) -> (u16, crate::serdes::Json) {
+    if let Err(resp) = authenticate(state, req) {
+        return resp;
+    }
     let tiers: Vec<TierStatus> = (0..state.config.tiers)
         .map(|i| TierStatus {
             occupancy: state.engine.resident_len(TierId(i)) as u64,
@@ -667,6 +807,8 @@ fn handle_status(state: &ServerState) -> (u16, crate::serdes::Json) {
         overcommitted_tiers: state.engine.overcommits().len() as u64,
         journal_ops: state.engine.journal_ops(),
         auto_checkpoints: state.engine.auto_checkpoints(),
+        drift_detections: state.engine.drift_detections(),
+        drift_rederivations: state.engine.drift_rederivations(),
         ledger_total: state.engine.ledger().total(),
         tiers,
         tenants,
@@ -708,12 +850,12 @@ mod tests {
         assert_eq!(fin.retained, 4);
         assert!(fin.cost > 0.0);
 
-        let inv = client.invoice("alpha").unwrap();
+        let inv = client.invoice("alpha", "tok-alpha").unwrap();
         assert_eq!(inv.streams.len(), 1);
         assert!(inv.streams[0].completed);
         assert!((inv.cost_total - fin.cost).abs() < 1e-9);
 
-        let status = client.status().unwrap();
+        let status = client.status("tok-alpha").unwrap();
         assert_eq!(status.live_sessions, 0);
         assert_eq!(status.tenants.len(), 1);
         assert_eq!(status.tenants[0].admitted, 1);
@@ -736,7 +878,7 @@ mod tests {
         );
         let err = client.observe("s-99-beef", &[0.5]).unwrap_err();
         assert!(err.contains("404"), "got {err}");
-        let err = client.invoice("nobody").unwrap_err();
+        let err = client.invoice("nobody", "tok-alpha").unwrap_err();
         assert!(err.contains("404"), "got {err}");
 
         server.shutdown().unwrap();

@@ -305,7 +305,15 @@ pub struct Invoice {
     pub tenant: String,
     pub price_multiplier: f64,
     pub streams: Vec<InvoiceLine>,
+    /// Completed streams folded out of the sidecar log at a past
+    /// graceful shutdown — no per-stream lines survive for them, only
+    /// this aggregate (ADR-007 satellite).
+    pub settled_streams: u64,
+    /// Raw ledger cost of the settled streams, captured at fold time.
+    pub settled_cost: f64,
+    /// Includes `settled_cost`.
     pub cost_total: f64,
+    /// Includes `settled_cost × price_multiplier`.
     pub billed_total: f64,
 }
 
@@ -314,6 +322,8 @@ impl Invoice {
         obj(vec![
             ("tenant", Json::Str(self.tenant.clone())),
             ("price_multiplier", Json::Num(self.price_multiplier)),
+            ("settled_streams", unum(self.settled_streams)),
+            ("settled_cost", Json::Num(self.settled_cost)),
             (
                 "streams",
                 Json::Arr(
@@ -351,6 +361,8 @@ impl Invoice {
             tenant: str_field(j, "tenant")?,
             price_multiplier: f64_field(j, "price_multiplier")?,
             streams,
+            settled_streams: u64_field(j, "settled_streams")?,
+            settled_cost: f64_field(j, "settled_cost")?,
             cost_total: f64_field(j, "cost_total")?,
             billed_total: f64_field(j, "billed_total")?,
         })
@@ -395,6 +407,11 @@ pub struct Status {
     pub overcommitted_tiers: u64,
     pub journal_ops: u64,
     pub auto_checkpoints: u64,
+    /// Admission-curve drift detections across all sessions (ADR-007).
+    pub drift_detections: u64,
+    /// Drift-triggered cut re-derivations (0 unless the engine runs the
+    /// adaptive arbiter with the drift trigger armed).
+    pub drift_rederivations: u64,
     pub ledger_total: f64,
     pub tiers: Vec<TierStatus>,
     pub tenants: Vec<TenantStatus>,
@@ -410,6 +427,8 @@ impl Status {
             ("overcommitted_tiers", unum(self.overcommitted_tiers)),
             ("journal_ops", unum(self.journal_ops)),
             ("auto_checkpoints", unum(self.auto_checkpoints)),
+            ("drift_detections", unum(self.drift_detections)),
+            ("drift_rederivations", unum(self.drift_rederivations)),
             ("ledger_total", Json::Num(self.ledger_total)),
             (
                 "tiers",
@@ -496,6 +515,8 @@ impl Status {
             overcommitted_tiers: u64_field(j, "overcommitted_tiers")?,
             journal_ops: u64_field(j, "journal_ops")?,
             auto_checkpoints: u64_field(j, "auto_checkpoints")?,
+            drift_detections: u64_field(j, "drift_detections")?,
+            drift_rederivations: u64_field(j, "drift_rederivations")?,
             ledger_total: f64_field(j, "ledger_total")?,
             tiers,
             tenants,
@@ -555,10 +576,13 @@ mod tests {
                 billed: gen_money(rng),
             })
             .collect();
+        let settled_cost = gen_money(rng);
         Invoice {
             tenant: gen_name(rng),
             price_multiplier: rng.next_f64() * 3.0,
-            cost_total: streams.iter().map(|s| s.cost).sum(),
+            settled_streams: rng.next_below(1 << 20),
+            settled_cost,
+            cost_total: streams.iter().map(|s| s.cost).sum::<f64>() + settled_cost,
             billed_total: streams.iter().map(|s| s.billed).sum(),
             streams,
         }
@@ -595,6 +619,8 @@ mod tests {
             overcommitted_tiers: rng.next_below(4),
             journal_ops: rng.next_below(1 << 50),
             auto_checkpoints: rng.next_below(1000),
+            drift_detections: rng.next_below(1 << 20),
+            drift_rederivations: rng.next_below(1 << 20),
             ledger_total: gen_money(rng),
             tiers,
             tenants,
@@ -698,6 +724,8 @@ mod tests {
                 tenant: "t".to_string(),
                 price_multiplier: 1.0,
                 streams: vec![],
+                settled_streams: 0,
+                settled_cost: 0.0,
                 cost_total: bad,
                 billed_total: 0.0,
             };

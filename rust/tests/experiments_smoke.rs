@@ -22,6 +22,7 @@ fn every_experiment_id_runs_quick() {
         "fleet_family.csv",
         "fleet_family_ablation.csv",
         "fleet_staggered.csv",
+        "drift.csv",
     ] {
         assert!(dir.join(csv).exists(), "{csv} missing");
     }

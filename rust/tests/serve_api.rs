@@ -169,7 +169,7 @@ fn stalled_connections_are_dropped_at_the_read_timeout() {
     );
     // and the worker is free again: a well-formed request still answers
     let client = Client::new(server.local_addr());
-    assert!(client.status().is_ok());
+    assert!(client.status("tok-alpha").is_ok());
     server.shutdown().unwrap();
 }
 
@@ -230,7 +230,7 @@ fn hot_quota_rejection_shows_in_http_and_in_the_report() {
     assert!(error.contains("rigid"), "error names the tenant: {error}");
 
     // the same verdict is in the status report
-    let st = client.status().expect("status");
+    let st = client.status("tok-rigid").expect("status");
     let rigid = st.tenants.iter().find(|t| t.tenant == "rigid").unwrap();
     assert_eq!(rigid.admitted, 1);
     assert_eq!(rigid.rejected, 1);
@@ -263,7 +263,7 @@ fn stream_quota_rejection_shows_in_http_and_in_the_report() {
     let (status, reason, _) = expect_rejected(open_small(&client));
     assert_eq!(status, 429);
     assert_eq!(reason.as_deref(), Some("stream-quota"));
-    let st = client.status().expect("status");
+    let st = client.status("tok-rigid").expect("status");
     let rigid = st.tenants.iter().find(|t| t.tenant == "rigid").unwrap();
     assert_eq!(rigid.rejected, 1);
     assert_eq!(rigid.last_rejection.as_deref(), Some("stream-quota"));
@@ -285,7 +285,7 @@ fn degrade_policy_pins_cold_and_shows_in_both_places() {
     assert_eq!(second.reserved_hot, 0);
 
     // ... and in the status report
-    let st = client.status().expect("status");
+    let st = client.status("tok-flex").expect("status");
     let flex = st.tenants.iter().find(|t| t.tenant == "flex").unwrap();
     assert_eq!(flex.admitted, 1);
     assert_eq!(flex.degraded, 1);
@@ -306,11 +306,130 @@ fn degrade_policy_pins_cold_and_shows_in_both_places() {
     assert_eq!(fin_cold.cold_reads, 4);
 
     // finishing released the reservations
-    let st = client.status().expect("status");
+    let st = client.status("tok-flex").expect("status");
     let flex = st.tenants.iter().find(|t| t.tenant == "flex").unwrap();
     assert_eq!(flex.live_streams, 0);
     assert_eq!(flex.reserved_hot, 0);
     server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Bearer auth on the read routes (ADR-007 satellite): a tenant token may
+// read the fleet-wide status but only its OWN invoice.
+
+#[test]
+fn read_routes_reject_missing_and_invalid_tokens_with_401() {
+    let server = start_server(QUOTA_ROSTER);
+    let addr = server.local_addr();
+    let client = Client::new(addr);
+
+    // no Authorization header at all → 401 with a machine-readable reason
+    let (status, body) = raw_exchange(addr, b"GET /v1/status HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 401, "body: {body}");
+    assert_eq!(error_body(&body).reason.as_deref(), Some("missing-token"));
+    let (status, body) =
+        raw_exchange(addr, b"GET /v1/tenants/rigid/invoice HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 401, "body: {body}");
+    assert_eq!(error_body(&body).reason.as_deref(), Some("missing-token"));
+
+    // a token the book does not know → 401 bad-token
+    let err = client.status("tok-nope").unwrap_err();
+    assert!(err.contains("401"), "got {err}");
+    let err = client.invoice("rigid", "tok-nope").unwrap_err();
+    assert!(err.contains("401"), "got {err}");
+
+    // a valid token reads status and its own invoice
+    assert!(client.status("tok-flex").is_ok());
+    assert!(client.invoice("rigid", "tok-rigid").is_ok());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn a_tenant_token_cannot_read_another_tenants_invoice() {
+    let server = start_server(QUOTA_ROSTER);
+    let client = Client::new(server.local_addr());
+
+    // flex's perfectly valid token on rigid's invoice → 403
+    let err = client.invoice("rigid", "tok-flex").unwrap_err();
+    assert!(err.contains("403"), "got {err}");
+
+    // auth runs before name resolution: a valid token probing an unknown
+    // tenant still gets the 404, an invalid one never does
+    let err = client.invoice("nobody", "tok-rigid").unwrap_err();
+    assert!(err.contains("404"), "got {err}");
+    let err = client.invoice("nobody", "tok-nope").unwrap_err();
+    assert!(err.contains("401"), "got {err}");
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Sidecar fold at graceful shutdown (ADR-007 satellite): finished
+// streams collapse into per-tenant settled totals; the invoice stays
+// conserved across the fold + checkpoint + replay.
+
+#[test]
+fn graceful_shutdown_folds_finished_streams_into_settled_totals() {
+    let root = shptier::util::scratch_dir("serve-fold");
+    let backend = BackendSpec::Fs { root: root.clone() };
+    let toml = "[serve]\nworkers = 4\nread_timeout_ms = 2000\n\
+                [engine]\ntiers = 2\nhot_capacity = 64\n\
+                [tenants.alpha]\ntoken = \"tok-alpha\"\n";
+    let server =
+        RunningServer::start(ServeConfig::from_toml(toml).unwrap(), backend.clone()).unwrap();
+    let client = Client::new(server.local_addr());
+
+    // two streams run to completion, a third stays open across shutdown
+    let scores: Vec<f64> = (0..20).map(|i| ((i * 13) % 20) as f64 / 20.0).collect();
+    let mut opens = Vec::new();
+    for _ in 0..3 {
+        match client.open("tok-alpha", 20, 4, "keep", None).unwrap() {
+            OpenOutcome::Admitted(open) => opens.push(open),
+            other => panic!("expected admission, got {other:?}"),
+        }
+    }
+    for open in &opens[..2] {
+        client.observe(&open.stream, &scores).unwrap();
+        client.finish(&open.stream).unwrap();
+    }
+    client.observe(&opens[2].stream, &scores[..10]).unwrap();
+
+    let before = client.invoice("alpha", "tok-alpha").unwrap();
+    assert_eq!(before.settled_streams, 0);
+    assert_eq!(before.streams.len(), 3);
+    server.shutdown().unwrap(); // fold + checkpoint
+
+    // the log now holds one settled aggregate and only the live open;
+    // every fin line is gone
+    let log = std::fs::read_to_string(root.join("serve.log")).unwrap();
+    assert!(log.contains("settled 2 "), "no settled aggregate in {log:?}");
+    assert_eq!(log.lines().filter(|l| l.starts_with("open ")).count(), 1, "{log:?}");
+    assert_eq!(log.lines().filter(|l| l.starts_with("fin ")).count(), 0, "{log:?}");
+
+    // restart: the settled totals come back and the invoice still
+    // conserves the (replayed) engine ledger exactly
+    let server = RunningServer::start(ServeConfig::from_toml(toml).unwrap(), backend).unwrap();
+    let client = Client::new(server.local_addr());
+    let inv = client.invoice("alpha", "tok-alpha").unwrap();
+    assert_eq!(inv.settled_streams, 2);
+    assert!(inv.settled_cost > 0.0);
+    assert_eq!(inv.streams.len(), 1, "only the unfinished stream keeps a line: {inv:?}");
+    assert!(!inv.streams[0].completed);
+    let tol = 1e-9 * before.cost_total.abs().max(1.0);
+    assert!(
+        (inv.cost_total - before.cost_total).abs() <= tol,
+        "fold changed the invoice total: {} vs {}",
+        inv.cost_total,
+        before.cost_total
+    );
+    let st = client.status("tok-alpha").unwrap();
+    assert!(
+        (inv.cost_total - st.ledger_total).abs() <= 1e-9 * st.ledger_total.abs().max(1.0),
+        "invoice ({}) no longer conserves the ledger ({})",
+        inv.cost_total,
+        st.ledger_total
+    );
+    server.shutdown().unwrap();
+    std::fs::remove_dir_all(&root).ok();
 }
 
 #[test]

@@ -70,14 +70,19 @@ fn fs_soak_survives_abort_and_restart_with_full_attribution() {
     let addr = server.local_addr();
     let client = Client::new(addr);
 
-    let status = client.status().expect("status after restart");
+    let status = client.status(&roster[0].token).expect("status after restart");
     assert_eq!(status.live_sessions, 0, "dead sessions are not resurrected");
     assert!(status.journal_ops > 0, "the journal replayed");
     assert!(status.ledger_total > 0.0, "replay restored the attributed ledger");
 
     // unfinished wave-1 streams are invoiced — as incomplete
     for s in abandoned_half {
-        let inv = client.invoice(&s.tenant).expect("invoice");
+        let token = &roster
+            .iter()
+            .find(|t| t.name == s.tenant)
+            .expect("stream's tenant is on the roster")
+            .token;
+        let inv = client.invoice(&s.tenant, token).expect("invoice");
         let line = inv
             .streams
             .iter()
