@@ -1,8 +1,11 @@
 //! Bench: fleet scheduler throughput — aggregate docs/sec vs stream count
 //! (M ∈ {1, 4, 16, 64}), vs worker-pool size on a 16-stream fleet (the
-//! scaling acceptance criterion: ≥ 4× from 1 → 8 workers), vs storage
-//! backend, and with the ADR-007 adaptive arbiter off/on (its overhead
-//! dimension).
+//! scaling acceptance criterion: ≥ 4× from 1 → 8 workers), vs worker-pool
+//! size on a deliberately *skewed* fleet (the ADR-008 work-stealing
+//! criterion: ≥ 3× from 1 → 8 workers despite lumpy stream lengths, with
+//! a bitwise-identical report digest at every worker count — a digest
+//! mismatch fails the bench outright), vs storage backend, and with the
+//! ADR-007 adaptive arbiter off/on (its overhead dimension).
 //!
 //! Set `SHPTIER_BENCH_RECORD=1` to write the results as a baseline JSON to
 //! `benches/baselines/fleet_throughput.json` (see that file for the
@@ -23,7 +26,7 @@
 use shptier::benchkit::{BenchResult, Bencher};
 use shptier::cost::hot_demand;
 use shptier::engine::BackendSpec;
-use shptier::fleet::{demo_fleet, run_fleet, FleetConfig, FleetMode};
+use shptier::fleet::{demo_fleet, run_fleet, skewed_fleet, FleetConfig, FleetMode};
 use shptier::serdes::Json;
 use std::collections::BTreeMap;
 
@@ -70,6 +73,34 @@ fn main() {
         b.bench(&format!("fleet_scaling/streams=16,workers={w}"), total16, || {
             run_fleet(&specs16, &cfg).unwrap().docs_processed
         });
+    }
+
+    // ---- work stealing on a skewed fleet (ADR-008) -----------------------
+    // Every 4th stream is 8× longer, so a fixed partition would leave most
+    // workers idle while one grinds through the long tail; stealing keeps
+    // them busy. The outcome must not depend on who did the work: every
+    // worker count has to land the identical report digest, checked across
+    // all timed iterations.
+    let skew = skewed_fleet(8, DOCS_PER_STREAM, 8, 3);
+    let skew_total: u64 = skew.iter().map(|s| s.model.n).sum();
+    let skew_cap = contended_capacity(&skew);
+    let mut skew_digests: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+    for w in [1usize, 2, 4, 8] {
+        let cfg = fleet_config(w, skew_cap);
+        let specs = skew.clone();
+        let digests = &mut skew_digests;
+        b.bench(&format!("fleet_skew/streams=8,workers={w}"), skew_total, move || {
+            let report = run_fleet(&specs, &cfg).unwrap();
+            digests.insert(report.digest());
+            report.docs_processed
+        });
+    }
+    if skew_digests.len() != 1 {
+        eprintln!(
+            "FAIL: work stealing changed the fleet outcome across worker counts \
+             (distinct digests: {skew_digests:?})"
+        );
+        std::process::exit(1);
     }
 
     // ---- substrate overhead: one small fleet per StorageBackend ----------
@@ -287,6 +318,16 @@ fn report_scaling(results: &[BenchResult]) {
         println!(
             "worker scaling 1→8 on 16 streams: {speedup:.2}x ({})",
             if speedup >= 4.0 { "meets the >=4x bar" } else { "BELOW the >=4x bar" }
+        );
+    }
+    if let (Some(r1), Some(r8)) = (
+        rate("fleet_skew/streams=8,workers=1"),
+        rate("fleet_skew/streams=8,workers=8"),
+    ) {
+        let speedup = r8 / r1;
+        println!(
+            "work-stealing scaling 1→8 on the skewed fleet: {speedup:.2}x ({})",
+            if speedup >= 3.0 { "meets the >=3x bar" } else { "BELOW the >=3x bar" }
         );
     }
 }

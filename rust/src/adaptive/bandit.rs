@@ -121,6 +121,54 @@ impl FamilyBandit {
     pub fn pulls(&self) -> (u64, u64) {
         (self.keep.pulls, self.migrate.pulls)
     }
+
+    /// Serialize the *learned* state — arm pulls/means (f64 bits as hex,
+    /// so the round trip is bitwise) and the resolution clock — as one
+    /// `banditv1` line. The open map is deliberately excluded: pinned
+    /// families belong to live sessions, and live sessions do not
+    /// survive an engine restart.
+    pub fn encode(&self) -> String {
+        format!(
+            "banditv1 keep {} {:016x} migrate {} {:016x} resolutions {}\n",
+            self.keep.pulls,
+            self.keep.mean_ratio.to_bits(),
+            self.migrate.pulls,
+            self.migrate.mean_ratio.to_bits(),
+            self.resolutions,
+        )
+    }
+
+    /// Parse a [`FamilyBandit::encode`] record. Returns `None` (caller
+    /// falls back to a cold bandit) on any malformed or non-finite input
+    /// — a corrupt state file must never poison future resolutions.
+    pub fn decode(text: &str) -> Option<Self> {
+        let t: Vec<&str> = text.split_whitespace().collect();
+        if t.len() != 9
+            || t[0] != "banditv1"
+            || t[1] != "keep"
+            || t[4] != "migrate"
+            || t[7] != "resolutions"
+        {
+            return None;
+        }
+        let arm = |pulls: &str, bits: &str| -> Option<ArmStats> {
+            let stats = ArmStats {
+                pulls: pulls.parse().ok()?,
+                mean_ratio: f64::from_bits(u64::from_str_radix(bits, 16).ok()?),
+            };
+            if stats.mean_ratio.is_finite() && stats.mean_ratio >= 0.0 {
+                Some(stats)
+            } else {
+                None
+            }
+        };
+        Some(Self {
+            keep: arm(t[2], t[3])?,
+            migrate: arm(t[5], t[6])?,
+            resolutions: t[8].parse().ok()?,
+            open: BTreeMap::new(),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -190,5 +238,57 @@ mod tests {
         let mut bandit = FamilyBandit::default();
         bandit.reward(42, 123.0);
         assert_eq!(bandit.pulls(), (0, 0));
+    }
+
+    #[test]
+    fn encode_decode_round_trips_the_learned_state_bitwise() {
+        let mut bandit = FamilyBandit::default();
+        for id in 0..7u64 {
+            let s = rent_snap(id);
+            let family = bandit.resolve(&s);
+            let analytic = PlacementPlan::optimal_family(
+                &s.tier_costs,
+                s.n,
+                s.k,
+                s.include_rent,
+                family,
+            )
+            .analytic_cost(&s.tier_costs, s.include_rent);
+            bandit.reward(id, analytic * (1.0 + id as f64 / 3.0));
+        }
+        let restored = FamilyBandit::decode(&bandit.encode()).expect("own encoding");
+        assert_eq!(restored.pulls(), bandit.pulls());
+        assert_eq!(restored.resolutions, bandit.resolutions);
+        assert_eq!(
+            restored.keep.mean_ratio.to_bits(),
+            bandit.keep.mean_ratio.to_bits(),
+            "f64 means must survive bitwise"
+        );
+        assert_eq!(
+            restored.migrate.mean_ratio.to_bits(),
+            bandit.migrate.mean_ratio.to_bits()
+        );
+        assert!(restored.open.is_empty(), "pinned live sessions are not persisted");
+        // a restored bandit resolves from experience, not the cold path
+        let mut warm = restored;
+        let choice = warm.resolve(&rent_snap(100));
+        assert_eq!(choice, bandit.resolve(&rent_snap(100)));
+    }
+
+    #[test]
+    fn corrupt_state_records_are_rejected() {
+        for bad in [
+            "",
+            "garbage",
+            "banditv1 keep 1", // truncated
+            "banditv2 keep 1 3ff0000000000000 migrate 0 0000000000000000 resolutions 1",
+            "banditv1 keep x 3ff0000000000000 migrate 0 0000000000000000 resolutions 1",
+            // NaN mean
+            "banditv1 keep 1 7ff8000000000000 migrate 0 0000000000000000 resolutions 1",
+            // negative mean
+            "banditv1 keep 1 bff0000000000000 migrate 0 0000000000000000 resolutions 1",
+        ] {
+            assert!(FamilyBandit::decode(bad).is_none(), "accepted: {bad:?}");
+        }
     }
 }

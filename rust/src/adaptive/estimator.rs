@@ -16,11 +16,17 @@
 //! approximations above are exported for analysis and tests.
 //!
 //! [`DriftDetector`] runs a two-sided sequential test over the estimator:
-//! the stream is flagged as drifted the first time the realized count
-//! leaves the `c·sd(A_i)` envelope, with `c = sqrt(2·ln(2N/δ))` so a
-//! Gaussian-tail union bound over all `N` indices keeps the stream-level
-//! false-positive probability within the budget `δ`. Detection is
-//! single-shot per stream — the re-derivation it triggers must not thrash.
+//! the stream is flagged as drifted when the realized count leaves the
+//! `c·sd(A_i)` envelope, with `c = sqrt(2·ln(2N/δ))` so a Gaussian-tail
+//! union bound over all `N` indices keeps each test's false-positive
+//! probability within its budget. Detection is **multi-shot**: after each
+//! detection the caller restarts the estimator (a fresh epoch judged on
+//! its own suffix) and the detector re-arms with a *halved* budget — shot
+//! `s` spends `δ/2^(s+1)`, so the total stream-level false-positive
+//! probability stays within `δ` (Σ δ/2^(s+1) < δ) no matter how many
+//! reactions a stream goes through, while early shots keep nearly the
+//! single-shot sensitivity. Repeated genuine regime changes can therefore
+//! each trigger their own re-derivation instead of only the first.
 
 /// Default stream-level false-positive budget of the drift detector.
 pub const DEFAULT_FP_BUDGET: f64 = 0.01;
@@ -110,11 +116,26 @@ impl AdmissionEstimator {
     }
 }
 
-/// Two-sided sequential drift test over an [`AdmissionEstimator`].
+/// Two-sided sequential drift test over an [`AdmissionEstimator`],
+/// multi-shot with geometric budget splitting.
+///
+/// Epoch contract with the caller: on every `Some` returned by
+/// [`DriftDetector::check`], the caller must restart its estimator
+/// (`AdmissionEstimator::new(k)`) so the next epoch's curve is judged on
+/// its own suffix — the detector tracks the epoch base internally and
+/// reports detection indices in absolute stream position.
 #[derive(Debug, Clone)]
 pub struct DriftDetector {
+    n: u64,
+    /// Full stream-level budget; shot `s` spends `delta/2^(s+1)`.
+    delta: f64,
     threshold: f64,
     warmup: u64,
+    /// Absolute stream index at which the current epoch started.
+    base: u64,
+    /// Detections so far (the shot counter driving the budget split).
+    shots: u32,
+    /// Absolute index of the most recent detection, if any.
     detected: Option<u64>,
 }
 
@@ -126,41 +147,64 @@ impl DriftDetector {
     }
 
     /// Detector with an explicit stream-level false-positive budget
-    /// `delta` (clamped to a sane range).
+    /// `delta` (clamped to a sane range), spent geometrically across
+    /// shots: δ/2, δ/4, … — Σ < δ however many reactions occur.
     pub fn with_budget(n: u64, k: u64, delta: f64) -> Self {
         let delta = delta.clamp(1e-12, 0.5);
-        let nf = n.max(2) as f64;
         Self {
-            // Gaussian-tail union bound over the ≤ N two-sided tests:
-            // P(|Z| > c) ≤ 2·exp(−c²/2) per index, so c = sqrt(2·ln(2N/δ))
-            // spends at most δ across the whole stream.
-            threshold: (2.0 * (2.0 * nf / delta).ln()).sqrt(),
-            // the envelope is meaningless while Var[A_i] ≈ 0
+            n: n.max(2),
+            delta,
+            threshold: Self::envelope(n.max(2), delta * 0.5),
+            // the envelope is meaningless while Var[A_i] ≈ 0 (re-applied
+            // per epoch: a fresh estimator re-enters warmup)
             warmup: (2 * k).max(32),
+            base: 0,
+            shots: 0,
             detected: None,
         }
     }
 
-    /// The `c` multiplier of the sd envelope.
+    /// Gaussian-tail union bound over the ≤ N two-sided tests of one
+    /// shot: P(|Z| > c) ≤ 2·exp(−c²/2) per index, so c = sqrt(2·ln(2N/δ))
+    /// spends at most δ across the shot's whole epoch.
+    fn envelope(n: u64, delta: f64) -> f64 {
+        (2.0 * (2.0 * n as f64 / delta.max(1e-300)).ln()).sqrt()
+    }
+
+    /// The `c` multiplier of the sd envelope for the *current* shot
+    /// (rises as the budget halves).
     pub fn threshold(&self) -> f64 {
         self.threshold
     }
 
-    /// Index (documents observed) at which drift was flagged, if ever.
+    /// Absolute index (documents observed by the stream) of the most
+    /// recent drift detection, if any.
     pub fn detected(&self) -> Option<u64> {
         self.detected
     }
 
+    /// Detections so far.
+    pub fn shots(&self) -> u32 {
+        self.shots
+    }
+
     /// Sequential check after an observation was recorded. Returns
-    /// `Some(index)` exactly once — on the first observation whose
-    /// realized count leaves the envelope — and `None` forever after.
+    /// `Some(absolute_index)` on each observation whose epoch-realized
+    /// count leaves the current envelope; the detector then re-arms for
+    /// the next epoch on half the remaining budget (the caller restarts
+    /// the estimator — see the type docs).
     pub fn check(&mut self, est: &AdmissionEstimator) -> Option<u64> {
-        if self.detected.is_some() || est.observed() < self.warmup {
+        if est.observed() < self.warmup {
             return None;
         }
         if est.deviation() > self.threshold {
-            self.detected = Some(est.observed());
-            return self.detected;
+            let at = self.base + est.observed();
+            self.detected = Some(at);
+            self.base = at;
+            self.shots += 1;
+            let shot_budget = self.delta * 0.5f64.powi((self.shots as i32 + 1).min(1000));
+            self.threshold = Self::envelope(self.n, shot_budget);
+            return Some(at);
         }
         None
     }
@@ -173,17 +217,19 @@ mod tests {
     use crate::util::Rng;
 
     /// Drive a top-K tracker over `n` seeded uniform scores, feeding the
-    /// estimator + detector exactly as a session does.
+    /// estimator + detector exactly as a session does — including the
+    /// epoch contract: every detection restarts the estimator.
     fn drive(
         n: u64,
         k: u64,
         seed: u64,
         shift_at: Option<u64>,
-    ) -> (AdmissionEstimator, DriftDetector) {
+    ) -> (AdmissionEstimator, DriftDetector, Vec<u64>) {
         let mut est = AdmissionEstimator::new(k);
         let mut det = DriftDetector::new(n, k);
         let mut tracker = BoundedTopK::new(k as usize);
         let mut rng = Rng::new(seed);
+        let mut detections = Vec::new();
         for i in 0..n {
             let mut score = rng.next_f64();
             if let Some(at) = shift_at {
@@ -194,9 +240,12 @@ mod tests {
             let admitted =
                 !matches!(tracker.offer(Scored::new(i, score)), Eviction::Rejected);
             est.record(admitted);
-            det.check(&est);
+            if let Some(at) = det.check(&est) {
+                detections.push(at);
+                est = AdmissionEstimator::new(k);
+            }
         }
-        (est, det)
+        (est, det, detections)
     }
 
     #[test]
@@ -206,7 +255,8 @@ mod tests {
         // with the closed forms
         for (seed, k) in [(1u64, 8u64), (2, 16), (3, 64)] {
             let n = 50_000u64;
-            let (est, det) = drive(n, k, seed, None);
+            let (est, det, detections) = drive(n, k, seed, None);
+            assert!(detections.is_empty(), "no-drift stream must not be flagged");
             assert_eq!(est.observed(), n);
             let rel = est.admitted() as f64 / est.expected();
             assert!(
@@ -238,7 +288,7 @@ mod tests {
         let trials = 200u64;
         let mut fps = 0u64;
         for seed in 0..trials {
-            let (_, det) = drive(2_000, 16, 1000 + seed, None);
+            let (_, det, _) = drive(2_000, 16, 1000 + seed, None);
             if det.detected().is_some() {
                 fps += 1;
             }
@@ -254,26 +304,42 @@ mod tests {
     fn mid_stream_shift_is_detected_shortly_after_the_shift() {
         let (n, k, s) = (4_000u64, 16u64, 2_000u64);
         for seed in [7u64, 11, 42] {
-            let (_, det) = drive(n, k, seed, Some(s));
-            let d = det.detected().expect("the regime change must be flagged");
+            let (_, _, detections) = drive(n, k, seed, Some(s));
+            let d = *detections.first().expect("the regime change must be flagged");
             assert!(d > s, "detected at {d} before the shift at {s}");
             // post-shift every document is admitted (+1/doc) while the law
             // expects ~k/i, so the envelope is crossed within ~2c·sd docs
             assert!(d < s + 200, "detection lag {} too large", d - s);
+            // detection indices are absolute and strictly increasing
+            assert!(detections.windows(2).all(|w| w[0] < w[1]));
         }
     }
 
     #[test]
-    fn detection_is_single_shot() {
+    fn detection_rearms_on_a_halved_budget() {
         let mut est = AdmissionEstimator::new(4);
         let mut det = DriftDetector::new(1_000, 4);
+        let t0 = det.threshold();
         for _ in 0..2_000 {
             est.record(true); // pathological: everything admitted
         }
-        assert!(det.check(&est).is_some());
-        est.record(true);
-        assert!(det.check(&est).is_none(), "a second firing would thrash");
-        assert!(det.detected().is_some());
+        let first = det.check(&est).expect("the first shot must fire");
+        assert_eq!(det.shots(), 1);
+        assert!(
+            det.threshold() > t0,
+            "the re-armed shot must run on a halved budget (higher threshold)"
+        );
+        // epoch contract: the caller restarts the estimator after a
+        // detection, so the next epoch is judged on its own suffix
+        est = AdmissionEstimator::new(4);
+        assert!(det.check(&est).is_none(), "fresh epoch: nothing to flag yet");
+        for _ in 0..2_000 {
+            est.record(true); // the pathology persists into the new epoch
+        }
+        let second = det.check(&est).expect("the detector must re-arm, not latch");
+        assert!(second > first, "detection indices are absolute and increasing");
+        assert_eq!(det.detected(), Some(second), "detected() tracks the latest shot");
+        assert_eq!(det.shots(), 2);
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::cost::{optimal_cuts_family, PerDocCosts};
 use crate::engine::arbiter::allocate_assignments;
 use crate::engine::{Arbiter, PlanAssignment, SessionSnapshot, TierTopology};
 use crate::policy::{PlacementPlan, PlanFamily};
+use std::path::PathBuf;
 use std::sync::Mutex;
 
 /// Re-derive a plan after drift was detected at index `detected_at`:
@@ -80,14 +81,31 @@ pub fn suffix_restart_plan(
 /// from the detection index; resolves Auto families through the
 /// [`FamilyBandit`] instead of the static analytic comparison. Stateless
 /// apart from the bandit (all drift state rides in the session
-/// snapshots), so it recovers across engine restarts for free.
+/// snapshots); with [`AdaptiveArbiter::with_state_file`] the bandit's
+/// learned per-family rewards also survive engine restarts — persisted
+/// at every engine checkpoint, reloaded at construction (ADR-008).
 pub struct AdaptiveArbiter {
     bandit: Mutex<FamilyBandit>,
+    state_file: Option<PathBuf>,
 }
 
 impl AdaptiveArbiter {
     pub fn new() -> Self {
-        Self { bandit: Mutex::new(FamilyBandit::default()) }
+        Self { bandit: Mutex::new(FamilyBandit::default()), state_file: None }
+    }
+
+    /// Arbiter whose bandit state is durable at `path`: learned arm
+    /// statistics are loaded now (a missing or corrupt file falls back
+    /// to a cold bandit — never an error) and re-persisted atomically
+    /// (write temp, rename) on every [`Arbiter::on_checkpoint`], i.e.
+    /// whenever the engine checkpoints its backend.
+    pub fn with_state_file(path: impl Into<PathBuf>) -> Self {
+        let path = path.into();
+        let bandit = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|s| FamilyBandit::decode(&s))
+            .unwrap_or_default();
+        Self { bandit: Mutex::new(bandit), state_file: Some(path) }
     }
 
     /// `(keep, migrate)` bandit reward counts.
@@ -151,6 +169,18 @@ impl Arbiter for AdaptiveArbiter {
 
     fn on_stream_finished(&self, session: &SessionSnapshot, realized_cost: f64) {
         self.lock().reward(session.id, realized_cost);
+    }
+
+    fn on_checkpoint(&self) {
+        let Some(path) = &self.state_file else { return };
+        let encoded = self.lock().encode();
+        // best-effort and atomic: a failed persist must not fail the
+        // backend checkpoint, and a torn write must not corrupt the
+        // last good record
+        let tmp = path.with_extension("state.tmp");
+        if std::fs::write(&tmp, encoded).is_ok() {
+            let _ = std::fs::rename(&tmp, path);
+        }
     }
 }
 
@@ -240,6 +270,47 @@ mod tests {
         // degenerate detections fall back to the a-priori plan
         let at_end = suffix_restart_plan(&costs, 4_000, 16, false, PlanFamily::Keep, 4_000);
         assert_eq!(at_end.cuts(), PlacementPlan::optimal(&costs, 4_000, 16, false).cuts());
+    }
+
+    #[test]
+    fn bandit_state_survives_an_arbiter_restart_via_the_state_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("shptier-bandit-state-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bandit.state");
+        let _ = std::fs::remove_file(&path);
+
+        // rent-dominated Auto economics (the bandit-exercising shape)
+        let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 2.0 };
+        let b = PerDocCosts { write: 0.4, read: 0.01, rent_window: 0.1 };
+        let auto_snap = |id: u64| {
+            SessionSnapshot::fresh(id, 2_000, 32, vec![a, b], true, PlanFamily::Auto)
+        };
+
+        let arb = AdaptiveArbiter::with_state_file(&path);
+        let topo = TierTopology::two_tier(a, b);
+        for id in 0..6u64 {
+            let s = auto_snap(id);
+            let assignment = &arb.arbitrate(&[s.clone()], &topo)[0];
+            arb.on_stream_finished(&s, assignment.analytic_unconstrained * 3.0);
+        }
+        let trained = arb.bandit_pulls();
+        assert!(trained.0 + trained.1 == 6, "every finished Auto stream rewards an arm");
+        arb.on_checkpoint();
+
+        // a fresh arbiter (an engine restart) resumes from the persisted rewards
+        let reloaded = AdaptiveArbiter::with_state_file(&path);
+        assert_eq!(reloaded.bandit_pulls(), trained);
+        assert_eq!(reloaded.lock().encode(), arb.lock().encode(), "bitwise round trip");
+
+        // corrupt state never poisons a restart: it cold-starts instead
+        std::fs::write(&path, "not a bandit record").unwrap();
+        let cold = AdaptiveArbiter::with_state_file(&path);
+        assert_eq!(cold.bandit_pulls(), (0, 0));
+
+        // a state-less arbiter's checkpoint hook is a no-op
+        AdaptiveArbiter::new().on_checkpoint();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -148,6 +148,13 @@ pub trait Arbiter: Send {
     /// signal learning arbiters (e.g. the bandit in
     /// `crate::adaptive::AdaptiveArbiter`) train on. Default: ignore.
     fn on_stream_finished(&self, _session: &SessionSnapshot, _realized_cost: f64) {}
+
+    /// Checkpoint hook: [`crate::engine::Engine::checkpoint`] calls this
+    /// right before the backend snapshots, so learning arbiters can
+    /// persist their trained state (e.g. the family bandit's per-family
+    /// rewards) alongside the storage checkpoint and reload it on the
+    /// next construction. Default: ignore.
+    fn on_checkpoint(&self) {}
 }
 
 /// Demand-proportional quota allocation with largest-remainder rounding —

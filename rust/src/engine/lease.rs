@@ -1,0 +1,174 @@
+//! Quota leases: how tier headroom reaches the sharded engine core.
+//!
+//! The sharded engine (see the module docs of [`crate::engine`]) keeps
+//! each session's residency/ledger accounting behind its shard's own
+//! lock; tier capacity, however, is a *global* resource. The bridge is
+//! the **lease protocol**: at every (re-)arbitration — an open, a close,
+//! a changeover demotion, a drift re-derivation — the global allocator
+//! stamps a fresh epoch, aggregates the arbiter's per-session quotas
+//! into one [`LeaseGrant`] per shard, and installs the grants under the
+//! shard locks. Between arbitrations the observe/finish hot path spends
+//! its shard's lease (via the per-session quotas it refines) without
+//! ever taking the global lock.
+//!
+//! Epoch rules ("revoke without resurrecting"):
+//!
+//! - Epochs are issued by the single global [`LeaseAllocator`] and are
+//!   strictly monotonic.
+//! - A grant installs only over a lease with a *strictly older* epoch.
+//!   A revoked lease — one superseded by a later arbitration, e.g. a
+//!   drift re-derivation shrinking a drifted stream's share — can never
+//!   be re-installed by a straggler, for the same reason a fired
+//!   changeover boundary never re-opens.
+//! - Grants are derived from the same [`allocate_assignments`] clamp the
+//!   arbiters share, so per shard and per tier the granted slots sum to
+//!   at most the tier's (orphan-adjusted) capacity across all shards —
+//!   the conservation invariant `tests/shard_invariants.rs` checks.
+//!
+//! [`allocate_assignments`]: crate::engine::arbiter::allocate_assignments
+//!
+//! The module also owns the two small concurrency primitives the core
+//! is built from: [`CachePadded`], which keeps neighbouring shard locks
+//! off one cache line (the couchestor-style sharded-map idiom), and
+//! [`BackendLease`], the *lazy* backend lock an observation takes only
+//! if it actually touches storage — the common rejected observation
+//! (the top-K admits ~`k·ln n` of `n` documents) runs entirely inside
+//! its shard.
+
+use crate::storage::StorageBackend;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Pad (and align) a value to a 64-byte cache line so adjacent shard
+/// locks never false-share. `#[repr(align(64))]` covers the common
+/// x86-64/aarch64 line size.
+#[repr(align(64))]
+pub(crate) struct CachePadded<T>(pub T);
+
+/// One shard's slice of the fleet's tier headroom, granted by the
+/// global allocator at arbitration time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeaseGrant {
+    /// Allocator epoch the grant was issued under (strictly monotonic
+    /// across arbitrations; stale grants are never installed).
+    pub epoch: u64,
+    /// Shard the grant is addressed to.
+    pub shard: usize,
+    /// Granted slots per tier: the sum of the shard's sessions' quotas
+    /// (`None` = unbounded tier, no lease needed).
+    pub per_tier: Vec<Option<u64>>,
+    /// Arbitrated sessions covered by the grant, ascending id.
+    pub sessions: Vec<u64>,
+}
+
+/// The global epoch source. Lives inside the engine's global state, so
+/// epochs are only ever stamped under the global lock.
+#[derive(Debug, Default)]
+pub(crate) struct LeaseAllocator {
+    epoch: u64,
+}
+
+impl LeaseAllocator {
+    /// Stamp the next arbitration's epoch.
+    pub fn next_epoch(&mut self) -> u64 {
+        self.epoch += 1;
+        self.epoch
+    }
+}
+
+/// A lazy, poison-recovering lock on the shared storage backend, scoped
+/// to one observation of one stream.
+///
+/// The backend mutex is the *last* lock in the engine's total order
+/// (global < shard 0 < … < shard S−1 < backend), and this wrapper is how
+/// the hot path touches it: the lock is taken on first use, the stream's
+/// ledger attribution is set inside the same critical section, and the
+/// guard is then held for the remainder of the observation so multi-op
+/// sequences (victim delete + write, a naive demotion chain, a
+/// changeover demotion) are atomic against other shards. An observation
+/// that never touches storage — the tracker rejected the document and no
+/// boundary was due — never locks the backend at all.
+pub(crate) struct BackendLease<'a> {
+    backend: &'a Mutex<Box<dyn StorageBackend>>,
+    recoveries: &'a AtomicU64,
+    guard: Option<MutexGuard<'a, Box<dyn StorageBackend>>>,
+    stream: u64,
+}
+
+impl<'a> BackendLease<'a> {
+    pub fn new(
+        backend: &'a Mutex<Box<dyn StorageBackend>>,
+        recoveries: &'a AtomicU64,
+        stream: u64,
+    ) -> Self {
+        Self { backend, recoveries, guard: None, stream }
+    }
+
+    /// The backend, locking it (and attributing the stream) on first use.
+    pub fn get(&mut self) -> &mut dyn StorageBackend {
+        if self.guard.is_none() {
+            let mut g = match self.backend.lock() {
+                Ok(g) => g,
+                Err(poisoned) => {
+                    self.backend.clear_poison();
+                    self.recoveries.fetch_add(1, Ordering::Relaxed);
+                    poisoned.into_inner()
+                }
+            };
+            g.set_attribution(Some(self.stream));
+            self.guard = Some(g);
+        }
+        self.guard.as_mut().expect("guard just installed").as_mut()
+    }
+
+    /// Whether the observation touched the backend at all (drives the
+    /// auto-checkpoint check: an untouched journal cannot have grown).
+    pub fn used(&self) -> bool {
+        self.guard.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocator_epochs_are_strictly_monotonic() {
+        let mut alloc = LeaseAllocator::default();
+        let a = alloc.next_epoch();
+        let b = alloc.next_epoch();
+        let c = alloc.next_epoch();
+        assert!(a < b && b < c);
+        assert_eq!(a, 1, "epoch 0 is reserved for 'never granted'");
+    }
+
+    #[test]
+    fn cache_padding_separates_lines() {
+        assert!(std::mem::align_of::<CachePadded<Mutex<u64>>>() >= 64);
+        assert!(std::mem::size_of::<CachePadded<Mutex<u64>>>() >= 64);
+    }
+
+    #[test]
+    fn backend_lease_is_lazy_and_attributes_on_first_use() {
+        use crate::cost::PerDocCosts;
+        use crate::storage::{StorageSim, TierId};
+        let costs = vec![
+            PerDocCosts { write: 1.0, read: 1.0, rent_window: 0.0 },
+            PerDocCosts { write: 2.0, read: 0.5, rent_window: 0.0 },
+        ];
+        let mut sim = StorageSim::with_tiers(costs.clone(), false);
+        sim.register_stream(7, costs).unwrap();
+        let backend: Mutex<Box<dyn StorageBackend>> = Mutex::new(Box::new(sim));
+        let recoveries = AtomicU64::new(0);
+        let mut lease = BackendLease::new(&backend, &recoveries, 7);
+        assert!(!lease.used(), "no backend op yet: the lock must be untouched");
+        lease.get().put(7 << 40, TierId(0), 0.0).unwrap();
+        assert!(lease.used());
+        drop(lease);
+        let g = backend.lock().unwrap();
+        let residents = g.residents(TierId(0));
+        assert_eq!(residents.len(), 1);
+        assert_eq!(residents[0].owner, Some(7), "attribution set inside the lease");
+        assert_eq!(recoveries.load(Ordering::Relaxed), 0);
+    }
+}

@@ -24,6 +24,7 @@ use crate::topk::{BoundedTopK, Eviction, Scored};
 use anyhow::{bail, Result};
 
 use super::arbiter::SessionSnapshot;
+use super::lease::BackendLease;
 
 /// Bits of the global document id reserved for the stream-local index.
 pub(crate) const INDEX_BITS: u32 = 40;
@@ -146,8 +147,9 @@ impl SessionOutcome {
 pub(crate) struct ObserveEvents {
     /// A changeover demotion fired — capacity was freed.
     pub fired: bool,
-    /// The drift detector flagged this stream on *this* observation
-    /// (single-shot: never set again for the session).
+    /// The drift detector flagged this stream on *this* observation.
+    /// Multi-shot: the detector re-arms with a halved FP budget after
+    /// each reaction, so a session can report several over its life.
     pub drift: bool,
 }
 
@@ -177,8 +179,11 @@ pub(crate) struct SessionState {
     tracker: BoundedTopK,
     /// Realized admission curve vs the a-priori k/i law (ADR-007). Always
     /// on — O(1) per observation — whether or not the engine is adaptive.
+    /// Restarted on every detection so each detection epoch is judged on
+    /// its own suffix (the multi-shot contract with the detector).
     estimator: AdmissionEstimator,
-    /// Sequential drift test over the estimator (single-shot per session).
+    /// Sequential drift test over the estimator (multi-shot: the
+    /// per-stream FP budget is split δ/2, δ/4, … across reactions).
     detector: DriftDetector,
     next_index: u64,
     /// This session's resident count per tier under proactive placement.
@@ -301,26 +306,34 @@ impl SessionState {
     /// adaptive engine re-arbitrates on that too, ADR-007).
     pub fn observe(
         &mut self,
-        backend: &mut dyn StorageBackend,
+        backend: &mut BackendLease<'_>,
         score: f64,
     ) -> Result<ObserveEvents> {
-        let i = self.begin_observation(backend)?;
+        let i = self.begin_observation()?;
         let at = i as f64 / self.n as f64;
         let mut admitted = true;
         match self.tracker.offer(Scored::new(i, score)) {
+            // the common case: no storage touched, the backend lock is
+            // never taken (the lease stays unused)
             Eviction::Rejected => admitted = false,
             Eviction::Accepted => self.write_planned(backend, i, at)?,
             Eviction::Replaced { victim } => {
                 let vgid = self.gid(victim.index);
-                if let Some(t) = backend.locate(vgid) {
+                if let Some(t) = backend.get().locate(vgid) {
                     self.in_use[t.0] = self.in_use[t.0].saturating_sub(1);
                 }
-                backend.delete(vgid, at)?;
+                backend.get().delete(vgid, at)?;
                 self.write_planned(backend, i, at)?;
             }
         }
         self.estimator.record(admitted);
         let drift = self.detector.check(&self.estimator).is_some();
+        if drift {
+            // start the next detection epoch: the re-armed detector (with
+            // its halved budget) judges the post-reaction suffix on its
+            // own realized curve, not the drifted history
+            self.estimator = AdmissionEstimator::new(self.k);
+        }
         let fired = self.fire_due_boundaries(backend, i, at)?;
         self.record_series_point();
         Ok(ObserveEvents { fired, drift })
@@ -344,7 +357,7 @@ impl SessionState {
     /// Returns `true` if anything fired (capacity was freed).
     fn fire_due_boundaries(
         &mut self,
-        backend: &mut dyn StorageBackend,
+        backend: &mut BackendLease<'_>,
         i: u64,
         at: f64,
     ) -> Result<bool> {
@@ -383,12 +396,13 @@ impl SessionState {
     /// document (ADR-005). Returns the number of documents moved.
     fn bulk_demote(
         &mut self,
-        backend: &mut dyn StorageBackend,
+        backend: &mut BackendLease<'_>,
         j: usize,
         at: f64,
     ) -> Result<u64> {
+        let b = backend.get();
         let from = TierId(j);
-        let mine = backend
+        let mine = b
             .residents(from)
             .iter()
             .filter(|r| r.owner == Some(self.id))
@@ -399,8 +413,8 @@ impl SessionState {
         let sink = self.plan.num_tiers() - 1;
         let mut dest = j + 1;
         while dest < sink {
-            let room = match backend.capacity(TierId(dest)) {
-                Some(cap) => cap.saturating_sub(backend.resident_len(TierId(dest))),
+            let room = match b.capacity(TierId(dest)) {
+                Some(cap) => cap.saturating_sub(b.resident_len(TierId(dest))),
                 None => usize::MAX,
             };
             if room >= mine {
@@ -409,10 +423,10 @@ impl SessionState {
             dest += 1;
         }
         let to = TierId(dest);
-        let moved = if backend.resident_len(from) == mine {
-            backend.migrate_all(from, to, at)?
+        let moved = if b.resident_len(from) == mine {
+            b.migrate_all(from, to, at)?
         } else {
-            backend.migrate_stream(self.id, from, to, at)?
+            b.migrate_stream(self.id, from, to, at)?
         };
         let moved_n = moved as usize;
         self.in_use[dest] += moved_n;
@@ -426,34 +440,37 @@ impl SessionState {
     /// sessions should own the engine exclusively.
     pub fn observe_with_policy(
         &mut self,
-        backend: &mut dyn StorageBackend,
+        backend: &mut BackendLease<'_>,
         score: f64,
         policy: &mut dyn PlacementPolicy,
     ) -> Result<()> {
         self.policy_driven = true;
-        let i = self.begin_observation(backend)?;
+        let i = self.begin_observation()?;
         let at = i as f64 / self.n as f64;
+        // policy mode always consults the backend (`on_step` sees it every
+        // observation), so take the lease up front
+        let b = backend.get();
         match self.tracker.offer(Scored::new(i, score)) {
             Eviction::Rejected => {}
             Eviction::Accepted => {
                 let tier = policy.place(i, self.n);
-                backend.put(self.gid(i), tier, at)?;
+                b.put(self.gid(i), tier, at)?;
                 self.writes += 1;
             }
             Eviction::Replaced { victim } => {
-                backend.delete(self.gid(victim.index), at)?;
+                b.delete(self.gid(victim.index), at)?;
                 let tier = policy.place(i, self.n);
-                backend.put(self.gid(i), tier, at)?;
+                b.put(self.gid(i), tier, at)?;
                 self.writes += 1;
             }
         }
-        for order in policy.on_step(i, self.n, &*backend) {
+        for order in policy.on_step(i, self.n, &*b) {
             match order {
                 MigrationOrder::All { from, to } => {
-                    backend.migrate_all(from, to, at)?;
+                    b.migrate_all(from, to, at)?;
                 }
                 MigrationOrder::Doc { doc, to } => {
-                    backend.migrate_doc(doc, to, at)?;
+                    b.migrate_doc(doc, to, at)?;
                 }
             }
         }
@@ -461,13 +478,14 @@ impl SessionState {
         Ok(())
     }
 
-    fn begin_observation(&mut self, backend: &mut dyn StorageBackend) -> Result<u64> {
+    /// Claim the next stream index (attribution is set by the lease, on
+    /// first backend use — a rejected observation never touches storage).
+    fn begin_observation(&mut self) -> Result<u64> {
         let i = self.next_index;
         if i >= self.n {
             bail!("session {} longer than declared N={}", self.id, self.n);
         }
         self.next_index += 1;
-        backend.set_attribution(Some(self.id));
         Ok(i)
     }
 
@@ -483,10 +501,14 @@ impl SessionState {
     /// of the contended tier (naive).
     fn write_planned(
         &mut self,
-        backend: &mut dyn StorageBackend,
+        backend: &mut BackendLease<'_>,
         index: u64,
         at: f64,
     ) -> Result<()> {
+        // an accepted document always writes, so take the lease now; the
+        // room checks and the put then happen inside one backend critical
+        // section (no other shard can race the check against the write)
+        let b = backend.get();
         let gid = self.gid(index);
         let sink = self.plan.num_tiers() - 1;
         let mut tier = self.plan.tier_for(index).0;
@@ -495,14 +517,14 @@ impl SessionState {
             // plan; on a full tier, demote the oldest resident — possibly
             // another session's — to the nearest colder tier with room
             // (shared-cache thrash). The unbounded sink always has room.
-            while tier < sink && !backend.has_room(TierId(tier)) {
-                match backend.oldest_resident(TierId(tier)) {
+            while tier < sink && !b.has_room(TierId(tier)) {
+                match b.oldest_resident(TierId(tier)) {
                     Some(victim) => {
                         let mut dest = tier + 1;
-                        while dest < sink && !backend.has_room(TierId(dest)) {
+                        while dest < sink && !b.has_room(TierId(dest)) {
                             dest += 1;
                         }
-                        backend.migrate_doc(victim, TierId(dest), at)?;
+                        b.migrate_doc(victim, TierId(dest), at)?;
                         self.demotions_caused += 1;
                         break;
                     }
@@ -511,20 +533,21 @@ impl SessionState {
             }
         } else {
             // Arbitrated: degrade over-quota placements toward the sink
-            // (never reject). The has_room check is a safety net — with
+            // (never reject). The quota is this session's slice of its
+            // shard's lease; the has_room check is a safety net — with
             // Σ quotas ≤ capacity it is unreachable.
             while tier < sink {
                 let quota_ok = match self.quotas[tier] {
                     Some(q) => (self.in_use[tier] as u64) < q,
                     None => true,
                 };
-                if quota_ok && backend.has_room(TierId(tier)) {
+                if quota_ok && b.has_room(TierId(tier)) {
                     break;
                 }
                 tier += 1;
             }
         }
-        backend.put(gid, TierId(tier), at)?;
+        b.put(gid, TierId(tier), at)?;
         self.in_use[tier] += 1;
         self.writes += 1;
         Ok(())

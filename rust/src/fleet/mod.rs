@@ -133,6 +133,36 @@ pub fn rent_dominated_fleet(
         .collect()
 }
 
+/// Build a deterministic skewed-length demo fleet of `m` streams: the
+/// class-0 balanced economy of [`demo_fleet`] (interior `r*/N ≈ 0.57`,
+/// rent excluded) with every fourth stream `8×` longer than the base.
+/// The length skew is the work-stealing scheduler's stress shape
+/// (ADR-008): a fixed `id % workers` partition strands the long streams
+/// on a few workers while the rest idle, whereas deque stealing
+/// rebalances them — `benches/fleet_throughput.rs` sweeps worker counts
+/// over exactly this fleet and asserts the report digest never moves.
+/// `salt` perturbs the interestingness profile mix only.
+pub fn skewed_fleet(m: usize, n_base: u64, k_base: u64, salt: u64) -> Vec<StreamSpec> {
+    let a = PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.0 };
+    let b = PerDocCosts { write: 3.0, read: 0.5, rent_window: 0.0 };
+    (0..m)
+        .map(|i| {
+            let n = n_base.max(1) * if i % 4 == 0 { 8 } else { 1 };
+            let k = k_base.clamp(1, n);
+            let profile = match (i as u64 + salt) % 3 {
+                0 => SeriesProfile::Mixed { p_oscillatory: 0.3 },
+                1 => SeriesProfile::Oscillatory { period: 32.0 },
+                _ => SeriesProfile::Noisy { level: 12.0 },
+            };
+            StreamSpec::new(
+                i as u64,
+                CostModel::new(n, k, a, b).with_rent(false),
+                profile,
+            )
+        })
+        .collect()
+}
+
 /// Build a deterministic drift-demo fleet of `m` streams (experiment
 /// E-DRIFT, ADR-007). Every stream runs the class-0 balanced economy of
 /// [`demo_fleet`] (interior `r*/N ≈ 0.57`, rent excluded) with the usual
@@ -199,6 +229,23 @@ mod tests {
         for s in demo_fleet(6, 500, 8, true, 2) {
             assert!(crate::cost::hot_demand(&s.model, false) >= 1, "stream {}", s.id);
         }
+    }
+
+    #[test]
+    fn skewed_fleet_shapes() {
+        let specs = skewed_fleet(6, 100, 8, 2);
+        assert_eq!(specs.len(), 6);
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+            let expect_n = if i % 4 == 0 { 800 } else { 100 };
+            assert_eq!(s.model.n, expect_n, "stream {i}");
+            assert_eq!(s.model.k, 8);
+            assert!(!s.model.include_rent);
+            assert!(s.shift.is_none());
+        }
+        // the skew is real: the long tail dominates a fixed partition
+        let total: u64 = specs.iter().map(|s| s.model.n).sum();
+        assert_eq!(total, 2 * 800 + 4 * 100);
     }
 
     #[test]

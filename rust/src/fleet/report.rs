@@ -58,6 +58,50 @@ impl FleetReport {
         self.ledger.total()
     }
 
+    /// Deterministic fingerprint of the run's *outcome*: FNV-1a 64 over
+    /// every placement-relevant field — mode, capacity, hot peak, drift
+    /// counters, document totals, and each stream's full report row
+    /// (float fields hashed by their bit patterns). Timing fields (wall,
+    /// throughput), the worker count, and the run-ledger total (whose
+    /// float summation order varies across schedules) are deliberately
+    /// excluded, so an arbitrated fleet must produce the *same* digest
+    /// at every worker count — the CI parity gate and the
+    /// `fleet_throughput` bench both compare exactly this value.
+    pub fn digest(&self) -> u64 {
+        fn put(h: &mut u64, v: u64) {
+            for b in v.to_le_bytes() {
+                *h = (*h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        put(&mut h, match self.mode {
+            FleetMode::Arbitrated => 0,
+            FleetMode::Naive => 1,
+        });
+        put(&mut h, self.hot_capacity);
+        put(&mut h, self.hot_peak);
+        put(&mut h, self.drift_detections);
+        put(&mut h, self.drift_rederivations);
+        put(&mut h, self.docs_processed);
+        put(&mut h, self.arbitration.aggregate_demand);
+        put(&mut h, self.arbitration.oversubscribed as u64);
+        put(&mut h, self.streams.len() as u64);
+        for s in &self.streams {
+            put(&mut h, s.id);
+            put(&mut h, s.n);
+            put(&mut h, s.k);
+            put(&mut h, s.demand);
+            put(&mut h, s.quota);
+            put(&mut h, s.r_effective);
+            put(&mut h, s.analytic.to_bits());
+            put(&mut h, s.measured.to_bits());
+            put(&mut h, s.hot_reads);
+            put(&mut h, s.cold_reads);
+            put(&mut h, s.demotions_caused);
+        }
+        h
+    }
+
     /// Σ of per-stream attributed ledger totals — must equal
     /// [`FleetReport::total_cost`] (the conservation invariant).
     pub fn per_stream_total(&self) -> f64 {

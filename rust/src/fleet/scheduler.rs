@@ -1,29 +1,45 @@
 //! The fleet scheduler: M concurrent top-K streams multiplexed over the
-//! shared capacity-limited storage by a worker pool — a thin compatibility
-//! wrapper over [`crate::engine::Engine`] since ADR-002.
+//! shared capacity-limited storage by a work-stealing worker pool
+//! (ADR-008) — a thin compatibility wrapper over
+//! [`crate::engine::Engine`] since ADR-002.
 //!
-//! Thread topology (reuses the [`crate::pipeline`] idiom — std threads +
-//! bounded `sync_channel` = backpressure):
+//! Thread topology:
 //!
 //! ```text
-//!   worker 0 (streams 0, W, 2W, ...) ─┐
-//!   worker 1 (streams 1, W+1, ...)   ─┼─(sync_channel: scored batches)──> placer
-//!        ...                         ─┘       (stream_id, score)*batch      │
-//!                                       one engine StreamSession per stream ─┘
+//!   deque 0: [task task ...] <── worker 0 ──┐  pop own front,
+//!   deque 1: [task ...]      <── worker 1 ──┤  steal victims' back,
+//!       ...                       ...       ┘  observe inline
 //! ```
 //!
-//! Workers own the expensive per-document work — synthetic series
-//! generation from each stream's interestingness profile plus native RBF
-//! scoring — and interleave their assigned streams round-robin so all
-//! streams progress concurrently. The placer thread drives one
-//! [`crate::engine::StreamSession`] per stream against the shared engine;
-//! per-stream document order is preserved because each stream is produced
-//! by exactly one worker and `mpsc` delivery is FIFO per sender.
+//! Each *task* owns one stream end-to-end: its seeded generator state
+//! plus its engine [`StreamSession`]. A worker pops a task, produces and
+//! places one batch inline — synthetic series generation from the
+//! stream's interestingness profile, native RBF scoring, then `observe`
+//! straight into the sharded engine core — and requeues the task at its
+//! own deque's back. There is no placer thread and no channel anymore:
+//! since ADR-008 the observe hot path takes only the stream's shard
+//! lock, so workers place concurrently instead of serializing behind a
+//! single engine-owning thread. Idle workers steal from the *back* of
+//! other workers' deques, so a worker stuck behind an 8× longer stream
+//! (see [`crate::fleet::skewed_fleet`]) sheds its queued work to the
+//! fleet instead of stranding it.
 //!
-//! Per-stream score sequences are seeded independently of the worker
-//! count, so placement outcomes depend on worker count only through
-//! cross-stream arrival interleaving (which arbitrated mode is, by
-//! construction, insensitive to).
+//! Determinism at any worker count:
+//!
+//! - a task lives in exactly one deque at a time, so each stream's
+//!   documents are produced and observed in stream order no matter which
+//!   workers end up running it;
+//! - per-stream score sequences are seeded independently of the worker
+//!   partitioning ([`stream_seed`]);
+//! - arbitrated keep-family placement is interleaving-insensitive by
+//!   construction: quotas sum to at most the hot capacity, so a
+//!   placement depends only on the owning session's state, never on
+//!   which other stream's document raced it to the backend.
+//!
+//! Together these make arbitrated fleet reports bitwise identical
+//! ([`FleetReport::digest`]) across worker counts — the CI parity gate.
+//! Migrate-family fleets re-lend freed capacity mid-run and remain
+//! interleaving-sensitive, exactly as before ADR-008.
 
 use super::arbiter::{arbitrate_with, Arbitration};
 use super::report::{FleetReport, StreamReport};
@@ -32,7 +48,9 @@ use crate::engine::{BackendSpec, Engine, StreamSession, TierTopology};
 use crate::interestingness::RbfScorer;
 use crate::policy::PlanFamily;
 use anyhow::{bail, Context, Result};
-use std::sync::mpsc::sync_channel;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// How the fleet handles hot-tier contention.
@@ -54,9 +72,12 @@ pub struct FleetConfig {
     pub hot_capacity: u64,
     /// Worker-pool size (clamped to the stream count).
     pub workers: usize,
-    /// Bounded channel capacity, in batches (the backpressure knob).
+    /// Batches-in-flight knob of the pre-ADR-008 channel pipeline. The
+    /// work-stealing scheduler places inline and has no channel, so the
+    /// field is ignored; it is kept so existing configs and TOML launch
+    /// files parse unchanged.
     pub channel_capacity: usize,
-    /// Documents scored per batch message.
+    /// Documents scored per scheduling quantum (one deque pop).
     pub batch: usize,
     /// Synthetic series length per document.
     pub t_len: usize,
@@ -75,6 +96,8 @@ pub struct FleetConfig {
     pub backend: BackendSpec,
     /// Run the fleet under the drift-aware [`crate::adaptive::AdaptiveArbiter`]
     /// with the engine's drift→re-derivation trigger armed (ADR-007).
+    /// On a durable backend the bandit's learned state is persisted to
+    /// `<root>/bandit.state` at checkpoint time (ADR-008).
     pub adaptive: bool,
 }
 
@@ -95,7 +118,7 @@ impl Default for FleetConfig {
     }
 }
 
-/// A stream's producer-side state inside a worker.
+/// A stream's producer-side state inside a task.
 struct WorkerStream {
     id: u64,
     remaining: u64,
@@ -104,6 +127,14 @@ struct WorkerStream {
     rng: crate::util::Rng,
     profile: super::stream::SeriesProfile,
     shift: Option<super::stream::ScoreShift>,
+}
+
+/// One stream's unit of scheduling: generator state + engine session.
+/// Exactly one deque (or one worker's hands) holds a task at any moment,
+/// which is what preserves per-stream document order under stealing.
+struct StreamTask {
+    ws: WorkerStream,
+    session: StreamSession,
 }
 
 /// Per-stream RNG seed, independent of worker partitioning so results are
@@ -144,100 +175,147 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
         builder = builder.backend(durable);
     }
     if config.adaptive {
-        builder = builder
-            .arbiter(Box::new(crate::adaptive::AdaptiveArbiter::new()))
-            .adaptive(true);
+        // durable roots get a durable bandit: rewards learned this run
+        // are written at checkpoint time and reloaded by whoever reopens
+        // the root (a restart resumes the learning, not a cold start)
+        let arbiter = match &config.backend {
+            BackendSpec::Fs { root } | BackendSpec::Obj { root } => {
+                crate::adaptive::AdaptiveArbiter::with_state_file(root.join("bandit.state"))
+            }
+            BackendSpec::Sim => crate::adaptive::AdaptiveArbiter::new(),
+        };
+        builder = builder.arbiter(Box::new(arbiter)).adaptive(true);
     }
     let engine = builder.build()?;
     let naive = config.mode == FleetMode::Naive;
-    let mut sessions: Vec<StreamSession> = engine.open_streams(
+    let sessions: Vec<StreamSession> = engine.open_streams(
         specs.iter().map(|s| s.session_spec_with(naive, config.family)).collect(),
     )?;
     let total_docs: u64 = specs.iter().map(|s| s.model.n).sum();
 
-    // ---- worker pool -------------------------------------------------------
+    // ---- work-stealing worker pool -----------------------------------------
     let workers = config.workers.max(1).min(specs.len());
     let batch = config.batch.max(1);
     let t_len = config.t_len.max(2);
-    let (tx, rx) = sync_channel::<Vec<(u64, f32)>>(config.channel_capacity.max(1));
-    let mut handles = Vec::with_capacity(workers);
-    for w in 0..workers {
-        let mut my_streams: Vec<WorkerStream> = specs
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| i % workers == w)
-            .map(|(_, s)| WorkerStream {
-                id: s.id,
-                remaining: s.model.n,
+    // initial partition: round-robin, same as the pre-ADR-008 fixed
+    // assignment — stealing only changes who *runs* a task, not its seeds
+    let deques: Vec<Mutex<VecDeque<StreamTask>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (spec, session) in specs.iter().zip(sessions) {
+        let task = StreamTask {
+            ws: WorkerStream {
+                id: spec.id,
+                remaining: spec.model.n,
                 produced: 0,
-                rng: crate::util::Rng::new(stream_seed(config.seed, s.id)),
-                profile: s.profile,
-                shift: s.shift,
-            })
-            .collect();
-        let tx = tx.clone();
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("fleet-worker-{w}"))
-                .spawn(move || -> u64 {
-                    let scorer = RbfScorer::synthetic_demo();
-                    let mut produced = 0u64;
-                    loop {
-                        let mut any = false;
-                        for ws in my_streams.iter_mut() {
-                            if ws.remaining == 0 {
-                                continue;
+                rng: crate::util::Rng::new(stream_seed(config.seed, spec.id)),
+                profile: spec.profile,
+                shift: spec.shift,
+            },
+            session,
+        };
+        deques[spec.id as usize % workers].lock().unwrap().push_back(task);
+    }
+    let live = AtomicUsize::new(specs.len());
+    let produced = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let completed: Mutex<Vec<StreamTask>> = Mutex::new(Vec::with_capacity(specs.len()));
+
+    {
+        let deques = &deques;
+        let live = &live;
+        let produced = &produced;
+        let stop = &stop;
+        let error = &error;
+        let completed = &completed;
+        std::thread::scope(|scope| -> Result<()> {
+            for w in 0..workers {
+                std::thread::Builder::new()
+                    .name(format!("fleet-worker-{w}"))
+                    .spawn_scoped(scope, move || {
+                        let scorer = RbfScorer::synthetic_demo();
+                        loop {
+                            if stop.load(Ordering::Acquire) {
+                                return;
                             }
-                            any = true;
-                            let take = batch.min(ws.remaining as usize);
-                            let mut out = Vec::with_capacity(take);
+                            // own deque front first (affinity), then scan
+                            // the victims and steal from their backs
+                            let mut task = deques[w].lock().unwrap().pop_front();
+                            if task.is_none() {
+                                for off in 1..deques.len() {
+                                    let victim = (w + off) % deques.len();
+                                    if let Some(t) =
+                                        deques[victim].lock().unwrap().pop_back()
+                                    {
+                                        task = Some(t);
+                                        break;
+                                    }
+                                }
+                            }
+                            let Some(mut t) = task else {
+                                if live.load(Ordering::Acquire) == 0 {
+                                    return;
+                                }
+                                // someone else holds the last tasks — the
+                                // requeue (or completion) will show up
+                                std::thread::yield_now();
+                                continue;
+                            };
+                            let take = batch.min(t.ws.remaining as usize);
                             for _ in 0..take {
-                                let series = generate_series(ws.profile, t_len, &mut ws.rng);
+                                let series =
+                                    generate_series(t.ws.profile, t_len, &mut t.ws.rng);
                                 let mut score = scorer.score_series(&series);
                                 // distribution shift in f32, before the f64
                                 // widening, so shifted runs stay bit-exact
                                 // regardless of worker partitioning
-                                if let Some(sh) = ws.shift {
-                                    if ws.produced >= sh.at {
+                                if let Some(sh) = t.ws.shift {
+                                    if t.ws.produced >= sh.at {
                                         score += sh.boost;
                                     }
                                 }
-                                ws.produced += 1;
-                                out.push((ws.id, score));
+                                t.ws.produced += 1;
+                                if let Err(e) = t.session.observe(score as f64) {
+                                    let mut slot = error.lock().unwrap();
+                                    if slot.is_none() {
+                                        *slot = Some(e);
+                                    }
+                                    drop(slot);
+                                    stop.store(true, Ordering::Release);
+                                    live.fetch_sub(1, Ordering::AcqRel);
+                                    return;
+                                }
                             }
-                            ws.remaining -= take as u64;
-                            produced += take as u64;
-                            if tx.send(out).is_err() {
-                                return produced; // placer gone
+                            t.ws.remaining -= take as u64;
+                            produced.fetch_add(take as u64, Ordering::Relaxed);
+                            if t.ws.remaining == 0 {
+                                completed.lock().unwrap().push(t);
+                                live.fetch_sub(1, Ordering::AcqRel);
+                            } else {
+                                deques[w].lock().unwrap().push_back(t);
                             }
                         }
-                        if !any {
-                            return produced;
-                        }
-                    }
-                })
-                .context("spawning fleet worker")?,
+                    })
+                    .context("spawning fleet worker")?;
+            }
+            Ok(())
+        })?;
+    }
+    if let Some(e) = error.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        return Err(e);
+    }
+    let produced = produced.into_inner();
+    let mut tasks = completed.into_inner().unwrap_or_else(|p| p.into_inner());
+    if produced != total_docs || tasks.len() != specs.len() {
+        bail!(
+            "fleet: produced {produced} docs over {} finished streams, expected \
+             {total_docs} over {}",
+            tasks.len(),
+            specs.len()
         );
     }
-    drop(tx);
-
-    // ---- placer (this thread) ---------------------------------------------
-    let mut received = 0u64;
-    while received < total_docs {
-        let Ok(chunk) = rx.recv() else { break };
-        for (sid, score) in chunk {
-            sessions[sid as usize].observe(score as f64)?;
-            received += 1;
-        }
-    }
-    drop(rx);
-    let mut produced = 0u64;
-    for h in handles {
-        produced += h.join().expect("fleet worker panicked");
-    }
-    if received != total_docs || produced != total_docs {
-        bail!("fleet: produced {produced}, placed {received}, expected {total_docs}");
-    }
+    tasks.sort_by_key(|t| t.ws.id);
+    let sessions: Vec<StreamSession> = tasks.into_iter().map(|t| t.session).collect();
 
     // ---- settle + finish ---------------------------------------------------
     engine.settle_rent(1.0)?;
@@ -271,6 +349,11 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
             cold_reads: outcome.cold_reads(),
             demotions_caused: outcome.demotions_caused,
         });
+    }
+    if config.adaptive {
+        // flush learned state (the bandit rides Arbiter::on_checkpoint;
+        // a free no-op on the sim backend)
+        engine.checkpoint()?;
     }
 
     let wall = started.elapsed();
@@ -368,8 +451,32 @@ mod tests {
         for (x, y) in a.streams.iter().zip(b.streams.iter()) {
             assert_eq!(x.measured, y.measured, "stream {}", x.id);
         }
+        assert_eq!(a.digest(), b.digest(), "report digests must match bitwise");
         let rel = (a.total_cost() - b.total_cost()).abs() / a.total_cost().max(1e-12);
         assert!(rel < 1e-9, "fleet totals diverged: rel {rel}");
+    }
+
+    #[test]
+    fn work_stealing_preserves_digests_on_a_skewed_fleet() {
+        // every fourth stream is 8× longer: a fixed partition strands the
+        // long streams, stealing rebalances them — and neither stealing
+        // nor the worker count may leak into the report digest, drop a
+        // batch, or deliver one twice (docs_processed + per-stream fields
+        // are all digest inputs)
+        let specs = crate::fleet::skewed_fleet(6, 120, 6, 3);
+        let expected_docs: u64 = specs.iter().map(|s| s.model.n).sum();
+        let mut digests = std::collections::BTreeSet::new();
+        for workers in [1usize, 2, 4, 8] {
+            let report = run_fleet(
+                &specs,
+                &tiny_config(FleetMode::Arbitrated, 12, workers),
+            )
+            .unwrap();
+            assert_eq!(report.docs_processed, expected_docs, "{workers} workers");
+            assert_eq!(report.streams.len(), specs.len(), "{workers} workers");
+            digests.insert(report.digest());
+        }
+        assert_eq!(digests.len(), 1, "digests diverged across worker counts");
     }
 
     #[test]
@@ -393,6 +500,7 @@ mod tests {
         for (x, y) in a.streams.iter().zip(b.streams.iter()) {
             assert_eq!(x.measured, y.measured, "stream {}", x.id);
         }
+        assert_eq!(a.digest(), b.digest());
         // without --adaptive the detectors still count, but nothing re-derives
         cfg.adaptive = false;
         let plain = run_fleet(&specs, &cfg).unwrap();
@@ -484,6 +592,29 @@ mod tests {
         );
         // a stale root is refused, not silently corrupted
         assert!(run_fleet(&specs, &cfg).is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn adaptive_fleet_persists_bandit_state_on_durable_roots() {
+        // Auto + rent-dominated economics exercise the bandit; after the
+        // run the learned rewards must sit next to the journal
+        let specs = crate::fleet::rent_dominated_fleet(3, 200, 8, 4);
+        let root = crate::util::scratch_dir("fleet-bandit");
+        let mut cfg = tiny_config(FleetMode::Arbitrated, 64, 2);
+        cfg.family = crate::policy::PlanFamily::Auto;
+        cfg.backend = BackendSpec::Fs { root: root.clone() };
+        cfg.adaptive = true;
+        run_fleet(&specs, &cfg).unwrap();
+        let state = std::fs::read_to_string(root.join("bandit.state")).unwrap();
+        let bandit = crate::adaptive::FamilyBandit::decode(&state)
+            .expect("persisted record must parse");
+        let (keep, migrate) = bandit.pulls();
+        assert_eq!(
+            keep + migrate,
+            specs.len() as u64,
+            "every finished Auto stream rewards an arm"
+        );
         let _ = std::fs::remove_dir_all(&root);
     }
 }

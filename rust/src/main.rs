@@ -246,6 +246,11 @@ fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     let report = shptier::fleet::run_fleet(&launch.specs, &launch.config)?;
     println!("{}", report.table().render());
     println!("{}", report.summary());
+    if flags.contains_key("digest") {
+        // stable one-line fingerprint of the run outcome, for the CI
+        // worker-count parity gate (grep "^digest " and compare)
+        println!("digest {:016x}", report.digest());
+    }
     Ok(())
 }
 
@@ -470,7 +475,7 @@ USAGE:
   shptier run [--config configs/case_study_2.toml]
   shptier fleet [--streams M] [--docs N] [--k K] [--capacity C]
                 [--workers W] [--mode arbitrated|naive]
-                [--family keep|migrate|auto] [--adaptive]
+                [--family keep|migrate|auto] [--adaptive] [--digest]
                 [--backend sim|fs:<root>|obj:<root>]
                 [--config configs/fleet.toml]
   shptier engine [--streams M] [--docs N] [--k K] [--tiers 2..4]

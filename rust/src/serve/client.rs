@@ -1,14 +1,24 @@
 //! Blocking std-only client for the placement server.
 //!
-//! One TCP connection per request (the server always answers
-//! `Connection: close`), typed payloads from [`crate::serve::wire`].
-//! Used by the `serve_*` test suites and the `shptier serve-soak`
-//! harness; it is deliberately the *only* HTTP client in the tree, so
-//! protocol drift between server and consumers shows up as a unit-test
-//! failure here rather than in an external tool.
+//! Connections are persistent (HTTP/1.1 keep-alive, ADR-008): each
+//! `Client` instance caches one TCP connection and reuses it across
+//! requests; responses are framed by `Content-Length`, never by EOF.
+//! The server may close a cached connection *between* requests (idle
+//! reclaim or yielding its worker to a waiting connection), so a
+//! request that fails on a *reused* connection before any response
+//! byte arrives is retried exactly once on a fresh connection — safe,
+//! because the failure proves the server never processed it. `Clone`
+//! hands each clone its own empty connection slot, so concurrent
+//! threads never serialize on a shared socket. Typed payloads come
+//! from [`crate::serve::wire`]. Used by the `serve_*` test suites and
+//! the `shptier serve-soak` harness; it is deliberately the *only*
+//! HTTP client in the tree, so protocol drift between server and
+//! consumers shows up as a unit-test failure here rather than in an
+//! external tool.
 
 use std::io::Write as _;
 use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::cost::PerDocCosts;
@@ -30,21 +40,51 @@ pub enum OpenOutcome {
     Rejected { status: u16, reason: Option<String>, error: String },
 }
 
-/// Blocking client bound to one server address.
-#[derive(Debug, Clone)]
+/// Blocking client bound to one server address, holding one cached
+/// keep-alive connection. Cloning yields a client with its own (empty)
+/// connection slot — see the module docs.
+#[derive(Debug)]
 pub struct Client {
     addr: SocketAddr,
     timeout: Duration,
+    conn: Arc<Mutex<Option<TcpStream>>>,
+}
+
+impl Clone for Client {
+    fn clone(&self) -> Self {
+        Self {
+            addr: self.addr,
+            timeout: self.timeout,
+            conn: Arc::new(Mutex::new(None)),
+        }
+    }
 }
 
 impl Client {
     pub fn new(addr: SocketAddr) -> Self {
-        Self { addr, timeout: Duration::from_secs(30) }
+        Self { addr, timeout: Duration::from_secs(30), conn: Arc::new(Mutex::new(None)) }
     }
 
     pub fn with_timeout(mut self, timeout: Duration) -> Self {
         self.timeout = timeout;
         self
+    }
+
+    fn connect(&self) -> Result<TcpStream, String> {
+        let stream = TcpStream::connect(self.addr).map_err(|e| format!("connect: {e}"))?;
+        stream.set_read_timeout(Some(self.timeout)).map_err(|e| format!("timeout: {e}"))?;
+        stream.set_write_timeout(Some(self.timeout)).map_err(|e| format!("timeout: {e}"))?;
+        Ok(stream)
+    }
+
+    /// Transport half of a request: send the pre-rendered bytes, read
+    /// one `Content-Length`-framed response. No JSON parsing here —
+    /// the retry decision in [`Client::call_with`] must distinguish
+    /// "the server never saw this request" from post-response errors.
+    fn exchange(stream: &mut TcpStream, request: &str) -> Result<http::RawResponse, String> {
+        stream.write_all(request.as_bytes()).map_err(|e| format!("send: {e}"))?;
+        stream.flush().map_err(|e| format!("send: {e}"))?;
+        http::read_response(stream)
     }
 
     fn call(
@@ -54,22 +94,60 @@ impl Client {
         body: Option<&Json>,
         bearer: Option<&str>,
     ) -> Result<(u16, Json), String> {
-        let stream = TcpStream::connect(self.addr).map_err(|e| format!("connect: {e}"))?;
-        stream.set_read_timeout(Some(self.timeout)).map_err(|e| format!("timeout: {e}"))?;
-        stream.set_write_timeout(Some(self.timeout)).map_err(|e| format!("timeout: {e}"))?;
-        let mut stream = stream;
+        self.call_with(method, path, body, bearer, true)
+    }
+
+    fn call_with(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+        bearer: Option<&str>,
+        keep_alive: bool,
+    ) -> Result<(u16, Json), String> {
         let payload = body.map(|j| j.dump()).unwrap_or_default();
         let auth = bearer
             .map(|t| format!("Authorization: Bearer {t}\r\n"))
             .unwrap_or_default();
-        write!(
-            stream,
-            "{method} {path} HTTP/1.1\r\nHost: shptier\r\n{auth}Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        let connection = if keep_alive { "" } else { "Connection: close\r\n" };
+        let request = format!(
+            "{method} {path} HTTP/1.1\r\nHost: shptier\r\n{auth}Content-Length: {}\r\n{connection}\r\n{payload}",
             payload.len()
-        )
-        .map_err(|e| format!("send: {e}"))?;
-        stream.flush().map_err(|e| format!("send: {e}"))?;
-        let resp = http::read_response(&mut stream)?;
+        );
+        let mut slot = self.conn.lock().unwrap_or_else(|e| e.into_inner());
+        let mut reused = slot.is_some();
+        let resp = loop {
+            let mut stream = match slot.take() {
+                Some(s) => s,
+                None => self.connect()?,
+            };
+            match Self::exchange(&mut stream, &request) {
+                Ok(resp) => {
+                    if keep_alive {
+                        *slot = Some(stream);
+                    }
+                    break resp;
+                }
+                // The server only closes a connection *between*
+                // requests, so a reused connection failing at send time
+                // or at the transport layer before a framed response
+                // arrived (clean EOF or an RST from the race with the
+                // server's close) means our request was never processed:
+                // retry once on a fresh connection. A *truncated*
+                // response means the request ran — never retry those,
+                // nor any failure on a fresh connection.
+                Err(e)
+                    if reused
+                        && (e.starts_with("send:")
+                            || e.starts_with("reading response:")
+                            || e.contains("connection closed before response")) =>
+                {
+                    reused = false;
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        drop(slot);
         let text = String::from_utf8(resp.body).map_err(|_| "response body is not utf-8")?;
         let json = if text.is_empty() {
             Json::Null
@@ -162,8 +240,17 @@ impl Client {
     }
 
     /// Ask the server to drain and shut down (`shptier serve` exits
-    /// after its next poll of the flag).
+    /// after its next poll of the flag). Sent `Connection: close` —
+    /// there is nothing left to keep a connection alive for.
     pub fn request_shutdown(&self) -> Result<(), String> {
-        self.expect_200("POST", "/v1/shutdown", None, None).map(|_| ())
+        let (status, json) = self.call_with("POST", "/v1/shutdown", None, None, false)?;
+        if status == 200 {
+            Ok(())
+        } else {
+            let detail = ErrorBody::from_json(&json)
+                .map(|e| e.error)
+                .unwrap_or_else(|_| json.dump());
+            Err(format!("{status}: {detail}"))
+        }
     }
 }

@@ -2,13 +2,18 @@
 //!
 //! Just enough of RFC 9112 for the placement API, with the hardening the
 //! issue demands and nothing else: requests are `METHOD PATH HTTP/1.1`
-//! with a `Content-Length` body (no chunked transfer, no keep-alive —
-//! every response carries `Connection: close`). Oversized bodies are cut
-//! off at `max_body` *before* being buffered ([`ReadError::TooLarge`] →
-//! 413), malformed framing is [`ReadError::BadRequest`] → 400, and a
-//! stalled peer surfaces as an io timeout the server maps to a dropped
-//! connection. The reader is generic over [`Read`] so every failure mode
-//! unit-tests against an in-memory cursor as well as a raw `TcpStream`.
+//! with a `Content-Length` body (no chunked transfer). Connections are
+//! **persistent** since ADR-008: both directions are framed by
+//! `Content-Length`, requests default to keep-alive per HTTP/1.1 (an
+//! explicit `Connection: close` — or HTTP/1.0 — opts out), and responses
+//! echo the request's choice, so one TCP connection carries a whole
+//! open→observe…→finish session instead of a connect per request.
+//! Oversized bodies are cut off at `max_body` *before* being buffered
+//! ([`ReadError::TooLarge`] → 413), malformed framing is
+//! [`ReadError::BadRequest`] → 400, and a stalled peer surfaces as an io
+//! timeout the server maps to a dropped connection. The reader is
+//! generic over [`Read`] so every failure mode unit-tests against an
+//! in-memory cursor as well as a raw `TcpStream`.
 
 use std::io::{Read, Write};
 
@@ -24,6 +29,10 @@ pub struct Request {
     /// sent. Routes that require auth decide what its absence means.
     pub bearer: Option<String>,
     pub body: Vec<u8>,
+    /// Whether the client wants the connection kept open after the
+    /// response: the HTTP/1.1 default unless `Connection: close` was
+    /// sent (HTTP/1.0 defaults to close).
+    pub keep_alive: bool,
 }
 
 /// Why a request could not be read.
@@ -96,6 +105,7 @@ pub fn read_request<R: Read>(r: &mut R, max_body: usize) -> Result<Request, Read
 
     let mut content_length: usize = 0;
     let mut bearer: Option<String> = None;
+    let mut keep_alive = version != "HTTP/1.0";
     for line in lines {
         if line.is_empty() {
             continue;
@@ -103,7 +113,14 @@ pub fn read_request<R: Read>(r: &mut R, max_body: usize) -> Result<Request, Read
         let Some((name, value)) = line.split_once(':') else {
             return Err(ReadError::BadRequest(format!("malformed header line {line:?}")));
         };
-        if name.trim().eq_ignore_ascii_case("content-length") {
+        if name.trim().eq_ignore_ascii_case("connection") {
+            let value = value.trim();
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        } else if name.trim().eq_ignore_ascii_case("content-length") {
             content_length = value
                 .trim()
                 .parse::<usize>()
@@ -138,7 +155,7 @@ pub fn read_request<R: Read>(r: &mut R, max_body: usize) -> Result<Request, Read
         body.extend_from_slice(&chunk[..n]);
     }
 
-    Ok(Request { method: method.to_string(), path: path.to_string(), bearer, body })
+    Ok(Request { method: method.to_string(), path: path.to_string(), bearer, body, keep_alive })
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
@@ -162,17 +179,31 @@ pub fn reason(status: u16) -> &'static str {
     }
 }
 
-/// Write a complete JSON response. Always closes the connection.
-pub fn write_response<W: Write>(w: &mut W, status: u16, body: &str) -> std::io::Result<()> {
+/// Write a complete JSON response, advertising whether the server will
+/// keep the connection open afterwards. `Content-Length` is always
+/// present, so keep-alive peers can frame the body without waiting for
+/// EOF.
+pub fn write_response_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
         status,
         reason(status),
         body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
         body
     )?;
     w.flush()
+}
+
+/// Write a complete JSON response and close the connection.
+pub fn write_response<W: Write>(w: &mut W, status: u16, body: &str) -> std::io::Result<()> {
+    write_response_with(w, status, body, false)
 }
 
 /// A response as read back by the client: status code + body bytes.
@@ -182,21 +213,70 @@ pub struct RawResponse {
     pub body: Vec<u8>,
 }
 
-/// Read a full response (the server always closes, so read to EOF and
-/// split on the head terminator).
+/// Read a full response. Framed by `Content-Length` — never by EOF — so
+/// the same connection can carry the next request afterwards
+/// (keep-alive); a response without `Content-Length` falls back to
+/// read-to-EOF for compatibility with close-framed peers.
 pub fn read_response<R: Read>(r: &mut R) -> Result<RawResponse, String> {
-    let mut all = Vec::new();
-    r.read_to_end(&mut all).map_err(|e| format!("reading response: {e}"))?;
-    let head_end = find_head_end(&all).ok_or("response missing head terminator")?;
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(format!("response head exceeds {MAX_HEAD_BYTES} bytes"));
+        }
+        let mut chunk = [0u8; 1024];
+        let n = r.read(&mut chunk).map_err(|e| format!("reading response: {e}"))?;
+        if n == 0 {
+            return Err(if buf.is_empty() {
+                "connection closed before response".to_string()
+            } else {
+                "truncated response head".to_string()
+            });
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
     let head =
-        std::str::from_utf8(&all[..head_end]).map_err(|_| "response head is not utf-8")?;
-    let status_line = head.split("\r\n").next().unwrap_or("");
+        std::str::from_utf8(&buf[..head_end]).map_err(|_| "response head is not utf-8")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
     let status = status_line
         .split(' ')
         .nth(1)
         .and_then(|s| s.parse::<u16>().ok())
         .ok_or_else(|| format!("malformed status line {status_line:?}"))?;
-    Ok(RawResponse { status, body: all[head_end + 4..].to_vec() })
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = Some(value.trim().parse::<usize>().map_err(|_| {
+                    format!("bad response content-length {:?}", value.trim())
+                })?);
+            }
+        }
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    match content_length {
+        Some(len) => {
+            if body.len() > len {
+                return Err("body longer than declared content-length".to_string());
+            }
+            while body.len() < len {
+                let mut chunk = vec![0u8; (len - body.len()).min(4096)];
+                let n =
+                    r.read(&mut chunk).map_err(|e| format!("reading response: {e}"))?;
+                if n == 0 {
+                    return Err("truncated response body".to_string());
+                }
+                body.extend_from_slice(&chunk[..n]);
+            }
+        }
+        None => {
+            r.read_to_end(&mut body).map_err(|e| format!("reading response: {e}"))?;
+        }
+    }
+    Ok(RawResponse { status, body })
 }
 
 #[cfg(test)]
@@ -222,6 +302,18 @@ mod tests {
         assert_eq!(r.method, "GET");
         assert!(r.body.is_empty());
         assert_eq!(r.bearer, None);
+    }
+
+    #[test]
+    fn connection_semantics_follow_http_1_1_defaults() {
+        // HTTP/1.1: keep-alive unless told otherwise
+        assert!(req("GET /x HTTP/1.1\r\n\r\n").unwrap().keep_alive);
+        assert!(req("GET /x HTTP/1.1\r\nConnection: keep-alive\r\n\r\n").unwrap().keep_alive);
+        assert!(!req("GET /x HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().keep_alive);
+        assert!(!req("GET /x HTTP/1.1\r\nconnection: CLOSE\r\n\r\n").unwrap().keep_alive);
+        // HTTP/1.0: close unless told otherwise
+        assert!(!req("GET /x HTTP/1.0\r\n\r\n").unwrap().keep_alive);
+        assert!(req("GET /x HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().keep_alive);
     }
 
     #[test]
@@ -286,5 +378,35 @@ mod tests {
         .unwrap();
         assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
         assert!(text.contains("Connection: close"));
+        let keep = String::from_utf8({
+            let mut o = Vec::new();
+            write_response_with(&mut o, 200, "{}", true).unwrap();
+            o
+        })
+        .unwrap();
+        assert!(keep.contains("Connection: keep-alive"));
+    }
+
+    #[test]
+    fn responses_are_framed_by_content_length_not_eof() {
+        // two pipelined responses on one stream: Content-Length framing
+        // must stop at the first body and leave the second readable —
+        // the property persistent connections stand on
+        let mut out = Vec::new();
+        write_response_with(&mut out, 200, "{\"a\":1}", true).unwrap();
+        write_response_with(&mut out, 429, "{\"b\":22}", true).unwrap();
+        let mut cursor = Cursor::new(out);
+        let first = read_response(&mut cursor).unwrap();
+        assert_eq!(first.status, 200);
+        assert_eq!(first.body, b"{\"a\":1}");
+        let second = read_response(&mut cursor).unwrap();
+        assert_eq!(second.status, 429);
+        assert_eq!(second.body, b"{\"b\":22}");
+        // a truncated keep-alive body is an error, not a silent short read
+        let mut partial = Vec::new();
+        write_response_with(&mut partial, 200, "{\"a\":1}", true).unwrap();
+        partial.truncate(partial.len() - 3);
+        let err = read_response(&mut Cursor::new(partial)).unwrap_err();
+        assert!(err.contains("truncated"), "got {err}");
     }
 }

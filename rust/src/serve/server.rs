@@ -4,10 +4,18 @@
 //!
 //! Threading model: one acceptor thread feeds accepted connections into
 //! an `mpsc` channel drained by a fixed pool of worker threads (the
-//! classic shared-`Receiver` pool — no dependencies). Every response
-//! closes its connection, so a worker is held for exactly one request
-//! and a handful of workers serve thousands of concurrent *sessions*:
-//! session state lives in the registry, not on a thread.
+//! classic shared-`Receiver` pool — no dependencies). Connections are
+//! persistent (HTTP/1.1 keep-alive, ADR-008): a worker serves requests
+//! off one connection until the client closes, sends
+//! `Connection: close`, or goes idle past [`KEEP_ALIVE_IDLE`]. Two
+//! guards keep the pool fair with more connections than workers: after
+//! every response the worker yields its pinned connection whenever
+//! another connection is waiting in the accept queue (clients reconnect
+//! transparently — see `serve::client`), and between requests the
+//! connection only gets the short idle budget instead of the full read
+//! timeout, so drains and shutdowns stay prompt. Session state lives in
+//! the registry, not on a thread, so a handful of workers still serve
+//! thousands of concurrent *sessions*.
 //!
 //! Durability: engine state (residency, ledgers) recovers through the
 //! backend journal. What the journal cannot know is *who opened what* —
@@ -302,7 +310,7 @@ impl RunningServer {
             workers.push(std::thread::spawn(move || loop {
                 let conn = rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
                 match conn {
-                    Ok(stream) => handle_connection(&state, stream),
+                    Ok(stream) => handle_connection(&state, stream, &rx),
                     Err(_) => break, // acceptor gone, queue drained
                 }
             }));
@@ -418,28 +426,70 @@ impl RunningServer {
 // ---------------------------------------------------------------------------
 // Request handling
 
-fn handle_connection(state: &ServerState, mut stream: TcpStream) {
-    let _ = stream
+/// Idle budget a kept-alive connection gets between requests before the
+/// worker reclaims itself. Clients that pause longer simply reconnect
+/// (the client retries a request whose reused connection died — safe,
+/// because the server only ever closes *between* requests).
+const KEEP_ALIVE_IDLE: Duration = Duration::from_millis(250);
+
+fn handle_connection(
+    state: &ServerState,
+    stream: TcpStream,
+    waiting: &Mutex<mpsc::Receiver<TcpStream>>,
+) {
+    let mut current = stream;
+    let _ = current
         .set_read_timeout(Some(Duration::from_millis(state.config.read_timeout_ms)));
-    match http::read_request(&mut stream, state.config.max_body_bytes) {
-        Ok(req) => {
-            let (status, body) = route(state, &req);
-            let _ = http::write_response(&mut stream, status, &body.dump());
+    loop {
+        let keep = match http::read_request(&mut current, state.config.max_body_bytes) {
+            Ok(req) => {
+                let (status, body) = route(state, &req);
+                if http::write_response_with(
+                    &mut current,
+                    status,
+                    &body.dump(),
+                    req.keep_alive,
+                )
+                .is_err()
+                {
+                    return;
+                }
+                req.keep_alive
+            }
+            Err(ReadError::TooLarge { limit }) => {
+                let body = ErrorBody::with_reason(
+                    format!("request body exceeds the {limit}-byte limit"),
+                    "body-too-large",
+                );
+                let _ = http::write_response(&mut current, 413, &body.to_json().dump());
+                false
+            }
+            Err(ReadError::BadRequest(msg)) => {
+                let body = ErrorBody::message(format!("bad request: {msg}"));
+                let _ = http::write_response(&mut current, 400, &body.to_json().dump());
+                false
+            }
+            // Timeout or disconnect: the peer is gone, stalled, or spent
+            // its keep-alive idle budget. Drop the connection.
+            Err(ReadError::Io(_)) => return,
+        };
+        if !keep {
+            return;
         }
-        Err(ReadError::TooLarge { limit }) => {
-            let body = ErrorBody::with_reason(
-                format!("request body exceeds the {limit}-byte limit"),
-                "body-too-large",
-            );
-            let _ = http::write_response(&mut stream, 413, &body.to_json().dump());
+        // Fairness with more connections than workers: if another
+        // connection is waiting in the accept queue, hand this (idle)
+        // one back to its client — who reconnects transparently — and
+        // serve the newcomer instead of starving it.
+        if let Ok(next) = waiting.lock().unwrap_or_else(|e| e.into_inner()).try_recv() {
+            current = next;
+            let _ = current.set_read_timeout(Some(Duration::from_millis(
+                state.config.read_timeout_ms,
+            )));
+            continue;
         }
-        Err(ReadError::BadRequest(msg)) => {
-            let body = ErrorBody::message(format!("bad request: {msg}"));
-            let _ = http::write_response(&mut stream, 400, &body.to_json().dump());
-        }
-        // Timeout or disconnect: the peer is gone or stalled; owing it a
-        // response would hold the worker. Drop the connection.
-        Err(ReadError::Io(_)) => {}
+        // Between requests only the short idle budget applies, so drains
+        // and shutdowns never wait out the full read timeout.
+        let _ = current.set_read_timeout(Some(KEEP_ALIVE_IDLE));
     }
 }
 

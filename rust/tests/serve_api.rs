@@ -44,20 +44,38 @@ fn default_server() -> RunningServer {
     start_server("[tenants.alpha]\ntoken = \"tok-alpha\"\n")
 }
 
-/// Send raw bytes, read the raw response to EOF.
+/// Send raw bytes, read one `Content-Length`-framed response. Stops as
+/// soon as the declared body is buffered — the server keeps HTTP/1.1
+/// connections alive (ADR-008), so waiting for EOF would idle out.
 fn raw_exchange(addr: std::net::SocketAddr, payload: &[u8]) -> (u16, String) {
     let mut s = TcpStream::connect(addr).expect("connect");
     s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
     s.write_all(payload).expect("send");
-    // Read until EOF, but tolerate a reset once a full response is
-    // buffered: answering 413 without draining the body can leave unread
-    // bytes in the server's receive queue, which turns its close into RST.
     let mut buf = Vec::new();
     let mut chunk = [0u8; 4096];
     loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            let head = String::from_utf8_lossy(&buf[..pos]);
+            let declared = head.lines().find_map(|line| {
+                let (name, value) = line.split_once(':')?;
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    value.trim().parse::<usize>().ok()
+                } else {
+                    None
+                }
+            });
+            if let Some(len) = declared {
+                if buf.len() >= pos + 4 + len {
+                    break;
+                }
+            }
+        }
         match s.read(&mut chunk) {
             Ok(0) => break,
             Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            // Tolerate a reset once a full head is buffered: answering
+            // 413 without draining the body can leave unread bytes in
+            // the server's receive queue, which turns its close into RST.
             Err(e) => {
                 if buf.windows(4).any(|w| w == b"\r\n\r\n") {
                     break;
@@ -169,6 +187,49 @@ fn stalled_connections_are_dropped_at_the_read_timeout() {
     );
     // and the worker is free again: a well-formed request still answers
     let client = Client::new(server.local_addr());
+    assert!(client.status("tok-alpha").is_ok());
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// HTTP keep-alive (ADR-008 satellite): one connection carries many
+// requests, `Connection: close` is honoured, and the typed client
+// survives the server reclaiming an idle cached connection.
+
+#[test]
+fn a_keep_alive_connection_carries_sequential_requests() {
+    let server = default_server();
+    let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // several requests down the SAME socket: HTTP/1.1 defaults to
+    // keep-alive and every response is Content-Length-framed
+    for round in 0..3 {
+        s.write_all(b"GET /v1/nowhere HTTP/1.1\r\n\r\n").expect("send");
+        let resp = shptier::serve::http::read_response(&mut s)
+            .unwrap_or_else(|e| panic!("round {round}: {e}"));
+        assert_eq!(resp.status, 404, "round {round}");
+    }
+    // Connection: close is honoured — the server hangs up after answering
+    s.write_all(b"GET /v1/nowhere HTTP/1.1\r\nConnection: close\r\n\r\n").expect("send");
+    let resp = shptier::serve::http::read_response(&mut s).expect("final response");
+    assert_eq!(resp.status, 404);
+    let mut rest = Vec::new();
+    let n = s.read_to_end(&mut rest).unwrap_or(0);
+    assert_eq!(n, 0, "server kept a closed connection open: {rest:?}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn the_typed_client_survives_idle_reclaim_of_its_cached_connection() {
+    let server = default_server();
+    let client = Client::new(server.local_addr());
+    // back-to-back calls ride the cached connection
+    assert!(client.status("tok-alpha").is_ok());
+    assert!(client.status("tok-alpha").is_ok());
+    // outlive the server's keep-alive idle budget: the cached connection
+    // is dead now, and the client must retry once on a fresh one rather
+    // than surface a transport error
+    std::thread::sleep(Duration::from_millis(600));
     assert!(client.status("tok-alpha").is_ok());
     server.shutdown().unwrap();
 }

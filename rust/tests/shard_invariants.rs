@@ -1,0 +1,242 @@
+//! Shard-boundary invariants for the N-way sharded engine core and the
+//! work-stealing fleet scheduler (ADR-008):
+//!
+//! - quota leases: every shard's grant carries the epoch of the latest
+//!   arbitration, covers exactly the live sessions that hash to it, and
+//!   the per-tier lease mass across shards never exceeds the tier
+//!   capacity (and equals aggregate demand when undersubscribed);
+//! - a session that panics while holding its shard lock poisons only
+//!   that one shard — survivors on other shards never see a recovery;
+//! - concurrent sessions observing from many threads still conserve the
+//!   ledger exactly (Σ per-stream attributed totals == engine total);
+//! - the work-stealing scheduler neither drops nor double-delivers a
+//!   batch: every worker count processes exactly Σ n documents and all
+//!   counts land the same report digest.
+
+use std::collections::BTreeSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use shptier::cost::PerDocCosts;
+use shptier::engine::{Engine, SessionSpec, TierTopology};
+use shptier::fleet::{run_fleet, skewed_fleet, FleetConfig, FleetMode};
+use shptier::policy::{MigrationOrder, PlacementPolicy};
+use shptier::storage::{StorageBackend, TierId};
+
+fn pd(w: f64, r: f64) -> PerDocCosts {
+    PerDocCosts { write: w, read: r, rent_window: 0.0 }
+}
+
+/// Two tiers where the hot tier is unambiguously attractive for the
+/// retained top-K, so each stream's analytic hot demand is exactly K and
+/// the lease-sum assertions below are deterministic.
+fn hot_friendly(hot_capacity: usize) -> TierTopology {
+    TierTopology::two_tier(pd(1.0, 0.1), pd(1.0, 10.0))
+        .with_capacity(TierId(0), Some(hot_capacity))
+}
+
+fn engine_with(hot_capacity: usize) -> Engine {
+    Engine::builder()
+        .topology(hot_friendly(hot_capacity))
+        .charge_rent(false)
+        .build()
+        .expect("engine builds")
+}
+
+#[test]
+fn lease_grants_cover_live_sessions_and_sum_to_demand() {
+    // 9 sessions × k=3 against capacity 64: undersubscribed, so every
+    // session gets its full demand and the lease mass must equal Σ K.
+    let engine = engine_with(64);
+    let specs = (0..9).map(|_| SessionSpec::new(40, 3).with_rent(false)).collect();
+    let sessions = engine.open_streams(specs).expect("open");
+
+    let grants = engine.lease_grants();
+    assert!(!grants.is_empty(), "an arbitrated engine must install leases");
+
+    // every grant carries the same (latest) arbitration epoch, on a
+    // distinct shard
+    let epoch = grants[0].epoch;
+    assert!(epoch > 0, "epoch 0 is the never-granted sentinel");
+    assert!(grants.iter().all(|g| g.epoch == epoch), "stale lease epoch: {grants:?}");
+    let shards: BTreeSet<usize> = grants.iter().map(|g| g.shard).collect();
+    assert_eq!(shards.len(), grants.len(), "two grants on one shard: {grants:?}");
+
+    // lease mass on the capacitated hot tier == aggregate demand (9 × 3)
+    let hot_sum: u64 = grants.iter().map(|g| g.per_tier[0].unwrap_or(0)).sum();
+    assert_eq!(hot_sum, 27, "{grants:?}");
+
+    // the grants partition exactly the live session ids, each on the
+    // shard it hashes to
+    let mut covered: Vec<u64> =
+        grants.iter().flat_map(|g| g.sessions.iter().copied()).collect();
+    covered.sort_unstable();
+    let mut ids: Vec<u64> = sessions.iter().map(|s| s.id()).collect();
+    ids.sort_unstable();
+    assert_eq!(covered, ids, "leases must cover each live session exactly once");
+    let n_shards = engine.shard_count() as u64;
+    for g in &grants {
+        for id in &g.sessions {
+            assert_eq!(*id % n_shards, g.shard as u64, "session {id} leased off-shard");
+        }
+    }
+
+    // releasing every session releases every lease claim
+    for s in sessions {
+        s.finish_release().expect("release");
+    }
+    let remaining: usize = engine.lease_grants().iter().map(|g| g.sessions.len()).sum();
+    assert_eq!(remaining, 0, "released sessions still hold lease claims");
+}
+
+#[test]
+fn oversubscribed_lease_mass_never_exceeds_capacity() {
+    // 9 sessions × k=3 against capacity 12: demand 27 oversubscribes the
+    // hot tier, and whatever split the arbiter chooses must stay under it.
+    let engine = engine_with(12);
+    let specs = (0..9).map(|_| SessionSpec::new(40, 3).with_rent(false)).collect();
+    let _sessions = engine.open_streams(specs).expect("open");
+    let grants = engine.lease_grants();
+    let hot_sum: u64 = grants.iter().map(|g| g.per_tier[0].unwrap_or(0)).sum();
+    assert!(hot_sum <= 12, "lease mass {hot_sum} exceeds hot capacity 12: {grants:?}");
+    assert!(hot_sum > 0, "oversubscription must not zero the leases: {grants:?}");
+}
+
+#[test]
+fn concurrent_sessions_conserve_the_ledger_across_shards() {
+    const M: usize = 8;
+    const N: u64 = 120;
+    let engine = engine_with(16);
+    let specs = (0..M).map(|_| SessionSpec::new(N, 4).with_rent(false)).collect();
+    let sessions = engine.open_streams(specs).expect("open");
+    let ids: Vec<u64> = sessions.iter().map(|s| s.id()).collect();
+
+    std::thread::scope(|scope| {
+        for (i, mut session) in sessions.into_iter().enumerate() {
+            scope.spawn(move || {
+                for j in 0..N {
+                    let score = ((i as u64 * 31 + j * 17) % 97) as f64 / 97.0;
+                    session.observe(score).expect("observe");
+                }
+                session.finish().expect("finish");
+            });
+        }
+    });
+
+    let total = engine.ledger().total();
+    let split: f64 = ids.iter().map(|&id| engine.stream_ledger(id).total()).sum();
+    assert!(total > 0.0, "the run must have charged something");
+    assert!(
+        (total - split).abs() <= 1e-9 * total.abs().max(1.0),
+        "conservation broke across shards: engine {total} vs Σ streams {split}"
+    );
+}
+
+/// A policy that panics in `on_step` at one stream index — after the
+/// placement landed, so engine state stays consistent and the panic
+/// happens while the session's shard lock is held.
+struct PanicAt {
+    panic_at: u64,
+}
+
+impl PlacementPolicy for PanicAt {
+    fn name(&self) -> String {
+        "panic-at".into()
+    }
+
+    fn place(&mut self, _index: u64, _n: u64) -> TierId {
+        TierId(0)
+    }
+
+    fn on_step(
+        &mut self,
+        index: u64,
+        _n: u64,
+        _storage: &dyn StorageBackend,
+    ) -> Vec<MigrationOrder> {
+        if index == self.panic_at {
+            panic!("injected session panic at index {index}");
+        }
+        Vec::new()
+    }
+}
+
+#[test]
+fn a_panicking_session_poisons_only_its_own_shard() {
+    const N: u64 = 30;
+    let engine = engine_with(16);
+    let specs = (0..4).map(|_| SessionSpec::new(N, 3).with_rent(false)).collect();
+    let mut sessions = engine.open_streams(specs).expect("open");
+
+    // session [2] panics on its third document, mid-observe
+    let victim_shard = (sessions[2].id() % engine.shard_count() as u64) as usize;
+    let mut policy = PanicAt { panic_at: 2 };
+    for j in 0..2 {
+        sessions[2].observe_with_policy(0.1 * j as f64, &mut policy).expect("observe");
+    }
+    let panicked = catch_unwind(AssertUnwindSafe(|| {
+        sessions[2].observe_with_policy(0.9, &mut policy).unwrap();
+    }));
+    assert!(panicked.is_err(), "the injected panic must fire");
+
+    // survivors on the other shards keep observing, blissfully unaware
+    for (i, session) in sessions.iter_mut().enumerate() {
+        if i == 2 {
+            continue;
+        }
+        for j in 0..N {
+            session.observe(((i as u64 + j) % 13) as f64 / 13.0).expect("survivor observe");
+        }
+    }
+    // the victim's own shard recovers on its next touch, and the session
+    // finishes its stream normally
+    let mut policy = PanicAt { panic_at: u64::MAX };
+    for j in 3..N {
+        sessions[2].observe_with_policy(0.01 * j as f64, &mut policy).expect("resume");
+    }
+    for session in sessions {
+        let out = session.finish().expect("finish");
+        assert_eq!(out.retained.len(), 3);
+    }
+
+    let per_shard = engine.shard_poison_recoveries();
+    assert!(
+        per_shard[victim_shard] >= 1,
+        "the victim shard {victim_shard} was never recovered: {per_shard:?}"
+    );
+    for (shard, &count) in per_shard.iter().enumerate() {
+        if shard != victim_shard {
+            assert_eq!(
+                count, 0,
+                "shard {shard} saw a recovery it should never have needed: {per_shard:?}"
+            );
+        }
+    }
+    assert!(engine.poison_recoveries() >= 1);
+}
+
+#[test]
+fn work_stealing_neither_drops_nor_duplicates_batches() {
+    // A deliberately lumpy fleet (every 4th stream is 8× longer) so
+    // stealing actually happens at every worker count above 1.
+    let specs = skewed_fleet(6, 120, 6, 7);
+    let total: u64 = specs.iter().map(|s| s.model.n).sum();
+    let mut digests = BTreeSet::new();
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = FleetConfig {
+            hot_capacity: 12,
+            workers,
+            batch: 8,
+            t_len: 64,
+            seed: 9,
+            mode: FleetMode::Arbitrated,
+            ..FleetConfig::default()
+        };
+        let report = run_fleet(&specs, &cfg).expect("fleet run");
+        assert_eq!(
+            report.docs_processed, total,
+            "workers={workers}: a batch was dropped or double-delivered"
+        );
+        digests.insert(report.digest());
+    }
+    assert_eq!(digests.len(), 1, "schedules diverged: {digests:?}");
+}
