@@ -4,8 +4,10 @@
 //! size on a deliberately *skewed* fleet (the ADR-008 work-stealing
 //! criterion: ≥ 3× from 1 → 8 workers despite lumpy stream lengths, with
 //! a bitwise-identical report digest at every worker count — a digest
-//! mismatch fails the bench outright), vs storage backend, and with the
-//! ADR-007 adaptive arbiter off/on (its overhead dimension).
+//! mismatch fails the bench outright), vs storage backend, with the
+//! ADR-007 adaptive arbiter off/on (its overhead dimension), and journaled
+//! ops/sec on a sync fs backend with per-op appends vs group commit (the
+//! ADR-009 acceptance criterion: ≥ 10×).
 //!
 //! Set `SHPTIER_BENCH_RECORD=1` to write the results as a baseline JSON to
 //! `benches/baselines/fleet_throughput.json` (see that file for the
@@ -27,7 +29,9 @@ use shptier::benchkit::{BenchResult, Bencher};
 use shptier::cost::hot_demand;
 use shptier::engine::BackendSpec;
 use shptier::fleet::{demo_fleet, run_fleet, skewed_fleet, FleetConfig, FleetMode};
+use shptier::cost::PerDocCosts;
 use shptier::serdes::Json;
+use shptier::storage::{FsBackend, StorageBackend, TierId};
 use std::collections::BTreeMap;
 
 const DOCS_PER_STREAM: u64 = 500;
@@ -152,6 +156,45 @@ fn main() {
         b.bench(&format!("fleet_adaptive/streams=4,adaptive={label}"), total4, || {
             run_fleet(&specs, &cfg).unwrap().docs_processed
         });
+    }
+
+    // ---- journaled op throughput (ADR-009): per-op vs group commit -------
+    // The honest durability case: the fs backend with sync_writes on, so
+    // every per-op append pays its own write+fsync while group commit
+    // amortizes the same records into one write+fsync per batch. The op
+    // body is reads of a tiny resident set (warm page cache) so journal
+    // appends — not payload IO — dominate the timed work. Acceptance:
+    // >=10x journaled ops/sec, reported below next to the scaling bars.
+    const JOURNAL_OPS: u64 = 192;
+    let journal_costs = vec![
+        PerDocCosts { write: 1.0, read: 4.0, rent_window: 0.5 },
+        PerDocCosts { write: 3.0, read: 0.5, rent_window: 0.1 },
+    ];
+    let mut journal_roots: Vec<std::path::PathBuf> = Vec::new();
+    for mode in ["per-op", "group"] {
+        let costs = journal_costs.clone();
+        let roots = &mut journal_roots;
+        b.bench(&format!("fleet_journal/mode={mode}"), JOURNAL_OPS, move || {
+            let root = shptier::util::scratch_dir("bench-journal");
+            roots.push(root.clone());
+            let mut be = FsBackend::open(&root, costs.clone(), false).unwrap();
+            be.set_sync_writes(true);
+            if mode == "group" {
+                be.set_group_commit(true);
+            }
+            be.set_attribution(Some(0));
+            for d in 0..4 {
+                be.put(d, TierId::A, 0.0).unwrap();
+            }
+            for i in 0..JOURNAL_OPS {
+                be.read(i % 4).unwrap();
+            }
+            be.journal_flush().unwrap();
+            JOURNAL_OPS
+        });
+    }
+    for root in journal_roots {
+        let _ = std::fs::remove_dir_all(root);
     }
 
     report_scaling(b.results());
@@ -328,6 +371,16 @@ fn report_scaling(results: &[BenchResult]) {
         println!(
             "work-stealing scaling 1→8 on the skewed fleet: {speedup:.2}x ({})",
             if speedup >= 3.0 { "meets the >=3x bar" } else { "BELOW the >=3x bar" }
+        );
+    }
+    if let (Some(per_op), Some(group)) = (
+        rate("fleet_journal/mode=per-op"),
+        rate("fleet_journal/mode=group"),
+    ) {
+        let speedup = group / per_op;
+        println!(
+            "group commit on sync journaled fs ops: {speedup:.2}x ({})",
+            if speedup >= 10.0 { "meets the >=10x bar" } else { "BELOW the >=10x bar" }
         );
     }
 }

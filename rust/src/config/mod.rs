@@ -208,6 +208,7 @@ impl LaunchConfig {
 /// backend = "sim"          # sim | fs:<root> | obj:<root>  (fresh root;
 ///                          #   ADR-003 fs, ADR-005 object store)
 /// adaptive = false         # drift-aware arbiter + re-derivation (ADR-007)
+/// group_commit = false     # batch journal appends (ADR-009; durable backends)
 /// seed = 7
 /// t_len = 256
 /// batch = 16
@@ -263,6 +264,10 @@ impl FleetLaunchConfig {
             .get_path("fleet.adaptive")
             .and_then(|v| v.as_bool())
             .unwrap_or(false);
+        let group_commit = t
+            .get_path("fleet.group_commit")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
         let n_docs = get_u64("fleet.workload.n_docs", 2_000)?.max(1);
         let k = get_u64("fleet.workload.k", 32)?.max(1);
         let heterogeneous = t
@@ -313,6 +318,7 @@ impl FleetLaunchConfig {
                 family,
                 backend,
                 adaptive,
+                group_commit,
             },
         })
     }
@@ -343,6 +349,7 @@ impl FleetLaunchConfig {
 ///                          #   (fs = ADR-003, object store = ADR-005)
 /// family = "keep"          # keep | migrate | auto (strategy family)
 /// adaptive = false         # drift-aware arbiter + re-derivation (ADR-007)
+/// group_commit = false     # batch journal appends (ADR-009; durable backends)
 /// ```
 #[derive(Debug, Clone)]
 pub struct EngineDemoConfig {
@@ -363,6 +370,9 @@ pub struct EngineDemoConfig {
     /// Run under the drift-aware [`crate::adaptive::AdaptiveArbiter`] with
     /// the drift→re-derivation trigger armed (ADR-007).
     pub adaptive: bool,
+    /// Batch journal appends into group commits (ADR-009). A no-op on
+    /// the in-memory simulator.
+    pub group_commit: bool,
 }
 
 impl EngineDemoConfig {
@@ -395,6 +405,10 @@ impl EngineDemoConfig {
             .map_err(|e| anyhow!("config: engine.family: {e}"))?,
             adaptive: t
                 .get_path("engine.adaptive")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            group_commit: t
+                .get_path("engine.group_commit")
                 .and_then(|v| v.as_bool())
                 .unwrap_or(false),
         }
@@ -634,6 +648,18 @@ heterogeneous = false
         assert!(!e.adaptive);
         let e = EngineDemoConfig::from_toml("[engine]\nadaptive = true\n").unwrap();
         assert!(e.adaptive);
+    }
+
+    #[test]
+    fn fleet_and_engine_group_commit_keys() {
+        let d = FleetLaunchConfig::from_toml("").unwrap();
+        assert!(!d.config.group_commit, "group commit defaults off");
+        let c = FleetLaunchConfig::from_toml("[fleet]\ngroup_commit = true\n").unwrap();
+        assert!(c.config.group_commit);
+        let e = EngineDemoConfig::from_toml("").unwrap();
+        assert!(!e.group_commit, "group commit defaults off");
+        let e = EngineDemoConfig::from_toml("[engine]\ngroup_commit = true\n").unwrap();
+        assert!(e.group_commit);
     }
 
     #[test]

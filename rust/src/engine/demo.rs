@@ -203,7 +203,10 @@ pub fn run_engine_demo(
     let capacities = topology.capacities();
 
     let mut events = Vec::new();
-    let mut builder = Engine::builder().topology(topology).charge_rent(false);
+    let mut builder = Engine::builder()
+        .topology(topology)
+        .charge_rent(false)
+        .group_commit(demo.group_commit);
     if let Some(durable) = backend.open_fresh(costs.clone(), false, "engine demo")? {
         builder = builder.backend(durable);
     }

@@ -180,6 +180,11 @@ struct EngineCore {
     /// checkpoint_factor × live documents` (0 disables — ADR-005
     /// follow-up, `engine.checkpoint_factor` in configs).
     checkpoint_factor: u64,
+    /// Group-commit journaling (ADR-009): when set, the backend batches
+    /// journal records and the engine's journal-maintenance step ticks
+    /// the age/size caps after every backend-touching batch, so buffered
+    /// records age out even on quiet roots.
+    group_commit: bool,
     /// Adaptive placement (ADR-007): when set, a session's drift
     /// detection triggers an immediate re-arbitration so a drift-aware
     /// arbiter can re-derive its cuts. The estimator/detector run either
@@ -318,7 +323,15 @@ impl EngineCore {
                 ..*c
             })
             .collect();
-        self.lock_backend().register_stream(id, effective)?;
+        // Tenancy metadata rides the registration record itself (ADR-009):
+        // one journal append makes the stream and its ownership durable
+        // atomically, closing the ADR-006 open-vs-sidecar race.
+        match spec.note.as_deref() {
+            Some(note) => {
+                self.lock_backend().register_stream_with_note(id, effective, note)?
+            }
+            None => self.lock_backend().register_stream(id, effective)?,
+        }
         g.next_id += 1;
         if spec.naive {
             g.live_naive += 1;
@@ -464,17 +477,29 @@ impl EngineCore {
         }
     }
 
-    /// Enforce the auto-checkpoint policy: when the journal's replay
-    /// suffix outgrows `checkpoint_factor ×` the live document count, fold
-    /// it into a fresh snapshot. Keeps long-running deployments' journals
-    /// sized by live state, not by op history. Free on memory-only
-    /// backends (`journal_ops() == 0` always). Takes only the backend
-    /// lock — callable from the hot path without global synchronization.
+    /// Journal maintenance, run after every backend-touching batch (the
+    /// lease-release path) and every close: tick the group-commit
+    /// age/size caps, then enforce the auto-checkpoint policy — when the
+    /// journal's replay suffix outgrows `checkpoint_factor ×` the live
+    /// document count, fold it into a fresh snapshot. Keeps long-running
+    /// deployments' journals sized by live state, not by op history.
+    /// Free on memory-only backends (`journal_ops() == 0` always).
+    /// Takes only the backend lock — callable from the hot path without
+    /// global synchronization.
     fn maybe_auto_checkpoint(&self) -> Result<()> {
-        if self.checkpoint_factor == 0 {
+        if self.checkpoint_factor == 0 && !self.group_commit {
             return Ok(());
         }
         let mut b = self.lock_backend();
+        if self.group_commit {
+            // the two triggers fold into one flush machinery: a due
+            // batch flushes here, and a checkpoint below flushes
+            // whatever remains as its phase-0 barrier
+            b.journal_tick()?;
+        }
+        if self.checkpoint_factor == 0 {
+            return Ok(());
+        }
         let ops = b.journal_ops();
         // `max(1)` keeps the policy armed on an empty store: a journal
         // full of deletes for dead documents still gets folded.
@@ -500,6 +525,7 @@ pub struct EngineBuilder {
     arbiter: Box<dyn Arbiter>,
     charge_rent: bool,
     checkpoint_factor: u64,
+    group_commit: bool,
     adaptive: bool,
     shards: usize,
 }
@@ -515,6 +541,11 @@ impl Default for EngineBuilder {
             // several acceptance tests inspect raw journal contents. The
             // serve layer turns this on (default factor 8 in serve.toml).
             checkpoint_factor: 0,
+            // off by default for the same reason: per-op journaling is
+            // the conservative posture, and tests that count raw journal
+            // lines rely on it. Opt in via `engine.group_commit` /
+            // `--group-commit` (ADR-009).
+            group_commit: false,
             adaptive: false,
             shards: DEFAULT_SHARDS,
         }
@@ -554,6 +585,18 @@ impl EngineBuilder {
     /// with 8). Irrelevant for memory-only backends.
     pub fn checkpoint_factor(mut self, factor: u64) -> Self {
         self.checkpoint_factor = factor;
+        self
+    }
+
+    /// Group-commit journaling (ADR-009): when enabled, durable backends
+    /// buffer journal records in a bounded in-memory batch and flush
+    /// them as one framed write (size cap, age cap, or forced barrier —
+    /// checkpoint, bulk migration, stream close, drain). Crash recovery
+    /// then replays to a *batch-boundary prefix* of the op stream: a
+    /// bounded staleness window traded for an order-of-magnitude cut in
+    /// journal flushes (+fsyncs). No-op on memory-only backends.
+    pub fn group_commit(mut self, enabled: bool) -> Self {
+        self.group_commit = enabled;
         self
     }
 
@@ -599,6 +642,9 @@ impl EngineBuilder {
         for (i, spec) in topology.tiers().iter().enumerate() {
             backend.set_capacity(TierId(i), spec.capacity);
         }
+        if self.group_commit {
+            backend.set_group_commit(true);
+        }
         // Continue the id sequence past any streams a reopened durable
         // backend replayed from its journal: reissuing a historical id
         // would alias its documents and ledger lines. Fresh backends
@@ -630,6 +676,7 @@ impl EngineBuilder {
                 backend: Mutex::new(backend),
                 topology,
                 checkpoint_factor: self.checkpoint_factor,
+                group_commit: self.group_commit,
                 adaptive: self.adaptive,
                 poison_recoveries: AtomicU64::new(0),
                 auto_checkpoints: AtomicU64::new(0),
@@ -709,9 +756,25 @@ impl Engine {
     }
 
     /// Journal op records a kill-and-reopen would replay on top of the
-    /// latest checkpoint (0 on the simulator).
+    /// latest checkpoint (0 on the simulator). Under group commit this
+    /// counts buffered records too — they are committed work, just not
+    /// yet durable (see [`Engine::journal_buffered`]).
     pub fn journal_ops(&self) -> u64 {
         self.core.lock_backend().journal_ops()
+    }
+
+    /// Journal op records buffered in the group-commit batch, not yet
+    /// durable (0 with group commit off, on the simulator, and right
+    /// after any barrier).
+    pub fn journal_buffered(&self) -> u64 {
+        self.core.lock_backend().journal_buffered()
+    }
+
+    /// Forced barrier (ADR-009): durably flush any buffered journal
+    /// batch now. Drains call this so nothing rides the staleness window
+    /// across a planned stop.
+    pub fn journal_flush(&self) -> Result<()> {
+        self.core.lock_backend().journal_flush()
     }
 
     /// Snapshot of the engine-wide ledger.
@@ -722,6 +785,18 @@ impl Engine {
     /// Snapshot of one session's attributed ledger.
     pub fn stream_ledger(&self, id: u64) -> Ledger {
         self.core.lock_backend().stream_ledger(id)
+    }
+
+    /// Every stream id the backend knows (live and recovered).
+    pub fn stream_ids(&self) -> Vec<u64> {
+        self.core.lock_backend().stream_ids()
+    }
+
+    /// The opaque annotation journaled with `id`'s registration, if any
+    /// (ADR-009: serve stores tenant attribution here so it rides the
+    /// engine transaction instead of a sidecar append).
+    pub fn stream_note(&self, id: u64) -> Option<String> {
+        self.core.lock_backend().stream_note(id)
     }
 
     pub fn num_tiers(&self) -> usize {
@@ -978,6 +1053,10 @@ impl StreamSession {
             if release {
                 s.release(b.as_mut())?;
             }
+            // a stream close is a forced barrier (ADR-009): the
+            // session's final records must be durable before its outcome
+            // is reported to the caller
+            b.journal_flush()?;
             (outcome, b.stream_ledger(self.id).total())
         };
         // reward signal for learning arbiters (ADR-007): the realized
@@ -1527,6 +1606,38 @@ mod tests {
         assert_eq!(engine.auto_checkpoints(), 0);
         assert!(engine.journal_ops() > 0, "nothing folded the history");
         let _ = std::fs::remove_dir_all(root2);
+    }
+
+    #[test]
+    fn group_commit_engine_counts_buffered_ops_and_flushes_on_close() {
+        use crate::storage::FsBackend;
+        let root = crate::util::scratch_dir("engine-group-commit");
+        let costs = vec![pd(1.0, 4.0), pd(3.0, 0.5)];
+        let backend = FsBackend::open(&root, costs.clone(), false)
+            .unwrap()
+            .with_sync(false);
+        let engine = Engine::builder()
+            .topology(TierTopology::from_costs(costs).unwrap())
+            .backend(Box::new(backend))
+            .charge_rent(false)
+            .group_commit(true)
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(5);
+        let mut s = engine
+            .open_stream(SessionSpec::new(40, 4).with_rent(false))
+            .unwrap();
+        for _ in 0..40 {
+            s.observe(rng.next_f64()).unwrap();
+        }
+        // buffered records count as committed work for checkpoint policy
+        assert!(engine.journal_ops() > 0);
+        s.finish().unwrap();
+        // a stream close is a forced barrier: nothing may stay buffered
+        assert_eq!(engine.journal_buffered(), 0, "close left buffered ops");
+        engine.journal_flush().unwrap();
+        assert_eq!(engine.journal_buffered(), 0);
+        let _ = std::fs::remove_dir_all(root);
     }
 
     #[test]

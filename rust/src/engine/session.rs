@@ -53,6 +53,11 @@ pub struct SessionSpec {
     /// sink tier regardless of the plan the arbiter would assign. Used by
     /// the serve layer's degrade-to-cold admission verdict.
     pub pinned_cold: bool,
+    /// Free-form annotation journaled atomically with the stream's
+    /// registration record on durable backends (ADR-009). The serve
+    /// layer encodes tenancy here so a crash between engine open and any
+    /// sidecar append can never orphan the stream's attribution.
+    pub note: Option<String>,
 }
 
 impl SessionSpec {
@@ -66,6 +71,7 @@ impl SessionSpec {
             record_series: false,
             family: PlanFamily::Keep,
             pinned_cold: false,
+            note: None,
         }
     }
 
@@ -80,6 +86,7 @@ impl SessionSpec {
             record_series: false,
             family: PlanFamily::Keep,
             pinned_cold: false,
+            note: None,
         }
     }
 
@@ -110,6 +117,14 @@ impl SessionSpec {
 
     pub fn with_pinned_cold(mut self, pinned: bool) -> Self {
         self.pinned_cold = pinned;
+        self
+    }
+
+    /// Annotation journaled with the registration record (see the field
+    /// docs). Empty notes are treated as absent.
+    pub fn with_note(mut self, note: impl Into<String>) -> Self {
+        let note = note.into();
+        self.note = if note.is_empty() { None } else { Some(note) };
         self
     }
 }

@@ -99,6 +99,9 @@ pub struct FleetConfig {
     /// On a durable backend the bandit's learned state is persisted to
     /// `<root>/bandit.state` at checkpoint time (ADR-008).
     pub adaptive: bool,
+    /// Batch journal appends into group commits on durable backends
+    /// (ADR-009); a free no-op on the simulator.
+    pub group_commit: bool,
 }
 
 impl Default for FleetConfig {
@@ -114,6 +117,7 @@ impl Default for FleetConfig {
             family: PlanFamily::Keep,
             backend: BackendSpec::Sim,
             adaptive: false,
+            group_commit: false,
         }
     }
 }
@@ -174,6 +178,7 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
     if let Some(durable) = config.backend.open_fresh(costs, charge_rent, "fleet")? {
         builder = builder.backend(durable);
     }
+    builder = builder.group_commit(config.group_commit);
     if config.adaptive {
         // durable roots get a durable bandit: rewards learned this run
         // are written at checkpoint time and reloaded by whoever reopens

@@ -231,6 +231,9 @@ fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     if flags.contains_key("adaptive") {
         launch.config.adaptive = true;
     }
+    if flags.contains_key("group-commit") {
+        launch.config.group_commit = true;
+    }
 
     println!(
         "launching fleet: {} streams, hot capacity {}, {} workers, mode {:?}, \
@@ -301,6 +304,9 @@ fn cmd_engine(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     }
     if flags.contains_key("adaptive") {
         demo.adaptive = true;
+    }
+    if flags.contains_key("group-commit") {
+        demo.group_commit = true;
     }
     // one shared rule set for flags and TOML (clamp soft knobs, reject
     // nonsensical ones)
@@ -431,11 +437,15 @@ fn cmd_serve_soak(flags: &HashMap<String, String>) -> Result<()> {
         .transpose()?
         .unwrap_or(16);
 
+    let group_commit = flags.contains_key("group-commit");
+
     let outcome = if flags.contains_key("kill") {
-        shptier::serve::soak::run_kill_restart_soak(backend_str, sessions, threads)?
+        shptier::serve::soak::run_kill_restart_soak(backend_str, sessions, threads, group_commit)?
     } else {
         let backend = shptier::engine::BackendSpec::parse(backend_str)?;
-        let (config_text, roster) = shptier::serve::soak::soak_config(6, 2);
+        let engine_extra = if group_commit { "group_commit = true\n" } else { "" };
+        let (config_text, roster) =
+            shptier::serve::soak::soak_config_with(6, 2, engine_extra);
         let config = shptier::serve::ServeConfig::from_toml(&config_text)?;
         let server = shptier::serve::RunningServer::start(config, backend)?;
         let addr = server.local_addr();
@@ -476,15 +486,15 @@ USAGE:
   shptier fleet [--streams M] [--docs N] [--k K] [--capacity C]
                 [--workers W] [--mode arbitrated|naive]
                 [--family keep|migrate|auto] [--adaptive] [--digest]
-                [--backend sim|fs:<root>|obj:<root>]
+                [--backend sim|fs:<root>|obj:<root>] [--group-commit]
                 [--config configs/fleet.toml]
   shptier engine [--streams M] [--docs N] [--k K] [--tiers 2..4]
                  [--capacity C] [--backend sim|fs:<root>|obj:<root>]
                  [--reconcile] [--family keep|migrate|auto] [--adaptive]
-                 [--config configs/engine.toml]
+                 [--group-commit] [--config configs/engine.toml]
   shptier serve --config configs/serve.toml [--backend sim|fs:<root>|obj:<root>]
   shptier serve-soak [--backend sim|fs:<root>] [--sessions 1000]
-                     [--threads 16] [--kill]
+                     [--threads 16] [--kill] [--group-commit]
   shptier exp --id <{}> [--quick] [--seed N]
   shptier optimize [--preset case-study-1|case-study-2]
   shptier validate [--quick]

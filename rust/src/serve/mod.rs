@@ -74,6 +74,15 @@ pub struct ServeConfig {
     /// Auto-checkpoint factor (`engine.checkpoint_factor`): checkpoint
     /// when `journal_ops > factor × live docs`; 0 disables.
     pub checkpoint_factor: u64,
+    /// fsync journal appends *and* sidecar appends
+    /// (`engine.sync_writes`). The two logs always share one durability
+    /// posture — a synced journal with an unsynced sidecar would let
+    /// attribution lag the state it attributes.
+    pub sync_writes: bool,
+    /// Group-commit journal batching (`engine.group_commit`, ADR-009):
+    /// op records batch in memory and flush on size cap, age cap, or
+    /// barrier, trading a bounded staleness window for write throughput.
+    pub group_commit: bool,
     /// The tenant book: tokens, quota classes, price books.
     pub book: TenantBook,
 }
@@ -129,6 +138,16 @@ impl ServeConfig {
             None => true,
         };
         let checkpoint_factor = get_u64("engine.checkpoint_factor", 8)?;
+        let get_bool = |path: &str, default: bool| -> Result<bool> {
+            match t.get_path(path) {
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("serve config: {path} must be a bool")),
+                None => Ok(default),
+            }
+        };
+        let sync_writes = get_bool("engine.sync_writes", false)?;
+        let group_commit = get_bool("engine.group_commit", false)?;
         let book = TenantBook::from_toml(&t)?;
         Ok(Self {
             addr,
@@ -139,6 +158,8 @@ impl ServeConfig {
             hot_capacity,
             charge_rent,
             checkpoint_factor,
+            sync_writes,
+            group_commit,
             book,
         })
     }
@@ -179,6 +200,8 @@ max_body_bytes = 4096
 tiers = 3
 hot_capacity = 32
 checkpoint_factor = 4
+sync_writes = true
+group_commit = true
 
 [classes.standard]
 max_streams = 8
@@ -207,6 +230,8 @@ class = "bulk"
         assert_eq!(c.tiers, 3);
         assert_eq!(c.hot_capacity, 32);
         assert_eq!(c.checkpoint_factor, 4);
+        assert!(c.sync_writes);
+        assert!(c.group_commit);
         assert_eq!(c.max_body_bytes, 4096);
         assert_eq!(c.tier_costs().len(), 3);
         assert_eq!(c.book.tenants().len(), 2);
@@ -226,6 +251,12 @@ class = "bulk"
         assert_eq!(c.workers, 8);
         assert_eq!(c.tiers, 2);
         assert_eq!(c.checkpoint_factor, 8);
+        assert!(!c.sync_writes, "durability modes default off");
+        assert!(!c.group_commit, "group commit defaults off");
+        assert!(
+            ServeConfig::from_toml("[engine]\ngroup_commit = 3\n[tenants.t]\ntoken = \"x\"\n")
+                .is_err()
+        );
         assert_eq!(c.book.tenants().len(), 1);
         assert!(ServeConfig::from_toml("[serve]\nworkers = 0\n").is_err());
         assert!(ServeConfig::from_toml("[engine]\ntiers = 9\n").is_err());

@@ -18,13 +18,20 @@
 //! thousands of concurrent *sessions*.
 //!
 //! Durability: engine state (residency, ledgers) recovers through the
-//! backend journal. What the journal cannot know is *who opened what* —
-//! tenancy is a serve-layer concept — so the server keeps a sidecar log
-//! (`serve.log` beside the journal) of `open`/`fin` lines, appended and
-//! flushed before the corresponding HTTP response is sent. Replaying it
-//! after a kill rebuilds stream→tenant attribution and the
-//! completed-stream set, which is what makes "every completed session is
-//! invoiced exactly once" hold across a SIGKILL.
+//! backend journal — and since ADR-009 so does tenant attribution: the
+//! open handler encodes `reserved_hot`/`degraded`/tenant into the
+//! [`SessionSpec`] note, which the backend journals *inside the same
+//! registration record that creates the stream*. A kill between "stream
+//! exists" and "stream attributed" is therefore impossible (the old
+//! append-to-`serve.log`-before-responding dance could lose attribution
+//! for a stream whose registration had already been journaled). The
+//! sidecar log (`serve.log` beside the journal) remains for what the
+//! journal genuinely cannot know: serve-level completion (`fin` — the
+//! client saw the finish response) and per-tenant `settled` aggregates
+//! folded at graceful shutdown. Its `open` lines are now a read-optimized
+//! cache, rebuilt from the journal on restart and refreshed best-effort.
+//! When the engine runs `sync_writes`, sidecar appends fsync too — the
+//! two logs share one durability posture.
 
 use std::collections::BTreeMap;
 use std::io::Write as _;
@@ -58,12 +65,17 @@ pub fn open_serving_backend(
     spec: &BackendSpec,
     costs: Vec<crate::cost::PerDocCosts>,
     charge_rent: bool,
+    sync_writes: bool,
 ) -> Result<Box<dyn StorageBackend>> {
-    Ok(match spec {
+    let mut backend: Box<dyn StorageBackend> = match spec {
         BackendSpec::Sim => Box::new(StorageSim::with_tiers(costs, charge_rent)),
         BackendSpec::Fs { root } => Box::new(FsBackend::open(root, costs, charge_rent)?),
         BackendSpec::Obj { root } => Box::new(ObjectBackend::open(root, costs, charge_rent)?),
-    })
+    };
+    if sync_writes {
+        backend.set_sync_writes(true);
+    }
+    Ok(backend)
 }
 
 /// Where the sidecar invoicing log lives for a durable root (`None` for
@@ -82,6 +94,24 @@ struct StreamRecord {
     degraded: bool,
     reserved_hot: u64,
     completed: bool,
+}
+
+/// Encode the tenancy facts journaled with a stream's registration
+/// (ADR-009: the [`SessionSpec`] note). Same shape as the sidecar `open`
+/// payload — the tenant name ends the note so names may contain spaces.
+fn encode_attribution(reserved_hot: u64, degraded: bool, tenant: &str) -> String {
+    format!("{reserved_hot} {} {tenant}", u8::from(degraded))
+}
+
+/// Parse a registration note back into a (not-yet-completed) billing
+/// record. `None` for notes this server did not write — foreign notes are
+/// ignored rather than misattributed.
+fn parse_attribution(note: &str) -> Option<StreamRecord> {
+    let mut f = note.splitn(3, ' ');
+    let reserved_hot = f.next()?.parse::<u64>().ok()?;
+    let degraded = f.next()?.parse::<u64>().ok()? != 0;
+    let tenant = f.next()?.to_string();
+    Some(StreamRecord { tenant, degraded, reserved_hot, completed: false })
 }
 
 /// Per-tenant aggregate of completed streams folded out of the sidecar
@@ -121,6 +151,10 @@ struct SessionEntry {
 struct Sidecar {
     file: Option<std::fs::File>,
     path: Option<PathBuf>,
+    /// Mirror of the journal's `sync_writes`: when the engine fsyncs its
+    /// appends, attribution must be no less durable than the state it
+    /// attributes, so sidecar appends fsync too.
+    sync: bool,
 }
 
 impl Sidecar {
@@ -128,8 +162,12 @@ impl Sidecar {
         if let Some(f) = &mut self.file {
             writeln!(f, "{line}").context("appending to serve.log")?;
             // Flush to the OS: survives process death (SIGKILL). Matches
-            // the journal's own durability posture — no fsync by default.
+            // the journal's own durability posture — fsync only when the
+            // engine itself runs `sync_writes`.
             f.flush().context("flushing serve.log")?;
+            if self.sync {
+                f.sync_data().context("fsyncing serve.log")?;
+            }
         }
         Ok(())
     }
@@ -239,12 +277,14 @@ impl RunningServer {
     /// Bind, recover, and start serving.
     pub fn start(config: ServeConfig, backend: BackendSpec) -> Result<Self> {
         let costs = config.tier_costs();
-        let storage = open_serving_backend(&backend, costs, config.charge_rent)?;
+        let storage =
+            open_serving_backend(&backend, costs, config.charge_rent, config.sync_writes)?;
         let engine = Engine::builder()
             .topology(config.topology()?)
             .backend(storage)
             .charge_rent(config.charge_rent)
             .checkpoint_factor(config.checkpoint_factor)
+            .group_commit(config.group_commit)
             .build()?;
 
         let mut admission = AdmissionControl::new(&config.book);
@@ -253,6 +293,20 @@ impl RunningServer {
         let side_path = sidecar_path(&backend);
         if let Some(path) = &side_path {
             (records, settled) = load_sidecar(path)?;
+            // The journal is the authority on who opened what (ADR-009:
+            // attribution rides the registration record, inside the same
+            // transaction that created the stream). The sidecar is a read
+            // cache: keep its `fin` flags, but let the journal win on
+            // attribution and resurrect any open the cache lost.
+            for id in engine.stream_ids() {
+                if let Some(rec) =
+                    engine.stream_note(id).as_deref().and_then(parse_attribution)
+                {
+                    let completed =
+                        records.get(&id).map_or(false, |r| r.completed);
+                    records.insert(id, StreamRecord { completed, ..rec });
+                }
+            }
             for r in records.values() {
                 if !r.completed {
                     // The stream's documents were replayed into residency
@@ -276,6 +330,7 @@ impl RunningServer {
                 None => None,
             },
             path: side_path,
+            sync: config.sync_writes,
         };
 
         let listener = TcpListener::bind(&config.addr)
@@ -582,10 +637,15 @@ fn handle_open(state: &ServerState, body: &[u8]) -> (u16, crate::serdes::Json) {
         AdmissionVerdict::Admitted { degraded, reserved_hot } => (degraded, reserved_hot),
     };
 
+    // The note journals tenancy inside the engine transaction: the
+    // backend writes it into the very registration record that creates
+    // the stream, so a kill can never separate "stream exists" from
+    // "stream attributed" (ADR-009).
     let mut spec = SessionSpec::new(open.n, open.k)
         .with_family(open.family)
         .with_rent(open.include_rent)
-        .with_pinned_cold(degraded);
+        .with_pinned_cold(degraded)
+        .with_note(encode_attribution(reserved_hot, degraded, &tenant_name));
     if open.economics.is_some() {
         spec = spec.with_costs(costs);
     }
@@ -599,9 +659,11 @@ fn handle_open(state: &ServerState, body: &[u8]) -> (u16, crate::serdes::Json) {
     };
     let stream_id = session.id();
 
-    // Record and journal the attribution *before* answering: once the
-    // client sees the token, a kill-and-restart must still know whose
-    // stream this was.
+    // Attribution is already durable: it was journaled inside the
+    // `open_stream` transaction above. The in-memory record serves live
+    // invoices; the sidecar `open` line is a read-optimized cache
+    // (restart rebuilds from the journal), so its append is best-effort
+    // and no longer gates the response.
     state
         .records
         .lock()
@@ -609,7 +671,7 @@ fn handle_open(state: &ServerState, body: &[u8]) -> (u16, crate::serdes::Json) {
         .insert(
             stream_id,
             StreamRecord {
-                tenant: tenant_name,
+                tenant: tenant_name.clone(),
                 degraded,
                 reserved_hot,
                 completed: false,
@@ -617,13 +679,10 @@ fn handle_open(state: &ServerState, body: &[u8]) -> (u16, crate::serdes::Json) {
         );
     {
         let mut side = state.sidecar.lock().unwrap_or_else(|e| e.into_inner());
-        let tenant = &state.config.book.tenant(tenant_id).name;
-        if let Err(e) = side.append(&format!(
-            "open {stream_id} {reserved_hot} {} {tenant}",
+        let _ = side.append(&format!(
+            "open {stream_id} {reserved_hot} {} {tenant_name}",
             u8::from(degraded)
-        )) {
-            return error(500, ErrorBody::message(format!("sidecar log: {e}")));
-        }
+        ));
     }
 
     let token = {
@@ -932,6 +991,60 @@ mod tests {
         assert!(err.contains("404"), "got {err}");
 
         server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn attribution_rides_the_engine_journal_not_the_sidecar() {
+        let root = crate::util::scratch_dir("serve-attrib");
+        let spec = BackendSpec::Fs { root: root.clone() };
+        let server = RunningServer::start(test_config(""), spec.clone()).unwrap();
+        let client = Client::new(server.local_addr());
+        let OpenOutcome::Admitted(open) = client.open("tok-alpha", 8, 2, "keep", None).unwrap()
+        else {
+            panic!()
+        };
+        client.observe(&open.stream, &[0.3, 0.9, 0.1]).unwrap();
+        server.abort(); // SIGKILL stand-in: no fold, no checkpoint
+
+        // Lose the sidecar cache entirely. The registration note in the
+        // engine journal must still know whose stream this was.
+        std::fs::remove_file(root.join("serve.log")).unwrap();
+        let server = RunningServer::start(test_config(""), spec).unwrap();
+        let client = Client::new(server.local_addr());
+        let inv = client.invoice("alpha", "tok-alpha").unwrap();
+        assert_eq!(inv.streams.len(), 1, "attribution must survive via the journal");
+        assert_eq!(inv.streams[0].stream_id, open.id);
+        assert!(!inv.streams[0].completed, "fin never happened");
+        server.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn group_commit_server_settles_across_a_graceful_restart() {
+        let root = crate::util::scratch_dir("serve-gc");
+        let spec = BackendSpec::Fs { root: root.clone() };
+        let config = || test_config("group_commit = true\n");
+        let server = RunningServer::start(config(), spec.clone()).unwrap();
+        let client = Client::new(server.local_addr());
+        let OpenOutcome::Admitted(open) = client.open("tok-alpha", 12, 3, "keep", None).unwrap()
+        else {
+            panic!()
+        };
+        let scores: Vec<f64> = (0..12).map(|i| (i as f64) / 12.0).collect();
+        client.observe(&open.stream, &scores).unwrap();
+        let fin = client.finish(&open.stream).unwrap();
+        assert!(fin.cost > 0.0);
+        // Graceful shutdown is a barrier: the checkpoint flushes any
+        // buffered batch, so the restart replays everything.
+        server.shutdown().unwrap();
+
+        let server = RunningServer::start(config(), spec).unwrap();
+        let client = Client::new(server.local_addr());
+        let inv = client.invoice("alpha", "tok-alpha").unwrap();
+        assert_eq!(inv.settled_streams, 1, "finished stream folded into settled totals");
+        assert!((inv.settled_cost - fin.cost).abs() < 1e-9 * fin.cost.abs().max(1.0));
+        server.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

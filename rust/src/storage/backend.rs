@@ -110,6 +110,46 @@ pub trait StorageBackend: Send {
     /// (0 on memory-only backends and right after a compaction).
     fn journal_ops(&self) -> u64;
 
+    // ---- group commit (ADR-009) --------------------------------------------
+    //
+    // Default no-ops so memory-only backends (which have no journal and
+    // therefore no staleness window) satisfy the contract for free.
+
+    /// Enable/disable group commit: journal op records buffer in a
+    /// bounded in-memory batch and reach the log as one framed write
+    /// instead of one flush (+fsync) per op. Crash recovery then
+    /// replays to a *batch-boundary prefix* of the op stream instead of
+    /// the full stream — the bounded staleness window. No-op on
+    /// memory-only backends.
+    fn set_group_commit(&mut self, _enabled: bool) {}
+
+    /// Forced barrier: durably flush any buffered journal batch now.
+    /// Checkpoints, bulk migrations, engine close/drain, and wedges all
+    /// force this; after it returns, `journal_buffered() == 0`.
+    fn journal_flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Journal maintenance tick: flush the buffered batch if it hit the
+    /// size cap or the age cap. The engine calls this after every
+    /// backend-touching observation batch, so buffered ops age out even
+    /// on quiet roots.
+    fn journal_tick(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Op records buffered in memory awaiting a group-commit flush
+    /// (always 0 in per-op mode, on memory-only backends, and right
+    /// after a barrier).
+    fn journal_buffered(&self) -> u64 {
+        0
+    }
+
+    /// `fsync` journal (and sidecar-style) appends for power-loss
+    /// durability, not just process death. No-op on memory-only
+    /// backends.
+    fn set_sync_writes(&mut self, _sync: bool) {}
+
     // ---- residency views ---------------------------------------------------
 
     /// Tier currently holding `doc`, if any.
@@ -155,6 +195,31 @@ pub trait StorageBackend: Send {
     /// Install per-tier effective costs for one stream's documents. The
     /// vector length must equal `num_tiers()`.
     fn register_stream(&mut self, stream: u64, costs: Vec<PerDocCosts>) -> Result<()>;
+
+    /// Like [`StorageBackend::register_stream`], with a free-form note
+    /// (serve-layer tenancy metadata) attached atomically in the same
+    /// journal record — so a crash can never leave a registered stream
+    /// whose ownership metadata was lost in a side channel (the ADR-006
+    /// open-vs-sidecar attribution race).
+    fn register_stream_with_note(
+        &mut self,
+        stream: u64,
+        costs: Vec<PerDocCosts>,
+        note: &str,
+    ) -> Result<()> {
+        self.register_stream(stream, costs)?;
+        self.set_stream_note(stream, note);
+        Ok(())
+    }
+
+    /// Attach/overwrite the free-form note on a registered stream.
+    fn set_stream_note(&mut self, _stream: u64, _note: &str) {}
+
+    /// The note attached to `stream`, if any. Durable backends recover
+    /// notes from the journal (`reg`/`creg` records).
+    fn stream_note(&self, _stream: u64) -> Option<String> {
+        None
+    }
 
     /// The run-wide ledger.
     fn ledger(&self) -> &Ledger;
@@ -275,6 +340,14 @@ impl StorageBackend for StorageSim {
         StorageSim::register_stream(self, stream, costs)
     }
 
+    fn set_stream_note(&mut self, stream: u64, note: &str) {
+        StorageSim::set_stream_note(self, stream, note.to_string())
+    }
+
+    fn stream_note(&self, stream: u64) -> Option<String> {
+        StorageSim::stream_note(self, stream).map(str::to_string)
+    }
+
     fn ledger(&self) -> &Ledger {
         StorageSim::ledger(self)
     }
@@ -350,6 +423,32 @@ mod tests {
         let report = b.checkpoint().unwrap();
         assert_eq!(report, CheckpointReport { ops_folded: 0, live_docs: 2, ops_after: 0 });
         assert_eq!(b.ledger().total(), before, "a checkpoint charges nothing");
+    }
+
+    #[test]
+    fn sim_group_commit_hooks_are_free_noops() {
+        let mut b: Box<dyn StorageBackend> = Box::new(sim());
+        b.set_group_commit(true);
+        b.set_sync_writes(true);
+        b.put(1, TierId::A, 0.0).unwrap();
+        assert_eq!(b.journal_buffered(), 0, "memory-only: nothing ever buffers");
+        b.journal_tick().unwrap();
+        b.journal_flush().unwrap();
+        assert_eq!(b.journal_ops(), 0);
+    }
+
+    #[test]
+    fn stream_notes_ride_registration_through_the_trait() {
+        let mut b: Box<dyn StorageBackend> = Box::new(sim());
+        let costs = vec![
+            PerDocCosts { write: 1.0, read: 2.0, rent_window: 3.0 },
+            PerDocCosts { write: 2.0, read: 1.0, rent_window: 1.0 },
+        ];
+        b.register_stream_with_note(4, costs, "tenant=acme").unwrap();
+        assert_eq!(b.stream_note(4).as_deref(), Some("tenant=acme"));
+        assert_eq!(b.stream_note(5), None);
+        b.set_stream_note(4, "tenant=beta");
+        assert_eq!(b.stream_note(4).as_deref(), Some("tenant=beta"));
     }
 
     #[test]

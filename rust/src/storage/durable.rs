@@ -26,6 +26,19 @@
 //! wedges: every subsequent operation errors until the backend is
 //! reopened from the journal, which restores the invariant that the
 //! journal is the single source of truth.
+//!
+//! ## Group commit (ADR-009)
+//!
+//! With [`StorageBackend::set_group_commit`] enabled, journal records
+//! buffer in a bounded in-memory batch and reach the log as one framed
+//! `batch <n>` write. The substrate may then run *ahead* of the durable
+//! journal inside the staleness window; recovery converges anyway,
+//! because replay rebuilds the accounting state from the journal's
+//! batch-boundary prefix and [`reconcile_store`] then removes substrate
+//! payloads nothing owns (and recreates what is missing). Forced
+//! barriers — checkpoint, `migrate_all`/`migrate_stream`, wedge, drop,
+//! [`StorageBackend::journal_flush`] — empty the buffer before
+//! returning.
 
 use super::backend::{CheckpointReport, StorageBackend};
 use super::journal::{self, Journal};
@@ -238,11 +251,16 @@ fn reconcile_store<S: DocStore>(
 }
 
 impl<S: DocStore> DurableBackend<S> {
-    /// `fsync` the journal on every append (power-loss durability, not
-    /// just process death). Off by default: process-death durability only
-    /// needs the flush.
+    /// `fsync` the journal on every durable append (power-loss
+    /// durability, not just process death). Off by default:
+    /// process-death durability only needs the flush. Enabling also
+    /// syncs the already-written header + parent directory (see
+    /// [`Journal::set_sync`]); if that sync fails the backend wedges
+    /// rather than run with durability silently degraded.
     pub fn with_sync(mut self, sync: bool) -> Self {
-        self.journal.set_sync(sync);
+        if let Err(e) = self.journal.set_sync(sync) {
+            self.wedged = Some(format!("enabling sync_writes failed: {e:#}"));
+        }
         self
     }
 
@@ -277,12 +295,26 @@ impl<S: DocStore> DurableBackend<S> {
         res
     }
 
+    /// Durably flush any buffered journal batch now (a forced barrier),
+    /// wedging the backend if the flush fails.
+    fn flush_now(&mut self) -> Result<()> {
+        let res = self.journal.flush_batch();
+        if let Err(e) = &res {
+            self.wedged = Some(format!("journal flush failed: {e:#}"));
+        }
+        res
+    }
+
     /// Run a substrate operation, wedging the backend on failure (the
     /// journal already records the op, so only a reopen can reconcile).
+    /// A wedge is a forced barrier: buffered journal records are
+    /// flushed best-effort so the reopen replays everything that was
+    /// committed before the failure.
     fn store_op(&mut self, res: Result<()>, what: &str) -> Result<()> {
         match res {
             Ok(()) => Ok(()),
             Err(e) => {
+                let _ = self.journal.flush_batch();
                 self.wedged = Some(format!("{what}: {e:#}"));
                 bail!("{what}: {e:#} (backend wedged; reopen to recover from the journal)");
             }
@@ -359,6 +391,9 @@ impl<S: DocStore> StorageBackend for DurableBackend<S> {
             return Ok(0); // same-tier or empty source: nothing to record
         }
         self.append(format!("migall {} {} {}", from.0, to.0, journal::fmt_bits(at)))?;
+        // a bulk migration is a forced barrier: the record (and anything
+        // buffered before it) must be durable before payloads move
+        self.flush_now()?;
         for doc in docs {
             let res = self.store.move_doc(from, to, doc, at);
             self.store_op(res, "moving document payload")?;
@@ -383,6 +418,8 @@ impl<S: DocStore> StorageBackend for DurableBackend<S> {
             to.0,
             journal::fmt_bits(at)
         ))?;
+        // bulk migrations are forced barriers, like migrate_all
+        self.flush_now()?;
         for doc in docs {
             let res = self.store.move_doc(from, to, doc, at);
             self.store_op(res, "moving document payload")?;
@@ -415,6 +452,37 @@ impl<S: DocStore> StorageBackend for DurableBackend<S> {
 
     fn journal_ops(&self) -> u64 {
         self.journal.ops()
+    }
+
+    fn set_group_commit(&mut self, enabled: bool) {
+        if self.journal.set_group_commit(enabled).is_err() {
+            // disabling flushes; a failed flush leaves records buffered
+            self.wedged = Some("journal flush failed while toggling group commit".into());
+        }
+    }
+
+    fn journal_flush(&mut self) -> Result<()> {
+        self.ensure_live()?;
+        self.flush_now()
+    }
+
+    fn journal_tick(&mut self) -> Result<()> {
+        self.ensure_live()?;
+        let res = self.journal.flush_if_due();
+        if let Err(e) = &res {
+            self.wedged = Some(format!("journal flush failed: {e:#}"));
+        }
+        res
+    }
+
+    fn journal_buffered(&self) -> u64 {
+        self.journal.buffered()
+    }
+
+    fn set_sync_writes(&mut self, sync: bool) {
+        if let Err(e) = self.journal.set_sync(sync) {
+            self.wedged = Some(format!("enabling sync_writes failed: {e:#}"));
+        }
     }
 
     fn locate(&self, doc: u64) -> Option<TierId> {
@@ -473,6 +541,36 @@ impl<S: DocStore> StorageBackend for DurableBackend<S> {
         self.ensure_live()?;
         self.state.register_stream(stream, costs.clone())?;
         self.append(format!("reg {stream} {}", journal::fmt_costs(&costs)))
+    }
+
+    fn register_stream_with_note(
+        &mut self,
+        stream: u64,
+        costs: Vec<PerDocCosts>,
+        note: &str,
+    ) -> Result<()> {
+        self.ensure_live()?;
+        if note.is_empty() {
+            // an empty note has no hex token to carry — plain record
+            return self.register_stream(stream, costs);
+        }
+        self.state.register_stream(stream, costs.clone())?;
+        self.state.set_stream_note(stream, note.to_string());
+        // ONE record: registration and ownership metadata are atomic on
+        // disk, so a crash cannot orphan the stream's attribution
+        self.append(format!(
+            "reg {stream} {} {}",
+            journal::fmt_costs(&costs),
+            journal::fmt_note(note)
+        ))
+    }
+
+    fn set_stream_note(&mut self, stream: u64, note: &str) {
+        self.state.set_stream_note(stream, note.to_string());
+    }
+
+    fn stream_note(&self, stream: u64) -> Option<String> {
+        self.state.stream_note(stream).map(str::to_string)
     }
 
     fn ledger(&self) -> &Ledger {

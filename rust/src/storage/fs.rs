@@ -446,6 +446,42 @@ mod tests {
     }
 
     #[test]
+    fn group_commit_batches_appends_and_barriers_flush() {
+        let root = scratch("group-commit");
+        {
+            let mut b = FsBackend::open(&root, costs(), false).unwrap();
+            b.set_group_commit(true);
+            for d in 0..5 {
+                b.put(d, TierId::A, 0.1).unwrap();
+            }
+            assert_eq!(b.journal_buffered(), 5);
+            assert_eq!(b.journal_ops(), 5, "ops() counts buffered records");
+            assert_eq!(
+                journal_op_lines(&root).len(),
+                0,
+                "nothing durable before the flush"
+            );
+            b.journal_flush().unwrap();
+            assert_eq!(b.journal_buffered(), 0);
+            let lines = journal_op_lines(&root);
+            assert_eq!(lines[0], "batch 5", "ops land framed, not bare");
+            assert_eq!(lines.len(), 6);
+            // bulk migration is a forced barrier: its record (and anything
+            // buffered before it) is durable before any file moves
+            b.set_attribution(Some(3));
+            b.put(50, TierId::A, 0.2).unwrap();
+            assert_eq!(b.migrate_stream(3, TierId::A, TierId::B, 0.5).unwrap(), 1);
+            assert_eq!(b.journal_buffered(), 0, "migrate_stream flushed the batch");
+            // dropped here: a clean close is a barrier too (Journal::drop)
+        }
+        let b = FsBackend::open(&root, costs(), false).unwrap();
+        assert_eq!(b.resident_count(), 6);
+        assert_eq!(b.locate(50), Some(TierId::B));
+        assert!(!b.recovery().unwrap().truncated_tail);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
     fn checkpoint_compacts_and_reopen_replays_suffix() {
         let root = scratch("ckpt");
         let total;

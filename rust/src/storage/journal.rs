@@ -16,14 +16,33 @@
 //! migall <from> <to> <at-bits>
 //! migstream <stream> <from> <to> <at-bits>         # one record per bulk batch
 //! settle <at-bits>
-//! reg <stream> <w:r:rw,...>
+//! reg <stream> <w:r:rw,...> [note]                 # note: hex-encoded utf-8, optional
+//! batch <n>                                        # group-commit frame: n op records follow
 //! ckpt-begin <body-lines>                          # checkpoint block...
 //! cdoc <doc> <tier> <at-bits> <owner|->            #   residency + rent clock
-//! creg <stream> <w:r:rw,...>                       #   stream economics
+//! creg <stream> <w:r:rw,...> [note]                #   stream economics (+ tenancy note)
 //! cled <stream|-> <tier> <charges...>              #   ledger rows (run + per-stream)
 //! cpeak <tier> <peak>                              #   occupancy high-water marks
 //! ckpt-end                                         # ...complete only with this
 //! ```
+//!
+//! ## Group commit (ADR-009)
+//!
+//! With [`Journal::set_group_commit`] enabled, op records accumulate in
+//! a bounded in-memory buffer and reach the file as one framed
+//! `batch <n>` record — one `write_all`, one flush, at most one fsync —
+//! when the buffer hits [`GROUP_COMMIT_BATCH_CAP`] records, a buffered
+//! record gets older than [`GROUP_COMMIT_AGE`] (checked by
+//! [`Journal::flush_if_due`]), or a forced barrier flushes explicitly
+//! (checkpoint, bulk migration, engine close/drain, wedge, drop).
+//!
+//! A batch is atomic on replay: either all `n` records are complete and
+//! apply, or the torn batch is dropped *whole* — the heal cut lands on
+//! the byte before the `batch` frame, so recovery always observes a
+//! prefix of the op stream cut at a batch boundary (the bounded
+//! staleness window). Unframed op lines remain valid and replay exactly
+//! as before, so per-op and group-commit appends can interleave in one
+//! journal.
 //!
 //! ## Checkpoint / compaction (two-phase)
 //!
@@ -51,9 +70,19 @@ use anyhow::{bail, Context, Result};
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 pub(crate) const JOURNAL_MAGIC: &str = "shptier-fs";
 pub(crate) const JOURNAL_VERSION: u32 = 1;
+
+/// Op records a group-commit batch may buffer before a flush is forced
+/// (the size cap).
+pub(crate) const GROUP_COMMIT_BATCH_CAP: u64 = 64;
+
+/// Oldest a buffered op record may get before [`Journal::flush_if_due`]
+/// forces a flush (the age cap — this bounds the staleness window in
+/// wall-clock terms for long-idle engines).
+pub(crate) const GROUP_COMMIT_AGE: Duration = Duration::from_millis(10);
 
 // ---- scalar encoding -------------------------------------------------------
 
@@ -107,6 +136,29 @@ pub(crate) fn header_line(costs: &[PerDocCosts], charge_rent: bool) -> String {
         u8::from(charge_rent),
         fmt_costs(costs)
     )
+}
+
+/// Encode a free-form stream note (serve-layer tenancy, ADR-009) as a
+/// whitespace-free hex token so it can ride a space-separated record.
+pub(crate) fn fmt_note(note: &str) -> String {
+    let mut out = String::with_capacity(note.len() * 2);
+    for b in note.bytes() {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+pub(crate) fn parse_note(s: &str) -> Result<String> {
+    if s.len() % 2 != 0 || s.is_empty() {
+        bail!("bad note token '{s}'");
+    }
+    let mut bytes = Vec::with_capacity(s.len() / 2);
+    for i in (0..s.len()).step_by(2) {
+        let b = u8::from_str_radix(&s[i..i + 2], 16)
+            .with_context(|| format!("bad note token '{s}'"))?;
+        bytes.push(b);
+    }
+    String::from_utf8(bytes).with_context(|| format!("note token '{s}' is not utf-8"))
 }
 
 fn fmt_owner(owner: Option<u64>) -> String {
@@ -194,6 +246,9 @@ pub(crate) fn replay_line(state: &mut StorageSim, line: &str) -> Result<()> {
             let stream = parse_u64(next("stream")?)?;
             let costs = parse_costs(next("costs")?)?;
             state.register_stream(stream, costs)?;
+            if let Some(tok) = parts.next() {
+                state.set_stream_note(stream, parse_note(tok)?);
+            }
         }
         other => bail!("unknown journal op '{other}'"),
     }
@@ -219,7 +274,12 @@ pub(crate) fn checkpoint_block(state: &StorageSim) -> String {
         }
     }
     for (stream, costs) in state.registered_streams() {
-        body.push(format!("creg {stream} {}", fmt_costs(costs)));
+        let mut line = format!("creg {stream} {}", fmt_costs(costs));
+        if let Some(note) = state.stream_note(*stream) {
+            line.push(' ');
+            line.push_str(&fmt_note(note));
+        }
+        body.push(line);
     }
     for (tier, charges) in state.ledger().tiers() {
         body.push(format!("cled - {} {}", tier.0, fmt_charges(charges)));
@@ -271,6 +331,9 @@ fn restore_checkpoint(
                 let stream = parse_u64(next("stream")?)?;
                 let costs = parse_costs(next("costs")?)?;
                 state.register_stream(stream, costs)?;
+                if let Some(tok) = parts.next() {
+                    state.set_stream_note(stream, parse_note(tok)?);
+                }
             }
             "cled" => {
                 let stream = parse_owner(next("stream")?)?;
@@ -413,6 +476,40 @@ pub(crate) fn replay(path: &Path, costs: &[PerDocCosts], charge_rent: bool) -> R
             i = j;
             continue;
         }
+        if let Some(rest) = line.strip_prefix("batch ") {
+            let declared = parse_u64(rest.trim())
+                .with_context(|| format!("journal line {}", i + 1))?
+                as usize;
+            // A group-commit batch is atomic: either every one of its op
+            // records is complete, or the torn batch is dropped whole —
+            // the heal cut lands on the byte *before* the frame line, so
+            // recovery is always a batch-boundary prefix of the op
+            // stream.
+            let mut body: Vec<&str> = Vec::new();
+            let mut batch_len = seg.len();
+            let mut j = i + 1;
+            while j < segs.len() && body.len() < declared {
+                let s = segs[j];
+                if !s.ends_with('\n') {
+                    break;
+                }
+                body.push(&s[..s.len() - 1]);
+                batch_len += s.len();
+                j += 1;
+            }
+            if body.len() != declared {
+                truncated_tail = true;
+                break;
+            }
+            for (off, l) in body.iter().enumerate() {
+                replay_line(&mut state, l)
+                    .with_context(|| format!("journal line {}", i + 2 + off))?;
+            }
+            ops_replayed += declared as u64;
+            valid_len += batch_len;
+            i = j;
+            continue;
+        }
         replay_line(&mut state, line)
             .with_context(|| format!("journal line {}", i + 1))?;
         ops_replayed += 1;
@@ -446,16 +543,40 @@ fn tmp_path(path: &Path) -> PathBuf {
     path.with_file_name(name)
 }
 
+fn parent_dir(path: &Path) -> &Path {
+    match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    }
+}
+
+/// Make a rename/create inside `dir` durable. Directory entries live in
+/// the directory's own blocks, which fsyncing the files *inside* it
+/// never touches — skipping this is how a power loss can resurrect a
+/// pre-compaction journal after a "successful" atomic rename.
+fn sync_dir(dir: &Path) -> Result<()> {
+    File::open(dir)
+        .and_then(|d| d.sync_all())
+        .with_context(|| format!("fsyncing directory {}", dir.display()))
+}
+
 // ---- the append handle -----------------------------------------------------
 
-/// Append handle over a journal file: every record is flushed (and
-/// optionally fsynced) before the caller touches any substrate, and the
-/// op counter tracks the replay suffix on top of the latest checkpoint.
+/// Append handle over a journal file. In per-op mode (the default)
+/// every record is flushed (and optionally fsynced) before the caller
+/// touches any substrate; in group-commit mode records buffer in memory
+/// and reach the file as framed `batch <n>` records. The op counter
+/// tracks the replay suffix on top of the latest checkpoint — buffered
+/// records count too, so checkpoint policy sees the true suffix size.
 pub(crate) struct Journal {
     path: PathBuf,
     writer: BufWriter<File>,
     sync_writes: bool,
     ops: u64,
+    group_commit: bool,
+    buf: String,
+    buffered: u64,
+    oldest_buffered: Option<Instant>,
 }
 
 impl Journal {
@@ -465,7 +586,16 @@ impl Journal {
             .with_context(|| format!("creating journal {}", path.display()))?;
         file.write_all(header_line(costs, charge_rent).as_bytes())
             .context("writing journal header")?;
-        Ok(Self { path, writer: BufWriter::new(file), sync_writes: false, ops: 0 })
+        Ok(Self {
+            path,
+            writer: BufWriter::new(file),
+            sync_writes: false,
+            ops: 0,
+            group_commit: false,
+            buf: String::new(),
+            buffered: 0,
+            oldest_buffered: None,
+        })
     }
 
     /// Reopen an existing (already healed) journal for appends.
@@ -476,19 +606,88 @@ impl Journal {
             .append(true)
             .open(&path)
             .with_context(|| format!("reopening journal {}", path.display()))?;
-        Ok(Self { path, writer: BufWriter::new(file), sync_writes: false, ops: suffix_ops })
+        Ok(Self {
+            path,
+            writer: BufWriter::new(file),
+            sync_writes: false,
+            ops: suffix_ops,
+            group_commit: false,
+            buf: String::new(),
+            buffered: 0,
+            oldest_buffered: None,
+        })
     }
 
-    /// `fsync` on every append (power-loss durability, not just process
-    /// death).
-    pub fn set_sync(&mut self, sync: bool) {
+    /// `fsync` on every durable append (power-loss durability, not just
+    /// process death). Enabling also syncs everything already written —
+    /// header included — plus the parent directory entry: the flag used
+    /// to cover only *future* appends, leaving a freshly created
+    /// journal's header (the line the replayer requires) vulnerable to
+    /// power loss.
+    pub fn set_sync(&mut self, sync: bool) -> Result<()> {
         self.sync_writes = sync;
+        if sync {
+            self.writer.flush().context("flushing journal for sync")?;
+            self.writer
+                .get_ref()
+                .sync_data()
+                .context("syncing journal header")?;
+            sync_dir(parent_dir(&self.path))?;
+        }
+        Ok(())
+    }
+
+    /// Buffer op records in memory and durably append them as one
+    /// framed `batch <n>` record (one `write_all`, at most one fsync)
+    /// instead of flushing per op. Disabling flushes anything pending.
+    pub fn set_group_commit(&mut self, enabled: bool) -> Result<()> {
+        if !enabled {
+            self.flush_batch()?;
+        }
+        self.group_commit = enabled;
+        Ok(())
     }
 
     /// Op records currently in the replay suffix (0 right after a
-    /// checkpoint or on a fresh journal).
+    /// checkpoint or on a fresh journal). Buffered records are counted:
+    /// they are committed work as far as accounting and checkpoint
+    /// policy are concerned, just not yet durable.
     pub fn ops(&self) -> u64 {
         self.ops
+    }
+
+    /// Op records buffered in memory, not yet durable (always 0 in
+    /// per-op mode and right after a barrier).
+    pub fn buffered(&self) -> u64 {
+        self.buffered
+    }
+
+    /// Durably write the pending batch, if any, as one framed record.
+    /// Every forced barrier (checkpoint, bulk migration, engine
+    /// close/drain, wedge) lands here.
+    pub fn flush_batch(&mut self) -> Result<()> {
+        if self.buffered == 0 {
+            return Ok(());
+        }
+        let framed = format!("batch {}\n{}", self.buffered, self.buf);
+        self.write_flush(framed.as_bytes())?;
+        self.buf.clear();
+        self.buffered = 0;
+        self.oldest_buffered = None;
+        Ok(())
+    }
+
+    /// Flush the pending batch if it hit the size cap or its oldest
+    /// record aged past [`GROUP_COMMIT_AGE`].
+    pub fn flush_if_due(&mut self) -> Result<()> {
+        let due = self.buffered >= GROUP_COMMIT_BATCH_CAP
+            || self
+                .oldest_buffered
+                .is_some_and(|t| t.elapsed() >= GROUP_COMMIT_AGE);
+        if due {
+            self.flush_batch()?;
+        }
+        Ok(())
     }
 
     fn write_flush(&mut self, bytes: &[u8]) -> Result<()> {
@@ -500,8 +699,23 @@ impl Journal {
         Ok(())
     }
 
-    /// Append one op record (no trailing newline in `line`).
+    /// Append one op record (no trailing newline in `line`). In
+    /// group-commit mode the record buffers; the size cap flushes
+    /// inline, the age cap via [`Journal::flush_if_due`].
     pub fn append_op(&mut self, line: &str) -> Result<()> {
+        if self.group_commit {
+            self.buf.push_str(line);
+            self.buf.push('\n');
+            self.buffered += 1;
+            self.ops += 1;
+            if self.oldest_buffered.is_none() {
+                self.oldest_buffered = Some(Instant::now());
+            }
+            if self.buffered >= GROUP_COMMIT_BATCH_CAP {
+                self.flush_batch()?;
+            }
+            return Ok(());
+        }
         self.write_flush(format!("{line}\n").as_bytes())?;
         self.ops += 1;
         Ok(())
@@ -517,6 +731,10 @@ impl Journal {
         costs: &[PerDocCosts],
         charge_rent: bool,
     ) -> Result<()> {
+        // phase 0: a checkpoint is a forced barrier — anything still
+        // buffered must reach the log before the snapshot that
+        // supersedes it
+        self.flush_batch().context("flushing buffered batch before checkpoint")?;
         let block = checkpoint_block(state);
         // phase 1: the snapshot reaches the durable log before anything
         // is thrown away (a kill here replays the old history instead)
@@ -530,14 +748,30 @@ impl Journal {
             f.write_all(block.as_bytes())?;
             f.flush()?;
             if self.sync_writes {
-                f.sync_data()?;
+                f.sync_all()?;
             }
         }
         fs::rename(&tmp, &self.path).context("installing compacted journal")?;
+        if self.sync_writes {
+            // the rename is only durable once the parent directory's
+            // entry update is on disk — without this, power loss can
+            // resurrect the pre-compaction journal
+            sync_dir(parent_dir(&self.path))?;
+        }
         let file = OpenOptions::new().append(true).open(&self.path)?;
         self.writer = BufWriter::new(file);
         self.ops = 0;
         Ok(())
+    }
+}
+
+impl Drop for Journal {
+    /// A dropped handle (engine close, clean process exit) is a forced
+    /// barrier: buffered ops must not evaporate just because the owner
+    /// went away without an explicit flush. A real kill never runs this
+    /// — that is exactly the bounded staleness window recovery heals.
+    fn drop(&mut self) {
+        let _ = self.flush_batch();
     }
 }
 
@@ -613,5 +847,85 @@ mod tests {
         fs::write(&path, text).unwrap();
         assert!(replay(&path, &costs(), false).is_err());
         let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn group_commit_buffers_then_writes_one_framed_batch() {
+        let root = crate::util::scratch_dir("journal-batch");
+        fs::create_dir_all(&root).unwrap();
+        let path = root.join("journal.log");
+        let mut j = Journal::create(path.clone(), &costs(), false).unwrap();
+        j.set_group_commit(true).unwrap();
+        j.append_op(&format!("put 1 0 {} -", fmt_bits(0.0))).unwrap();
+        j.append_op(&format!("put 2 0 {} -", fmt_bits(0.1))).unwrap();
+        j.append_op("read 1").unwrap();
+        // nothing durable yet: the file holds only the header
+        assert_eq!(j.buffered(), 3);
+        assert_eq!(j.ops(), 3);
+        assert_eq!(fs::read_to_string(&path).unwrap(), header_line(&costs(), false));
+        j.flush_batch().unwrap();
+        assert_eq!(j.buffered(), 0);
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.contains("batch 3\n"), "framed batch missing: {text}");
+        drop(j);
+        let replayed = replay(&path, &costs(), false).unwrap();
+        assert_eq!(replayed.ops_replayed, 3);
+        assert!(!replayed.truncated_tail);
+        assert_eq!(replayed.state.resident_count(), 2);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn dropped_journal_flushes_its_pending_batch() {
+        let root = crate::util::scratch_dir("journal-drop-flush");
+        fs::create_dir_all(&root).unwrap();
+        let path = root.join("journal.log");
+        let mut j = Journal::create(path.clone(), &costs(), false).unwrap();
+        j.set_group_commit(true).unwrap();
+        j.append_op(&format!("put 9 1 {} -", fmt_bits(0.3))).unwrap();
+        drop(j);
+        let replayed = replay(&path, &costs(), false).unwrap();
+        assert_eq!(replayed.ops_replayed, 1);
+        assert_eq!(replayed.state.locate(9), Some(TierId::B));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn torn_batch_is_dropped_whole_and_healed_at_the_frame() {
+        let root = crate::util::scratch_dir("journal-torn-batch");
+        fs::create_dir_all(&root).unwrap();
+        let path = root.join("journal.log");
+        let mut text = header_line(&costs(), false);
+        // one durable unframed op, then a batch torn mid-body: its
+        // complete first record must NOT apply
+        text.push_str(&format!("put 1 0 {} -\n", fmt_bits(0.0)));
+        text.push_str(&format!("batch 2\nput 2 0 {} -\nput 3 0 ", fmt_bits(0.1)));
+        fs::write(&path, &text).unwrap();
+        let replayed = replay(&path, &costs(), false).unwrap();
+        assert!(replayed.truncated_tail);
+        assert_eq!(replayed.ops_replayed, 1, "torn batch must be dropped whole");
+        assert_eq!(replayed.state.resident_count(), 1);
+        assert_eq!(replayed.state.locate(2), None);
+        // healed cut lands before the frame line, on a batch boundary
+        let healed = fs::read_to_string(&path).unwrap();
+        assert!(!healed.contains("batch"), "frame must be cut away: {healed}");
+        assert!(healed.ends_with(&format!("put 1 0 {} -\n", fmt_bits(0.0))));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn reg_note_roundtrips_through_ops_and_checkpoints() {
+        let mut state = StorageSim::with_tiers(costs(), false);
+        let line = format!("reg 7 {} {}", fmt_costs(&costs()), fmt_note("tenant=acme hot=3"));
+        replay_line(&mut state, &line).unwrap();
+        assert_eq!(state.stream_note(7), Some("tenant=acme hot=3"));
+        let block = checkpoint_block(&state);
+        let body: Vec<&str> = block
+            .lines()
+            .filter(|l| !l.starts_with("ckpt-begin") && *l != "ckpt-end")
+            .collect();
+        let restored = restore_checkpoint(&body, &costs(), false).unwrap();
+        assert_eq!(restored.stream_note(7), Some("tenant=acme hot=3"));
+        assert_eq!(parse_note(&fmt_note("")).ok(), None);
     }
 }

@@ -423,6 +423,35 @@ mod tests {
     }
 
     #[test]
+    fn killed_group_commit_batch_rolls_back_to_the_boundary() {
+        let root = scratch("gc-kill");
+        {
+            let mut b = ObjectBackend::open(&root, costs(), false).unwrap();
+            b.set_group_commit(true);
+            b.put(1, TierId::A, 0.0).unwrap();
+            b.put(2, TierId::A, 0.1).unwrap();
+            b.journal_flush().unwrap(); // batch boundary: docs 1 and 2 durable
+            b.put(3, TierId::A, 0.2).unwrap(); // buffered only — object already PUT
+            assert!(root.join("tier-0").join("3.obj").exists());
+            assert_eq!(b.journal_buffered(), 1);
+            // SIGKILL stand-in: leak the backend so Drop (the clean-close
+            // flush barrier) never runs and the buffered record dies here
+            std::mem::forget(b);
+        }
+        let b = ObjectBackend::open(&root, costs(), false).unwrap();
+        let rec = b.recovery().unwrap().clone();
+        assert_eq!(rec.ops_replayed, 2, "replay is the batch-boundary prefix");
+        assert_eq!(b.locate(3), None, "the unflushed op rolled back");
+        assert!(
+            rec.files_removed >= 1,
+            "the substrate ran ahead of the journal; reconcile removes the orphan"
+        );
+        assert!(!root.join("tier-0").join("3.obj").exists());
+        assert_eq!(b.resident_count(), 2);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
     fn checkpoint_compacts_the_manifest() {
         let root = scratch("ckpt");
         let mut b = ObjectBackend::open(&root, costs(), true).unwrap();

@@ -37,6 +37,10 @@ pub struct StorageSim {
     stream_ledgers: BTreeMap<u64, Ledger>,
     /// Per-stream per-tier effective costs (heterogeneous economics).
     stream_costs: BTreeMap<u64, Vec<PerDocCosts>>,
+    /// Free-form per-stream annotations (serve-layer tenancy, ADR-009).
+    /// Durable backends journal these with the `reg` record so ownership
+    /// metadata survives crashes inside the engine transaction.
+    stream_notes: BTreeMap<u64, String>,
 }
 
 impl StorageSim {
@@ -58,6 +62,7 @@ impl StorageSim {
             attribution: None,
             stream_ledgers: BTreeMap::new(),
             stream_costs: BTreeMap::new(),
+            stream_notes: BTreeMap::new(),
         }
     }
 
@@ -110,6 +115,17 @@ impl StorageSim {
         }
         self.stream_costs.insert(stream, costs);
         Ok(())
+    }
+
+    /// Attach a free-form annotation to a registered stream (tenancy
+    /// metadata). Overwrites any prior note.
+    pub fn set_stream_note(&mut self, stream: u64, note: String) {
+        self.stream_notes.insert(stream, note);
+    }
+
+    /// The annotation attached to `stream`, if any.
+    pub fn stream_note(&self, stream: u64) -> Option<&str> {
+        self.stream_notes.get(&stream).map(String::as_str)
     }
 
     /// The accumulated ledger of one stream (empty if it never operated).

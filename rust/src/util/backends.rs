@@ -34,6 +34,14 @@ pub const ALL_BACKENDS: [BackendKind; 3] =
 /// invariants apply to.
 pub const DURABLE_BACKENDS: [BackendKind; 2] = [BackendKind::Fs, BackendKind::Object];
 
+/// Whether the conformance suites should run durable backends with
+/// group commit on (ADR-009). CI sets `SHPTIER_GROUP_COMMIT=1` for one
+/// job so the whole invariant surface also holds under batched appends;
+/// the default stays per-op so failures bisect cleanly.
+pub fn group_commit_enabled() -> bool {
+    std::env::var("SHPTIER_GROUP_COMMIT").map_or(false, |v| v == "1")
+}
+
 impl BackendKind {
     pub fn label(self) -> &'static str {
         match self {
@@ -52,19 +60,23 @@ impl BackendKind {
         costs: Vec<PerDocCosts>,
         charge_rent: bool,
     ) -> anyhow::Result<(Box<dyn StorageBackend>, Option<PathBuf>)> {
-        match self {
-            Self::Sim => Ok((Box::new(StorageSim::with_tiers(costs, charge_rent)), None)),
+        let (mut b, root): (Box<dyn StorageBackend>, Option<PathBuf>) = match self {
+            Self::Sim => (Box::new(StorageSim::with_tiers(costs, charge_rent)), None),
             Self::Fs => {
                 let root = super::scratch_dir(&format!("conf-fs-{tag}"));
                 let b = FsBackend::open(&root, costs, charge_rent)?;
-                Ok((Box::new(b), Some(root)))
+                (Box::new(b), Some(root))
             }
             Self::Object => {
                 let root = super::scratch_dir(&format!("conf-obj-{tag}"));
                 let b = ObjectBackend::open(&root, costs, charge_rent)?;
-                Ok((Box::new(b), Some(root)))
+                (Box::new(b), Some(root))
             }
+        };
+        if group_commit_enabled() {
+            b.set_group_commit(true);
         }
+        Ok((b, root))
     }
 
     /// The durable log a backend of this kind keeps under `root` (`None`
@@ -88,16 +100,18 @@ impl BackendKind {
         costs: Vec<PerDocCosts>,
         charge_rent: bool,
     ) -> anyhow::Result<Box<dyn StorageBackend>> {
-        match (self, root) {
-            (Self::Sim, _) => Ok(Box::new(StorageSim::with_tiers(costs, charge_rent))),
-            (Self::Fs, Some(root)) => {
-                Ok(Box::new(FsBackend::open(root, costs, charge_rent)?))
-            }
+        let mut b: Box<dyn StorageBackend> = match (self, root) {
+            (Self::Sim, _) => Box::new(StorageSim::with_tiers(costs, charge_rent)),
+            (Self::Fs, Some(root)) => Box::new(FsBackend::open(root, costs, charge_rent)?),
             (Self::Object, Some(root)) => {
-                Ok(Box::new(ObjectBackend::open(root, costs, charge_rent)?))
+                Box::new(ObjectBackend::open(root, costs, charge_rent)?)
             }
             (kind, None) => anyhow::bail!("{} backend needs its root to reopen", kind.label()),
+        };
+        if group_commit_enabled() {
+            b.set_group_commit(true);
         }
+        Ok(b)
     }
 }
 

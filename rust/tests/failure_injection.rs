@@ -340,6 +340,209 @@ fn object_store_outage_recovers_to_sim_parity_on_reopen() {
     let _ = std::fs::remove_dir_all(&root);
 }
 
+// ---- group-commit crash contract (ADR-009) ---------------------------------
+
+/// Non-panicking [`assert_sim_parity`]: does `got` equal the reference
+/// state (residency, per-tier counts, bit-exact run + stream ledgers)?
+fn matches_sim(got: &dyn StorageBackend, want: &StorageSim) -> bool {
+    got.resident_count() == want.resident_count()
+        && [TierId::A, TierId::B].iter().all(|&t| got.resident_len(t) == want.tier(t).len())
+        && got.ledger().total().to_bits() == want.ledger().total().to_bits()
+        && [0u64, 1]
+            .iter()
+            .all(|&s| got.stream_ledger(s).total().to_bits() == want.stream_ledger(s).total().to_bits())
+}
+
+/// Drive a group-commit op stream against `b`, mirroring every op into a
+/// reference simulator and snapshotting the reference at every batch
+/// boundary (explicit `journal_flush` barriers plus `migrate_stream`'s
+/// built-in barrier). Snapshot 0 is the empty store — where a cut inside
+/// the journal header must land.
+fn gc_boundary_snapshots(b: &mut dyn StorageBackend) -> Vec<StorageSim> {
+    let mut sim = StorageSim::with_tiers(tier_costs(), true);
+    let mut snaps = vec![sim.clone()];
+    {
+        let s: &mut dyn StorageBackend = &mut sim;
+
+        b.set_attribution(Some(0));
+        s.set_attribution(Some(0));
+        for d in 0..5 {
+            b.put(d, TierId::A, 0.05 * d as f64).unwrap();
+            s.put(d, TierId::A, 0.05 * d as f64).unwrap();
+        }
+        b.journal_flush().unwrap();
+    }
+    snaps.push(sim.clone());
+    {
+        let s: &mut dyn StorageBackend = &mut sim;
+
+        b.set_attribution(Some(1));
+        s.set_attribution(Some(1));
+        b.put(10, TierId::B, 0.3).unwrap();
+        s.put(10, TierId::B, 0.3).unwrap();
+        b.read(2).unwrap();
+        s.read(2).unwrap();
+        b.migrate_doc(1, TierId::B, 0.35).unwrap();
+        s.migrate_doc(1, TierId::B, 0.35).unwrap();
+        b.journal_flush().unwrap();
+    }
+    snaps.push(sim.clone());
+    {
+        let s: &mut dyn StorageBackend = &mut sim;
+
+        b.delete(4, 0.4).unwrap();
+        s.delete(4, 0.4).unwrap();
+        // migrate_stream is itself a forced barrier: the batch (its own
+        // record included) flushes before the substrate moves anything
+        b.migrate_stream(0, TierId::A, TierId::B, 0.5).unwrap();
+        s.migrate_stream(0, TierId::A, TierId::B, 0.5).unwrap();
+    }
+    snaps.push(sim.clone());
+    {
+        let s: &mut dyn StorageBackend = &mut sim;
+
+        b.settle_rent(0.9).unwrap();
+        s.settle_rent(0.9).unwrap();
+        b.journal_flush().unwrap();
+    }
+    snaps.push(sim.clone());
+    snaps
+}
+
+/// THE group-commit crash contract (ADR-009): kill the process at ANY
+/// byte of the journal and recovery lands on exactly the op-stream
+/// prefix cut at a batch boundary — never a partial batch, never a
+/// state no boundary produced. Exhaustive over every prefix length of
+/// the full journal, on both durable backends.
+#[test]
+fn group_commit_kill_at_any_byte_lands_on_a_batch_boundary() {
+    for_each_durable_backend("gc-kill-any-byte", |kind| {
+        let (mut b, root) =
+            kind.open("gc-any-byte", tier_costs(), true).map_err(|e| e.to_string())?;
+        b.set_group_commit(true);
+        let snaps = gc_boundary_snapshots(b.as_mut());
+        drop(b);
+        let root = root.expect("durable kinds have roots");
+        let journal = kind.journal_path(&root).expect("durable kinds journal");
+        let full = std::fs::read(&journal).unwrap();
+        for cut in 0..=full.len() {
+            // the kill: only the first `cut` bytes reached disk (payload
+            // files may run ahead — reconcile must repair them too)
+            std::fs::write(&journal, &full[..cut]).unwrap();
+            let reopened =
+                kind.reopen(Some(&root), tier_costs(), true).map_err(|e| e.to_string())?;
+            if !snaps.iter().any(|s| matches_sim(reopened.as_ref(), s)) {
+                return Err(format!(
+                    "cut at byte {cut}/{}: recovered state matches no batch boundary",
+                    full.len()
+                ));
+            }
+        }
+        // and the untorn journal replays to the final boundary exactly
+        std::fs::write(&journal, &full).unwrap();
+        let reopened =
+            kind.reopen(Some(&root), tier_costs(), true).map_err(|e| e.to_string())?;
+        assert_sim_parity(reopened.as_ref(), snaps.last().unwrap(), "untorn replay");
+        let _ = std::fs::remove_dir_all(&root);
+        Ok(())
+    });
+}
+
+/// Every forced barrier drains the batch buffer to zero: checkpoint,
+/// `migrate_stream`, `migrate_all`, enabling sync_writes, and disabling
+/// group commit itself. Nothing stays buffered across a barrier.
+#[test]
+fn forced_barriers_leave_zero_buffered_ops() {
+    for_each_durable_backend("gc-barriers", |kind| {
+        let (mut b, root) =
+            kind.open("gc-barriers", tier_costs(), true).map_err(|e| e.to_string())?;
+        b.set_group_commit(true);
+        b.set_attribution(Some(0));
+
+        b.put(0, TierId::A, 0.0).map_err(|e| e.to_string())?;
+        if b.journal_buffered() == 0 {
+            return Err("group commit is not buffering".into());
+        }
+        b.checkpoint().map_err(|e| e.to_string())?;
+        if b.journal_buffered() != 0 {
+            return Err("checkpoint left buffered ops".into());
+        }
+
+        b.put(1, TierId::A, 0.1).map_err(|e| e.to_string())?;
+        b.migrate_stream(0, TierId::A, TierId::B, 0.2).map_err(|e| e.to_string())?;
+        if b.journal_buffered() != 0 {
+            return Err("migrate_stream left buffered ops".into());
+        }
+
+        b.put(2, TierId::A, 0.3).map_err(|e| e.to_string())?;
+        b.migrate_all(TierId::A, TierId::B, 0.4).map_err(|e| e.to_string())?;
+        if b.journal_buffered() != 0 {
+            return Err("migrate_all left buffered ops".into());
+        }
+
+        b.put(3, TierId::A, 0.5).map_err(|e| e.to_string())?;
+        b.set_sync_writes(true);
+        if b.journal_buffered() != 0 {
+            return Err("enabling sync_writes left buffered ops".into());
+        }
+
+        b.put(4, TierId::A, 0.6).map_err(|e| e.to_string())?;
+        b.set_group_commit(false);
+        if b.journal_buffered() != 0 {
+            return Err("disabling group commit left buffered ops".into());
+        }
+        // and with group commit off, appends are per-op again
+        b.put(5, TierId::A, 0.7).map_err(|e| e.to_string())?;
+        if b.journal_buffered() != 0 {
+            return Err("per-op mode buffered an op".into());
+        }
+        drop(b);
+
+        let root = root.expect("durable kinds have roots");
+        let reopened =
+            kind.reopen(Some(&root), tier_costs(), true).map_err(|e| e.to_string())?;
+        if reopened.resident_count() != 6 {
+            return Err(format!("lost ops: {} of 6 resident", reopened.resident_count()));
+        }
+        let _ = std::fs::remove_dir_all(&root);
+        Ok(())
+    });
+}
+
+/// Regression for the ADR-009 fsync fixes: under sync_writes, the
+/// checkpoint's rename is a durable cut point — a kill that loses
+/// everything appended AFTER the compacted block still reopens to the
+/// exact pre-kill accounting state, on both durable backends.
+#[test]
+fn sync_checkpoint_is_a_durable_cut_point() {
+    let mut sim = StorageSim::with_tiers(tier_costs(), true);
+    {
+        let sim_dyn: &mut dyn StorageBackend = &mut sim;
+        churn_ops(sim_dyn);
+    }
+    for_each_durable_backend("sync-ckpt-cut", |kind| {
+        let (mut b, root) =
+            kind.open("sync-ckpt-cut", tier_costs(), true).map_err(|e| e.to_string())?;
+        b.set_sync_writes(true);
+        churn_ops(b.as_mut());
+        b.checkpoint().map_err(|e| e.to_string())?;
+        let root = root.expect("durable kinds have roots");
+        let journal = kind.journal_path(&root).expect("durable kinds journal");
+        let ckpt_len = std::fs::metadata(&journal).unwrap().len();
+        b.settle_rent(0.9).map_err(|e| e.to_string())?;
+        drop(b);
+        // the kill: nothing past the compacted checkpoint reached disk
+        let f = std::fs::OpenOptions::new().write(true).open(&journal).unwrap();
+        f.set_len(ckpt_len).unwrap();
+        drop(f);
+        let reopened =
+            kind.reopen(Some(&root), tier_costs(), true).map_err(|e| e.to_string())?;
+        assert_sim_parity(reopened.as_ref(), &sim, "checkpoint cut");
+        let _ = std::fs::remove_dir_all(&root);
+        Ok(())
+    });
+}
+
 #[test]
 fn zero_capacity_channel_config_still_progresses() {
     // channel_capacity 0 is a rendezvous channel — must not deadlock

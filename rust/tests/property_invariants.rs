@@ -792,6 +792,13 @@ fn prop_checkpoint_replay_equals_full_replay() {
                 let (mut b, root_b) = kind
                     .open("replay-b", costs.clone(), case.rent)
                     .map_err(|e| e.to_string())?;
+                // C runs the same history under group commit (ADR-009):
+                // batched frames + the clean-close barrier must replay to
+                // the same state as per-op appends
+                let (mut c, root_c) = kind
+                    .open("replay-c", costs.clone(), case.rent)
+                    .map_err(|e| e.to_string())?;
+                c.set_group_commit(true);
                 let result = (|| -> Result<(), String> {
                     for reg_stream in [0u64, 1] {
                         let stream_costs = vec![
@@ -806,7 +813,9 @@ fn prop_checkpoint_replay_equals_full_replay() {
                             .map_err(|e| e.to_string())?;
                         a.register_stream(reg_stream, stream_costs.clone())
                             .map_err(|e| e.to_string())?;
-                        b.register_stream(reg_stream, stream_costs)
+                        b.register_stream(reg_stream, stream_costs.clone())
+                            .map_err(|e| e.to_string())?;
+                        c.register_stream(reg_stream, stream_costs)
                             .map_err(|e| e.to_string())?;
                     }
                     let mut rng = Rng::new(case.seed);
@@ -815,7 +824,7 @@ fn prop_checkpoint_replay_equals_full_replay() {
                         let at = i as f64 / case.n_ops as f64;
                         {
                             let mut targets: Vec<&mut dyn StorageBackend> =
-                                vec![&mut sim, a.as_mut(), b.as_mut()];
+                                vec![&mut sim, a.as_mut(), b.as_mut(), c.as_mut()];
                             random_op(&mut rng, &mut next_doc, at, &mut targets)?;
                         }
                         if i == case.ckpt_at {
@@ -827,11 +836,14 @@ fn prop_checkpoint_replay_equals_full_replay() {
                     }
                     backends_agree(a.as_ref(), &sim, "live A vs sim")?;
                     backends_agree(b.as_ref(), &sim, "live B vs sim")?;
+                    backends_agree(c.as_ref(), &sim, "live C vs sim")?;
                     Ok(())
                 })();
-                // kill both (drop) and reopen: checkpoint+suffix ≡ full log
+                // close all (drop) and reopen: checkpoint+suffix ≡ full
+                // log ≡ batched log cut at the clean-close barrier
                 drop(a);
                 drop(b);
+                drop(c);
                 let outcome = result.and_then(|()| {
                     let mut a2 = kind
                         .reopen(root_a.as_deref(), costs.clone(), case.rent)
@@ -841,6 +853,10 @@ fn prop_checkpoint_replay_equals_full_replay() {
                         .map_err(|e| e.to_string())?;
                     backends_agree(a2.as_ref(), &sim, "reopened A (ckpt+suffix)")?;
                     backends_agree(b2.as_ref(), &sim, "reopened B (full journal)")?;
+                    let c2 = kind
+                        .reopen(root_c.as_deref(), costs.clone(), case.rent)
+                        .map_err(|e| e.to_string())?;
+                    backends_agree(c2.as_ref(), &sim, "reopened C (group commit)")?;
                     // final compaction: journal length is bounded by live
                     // state (docs + registered streams + ledger/peak rows),
                     // independent of how many ops the history held
@@ -864,7 +880,7 @@ fn prop_checkpoint_replay_equals_full_replay() {
                     }
                     Ok(())
                 });
-                for root in [root_a, root_b].into_iter().flatten() {
+                for root in [root_a, root_b, root_c].into_iter().flatten() {
                     let _ = std::fs::remove_dir_all(root);
                 }
                 outcome
