@@ -5,9 +5,11 @@
 //! criterion: ≥ 3× from 1 → 8 workers despite lumpy stream lengths, with
 //! a bitwise-identical report digest at every worker count — a digest
 //! mismatch fails the bench outright), vs storage backend, with the
-//! ADR-007 adaptive arbiter off/on (its overhead dimension), and journaled
+//! ADR-007 adaptive arbiter off/on (its overhead dimension), journaled
 //! ops/sec on a sync fs backend with per-op appends vs group commit (the
-//! ADR-009 acceptance criterion: ≥ 10×).
+//! ADR-009 acceptance criterion: ≥ 10×), and the admission-selector
+//! dimension (ADR-010: bounded heap vs log-memory sketch at K ∈ {1e3,
+//! 1e5} — logmem must fit ≥ 10× more streams per GB of selector state).
 //!
 //! Set `SHPTIER_BENCH_RECORD=1` to write the results as a baseline JSON to
 //! `benches/baselines/fleet_throughput.json` (see that file for the
@@ -195,6 +197,61 @@ fn main() {
     }
     for root in journal_roots {
         let _ = std::fs::remove_dir_all(root);
+    }
+
+    // ---- selector memory & throughput (ADR-010): bounded vs logmem -------
+    // Drive 2K uniform scores through a bare selector at K ∈ {1e3, 1e5}.
+    // Offer throughput rides the record+check gate like every other
+    // dimension; the resident-bytes comparison below is the ADR-010
+    // acceptance bar — at K = 1e5 the log-memory sketch must fit ≥ 10×
+    // more concurrent streams per GB of selector state than the exact
+    // heap (a miss fails the bench outright, like the skew digest check).
+    use shptier::topk::{Scored, SelectorKind};
+    let mut selector_bytes: BTreeMap<(u64, &'static str), usize> = BTreeMap::new();
+    for k in [1_000u64, 100_000] {
+        let n = 2 * k;
+        for kind in [SelectorKind::Bounded, SelectorKind::LogMem] {
+            let label = kind.label();
+            let bytes = &mut selector_bytes;
+            b.bench(&format!("fleet_selector/k={k},selector={label}"), n, move || {
+                let mut sel = kind.build(k as usize);
+                let mut rng = shptier::util::Rng::new(42);
+                for i in 0..n {
+                    sel.offer(Scored::new(i, rng.next_f64()));
+                }
+                bytes.insert((k, label), sel.resident_bytes());
+                n
+            });
+        }
+    }
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    for k in [1_000u64, 100_000] {
+        let (Some(&hb), Some(&lb)) = (
+            selector_bytes.get(&(k, "bounded")),
+            selector_bytes.get(&(k, "logmem")),
+        ) else {
+            continue;
+        };
+        println!(
+            "selector state at K={k}: bounded {hb} B/stream ({:.0} streams/GB), \
+             logmem {lb} B/stream ({:.0} streams/GB) — {:.0}x streams-per-GB",
+            GB / hb as f64,
+            GB / lb as f64,
+            hb as f64 / lb as f64
+        );
+    }
+    if let (Some(&hb), Some(&lb)) = (
+        selector_bytes.get(&(100_000, "bounded")),
+        selector_bytes.get(&(100_000, "logmem")),
+    ) {
+        let ratio = hb as f64 / lb as f64;
+        if ratio < 10.0 {
+            eprintln!(
+                "FAIL: logmem streams-per-GB advantage at K=1e5 is {ratio:.1}x, \
+                 below the >=10x ADR-010 bar"
+            );
+            std::process::exit(1);
+        }
     }
 
     report_scaling(b.results());

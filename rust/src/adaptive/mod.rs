@@ -144,11 +144,15 @@ impl Arbiter for AdaptiveArbiter {
                 } else {
                     s.family
                 };
+                // plans are derived at the slack-adjusted K′ so near-
+                // optimal selectors' admit overshoot stays priced across
+                // drift re-derivations too (ADR-010)
+                let k = s.planning_k();
                 match s.drift {
                     Some(d) if d > 0 && d < s.n => suffix_restart_plan(
                         &s.tier_costs,
                         s.n,
-                        s.k,
+                        k,
                         s.include_rent,
                         family,
                         d,
@@ -156,7 +160,7 @@ impl Arbiter for AdaptiveArbiter {
                     _ => PlacementPlan::optimal_family(
                         &s.tier_costs,
                         s.n,
-                        s.k,
+                        k,
                         s.include_rent,
                         family,
                     ),

@@ -209,6 +209,7 @@ impl LaunchConfig {
 ///                          #   ADR-003 fs, ADR-005 object store)
 /// adaptive = false         # drift-aware arbiter + re-derivation (ADR-007)
 /// group_commit = false     # batch journal appends (ADR-009; durable backends)
+/// selector = "bounded"     # bounded | logmem (admission selector, ADR-010)
 /// seed = 7
 /// t_len = 256
 /// batch = 16
@@ -268,6 +269,10 @@ impl FleetLaunchConfig {
             .get_path("fleet.group_commit")
             .and_then(|v| v.as_bool())
             .unwrap_or(false);
+        let selector = crate::topk::SelectorKind::parse(
+            t.get_path("fleet.selector").and_then(|v| v.as_str()).unwrap_or("bounded"),
+        )
+        .map_err(|e| anyhow!("config: fleet.selector: {e}"))?;
         let n_docs = get_u64("fleet.workload.n_docs", 2_000)?.max(1);
         let k = get_u64("fleet.workload.k", 32)?.max(1);
         let heterogeneous = t
@@ -287,14 +292,26 @@ impl FleetLaunchConfig {
         };
         // the default-capacity heuristic uses the demand of the family
         // the streams will actually run; Auto resolves per stream, so it
-        // reserves for whichever family is hungrier
+        // reserves for whichever family is hungrier. The demand is quoted
+        // slack-adjusted (ADR-010): a log-memory selector admits an
+        // ε-overshoot superset of the exact top-K, and a capacity sized
+        // from the slack-free plan would over-admit against it.
         let aggregate_demand: u64 = specs
             .iter()
-            .map(|s| match family {
-                PlanFamily::Keep => crate::cost::hot_demand(&s.model, false),
-                PlanFamily::Migrate => crate::cost::hot_demand(&s.model, true),
-                PlanFamily::Auto => crate::cost::hot_demand(&s.model, false)
-                    .max(crate::cost::hot_demand(&s.model, true)),
+            .map(|s| {
+                let eps = selector.slack(s.model.k);
+                match family {
+                    PlanFamily::Keep => {
+                        crate::cost::hot_demand_with_slack(&s.model, false, eps)
+                    }
+                    PlanFamily::Migrate => {
+                        crate::cost::hot_demand_with_slack(&s.model, true, eps)
+                    }
+                    PlanFamily::Auto => crate::cost::hot_demand_with_slack(
+                        &s.model, false, eps,
+                    )
+                    .max(crate::cost::hot_demand_with_slack(&s.model, true, eps)),
+                }
             })
             .sum();
         let hot_capacity = match t.get_path("fleet.hot_capacity") {
@@ -319,6 +336,7 @@ impl FleetLaunchConfig {
                 backend,
                 adaptive,
                 group_commit,
+                selector,
             },
         })
     }
@@ -350,6 +368,7 @@ impl FleetLaunchConfig {
 /// family = "keep"          # keep | migrate | auto (strategy family)
 /// adaptive = false         # drift-aware arbiter + re-derivation (ADR-007)
 /// group_commit = false     # batch journal appends (ADR-009; durable backends)
+/// selector = "bounded"     # bounded | logmem (admission selector, ADR-010)
 /// ```
 #[derive(Debug, Clone)]
 pub struct EngineDemoConfig {
@@ -373,6 +392,9 @@ pub struct EngineDemoConfig {
     /// Batch journal appends into group commits (ADR-009). A no-op on
     /// the in-memory simulator.
     pub group_commit: bool,
+    /// Admission selector the demo sessions run (ADR-010): `bounded`
+    /// (exact top-K heap) or `logmem` (O(log K)-memory sketch).
+    pub selector: crate::topk::SelectorKind,
 }
 
 impl EngineDemoConfig {
@@ -411,6 +433,10 @@ impl EngineDemoConfig {
                 .get_path("engine.group_commit")
                 .and_then(|v| v.as_bool())
                 .unwrap_or(false),
+            selector: crate::topk::SelectorKind::parse(
+                t.get_path("engine.selector").and_then(|v| v.as_str()).unwrap_or("bounded"),
+            )
+            .map_err(|e| anyhow!("config: engine.selector: {e}"))?,
         }
         .normalized()
     }
@@ -660,6 +686,62 @@ heterogeneous = false
         assert!(!e.group_commit, "group commit defaults off");
         let e = EngineDemoConfig::from_toml("[engine]\ngroup_commit = true\n").unwrap();
         assert!(e.group_commit);
+    }
+
+    #[test]
+    fn fleet_and_engine_selector_keys() {
+        use crate::topk::SelectorKind;
+        let d = FleetLaunchConfig::from_toml("").unwrap();
+        assert_eq!(d.config.selector, SelectorKind::Bounded, "selector defaults bounded");
+        let c = FleetLaunchConfig::from_toml("[fleet]\nselector = \"logmem\"\n").unwrap();
+        assert_eq!(c.config.selector, SelectorKind::LogMem);
+        assert!(FleetLaunchConfig::from_toml("[fleet]\nselector = \"exact\"\n").is_err());
+        let e = EngineDemoConfig::from_toml("").unwrap();
+        assert_eq!(e.selector, SelectorKind::Bounded);
+        let e = EngineDemoConfig::from_toml("[engine]\nselector = \"logmem\"\n").unwrap();
+        assert_eq!(e.selector, SelectorKind::LogMem);
+        assert!(EngineDemoConfig::from_toml("[engine]\nselector = \"x\"\n").is_err());
+    }
+
+    /// Satellite regression (ADR-010): the fleet's default-capacity
+    /// heuristic must quote *slack-adjusted* analytic demand. The old
+    /// path summed `hot_demand` from the slack-free plan, so a logmem
+    /// fleet at massive K got a tier sized for the exact selector and
+    /// over-admitted against the ε-superset the sketch actually admits.
+    #[test]
+    fn fleet_default_capacity_reserves_for_selector_slack() {
+        use crate::topk::SelectorKind;
+        let toml = |sel: &str| {
+            format!(
+                "[fleet]\nselector = \"{sel}\"\n\
+                 [fleet.workload]\nn_docs = 400000\nk = 100000\nheterogeneous = false\n"
+            )
+        };
+        let bounded = FleetLaunchConfig::from_toml(&toml("bounded")).unwrap();
+        let logmem = FleetLaunchConfig::from_toml(&toml("logmem")).unwrap();
+        // same workload, same slack-free analytic demand …
+        let slack_free: u64 = bounded
+            .specs
+            .iter()
+            .map(|s| crate::cost::hot_demand(&s.model, false))
+            .sum();
+        assert_eq!(bounded.config.hot_capacity, (slack_free / 2).max(1));
+        // … but the logmem fleet reserves strictly more (the old path
+        // returned the slack-free figure here — the over-admission bug)
+        let eps = SelectorKind::LogMem.slack(100_000);
+        assert!(eps > 0.0);
+        assert!(
+            logmem.config.hot_capacity > bounded.config.hot_capacity,
+            "logmem default capacity {} must exceed slack-free {}",
+            logmem.config.hot_capacity,
+            bounded.config.hot_capacity
+        );
+        let slacked: u64 = logmem
+            .specs
+            .iter()
+            .map(|s| crate::cost::hot_demand_with_slack(&s.model, false, eps))
+            .sum();
+        assert_eq!(logmem.config.hot_capacity, (slacked / 2).max(1));
     }
 
     #[test]

@@ -30,6 +30,40 @@ pub fn expected_writes(count: u64, k: u64) -> f64 {
     }
 }
 
+/// Selector admission slack (ADR-010): the multiplicative envelope a
+/// near-optimal (memory-bounded) selector puts on the exact write rate.
+/// A selector whose admit-count overshoots the exact top-K process by a
+/// relative ε admits — and therefore writes — at most `(1 + ε)×` the
+/// eqs. (11)–(12) expectation, so hot-tier demand and rent integrals must
+/// be priced against the inflated rate. Negative inputs clamp to the
+/// exact process (ε = 0).
+pub fn selector_slack(epsilon: f64) -> f64 {
+    1.0 + epsilon.max(0.0)
+}
+
+/// Effective retained-set size under selector slack: the admission
+/// process of a near-optimal selector with overshoot ε behaves like the
+/// exact process run at `K' = K + ⌈ε·K⌉` (its threshold lags the true
+/// K-th best by the sketch resolution). Feeding `K'` through the eq. (12)
+/// closed forms prices both the extra writes and the wider hot band.
+pub fn slack_adjusted_k(k: u64, epsilon: f64) -> u64 {
+    k + (k as f64 * epsilon.max(0.0)).ceil() as u64
+}
+
+/// Slack-inflated per-tier demand: a selector with overshoot ε places up
+/// to `⌈(1 + ε)·demand⌉` documents where the exact selector would place
+/// `demand`. Admission control and capacity heuristics must reserve the
+/// inflated figure or a logmem fleet systematically over-admits.
+pub fn slack_adjusted_demand(demand: u64, epsilon: f64) -> u64 {
+    demand + (demand as f64 * epsilon.max(0.0)).ceil() as u64
+}
+
+/// Expected writes under selector slack: eqs. (11)–(12) evaluated at the
+/// slack-adjusted K (see [`slack_adjusted_k`]).
+pub fn expected_writes_with_slack(count: u64, k: u64, epsilon: f64) -> f64 {
+    expected_writes(count, slack_adjusted_k(k, epsilon))
+}
+
 /// The paper's *printed* approximation of eq. (12), `K + K·ln(i+1)`,
 /// kept for the errata comparison in EXPERIMENTS.md (it overestimates by
 /// `K·H_K ≈ K·ln K`; see DESIGN.md §5).
@@ -304,6 +338,31 @@ mod tests {
             (gap - expect).abs() < k as f64 * 1e-3,
             "gap={gap} expect={expect}"
         );
+    }
+
+    #[test]
+    fn selector_slack_is_a_clamped_multiplier() {
+        assert_eq!(selector_slack(0.0), 1.0);
+        assert_eq!(selector_slack(-0.3), 1.0);
+        assert!((selector_slack(0.1) - 1.1).abs() < 1e-15);
+        assert_eq!(slack_adjusted_k(100, 0.0), 100);
+        assert_eq!(slack_adjusted_k(100, 0.08), 108);
+        assert_eq!(slack_adjusted_demand(50, 0.0), 50);
+        assert_eq!(slack_adjusted_demand(50, 0.1), 55);
+        assert_eq!(slack_adjusted_demand(0, 0.5), 0);
+    }
+
+    #[test]
+    fn slack_inflates_expected_writes_monotonically() {
+        let (n, k) = (10_000u64, 100u64);
+        let exact = expected_writes(n, k);
+        let slacked = expected_writes_with_slack(n, k, 0.1);
+        assert!(slacked > exact, "{slacked} <= {exact}");
+        // and the inflation stays within the naive (1+ε) envelope on the
+        // write count (K' log-term grows sublinearly in K')
+        assert!(slacked <= selector_slack(0.1) * exact * 1.001);
+        // zero slack is exactly the exact process
+        assert_eq!(expected_writes_with_slack(n, k, 0.0), exact);
     }
 
     #[test]

@@ -9,15 +9,16 @@ pub mod pricing;
 
 pub use analytic::{
     algorithm_b_expected_writes, expected_cost, expected_rent_no_migration,
-    expected_writes, p_survivor_in_a, p_write, rent_bound_no_migration,
+    expected_writes, expected_writes_with_slack, p_survivor_in_a, p_write,
+    rent_bound_no_migration, selector_slack, slack_adjusted_demand, slack_adjusted_k,
 };
 pub use model::{
     Channel, CostBreakdown, CostModel, DocSpec, Location, PerDocCosts, Strategy, TierPricing,
 };
 pub use optimizer::{
     budget_clamp, closed_form_frac_migration, closed_form_frac_no_migration, hot_demand,
-    numeric_optimal_r, optimal_cuts, optimal_cuts_family, optimal_r, optimal_r_budgeted,
-    rank_strategies, OptimalR,
+    hot_demand_with_slack, numeric_optimal_r, optimal_cuts, optimal_cuts_family, optimal_r,
+    optimal_r_budgeted, rank_strategies, OptimalR,
 };
 pub use pricing::{
     azure_blob_gpv1, case_study_1, case_study_2, efs, inter_cloud_channel, s3_standard, scaled,

@@ -152,6 +152,21 @@ pub fn hot_demand(model: &CostModel, migrate: bool) -> u64 {
     optimal_r(model, migrate).r.min(model.k)
 }
 
+/// Hot-tier demand under selector admission slack (ADR-010): the same
+/// `min(r*, K)` reservation evaluated at the slack-adjusted `K'` — a
+/// near-optimal selector with overshoot ε admits like the exact process
+/// run at `K' = K + ⌈ε·K⌉`, so its peak hot occupancy (and therefore the
+/// capacity an admission heuristic must reserve) inflates accordingly.
+/// With ε = 0 this is exactly [`hot_demand`].
+pub fn hot_demand_with_slack(model: &CostModel, migrate: bool, epsilon: f64) -> u64 {
+    if epsilon <= 0.0 {
+        return hot_demand(model, migrate);
+    }
+    let mut m = model.clone();
+    m.k = crate::cost::slack_adjusted_k(m.k, epsilon).min(m.n);
+    hot_demand(&m, migrate)
+}
+
 /// Budget-constrained optimal changeover point: the cheapest `r` whose peak
 /// expected tier-A occupancy `min(r, K)` fits within `hot_quota` residents.
 ///

@@ -32,6 +32,7 @@ use super::topology::TierTopology;
 use crate::cost::PerDocCosts;
 use crate::fleet::capacity::allocate_proportional;
 use crate::policy::{PlacementPlan, PlanFamily};
+use crate::topk::SelectorKind;
 
 /// What the arbiter sees of one live session.
 #[derive(Debug, Clone)]
@@ -73,6 +74,12 @@ pub struct SessionSnapshot {
     /// Drift-aware arbiters re-derive this session's cuts from the
     /// detection index; others ignore it.
     pub drift: Option<u64>,
+    /// Which admission selector the session runs (ADR-010). Near-optimal
+    /// selectors carry an admit-rate overshoot the arbiter must price:
+    /// plans are derived at the slack-adjusted K′ (see
+    /// [`SessionSnapshot::planning_k`]) so hot demand and rent integrals
+    /// reserve for the overshoot instead of under-quoting it.
+    pub selector: SelectorKind,
 }
 
 impl SessionSnapshot {
@@ -102,7 +109,22 @@ impl SessionSnapshot {
             fired: vec![false; tiers.saturating_sub(1)],
             admissions: 0,
             drift: None,
+            selector: SelectorKind::Bounded,
         }
+    }
+
+    /// Admission selector for the snapshot (ADR-010).
+    pub fn with_selector(mut self, selector: SelectorKind) -> Self {
+        self.selector = selector;
+        self
+    }
+
+    /// The K every plan for this session must be derived at: the true K
+    /// inflated by the selector's priced admission slack (exact selectors
+    /// pass through unchanged). Clamped to N — a selector can never admit
+    /// more than the stream.
+    pub fn planning_k(&self) -> u64 {
+        crate::cost::slack_adjusted_k(self.k, self.selector.slack(self.k)).min(self.n)
     }
 }
 
@@ -177,7 +199,17 @@ impl Arbiter for ProportionalArbiter {
         let unconstrained: Vec<PlacementPlan> = sessions
             .iter()
             .map(|s| {
-                PlacementPlan::optimal_family(&s.tier_costs, s.n, s.k, s.include_rent, s.family)
+                // derive at the slack-adjusted K′ so a log-memory
+                // session's admit-rate overshoot is priced into its hot
+                // band, demand, and rent integrals (ADR-010); exact
+                // selectors have K′ = K and are unchanged
+                PlacementPlan::optimal_family(
+                    &s.tier_costs,
+                    s.n,
+                    s.planning_k(),
+                    s.include_rent,
+                    s.family,
+                )
             })
             .collect();
         allocate_assignments(sessions, topology, unconstrained)
@@ -446,6 +478,55 @@ mod tests {
         holder.in_use = vec![8, 42];
         let out = ProportionalArbiter.arbitrate(&[holder], &topo);
         assert!(out[0].demand[0] >= 8, "demand {} < held 8", out[0].demand[0]);
+    }
+
+    #[test]
+    fn logmem_selector_inflates_planned_hot_demand() {
+        // ISSUE-10 regression: a log-memory session admits (1+ε)× the
+        // exact process, so the arbiter must quote its hot demand at the
+        // slack-adjusted K′ — the old slack-free path under-reserved and
+        // over-admitted. With ample capacity, quota = demand, so the
+        // inflation is directly visible.
+        use crate::topk::SelectorKind;
+        let topo = TierTopology::two_tier(pd(1.0, 4.0), pd(3.0, 0.5))
+            .with_capacity(TierId::A, Some(1_000_000));
+        let (n, k) = (100_000u64, 2_000u64);
+        let exact = SessionSnapshot::fresh(
+            0,
+            n,
+            k,
+            vec![pd(1.0, 4.0), pd(3.0, 0.5)],
+            false,
+            PlanFamily::Keep,
+        );
+        let lm = SessionSnapshot::fresh(
+            1,
+            n,
+            k,
+            vec![pd(1.0, 4.0), pd(3.0, 0.5)],
+            false,
+            PlanFamily::Keep,
+        )
+        .with_selector(SelectorKind::LogMem);
+        let eps = SelectorKind::LogMem.slack(k);
+        assert!(eps > 0.0, "test needs a K large enough to carry slack");
+        assert_eq!(lm.planning_k(), crate::cost::slack_adjusted_k(k, eps));
+        let out = ProportionalArbiter.arbitrate(&[exact.clone(), lm], &topo);
+        assert!(
+            out[1].demand[0] > out[0].demand[0],
+            "logmem demand {} must exceed slack-free demand {}",
+            out[1].demand[0],
+            out[0].demand[0]
+        );
+        // the inflation matches the priced envelope exactly when the hot
+        // band is K-limited (r* > K for these economics)
+        assert_eq!(
+            out[1].demand[0],
+            crate::cost::slack_adjusted_k(k, eps).min(out[1].plan.r()),
+        );
+        // a bounded session is bit-identical to the pre-selector world
+        assert_eq!(out[0].demand[0], exact.planning_k().min(out[0].plan.r()));
+        assert_eq!(exact.planning_k(), k);
     }
 
     #[test]

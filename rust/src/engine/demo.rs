@@ -219,7 +219,7 @@ pub fn run_engine_demo(
 
     events.push(format!(
         "engine demo: {} sessions × {} docs (K={}), {} tiers, hot capacity {} \
-         (per-stream demand {}), family '{}', arbiter '{}', backend '{}'",
+         (per-stream demand {}), family '{}', selector '{}', arbiter '{}', backend '{}'",
         demo.streams,
         demo.docs,
         k,
@@ -227,11 +227,17 @@ pub fn run_engine_demo(
         hot_capacity,
         per_stream_demand,
         demo.family.label(),
+        demo.selector.label(),
         engine.arbiter_name(),
         engine.backend_name(),
     ));
 
-    let spec = || SessionSpec::new(demo.docs, k).with_rent(false).with_family(demo.family);
+    let spec = || {
+        SessionSpec::new(demo.docs, k)
+            .with_rent(false)
+            .with_family(demo.family)
+            .with_selector(demo.selector)
+    };
     let mut sessions = Vec::with_capacity(demo.streams);
     for _ in 0..demo.streams {
         sessions.push(engine.open_stream(spec())?);

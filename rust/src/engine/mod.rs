@@ -203,6 +203,9 @@ struct EngineCore {
     /// Drift detections that triggered a re-arbitration (adaptive
     /// engines only).
     drift_rederivations: AtomicU64,
+    /// Residents bulk-demoted by one-shot rescue demotions after late
+    /// drift re-derivations (ADR-007 follow-up, adaptive engines only).
+    rescue_demotions: AtomicU64,
 }
 
 impl EngineCore {
@@ -348,6 +351,7 @@ impl EngineCore {
             spec.record_series,
             spec.family,
             spec.pinned_cold,
+            spec.selector,
         );
         self.lock_shard(self.shard_of(id)).sessions.insert(id, state);
         Ok(id)
@@ -682,6 +686,7 @@ impl EngineBuilder {
                 auto_checkpoints: AtomicU64::new(0),
                 drift_detections: AtomicU64::new(0),
                 drift_rederivations: AtomicU64::new(0),
+                rescue_demotions: AtomicU64::new(0),
             }),
         })
     }
@@ -892,6 +897,13 @@ impl Engine {
         self.core.drift_rederivations.load(Ordering::Relaxed)
     }
 
+    /// Residents demoted by one-shot rescue demotions after late drift
+    /// re-derivations (ADR-007 follow-up; adaptive engines only — static
+    /// engines never re-derive, so they never rescue).
+    pub fn rescue_demotions(&self) -> u64 {
+        self.core.rescue_demotions.load(Ordering::Relaxed)
+    }
+
     pub fn arbiter_name(&self) -> String {
         self.core.lock_global().arbiter.name()
     }
@@ -951,6 +963,36 @@ impl StreamSession {
         if events.fired || rederive {
             let mut g = core.lock_global();
             core.rearbitrate(&mut g);
+            if rederive {
+                // Rescue demotion (ADR-007 follow-up, one-shot): the
+                // re-derived plan only routes *future* documents — any
+                // resident the shrunken plan no longer wants hot would
+                // keep renting its slot to stream end. Still under the
+                // global lock (so the freshly-applied plan cannot change
+                // underneath), re-take this session's shard and demote
+                // the stale excess; lock order global < shard < backend
+                // holds throughout.
+                let moved = {
+                    let mut shard = core.lock_shard(shard_idx);
+                    match shard.sessions.get_mut(&self.id) {
+                        Some(s) => {
+                            let mut lease = BackendLease::new(
+                                &core.backend,
+                                &core.poison_recoveries,
+                                self.id,
+                            );
+                            s.rescue_demote(&mut lease)?
+                        }
+                        None => 0,
+                    }
+                };
+                if moved > 0 {
+                    core.rescue_demotions.fetch_add(moved, Ordering::Relaxed);
+                    // the rescue freed hot slots — re-lend them now,
+                    // exactly like a changeover demotion would
+                    core.rearbitrate(&mut g);
+                }
+            }
         }
         if used {
             core.maybe_auto_checkpoint()?;
@@ -1541,6 +1583,113 @@ mod tests {
         );
         engine.settle_rent(1.0).unwrap();
         s.finish().unwrap();
+    }
+
+    #[test]
+    fn non_finite_scores_are_rejected_before_consuming_the_index() {
+        use crate::topk::{NonFiniteScore, SelectorKind};
+        let engine = two_tier_engine(None);
+        let mut s = engine
+            .open_stream(SessionSpec::new(50, 4).with_rent(false))
+            .unwrap();
+        s.observe(0.3).unwrap();
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = s.observe(bad).unwrap_err();
+            let typed = err
+                .downcast_ref::<NonFiniteScore>()
+                .expect("the rejection must be the typed NonFiniteScore");
+            assert_eq!(typed.index, 1, "the stream index must not be consumed");
+            assert_eq!(s.observed(), 1, "a rejected score is not an observation");
+        }
+        // the stream continues cleanly after the rejections
+        s.observe(0.9).unwrap();
+        assert_eq!(s.observed(), 2);
+        // the log-memory selector sits behind the same guard
+        let mut lm = engine
+            .open_stream(
+                SessionSpec::new(50, 4)
+                    .with_rent(false)
+                    .with_selector(SelectorKind::LogMem),
+            )
+            .unwrap();
+        assert!(lm.observe(f64::NAN).is_err());
+        assert_eq!(lm.observed(), 0);
+        lm.observe(0.5).unwrap();
+        assert_eq!(lm.observed(), 1);
+    }
+
+    #[test]
+    fn late_drift_rescue_demotes_stale_hot_residents() {
+        use crate::policy::PlanFamily;
+        use crate::topk::SelectorKind;
+        // hot strictly dominates on every axis, so keep-family optima put
+        // the whole stream hot (cut = n) and hot residency is bounded only
+        // by the arbitrated quota
+        let a = PerDocCosts { write: 0.0, read: 0.0, rent_window: 0.01 };
+        let b = PerDocCosts { write: 0.4, read: 0.5, rent_window: 0.1 };
+        let engine = Engine::builder()
+            .topology(TierTopology::two_tier(a, b).with_capacity(TierId::A, Some(8)))
+            .arbiter(Box::new(AdaptiveArbiter::new()))
+            .adaptive(true)
+            .build()
+            .unwrap();
+        // a log-memory session never evicts, so everything admitted under
+        // the pre-shift regime is exactly the stale-hot population at risk
+        let mut s1 = engine
+            .open_stream(
+                SessionSpec::new(400, 6)
+                    .with_costs(vec![a, b])
+                    .with_family(PlanFamily::Keep)
+                    .with_selector(SelectorKind::LogMem),
+            )
+            .unwrap();
+        // phase 1 — alone, the session fills its whole hot quota
+        let mut rng = Rng::new(11);
+        for _ in 0..160 {
+            s1.observe(rng.next_f64()).unwrap();
+        }
+        assert_eq!(s1.tier_len(TierId::A), 6, "hot quota must be filled");
+        assert_eq!(engine.drift_detections(), 0, "random phase must not drift");
+        // a second stream arrives: the proportional split (8 over 6+6)
+        // shrinks session 1's hot quota to 4, but its 6 placed residents
+        // stay hot — keep-family never demotes and logmem never evicts,
+        // so session 2's promised slots are physically occupied
+        let s2 = engine
+            .open_stream(
+                SessionSpec::new(400, 6)
+                    .with_costs(vec![a, b])
+                    .with_family(PlanFamily::Keep),
+            )
+            .unwrap();
+        assert_eq!(s1.quotas()[TierId::A.0], Some(4));
+        assert_eq!(s1.tier_len(TierId::A), 6, "stale residents still hot");
+        // phase 2 — late shift: monotone boosts blow the admission
+        // envelope and the adaptive engine re-derives the plan
+        let mut boost = 1e6;
+        while engine.drift_detections() == 0 {
+            assert!(!s1.done(), "the shift was never detected");
+            boost += 1.0;
+            s1.observe(boost).unwrap();
+        }
+        // the bugfix under test (ADR-007 follow-up): re-derivation must
+        // also *shed* the residents the shrunken plan no longer wants hot
+        // — without the rescue they rent (and squat on session 2's
+        // promised slots) to stream end
+        assert!(engine.drift_rederivations() >= 1);
+        assert_eq!(engine.rescue_demotions(), 2, "excess = 6 held − 4 wanted");
+        assert_eq!(s1.tier_len(TierId::A), 4, "stale hot residents were shed");
+        assert_eq!(engine.resident_len(TierId::A), 4);
+        // the rescue is one-shot: later detections re-plan the suffix as
+        // before but never thrash the backend with further bulk moves
+        let before = engine.rescue_demotions();
+        while !s1.done() {
+            boost += 1.0;
+            s1.observe(boost).unwrap();
+        }
+        assert_eq!(engine.rescue_demotions(), before);
+        engine.settle_rent(1.0).unwrap();
+        s1.finish().unwrap();
+        drop(s2);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::adaptive::{AdmissionEstimator, DriftDetector};
 use crate::cost::PerDocCosts;
 use crate::policy::{MigrationOrder, PlacementPlan, PlacementPolicy, PlanFamily};
 use crate::storage::{StorageBackend, TierId};
-use crate::topk::{BoundedTopK, Eviction, Scored};
+use crate::topk::{Eviction, NonFiniteScore, Scored, Selector, SelectorKind};
 use anyhow::{bail, Result};
 
 use super::arbiter::SessionSnapshot;
@@ -58,6 +58,10 @@ pub struct SessionSpec {
     /// layer encodes tenancy here so a crash between engine open and any
     /// sidecar append can never orphan the stream's attribution.
     pub note: Option<String>,
+    /// Which admission selector the session runs (ADR-010): the exact
+    /// O(K) heap, or the O(log K) sketch whose admission slack the
+    /// arbiter prices via [`SelectorKind::slack`].
+    pub selector: SelectorKind,
 }
 
 impl SessionSpec {
@@ -72,6 +76,7 @@ impl SessionSpec {
             family: PlanFamily::Keep,
             pinned_cold: false,
             note: None,
+            selector: SelectorKind::Bounded,
         }
     }
 
@@ -87,6 +92,7 @@ impl SessionSpec {
             family: PlanFamily::Keep,
             pinned_cold: false,
             note: None,
+            selector: SelectorKind::Bounded,
         }
     }
 
@@ -125,6 +131,12 @@ impl SessionSpec {
     pub fn with_note(mut self, note: impl Into<String>) -> Self {
         let note = note.into();
         self.note = if note.is_empty() { None } else { Some(note) };
+        self
+    }
+
+    /// Admission selector for the session (ADR-010).
+    pub fn with_selector(mut self, selector: SelectorKind) -> Self {
+        self.selector = selector;
         self
     }
 }
@@ -191,7 +203,13 @@ pub(crate) struct SessionState {
     /// cut they fired at (None = not fired). A fired boundary never
     /// re-opens: re-arbitrated plans are clamped back to the fired cut.
     fired: Vec<Option<u64>>,
-    tracker: BoundedTopK,
+    /// Which selector kind `tracker` is (snapshot + slack pricing).
+    pub selector: SelectorKind,
+    tracker: Box<dyn Selector>,
+    /// One-shot rescue demotion already executed (ADR-007 follow-up): a
+    /// late drift re-derivation demotes stale hot residents at most once
+    /// per session, so repeated detections cannot thrash the backend.
+    rescued: bool,
     /// Realized admission curve vs the a-priori k/i law (ADR-007). Always
     /// on — O(1) per observation — whether or not the engine is adaptive.
     /// Restarted on every detection so each detection epoch is judged on
@@ -224,6 +242,7 @@ impl SessionState {
         record_series: bool,
         family: PlanFamily,
         pinned_cold: bool,
+        selector: SelectorKind,
     ) -> Self {
         let tiers = tier_costs.len();
         // Placeholder all-to-sink plan: the engine re-arbitrates on every
@@ -244,7 +263,9 @@ impl SessionState {
             plan,
             quotas: vec![None; tiers],
             fired: vec![None; tiers - 1],
-            tracker: BoundedTopK::new(k as usize),
+            selector,
+            tracker: selector.build(k as usize),
+            rescued: false,
             estimator: AdmissionEstimator::new(k),
             detector: DriftDetector::new(n, k),
             next_index: 0,
@@ -270,7 +291,7 @@ impl SessionState {
     }
 
     pub fn threshold(&self) -> Option<f64> {
-        self.tracker.threshold().map(|s| s.score)
+        self.tracker.threshold_score()
     }
 
     /// The arbiter's view of this session.
@@ -289,6 +310,7 @@ impl SessionState {
             fired: self.fired.iter().map(|f| f.is_some()).collect(),
             admissions: self.estimator.admitted(),
             drift: self.detector.detected(),
+            selector: self.selector,
         }
     }
 
@@ -313,6 +335,56 @@ impl SessionState {
         self.plan = plan;
     }
 
+    /// One-shot rescue demotion after a late drift re-derivation (ADR-007
+    /// follow-up). Suffix-restart re-planning only changes where *future*
+    /// documents go; residents placed hot under the stale pre-drift plan
+    /// keep renting the hot tier to stream end. When the re-derived plan
+    /// wants fewer residents in a capacitated tier than the session
+    /// already holds there, demote the excess — oldest document first,
+    /// into the next colder tier with room — and return how many moved.
+    ///
+    /// One-shot (`rescued`): repeated detections re-plan the suffix as
+    /// before but never thrash the backend with further bulk moves. Naive
+    /// and policy-driven sessions manage their own placements and are
+    /// never rescued.
+    pub fn rescue_demote(&mut self, backend: &mut BackendLease<'_>) -> Result<u64> {
+        if self.rescued || self.naive || self.policy_driven {
+            return Ok(0);
+        }
+        self.rescued = true;
+        let at = self.next_index.min(self.n) as f64 / self.n as f64;
+        let sink = self.plan.num_tiers() - 1;
+        let mut moved_total = 0u64;
+        for j in 0..sink {
+            let want = self.plan.demand(TierId(j)) as usize;
+            if self.in_use[j] <= want {
+                continue;
+            }
+            let excess = self.in_use[j] - want;
+            let b = backend.get();
+            let mine: Vec<u64> = b
+                .residents(TierId(j))
+                .iter()
+                .filter(|r| r.owner == Some(self.id))
+                .map(|r| r.doc)
+                .collect();
+            // residents() is doc-id sorted, so this takes the oldest
+            // (earliest-index) documents — the ones the re-derived plan's
+            // shrunken band least wants hot
+            for &doc in mine.iter().take(excess) {
+                let mut dest = j + 1;
+                while dest < sink && !b.has_room(TierId(dest)) {
+                    dest += 1;
+                }
+                b.migrate_doc(doc, TierId(dest), at)?;
+                self.in_use[j] = self.in_use[j].saturating_sub(1);
+                self.in_use[dest] += 1;
+                moved_total += 1;
+            }
+        }
+        Ok(moved_total)
+    }
+
     /// Observe the next document under the session's plan (plan/naive
     /// modes). Must be called in stream order. The outcome reports when a
     /// changeover demotion fired — capacity was freed and the caller
@@ -324,6 +396,12 @@ impl SessionState {
         backend: &mut BackendLease<'_>,
         score: f64,
     ) -> Result<ObserveEvents> {
+        // NaN would silently corrupt the ranking order and ±∞ would pin
+        // the threshold forever — refuse *before* consuming the stream
+        // index, so the caller can drop the document and continue.
+        if !score.is_finite() {
+            return Err(NonFiniteScore { index: self.next_index, score }.into());
+        }
         let i = self.begin_observation()?;
         let at = i as f64 / self.n as f64;
         let mut admitted = true;
@@ -459,6 +537,9 @@ impl SessionState {
         score: f64,
         policy: &mut dyn PlacementPolicy,
     ) -> Result<()> {
+        if !score.is_finite() {
+            return Err(NonFiniteScore { index: self.next_index, score }.into());
+        }
         self.policy_driven = true;
         let i = self.begin_observation()?;
         let at = i as f64 / self.n as f64;
@@ -574,7 +655,20 @@ impl SessionState {
     /// [`SessionState::release`] instead.
     pub fn finish(&mut self, backend: &mut dyn StorageBackend) -> Result<SessionOutcome> {
         backend.set_attribution(Some(self.id));
-        let retained: Vec<u64> = self.tracker.sorted_desc().iter().map(|s| s.index).collect();
+        let retained: Vec<u64> = match self.tracker.retained() {
+            Some(top) => top.iter().map(|s| s.index).collect(),
+            // Log-memory selectors keep no membership — but they never
+            // delete either, so this stream's backend residents *are* its
+            // admitted set. Report them in stream order (scores are gone;
+            // the deterministic order keeps replay digests stable).
+            None => {
+                let mask = (1u64 << INDEX_BITS) - 1;
+                let mut v: Vec<u64> =
+                    backend.docs_of_stream(self.id).iter().map(|g| g & mask).collect();
+                v.sort_unstable();
+                v
+            }
+        };
         let mut read_from = Vec::with_capacity(retained.len());
         for &d in &retained {
             let tier = backend.read(self.gid(d))?;

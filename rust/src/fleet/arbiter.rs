@@ -86,6 +86,19 @@ pub fn arbitrate_with(
     hot_capacity: u64,
     family: PlanFamily,
 ) -> Arbitration {
+    arbitrate_full(specs, hot_capacity, family, crate::topk::SelectorKind::Bounded)
+}
+
+/// [`arbitrate_with`] plus an explicit admission selector (ADR-010): the
+/// snapshots carry the selector, so a log-memory fleet's quotas are
+/// derived at the slack-adjusted K′ — exactly what the engine computes
+/// internally when the same selector rides the session specs.
+pub fn arbitrate_full(
+    specs: &[StreamSpec],
+    hot_capacity: u64,
+    family: PlanFamily,
+    selector: crate::topk::SelectorKind,
+) -> Arbitration {
     if specs.is_empty() {
         return Arbitration {
             hot_capacity,
@@ -97,8 +110,10 @@ pub fn arbitrate_with(
     let capacity = usize::try_from(hot_capacity).unwrap_or(usize::MAX);
     let topology = TierTopology::two_tier(specs[0].model.a, specs[0].model.b)
         .with_capacity(HOT, Some(capacity));
-    let snapshots: Vec<SessionSnapshot> =
-        specs.iter().map(|s| snapshot_of(s, family)).collect();
+    let snapshots: Vec<SessionSnapshot> = specs
+        .iter()
+        .map(|s| snapshot_of(s, family).with_selector(selector))
+        .collect();
     let assignments = ProportionalArbiter.arbitrate(&snapshots, &topology);
     let plans: Vec<StreamPlan> = assignments
         .iter()

@@ -33,7 +33,7 @@ pub mod report;
 pub mod scheduler;
 pub mod stream;
 
-pub use arbiter::{arbitrate, arbitrate_with, Arbitration, StreamPlan};
+pub use arbiter::{arbitrate, arbitrate_full, arbitrate_with, Arbitration, StreamPlan};
 pub use capacity::allocate_proportional;
 pub use report::{FleetReport, StreamReport};
 pub use scheduler::{run_fleet, FleetConfig, FleetMode};

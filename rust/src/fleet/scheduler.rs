@@ -41,7 +41,7 @@
 //! Migrate-family fleets re-lend freed capacity mid-run and remain
 //! interleaving-sensitive, exactly as before ADR-008.
 
-use super::arbiter::{arbitrate_with, Arbitration};
+use super::arbiter::{arbitrate_full, Arbitration};
 use super::report::{FleetReport, StreamReport};
 use super::stream::{generate_series, StreamSpec, HOT};
 use crate::engine::{BackendSpec, Engine, StreamSession, TierTopology};
@@ -102,6 +102,10 @@ pub struct FleetConfig {
     /// Batch journal appends into group commits on durable backends
     /// (ADR-009); a free no-op on the simulator.
     pub group_commit: bool,
+    /// Admission selector every stream runs (ADR-010): `bounded` (exact
+    /// capacity-K heap, O(K) resident memory per stream) or `logmem`
+    /// (O(log K) quantile-sketch admission with priced overshoot slack).
+    pub selector: crate::topk::SelectorKind,
 }
 
 impl Default for FleetConfig {
@@ -118,6 +122,7 @@ impl Default for FleetConfig {
             backend: BackendSpec::Sim,
             adaptive: false,
             group_commit: false,
+            selector: crate::topk::SelectorKind::Bounded,
         }
     }
 }
@@ -163,7 +168,7 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
     // recomputes the identical verdict internally as the sessions open
     // (changeover demotions may re-arbitrate it away mid-run).
     let arbitration: Arbitration =
-        arbitrate_with(specs, config.hot_capacity, config.family);
+        arbitrate_full(specs, config.hot_capacity, config.family, config.selector);
 
     // ---- engine over the shared capacity-limited backend -------------------
     let charge_rent = specs.iter().any(|s| s.model.include_rent);
@@ -194,7 +199,10 @@ pub fn run_fleet(specs: &[StreamSpec], config: &FleetConfig) -> Result<FleetRepo
     let engine = builder.build()?;
     let naive = config.mode == FleetMode::Naive;
     let sessions: Vec<StreamSession> = engine.open_streams(
-        specs.iter().map(|s| s.session_spec_with(naive, config.family)).collect(),
+        specs
+            .iter()
+            .map(|s| s.session_spec_full(naive, config.family, config.selector))
+            .collect(),
     )?;
     let total_docs: u64 = specs.iter().map(|s| s.model.n).sum();
 
@@ -511,6 +519,34 @@ mod tests {
         let plain = run_fleet(&specs, &cfg).unwrap();
         assert!(plain.drift_detections > 0);
         assert_eq!(plain.drift_rederivations, 0);
+    }
+
+    #[test]
+    fn logmem_fleet_completes_and_stays_deterministic() {
+        use crate::topk::SelectorKind;
+        // a log-memory fleet admits a small superset per stream (every
+        // admitted doc stays resident — the sketch tracks no membership,
+        // so nothing is ever evicted) and must remain bitwise
+        // deterministic across worker counts like the bounded fleet
+        let specs = demo_fleet(4, 200, 6, true, 9);
+        let mut cfg = tiny_config(FleetMode::Arbitrated, 10, 1);
+        cfg.selector = SelectorKind::LogMem;
+        let a = run_fleet(&specs, &cfg).unwrap();
+        cfg.workers = 4;
+        let b = run_fleet(&specs, &cfg).unwrap();
+        assert_eq!(a.digest(), b.digest(), "logmem digests diverged across workers");
+        for (s, spec) in a.streams.iter().zip(specs.iter()) {
+            // finish() reads back the full admitted set — at least the
+            // exact top-K, typically a few more (the priced overshoot)
+            assert!(
+                s.hot_reads + s.cold_reads >= spec.model.k.min(spec.model.n),
+                "stream {} read back fewer docs than K",
+                s.id
+            );
+        }
+        // capacity is still respected: the slack is priced into quotas,
+        // not absorbed by overcommitting the tier
+        assert!(a.hot_peak <= 10, "peak {} > capacity", a.hot_peak);
     }
 
     #[test]

@@ -109,6 +109,17 @@ impl StreamSpec {
     ) -> crate::engine::SessionSpec {
         self.session_spec(naive).with_family(family)
     }
+
+    /// [`StreamSpec::session_spec_with`] plus an explicit admission
+    /// selector (ADR-010): `bounded` or `logmem`.
+    pub fn session_spec_full(
+        &self,
+        naive: bool,
+        family: crate::policy::PlanFamily,
+        selector: crate::topk::SelectorKind,
+    ) -> crate::engine::SessionSpec {
+        self.session_spec_with(naive, family).with_selector(selector)
+    }
 }
 
 #[cfg(test)]

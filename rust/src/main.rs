@@ -188,6 +188,11 @@ fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     if flags.contains_key("seed") {
         launch.config.seed = seed;
     }
+    // selector before the workload rebuild: the default-capacity
+    // heuristic below must price the selector's admission slack
+    if let Some(sel) = flags.get("selector") {
+        launch.config.selector = shptier::topk::SelectorKind::parse(sel)?;
+    }
     let streams_flag = parse_u64("streams")?;
     let docs_flag = parse_u64("docs")?;
     let k_flag = parse_u64("k")?;
@@ -200,11 +205,15 @@ fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
         launch.specs =
             shptier::fleet::demo_fleet(m as usize, n, k, true, launch.config.seed);
         if !flags.contains_key("capacity") {
-            // re-derive the default contended capacity for the new fleet
+            // re-derive the default contended capacity for the new fleet,
+            // reserving the selector's admission slack (ADR-010)
             let demand: u64 = launch
                 .specs
                 .iter()
-                .map(|s| shptier::cost::hot_demand(&s.model, false))
+                .map(|s| {
+                    let eps = launch.config.selector.slack(s.model.k);
+                    shptier::cost::hot_demand_with_slack(&s.model, false, eps)
+                })
                 .sum();
             launch.config.hot_capacity = (demand / 2).max(1);
         }
@@ -237,12 +246,13 @@ fn cmd_fleet(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
 
     println!(
         "launching fleet: {} streams, hot capacity {}, {} workers, mode {:?}, \
-         family {}, backend '{}'{}",
+         family {}, selector {}, backend '{}'{}",
         launch.specs.len(),
         launch.config.hot_capacity,
         launch.config.workers,
         launch.config.mode,
         launch.config.family.label(),
+        launch.config.selector.label(),
         launch.config.backend.label(),
         if launch.config.adaptive { ", adaptive" } else { "" }
     );
@@ -301,6 +311,9 @@ fn cmd_engine(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
     }
     if let Some(f) = flags.get("family") {
         demo.family = shptier::policy::PlanFamily::parse(f)?;
+    }
+    if let Some(sel) = flags.get("selector") {
+        demo.selector = shptier::topk::SelectorKind::parse(sel)?;
     }
     if flags.contains_key("adaptive") {
         demo.adaptive = true;
@@ -485,12 +498,14 @@ USAGE:
   shptier run [--config configs/case_study_2.toml]
   shptier fleet [--streams M] [--docs N] [--k K] [--capacity C]
                 [--workers W] [--mode arbitrated|naive]
-                [--family keep|migrate|auto] [--adaptive] [--digest]
+                [--family keep|migrate|auto] [--selector bounded|logmem]
+                [--adaptive] [--digest]
                 [--backend sim|fs:<root>|obj:<root>] [--group-commit]
                 [--config configs/fleet.toml]
   shptier engine [--streams M] [--docs N] [--k K] [--tiers 2..4]
                  [--capacity C] [--backend sim|fs:<root>|obj:<root>]
-                 [--reconcile] [--family keep|migrate|auto] [--adaptive]
+                 [--reconcile] [--family keep|migrate|auto]
+                 [--selector bounded|logmem] [--adaptive]
                  [--group-commit] [--config configs/engine.toml]
   shptier serve --config configs/serve.toml [--backend sim|fs:<root>|obj:<root>]
   shptier serve-soak [--backend sim|fs:<root>] [--sessions 1000]

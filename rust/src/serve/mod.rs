@@ -83,6 +83,10 @@ pub struct ServeConfig {
     /// op records batch in memory and flush on size cap, age cap, or
     /// barrier, trading a bounded staleness window for write throughput.
     pub group_commit: bool,
+    /// Admission selector every served stream runs (`engine.selector`,
+    /// ADR-010): `bounded` (exact top-K heap) or `logmem` (O(log K)
+    /// sketch; admission reserves its slack-adjusted demand).
+    pub selector: crate::topk::SelectorKind,
     /// The tenant book: tokens, quota classes, price books.
     pub book: TenantBook,
 }
@@ -148,6 +152,10 @@ impl ServeConfig {
         };
         let sync_writes = get_bool("engine.sync_writes", false)?;
         let group_commit = get_bool("engine.group_commit", false)?;
+        let selector = crate::topk::SelectorKind::parse(
+            t.get_path("engine.selector").and_then(|v| v.as_str()).unwrap_or("bounded"),
+        )
+        .map_err(|e| anyhow!("serve config: engine.selector: {e}"))?;
         let book = TenantBook::from_toml(&t)?;
         Ok(Self {
             addr,
@@ -160,6 +168,7 @@ impl ServeConfig {
             checkpoint_factor,
             sync_writes,
             group_commit,
+            selector,
             book,
         })
     }

@@ -619,6 +619,7 @@ fn handle_open(state: &ServerState, body: &[u8]) -> (u16, crate::serdes::Json) {
         open.k,
         open.include_rent,
         open.family,
+        state.config.selector,
     );
     let verdict = {
         let mut adm = state.admission.lock().unwrap_or_else(|e| e.into_inner());
@@ -645,6 +646,7 @@ fn handle_open(state: &ServerState, body: &[u8]) -> (u16, crate::serdes::Json) {
         .with_family(open.family)
         .with_rent(open.include_rent)
         .with_pinned_cold(degraded)
+        .with_selector(state.config.selector)
         .with_note(encode_attribution(reserved_hot, degraded, &tenant_name));
     if open.economics.is_some() {
         spec = spec.with_costs(costs);
@@ -972,6 +974,35 @@ mod tests {
 
         client.request_shutdown().unwrap();
         server.wait().unwrap();
+    }
+
+    #[test]
+    fn logmem_selector_serves_streams_end_to_end() {
+        let config = test_config("selector = \"logmem\"\n");
+        assert_eq!(config.selector, crate::topk::SelectorKind::LogMem);
+        let server = RunningServer::start(config, BackendSpec::Sim).unwrap();
+        let client = Client::new(server.local_addr());
+
+        let opened = client.open("tok-alpha", 24, 4, "keep", None).unwrap();
+        let OpenOutcome::Admitted(open) = opened else {
+            panic!("expected admission, got {opened:?}");
+        };
+        let scores: Vec<f64> = (0..24).map(|i| ((i * 7) % 24) as f64 / 24.0).collect();
+        let obs = client.observe(&open.stream, &scores).unwrap();
+        assert_eq!(obs.observed, 24);
+        assert!(obs.done);
+
+        // The sketch admits a superset of the exact top-K (it never
+        // evicts), so the finish retains at least K documents.
+        let fin = client.finish(&open.stream).unwrap();
+        assert!(fin.retained >= 4, "logmem retains an admitted superset, got {}", fin.retained);
+        assert!(fin.cost > 0.0);
+
+        let inv = client.invoice("alpha", "tok-alpha").unwrap();
+        assert_eq!(inv.streams.len(), 1);
+        assert!(inv.streams[0].completed);
+
+        server.shutdown().unwrap();
     }
 
     #[test]

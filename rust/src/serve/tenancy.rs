@@ -291,14 +291,23 @@ impl AdmissionControl {
 
 /// Analytic hot-tier demand of the plan the engine will run for these
 /// parameters — the quantity admission reserves against `max_hot_docs`.
+///
+/// The demand is quoted at the *slack-adjusted* K′ of the stream's
+/// admission selector (ADR-010): the engine's arbiter derives the actual
+/// plan at K′ too, so reserving the slack-free figure for a log-memory
+/// stream would under-reserve by the selector's admit-rate overshoot and
+/// over-admit the tenant against its hot quota.
 pub fn analytic_hot_demand(
     tier_costs: &[PerDocCosts],
     n: u64,
     k: u64,
     include_rent: bool,
     family: PlanFamily,
+    selector: crate::topk::SelectorKind,
 ) -> u64 {
-    PlacementPlan::optimal_family(tier_costs, n, k, include_rent, family).demand(TierId(0))
+    let k_planned = crate::cost::slack_adjusted_k(k, selector.slack(k)).min(n);
+    PlacementPlan::optimal_family(tier_costs, n, k_planned, include_rent, family)
+        .demand(TierId(0))
 }
 
 #[cfg(test)]
@@ -371,11 +380,54 @@ mod tests {
 
     #[test]
     fn analytic_demand_is_positive_when_hot_is_cheap_to_read() {
+        use crate::topk::SelectorKind;
         let costs = vec![
             PerDocCosts { write: 1.0, read: 0.1, rent_window: 0.0 },
             PerDocCosts { write: 1.0, read: 10.0, rent_window: 0.0 },
         ];
-        let d = analytic_hot_demand(&costs, 100, 10, false, PlanFamily::Keep);
+        let d =
+            analytic_hot_demand(&costs, 100, 10, false, PlanFamily::Keep, SelectorKind::Bounded);
         assert!(d >= 10, "hot-favouring economics should demand at least K hot, got {d}");
+    }
+
+    /// Satellite regression (ADR-010): admission must reserve the
+    /// slack-adjusted demand for log-memory streams. The old path quoted
+    /// the slack-free plan, so a logmem stream at massive K reserved K
+    /// while the engine planned (and placed) up to K′ > K hot — the
+    /// tenant's hot quota silently over-admitted.
+    #[test]
+    fn admission_reserves_slack_adjusted_demand_for_logmem() {
+        use crate::topk::SelectorKind;
+        let costs = vec![
+            PerDocCosts { write: 1.0, read: 0.1, rent_window: 0.0 },
+            PerDocCosts { write: 1.0, read: 10.0, rent_window: 0.0 },
+        ];
+        let (n, k) = (400_000, 100_000);
+        let exact =
+            analytic_hot_demand(&costs, n, k, false, PlanFamily::Keep, SelectorKind::Bounded);
+        let slacked =
+            analytic_hot_demand(&costs, n, k, false, PlanFamily::Keep, SelectorKind::LogMem);
+        assert!(
+            slacked > exact,
+            "logmem demand {slacked} must exceed the slack-free {exact}"
+        );
+        assert_eq!(
+            slacked,
+            crate::cost::slack_adjusted_k(k, SelectorKind::LogMem.slack(k)),
+            "hot-favouring economics: the whole K′ band is demanded"
+        );
+        // with the slack-adjusted reservation, a quota sized for one exact
+        // stream refuses the logmem stream instead of over-admitting it
+        let b = book(100, exact, "reject");
+        let mut ac = AdmissionControl::new(&b);
+        assert_eq!(
+            ac.admit(&b, 0, slacked),
+            AdmissionVerdict::Rejected { reason: "hot-quota" },
+            "the old slack-free path admitted here and overcommitted the tier"
+        );
+        assert!(matches!(
+            ac.admit(&b, 0, exact),
+            AdmissionVerdict::Admitted { degraded: false, .. }
+        ));
     }
 }

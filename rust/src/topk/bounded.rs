@@ -1,6 +1,6 @@
 //! Capacity-K min-heap top-K tracker — the pipeline hot-path structure.
 
-use super::{rank_cmp, Scored};
+use super::{rank_cmp, Scored, Selector, SelectorKind};
 use std::cmp::Ordering;
 
 /// What happened when a candidate was offered to the tracker.
@@ -60,6 +60,11 @@ impl BoundedTopK {
     /// Offer a candidate; returns what happened. A candidate equal to the
     /// threshold is rejected (strict improvement required, eq. (5)).
     pub fn offer(&mut self, candidate: Scored) -> Eviction {
+        debug_assert!(
+            candidate.score.is_finite(),
+            "non-finite score reached BoundedTopK::offer — the observe() \
+             guard should have rejected it"
+        );
         if self.heap.len() < self.k {
             self.push(candidate);
             return Eviction::Accepted;
@@ -133,6 +138,41 @@ impl BoundedTopK {
             }
         }
         true
+    }
+}
+
+impl Selector for BoundedTopK {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::Bounded
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn offer(&mut self, candidate: Scored) -> Eviction {
+        BoundedTopK::offer(self, candidate)
+    }
+
+    fn threshold_score(&self) -> Option<f64> {
+        self.threshold().map(|s| s.score)
+    }
+
+    fn retained(&self) -> Option<Vec<Scored>> {
+        Some(self.sorted_desc())
+    }
+
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.heap.capacity() * std::mem::size_of::<Scored>()
+    }
+
+    fn check_invariants(&self) -> bool {
+        BoundedTopK::check_invariants(self)
     }
 }
 

@@ -3,23 +3,38 @@
 //! The paper's workflow (Fig. 2/3) needs, per document: insert its
 //! interestingness into a ranked structure, learn its rank among everything
 //! seen so far, and — if it enters the current top-K — learn which document
-//! it evicts. Two implementations are provided:
+//! it evicts. Three implementations are provided:
 //!
 //! - [`BoundedTopK`] — a capacity-K min-heap; O(log K) per candidate,
 //!   answers only "is this in the current top-K and whom does it evict".
-//!   This is the production hot-path structure.
+//!   This is the exact production hot-path structure.
+//! - [`LogMemTopK`] — an O(log K)-memory admission sketch per "Optimal
+//!   k-Secretary with Logarithmic Memory" (arXiv:2502.09834): a weighted
+//!   tail-quantile sketch stands in for the exact k-th-best threshold, so
+//!   the selector admits a slight superset of the true top-K using a few
+//!   dozen entries instead of K. The admit-rate overshoot is priced into
+//!   the cost model via [`SelectorKind::slack`] (ADR-010).
 //! - [`FullRankTracker`] — keeps *all* scores in sorted order; O(log n)
 //!   search + O(n) insert, answers exact global ranks. Needed for the
 //!   classic SHP baseline (rank among the first r−1) and for diagnostics.
 //!
-//! Both are deterministic on ties: equal scores rank by earlier index first
+//! All are deterministic on ties: equal scores rank by earlier index first
 //! (stable), matching the simulators' accounting.
+//!
+//! **Non-finite scores are a caller error.** [`rank_cmp`] has no total
+//! order over NaN — the engine rejects non-finite scores at `observe()`
+//! with a typed [`NonFiniteScore`] before any selector sees them, and the
+//! selectors debug-assert the same contract.
 
 mod bounded;
 mod full;
+mod logmem;
 
 pub use bounded::{BoundedTopK, Eviction};
 pub use full::FullRankTracker;
+pub use logmem::LogMemTopK;
+
+use anyhow::{bail, Result};
 
 /// A scored document reference flowing through the trackers.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -39,11 +54,152 @@ impl Scored {
 /// Total order: by score, ties broken toward the *earlier* index winning
 /// (an incumbent is never displaced by an equal score — the SHP "best so
 /// far" must be strictly better, c.f. eq. (5)).
+///
+/// Only defined over finite scores: the engine rejects non-finite scores
+/// with [`NonFiniteScore`] before any comparison happens, so the `None`
+/// arm of the partial comparison is defensive-only (it falls back to the
+/// deterministic index order instead of panicking in release builds).
 pub fn rank_cmp(a: &Scored, b: &Scored) -> std::cmp::Ordering {
+    debug_assert!(
+        a.score.is_finite() && b.score.is_finite(),
+        "non-finite score reached rank_cmp (a={}, b={}) — the observe() \
+         guard should have rejected it",
+        a.score,
+        b.score
+    );
     match a.score.partial_cmp(&b.score) {
         Some(std::cmp::Ordering::Equal) | None => b.index.cmp(&a.index),
         Some(o) => o,
     }
+}
+
+/// Typed rejection of a non-finite interestingness score at `observe()`.
+///
+/// NaN has no place in the ranking order ([`rank_cmp`] would silently map
+/// it onto the tie-break arm and corrupt the retained set), and ±∞ would
+/// pin the threshold forever. The engine refuses the observation *before*
+/// consuming a stream index, so the caller can drop or sanitize the
+/// document and continue the stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NonFiniteScore {
+    /// Stream-local index the document would have occupied.
+    pub index: u64,
+    /// The offending score (NaN, +∞, or −∞).
+    pub score: f64,
+}
+
+impl std::fmt::Display for NonFiniteScore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "non-finite interestingness score {} at stream index {} \
+             (scores must be finite)",
+            self.score, self.index
+        )
+    }
+}
+
+impl std::error::Error for NonFiniteScore {}
+
+/// Which admission selector a session runs (ADR-010).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SelectorKind {
+    /// Exact capacity-K min-heap ([`BoundedTopK`]): O(K) memory, zero
+    /// admission slack.
+    #[default]
+    Bounded,
+    /// Log-memory quantile-sketch selector ([`LogMemTopK`]): O(log K)
+    /// memory, admit-rate overshoot priced via [`SelectorKind::slack`].
+    LogMem,
+}
+
+impl SelectorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "bounded" => Ok(Self::Bounded),
+            "logmem" => Ok(Self::LogMem),
+            other => bail!("unknown selector '{other}' (bounded | logmem)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Bounded => "bounded",
+            Self::LogMem => "logmem",
+        }
+    }
+
+    /// A-priori admit-rate overshoot ε of this selector at retained-set
+    /// size `k`: the selector is expected to admit at most `(1 + ε)×` the
+    /// exact selector's admissions, because its threshold estimate lags
+    /// the true k-th best by the sketch's weight resolution. The cost
+    /// model inflates expected writes, hot demand, and rent integrals by
+    /// this factor ([`crate::cost::selector_slack`]) so arbiters and
+    /// admission control reserve for the overshoot instead of discovering
+    /// it at runtime.
+    ///
+    /// `Bounded` is exact (ε = 0), as is `LogMem` whenever the sketch
+    /// capacity covers K outright (small K: the sketch never merges and
+    /// the threshold is exact).
+    pub fn slack(&self, k: u64) -> f64 {
+        match self {
+            Self::Bounded => 0.0,
+            Self::LogMem => {
+                let cap = LogMemTopK::sketch_capacity(k.max(1) as usize);
+                if (k as usize) < cap {
+                    0.0 // sketch is exact: no merges ever happen
+                } else {
+                    (12.0 / cap as f64).min(0.5)
+                }
+            }
+        }
+    }
+
+    /// Build a fresh selector of this kind for retained-set size `k`.
+    pub fn build(&self, k: usize) -> Box<dyn Selector> {
+        match self {
+            Self::Bounded => Box::new(BoundedTopK::new(k)),
+            Self::LogMem => Box::new(LogMemTopK::new(k)),
+        }
+    }
+}
+
+/// The admission-selector boundary of a session (ADR-010): everything the
+/// engine's observe/finish lifecycle needs from a top-K structure, with
+/// the membership snapshot optional so log-memory selectors can decline
+/// to track it.
+pub trait Selector: Send + Sync {
+    /// Which kind this selector is (reporting + slack pricing).
+    fn kind(&self) -> SelectorKind;
+
+    /// Retained-set size K.
+    fn k(&self) -> usize;
+
+    /// Documents currently tracked (exact membership for bounded; sketch
+    /// entries do not count documents individually for logmem, which
+    /// reports its admitted count instead).
+    fn len(&self) -> usize;
+
+    /// Offer a candidate; says whether it was admitted and whom (if
+    /// anyone) it displaced. Log-memory selectors never report
+    /// [`Eviction::Replaced`] — they admit without tracking victims.
+    fn offer(&mut self, candidate: Scored) -> Eviction;
+
+    /// Current admission threshold score, if one is established.
+    fn threshold_score(&self) -> Option<f64>;
+
+    /// Exact retained membership, best first — `None` when the selector
+    /// does not track membership (log-memory: the engine falls back to
+    /// the backend's per-stream resident set, which *is* the admitted
+    /// set because a logmem session never deletes).
+    fn retained(&self) -> Option<Vec<Scored>>;
+
+    /// Approximate resident heap bytes of the selector state (the bench
+    /// dimension's streams-per-GB denominator).
+    fn resident_bytes(&self) -> usize;
+
+    /// Structure invariants hold (property-test hook).
+    fn check_invariants(&self) -> bool;
 }
 
 #[cfg(test)]
@@ -61,11 +217,45 @@ mod tests {
     }
 
     #[test]
-    fn nan_scores_do_not_poison_order() {
-        let a = Scored::new(0, f64::NAN);
-        let b = Scored::new(1, 1.0);
-        // NaN comparisons fall back to index ordering (deterministic)
-        let _ = rank_cmp(&a, &b);
-        let _ = rank_cmp(&b, &a);
+    fn non_finite_score_error_is_typed_and_descriptive() {
+        let e = NonFiniteScore { index: 7, score: f64::NAN };
+        let msg = e.to_string();
+        assert!(msg.contains("index 7"), "{msg}");
+        let any: anyhow::Error = e.into();
+        let back = any.downcast_ref::<NonFiniteScore>().expect("downcast");
+        assert_eq!(back.index, 7);
+        assert!(back.score.is_nan());
+    }
+
+    #[test]
+    fn selector_kind_parses_and_labels() {
+        assert_eq!(SelectorKind::parse("bounded").unwrap(), SelectorKind::Bounded);
+        assert_eq!(SelectorKind::parse("logmem").unwrap(), SelectorKind::LogMem);
+        assert!(SelectorKind::parse("exact").is_err());
+        assert_eq!(SelectorKind::Bounded.label(), "bounded");
+        assert_eq!(SelectorKind::LogMem.label(), "logmem");
+        assert_eq!(SelectorKind::default(), SelectorKind::Bounded);
+    }
+
+    #[test]
+    fn slack_is_zero_for_bounded_and_for_exact_small_k() {
+        assert_eq!(SelectorKind::Bounded.slack(1_000_000), 0.0);
+        // small K: the sketch holds K outright, no merges, no slack
+        assert_eq!(SelectorKind::LogMem.slack(8), 0.0);
+        // massive K: slack is positive, bounded away from 1, and shrinks
+        // as the sketch capacity grows with log K
+        let big = SelectorKind::LogMem.slack(100_000);
+        assert!(big > 0.0 && big <= 0.5, "slack {big}");
+        assert!(SelectorKind::LogMem.slack(1_000_000) <= big);
+    }
+
+    #[test]
+    fn build_constructs_the_matching_selector() {
+        let b = SelectorKind::Bounded.build(4);
+        assert_eq!(b.kind(), SelectorKind::Bounded);
+        assert_eq!(b.k(), 4);
+        let l = SelectorKind::LogMem.build(4);
+        assert_eq!(l.kind(), SelectorKind::LogMem);
+        assert_eq!(l.k(), 4);
     }
 }

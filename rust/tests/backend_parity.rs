@@ -80,6 +80,55 @@ fn seeded_demo_ledger_parity_sim_vs_durable_backends() {
     }
 }
 
+/// Acceptance (ADR-010): the same seeded demo run with the log-memory
+/// selector journals its admissions identically on sim and on both
+/// durable backends — the sketch's admitted superset, per-stream
+/// retained counts, and ledger totals all replay to parity.
+#[test]
+fn logmem_demo_journaled_admissions_replay_identically() {
+    let demo = EngineDemoConfig::from_toml(
+        "[engine]\nstreams = 3\ndocs = 300\nk = 12\ntiers = 3\nclose_percent = 50\n\
+         selector = \"logmem\"\n",
+    )
+    .unwrap();
+    assert_eq!(demo.selector, shptier::topk::SelectorKind::LogMem);
+    for (label, spec) in [
+        ("fs", BackendSpec::Fs { root: scratch("logmem-fs") }),
+        ("obj", BackendSpec::Obj { root: scratch("logmem-obj") }),
+    ] {
+        let rep = reconcile_backends(&demo, &spec)
+            .unwrap_or_else(|e| panic!("{label}: logmem ledger parity must hold: {e:#}"));
+        assert_eq!(rep.sim.rows.len(), 4, "{label}");
+        assert!(rep.total_delta <= 1e-9 * rep.sim.total.max(1.0), "{label}");
+        for (s, o) in rep.sim.rows.iter().zip(rep.other.rows.iter()) {
+            assert_eq!(s.id, o.id, "{label}");
+            assert_eq!(
+                s.retained, o.retained,
+                "{label} stream {}: the admitted superset must replay identically",
+                s.id
+            );
+            // the sketch never evicts, so every finished stream retains
+            // at least its exact top-K
+            assert!(
+                s.retained >= demo.k.min(demo.docs),
+                "{label} stream {}: retained {} < K",
+                s.id,
+                s.retained
+            );
+            assert!(
+                (s.measured - o.measured).abs() <= 1e-9 * s.measured.abs().max(1.0),
+                "{label} stream {}: sim ${} vs durable ${}",
+                s.id,
+                s.measured,
+                o.measured
+            );
+        }
+        if let BackendSpec::Fs { root } | BackendSpec::Obj { root } = spec {
+            let _ = std::fs::remove_dir_all(root);
+        }
+    }
+}
+
 /// Acceptance: kill an engine mid-run (drop it — the in-memory state is
 /// gone) and reopen each durable backend on the same root: residency,
 /// the engine-wide ledger, and the per-stream ledger are rebuilt from
